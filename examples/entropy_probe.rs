@@ -1,0 +1,121 @@
+//! Diagnostic: where do the entropy-stage bits go?
+//!
+//! For one delta frame, reports per parameter set:
+//! - order-0 empirical entropy of the quantized symbols (what a perfect
+//!   static order-0 coder would pay),
+//! - conditional entropy given the co-located reference symbol (the gain
+//!   the paper's context modeling can theoretically reach, cf. Fig. 1),
+//! - actual bits/symbol of each codec mode (order0 AC, zero-context LSTM,
+//!   full-context LSTM) and of ExCP's DEFLATE stage.
+//!
+//! This separates model capacity / adaptation-transient effects from the
+//! theoretical context gain. Run:
+//! `cargo run --release --example entropy_probe [-- --hidden 16 --lr 0.001]`
+
+use cpcm::baselines::ExcpCodec;
+use cpcm::checkpoint::Checkpoint;
+use cpcm::codec::{Codec, CodecConfig, ContextMode};
+use cpcm::lstm::Backend;
+use cpcm::trainer::Trainer;
+use cpcm::util::stats;
+
+fn joint_cond_entropy(cur: &[u16], refm: &[u16], alphabet: usize) -> f64 {
+    // H(X | Y) where Y is the co-located reference symbol.
+    let n = cur.len() as f64;
+    let mut joint = vec![0f64; alphabet * alphabet];
+    let mut py = vec![0f64; alphabet];
+    for (&x, &y) in cur.iter().zip(refm) {
+        joint[y as usize * alphabet + x as usize] += 1.0;
+        py[y as usize] += 1.0;
+    }
+    let mut h = 0.0;
+    for y in 0..alphabet {
+        if py[y] == 0.0 {
+            continue;
+        }
+        for x in 0..alphabet {
+            let j = joint[y * alphabet + x];
+            if j > 0.0 {
+                h -= j / n * (j / py[y]).log2();
+            }
+        }
+    }
+    h
+}
+
+fn arg(name: &str, default: &str) -> String {
+    let argv: Vec<String> = std::env::args().collect();
+    argv.iter()
+        .position(|a| a == name)
+        .and_then(|i| argv.get(i + 1).cloned())
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn main() -> anyhow::Result<()> {
+    let hidden: usize = arg("--hidden", "16").parse()?;
+    let steps: u64 = arg("--steps", "40").parse()?;
+    let lr: f32 = arg("--lr", "0.001").parse()?;
+    let warmup: usize = arg("--warmup", "1").parse()?;
+    let mut tr = Trainer::new("artifacts", "lm_micro", 42)?;
+    tr.train(steps, |_, _| {})?;
+    let c0 = tr.checkpoint()?;
+    tr.train(steps, |_, _| {})?;
+    let c1 = tr.checkpoint()?;
+
+    let base = CodecConfig {
+        hidden,
+        embed: hidden,
+        batch: 256,
+        lr,
+        warmup_passes: if warmup > 0 { 1 } else { 0 },
+        warmup_stride: warmup.max(1),
+        ..CodecConfig::default()
+    };
+    let alphabet = 1usize << base.bits;
+
+    // Reference chain via order0 (front-end identical across modes).
+    let mk = |mode: ContextMode| Codec::new(CodecConfig { mode, ..base.clone() }, Backend::Native);
+    let codec0 = mk(ContextMode::Order0);
+    let e0 = codec0.encode(&c0, None, None)?;
+
+    // Theoretical bounds from the symbol maps.
+    let e1_probe = codec0.encode(&c1, Some(&e0.recon), Some(&e0.syms))?;
+    let mut tot_syms = 0usize;
+    let mut h0_w = 0.0;
+    let mut hc_w = 0.0;
+    for (ti, cur) in e1_probe.syms.sets[0].iter().enumerate() {
+        let refm = &e0.syms.sets[0][ti];
+        let n = cur.len() as f64;
+        h0_w += stats::entropy_bits(cur, alphabet) * n;
+        hc_w += joint_cond_entropy(cur, refm, alphabet) * n;
+        tot_syms += cur.len();
+    }
+    println!("ΔW set: {tot_syms} symbols");
+    println!("  H0 (order-0 entropy)        : {:.4} bits/sym → {:.1} KB", h0_w / tot_syms as f64, h0_w / 8e3);
+    println!("  H(X|ref colocated)          : {:.4} bits/sym → {:.1} KB", hc_w / tot_syms as f64, hc_w / 8e3);
+
+    // Actual codec performance per mode (dw stream bytes only).
+    for (label, mode) in [
+        ("order0 AC", ContextMode::Order0),
+        ("zero-context LSTM", ContextMode::ZeroContext),
+        ("full-context LSTM", ContextMode::Lstm),
+    ] {
+        let codec = mk(mode);
+        let f0 = codec.encode(&c0, None, None)?;
+        let f1 = codec.encode(&c1, Some(&f0.recon), Some(&f0.syms))?;
+        println!(
+            "  {label:<28}: {:.4} bits/sym → {:.1} KB (total frame {:.1} KB, loss {:.3})",
+            f1.stats.set_bytes[0] as f64 * 8.0 / tot_syms as f64,
+            f1.stats.set_bytes[0] as f64 / 1e3,
+            f1.bytes.len() as f64 / 1e3,
+            f1.stats.set_loss[0],
+        );
+    }
+
+    // ExCP deflate for the same frame.
+    let excp = ExcpCodec::new(base.clone());
+    let x0 = excp.encode(&c0, None)?;
+    let x1 = excp.encode(&c1, Some(&x0.recon))?;
+    println!("  excp deflate (whole frame)  : {:.1} KB", x1.bytes.len() as f64 / 1e3);
+    Ok(())
+}

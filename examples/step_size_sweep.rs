@@ -1,0 +1,78 @@
+//! Step-size experiment on the ViT workload (paper Eq. 6 / Fig. 4 preview).
+//!
+//! Trains the ViT stand-in, captures a run of checkpoints, and compresses
+//! the same run with reference step sizes s ∈ {1, 2}: s = 2 references the
+//! checkpoint *before* the previous one, halving how many references must
+//! be retained ("checkpoint merging") at some compression cost. The full
+//! figure regeneration lives in `cargo bench --bench fig4_step_size`; this
+//! example is the interactive, single-run version.
+//!
+//! Run: `cargo run --release --example step_size_sweep`
+
+use cpcm::checkpoint::Checkpoint;
+use cpcm::codec::CodecConfig;
+use cpcm::coordinator::{Coordinator, CoordinatorConfig};
+use cpcm::lstm::Backend;
+use cpcm::trainer::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    let out = std::path::PathBuf::from("runs/step_size");
+    let _ = std::fs::remove_dir_all(&out);
+    std::fs::create_dir_all(&out)?;
+
+    // Produce one checkpoint trajectory.
+    let mut tr = Trainer::new("artifacts", "vit_tiny", 11)?;
+    let mut ckpts: Vec<Checkpoint> = Vec::new();
+    println!("training vit_tiny ({} params), 6 checkpoints…", tr.param_count());
+    for epoch in 0..6 {
+        tr.train(20, |_, _| {})?;
+        let ck = tr.checkpoint()?;
+        println!("  epoch {epoch}: step {} captured", ck.step);
+        ckpts.push(ck);
+    }
+
+    // Compress the identical trajectory under each step size.
+    let codec = CodecConfig { hidden: 16, embed: 16, ..CodecConfig::default() };
+    let mut rows = Vec::new();
+    for s in [1u64, 2] {
+        let dir = out.join(format!("s{s}"));
+        let mut ccfg = CoordinatorConfig::new(codec.clone(), Backend::Native, &dir);
+        ccfg.step_size = s;
+        let coord = Coordinator::start(ccfg)?;
+        for ck in &ckpts {
+            coord.submit(ck.clone())?;
+        }
+        let results = coord.finish()?;
+        println!("\nstep size s = {s}:");
+        for r in &results {
+            println!(
+                "  ckpt {:>5} (ref {:>5}): {:>8} B  ratio {:>6.1}",
+                r.step,
+                r.ref_step.map(|x| x.to_string()).unwrap_or_else(|| "-".into()),
+                r.bytes,
+                r.stats.ratio()
+            );
+        }
+        rows.push((s, results));
+    }
+
+    let mut csv = String::from("s,step,bytes,ratio\n");
+    for (s, results) in &rows {
+        for r in results {
+            csv.push_str(&format!("{s},{},{},{}\n", r.step, r.bytes, r.stats.ratio()));
+        }
+    }
+    std::fs::write(out.join("step_size.csv"), &csv)?;
+
+    // Compare totals over the delta frames both runs share (skip intras).
+    let total = |rs: &[cpcm::coordinator::JobResult]| -> usize {
+        rs.iter().filter(|r| r.ref_step.is_some()).map(|r| r.bytes).sum()
+    };
+    let (t1, t2) = (total(&rows[0].1), total(&rows[1].1));
+    println!(
+        "\ndelta-frame bytes: s=1 → {t1}, s=2 → {t2} ({:+.1}% for the doubled step)",
+        100.0 * (t2 as f64 - t1 as f64) / t1 as f64
+    );
+    println!("csv → {}", out.join("step_size.csv").display());
+    Ok(())
+}

@@ -1,0 +1,117 @@
+//! End-to-end driver: train a real transformer LM and compress its
+//! checkpoints as training runs — all three layers composing:
+//!
+//! - Layer 1/2: the AOT-compiled JAX train step (with the Pallas LSTM cell
+//!   inside the compression model) executes through PJRT;
+//! - Layer 3: this Rust process owns the training loop, the checkpoint
+//!   store, and the compression coordinator (bounded-queue backpressure).
+//!
+//! Logs the loss curve and the per-checkpoint compressed sizes — the data
+//! behind EXPERIMENTS.md §E2E. Results land in `runs/e2e/`.
+//!
+//! Run:          cargo run --release --example train_and_compress
+//! Bigger model: cargo run --release --example train_and_compress -- --workload lm_small --steps 400
+//! Paper-ish:    ... -- --workload lm_tiny --backend pjrt
+
+use cpcm::checkpoint::Store;
+use cpcm::codec::CodecConfig;
+use cpcm::config::BackendKind;
+use cpcm::coordinator::{Coordinator, CoordinatorConfig};
+use cpcm::lstm::Backend;
+use cpcm::runtime::RuntimeHandle;
+use cpcm::trainer::Trainer;
+
+fn arg(name: &str, default: &str) -> String {
+    let argv: Vec<String> = std::env::args().collect();
+    argv.iter()
+        .position(|a| a == name)
+        .and_then(|i| argv.get(i + 1).cloned())
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn main() -> anyhow::Result<()> {
+    let workload = arg("--workload", "lm_micro");
+    let steps: u64 = arg("--steps", "300").parse()?;
+    let ckpt_every: u64 = arg("--ckpt-every", "50").parse()?;
+    let backend_kind = BackendKind::parse(&arg("--backend", "native"))?;
+    let artifacts = arg("--artifacts", "artifacts");
+    let out = std::path::PathBuf::from(arg("--out", "runs/e2e"));
+    std::fs::create_dir_all(&out)?;
+
+    // One PJRT runtime thread serves both training and (optionally) the
+    // compression model.
+    let rt = RuntimeHandle::spawn(artifacts.clone())?;
+    let mut trainer =
+        Trainer::with_runtime(rt.clone(), std::path::Path::new(&artifacts), &workload, 42)?;
+    println!(
+        "== cpcm end-to-end: {} ({} params, {:.1} MB checkpoint) for {steps} steps ==",
+        workload,
+        trainer.param_count(),
+        trainer.param_count() as f64 * 12.0 / 1e6, // weights + m + v, f32
+    );
+
+    let backend = match backend_kind {
+        BackendKind::Native => Backend::Native,
+        BackendKind::Pjrt => Backend::Pjrt(rt.clone()),
+    };
+    // Compression model sized for CPU throughput; the paper's h512 config
+    // is available via `make artifacts-full` + CodecConfig::hidden = 512.
+    let codec = CodecConfig { hidden: 16, embed: 16, batch: 256, ..CodecConfig::default() };
+    let mut ccfg = CoordinatorConfig::new(codec, backend, out.join("cpcm"));
+    ccfg.verify = true; // decode-after-encode: proves the lossless property
+    let coordinator = Coordinator::start(ccfg)?;
+
+    let raw_store = Store::open(out.join("raw"))?;
+    let mut loss_csv = String::from("step,loss\n");
+    let t0 = std::time::Instant::now();
+    for _ in 0..steps {
+        let loss = trainer.step_once()?;
+        let step = trainer.step();
+        loss_csv.push_str(&format!("{step},{loss}\n"));
+        if step % 25 == 0 {
+            println!("step {step:>5}  loss {loss:.4}  ({:.1}s)", t0.elapsed().as_secs_f64());
+        }
+        if step % ckpt_every == 0 {
+            let ck = trainer.checkpoint()?;
+            raw_store.save(&ck)?;
+            coordinator.submit(ck)?; // blocks if compression lags: backpressure
+        }
+    }
+    std::fs::write(out.join("loss.csv"), &loss_csv)?;
+
+    let results = coordinator.finish()?;
+    println!("\nstep      raw MB    cpcm KB   ratio   encode s");
+    let mut size_csv = String::from("step,raw_bytes,cpcm_bytes,ratio,encode_s\n");
+    for r in &results {
+        println!(
+            "{:>6}  {:>8.2}  {:>9.1}  {:>6.1}  {:>8.2}",
+            r.step,
+            r.stats.raw_bytes as f64 / 1e6,
+            r.bytes as f64 / 1e3,
+            r.stats.ratio(),
+            r.stats.encode_seconds
+        );
+        size_csv.push_str(&format!(
+            "{},{},{},{},{}\n",
+            r.step,
+            r.stats.raw_bytes,
+            r.bytes,
+            r.stats.ratio(),
+            r.stats.encode_seconds
+        ));
+    }
+    std::fs::write(out.join("compression.csv"), &size_csv)?;
+
+    let total_raw: usize = results.iter().map(|r| r.stats.raw_bytes).sum();
+    let total_cpcm: usize = results.iter().map(|r| r.bytes).sum();
+    println!(
+        "\n{} checkpoints, all verified losslessly decodable; {:.2} MB raw → {:.3} MB compressed (overall ratio {:.1})",
+        results.len(),
+        total_raw as f64 / 1e6,
+        total_cpcm as f64 / 1e6,
+        total_raw as f64 / total_cpcm as f64
+    );
+    println!("final eval loss: {:.4}", trainer.eval_loss()?);
+    println!("logs: {}", out.display());
+    Ok(())
+}

@@ -1,0 +1,233 @@
+"""AOT compile path: lower every Layer-2 program to HLO *text* + manifest.
+
+Run once by `make artifacts` (never at request time):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Alongside the .hlo.txt files a manifest.json is written describing every
+program: parameter layout (names/shapes in flat order), input/output
+signatures and model hyperparameters. The Rust runtime loads programs and
+addresses their flat argument lists through this manifest.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(avals):
+    out = []
+    for name, a in avals:
+        out.append({"name": name, "shape": list(a.shape), "dtype": a.dtype.name})
+    return out
+
+
+def _f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+class Emitter:
+    """Lowers programs and accumulates manifest entries."""
+
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.programs = {}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, key, fn, example_args, arg_names, kind, config, params_spec):
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{key}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        self.programs[key] = {
+            "file": fname,
+            "kind": kind,
+            "config": config,
+            "params": [
+                {"name": n, "shape": list(s)} for n, s in params_spec
+            ],
+            "inputs": _sig(list(zip(arg_names, example_args))),
+        }
+        print(f"  {fname:<44} {len(text)/1e6:.2f} MB hlo text")
+
+    def finish(self):
+        manifest = {"version": 1, "programs": self.programs}
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(manifest, f, indent=1, sort_keys=True)
+        print(f"wrote {path} ({len(self.programs)} programs)")
+
+
+# --------------------------------------------------------------------------
+# Program matrix
+# --------------------------------------------------------------------------
+
+def lstm_configs(full: bool):
+    """Probability-model variants: paper config + fast/ablation configs."""
+    cfgs = [
+        # Default experiment config: 4-bit alphabet, 3×3 context, h64.
+        M.LstmConfig(alphabet=16, seq=9, embed=64, hidden=64, batch=256),
+        # 2-bit alphabet ablation.
+        M.LstmConfig(alphabet=4, seq=9, embed=64, hidden=64, batch=256),
+        # Context-size ablations: co-located only, and 5×5.
+        M.LstmConfig(alphabet=16, seq=1, embed=64, hidden=64, batch=256),
+        M.LstmConfig(alphabet=16, seq=25, embed=64, hidden=64, batch=256),
+        # Tiny config for unit/integration tests (fast to compile+run).
+        M.LstmConfig(alphabet=16, seq=9, embed=16, hidden=16, batch=32),
+    ]
+    if full:
+        # The paper's exact hyperparameters (§IV): hidden 512 × 2 layers,
+        # embedding 512, batch 256. Heavy on CPU; emitted for completeness.
+        cfgs.append(M.LstmConfig(alphabet=16, seq=9, embed=512, hidden=512, batch=256))
+    return cfgs
+
+
+def lm_configs(full: bool):
+    cfgs = [
+        # ~70k params: figure-bench workload — small enough that a dozen
+        # LSTM-coded checkpoints finish in minutes on CPU, large enough to
+        # show the paper's curve shapes.
+        M.LmConfig(tag="micro", vocab=256, dim=48, layers=2, heads=2, seq=48, batch=16),
+        # ~0.9M params: default example workload.
+        M.LmConfig(tag="tiny", vocab=512, dim=64, layers=2, heads=2, seq=64, batch=16),
+        # ~6.5M params: the E2E example's "real small workload".
+        M.LmConfig(tag="small", vocab=2048, dim=128, layers=4, heads=4, seq=128, batch=8),
+    ]
+    if full:
+        # ~110M params — Pythia-410M-class structure, for completeness.
+        cfgs.append(
+            M.LmConfig(tag="base", vocab=16384, dim=768, layers=12, heads=12, seq=256, batch=4)
+        )
+    return cfgs
+
+
+def vit_configs(full: bool):
+    return [
+        M.VitConfig(
+            tag="tiny", patches=16, patch_dim=48, dim=64, layers=2, heads=2,
+            classes=16, batch=32,
+        )
+    ]
+
+
+def emit_lstm(e: Emitter, cfg: M.LstmConfig):
+    spec = M.lstm_param_spec(cfg)
+    pshapes = [_f32(s) for _, s in spec]
+    pnames = [n for n, _ in spec]
+    conf = {
+        "alphabet": cfg.alphabet, "seq": cfg.seq, "embed": cfg.embed,
+        "hidden": cfg.hidden, "layers": cfg.layers, "batch": cfg.batch,
+        "lr": cfg.lr, "b1": cfg.b1, "b2": cfg.b2, "eps": cfg.eps,
+    }
+    tokens = _i32((cfg.batch, cfg.seq))
+    targets = _i32((cfg.batch,))
+
+    e.emit(
+        f"{cfg.name}_probs", M.lstm_probs_fn(cfg), [*pshapes, tokens],
+        [*pnames, "tokens"], "lstm_probs", conf, spec,
+    )
+    e.emit(
+        f"{cfg.name}_train", M.lstm_train_fn(cfg),
+        [*pshapes, *pshapes, *pshapes, _f32(()), tokens, targets],
+        [*pnames, *[f"m.{n}" for n in pnames], *[f"v.{n}" for n in pnames],
+         "step", "tokens", "targets"],
+        "lstm_train", conf, spec,
+    )
+    e.emit(
+        f"{cfg.name}_init", M.lstm_init_fn(cfg), [_i32(())], ["seed"],
+        "lstm_init", conf, spec,
+    )
+
+
+def emit_lm(e: Emitter, cfg: M.LmConfig):
+    spec = M.lm_param_spec(cfg)
+    pshapes = [_f32(s) for _, s in spec]
+    pnames = [n for n, _ in spec]
+    conf = {
+        "vocab": cfg.vocab, "dim": cfg.dim, "layers": cfg.layers,
+        "heads": cfg.heads, "seq": cfg.seq, "batch": cfg.batch,
+        "lr": cfg.lr, "b1": cfg.b1, "b2": cfg.b2, "eps": cfg.eps,
+    }
+    tokens = _i32((cfg.batch, cfg.seq + 1))
+    e.emit(
+        f"{cfg.name}_train", M.lm_train_fn(cfg),
+        [*pshapes, *pshapes, *pshapes, _f32(()), tokens],
+        [*pnames, *[f"m.{n}" for n in pnames], *[f"v.{n}" for n in pnames],
+         "step", "tokens"],
+        "lm_train", conf, spec,
+    )
+    e.emit(
+        f"{cfg.name}_eval", M.lm_eval_fn(cfg), [*pshapes, tokens],
+        [*pnames, "tokens"], "lm_eval", conf, spec,
+    )
+    e.emit(f"{cfg.name}_init", M.lm_init_fn(cfg), [_i32(())], ["seed"],
+           "lm_init", conf, spec)
+
+
+def emit_vit(e: Emitter, cfg: M.VitConfig):
+    spec = M.vit_param_spec(cfg)
+    pshapes = [_f32(s) for _, s in spec]
+    pnames = [n for n, _ in spec]
+    conf = {
+        "patches": cfg.patches, "patch_dim": cfg.patch_dim, "dim": cfg.dim,
+        "layers": cfg.layers, "heads": cfg.heads, "classes": cfg.classes,
+        "batch": cfg.batch, "lr": cfg.lr, "b1": cfg.b1, "b2": cfg.b2,
+        "eps": cfg.eps,
+    }
+    images = _f32((cfg.batch, cfg.patches, cfg.patch_dim))
+    labels = _i32((cfg.batch,))
+    e.emit(
+        f"{cfg.name}_train", M.vit_train_fn(cfg),
+        [*pshapes, *pshapes, *pshapes, _f32(()), images, labels],
+        [*pnames, *[f"m.{n}" for n in pnames], *[f"v.{n}" for n in pnames],
+         "step", "images", "labels"],
+        "vit_train", conf, spec,
+    )
+    e.emit(f"{cfg.name}_init", M.vit_init_fn(cfg), [_i32(())], ["seed"],
+           "vit_init", conf, spec)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--full", action="store_true",
+                    help="also emit the paper-scale (h512) and lm_base programs")
+    args = ap.parse_args()
+
+    e = Emitter(args.out)
+    for cfg in lstm_configs(args.full):
+        emit_lstm(e, cfg)
+    for cfg in lm_configs(args.full):
+        emit_lm(e, cfg)
+    for cfg in vit_configs(args.full):
+        emit_vit(e, cfg)
+    e.finish()
+
+
+if __name__ == "__main__":
+    main()

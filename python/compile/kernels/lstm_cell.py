@@ -1,0 +1,112 @@
+"""Layer-1 Pallas kernel: fused LSTM cell.
+
+The compression hot-spot of the paper is the LSTM probability model
+(2 layers, hidden 512, sequence length 9, batch 256 — §IV). One LSTM cell
+step is
+
+    gates = x @ Wx + h @ Wh + b          # [B, 4H]
+    i, f, g, o = split(gates, 4, axis=1)
+    c' = sigmoid(f) * c + sigmoid(i) * tanh(g)
+    h' = sigmoid(o) * tanh(c')
+
+This kernel fuses both matmuls, the bias add, all four gate nonlinearities
+and the state update into one Pallas program, tiled over the batch
+dimension.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the CUDA reference
+implementation would assign one threadblock per batch tile with the weights
+staged through shared memory. On TPU the same schedule is expressed with a
+1-D grid over batch tiles and BlockSpecs that keep the full `[E, 4H]` /
+`[H, 4H]` weight panels resident in VMEM while streaming `[Bt, ·]`
+activations — the two matmuls then drive the MXU directly. With the paper
+configuration (E = H = 512, f32) the VMEM footprint is
+
+    Wx 512×2048×4B = 4 MiB   Wh 512×2048×4B = 4 MiB
+    x/h/c/h'/c' tiles (Bt=128): 5 × 128×512×4B ≈ 1.3 MiB   total ≈ 9.4 MiB
+
+which fits a 16 MiB VMEM core with double-buffering headroom on the
+activation tiles only; bf16 weights would halve it.
+
+`interpret=True` is mandatory here: real TPU lowering emits a Mosaic
+custom-call that the CPU PJRT plugin cannot execute. Interpret mode lowers
+to plain HLO so the same program runs everywhere (and is what `aot.py`
+ships to the Rust runtime).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cell_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref, h_out_ref, c_out_ref):
+    """One fused LSTM cell step for a [Bt, ·] batch tile."""
+    # Both matmuls in f32; prefer MXU-friendly accumulation.
+    gates = (
+        jnp.dot(x_ref[...], wx_ref[...], preferred_element_type=jnp.float32)
+        + jnp.dot(h_ref[...], wh_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...]
+    )
+    hidden = c_ref.shape[-1]
+    i = jax.nn.sigmoid(gates[:, :hidden])
+    f = jax.nn.sigmoid(gates[:, hidden : 2 * hidden])
+    g = jnp.tanh(gates[:, 2 * hidden : 3 * hidden])
+    o = jax.nn.sigmoid(gates[:, 3 * hidden :])
+    c_new = f * c_ref[...] + i * g
+    h_out_ref[...] = o * jnp.tanh(c_new)
+    c_out_ref[...] = c_new
+
+
+def _pick_batch_tile(batch: int) -> int:
+    """Largest power-of-two tile ≤ 128 that divides the batch."""
+    tile = 1
+    for cand in (2, 4, 8, 16, 32, 64, 128):
+        if batch % cand == 0:
+            tile = cand
+    return tile
+
+
+@functools.partial(jax.jit, static_argnames=())
+def lstm_cell(x, h, c, wx, wh, b):
+    """Fused LSTM cell step.
+
+    Args:
+      x:  [B, E] input activations.
+      h:  [B, H] previous hidden state.
+      c:  [B, H] previous cell state.
+      wx: [E, 4H] input projection.
+      wh: [H, 4H] recurrent projection.
+      b:  [4H] gate bias (i, f, g, o blocks).
+
+    Returns:
+      (h', c'): updated hidden and cell states, both [B, H].
+    """
+    batch, _embed = x.shape
+    hidden = h.shape[-1]
+    tile = _pick_batch_tile(batch)
+    grid = (batch // tile,)
+    b2 = b.reshape(1, -1)  # TPU-friendly 2-D scalarless layout
+
+    h_new, c_new = pl.pallas_call(
+        _cell_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, x.shape[1]), lambda i: (i, 0)),     # x tile
+            pl.BlockSpec((tile, hidden), lambda i: (i, 0)),          # h tile
+            pl.BlockSpec((tile, hidden), lambda i: (i, 0)),          # c tile
+            pl.BlockSpec((wx.shape[0], wx.shape[1]), lambda i: (0, 0)),  # Wx resident
+            pl.BlockSpec((wh.shape[0], wh.shape[1]), lambda i: (0, 0)),  # Wh resident
+            pl.BlockSpec((1, b2.shape[1]), lambda i: (0, 0)),        # bias resident
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((tile, hidden), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, hidden), x.dtype),
+            jax.ShapeDtypeStruct((batch, hidden), x.dtype),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, h, c, wx, wh, b2)
+    return h_new, c_new

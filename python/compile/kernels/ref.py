@@ -1,0 +1,51 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written
+with plain `jax.numpy` only — no Pallas, no custom lowering. The pytest
+suite asserts `assert_allclose(kernel(...), ref(...))` over a sweep of
+shapes and dtypes; this is the core L1 correctness signal.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def lstm_cell_ref(x, h, c, wx, wh, b):
+    """Reference LSTM cell (same gate layout as kernels.lstm_cell: i,f,g,o)."""
+    gates = x @ wx + h @ wh + b
+    hidden = h.shape[-1]
+    i = jax.nn.sigmoid(gates[:, :hidden])
+    f = jax.nn.sigmoid(gates[:, hidden : 2 * hidden])
+    g = jnp.tanh(gates[:, 2 * hidden : 3 * hidden])
+    o = jax.nn.sigmoid(gates[:, 3 * hidden :])
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def lstm_stack_ref(tokens, params, num_layers, hidden):
+    """Reference multi-layer LSTM over a token sequence.
+
+    Mirrors model.lstm_probs but uses lstm_cell_ref throughout.
+    tokens: [B, S] int32; returns final top-layer hidden state [B, H].
+    """
+    emb = params["embed"][tokens]  # [B, S, E]
+    batch, seq, _ = emb.shape
+    hs = [jnp.zeros((batch, hidden), emb.dtype) for _ in range(num_layers)]
+    cs = [jnp.zeros((batch, hidden), emb.dtype) for _ in range(num_layers)]
+    for t in range(seq):
+        inp = emb[:, t, :]
+        for layer in range(num_layers):
+            wx = params[f"l{layer}.wx"]
+            wh = params[f"l{layer}.wh"]
+            b = params[f"l{layer}.b"]
+            hs[layer], cs[layer] = lstm_cell_ref(inp, hs[layer], cs[layer], wx, wh, b)
+            inp = hs[layer]
+    return hs[-1]
+
+
+def softmax_ref(logits):
+    """Numerically stable softmax reference."""
+    z = logits - logits.max(axis=-1, keepdims=True)
+    e = jnp.exp(z)
+    return e / e.sum(axis=-1, keepdims=True)

@@ -1,0 +1,478 @@
+"""Layer-2 JAX models, AOT-lowered to HLO text by aot.py.
+
+Three program families, all pure functions over *flat* parameter lists so
+the Rust runtime can address them positionally (the order is published in
+artifacts/manifest.json):
+
+1. The paper's LSTM probability model (§III–IV): embedding → 2-layer LSTM
+   (the Layer-1 Pallas fused cell) → linear head → softmax over the
+   quantized-symbol alphabet. Two programs: `lstm_probs` (inference, feeds
+   the arithmetic coder) and `lstm_train` (one Adam step on an observed
+   batch — the online adaptation both encoder and decoder replay).
+   Optimizer per §IV: Adam with β1 = 0, β2 = 0.9999, ε = 1e−5, lr = 1e−3.
+
+2. A GPT-style causal LM — the Pythia-410M stand-in workload whose Adam
+   checkpoints the experiments compress (DESIGN.md §3 substitutions).
+
+3. A small ViT on pre-patchified synthetic images — the ViT-L32 stand-in.
+
+The training-step programs take and return (params, m, v) so the Rust
+trainer owns the complete Adam state — exactly the `{W_t, O_t}` checkpoint
+content of paper Eq. 1.
+"""
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lstm_cell as lstm_kernel
+from .kernels import ref as kref
+
+
+# --------------------------------------------------------------------------
+# Differentiable wrapper: Pallas forward, jnp-VJP backward.
+# pallas_call has no transpose rule, so the train path rematerializes the
+# cell with the pure-jnp reference inside the custom VJP.
+# --------------------------------------------------------------------------
+
+@jax.custom_vjp
+def _cell(x, h, c, wx, wh, b):
+    return lstm_kernel.lstm_cell(x, h, c, wx, wh, b)
+
+
+def _cell_fwd(x, h, c, wx, wh, b):
+    out = lstm_kernel.lstm_cell(x, h, c, wx, wh, b)
+    return out, (x, h, c, wx, wh, b)
+
+
+def _cell_bwd(saved, cotangent):
+    _, vjp = jax.vjp(kref.lstm_cell_ref, *saved)
+    return vjp(cotangent)
+
+
+_cell.defvjp(_cell_fwd, _cell_bwd)
+
+
+# --------------------------------------------------------------------------
+# LSTM probability model
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LstmConfig:
+    """Shape/optimizer configuration of the probability model."""
+
+    alphabet: int = 16       # 2^n quantization symbols
+    seq: int = 9             # context length (3×3 window, paper Fig. 2)
+    embed: int = 64
+    hidden: int = 64
+    layers: int = 2
+    batch: int = 256         # paper §IV: batch size 256
+    lr: float = 1e-3
+    b1: float = 0.0          # paper §IV: "equivalent to RMSProp"
+    b2: float = 0.9999
+    eps: float = 1e-5
+
+    @property
+    def name(self) -> str:
+        return f"lstm_a{self.alphabet}_s{self.seq}_h{self.hidden}_b{self.batch}"
+
+
+def lstm_param_spec(cfg: LstmConfig):
+    """Ordered (name, shape) list — the flat layout Rust mirrors."""
+    spec = [("embed", (cfg.alphabet, cfg.embed))]
+    for layer in range(cfg.layers):
+        in_dim = cfg.embed if layer == 0 else cfg.hidden
+        spec += [
+            (f"l{layer}.wx", (in_dim, 4 * cfg.hidden)),
+            (f"l{layer}.wh", (cfg.hidden, 4 * cfg.hidden)),
+            (f"l{layer}.b", (4 * cfg.hidden,)),
+        ]
+    spec += [("head.w", (cfg.hidden, cfg.alphabet)), ("head.b", (cfg.alphabet,))]
+    return spec
+
+
+def _unflatten(spec, flat):
+    assert len(spec) == len(flat), f"want {len(spec)} params, got {len(flat)}"
+    return {name: arr for (name, _), arr in zip(spec, flat)}
+
+
+def lstm_init_fn(cfg: LstmConfig):
+    """seed:i32[] → flat params (deterministic truncated-normal-ish init)."""
+    spec = lstm_param_spec(cfg)
+
+    def init(seed):
+        key = jax.random.PRNGKey(seed)
+        outs = []
+        for i, (name, shape) in enumerate(spec):
+            sub = jax.random.fold_in(key, i)
+            if name.endswith(".b"):
+                arr = jnp.zeros(shape, jnp.float32)
+                if ".b" in name and name.startswith("l"):
+                    # Forget-gate bias +1: standard LSTM trick, speeds up
+                    # early online adaptation.
+                    hidden = shape[0] // 4
+                    arr = arr.at[hidden : 2 * hidden].set(1.0)
+            else:
+                fan_in = shape[0]
+                arr = jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(
+                    jnp.float32(fan_in)
+                )
+            outs.append(arr)
+        return tuple(outs)
+
+    return init
+
+
+def _lstm_hidden(params, tokens, cfg: LstmConfig, cell):
+    """Shared LSTM trunk → final top-layer hidden state [B, H]."""
+    emb = params["embed"][tokens]  # [B, S, E]
+    batch = tokens.shape[0]
+    hs = [jnp.zeros((batch, cfg.hidden), jnp.float32) for _ in range(cfg.layers)]
+    cs = [jnp.zeros((batch, cfg.hidden), jnp.float32) for _ in range(cfg.layers)]
+    for t in range(cfg.seq):  # static unroll; S ≤ 25
+        inp = emb[:, t, :]
+        for layer in range(cfg.layers):
+            hs[layer], cs[layer] = cell(
+                inp,
+                hs[layer],
+                cs[layer],
+                params[f"l{layer}.wx"],
+                params[f"l{layer}.wh"],
+                params[f"l{layer}.b"],
+            )
+            inp = hs[layer]
+    return hs[-1]
+
+
+def lstm_probs_fn(cfg: LstmConfig):
+    """(params…, tokens:i32[B,S]) → probs:f32[B,A] (softmax)."""
+    spec = lstm_param_spec(cfg)
+
+    def probs(*args):
+        flat, tokens = args[:-1], args[-1]
+        params = _unflatten(spec, flat)
+        h = _lstm_hidden(params, tokens, cfg, _cell)
+        logits = h @ params["head.w"] + params["head.b"]
+        return (jax.nn.softmax(logits, axis=-1),)
+
+    return probs
+
+
+def lstm_loss(params, tokens, targets, cfg: LstmConfig, cell):
+    """Mean cross-entropy of the next-symbol prediction."""
+    h = _lstm_hidden(params, tokens, cfg, cell)
+    logits = h @ params["head.w"] + params["head.b"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[:, None], axis=1)[:, 0]
+    return jnp.mean(nll)
+
+
+def lstm_train_fn(cfg: LstmConfig):
+    """(params…, m…, v…, step:f32[], tokens, targets) → (params'…, m'…, v'…, loss).
+
+    One Adam step with the paper's hyperparameters. The backward pass goes
+    through the jnp reference cell (custom VJP above).
+    """
+    spec = lstm_param_spec(cfg)
+    n = len(spec)
+
+    def train(*args):
+        flat = args[:n]
+        m = args[n : 2 * n]
+        v = args[2 * n : 3 * n]
+        step, tokens, targets = args[3 * n], args[3 * n + 1], args[3 * n + 2]
+
+        def loss_of(flat_params):
+            return lstm_loss(_unflatten(spec, flat_params), tokens, targets, cfg, _cell)
+
+        loss, grads = jax.value_and_grad(loss_of)(flat)
+        new_p, new_m, new_v = adam_step(
+            flat, grads, m, v, step, cfg.lr, cfg.b1, cfg.b2, cfg.eps
+        )
+        return (*new_p, *new_m, *new_v, loss)
+
+    return train
+
+
+# --------------------------------------------------------------------------
+# Shared Adam
+# --------------------------------------------------------------------------
+
+def adam_step(params, grads, m, v, step, lr, b1, b2, eps):
+    """Flat-list Adam with bias correction. `step` is the 1-based f32 step."""
+    new_p, new_m, new_v = [], [], []
+    bc1 = 1.0 - b1**step
+    bc2 = 1.0 - b2**step
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = b1 * mi + (1.0 - b1) * g
+        vi = b2 * vi + (1.0 - b2) * g * g
+        mhat = mi / bc1
+        vhat = vi / bc2
+        new_p.append(p - lr * mhat / (jnp.sqrt(vhat) + eps))
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v
+
+
+# --------------------------------------------------------------------------
+# GPT-style causal LM (Pythia stand-in)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LmConfig:
+    """Decoder-only transformer configuration."""
+
+    tag: str = "tiny"
+    vocab: int = 512
+    dim: int = 64
+    layers: int = 2
+    heads: int = 2
+    seq: int = 64            # context length (training window)
+    batch: int = 16
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+
+    @property
+    def name(self) -> str:
+        return f"lm_{self.tag}"
+
+
+def _block_spec(prefix, dim):
+    return [
+        (f"{prefix}.ln1.g", (dim,)),
+        (f"{prefix}.ln1.b", (dim,)),
+        (f"{prefix}.attn.wqkv", (dim, 3 * dim)),
+        (f"{prefix}.attn.wo", (dim, dim)),
+        (f"{prefix}.ln2.g", (dim,)),
+        (f"{prefix}.ln2.b", (dim,)),
+        (f"{prefix}.mlp.w1", (dim, 4 * dim)),
+        (f"{prefix}.mlp.b1", (4 * dim,)),
+        (f"{prefix}.mlp.w2", (4 * dim, dim)),
+        (f"{prefix}.mlp.b2", (dim,)),
+    ]
+
+
+def lm_param_spec(cfg: LmConfig):
+    spec = [("tok_embed", (cfg.vocab, cfg.dim)), ("pos_embed", (cfg.seq, cfg.dim))]
+    for i in range(cfg.layers):
+        spec += _block_spec(f"h{i}", cfg.dim)
+    spec += [("ln_f.g", (cfg.dim,)), ("ln_f.b", (cfg.dim,))]
+    return spec
+
+
+def lm_init_fn(cfg: LmConfig):
+    spec = lm_param_spec(cfg)
+
+    def init(seed):
+        key = jax.random.PRNGKey(seed)
+        outs = []
+        for i, (name, shape) in enumerate(spec):
+            sub = jax.random.fold_in(key, i)
+            if name.endswith((".b", ".b1", ".b2")) or name == "ln_f.b":
+                arr = jnp.zeros(shape, jnp.float32)
+            elif name.endswith(".g"):
+                arr = jnp.ones(shape, jnp.float32)
+            else:
+                scale = 0.02
+                arr = scale * jax.random.normal(sub, shape, jnp.float32)
+            outs.append(arr)
+        return tuple(outs)
+
+    return init
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _causal_attn(x, wqkv, wo, heads):
+    batch, seq, dim = x.shape
+    hd = dim // heads
+    qkv = x @ wqkv  # [B,T,3D]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def split_heads(t):
+        return t.reshape(batch, seq, heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = split_heads(q), split_heads(k), split_heads(v)
+    att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(hd))
+    mask = jnp.tril(jnp.ones((seq, seq), bool))
+    att = jnp.where(mask, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(batch, seq, dim)
+    return out @ wo
+
+
+def _lm_logits(params, tokens_in, cfg: LmConfig):
+    x = params["tok_embed"][tokens_in] + params["pos_embed"][None, : tokens_in.shape[1]]
+    for i in range(cfg.layers):
+        p = f"h{i}"
+        a = _layer_norm(x, params[f"{p}.ln1.g"], params[f"{p}.ln1.b"])
+        x = x + _causal_attn(a, params[f"{p}.attn.wqkv"], params[f"{p}.attn.wo"], cfg.heads)
+        h = _layer_norm(x, params[f"{p}.ln2.g"], params[f"{p}.ln2.b"])
+        h = jax.nn.gelu(h @ params[f"{p}.mlp.w1"] + params[f"{p}.mlp.b1"])
+        x = x + h @ params[f"{p}.mlp.w2"] + params[f"{p}.mlp.b2"]
+    x = _layer_norm(x, params["ln_f.g"], params["ln_f.b"])
+    return x @ params["tok_embed"].T  # tied output head
+
+
+def lm_loss(params, tokens, cfg: LmConfig):
+    """tokens: i32[B, seq+1]; next-token cross-entropy."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = _lm_logits(params, inp, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def lm_train_fn(cfg: LmConfig):
+    """(params…, m…, v…, step:f32[], tokens:i32[B,seq+1]) → (…, loss)."""
+    spec = lm_param_spec(cfg)
+    n = len(spec)
+
+    def train(*args):
+        flat = args[:n]
+        m = args[n : 2 * n]
+        v = args[2 * n : 3 * n]
+        step, tokens = args[3 * n], args[3 * n + 1]
+
+        def loss_of(flat_params):
+            return lm_loss(_unflatten(spec, flat_params), tokens, cfg)
+
+        loss, grads = jax.value_and_grad(loss_of)(flat)
+        new_p, new_m, new_v = adam_step(
+            flat, grads, m, v, step, cfg.lr, cfg.b1, cfg.b2, cfg.eps
+        )
+        return (*new_p, *new_m, *new_v, loss)
+
+    return train
+
+
+def lm_eval_fn(cfg: LmConfig):
+    """(params…, tokens) → (loss,) — held-out loss for resume experiments."""
+    spec = lm_param_spec(cfg)
+    n = len(spec)
+
+    def ev(*args):
+        flat, tokens = args[:n], args[n]
+        return (lm_loss(_unflatten(spec, flat), tokens, cfg),)
+
+    return ev
+
+
+# --------------------------------------------------------------------------
+# Small ViT (ViT-L32 stand-in) on pre-patchified synthetic images
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class VitConfig:
+    tag: str = "tiny"
+    patches: int = 16        # tokens per image (e.g. 4×4 grid)
+    patch_dim: int = 48      # flattened patch size (e.g. 4×4×3)
+    dim: int = 64
+    layers: int = 2
+    heads: int = 2
+    classes: int = 16
+    batch: int = 32
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+
+    @property
+    def name(self) -> str:
+        return f"vit_{self.tag}"
+
+
+def vit_param_spec(cfg: VitConfig):
+    spec = [
+        ("patch.w", (cfg.patch_dim, cfg.dim)),
+        ("patch.b", (cfg.dim,)),
+        ("pos_embed", (cfg.patches, cfg.dim)),
+    ]
+    for i in range(cfg.layers):
+        spec += _block_spec(f"h{i}", cfg.dim)
+    spec += [
+        ("ln_f.g", (cfg.dim,)),
+        ("ln_f.b", (cfg.dim,)),
+        ("head.w", (cfg.dim, cfg.classes)),
+        ("head.b", (cfg.classes,)),
+    ]
+    return spec
+
+
+def vit_init_fn(cfg: VitConfig):
+    spec = vit_param_spec(cfg)
+
+    def init(seed):
+        key = jax.random.PRNGKey(seed)
+        outs = []
+        for i, (name, shape) in enumerate(spec):
+            sub = jax.random.fold_in(key, i)
+            if name.endswith((".b", ".b1", ".b2")):
+                arr = jnp.zeros(shape, jnp.float32)
+            elif name.endswith(".g"):
+                arr = jnp.ones(shape, jnp.float32)
+            else:
+                arr = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+            outs.append(arr)
+        return tuple(outs)
+
+    return init
+
+
+def _bidir_attn(x, wqkv, wo, heads):
+    batch, seq, dim = x.shape
+    hd = dim // heads
+    q, k, v = jnp.split(x @ wqkv, 3, axis=-1)
+
+    def split_heads(t):
+        return t.reshape(batch, seq, heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = split_heads(q), split_heads(k), split_heads(v)
+    att = jax.nn.softmax((q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(hd)), axis=-1)
+    return (att @ v).transpose(0, 2, 1, 3).reshape(batch, seq, dim) @ wo
+
+
+def vit_loss(params, images, labels, cfg: VitConfig):
+    """images: f32[B, patches, patch_dim]; labels: i32[B]."""
+    x = images @ params["patch.w"] + params["patch.b"] + params["pos_embed"][None]
+    for i in range(cfg.layers):
+        p = f"h{i}"
+        a = _layer_norm(x, params[f"{p}.ln1.g"], params[f"{p}.ln1.b"])
+        x = x + _bidir_attn(a, params[f"{p}.attn.wqkv"], params[f"{p}.attn.wo"], cfg.heads)
+        h = _layer_norm(x, params[f"{p}.ln2.g"], params[f"{p}.ln2.b"])
+        h = jax.nn.gelu(h @ params[f"{p}.mlp.w1"] + params[f"{p}.mlp.b1"])
+        x = x + h @ params[f"{p}.mlp.w2"] + params[f"{p}.mlp.b2"]
+    x = _layer_norm(x.mean(axis=1), params["ln_f.g"], params["ln_f.b"])
+    logits = x @ params["head.w"] + params["head.b"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def vit_train_fn(cfg: VitConfig):
+    """(params…, m…, v…, step, images, labels) → (…, loss)."""
+    spec = vit_param_spec(cfg)
+    n = len(spec)
+
+    def train(*args):
+        flat = args[:n]
+        m = args[n : 2 * n]
+        v = args[2 * n : 3 * n]
+        step, images, labels = args[3 * n], args[3 * n + 1], args[3 * n + 2]
+
+        def loss_of(flat_params):
+            return vit_loss(_unflatten(spec, flat_params), images, labels, cfg)
+
+        loss, grads = jax.value_and_grad(loss_of)(flat)
+        new_p, new_m, new_v = adam_step(
+            flat, grads, m, v, step, cfg.lr, cfg.b1, cfg.b2, cfg.eps
+        )
+        return (*new_p, *new_m, *new_v, loss)
+
+    return train

@@ -1,0 +1,98 @@
+"""AOT path tests: HLO-text lowering and manifest consistency.
+
+These validate the compile-path contract the Rust runtime depends on:
+- every program lowers to parseable HLO text with `return_tuple=True`;
+- the manifest's parameter layout matches the model's spec exactly;
+- init/probs/train signatures agree with what `rust/src/lstm/pjrt.rs`
+  and `rust/src/trainer` assume positionally.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+import compile.model as M
+from compile.aot import Emitter, emit_lstm, to_hlo_text, lstm_configs, lm_configs
+
+
+TINY = M.LstmConfig(alphabet=16, seq=9, embed=16, hidden=16, batch=32)
+
+
+def test_to_hlo_text_emits_entry_computation():
+    def fn(x):
+        return (x * 2.0 + 1.0,)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((4, 4), jnp.float32))
+    text = to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "f32[4,4]" in text
+    # return_tuple=True → tuple-shaped root.
+    assert "ROOT tuple" in text
+
+
+def test_emitter_writes_files_and_manifest(tmp_path):
+    e = Emitter(str(tmp_path))
+    emit_lstm(e, TINY)
+    e.finish()
+    files = os.listdir(tmp_path)
+    assert f"{TINY.name}_probs.hlo.txt" in files
+    assert f"{TINY.name}_train.hlo.txt" in files
+    assert f"{TINY.name}_init.hlo.txt" in files
+    manifest = json.load(open(tmp_path / "manifest.json"))
+    assert manifest["version"] == 1
+    probs = manifest["programs"][f"{TINY.name}_probs"]
+    assert probs["kind"] == "lstm_probs"
+    assert probs["config"]["alphabet"] == 16
+    # Param layout mirrors the model spec exactly.
+    spec = M.lstm_param_spec(TINY)
+    assert [(p["name"], tuple(p["shape"])) for p in probs["params"]] == [
+        (n, tuple(s)) for n, s in spec
+    ]
+
+
+def test_default_config_matrix_covers_required_programs():
+    """The Rust side hard-codes a few program prefixes; keep them emitted."""
+    lstm_names = {c.name for c in lstm_configs(full=False)}
+    assert "lstm_a16_s9_h64_b256" in lstm_names   # default codec config
+    assert "lstm_a16_s9_h16_b32" in lstm_names    # test config
+    assert "lstm_a4_s9_h64_b256" in lstm_names    # 2-bit ablation
+    assert "lstm_a16_s1_h64_b256" in lstm_names   # window=1 ablation
+    assert "lstm_a16_s25_h64_b256" in lstm_names  # window=5 ablation
+    lm_names = {c.name for c in lm_configs(full=False)}
+    assert {"lm_micro", "lm_tiny", "lm_small"} <= lm_names
+
+
+def test_paper_scale_configs_behind_full_flag():
+    full_lstm = {c.name for c in lstm_configs(full=True)}
+    assert "lstm_a16_s9_h512_b256" in full_lstm  # paper §IV hyperparameters
+    full_lm = {c.name for c in lm_configs(full=True)}
+    assert "lm_base" in full_lm
+
+
+def test_lstm_train_signature_matches_pjrt_expectations():
+    """(params, m, v, step, tokens, targets) → (params', m', v', loss)."""
+    n = len(M.lstm_param_spec(TINY))
+    flat = M.lstm_init_fn(TINY)(jnp.int32(0))
+    zeros = [jnp.zeros_like(p) for p in flat]
+    tokens = jnp.zeros((TINY.batch, TINY.seq), jnp.int32)
+    targets = jnp.zeros((TINY.batch,), jnp.int32)
+    out = M.lstm_train_fn(TINY)(*flat, *zeros, *zeros, jnp.float32(1.0), tokens, targets)
+    assert len(out) == 3 * n + 1
+    for i in range(n):
+        assert out[i].shape == flat[i].shape
+    assert out[-1].shape == ()
+
+
+def test_manifest_rejects_shape_drift(tmp_path):
+    """If the model spec and emitted example args ever diverge, lowering
+    must fail loudly rather than emit an inconsistent artifact."""
+    e = Emitter(str(tmp_path))
+    bad_shapes = [jax.ShapeDtypeStruct((3, 3), jnp.float32)]  # wrong arity
+    with pytest.raises(Exception):
+        e.emit(
+            "bad", M.lstm_probs_fn(TINY), bad_shapes, ["x"], "lstm_probs",
+            {}, M.lstm_param_spec(TINY),
+        )

@@ -1,0 +1,110 @@
+"""L1 correctness: Pallas fused LSTM cell vs the pure-jnp oracle.
+
+`hypothesis` is unavailable in this environment (DESIGN.md §6), so the
+shape/dtype sweep is a dense pytest.mark.parametrize grid plus seeded
+random draws — the same coverage style, deterministic by construction.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.lstm_cell import lstm_cell
+from compile.kernels.ref import lstm_cell_ref, softmax_ref
+
+
+def _rand(key, *shape, scale=1.0):
+    return scale * jax.random.normal(key, shape, jnp.float32)
+
+
+def _case(batch, embed, hidden, seed, scale=1.0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    x = _rand(ks[0], batch, embed, scale=scale)
+    h = _rand(ks[1], batch, hidden, scale=scale)
+    c = _rand(ks[2], batch, hidden, scale=scale)
+    wx = _rand(ks[3], embed, 4 * hidden, scale=scale / np.sqrt(embed))
+    wh = _rand(ks[4], hidden, 4 * hidden, scale=scale / np.sqrt(hidden))
+    b = _rand(ks[5], 4 * hidden, scale=0.1)
+    return x, h, c, wx, wh, b
+
+
+# Shape sweep: batch sizes that exercise every tile path (1, non-pow2
+# composite, exactly one tile, many tiles), embed != hidden, tiny dims.
+SHAPES = [
+    (1, 4, 4),
+    (2, 8, 4),
+    (3, 5, 7),      # odd batch → tile 1
+    (6, 16, 8),     # tile 2
+    (32, 16, 16),
+    (64, 32, 16),
+    (128, 16, 32),  # one full 128 tile
+    (256, 32, 32),  # two tiles
+    (96, 24, 40),   # tile 32, ragged dims
+]
+
+
+@pytest.mark.parametrize("batch,embed,hidden", SHAPES)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_cell_matches_ref(batch, embed, hidden, seed):
+    args = _case(batch, embed, hidden, seed)
+    h_k, c_k = lstm_cell(*args)
+    h_r, c_r = lstm_cell_ref(*args)
+    np.testing.assert_allclose(h_k, h_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(c_k, c_r, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("scale", [1e-3, 1.0, 10.0])
+def test_cell_extreme_scales(scale):
+    """Saturation regions of sigmoid/tanh must still agree."""
+    args = _case(16, 8, 8, seed=3, scale=scale)
+    h_k, c_k = lstm_cell(*args)
+    h_r, c_r = lstm_cell_ref(*args)
+    np.testing.assert_allclose(h_k, h_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(c_k, c_r, rtol=1e-5, atol=1e-6)
+
+
+def test_cell_zero_state():
+    """All-zero h/c (the codec's initial state every batch)."""
+    x, _, _, wx, wh, b = _case(32, 16, 16, seed=4)
+    z = jnp.zeros((32, 16), jnp.float32)
+    h_k, c_k = lstm_cell(x, z, z, wx, wh, b)
+    h_r, c_r = lstm_cell_ref(x, z, z, wx, wh, b)
+    np.testing.assert_allclose(h_k, h_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(c_k, c_r, rtol=1e-5, atol=1e-6)
+
+
+def test_cell_bounded_outputs():
+    """|h| ≤ 1 by construction (o·tanh); c bounded by |c_in| + 1."""
+    args = _case(64, 32, 32, seed=5, scale=5.0)
+    h_k, c_k = lstm_cell(*args)
+    assert np.all(np.abs(np.asarray(h_k)) <= 1.0 + 1e-6)
+    assert np.all(np.abs(np.asarray(c_k)) <= np.abs(np.asarray(args[2])) + 1.0 + 1e-6)
+
+
+def test_cell_jit_and_grad_path():
+    """The custom-vjp wrapper in model.py must differentiate cleanly."""
+    from compile.model import _cell
+
+    args = _case(8, 8, 8, seed=6)
+
+    def loss(wx):
+        h, c = _cell(args[0], args[1], args[2], wx, args[4], args[5])
+        return (h**2).sum() + (c**2).sum()
+
+    g = jax.grad(loss)(args[3])
+
+    def loss_ref(wx):
+        h, c = lstm_cell_ref(args[0], args[1], args[2], wx, args[4], args[5])
+        return (h**2).sum() + (c**2).sum()
+
+    g_ref = jax.grad(loss_ref)(args[3])
+    np.testing.assert_allclose(g, g_ref, rtol=1e-4, atol=1e-6)
+
+
+def test_softmax_ref_sanity():
+    logits = jnp.array([[0.0, 1.0, 2.0], [5.0, 5.0, 5.0]], jnp.float32)
+    p = softmax_ref(logits)
+    np.testing.assert_allclose(p.sum(-1), np.ones(2), rtol=1e-6)
+    assert p[0, 2] > p[0, 1] > p[0, 0]
+    np.testing.assert_allclose(p[1], np.full(3, 1 / 3), rtol=1e-6)

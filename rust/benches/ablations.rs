@@ -1,0 +1,96 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! - context window: 1 (co-located only) / 3×3 (paper) / 5×5;
+//! - quantization bits: 2 vs 4;
+//! - LSTM hidden size: 8 / 16 / 32;
+//! - entropy stage: order-0 AC vs zero-context LSTM vs full context.
+//!
+//! Each row reports the compressed bytes of the same two-checkpoint delta
+//! under one configuration. Run: `cargo bench --bench ablations`
+
+mod common;
+
+use cpcm::checkpoint::Checkpoint;
+use cpcm::codec::{Codec, CodecConfig, ContextMode};
+use cpcm::lstm::Backend;
+use cpcm::util::bench::Table;
+
+/// Encode ck1 against ck0 under `cfg`; returns delta-frame bytes.
+fn delta_bytes(cfg: &CodecConfig, ck0: &Checkpoint, ck1: &Checkpoint) -> usize {
+    let codec = Codec::new(cfg.clone(), Backend::Native);
+    let e0 = codec.encode(ck0, None, None).expect("intra");
+    let e1 = codec.encode(ck1, Some(&e0.recon), Some(&e0.syms)).expect("delta");
+    e1.bytes.len()
+}
+
+fn main() -> anyhow::Result<()> {
+    if !common::require_artifacts() {
+        return Ok(());
+    }
+    let every = if common::full_scale() { 100 } else { 40 };
+    let (ckpts, _) = common::checkpoint_trajectory("lm_micro", 2, every, 42)?;
+    let (ck0, ck1) = (&ckpts[0], &ckpts[1]);
+    let base = common::bench_codec();
+    let raw = ck1.raw_bytes() as f64;
+
+    let mut t = Table::new(
+        "Ablations — delta-frame size under one-factor changes",
+        &["bytes", "ratio"],
+    );
+    let mut run = |label: &str, cfg: CodecConfig| {
+        let b = delta_bytes(&cfg, ck0, ck1);
+        eprintln!("  {label:<28} {b:>9} B  (ratio {:>6.1})", raw / b as f64);
+        t.row(label, vec![b as f64, raw / b as f64]);
+    };
+
+    // Entropy stage.
+    run("mode=order0", CodecConfig { mode: ContextMode::Order0, ..base.clone() });
+    run("mode=zero_context", CodecConfig { mode: ContextMode::ZeroContext, ..base.clone() });
+    run("mode=lstm (proposed)", CodecConfig { mode: ContextMode::Lstm, ..base.clone() });
+    run("mode=mixed (extension)", CodecConfig { mode: ContextMode::Mixed, ..base.clone() });
+
+    // Context window.
+    run("window=1", CodecConfig { window: 1, ..base.clone() });
+    run("window=3 (paper)", CodecConfig { window: 3, ..base.clone() });
+    run("window=5", CodecConfig { window: 5, ..base.clone() });
+
+    // Quantization bits.
+    run("bits=2", CodecConfig { bits: 2, ..base.clone() });
+    run("bits=4 (default)", CodecConfig { bits: 4, ..base.clone() });
+
+    // Hidden size.
+    run("hidden=8", CodecConfig { hidden: 8, embed: 8, ..base.clone() });
+    run("hidden=16 (bench default)", CodecConfig { hidden: 16, embed: 16, ..base.clone() });
+    run("hidden=32", CodecConfig { hidden: 32, embed: 32, ..base.clone() });
+
+    // Reference warmup (our extension; 0 = paper-exact pipeline).
+    run("warmup=0 (paper-exact)", CodecConfig { warmup_passes: 0, ..base.clone() });
+    run("warmup=1 (default)", CodecConfig { warmup_passes: 1, ..base.clone() });
+    run("warmup=2", CodecConfig { warmup_passes: 2, ..base.clone() });
+
+    // Warmup stride (speed/ratio tradeoff; default 4).
+    run("warmup_stride=1", CodecConfig { warmup_stride: 1, ..base.clone() });
+    run("warmup_stride=4 (default)", CodecConfig { warmup_stride: 4, ..base.clone() });
+    run("warmup_stride=8", CodecConfig { warmup_stride: 8, ..base.clone() });
+
+    // Adaptation learning rate (paper: 1e-3 on 410M-param streams).
+    run("lr=1e-3 (paper)", CodecConfig { lr: 1e-3, ..base.clone() });
+    run("lr=3e-3 (bench default)", CodecConfig { lr: 3e-3, ..base.clone() });
+    run("lr=6e-3", CodecConfig { lr: 6e-3, ..base.clone() });
+
+    // Second-moment log transform.
+    run("log_moment2=false", CodecConfig { log_moment2: false, ..base.clone() });
+
+    // Pruning off (everything quantized).
+    run(
+        "prune=off",
+        CodecConfig {
+            prune: cpcm::prune::PruneConfig { enabled: false, ..Default::default() },
+            ..base.clone()
+        },
+    );
+
+    t.print();
+    common::save_results("ablations.csv", &t.to_csv());
+    Ok(())
+}

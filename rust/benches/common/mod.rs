@@ -1,0 +1,88 @@
+//! Shared machinery for the figure-regeneration benches.
+//!
+//! Every bench supports two scales:
+//! - default (quick): small checkpoint trajectory, finishes in minutes —
+//!   used by `cargo bench` and CI;
+//! - `CPCM_BENCH_FULL=1`: longer trajectories closer to the paper's
+//!   setup (still CPU-sized models; see DESIGN.md §3 on substitutions).
+//!
+//! Benches print Markdown tables + `csv,` lines (grep-able for plotting)
+//! and append their tables to `bench_results/` for EXPERIMENTS.md.
+
+use cpcm::checkpoint::Checkpoint;
+use cpcm::codec::CodecConfig;
+use cpcm::trainer::Trainer;
+use std::path::PathBuf;
+
+/// True when the full-scale run is requested.
+pub fn full_scale() -> bool {
+    std::env::var("CPCM_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Artifacts directory (benches run from the crate root).
+pub fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Abort politely when `make artifacts` has not been run.
+pub fn require_artifacts() -> bool {
+    if artifacts().join("manifest.json").exists() {
+        true
+    } else {
+        eprintln!("bench skipped: run `make artifacts` first");
+        false
+    }
+}
+
+/// Train `workload` and capture a checkpoint every `every` steps.
+pub fn checkpoint_trajectory(
+    workload: &str,
+    n_ckpts: usize,
+    every: u64,
+    seed: u64,
+) -> anyhow::Result<(Vec<Checkpoint>, Vec<f32>)> {
+    let mut tr = Trainer::new(artifacts(), workload, seed)?;
+    let mut ckpts = Vec::with_capacity(n_ckpts);
+    let mut losses = Vec::new();
+    for _ in 0..n_ckpts {
+        tr.train(every, |_, l| losses.push(l))?;
+        ckpts.push(tr.checkpoint()?);
+    }
+    Ok((ckpts, losses))
+}
+
+/// Resume-from-restored trajectory: continue `extra` more checkpoints from
+/// a checkpoint that went through compress→decompress (the Fig.-3 "break"
+/// at iteration `break_at`).
+pub fn resumed_trajectory(
+    workload: &str,
+    restored: &Checkpoint,
+    n_ckpts: usize,
+    every: u64,
+    seed: u64,
+) -> anyhow::Result<Vec<Checkpoint>> {
+    let mut tr = Trainer::new(artifacts(), workload, seed)?;
+    tr.restore(restored)?;
+    let mut ckpts = Vec::with_capacity(n_ckpts);
+    for _ in 0..n_ckpts {
+        tr.train(every, |_, _| {})?;
+        ckpts.push(tr.checkpoint()?);
+    }
+    Ok(ckpts)
+}
+
+/// The CPU-sized codec configuration used across the figure benches:
+/// h16 LSTM, one reference-warmup pass, lr raised to 3e-3 — on the short
+/// synthetic streams the adaptation transient dominates at the paper's
+/// 1e-3 (see EXPERIMENTS.md §Tuning; the paper's 410M-param streams give
+/// the model ~1000× more adaptation data per checkpoint).
+pub fn bench_codec() -> CodecConfig {
+    CodecConfig { hidden: 16, embed: 16, batch: 256, lr: 3e-3, ..CodecConfig::default() }
+}
+
+/// Write a results file under bench_results/ (gitignored scratch).
+pub fn save_results(name: &str, csv: &str) {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_results");
+    let _ = std::fs::create_dir_all(&dir);
+    let _ = std::fs::write(dir.join(name), csv);
+}

@@ -1,0 +1,131 @@
+//! Fig. 1 regeneration: spatial correlation between the quantized weight
+//! residuals of adjacent checkpoints — the assumption the whole method
+//! rests on ("there is a correlation between the quantized residual values
+//! of a reference checkpoint and the corresponding residuals of the
+//! current checkpoint", §I).
+//!
+//! The paper shows the two residual maps as images; here we quantify:
+//! per-layer Pearson correlation between adjacent quantized residual maps,
+//! the mutual information between co-located symbols, and (optionally)
+//! PGM dumps of the maps for visual inspection (set CPCM_FIG1_PGM=1).
+//!
+//! Run: `cargo bench --bench fig1_correlation`
+
+mod common;
+
+use cpcm::codec::{Codec, ContextMode, SymbolMaps};
+use cpcm::lstm::Backend;
+use cpcm::util::bench::Table;
+use cpcm::util::stats;
+
+/// Mutual information (bits) between co-located symbols of two maps.
+fn mutual_information(a: &[u16], b: &[u16], alphabet: usize) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len() as f64;
+    if a.is_empty() {
+        return 0.0;
+    }
+    let mut joint = vec![0.0f64; alphabet * alphabet];
+    let mut pa = vec![0.0f64; alphabet];
+    let mut pb = vec![0.0f64; alphabet];
+    for (&x, &y) in a.iter().zip(b) {
+        joint[x as usize * alphabet + y as usize] += 1.0;
+        pa[x as usize] += 1.0;
+        pb[y as usize] += 1.0;
+    }
+    let mut mi = 0.0;
+    for x in 0..alphabet {
+        for y in 0..alphabet {
+            let j = joint[x * alphabet + y] / n;
+            if j > 0.0 {
+                mi += j * (j / (pa[x] / n * pb[y] / n)).log2();
+            }
+        }
+    }
+    mi
+}
+
+fn dump_pgm(path: &str, syms: &[u16], rows: usize, cols: usize, alphabet: usize) {
+    let mut out = format!("P2\n{cols} {rows}\n255\n");
+    for r in 0..rows {
+        for c in 0..cols {
+            let v = syms[r * cols + c] as usize * 255 / (alphabet - 1);
+            out.push_str(&format!("{v} "));
+        }
+        out.push('\n');
+    }
+    let _ = std::fs::write(path, out);
+}
+
+fn main() -> anyhow::Result<()> {
+    if !common::require_artifacts() {
+        return Ok(());
+    }
+    let (ckpts, _) = common::checkpoint_trajectory("lm_micro", 3, 40, 42)?;
+    let codec = Codec::new(
+        cpcm::codec::CodecConfig {
+            mode: ContextMode::Order0, // entropy stage irrelevant here
+            ..common::bench_codec()
+        },
+        Backend::Native,
+    );
+
+    // Symbol maps of two adjacent residuals (ckpt1−ckpt0, ckpt2−ckpt1).
+    let e0 = codec.encode(&ckpts[0], None, None)?;
+    let e1 = codec.encode(&ckpts[1], Some(&e0.recon), Some(&e0.syms))?;
+    let e2 = codec.encode(&ckpts[2], Some(&e1.recon), Some(&e1.syms))?;
+
+    let alphabet = 1usize << common::bench_codec().bits;
+    let layer_names: Vec<String> =
+        ckpts[0].weights.iter().map(|e| e.name.clone()).collect();
+    let report = |label: &str, sa: &SymbolMaps, sb: &SymbolMaps| {
+        let mut t = Table::new(
+            &format!("Fig. 1 — adjacent-residual correlation ({label})"),
+            &["pearson_r", "mutual_info_bits", "sym_entropy_bits", "nonzero_frac"],
+        );
+        for (ti, name) in layer_names.iter().enumerate() {
+            let a = &sa.sets[0][ti];
+            let b = &sb.sets[0][ti];
+            let fa: Vec<f32> = a.iter().map(|&s| s as f32).collect();
+            let fb: Vec<f32> = b.iter().map(|&s| s as f32).collect();
+            t.row(
+                name.clone(),
+                vec![
+                    stats::pearson(&fa, &fb),
+                    mutual_information(a, b, alphabet),
+                    stats::entropy_bits(b, alphabet),
+                    1.0 - stats::sparsity(b),
+                ],
+            );
+        }
+        t.print();
+        t
+    };
+    let t = report("Δ(ck1,ck0) vs Δ(ck2,ck1)", &e1.syms, &e2.syms);
+    common::save_results("fig1.csv", &t.to_csv());
+
+    if std::env::var("CPCM_FIG1_PGM").map(|v| v == "1").unwrap_or(false) {
+        // Dump the largest layer's two residual maps as images.
+        let (ti, e) = ckpts[0]
+            .weights
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, e)| e.tensor.len())
+            .unwrap();
+        let (rows, cols) = e.tensor.rows_cols();
+        dump_pgm("bench_results/fig1_prev.pgm", &e1.syms.sets[0][ti], rows, cols, alphabet);
+        dump_pgm("bench_results/fig1_curr.pgm", &e2.syms.sets[0][ti], rows, cols, alphabet);
+        eprintln!("wrote bench_results/fig1_{{prev,curr}}.pgm");
+    }
+
+    // The assumption check: average MI must be positive (symbols carry
+    // information about the next residual).
+    let avg_mi: f64 = layer_names
+        .iter()
+        .enumerate()
+        .map(|(ti, _)| mutual_information(&e1.syms.sets[0][ti], &e2.syms.sets[0][ti], alphabet))
+        .sum::<f64>()
+        / layer_names.len() as f64;
+    eprintln!("\nmean adjacent-residual mutual information: {avg_mi:.4} bits/symbol");
+    Ok(())
+}

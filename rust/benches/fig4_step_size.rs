@@ -1,0 +1,112 @@
+//! Fig. 4 regeneration: compressed checkpoint size vs training iteration
+//! for reference step sizes s ∈ {1, 2} (paper Eq. 6), on the ViT workload.
+//!
+//! s = 2 references the checkpoint before the previous one — the paper's
+//! "checkpoint merging" memory saving — at the cost of larger residuals.
+//! Expected shape: both curves shrink as training converges; s = 2 sits
+//! above s = 1; the proposed method still beats ExCP at both step sizes
+//! (the paper reports up to 31% over ExCP on ViT-L32).
+//!
+//! Run: `cargo bench --bench fig4_step_size`
+
+mod common;
+
+use cpcm::baselines::ExcpCodec;
+use cpcm::checkpoint::Checkpoint;
+use cpcm::codec::{Codec, ContextMode, SymbolMaps};
+use cpcm::lstm::Backend;
+use cpcm::util::bench::Table;
+use std::collections::VecDeque;
+
+/// Compress a trajectory with reference step size `s`; returns per-ckpt
+/// (step, bytes).
+fn run_chain(mode: ContextMode, s: usize, ckpts: &[Checkpoint]) -> Vec<(u64, usize)> {
+    let codec = Codec::new(
+        cpcm::codec::CodecConfig { mode, ..common::bench_codec() },
+        Backend::Native,
+    );
+    let mut history: VecDeque<(Checkpoint, SymbolMaps)> = VecDeque::new();
+    let mut rows = Vec::new();
+    for ck in ckpts {
+        let reference = if history.len() >= s { history.front() } else { None };
+        let out = codec
+            .encode(ck, reference.map(|e| &e.0), reference.map(|e| &e.1))
+            .expect("encode");
+        rows.push((ck.step, out.bytes.len()));
+        history.push_back((out.recon, out.syms));
+        while history.len() > s {
+            history.pop_front();
+        }
+    }
+    rows
+}
+
+fn run_excp_chain(s: usize, ckpts: &[Checkpoint]) -> Vec<(u64, usize)> {
+    let codec = ExcpCodec::new(common::bench_codec());
+    let mut history: VecDeque<Checkpoint> = VecDeque::new();
+    let mut rows = Vec::new();
+    for ck in ckpts {
+        let reference = if history.len() >= s { history.front() } else { None };
+        let out = codec.encode(ck, reference).expect("excp");
+        rows.push((ck.step, out.bytes.len()));
+        history.push_back(out.recon);
+        while history.len() > s {
+            history.pop_front();
+        }
+    }
+    rows
+}
+
+fn main() -> anyhow::Result<()> {
+    if !common::require_artifacts() {
+        return Ok(());
+    }
+    let full = common::full_scale();
+    let (n_ckpts, every) = if full { (10, 60) } else { (6, 25) };
+
+    eprintln!("fig4: training vit_tiny, {n_ckpts} checkpoints (every {every} steps)…");
+    let (ckpts, _) = common::checkpoint_trajectory("vit_tiny", n_ckpts, every, 11)?;
+    let raw_kb = ckpts[0].raw_bytes() as f64 / 1e3;
+
+    eprintln!("fig4: compressing (proposed s=1, s=2; excp s=1, s=2)…");
+    let p1 = run_chain(ContextMode::Lstm, 1, &ckpts);
+    let p2 = run_chain(ContextMode::Lstm, 2, &ckpts);
+    let e1 = run_excp_chain(1, &ckpts);
+    let e2 = run_excp_chain(2, &ckpts);
+
+    let mut t = Table::new(
+        "Fig. 4 — compressed size (KB) vs iteration for step sizes s ∈ {1,2}",
+        &["proposed_s1", "proposed_s2", "excp_s1", "excp_s2"],
+    );
+    for i in 0..ckpts.len() {
+        t.row(
+            format!("iter_{}", p1[i].0),
+            vec![
+                p1[i].1 as f64 / 1e3,
+                p2[i].1 as f64 / 1e3,
+                e1[i].1 as f64 / 1e3,
+                e2[i].1 as f64 / 1e3,
+            ],
+        );
+    }
+    t.print();
+    common::save_results("fig4.csv", &t.to_csv());
+
+    // Shape checks. Skip intra frames (first s entries of each chain).
+    let tail_sum = |rows: &[(u64, usize)], skip: usize| -> usize {
+        rows[skip..].iter().map(|r| r.1).sum()
+    };
+    let (tp1, tp2) = (tail_sum(&p1, 2), tail_sum(&p2, 2));
+    let (te1, te2) = (tail_sum(&e1, 2), tail_sum(&e2, 2));
+    eprintln!("\nraw checkpoint: {raw_kb:.0} KB");
+    eprintln!(
+        "delta-frame totals: proposed s=1 {tp1} B, s=2 {tp2} B  (s=2 overhead {:+.1}%)",
+        100.0 * (tp2 as f64 - tp1 as f64) / tp1 as f64
+    );
+    eprintln!(
+        "vs ExCP:            s=1 {:+.1}%   s=2 {:+.1}%  (negative = proposed smaller)",
+        100.0 * (tp1 as f64 - te1 as f64) / te1 as f64,
+        100.0 * (tp2 as f64 - te2 as f64) / te2 as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,139 @@
+//! Hot-path microbenchmarks — the §Perf numbers of EXPERIMENTS.md.
+//!
+//! Covers each stage of the pipeline in isolation so the perf pass can
+//! attribute regressions: range coder, adaptive model, CDF construction,
+//! context gather, k-means quantizer, native-LSTM probs/update, and the
+//! end-to-end symbol throughput of the codec.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+mod common;
+
+use cpcm::ac::{AdaptiveModel, Cdf, Decoder, Encoder};
+use cpcm::checkpoint::Checkpoint;
+use cpcm::codec::{Codec, CodecConfig, ContextMode};
+use cpcm::context::ContextExtractor;
+use cpcm::lstm::{Backend, LstmCfg, ProbModel};
+use cpcm::quant::{quantize, QuantConfig};
+use cpcm::util::bench::Bench;
+use cpcm::util::rng::Pcg64;
+
+fn main() {
+    let mut b = Bench::new();
+    let mut rng = Pcg64::seed(0xbe);
+
+    // ---- Range coder -------------------------------------------------
+    let n = 1_000_000usize;
+    let syms: Vec<u16> =
+        (0..n).map(|_| if rng.f64() < 0.85 { 0 } else { 1 + rng.below(15) as u16 }).collect();
+    let mut freqs = [1u32; 16];
+    for &s in &syms {
+        freqs[s as usize] += 3;
+    }
+    while freqs.iter().sum::<u32>() >= 1 << 16 {
+        for f in freqs.iter_mut() {
+            *f = (*f + 1) / 2;
+        }
+    }
+    let mut cums = [0u32; 17];
+    for i in 0..16 {
+        cums[i + 1] = cums[i] + freqs[i];
+    }
+    let tot = cums[16];
+    let mut encoded = Vec::new();
+    b.run("ac/encode 1M static symbols", n as u64, || {
+        let mut enc = Encoder::new();
+        for &s in &syms {
+            enc.encode(cums[s as usize], freqs[s as usize], tot);
+        }
+        encoded = enc.finish();
+    });
+    b.run("ac/decode 1M static symbols", n as u64, || {
+        let mut dec = Decoder::new(&encoded).unwrap();
+        for _ in 0..n {
+            let f = dec.decode_freq(tot);
+            let s = cums.partition_point(|&c| c <= f) - 1;
+            dec.consume(cums[s], freqs[s]);
+        }
+    });
+
+    b.run("ac/adaptive encode 1M", n as u64, || {
+        let mut model = AdaptiveModel::new(16);
+        let mut enc = Encoder::new();
+        for &s in &syms {
+            model.encode(&mut enc, s);
+        }
+        std::hint::black_box(enc.finish());
+    });
+
+    // ---- CDF construction ---------------------------------------------
+    let prob_rows: Vec<Vec<f32>> = (0..10_000)
+        .map(|_| (0..16).map(|_| rng.f32()).collect())
+        .collect();
+    b.run("cdf/from_probs 10k rows (A=16)", 10_000, || {
+        for row in &prob_rows {
+            std::hint::black_box(Cdf::from_probs(row));
+        }
+    });
+
+    // ---- Context gather -------------------------------------------------
+    let (rows, cols) = (512usize, 512usize);
+    let map: Vec<u16> = (0..rows * cols).map(|_| rng.below(16) as u16).collect();
+    let ex = ContextExtractor::new(rows, cols, 3).unwrap();
+    let mut ctx = vec![0i32; 9];
+    b.run("context/3x3 gather 262k positions", (rows * cols) as u64, || {
+        for idx in 0..rows * cols {
+            ex.extract_into(&map, idx, &mut ctx);
+            std::hint::black_box(&ctx);
+        }
+    });
+
+    // ---- Quantizer ------------------------------------------------------
+    let vals: Vec<f32> =
+        (0..1_000_000).map(|_| if rng.f64() < 0.8 { 0.0 } else { rng.normal_f32() * 0.01 }).collect();
+    b.run("quant/kmeans 1M values (4 bits)", 1_000_000, || {
+        std::hint::black_box(quantize(&vals, &QuantConfig::default()).unwrap());
+    });
+
+    // ---- Native LSTM ------------------------------------------------------
+    let cfg = LstmCfg { hidden: 16, embed: 16, batch: 256, ..LstmCfg::default() };
+    let mut model = Backend::Native.make(&cfg).unwrap();
+    let ctxs: Vec<i32> = (0..cfg.batch * cfg.seq).map(|_| rng.below(16) as i32).collect();
+    let tgts: Vec<u16> = (0..cfg.batch).map(|_| rng.below(16) as u16).collect();
+    b.run("lstm/native probs (B=256,S=9,H=16)", cfg.batch as u64, || {
+        std::hint::black_box(model.probs(&ctxs).unwrap());
+    });
+    b.run("lstm/native update (B=256,S=9,H=16)", cfg.batch as u64, || {
+        std::hint::black_box(model.update(&ctxs, &tgts).unwrap());
+    });
+    let cfg64 = LstmCfg { hidden: 64, embed: 64, batch: 256, ..LstmCfg::default() };
+    let mut model64 = Backend::Native.make(&cfg64).unwrap();
+    b.run("lstm/native probs (B=256,S=9,H=64)", cfg64.batch as u64, || {
+        std::hint::black_box(model64.probs(&ctxs).unwrap());
+    });
+    b.run("lstm/native update (B=256,S=9,H=64)", cfg64.batch as u64, || {
+        std::hint::black_box(model64.update(&ctxs, &tgts).unwrap());
+    });
+
+    // ---- End-to-end codec symbol throughput -----------------------------
+    let layers: Vec<(&str, Vec<usize>)> = vec![("w", vec![128, 96])];
+    let c0 = Checkpoint::synthetic(1, &layers, 1);
+    let c1 = Checkpoint::synthetic(2, &layers, 2);
+    let n_syms = (c1.param_count() * 3) as u64;
+    for (label, mode) in [
+        ("codec/e2e order0", ContextMode::Order0),
+        ("codec/e2e zero-context lstm", ContextMode::ZeroContext),
+        ("codec/e2e full-context lstm", ContextMode::Lstm),
+    ] {
+        let codec = Codec::new(
+            CodecConfig { mode, hidden: 16, embed: 16, batch: 256, ..CodecConfig::default() },
+            Backend::Native,
+        );
+        let e0 = codec.encode(&c0, None, None).unwrap();
+        b.run(label, n_syms, || {
+            std::hint::black_box(
+                codec.encode(&c1, Some(&e0.recon), Some(&e0.syms)).unwrap().bytes.len(),
+            );
+        });
+    }
+}

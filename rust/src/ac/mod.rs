@@ -1,0 +1,292 @@
+//! Adaptive arithmetic coding (paper ref. [12], Witten–Neal–Cleary).
+//!
+//! Implementation is an LZMA-style binary-carry range coder: 32-bit range,
+//! byte-wise renormalization, carry propagation through a cache byte. The
+//! coder consumes *cumulative frequency* triples `(cum, freq, tot)`;
+//! probability models live in [`models`]:
+//!
+//! - [`models::AdaptiveModel`] — classic order-0 adaptive frequencies (the
+//!   paper's "context replaced by zero" baseline and the mask/center coder);
+//! - [`models::BitModel`] — adaptive binary model for pruning-mask bits;
+//! - [`models::Cdf`] — externally supplied distribution, i.e. the LSTM's
+//!   per-symbol softmax converted to a deterministic fixed-point CDF. This
+//!   is how the paper's context-modeling probabilities reach the coder.
+//!
+//! Determinism: encoder and decoder must see bit-identical `(cum, freq,
+//! tot)` sequences. [`models::Cdf::from_probs`] performs the float→integer
+//! conversion with pure integer post-processing so both sides agree exactly.
+
+pub mod models;
+
+pub use models::{AdaptiveModel, BitModel, Cdf};
+
+use crate::{Error, Result};
+
+/// Renormalization threshold: bytes are shifted out while `range < TOP`.
+const TOP: u32 = 1 << 24;
+
+/// Maximum allowed total frequency. Keeping totals ≤ 2^16 preserves ≥ 8 bits
+/// of precision in `range / tot` after renormalization.
+pub const MAX_TOTAL: u32 = 1 << 16;
+
+/// Range encoder writing to an owned byte buffer.
+pub struct Encoder {
+    low: u64,
+    range: u32,
+    cache: u8,
+    /// Number of bytes pending carry resolution (cache + trailing 0xFFs).
+    cache_size: u64,
+    out: Vec<u8>,
+}
+
+impl Default for Encoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Encoder {
+    /// Fresh encoder.
+    pub fn new() -> Self {
+        Self { low: 0, range: u32::MAX, cache: 0, cache_size: 1, out: Vec::new() }
+    }
+
+    /// Encode one symbol occupying `[cum, cum+freq)` out of `tot`.
+    #[inline]
+    pub fn encode(&mut self, cum: u32, freq: u32, tot: u32) {
+        debug_assert!(freq > 0, "zero-frequency symbol");
+        debug_assert!(cum + freq <= tot && tot <= MAX_TOTAL);
+        let r = self.range / tot;
+        self.low += r as u64 * cum as u64;
+        self.range = r * freq;
+        while self.range < TOP {
+            self.range <<= 8;
+            self.shift_low();
+        }
+    }
+
+    /// Encode a raw bit pattern with a uniform model (used for escape
+    /// values and container plumbing; costs exactly `bits` bits).
+    pub fn encode_raw(&mut self, value: u32, bits: u8) {
+        debug_assert!(bits <= 16);
+        if bits == 0 {
+            return;
+        }
+        let tot = 1u32 << bits;
+        self.encode(value, 1, tot);
+    }
+
+    #[inline]
+    fn shift_low(&mut self) {
+        if (self.low as u32) < 0xFF00_0000 || (self.low >> 32) != 0 {
+            let carry = (self.low >> 32) as u8;
+            self.out.push(self.cache.wrapping_add(carry));
+            for _ in 1..self.cache_size {
+                self.out.push(0xFFu8.wrapping_add(carry));
+            }
+            self.cache = (self.low >> 24) as u8;
+            self.cache_size = 0;
+        }
+        self.cache_size += 1;
+        self.low = (self.low << 8) & 0xFFFF_FFFF;
+    }
+
+    /// Flush and return the bitstream. The first emitted byte is always 0
+    /// (initial cache) and is consumed by [`Decoder::new`].
+    pub fn finish(mut self) -> Vec<u8> {
+        for _ in 0..5 {
+            self.shift_low();
+        }
+        self.out
+    }
+
+    /// Bytes produced so far (excluding unflushed state).
+    pub fn len(&self) -> usize {
+        self.out.len()
+    }
+
+    /// True if nothing flushed yet.
+    pub fn is_empty(&self) -> bool {
+        self.out.is_empty()
+    }
+}
+
+/// Range decoder reading from a byte slice.
+pub struct Decoder<'a> {
+    range: u32,
+    code: u32,
+    /// `range / tot` of the in-flight symbol (set by `decode_freq`).
+    r: u32,
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Decoder<'a> {
+    /// Initialize from an encoder-produced buffer.
+    pub fn new(buf: &'a [u8]) -> Result<Self> {
+        if buf.len() < 5 {
+            return Err(Error::codec("arithmetic bitstream shorter than 5 bytes"));
+        }
+        let mut d = Self { range: u32::MAX, code: 0, r: 0, buf, pos: 1 }; // skip leading 0
+        for _ in 0..4 {
+            d.code = (d.code << 8) | d.next_byte();
+        }
+        Ok(d)
+    }
+
+    #[inline]
+    fn next_byte(&mut self) -> u32 {
+        // Reading past the end yields zeros; the symbol count bounds decode.
+        let b = self.buf.get(self.pos).copied().unwrap_or(0);
+        self.pos += 1;
+        b as u32
+    }
+
+    /// Return the frequency offset of the next symbol under total `tot`.
+    /// The caller maps it to a symbol via its model, then must call
+    /// [`Decoder::consume`] with that symbol's `(cum, freq)`.
+    #[inline]
+    pub fn decode_freq(&mut self, tot: u32) -> u32 {
+        debug_assert!(tot <= MAX_TOTAL);
+        self.r = self.range / tot;
+        // `min` guards the top of the interval against rounding slack.
+        (self.code / self.r).min(tot - 1)
+    }
+
+    /// Finish decoding the symbol identified by `decode_freq`.
+    #[inline]
+    pub fn consume(&mut self, cum: u32, freq: u32) {
+        self.code -= self.r * cum;
+        self.range = self.r * freq;
+        while self.range < TOP {
+            self.code = (self.code << 8) | self.next_byte();
+            self.range <<= 8;
+        }
+    }
+
+    /// Decode a raw `bits`-bit value written by [`Encoder::encode_raw`].
+    pub fn decode_raw(&mut self, bits: u8) -> u32 {
+        debug_assert!(bits <= 16);
+        if bits == 0 {
+            return 0;
+        }
+        let tot = 1u32 << bits;
+        let v = self.decode_freq(tot);
+        self.consume(v, 1);
+        v
+    }
+
+    /// Bytes consumed so far.
+    pub fn bytes_read(&self) -> usize {
+        self.pos.min(self.buf.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Pcg64;
+    use crate::util::stats::entropy_bits;
+
+    /// Encode/decode a stream under a fixed (static) distribution.
+    fn roundtrip_static(symbols: &[u16], freqs: &[u32]) -> Vec<u8> {
+        let tot: u32 = freqs.iter().sum();
+        let mut cums = vec![0u32; freqs.len() + 1];
+        for i in 0..freqs.len() {
+            cums[i + 1] = cums[i] + freqs[i];
+        }
+        let mut enc = Encoder::new();
+        for &s in symbols {
+            enc.encode(cums[s as usize], freqs[s as usize], tot);
+        }
+        let buf = enc.finish();
+
+        let mut dec = Decoder::new(&buf).unwrap();
+        for &s in symbols {
+            let f = dec.decode_freq(tot);
+            let sym = cums.partition_point(|&c| c <= f) - 1;
+            assert_eq!(sym as u16, s);
+            dec.consume(cums[sym], freqs[sym]);
+        }
+        buf
+    }
+
+    #[test]
+    fn roundtrip_uniform() {
+        let mut rng = Pcg64::seed(1);
+        let symbols: Vec<u16> = (0..5000).map(|_| rng.below(16) as u16).collect();
+        roundtrip_static(&symbols, &[4096u32; 16]);
+    }
+
+    #[test]
+    fn roundtrip_skewed_hits_entropy() {
+        let mut rng = Pcg64::seed(2);
+        // ~95% zeros: entropy well below 1 bit/symbol.
+        let symbols: Vec<u16> = (0..20_000)
+            .map(|_| if rng.f64() < 0.95 { 0 } else { 1 + rng.below(15) as u16 })
+            .collect();
+        // Keep the static total under MAX_TOTAL: +3 per symbol over 20k
+        // symbols plus 16 initial counts tops out at 60 016.
+        let mut freqs = [1u32; 16];
+        for &s in &symbols {
+            freqs[s as usize] += 3;
+        }
+        let buf = roundtrip_static(&symbols, &freqs);
+        let h = entropy_bits(&symbols, 16);
+        let actual_bits = buf.len() as f64 * 8.0 / symbols.len() as f64;
+        // Within 5% + constant of the empirical entropy.
+        assert!(actual_bits < h * 1.05 + 0.01, "actual {actual_bits:.4} bits vs entropy {h:.4}");
+    }
+
+    #[test]
+    fn empty_stream() {
+        let enc = Encoder::new();
+        let buf = enc.finish();
+        assert_eq!(buf.len(), 5);
+        assert!(Decoder::new(&buf).is_ok());
+    }
+
+    #[test]
+    fn short_buffer_rejected() {
+        assert!(Decoder::new(&[0, 1, 2]).is_err());
+    }
+
+    #[test]
+    fn raw_bits_roundtrip() {
+        let mut enc = Encoder::new();
+        let vals = [(0u32, 1u8), (1, 1), (300, 9), (65535, 16), (0, 16), (5, 3)];
+        for &(v, b) in &vals {
+            enc.encode_raw(v, b);
+        }
+        let buf = enc.finish();
+        let mut dec = Decoder::new(&buf).unwrap();
+        for &(v, b) in &vals {
+            assert_eq!(dec.decode_raw(b), v);
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_random_models() {
+        forall("ac static roundtrip", 40, |g| {
+            let alphabet = g.usize_range(2, 64);
+            let n = g.size(3000);
+            let freqs: Vec<u32> = (0..alphabet).map(|_| 1 + g.usize_range(0, 500) as u32).collect();
+            let weights: Vec<f64> = freqs.iter().map(|&f| f as f64).collect();
+            let symbols: Vec<u16> = (0..n).map(|_| g.rng().weighted(&weights) as u16).collect();
+            roundtrip_static(&symbols, &freqs);
+        });
+    }
+
+    #[test]
+    fn carry_propagation_stress() {
+        // Distributions near the top of the interval exercise the 0xFF
+        // carry chain; run many short streams with extreme skew.
+        forall("ac carry stress", 60, |g| {
+            let n = g.usize_range(1, 400);
+            let symbols: Vec<u16> = (0..n).map(|_| g.bool(0.999) as u16).collect();
+            // freq[1] enormous, freq[0] = 1 → code hugs the upper bound.
+            roundtrip_static(&symbols, &[1, 65_000]);
+        });
+    }
+}

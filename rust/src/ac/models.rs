@@ -1,0 +1,415 @@
+//! Probability models for the range coder.
+
+use super::{Decoder, Encoder, MAX_TOTAL};
+
+/// Order-0 adaptive frequency model (the paper's context-free baseline:
+/// "the proposed method where the context is replaced by zero, similar to
+/// context-free probability estimation in arithmetic coder" — §IV).
+///
+/// Frequencies start at 1 (every symbol codable), grow by `increment` per
+/// occurrence, and are halved (floor at 1) when the total would exceed
+/// `MAX_TOTAL`, implementing the usual exponential-forgetting adaptation.
+#[derive(Clone, Debug)]
+pub struct AdaptiveModel {
+    freqs: Vec<u32>,
+    total: u32,
+    increment: u32,
+}
+
+impl AdaptiveModel {
+    /// Model over `alphabet` symbols with the default increment (32).
+    pub fn new(alphabet: usize) -> Self {
+        Self::with_increment(alphabet, 32)
+    }
+
+    /// Model with a custom adaptation increment. Larger increments adapt
+    /// faster but quantize probabilities more coarsely.
+    pub fn with_increment(alphabet: usize, increment: u32) -> Self {
+        assert!(alphabet >= 1);
+        assert!((alphabet as u32) < MAX_TOTAL / 2, "alphabet too large");
+        Self { freqs: vec![1; alphabet], total: alphabet as u32, increment }
+    }
+
+    /// Alphabet size.
+    pub fn alphabet(&self) -> usize {
+        self.freqs.len()
+    }
+
+    /// Cumulative frequency below `sym`.
+    fn cum(&self, sym: u16) -> u32 {
+        self.freqs[..sym as usize].iter().sum()
+    }
+
+    /// Update counts after coding `sym` (shared by both directions).
+    fn update(&mut self, sym: u16) {
+        self.freqs[sym as usize] += self.increment;
+        self.total += self.increment;
+        if self.total >= MAX_TOTAL {
+            self.total = 0;
+            for f in &mut self.freqs {
+                *f = (*f + 1) >> 1;
+                self.total += *f;
+            }
+        }
+    }
+
+    /// Encode `sym` and adapt.
+    pub fn encode(&mut self, enc: &mut Encoder, sym: u16) {
+        let cum = self.cum(sym);
+        enc.encode(cum, self.freqs[sym as usize], self.total);
+        self.update(sym);
+    }
+
+    /// Decode a symbol and adapt.
+    pub fn decode(&mut self, dec: &mut Decoder) -> u16 {
+        let target = dec.decode_freq(self.total);
+        // Linear scan: alphabets here are ≤ 256, and the scan is
+        // branch-predictable; a Fenwick tree is not worth it.
+        let mut cum = 0u32;
+        let mut sym = 0u16;
+        for (i, &f) in self.freqs.iter().enumerate() {
+            if cum + f > target {
+                sym = i as u16;
+                break;
+            }
+            cum += f;
+        }
+        dec.consume(cum, self.freqs[sym as usize]);
+        self.update(sym);
+        sym
+    }
+
+    /// Ideal code length of `sym` under the current state, in bits — used
+    /// by tests and the bitrate estimator.
+    pub fn bits_for(&self, sym: u16) -> f64 {
+        -((self.freqs[sym as usize] as f64 / self.total as f64).log2())
+    }
+}
+
+/// Adaptive binary model with shift-register adaptation, for pruning-mask
+/// bits. 12-bit probability, adaptation rate `1/2^RATE`.
+#[derive(Clone, Debug)]
+pub struct BitModel {
+    /// P(bit = 1) in units of 1/4096.
+    p1: u32,
+}
+
+const BIT_TOT: u32 = 1 << 12;
+const BIT_RATE: u32 = 5;
+
+impl Default for BitModel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BitModel {
+    /// Start at p=0.5.
+    pub fn new() -> Self {
+        Self { p1: BIT_TOT / 2 }
+    }
+
+    /// Encode one bit and adapt.
+    pub fn encode(&mut self, enc: &mut Encoder, bit: bool) {
+        let p1 = self.p1;
+        if bit {
+            enc.encode(BIT_TOT - p1, p1, BIT_TOT);
+            self.p1 += (BIT_TOT - self.p1) >> BIT_RATE;
+        } else {
+            enc.encode(0, BIT_TOT - p1, BIT_TOT);
+            self.p1 -= self.p1 >> BIT_RATE;
+        }
+        // Keep both outcomes codable.
+        self.p1 = self.p1.clamp(1, BIT_TOT - 1);
+    }
+
+    /// Decode one bit and adapt.
+    pub fn decode(&mut self, dec: &mut Decoder) -> bool {
+        let p1 = self.p1;
+        let target = dec.decode_freq(BIT_TOT);
+        let bit = target >= BIT_TOT - p1;
+        if bit {
+            dec.consume(BIT_TOT - p1, p1);
+            self.p1 += (BIT_TOT - self.p1) >> BIT_RATE;
+        } else {
+            dec.consume(0, BIT_TOT - p1);
+            self.p1 -= self.p1 >> BIT_RATE;
+        }
+        self.p1 = self.p1.clamp(1, BIT_TOT - 1);
+        bit
+    }
+
+    /// Current probability of 1.
+    pub fn p1(&self) -> f64 {
+        self.p1 as f64 / BIT_TOT as f64
+    }
+}
+
+/// Fixed-point cumulative distribution built from an external probability
+/// vector — the bridge from the LSTM softmax to the coder (paper §III: "the
+/// probability will then be used for encoding with an adaptive arithmetic
+/// coder").
+///
+/// The conversion must be performed identically by encoder and decoder, so
+/// it is a pure function of the f32 probabilities: scale to `2^14`, floor,
+/// clamp to ≥ 1, then distribute the leftover mass deterministically over
+/// symbols in descending-remainder order with index tiebreak.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Cdf {
+    /// cums[s] = cumulative frequency below symbol s; cums[alphabet] = total.
+    cums: Vec<u32>,
+}
+
+/// Total frequency used by [`Cdf`] (14-bit keeps headroom under MAX_TOTAL).
+pub const CDF_TOTAL: u32 = 1 << 14;
+
+impl Cdf {
+    /// Build from a probability vector (need not be normalized; negatives
+    /// and NaNs are treated as zero).
+    pub fn from_probs(probs: &[f32]) -> Self {
+        let a = probs.len();
+        assert!(a >= 1 && (a as u32) < CDF_TOTAL / 2);
+        // Sanitize and normalize in f64 for determinism across platforms
+        // (IEEE-754 ops are exactly specified; no FMA/reassociation here).
+        let clean: Vec<f64> =
+            probs.iter().map(|&p| if p.is_finite() && p > 0.0 { p as f64 } else { 0.0 }).collect();
+        let sum: f64 = clean.iter().sum();
+        let budget = CDF_TOTAL - a as u32; // reserve 1 per symbol
+        let mut freqs = vec![1u32; a];
+        if sum > 0.0 {
+            let mut rema: Vec<(u64, usize)> = Vec::with_capacity(a);
+            let mut assigned: u32 = 0;
+            for (i, &p) in clean.iter().enumerate() {
+                let exact = p / sum * budget as f64;
+                let fl = exact.floor();
+                freqs[i] += fl as u32;
+                assigned += fl as u32;
+                // Remainder scaled to integers for a deterministic sort.
+                rema.push((((exact - fl) * (1u64 << 32) as f64) as u64, i));
+            }
+            let mut leftover = budget - assigned;
+            // Largest remainder first; ties broken by lower index.
+            rema.sort_by(|x, y| y.0.cmp(&x.0).then(x.1.cmp(&y.1)));
+            let mut k = 0;
+            while leftover > 0 {
+                freqs[rema[k % a].1] += 1;
+                leftover -= 1;
+                k += 1;
+            }
+        } else {
+            // Uniform fallback (e.g. all-zero prob vector).
+            let each = budget / a as u32;
+            let mut extra = budget % a as u32;
+            for f in &mut freqs {
+                *f += each + if extra > 0 { extra -= 1; 1 } else { 0 };
+            }
+        }
+        let mut cums = vec![0u32; a + 1];
+        for i in 0..a {
+            cums[i + 1] = cums[i] + freqs[i];
+        }
+        debug_assert_eq!(cums[a], CDF_TOTAL);
+        Self { cums }
+    }
+
+    /// Uniform distribution over `alphabet` symbols.
+    pub fn uniform(alphabet: usize) -> Self {
+        Self::from_probs(&vec![1.0; alphabet])
+    }
+
+    /// Alphabet size.
+    pub fn alphabet(&self) -> usize {
+        self.cums.len() - 1
+    }
+
+    /// Encode `sym` under this distribution.
+    #[inline]
+    pub fn encode(&self, enc: &mut Encoder, sym: u16) {
+        let s = sym as usize;
+        enc.encode(self.cums[s], self.cums[s + 1] - self.cums[s], CDF_TOTAL);
+    }
+
+    /// Decode a symbol under this distribution.
+    #[inline]
+    pub fn decode(&self, dec: &mut Decoder) -> u16 {
+        let target = dec.decode_freq(CDF_TOTAL);
+        let sym = (self.cums.partition_point(|&c| c <= target) - 1) as u16;
+        let s = sym as usize;
+        dec.consume(self.cums[s], self.cums[s + 1] - self.cums[s]);
+        sym
+    }
+
+    /// Ideal code length of `sym` in bits under this CDF.
+    pub fn bits_for(&self, sym: u16) -> f64 {
+        let s = sym as usize;
+        let f = (self.cums[s + 1] - self.cums[s]) as f64;
+        -(f / CDF_TOTAL as f64).log2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::stats::entropy_bits;
+
+    #[test]
+    fn adaptive_roundtrip() {
+        forall("adaptive model roundtrip", 30, |g| {
+            let alphabet = g.usize_range(1, 40);
+            let n = g.size(2000);
+            let symbols = g.symbols(n, alphabet as u16);
+            let mut enc_model = AdaptiveModel::new(alphabet);
+            let mut enc = Encoder::new();
+            for &s in &symbols {
+                enc_model.encode(&mut enc, s);
+            }
+            let buf = enc.finish();
+            let mut dec_model = AdaptiveModel::new(alphabet);
+            let mut dec = Decoder::new(&buf).unwrap();
+            for &s in &symbols {
+                assert_eq!(dec_model.decode(&mut dec), s);
+            }
+        });
+    }
+
+    #[test]
+    fn adaptive_learns_skew() {
+        // A 90%-zeros stream must code near its entropy once adapted.
+        let mut g = crate::util::rng::Pcg64::seed(7);
+        let symbols: Vec<u16> =
+            (0..30_000).map(|_| if g.f64() < 0.9 { 0 } else { 1 + g.below(15) as u16 }).collect();
+        let mut model = AdaptiveModel::new(16);
+        let mut enc = Encoder::new();
+        for &s in &symbols {
+            model.encode(&mut enc, s);
+        }
+        let bits = enc.finish().len() as f64 * 8.0 / symbols.len() as f64;
+        let h = entropy_bits(&symbols, 16);
+        assert!(bits < h * 1.10 + 0.05, "bits {bits:.4} vs entropy {h:.4}");
+    }
+
+    #[test]
+    fn adaptive_halving_keeps_coding() {
+        // Long single-symbol stream forces many halvings.
+        let mut model = AdaptiveModel::new(4);
+        let mut enc = Encoder::new();
+        for _ in 0..200_000 {
+            model.encode(&mut enc, 2);
+        }
+        let buf = enc.finish();
+        // Should compress to a tiny fraction.
+        assert!(buf.len() < 2000, "len={}", buf.len());
+        let mut dmodel = AdaptiveModel::new(4);
+        let mut dec = Decoder::new(&buf).unwrap();
+        for _ in 0..200_000 {
+            assert_eq!(dmodel.decode(&mut dec), 2);
+        }
+    }
+
+    #[test]
+    fn bit_model_roundtrip() {
+        forall("bit model roundtrip", 30, |g| {
+            let n = g.size(4000);
+            let p = g.rng().f64();
+            let bits: Vec<bool> = (0..n).map(|_| g.bool(p)).collect();
+            let mut m = BitModel::new();
+            let mut enc = Encoder::new();
+            for &b in &bits {
+                m.encode(&mut enc, b);
+            }
+            let buf = enc.finish();
+            let mut m2 = BitModel::new();
+            let mut dec = Decoder::new(&buf).unwrap();
+            for &b in &bits {
+                assert_eq!(m2.decode(&mut dec), b);
+            }
+        });
+    }
+
+    #[test]
+    fn bit_model_adapts() {
+        let mut m = BitModel::new();
+        let mut enc = Encoder::new();
+        for _ in 0..10_000 {
+            m.encode(&mut enc, false);
+        }
+        assert!(m.p1() < 0.01);
+        // 10k near-certain bits should cost well under 100 bytes.
+        assert!(enc.finish().len() < 100);
+    }
+
+    #[test]
+    fn cdf_total_exact_and_nonzero() {
+        forall("cdf construction", 50, |g| {
+            let a = g.usize_range(2, 256);
+            let probs: Vec<f32> = (0..a).map(|_| g.f32_range(0.0, 1.0)).collect();
+            let cdf = Cdf::from_probs(&probs);
+            assert_eq!(cdf.alphabet(), a);
+            for s in 0..a {
+                assert!(cdf.cums[s + 1] > cdf.cums[s], "zero freq at {s}");
+            }
+            assert_eq!(cdf.cums[a], CDF_TOTAL);
+        });
+    }
+
+    #[test]
+    fn cdf_handles_degenerate_inputs() {
+        for probs in [
+            vec![0.0f32; 8],
+            vec![f32::NAN; 8],
+            vec![-1.0f32; 8],
+            vec![1.0, 0.0, 0.0, 0.0],
+            vec![f32::INFINITY, 1.0, 1.0],
+        ] {
+            let cdf = Cdf::from_probs(&probs);
+            assert_eq!(*cdf.cums.last().unwrap(), CDF_TOTAL);
+            for s in 0..probs.len() {
+                assert!(cdf.cums[s + 1] > cdf.cums[s]);
+            }
+        }
+    }
+
+    #[test]
+    fn cdf_roundtrip_with_changing_distributions() {
+        forall("cdf roundtrip", 25, |g| {
+            let a = g.usize_range(2, 32);
+            let n = g.size(800);
+            // Fresh pseudo-LSTM distribution per symbol, as in the codec.
+            let seqs: Vec<(Vec<f32>, u16)> = (0..n)
+                .map(|_| {
+                    let probs: Vec<f32> = (0..a).map(|_| g.f32_range(0.0, 1.0)).collect();
+                    let weights: Vec<f64> = probs.iter().map(|&p| p as f64 + 1e-6).collect();
+                    let sym = g.rng().weighted(&weights) as u16;
+                    (probs, sym)
+                })
+                .collect();
+            let mut enc = Encoder::new();
+            for (probs, sym) in &seqs {
+                Cdf::from_probs(probs).encode(&mut enc, *sym);
+            }
+            let buf = enc.finish();
+            let mut dec = Decoder::new(&buf).unwrap();
+            for (probs, sym) in &seqs {
+                assert_eq!(Cdf::from_probs(probs).decode(&mut dec), *sym);
+            }
+        });
+    }
+
+    #[test]
+    fn cdf_concentrated_is_cheap() {
+        let mut probs = vec![1e-6f32; 16];
+        probs[5] = 1.0;
+        let cdf = Cdf::from_probs(&probs);
+        assert!(cdf.bits_for(5) < 0.02);
+        assert!(cdf.bits_for(0) > 9.0);
+    }
+
+    #[test]
+    fn uniform_cdf_bits() {
+        let cdf = Cdf::uniform(16);
+        for s in 0..16 {
+            assert!((cdf.bits_for(s) - 4.0).abs() < 0.01);
+        }
+    }
+}

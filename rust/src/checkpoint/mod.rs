@@ -1,0 +1,246 @@
+//! Checkpoint data model and on-disk store.
+//!
+//! A checkpoint `P_t = {W_t, O_t}` (paper Eq. 1) bundles the model weights
+//! with the Adam optimizer moments. Naming note: the paper calls the
+//! *second-order* moment `m_t` (Eq. 4) and the *first-order* moment `v_t`
+//! (Eq. 5) — the reverse of the usual Adam notation. We use the standard
+//! Adam names: [`Checkpoint::exp_avg`] is the first moment (paper `v_t`)
+//! and [`Checkpoint::exp_avg_sq`] the second (paper `m_t`).
+//!
+//! [`Store`] is the uncompressed directory store used by the trainer and as
+//! the reference-checkpoint cache of the compression coordinator; the
+//! compressed format lives in [`crate::container`].
+
+mod store;
+
+pub use store::Store;
+
+use crate::tensor::{Tensor, TensorSet};
+use crate::util::rng::Pcg64;
+use crate::{Error, Result};
+use std::io::{Read, Write};
+
+/// One training checkpoint: weights + Adam moments, tagged with the training
+/// step it was captured at.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Checkpoint {
+    /// Training step (paper: iteration index `t`).
+    pub step: u64,
+    /// Model weights `W_t`.
+    pub weights: TensorSet,
+    /// First-order Adam moment (paper `v_t`, Eq. 5).
+    pub exp_avg: TensorSet,
+    /// Second-order Adam moment (paper `m_t`, Eq. 4).
+    pub exp_avg_sq: TensorSet,
+}
+
+const MAGIC: &[u8; 8] = b"CPCKPT01";
+
+impl Checkpoint {
+    /// Total parameter count (weights only).
+    pub fn param_count(&self) -> usize {
+        self.weights.param_count()
+    }
+
+    /// Total raw size in bytes (weights + both moments as f32).
+    pub fn raw_bytes(&self) -> usize {
+        self.weights.raw_bytes() + self.exp_avg.raw_bytes() + self.exp_avg_sq.raw_bytes()
+    }
+
+    /// True when `other` has the same tensor names/shapes in all three sets —
+    /// the precondition for using it as a delta reference.
+    pub fn same_layout(&self, other: &Checkpoint) -> bool {
+        self.weights.same_layout(&other.weights)
+            && self.exp_avg.same_layout(&other.exp_avg)
+            && self.exp_avg_sq.same_layout(&other.exp_avg_sq)
+    }
+
+    /// Serialize to a writer (raw uncompressed format).
+    ///
+    /// Layout: magic, step:u64, then three tensor-set blocks; each block is
+    /// count:u32 followed by entries of (name_len:u16, name, rank:u8,
+    /// dims:u32*, data:f32*), all little-endian.
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        w.write_all(MAGIC)?;
+        w.write_all(&self.step.to_le_bytes())?;
+        for set in [&self.weights, &self.exp_avg, &self.exp_avg_sq] {
+            write_set(w, set)?;
+        }
+        Ok(())
+    }
+
+    /// Deserialize from a reader.
+    pub fn read_from(r: &mut impl Read) -> Result<Self> {
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(Error::format("bad checkpoint magic"));
+        }
+        let step = read_u64(r)?;
+        let weights = read_set(r)?;
+        let exp_avg = read_set(r)?;
+        let exp_avg_sq = read_set(r)?;
+        Ok(Checkpoint { step, weights, exp_avg, exp_avg_sq })
+    }
+
+    /// Serialize to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(self.raw_bytes() + 1024);
+        self.write_to(&mut buf).expect("vec write cannot fail");
+        buf
+    }
+
+    /// Deserialize from bytes.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let mut cur = bytes;
+        Self::read_from(&mut cur)
+    }
+
+    /// A synthetic checkpoint with Adam-like statistics, used by unit tests
+    /// and micro-benchmarks: weights ~ N(0, 0.02), exp_avg ~ N(0, 1e-3),
+    /// exp_avg_sq ~ |N(0, 1e-6)|.
+    pub fn synthetic(step: u64, layers: &[(&str, Vec<usize>)], seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed, step);
+        let mut ck = Checkpoint { step, ..Default::default() };
+        for (name, shape) in layers {
+            let n: usize = shape.iter().product();
+            let w: Vec<f32> = (0..n).map(|_| rng.normal_f32() * 0.02).collect();
+            let m: Vec<f32> = (0..n).map(|_| rng.normal_f32() * 1e-3).collect();
+            let v: Vec<f32> = (0..n).map(|_| (rng.normal_f32() * 1e-6).abs() + 1e-12).collect();
+            ck.weights.insert(*name, Tensor::new(shape.clone(), w).unwrap());
+            ck.exp_avg.insert(*name, Tensor::new(shape.clone(), m).unwrap());
+            ck.exp_avg_sq.insert(*name, Tensor::new(shape.clone(), v).unwrap());
+        }
+        ck
+    }
+}
+
+fn write_set(w: &mut impl Write, set: &TensorSet) -> Result<()> {
+    w.write_all(&(set.len() as u32).to_le_bytes())?;
+    for e in set.iter() {
+        let name = e.name.as_bytes();
+        if name.len() > u16::MAX as usize {
+            return Err(Error::format("tensor name too long"));
+        }
+        w.write_all(&(name.len() as u16).to_le_bytes())?;
+        w.write_all(name)?;
+        let shape = e.tensor.shape();
+        if shape.len() > u8::MAX as usize {
+            return Err(Error::format("tensor rank too large"));
+        }
+        w.write_all(&[shape.len() as u8])?;
+        for &d in shape {
+            w.write_all(&(d as u32).to_le_bytes())?;
+        }
+        // Bulk little-endian f32 write.
+        let data = e.tensor.data();
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for &x in data {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        w.write_all(&bytes)?;
+    }
+    Ok(())
+}
+
+fn read_set(r: &mut impl Read) -> Result<TensorSet> {
+    let count = read_u32(r)? as usize;
+    let mut set = TensorSet::new();
+    for _ in 0..count {
+        let name_len = read_u16(r)? as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let name =
+            String::from_utf8(name).map_err(|_| Error::format("non-utf8 tensor name"))?;
+        let mut rank = [0u8; 1];
+        r.read_exact(&mut rank)?;
+        let mut shape = Vec::with_capacity(rank[0] as usize);
+        for _ in 0..rank[0] {
+            shape.push(read_u32(r)? as usize);
+        }
+        let n: usize = shape.iter().product();
+        let mut bytes = vec![0u8; n * 4];
+        r.read_exact(&mut bytes)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        set.insert(name, Tensor::new(shape, data)?);
+    }
+    Ok(set)
+}
+
+fn read_u16(r: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint::synthetic(
+            7,
+            &[("layer.0.w", vec![8, 16]), ("layer.0.b", vec![16]), ("emb", vec![32, 8])],
+            42,
+        )
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let ck = sample();
+        let bytes = ck.to_bytes();
+        let back = Checkpoint::from_bytes(&bytes).unwrap();
+        assert_eq!(ck, back);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = sample().to_bytes();
+        bytes[0] = b'X';
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let bytes = sample().to_bytes();
+        let cut = &bytes[..bytes.len() / 2];
+        assert!(Checkpoint::from_bytes(cut).is_err());
+    }
+
+    #[test]
+    fn layout_check() {
+        let a = sample();
+        let mut b = sample();
+        assert!(a.same_layout(&b));
+        b.weights.insert("extra", Tensor::zeros(vec![1]));
+        assert!(!a.same_layout(&b));
+    }
+
+    #[test]
+    fn synthetic_is_deterministic() {
+        let a = Checkpoint::synthetic(3, &[("w", vec![4, 4])], 1);
+        let b = Checkpoint::synthetic(3, &[("w", vec![4, 4])], 1);
+        assert_eq!(a, b);
+        let c = Checkpoint::synthetic(4, &[("w", vec![4, 4])], 1);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn raw_bytes_counts_all_sets() {
+        let ck = sample();
+        assert_eq!(ck.raw_bytes(), 3 * ck.weights.raw_bytes());
+    }
+}

@@ -1,0 +1,153 @@
+//! Directory-backed checkpoint store.
+//!
+//! Layout: `<root>/ckpt_<step>.bin` (raw format from the parent module).
+//! The trainer writes here; the compression coordinator reads references
+//! from here. Writes are atomic (temp file + rename) so a crashed run never
+//! leaves a torn checkpoint behind.
+
+use super::Checkpoint;
+use crate::{Error, Result};
+use std::fs;
+use std::io::{BufReader, BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+/// A directory of raw checkpoints addressed by training step.
+#[derive(Clone, Debug)]
+pub struct Store {
+    root: PathBuf,
+}
+
+impl Store {
+    /// Open (creating if needed) a store rooted at `root`.
+    pub fn open(root: impl AsRef<Path>) -> Result<Self> {
+        fs::create_dir_all(root.as_ref())?;
+        Ok(Self { root: root.as_ref().to_path_buf() })
+    }
+
+    /// Root directory.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn path_for(&self, step: u64) -> PathBuf {
+        self.root.join(format!("ckpt_{step:010}.bin"))
+    }
+
+    /// Atomically persist a checkpoint.
+    pub fn save(&self, ck: &Checkpoint) -> Result<PathBuf> {
+        let final_path = self.path_for(ck.step);
+        let tmp = self.root.join(format!(".tmp_ckpt_{}", ck.step));
+        {
+            let mut w = BufWriter::new(fs::File::create(&tmp)?);
+            ck.write_to(&mut w)?;
+            w.flush()?;
+        }
+        fs::rename(&tmp, &final_path)?;
+        Ok(final_path)
+    }
+
+    /// Load the checkpoint saved at `step`.
+    pub fn load(&self, step: u64) -> Result<Checkpoint> {
+        let path = self.path_for(step);
+        let file = fs::File::open(&path).map_err(|e| {
+            Error::format(format!("no checkpoint for step {step} at {path:?}: {e}"))
+        })?;
+        let ck = Checkpoint::read_from(&mut BufReader::new(file))?;
+        if ck.step != step {
+            return Err(Error::format(format!(
+                "checkpoint file for step {step} contains step {}",
+                ck.step
+            )));
+        }
+        Ok(ck)
+    }
+
+    /// Steps present in the store, ascending.
+    pub fn steps(&self) -> Result<Vec<u64>> {
+        let mut steps = Vec::new();
+        for entry in fs::read_dir(&self.root)? {
+            let name = entry?.file_name();
+            let name = name.to_string_lossy();
+            if let Some(rest) = name.strip_prefix("ckpt_").and_then(|s| s.strip_suffix(".bin")) {
+                if let Ok(step) = rest.parse::<u64>() {
+                    steps.push(step);
+                }
+            }
+        }
+        steps.sort_unstable();
+        Ok(steps)
+    }
+
+    /// The most recent step, if any.
+    pub fn latest(&self) -> Result<Option<u64>> {
+        Ok(self.steps()?.into_iter().next_back())
+    }
+
+    /// Remove the checkpoint at `step` (used by retention policies: once a
+    /// compressed container is verified, the raw file can be dropped).
+    pub fn remove(&self, step: u64) -> Result<()> {
+        fs::remove_file(self.path_for(step))?;
+        Ok(())
+    }
+
+    /// Size in bytes of the stored file for `step`.
+    pub fn file_size(&self, step: u64) -> Result<u64> {
+        Ok(fs::metadata(self.path_for(step))?.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("cpcm_store_test_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = tmpdir("rt");
+        let store = Store::open(&dir).unwrap();
+        let ck = Checkpoint::synthetic(1000, &[("w", vec![16, 16])], 5);
+        store.save(&ck).unwrap();
+        let back = store.load(1000).unwrap();
+        assert_eq!(ck, back);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn steps_sorted_latest() {
+        let dir = tmpdir("steps");
+        let store = Store::open(&dir).unwrap();
+        for step in [3000u64, 1000, 2000] {
+            store.save(&Checkpoint::synthetic(step, &[("w", vec![4])], 1)).unwrap();
+        }
+        assert_eq!(store.steps().unwrap(), vec![1000, 2000, 3000]);
+        assert_eq!(store.latest().unwrap(), Some(3000));
+        store.remove(3000).unwrap();
+        assert_eq!(store.latest().unwrap(), Some(2000));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_step_is_error() {
+        let dir = tmpdir("missing");
+        let store = Store::open(&dir).unwrap();
+        assert!(store.load(777).is_err());
+        assert_eq!(store.latest().unwrap(), None);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn file_size_positive() {
+        let dir = tmpdir("size");
+        let store = Store::open(&dir).unwrap();
+        let ck = Checkpoint::synthetic(1, &[("w", vec![64])], 2);
+        store.save(&ck).unwrap();
+        assert!(store.file_size(1).unwrap() as usize >= ck.raw_bytes());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

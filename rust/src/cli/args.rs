@@ -1,0 +1,106 @@
+//! Tiny flag parser (`clap` is unavailable offline).
+//!
+//! Grammar: `--key value` pairs and bare `--flag` booleans. A `--key`
+//! followed by another `--...` token or end-of-input is treated as a
+//! boolean flag.
+
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed flags.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse a flag list.
+    pub fn parse(argv: &[String]) -> Result<Self> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            let Some(key) = tok.strip_prefix("--") else {
+                return Err(Error::config(format!("unexpected positional argument '{tok}'")));
+            };
+            if key.is_empty() {
+                return Err(Error::config("bare '--' not allowed"));
+            }
+            // Support --key=value too.
+            if let Some((k, v)) = key.split_once('=') {
+                out.values.insert(k.to_string(), v.to_string());
+                i += 1;
+                continue;
+            }
+            match argv.get(i + 1) {
+                Some(next) if !next.starts_with("--") => {
+                    out.values.insert(key.to_string(), next.clone());
+                    i += 2;
+                }
+                _ => {
+                    out.flags.push(key.to_string());
+                    i += 1;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Value of `--key value`.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    /// Required value.
+    pub fn req(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| Error::config(format!("missing required flag --{key}")))
+    }
+
+    /// True if the bare flag `--key` was given.
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn pairs_flags_and_equals() {
+        let a = Args::parse(&v(&[
+            "--steps", "100", "--verify", "--mode=lstm", "--out", "runs/x",
+        ]))
+        .unwrap();
+        assert_eq!(a.get("steps"), Some("100"));
+        assert_eq!(a.get("mode"), Some("lstm"));
+        assert_eq!(a.get("out"), Some("runs/x"));
+        assert!(a.flag("verify"));
+        assert!(!a.flag("steps"));
+        assert!(a.req("nope").is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(&v(&["--compress"])).unwrap();
+        assert!(a.flag("compress"));
+    }
+
+    #[test]
+    fn negative_number_values() {
+        // A value starting with '-' but not '--' is accepted.
+        let a = Args::parse(&v(&["--offset", "-5"])).unwrap();
+        assert_eq!(a.get("offset"), Some("-5"));
+    }
+
+    #[test]
+    fn positional_rejected() {
+        assert!(Args::parse(&v(&["stray"])).is_err());
+        assert!(Args::parse(&v(&["--"])).is_err());
+    }
+}

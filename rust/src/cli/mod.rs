@@ -1,0 +1,368 @@
+//! Command-line interface (the launcher).
+//!
+//! ```text
+//! cpcm train      --workload lm_tiny --steps 300 --ckpt-every 50 \
+//!                 --out runs/demo [--compress] [--mode lstm] [--backend native]
+//! cpcm compress   --ckpts runs/demo/raw --out runs/demo/cpcm [--mode ...]
+//! cpcm decompress --cpcm runs/demo/cpcm --step 100 --out ck.bin [--backend ...]
+//! cpcm verify     --ckpts runs/demo/raw --cpcm runs/demo/cpcm
+//! cpcm info       --file runs/demo/cpcm/ckpt_0000000100.cpcm
+//! cpcm config     --write cpcm.json          # dump the default config
+//! ```
+//!
+//! Flags mirror [`crate::config::ExperimentConfig`]; `--config file.json`
+//! loads a base config that individual flags then override.
+
+mod args;
+
+use crate::checkpoint::Store;
+use crate::codec::ContextMode;
+use crate::config::{BackendKind, ExperimentConfig};
+use crate::container::Container;
+use crate::coordinator::{decode_chain, Coordinator, CoordinatorConfig};
+use crate::lstm::Backend;
+use crate::runtime::RuntimeHandle;
+use crate::trainer::Trainer;
+use crate::{Error, Result};
+use args::Args;
+use std::path::PathBuf;
+
+/// Entry point used by `main.rs`.
+pub fn run(argv: Vec<String>) -> Result<()> {
+    let Some((cmd, rest)) = argv.split_first() else {
+        print_usage();
+        return Ok(());
+    };
+    let args = Args::parse(rest)?;
+    match cmd.as_str() {
+        "train" => cmd_train(args),
+        "compress" => cmd_compress(args),
+        "decompress" => cmd_decompress(args),
+        "verify" => cmd_verify(args),
+        "info" => cmd_info(args),
+        "config" => cmd_config(args),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => Err(Error::config(format!("unknown command '{other}' (try `cpcm help`)"))),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "cpcm — prediction/context-modeling checkpoint compression\n\
+         commands: train, compress, decompress, verify, info, config, help\n\
+         run `cpcm <cmd> --help`-style flags are listed in the module docs"
+    );
+}
+
+/// Build an ExperimentConfig from `--config` + flag overrides.
+fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::load(path)?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(v) = args.get("workload") {
+        cfg.workload = v.to_string();
+    }
+    if let Some(v) = args.get("steps") {
+        cfg.steps = parse_num(v, "steps")?;
+    }
+    if let Some(v) = args.get("ckpt-every") {
+        cfg.ckpt_every = parse_num(v, "ckpt-every")?;
+    }
+    if let Some(v) = args.get("step-size") {
+        cfg.step_size = parse_num(v, "step-size")?;
+    }
+    if let Some(v) = args.get("keyframe-every") {
+        cfg.keyframe_every = parse_num(v, "keyframe-every")?;
+    }
+    if let Some(v) = args.get("seed") {
+        cfg.seed = parse_num(v, "seed")?;
+    }
+    if let Some(v) = args.get("artifacts") {
+        cfg.artifacts_dir = v.to_string();
+    }
+    if let Some(v) = args.get("out") {
+        cfg.out_dir = v.to_string();
+    }
+    if let Some(v) = args.get("backend") {
+        cfg.backend = BackendKind::parse(v)?;
+    }
+    if args.flag("verify") {
+        cfg.verify = true;
+    }
+    if let Some(v) = args.get("mode") {
+        cfg.codec.mode = match v {
+            "lstm" => ContextMode::Lstm,
+            "zero-context" | "zero_context" => ContextMode::ZeroContext,
+            "mixed" => ContextMode::Mixed,
+            "order0" => ContextMode::Order0,
+            other => return Err(Error::config(format!("unknown mode '{other}'"))),
+        };
+    }
+    if let Some(v) = args.get("bits") {
+        cfg.codec.bits = parse_num::<u64>(v, "bits")? as u8;
+    }
+    if let Some(v) = args.get("window") {
+        cfg.codec.window = parse_num::<u64>(v, "window")? as usize;
+    }
+    if let Some(v) = args.get("hidden") {
+        cfg.codec.hidden = parse_num::<u64>(v, "hidden")? as usize;
+        cfg.codec.embed = cfg.codec.hidden;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn make_backend(kind: BackendKind, artifacts: &str) -> Result<Backend> {
+    Ok(match kind {
+        BackendKind::Native => Backend::Native,
+        BackendKind::Pjrt => Backend::Pjrt(RuntimeHandle::spawn(artifacts)?),
+    })
+}
+
+/// `cpcm train` — run the workload, optionally compressing checkpoints
+/// through the coordinator as they are produced.
+fn cmd_train(args: Args) -> Result<()> {
+    let cfg = experiment_config(&args)?;
+    let compress = args.flag("compress");
+    let out = PathBuf::from(&cfg.out_dir);
+    let raw_store = Store::open(out.join("raw"))?;
+
+    let mut trainer = Trainer::new(&cfg.artifacts_dir, &cfg.workload, cfg.seed)?;
+    println!(
+        "training {} ({} params) for {} steps, checkpoint every {}",
+        cfg.workload,
+        trainer.param_count(),
+        cfg.steps,
+        cfg.ckpt_every
+    );
+
+    let coordinator = if compress {
+        let mut ccfg = CoordinatorConfig::new(
+            cfg.codec.clone(),
+            make_backend(cfg.backend, &cfg.artifacts_dir)?,
+            out.join("cpcm"),
+        );
+        ccfg.step_size = cfg.step_size;
+        ccfg.keyframe_every = cfg.keyframe_every;
+        ccfg.verify = cfg.verify;
+        Some(Coordinator::start(ccfg)?)
+    } else {
+        None
+    };
+
+    let mut loss_log = String::from("step,loss\n");
+    let ckpt_every = cfg.ckpt_every;
+    let total = cfg.steps;
+    let mut last_loss = f32::NAN;
+    for _ in 0..total {
+        let loss = trainer.step_once()?;
+        last_loss = loss;
+        let step = trainer.step();
+        loss_log.push_str(&format!("{step},{loss}\n"));
+        if step % 20 == 0 || step == total {
+            println!("step {step:>6}  loss {loss:.4}");
+        }
+        if step % ckpt_every == 0 {
+            let ck = trainer.checkpoint()?;
+            raw_store.save(&ck)?;
+            if let Some(c) = &coordinator {
+                c.submit(ck)?;
+            }
+        }
+    }
+    std::fs::write(out.join("loss.csv"), loss_log)?;
+    println!("final loss {last_loss:.4}; loss curve → {}", out.join("loss.csv").display());
+
+    if let Some(c) = coordinator {
+        let results = c.finish()?;
+        let mut report = String::from("step,ref_step,raw_bytes,cpcm_bytes,ratio\n");
+        for r in &results {
+            println!(
+                "ckpt {:>8}  ref {:>8}  {:>10} B  ratio {:>7.2}  ({:.2}s)",
+                r.step,
+                r.ref_step.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
+                r.bytes,
+                r.stats.ratio(),
+                r.stats.encode_seconds,
+            );
+            report.push_str(&format!(
+                "{},{},{},{},{}\n",
+                r.step,
+                r.ref_step.map(|s| s.to_string()).unwrap_or_default(),
+                r.stats.raw_bytes,
+                r.bytes,
+                r.stats.ratio()
+            ));
+        }
+        std::fs::write(out.join("compression.csv"), report)?;
+    }
+    // Run provenance.
+    std::fs::write(out.join("config.json"), cfg.to_json().to_string_pretty())?;
+    Ok(())
+}
+
+/// `cpcm compress` — compress an existing raw checkpoint directory.
+fn cmd_compress(args: Args) -> Result<()> {
+    let cfg = experiment_config(&args)?;
+    let ckpts = args.req("ckpts")?;
+    let out = args.get("out").unwrap_or("cpcm_out");
+    let store = Store::open(ckpts)?;
+    let steps = store.steps()?;
+    if steps.is_empty() {
+        return Err(Error::config(format!("no checkpoints in {ckpts}")));
+    }
+    let mut ccfg = CoordinatorConfig::new(
+        cfg.codec.clone(),
+        make_backend(cfg.backend, &cfg.artifacts_dir)?,
+        out,
+    );
+    ccfg.step_size = cfg.step_size;
+    ccfg.keyframe_every = cfg.keyframe_every;
+    ccfg.verify = cfg.verify;
+    let coord = Coordinator::start(ccfg)?;
+    for step in &steps {
+        coord.submit(store.load(*step)?)?;
+    }
+    let results = coord.finish()?;
+    let mut total_raw = 0usize;
+    let mut total_out = 0usize;
+    for r in &results {
+        total_raw += r.stats.raw_bytes;
+        total_out += r.bytes;
+        println!("ckpt {:>8}  {:>10} B  ratio {:>7.2}", r.step, r.bytes, r.stats.ratio());
+    }
+    println!(
+        "total: {} checkpoints, {:.1} MB → {:.2} MB, overall ratio {:.2}",
+        results.len(),
+        total_raw as f64 / 1e6,
+        total_out as f64 / 1e6,
+        total_raw as f64 / total_out as f64
+    );
+    Ok(())
+}
+
+/// `cpcm decompress` — decode the chain up to `--step` and write the raw
+/// checkpoint file.
+fn cmd_decompress(args: Args) -> Result<()> {
+    let cpcm = args.req("cpcm")?;
+    let step: u64 = parse_num(args.req("step")?, "step")?;
+    let out = args.req("out")?;
+    let backend_kind = BackendKind::parse(args.get("backend").unwrap_or("native"))?;
+    let artifacts = args.get("artifacts").unwrap_or("artifacts");
+    let backend = make_backend(backend_kind, artifacts)?;
+    let chain = decode_chain(std::path::Path::new(cpcm), &backend, Some(step))?;
+    let ck = chain
+        .into_iter()
+        .find(|c| c.step == step)
+        .ok_or_else(|| Error::config(format!("step {step} not found in {cpcm}")))?;
+    std::fs::write(out, ck.to_bytes())?;
+    println!("wrote step {step} ({} params) to {out}", ck.param_count());
+    Ok(())
+}
+
+/// `cpcm verify` — decode every container and compare against the raw
+/// store within quantization tolerance; also re-checks CRCs.
+fn cmd_verify(args: Args) -> Result<()> {
+    let ckpts = args.req("ckpts")?;
+    let cpcm = args.req("cpcm")?;
+    let backend_kind = BackendKind::parse(args.get("backend").unwrap_or("native"))?;
+    let artifacts = args.get("artifacts").unwrap_or("artifacts");
+    let backend = make_backend(backend_kind, artifacts)?;
+    let store = Store::open(ckpts)?;
+    let decoded = decode_chain(std::path::Path::new(cpcm), &backend, None)?;
+    let mut worst: f64 = 0.0;
+    for ck in &decoded {
+        let raw = store.load(ck.step)?;
+        if !raw.same_layout(ck) {
+            return Err(Error::codec(format!("layout mismatch at step {}", ck.step)));
+        }
+        let mut max_err: f64 = 0.0;
+        for (a, b) in ck.weights.iter().zip(raw.weights.iter()) {
+            for (&x, &y) in a.tensor.data().iter().zip(b.tensor.data()) {
+                max_err = max_err.max((x as f64 - y as f64).abs());
+            }
+        }
+        worst = worst.max(max_err);
+        println!("step {:>8}: max |w_dec − w_raw| = {max_err:.3e}", ck.step);
+    }
+    println!("verified {} checkpoints; worst weight error {worst:.3e}", decoded.len());
+    Ok(())
+}
+
+/// `cpcm info` — pretty-print a container header.
+fn cmd_info(args: Args) -> Result<()> {
+    let file = args.req("file")?;
+    let bytes = std::fs::read(file)?;
+    let container = Container::from_bytes(&bytes)?;
+    println!("{}", container.header.to_string_pretty());
+    println!("blobs: {}", container.blobs.len());
+    println!("total size: {} bytes", bytes.len());
+    Ok(())
+}
+
+/// `cpcm config` — write the default experiment config as JSON.
+fn cmd_config(args: Args) -> Result<()> {
+    let cfg = ExperimentConfig::default();
+    let text = cfg.to_json().to_string_pretty();
+    match args.get("write") {
+        Some(path) => {
+            std::fs::write(path, &text)?;
+            println!("wrote {path}");
+        }
+        None => print!("{text}"),
+    }
+    Ok(())
+}
+
+fn parse_num<T: std::str::FromStr>(s: &str, what: &str) -> Result<T> {
+    s.parse().map_err(|_| Error::config(format!("invalid --{what}: '{s}'")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(vec!["frobnicate".into()]).is_err());
+    }
+
+    #[test]
+    fn help_and_empty_ok() {
+        assert!(run(vec![]).is_ok());
+        assert!(run(vec!["help".into()]).is_ok());
+    }
+
+    #[test]
+    fn experiment_config_overrides() {
+        let args = Args::parse(&[
+            "--workload".into(),
+            "vit_tiny".into(),
+            "--steps".into(),
+            "10".into(),
+            "--mode".into(),
+            "order0".into(),
+            "--bits".into(),
+            "2".into(),
+            "--verify".into(),
+        ])
+        .unwrap();
+        let cfg = experiment_config(&args).unwrap();
+        assert_eq!(cfg.workload, "vit_tiny");
+        assert_eq!(cfg.steps, 10);
+        assert_eq!(cfg.codec.mode, ContextMode::Order0);
+        assert_eq!(cfg.codec.bits, 2);
+        assert!(cfg.verify);
+    }
+
+    #[test]
+    fn bad_flag_values_error() {
+        let args =
+            Args::parse(&["--steps".into(), "abc".into()]).unwrap();
+        assert!(experiment_config(&args).is_err());
+    }
+}

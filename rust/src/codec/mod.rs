@@ -1,0 +1,888 @@
+//! Full checkpoint encode/decode pipeline (paper §III).
+//!
+//! Encode of checkpoint `P_t` against reference `P_{t−s}`:
+//!
+//! 1. [`crate::delta`] — `ΔW = W_t − W_{t−s}`; moments pass through (Eq. 3);
+//! 2. [`crate::prune`] — ExCP masks (Eq. 4–5), pruned values → exact 0;
+//! 3. [`crate::quant`] — per-tensor k-means to `2^n − 1` centers + zero
+//!    symbol (second moment optionally in log-domain);
+//! 4. entropy coding per parameter set (ΔW, first moment, second moment):
+//!    - `Lstm` mode (the paper's contribution): symbols are coded under the
+//!      LSTM model fed the 3×3 context from the *reference checkpoint's
+//!      symbol map* ([`crate::context`], Fig. 2), model updated per batch;
+//!    - `ZeroContext` mode: same machinery, all-zero contexts (the paper's
+//!      third curve in Fig. 3);
+//!    - `Order0` mode: plain adaptive arithmetic coding, no model.
+//!
+//! Decode mirrors the stages in reverse. The decoder needs (a) the
+//! container, (b) the reconstructed reference checkpoint, (c) the
+//! reference's *symbol maps* ([`SymbolMaps`], carried along the chain by
+//! the caller — typically [`crate::coordinator`]). The encoder returns the
+//! reconstructed checkpoint it knows the decoder will produce, so chains
+//! use reconstructed references on both sides and stay bit-identical.
+
+mod stream;
+
+pub use stream::{StreamCoder, StreamDecoder};
+
+use crate::checkpoint::Checkpoint;
+use crate::container::{centers_from_bytes, centers_to_bytes, Container};
+use crate::context::ContextExtractor;
+use crate::delta;
+use crate::lstm::{Backend, LstmCfg};
+use crate::prune::{self, PruneConfig};
+use crate::quant::{self, QuantConfig, Quantized};
+use crate::tensor::{Tensor, TensorSet};
+use crate::util::json::Json;
+use crate::{ac, Error, Result};
+
+/// Entropy-coding mode for the quantized symbols.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ContextMode {
+    /// LSTM with reference-checkpoint context (the proposed method).
+    Lstm,
+    /// LSTM with all-zero context (paper's context-free setup).
+    ZeroContext,
+    /// Bayesian mixture of the context LSTM and an adaptive order-0
+    /// expert (extension; never much worse than plain adaptive AC).
+    Mixed,
+    /// Order-0 adaptive arithmetic coding (no model).
+    Order0,
+}
+
+impl ContextMode {
+    fn as_str(&self) -> &'static str {
+        match self {
+            ContextMode::Lstm => "lstm",
+            ContextMode::ZeroContext => "zero_context",
+            ContextMode::Mixed => "mixed",
+            ContextMode::Order0 => "order0",
+        }
+    }
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "lstm" => Ok(ContextMode::Lstm),
+            "zero_context" => Ok(ContextMode::ZeroContext),
+            "mixed" => Ok(ContextMode::Mixed),
+            "order0" => Ok(ContextMode::Order0),
+            other => Err(Error::format(format!("unknown context mode '{other}'"))),
+        }
+    }
+}
+
+/// Codec configuration (written into every container header).
+#[derive(Clone, Debug)]
+pub struct CodecConfig {
+    pub mode: ContextMode,
+    /// Quantization bits for all three sets (alphabet = 2^bits).
+    pub bits: u8,
+    /// Context window side (odd); seq = window².
+    pub window: usize,
+    pub prune: PruneConfig,
+    /// LSTM backbone dims (alphabet/seq are derived from bits/window).
+    pub hidden: usize,
+    pub embed: usize,
+    pub layers: usize,
+    pub batch: usize,
+    /// Model-init seed.
+    pub seed: u64,
+    /// Online-adaptation learning rate (native backend honors this; the
+    /// AOT PJRT programs bake in the paper's 1e-3).
+    pub lr: f32,
+    /// Reference-warmup passes (extension over the paper, see module
+    /// docs): before coding a delta frame, train the LSTM for this many
+    /// passes on the *reference* checkpoint's own (context, symbol) pairs.
+    /// The decoder holds the same reference, so both sides warm up
+    /// identically and the pass costs zero bits. This largely removes the
+    /// cold-start transient that dominates small streams. 0 = paper-exact.
+    pub warmup_passes: usize,
+    /// Warmup position stride: train on every `stride`-th reference
+    /// position (1 = all). Larger strides cut warmup cost proportionally
+    /// at a small ratio cost — see the ablations bench.
+    pub warmup_stride: usize,
+    /// Quantize the (strictly positive) second moment in log-domain.
+    pub log_moment2: bool,
+    /// k-means fitting controls.
+    pub quant_iters: usize,
+    pub quant_sample_cap: usize,
+}
+
+impl Default for CodecConfig {
+    fn default() -> Self {
+        Self {
+            mode: ContextMode::Lstm,
+            bits: 4,
+            window: 3,
+            prune: PruneConfig::default(),
+            hidden: 64,
+            embed: 64,
+            layers: 2,
+            batch: 256,
+            seed: 0,
+            lr: 1e-3,
+            warmup_passes: 1,
+            warmup_stride: 4,
+            log_moment2: true,
+            quant_iters: 12,
+            quant_sample_cap: 1 << 16,
+        }
+    }
+}
+
+impl CodecConfig {
+    /// The derived probability-model configuration.
+    pub fn lstm_cfg(&self) -> LstmCfg {
+        LstmCfg {
+            alphabet: 1usize << self.bits,
+            seq: self.window * self.window,
+            embed: self.embed,
+            hidden: self.hidden,
+            layers: self.layers,
+            batch: self.batch,
+            seed: self.seed,
+            lr: self.lr,
+            ..LstmCfg::default()
+        }
+    }
+
+    fn quant_cfg(&self) -> QuantConfig {
+        QuantConfig {
+            bits: self.bits,
+            iters: self.quant_iters,
+            sample_cap: self.quant_sample_cap,
+            seed: 0x5eed,
+        }
+    }
+
+    /// Serialize into a header fragment.
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mode", Json::str(self.mode.as_str())),
+            ("bits", Json::num(self.bits as f64)),
+            ("window", Json::num(self.window as f64)),
+            ("alpha", Json::num(self.prune.alpha)),
+            ("beta", Json::num(self.prune.beta)),
+            ("prune_enabled", Json::Bool(self.prune.enabled)),
+            ("hidden", Json::num(self.hidden as f64)),
+            ("embed", Json::num(self.embed as f64)),
+            ("layers", Json::num(self.layers as f64)),
+            ("batch", Json::num(self.batch as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("lr", Json::num(self.lr as f64)),
+            ("warmup_passes", Json::num(self.warmup_passes as f64)),
+            ("warmup_stride", Json::num(self.warmup_stride as f64)),
+            ("log_moment2", Json::Bool(self.log_moment2)),
+            ("quant_iters", Json::num(self.quant_iters as f64)),
+            ("quant_sample_cap", Json::num(self.quant_sample_cap as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            mode: ContextMode::parse(j.req_str("mode")?)?,
+            bits: j.req_usize("bits")? as u8,
+            window: j.req_usize("window")?,
+            prune: PruneConfig {
+                alpha: j.req_f64("alpha")?,
+                beta: j.req_f64("beta")?,
+                enabled: j.req("prune_enabled")?.as_bool().unwrap_or(true),
+                ..PruneConfig::default()
+            },
+            hidden: j.req_usize("hidden")?,
+            embed: j.req_usize("embed")?,
+            layers: j.req_usize("layers")?,
+            batch: j.req_usize("batch")?,
+            seed: j.req_usize("seed")? as u64,
+            lr: j.req_f64("lr")? as f32,
+            warmup_passes: j.req_usize("warmup_passes")?,
+            warmup_stride: j.req_usize("warmup_stride")?.max(1),
+            log_moment2: j.req("log_moment2")?.as_bool().unwrap_or(true),
+            quant_iters: j.req_usize("quant_iters")?,
+            quant_sample_cap: j.req_usize("quant_sample_cap")?,
+        })
+    }
+}
+
+/// Quantized-symbol maps of one checkpoint's three parameter sets, in
+/// tensor (name-sorted) order — the chain state that provides the next
+/// checkpoint's contexts.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SymbolMaps {
+    /// `sets[0]` = ΔW, `sets[1]` = first moment, `sets[2]` = second moment.
+    pub sets: [Vec<Vec<u16>>; 3],
+}
+
+/// Per-encode statistics (reported by benches and `cpcm info`).
+#[derive(Clone, Debug, Default)]
+pub struct EncodeStats {
+    pub raw_bytes: usize,
+    pub compressed_bytes: usize,
+    pub set_bytes: [usize; 3],
+    pub weight_density: f64,
+    pub momentum_density: f64,
+    /// Mean LSTM adaptation loss per set (0 for Order0).
+    pub set_loss: [f64; 3],
+    pub encode_seconds: f64,
+}
+
+impl EncodeStats {
+    /// Compression ratio (raw f32 bytes / container bytes).
+    pub fn ratio(&self) -> f64 {
+        if self.compressed_bytes == 0 {
+            0.0
+        } else {
+            self.raw_bytes as f64 / self.compressed_bytes as f64
+        }
+    }
+}
+
+/// Output of one encode.
+pub struct EncodeOutput {
+    /// Serialized `.cpcm` container.
+    pub bytes: Vec<u8>,
+    /// The checkpoint the decoder will reconstruct (use as the next
+    /// reference).
+    pub recon: Checkpoint,
+    /// Symbol maps (next checkpoint's context source).
+    pub syms: SymbolMaps,
+    pub stats: EncodeStats,
+}
+
+/// The checkpoint codec.
+pub struct Codec {
+    cfg: CodecConfig,
+    backend: Backend,
+}
+
+/// Per-set encode result (produced on a worker thread).
+struct SetEncoded {
+    quantized: Vec<Quantized>,
+    stream: Vec<u8>,
+    loss: f64,
+    /// Dequantized values per tensor (log-domain already inverted) — the
+    /// decoder-exact reconstruction before the reference is added back.
+    recon_vals: Vec<Vec<f32>>,
+}
+
+impl Codec {
+    /// Build a codec with the given config and probability-model backend.
+    pub fn new(cfg: CodecConfig, backend: Backend) -> Self {
+        Self { cfg, backend }
+    }
+
+    /// Configuration.
+    pub fn cfg(&self) -> &CodecConfig {
+        &self.cfg
+    }
+
+    /// Instantiate the entropy-stage probability model for this config
+    /// (wrapping the LSTM in the order-0 mixture for `Mixed` mode).
+    fn make_model(&self) -> Result<Box<dyn crate::lstm::ProbModel>> {
+        let inner = self.backend.make(&self.cfg.lstm_cfg())?;
+        Ok(match self.cfg.mode {
+            ContextMode::Mixed => Box::new(crate::lstm::mix::MixModel::new(inner)),
+            _ => inner,
+        })
+    }
+
+    /// Compress `current` against `reference` (None ⇒ self-contained intra
+    /// frame). `prev_syms` are the reference's symbol maps, if available.
+    pub fn encode(
+        &self,
+        current: &Checkpoint,
+        reference: Option<&Checkpoint>,
+        prev_syms: Option<&SymbolMaps>,
+    ) -> Result<EncodeOutput> {
+        let t0 = std::time::Instant::now();
+        let cfg = &self.cfg;
+
+        // 1. Delta (Eq. 3/6).
+        let mut residual = match reference {
+            Some(r) => delta::diff(current, r)?,
+            None => delta::intra(current),
+        };
+
+        // 2. ExCP pruning (Eq. 4–5). Intra frames keep all weights
+        //    (alpha = 0): pruning full weights would destroy the model.
+        let prune_cfg = if reference.is_some() {
+            cfg.prune
+        } else {
+            PruneConfig { alpha: 0.0, ..cfg.prune }
+        };
+        let pstats = prune::prune_residual(&mut residual, &current.weights, &prune_cfg);
+
+        // 3+4. Quantize and entropy-code each set.
+        let mut header_tensors = Vec::new();
+        for e in residual.dw.iter() {
+            header_tensors.push(Json::obj(vec![
+                ("name", Json::str(e.name.clone())),
+                (
+                    "shape",
+                    Json::Arr(e.tensor.shape().iter().map(|&d| Json::num(d as f64)).collect()),
+                ),
+            ]));
+        }
+
+        // The three parameter-set streams are fully independent (own model,
+        // own arithmetic stream), so they encode on three worker threads.
+        let sets = [&residual.dw, &residual.exp_avg, &residual.exp_avg_sq];
+        let mut results: Vec<Result<SetEncoded>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = sets
+                .iter()
+                .enumerate()
+                .map(|(k, set)| {
+                    let set: &TensorSet = set;
+                    scope.spawn(move || self.encode_one_set(k, set, prev_syms))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("set worker panicked")).collect()
+        });
+
+        let mut container = Container::new(Json::Null); // header set at the end
+        let mut syms = SymbolMaps::default();
+        let mut set_bytes = [0usize; 3];
+        let mut set_loss = [0.0f64; 3];
+        let mut recon = Checkpoint { step: current.step, ..Default::default() };
+        for (k, result) in results.drain(..).enumerate() {
+            let enc = result?;
+            for q in &enc.quantized {
+                container.push_blob(centers_to_bytes(&q.centers));
+            }
+            set_bytes[k] = enc.stream.len();
+            set_loss[k] = enc.loss;
+            container.push_blob(enc.stream);
+            for (e, vals) in sets[k].iter().zip(enc.recon_vals) {
+                let tensor = Tensor::new(e.tensor.shape().to_vec(), vals)?;
+                match k {
+                    0 => recon.weights.insert(e.name.clone(), tensor),
+                    1 => recon.exp_avg.insert(e.name.clone(), tensor),
+                    _ => recon.exp_avg_sq.insert(e.name.clone(), tensor),
+                }
+            }
+            syms.sets[k] = enc.quantized.into_iter().map(|q| q.symbols).collect();
+        }
+        // Add the reference back onto the weight residuals — the same f32
+        // op sequence the decoder performs, so recon is decode-exact.
+        if let Some(r) = reference {
+            for (d, rt) in recon.weights.iter_mut().zip(r.weights.iter()) {
+                for (x, &rv) in d.tensor.data_mut().iter_mut().zip(rt.tensor.data()) {
+                    *x += rv;
+                }
+            }
+        }
+
+        // Header.
+        let header = Json::obj(vec![
+            ("format", Json::num(1)),
+            ("step", Json::num(current.step as f64)),
+            (
+                "ref_step",
+                match reference {
+                    Some(r) => Json::num(r.step as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("backend", Json::str(self.backend.id())),
+            ("has_prev_syms", Json::Bool(prev_syms.is_some())),
+            ("codec", cfg.to_json()),
+            ("tensors", Json::Arr(header_tensors)),
+            ("raw_bytes", Json::num(current.raw_bytes() as f64)),
+            ("weight_density", Json::num(pstats.weight_density())),
+            ("momentum_density", Json::num(pstats.momentum_density())),
+        ]);
+        container.header = header;
+        let bytes = container.to_bytes();
+
+        let stats = EncodeStats {
+            raw_bytes: current.raw_bytes(),
+            compressed_bytes: bytes.len(),
+            set_bytes,
+            weight_density: pstats.weight_density(),
+            momentum_density: pstats.momentum_density(),
+            set_loss,
+            encode_seconds: t0.elapsed().as_secs_f64(),
+        };
+        Ok(EncodeOutput { bytes, recon, syms, stats })
+    }
+
+    /// Quantize + entropy-code one parameter set (runs on a worker thread).
+    fn encode_one_set(
+        &self,
+        k: usize,
+        set: &TensorSet,
+        prev_syms: Option<&SymbolMaps>,
+    ) -> Result<SetEncoded> {
+        let cfg = &self.cfg;
+        let log_domain = k == 2 && cfg.log_moment2;
+        let mut quantized: Vec<Quantized> = Vec::with_capacity(set.len());
+        let mut recon_vals: Vec<Vec<f32>> = Vec::with_capacity(set.len());
+        for e in set.iter() {
+            let values = maybe_log(e.tensor.data(), log_domain);
+            let q = quant::quantize(&values, &cfg.quant_cfg())?;
+            let mut vals = q.dequantize();
+            if log_domain {
+                for v in vals.iter_mut() {
+                    if *v != 0.0 {
+                        *v = v.exp();
+                    }
+                }
+            }
+            recon_vals.push(vals);
+            quantized.push(q);
+        }
+
+        let (stream, loss) = match cfg.mode {
+            ContextMode::Order0 => {
+                let mut model = ac::AdaptiveModel::new(1 << cfg.bits);
+                let mut enc = ac::Encoder::new();
+                for q in &quantized {
+                    for &s in &q.symbols {
+                        model.encode(&mut enc, s);
+                    }
+                }
+                (enc.finish(), 0.0)
+            }
+            ContextMode::Lstm | ContextMode::ZeroContext | ContextMode::Mixed => {
+                let mut model = self.make_model()?;
+                if matches!(cfg.mode, ContextMode::Lstm | ContextMode::Mixed) {
+                    if let Some(p) = prev_syms {
+                        self.warmup(&mut model, set, &p.sets[k])?;
+                    }
+                }
+                let seq = cfg.window * cfg.window;
+                let mut coder = StreamCoder::new(model);
+                let zero_ctx = vec![0i32; seq];
+                let mut ctx_buf = vec![0i32; seq];
+                for (ti, (e, q)) in set.iter().zip(&quantized).enumerate() {
+                    let (rows, cols) = e.tensor.rows_cols();
+                    let extractor = ContextExtractor::new(rows, cols, cfg.window)?;
+                    let ref_map: Option<&[u16]> = match (cfg.mode, prev_syms) {
+                        (ContextMode::Lstm | ContextMode::Mixed, Some(p)) => {
+                            p.sets[k].get(ti).map(|v| v.as_slice())
+                        }
+                        _ => None,
+                    };
+                    for (idx, &sym) in q.symbols.iter().enumerate() {
+                        match ref_map {
+                            Some(m) => extractor.extract_into(m, idx, &mut ctx_buf),
+                            None => ctx_buf.copy_from_slice(&zero_ctx),
+                        }
+                        coder.push(&ctx_buf, sym)?;
+                    }
+                    coder.flush()?;
+                }
+                let (bytes, loss, _ideal) = coder.finish()?;
+                (bytes, loss)
+            }
+        };
+        Ok(SetEncoded { quantized, stream, loss, recon_vals })
+    }
+
+    /// Reference warmup (extension; `cfg.warmup_passes`, 0 = paper-exact):
+    /// train the fresh model on the reference checkpoint's own
+    /// (context → co-located symbol) pairs before any coding. Both sides
+    /// hold the reference symbol maps, so the passes are bit-free and
+    /// exactly mirrored. This teaches the identity-plus-noise mapping and
+    /// the marginal up front, removing most of the online cold start.
+    fn warmup(
+        &self,
+        model: &mut Box<dyn crate::lstm::ProbModel>,
+        set: &TensorSet,
+        ref_maps: &[Vec<u16>],
+    ) -> Result<()> {
+        let cfg = &self.cfg;
+        if cfg.warmup_passes == 0 {
+            return Ok(());
+        }
+        let seq = cfg.window * cfg.window;
+        let batch = cfg.batch;
+        let mut ctx_buf = vec![0i32; seq];
+        let mut ctxs: Vec<i32> = Vec::with_capacity(batch * seq);
+        let mut tgts: Vec<u16> = Vec::with_capacity(batch);
+        for _pass in 0..cfg.warmup_passes {
+            for (ti, e) in set.iter().enumerate() {
+                let Some(ref_map) = ref_maps.get(ti) else { continue };
+                if ref_map.len() != e.tensor.len() {
+                    return Err(Error::codec("reference symbol map size mismatch"));
+                }
+                let (rows, cols) = e.tensor.rows_cols();
+                let extractor = ContextExtractor::new(rows, cols, cfg.window)?;
+                let stride = cfg.warmup_stride.max(1);
+                for (idx, &sym) in ref_map.iter().enumerate().step_by(stride) {
+                    extractor.extract_into(ref_map, idx, &mut ctx_buf);
+                    ctxs.extend_from_slice(&ctx_buf);
+                    tgts.push(sym);
+                    if tgts.len() == batch {
+                        model.update(&ctxs, &tgts)?;
+                        ctxs.clear();
+                        tgts.clear();
+                    }
+                }
+                if !tgts.is_empty() {
+                    model.update(&ctxs, &tgts)?;
+                    ctxs.clear();
+                    tgts.clear();
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Decompress a container. `reference` must be the reconstructed
+    /// checkpoint at the header's `ref_step`; `prev_syms` must be present
+    /// iff the encoder had them (recorded in the header).
+    pub fn decode(
+        backend: &Backend,
+        bytes: &[u8],
+        reference: Option<&Checkpoint>,
+        prev_syms: Option<&SymbolMaps>,
+    ) -> Result<(Checkpoint, SymbolMaps)> {
+        let container = Container::from_bytes(bytes)?;
+        let h = &container.header;
+        let cfg = CodecConfig::from_json(h.req("codec")?)?;
+        let step = h.req_usize("step")? as u64;
+        let ref_step = h.get("ref_step").and_then(|v| v.as_u64());
+        let backend_id = h.req_str("backend")?;
+        if backend_id != backend.id() {
+            return Err(Error::codec(format!(
+                "container was encoded with backend '{backend_id}', decoder uses '{}'",
+                backend.id()
+            )));
+        }
+        let had_prev = h.req("has_prev_syms")?.as_bool().unwrap_or(false);
+        if had_prev
+            && prev_syms.is_none()
+            && matches!(cfg.mode, ContextMode::Lstm | ContextMode::Mixed)
+        {
+            return Err(Error::codec(
+                "container requires the reference's symbol maps (decode the chain in order)",
+            ));
+        }
+        match (ref_step, reference) {
+            (Some(rs), Some(r)) if r.step != rs => {
+                return Err(Error::codec(format!(
+                    "reference step {} does not match container ref_step {rs}",
+                    r.step
+                )));
+            }
+            (Some(rs), None) => {
+                return Err(Error::codec(format!("container needs reference step {rs}")));
+            }
+            _ => {}
+        }
+
+        // Tensor layout.
+        let mut names = Vec::new();
+        let mut shapes = Vec::new();
+        for t in h.req_arr("tensors")? {
+            names.push(t.req_str("name")?.to_string());
+            let shape: Vec<usize> = t
+                .req_arr("shape")?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| Error::format("bad dim")))
+                .collect::<Result<_>>()?;
+            shapes.push(shape);
+        }
+        let n_tensors = names.len();
+
+        // Blobs: per set, n_tensors center tables then 1 stream. The three
+        // streams decode on three worker threads (mirrors encode).
+        let codec = Codec::new(cfg.clone(), backend.clone());
+        let mut per_set_centers: Vec<Vec<Vec<f32>>> = Vec::with_capacity(3);
+        let mut per_set_stream: Vec<&[u8]> = Vec::with_capacity(3);
+        for k in 0..3 {
+            let base = k * (n_tensors + 1);
+            let mut centers = Vec::with_capacity(n_tensors);
+            for ti in 0..n_tensors {
+                centers.push(centers_from_bytes(container.blob(base + ti)?)?);
+            }
+            per_set_centers.push(centers);
+            per_set_stream.push(container.blob(base + n_tensors)?);
+        }
+        let codec_ref = &codec;
+        let shapes_ref = &shapes;
+        let decoded: Vec<Result<Vec<Vec<u16>>>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..3)
+                .map(|k| {
+                    let centers = &per_set_centers[k];
+                    let stream = per_set_stream[k];
+                    let prev = prev_syms.filter(|_| had_prev);
+                    scope.spawn(move || {
+                        codec_ref.decode_set(stream, shapes_ref, centers, prev, k)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("set worker panicked")).collect()
+        });
+        let mut syms = SymbolMaps::default();
+        let centers_all = per_set_centers;
+        for (k, d) in decoded.into_iter().enumerate() {
+            syms.sets[k] = d?;
+        }
+
+        // Dequantize + reconstruct.
+        let mut out = Checkpoint { step, ..Default::default() };
+        for k in 0..3 {
+            let log_domain = k == 2 && cfg.log_moment2;
+            for ((name, shape), (symbols, centers)) in names
+                .iter()
+                .zip(&shapes)
+                .zip(syms.sets[k].iter().zip(&centers_all[k]))
+            {
+                let q = Quantized { symbols: symbols.clone(), centers: centers.clone() };
+                let mut vals = q.dequantize();
+                if log_domain {
+                    for v in vals.iter_mut() {
+                        if *v != 0.0 {
+                            *v = v.exp();
+                        }
+                    }
+                }
+                let tensor = Tensor::new(shape.clone(), vals)?;
+                match k {
+                    0 => out.weights.insert(name.clone(), tensor),
+                    1 => out.exp_avg.insert(name.clone(), tensor),
+                    _ => out.exp_avg_sq.insert(name.clone(), tensor),
+                }
+            }
+        }
+        // Add the reference back onto the weight residuals.
+        if let Some(r) = reference {
+            for (d, rt) in out.weights.iter_mut().zip(r.weights.iter()) {
+                for (x, &rv) in d.tensor.data_mut().iter_mut().zip(rt.tensor.data()) {
+                    *x += rv;
+                }
+            }
+        }
+        Ok((out, syms))
+    }
+
+    /// Decode one set's symbol stream.
+    fn decode_set(
+        &self,
+        stream: &[u8],
+        shapes: &[Vec<usize>],
+        centers: &[Vec<f32>],
+        prev_syms: Option<&SymbolMaps>,
+        k: usize,
+    ) -> Result<Vec<Vec<u16>>> {
+        let cfg = &self.cfg;
+        let counts: Vec<usize> = shapes.iter().map(|s| s.iter().product()).collect();
+        match cfg.mode {
+            ContextMode::Order0 => {
+                let mut model = ac::AdaptiveModel::new(1 << cfg.bits);
+                let mut dec = ac::Decoder::new(stream)?;
+                let mut out = Vec::with_capacity(shapes.len());
+                for &n in &counts {
+                    let mut syms = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        syms.push(model.decode(&mut dec));
+                    }
+                    out.push(syms);
+                }
+                Ok(out)
+            }
+            ContextMode::Lstm | ContextMode::ZeroContext | ContextMode::Mixed => {
+                let mut model = self.make_model()?;
+                if matches!(cfg.mode, ContextMode::Lstm | ContextMode::Mixed) {
+                    if let Some(p) = prev_syms {
+                        // Mirror the encoder's warmup exactly: same shapes
+                        // (from the container header), same ref maps.
+                        let mut set = TensorSet::new();
+                        for (ti, shape) in shapes.iter().enumerate() {
+                            set.insert(format!("{ti:06}"), Tensor::zeros(shape.clone()));
+                        }
+                        self.warmup(&mut model, &set, &p.sets[k])?;
+                    }
+                }
+                let seq = cfg.window * cfg.window;
+                let mut sd = StreamDecoder::new(model, stream)?;
+                let zero_ctx = vec![0i32; seq];
+                let mut ctx_buf = vec![0i32; seq];
+                let mut out = Vec::with_capacity(shapes.len());
+                for (ti, shape) in shapes.iter().enumerate() {
+                    let t = Tensor::zeros(shape.clone());
+                    let (rows, cols) = t.rows_cols();
+                    let extractor = ContextExtractor::new(rows, cols, cfg.window)?;
+                    let ref_map: Option<&[u16]> = match (cfg.mode, prev_syms) {
+                        (ContextMode::Lstm | ContextMode::Mixed, Some(p)) => {
+                            p.sets[k].get(ti).map(|v| v.as_slice())
+                        }
+                        _ => None,
+                    };
+                    for idx in 0..counts[ti] {
+                        match ref_map {
+                            Some(m) => extractor.extract_into(m, idx, &mut ctx_buf),
+                            None => ctx_buf.copy_from_slice(&zero_ctx),
+                        }
+                        sd.push(&ctx_buf)?;
+                    }
+                    sd.flush()?;
+                    out.push(sd.take());
+                }
+                // Sanity: center indices must be in range.
+                for (syms, cs) in out.iter().zip(centers) {
+                    for &s in syms {
+                        if s as usize > cs.len() {
+                            return Err(Error::codec("decoded symbol out of center range"));
+                        }
+                    }
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
+/// Apply (or skip) the log transform for the second-moment set.
+fn maybe_log(values: &[f32], log_domain: bool) -> Vec<f32> {
+    if !log_domain {
+        return values.to_vec();
+    }
+    values
+        .iter()
+        .map(|&v| if v == 0.0 { 0.0 } else { v.max(1e-30).ln() })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layers() -> Vec<(&'static str, Vec<usize>)> {
+        vec![("a.w", vec![24, 16]), ("b.w", vec![40]), ("c.w", vec![8, 4, 2])]
+    }
+
+    fn small_cfg(mode: ContextMode) -> CodecConfig {
+        CodecConfig {
+            mode,
+            hidden: 8,
+            embed: 8,
+            batch: 32,
+            quant_iters: 6,
+            ..Default::default()
+        }
+    }
+
+    fn chain(mode: ContextMode) {
+        let codec = Codec::new(small_cfg(mode), Backend::Native);
+        let c0 = Checkpoint::synthetic(1000, &layers(), 10);
+        let c1 = Checkpoint::synthetic(2000, &layers(), 11);
+
+        // Intra frame.
+        let e0 = codec.encode(&c0, None, None).unwrap();
+        let (d0, s0) = Codec::decode(&Backend::Native, &e0.bytes, None, None).unwrap();
+        assert_eq!(d0, e0.recon, "intra decode == encoder recon");
+        assert_eq!(s0, e0.syms);
+        assert_eq!(d0.step, 1000);
+
+        // Delta frame against the RECONSTRUCTED intra.
+        let e1 = codec.encode(&c1, Some(&e0.recon), Some(&e0.syms)).unwrap();
+        let (d1, s1) =
+            Codec::decode(&Backend::Native, &e1.bytes, Some(&d0), Some(&s0)).unwrap();
+        assert_eq!(d1, e1.recon, "delta decode == encoder recon");
+        assert_eq!(s1, e1.syms);
+        assert!(e1.stats.ratio() > 1.0, "ratio {}", e1.stats.ratio());
+    }
+
+    #[test]
+    fn roundtrip_lstm_chain() {
+        chain(ContextMode::Lstm);
+    }
+
+    #[test]
+    fn roundtrip_zero_context_chain() {
+        chain(ContextMode::ZeroContext);
+    }
+
+    #[test]
+    fn roundtrip_order0_chain() {
+        chain(ContextMode::Order0);
+    }
+
+    #[test]
+    fn roundtrip_mixed_chain() {
+        chain(ContextMode::Mixed);
+    }
+
+    #[test]
+    fn recon_error_bounded_by_quantization() {
+        let codec = Codec::new(small_cfg(ContextMode::Order0), Backend::Native);
+        let c0 = Checkpoint::synthetic(1, &layers(), 3);
+        let c1 = Checkpoint::synthetic(2, &layers(), 4);
+        let e0 = codec.encode(&c0, None, None).unwrap();
+        let e1 = codec.encode(&c1, Some(&e0.recon), Some(&e0.syms)).unwrap();
+        // Weight error = quantization error of the residual: small relative
+        // to the residual scale (~0.03 here).
+        for (a, b) in e1.recon.weights.iter().zip(c1.weights.iter()) {
+            for (&x, &y) in a.tensor.data().iter().zip(b.tensor.data()) {
+                assert!((x - y).abs() < 0.05, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_without_reference_fails() {
+        let codec = Codec::new(small_cfg(ContextMode::Order0), Backend::Native);
+        let c0 = Checkpoint::synthetic(1, &layers(), 5);
+        let c1 = Checkpoint::synthetic(2, &layers(), 6);
+        let e0 = codec.encode(&c0, None, None).unwrap();
+        let e1 = codec.encode(&c1, Some(&e0.recon), Some(&e0.syms)).unwrap();
+        assert!(Codec::decode(&Backend::Native, &e1.bytes, None, Some(&e0.syms)).is_err());
+        // Wrong reference step.
+        let wrong = Checkpoint::synthetic(999, &layers(), 7);
+        assert!(
+            Codec::decode(&Backend::Native, &e1.bytes, Some(&wrong), Some(&e0.syms)).is_err()
+        );
+    }
+
+    #[test]
+    fn lstm_decode_without_prev_syms_fails() {
+        let codec = Codec::new(small_cfg(ContextMode::Lstm), Backend::Native);
+        let c0 = Checkpoint::synthetic(1, &layers(), 8);
+        let c1 = Checkpoint::synthetic(2, &layers(), 9);
+        let e0 = codec.encode(&c0, None, None).unwrap();
+        let e1 = codec.encode(&c1, Some(&e0.recon), Some(&e0.syms)).unwrap();
+        assert!(Codec::decode(&Backend::Native, &e1.bytes, Some(&e0.recon), None).is_err());
+    }
+
+    #[test]
+    fn corrupt_container_rejected() {
+        let codec = Codec::new(small_cfg(ContextMode::Order0), Backend::Native);
+        let c0 = Checkpoint::synthetic(1, &layers(), 12);
+        let mut bytes = codec.encode(&c0, None, None).unwrap().bytes;
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 1;
+        assert!(Codec::decode(&Backend::Native, &bytes, None, None).is_err());
+    }
+
+    #[test]
+    fn moments_preserved_in_log_domain() {
+        let codec = Codec::new(small_cfg(ContextMode::Order0), Backend::Native);
+        let c0 = Checkpoint::synthetic(1, &layers(), 13);
+        let e0 = codec.encode(&c0, None, None).unwrap();
+        // Second moment reconstruction: nonzero values within 2× of truth
+        // (log-domain k-means with 15 centers over ~1 decade).
+        for (a, b) in e0.recon.exp_avg_sq.iter().zip(c0.exp_avg_sq.iter()) {
+            for (&x, &y) in a.tensor.data().iter().zip(b.tensor.data()) {
+                if x != 0.0 && y > 1e-10 {
+                    let ratio = (x / y) as f64;
+                    assert!(ratio > 0.2 && ratio < 5.0, "{x} vs {y}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_context_mode_matches_backend_decode() {
+        // ZeroContext must not require prev syms even when provided.
+        let codec = Codec::new(small_cfg(ContextMode::ZeroContext), Backend::Native);
+        let c0 = Checkpoint::synthetic(1, &layers(), 14);
+        let c1 = Checkpoint::synthetic(2, &layers(), 15);
+        let e0 = codec.encode(&c0, None, None).unwrap();
+        let e1 = codec.encode(&c1, Some(&e0.recon), Some(&e0.syms)).unwrap();
+        let (d1, _) =
+            Codec::decode(&Backend::Native, &e1.bytes, Some(&e0.recon), Some(&e0.syms)).unwrap();
+        assert_eq!(d1, e1.recon);
+    }
+}

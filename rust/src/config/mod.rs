@@ -1,0 +1,282 @@
+//! Experiment configuration: one JSON document drives the launcher
+//! (`cpcm train/compress/...`), the coordinator and the benches.
+//!
+//! Every field has a sensible default, so `{}` is a valid config; the CLI
+//! overrides individual fields from flags.
+
+use crate::codec::{CodecConfig, ContextMode};
+use crate::prune::PruneConfig;
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::path::Path;
+
+/// Which probability-model backend to instantiate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    Native,
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => Err(Error::config(format!("unknown backend '{other}'"))),
+        }
+    }
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Top-level experiment configuration.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Workload program prefix (`lm_tiny`, `lm_small`, `vit_tiny`, …).
+    pub workload: String,
+    /// Training steps to run.
+    pub steps: u64,
+    /// Save (and compress) a checkpoint every N steps (paper: 1000 for
+    /// Pythia-410M; scaled down for the synthetic workloads).
+    pub ckpt_every: u64,
+    /// Reference step size `s` of paper Eq. 6 (1 ⇒ previous checkpoint).
+    pub step_size: u64,
+    /// Force a self-contained (intra) frame every N checkpoints; 0 ⇒ only
+    /// the first.
+    pub keyframe_every: u64,
+    /// Training seed.
+    pub seed: u64,
+    /// Artifacts directory (AOT programs).
+    pub artifacts_dir: String,
+    /// Output directory (raw + compressed checkpoints, logs).
+    pub out_dir: String,
+    /// Probability-model backend.
+    pub backend: BackendKind,
+    /// Decode-and-verify every container right after encoding.
+    pub verify: bool,
+    /// Codec settings.
+    pub codec: CodecConfig,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            workload: "lm_tiny".into(),
+            steps: 300,
+            ckpt_every: 50,
+            step_size: 1,
+            keyframe_every: 0,
+            seed: 42,
+            artifacts_dir: "artifacts".into(),
+            out_dir: "runs/default".into(),
+            backend: BackendKind::Native,
+            verify: false,
+            codec: CodecConfig::default(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse from JSON text (unknown fields rejected to catch typos).
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let mut cfg = Self::default();
+        let obj = j.as_obj().ok_or_else(|| Error::config("config must be an object"))?;
+        for (key, val) in obj {
+            match key.as_str() {
+                "workload" => cfg.workload = req_str(val)?,
+                "steps" => cfg.steps = req_u64(val)?,
+                "ckpt_every" => cfg.ckpt_every = req_u64(val)?,
+                "step_size" => cfg.step_size = req_u64(val)?,
+                "keyframe_every" => cfg.keyframe_every = req_u64(val)?,
+                "seed" => cfg.seed = req_u64(val)?,
+                "artifacts_dir" => cfg.artifacts_dir = req_str(val)?,
+                "out_dir" => cfg.out_dir = req_str(val)?,
+                "backend" => cfg.backend = BackendKind::parse(&req_str(val)?)?,
+                "verify" => {
+                    cfg.verify =
+                        val.as_bool().ok_or_else(|| Error::config("verify must be bool"))?
+                }
+                "codec" => apply_codec(&mut cfg.codec, val)?,
+                other => return Err(Error::config(format!("unknown config key '{other}'"))),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        Self::from_json_text(&std::fs::read_to_string(path)?)
+    }
+
+    /// Serialize (for run provenance logs).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workload", Json::str(self.workload.clone())),
+            ("steps", Json::num(self.steps as f64)),
+            ("ckpt_every", Json::num(self.ckpt_every as f64)),
+            ("step_size", Json::num(self.step_size as f64)),
+            ("keyframe_every", Json::num(self.keyframe_every as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("artifacts_dir", Json::str(self.artifacts_dir.clone())),
+            ("out_dir", Json::str(self.out_dir.clone())),
+            ("backend", Json::str(self.backend.as_str())),
+            ("verify", Json::Bool(self.verify)),
+            (
+                "codec",
+                Json::obj(vec![
+                    ("mode", Json::str(mode_str(self.codec.mode))),
+                    ("bits", Json::num(self.codec.bits as f64)),
+                    ("window", Json::num(self.codec.window as f64)),
+                    ("hidden", Json::num(self.codec.hidden as f64)),
+                    ("embed", Json::num(self.codec.embed as f64)),
+                    ("batch", Json::num(self.codec.batch as f64)),
+                    ("alpha", Json::num(self.codec.prune.alpha)),
+                    ("beta", Json::num(self.codec.prune.beta)),
+                    ("log_moment2", Json::Bool(self.codec.log_moment2)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Check invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.ckpt_every == 0 || self.steps == 0 {
+            return Err(Error::config("steps and ckpt_every must be positive"));
+        }
+        if self.step_size == 0 {
+            return Err(Error::config("step_size must be >= 1"));
+        }
+        if self.codec.window % 2 == 0 {
+            return Err(Error::config("codec.window must be odd"));
+        }
+        if self.codec.bits == 0 || self.codec.bits > 8 {
+            return Err(Error::config("codec.bits must be in 1..=8"));
+        }
+        Ok(())
+    }
+}
+
+fn mode_str(m: ContextMode) -> &'static str {
+    match m {
+        ContextMode::Lstm => "lstm",
+        ContextMode::ZeroContext => "zero_context",
+        ContextMode::Mixed => "mixed",
+        ContextMode::Order0 => "order0",
+    }
+}
+
+fn apply_codec(c: &mut CodecConfig, j: &Json) -> Result<()> {
+    let obj = j.as_obj().ok_or_else(|| Error::config("codec must be an object"))?;
+    for (key, val) in obj {
+        match key.as_str() {
+            "mode" => {
+                c.mode = match req_str(val)?.as_str() {
+                    "lstm" => ContextMode::Lstm,
+                    "zero_context" => ContextMode::ZeroContext,
+                    "mixed" => ContextMode::Mixed,
+                    "order0" => ContextMode::Order0,
+                    other => return Err(Error::config(format!("unknown mode '{other}'"))),
+                }
+            }
+            "bits" => c.bits = req_u64(val)? as u8,
+            "window" => c.window = req_u64(val)? as usize,
+            "hidden" => c.hidden = req_u64(val)? as usize,
+            "embed" => c.embed = req_u64(val)? as usize,
+            "layers" => c.layers = req_u64(val)? as usize,
+            "batch" => c.batch = req_u64(val)? as usize,
+            "seed" => c.seed = req_u64(val)?,
+            "alpha" => {
+                c.prune = PruneConfig { alpha: req_f64(val)?, ..c.prune };
+            }
+            "beta" => {
+                c.prune = PruneConfig { beta: req_f64(val)?, ..c.prune };
+            }
+            "prune_enabled" => {
+                c.prune = PruneConfig {
+                    enabled: val.as_bool().ok_or_else(|| Error::config("bool expected"))?,
+                    ..c.prune
+                };
+            }
+            "log_moment2" => {
+                c.log_moment2 = val.as_bool().ok_or_else(|| Error::config("bool expected"))?
+            }
+            "quant_iters" => c.quant_iters = req_u64(val)? as usize,
+            "lr" => c.lr = req_f64(val)? as f32,
+            "warmup_passes" => c.warmup_passes = req_u64(val)? as usize,
+            "warmup_stride" => c.warmup_stride = (req_u64(val)? as usize).max(1),
+            other => return Err(Error::config(format!("unknown codec key '{other}'"))),
+        }
+    }
+    Ok(())
+}
+
+fn req_str(v: &Json) -> Result<String> {
+    v.as_str().map(|s| s.to_string()).ok_or_else(|| Error::config("string expected"))
+}
+fn req_u64(v: &Json) -> Result<u64> {
+    v.as_u64().ok_or_else(|| Error::config("non-negative integer expected"))
+}
+fn req_f64(v: &Json) -> Result<f64> {
+    v.as_f64().ok_or_else(|| Error::config("number expected"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_config_is_default() {
+        let cfg = ExperimentConfig::from_json_text("{}").unwrap();
+        assert_eq!(cfg.workload, "lm_tiny");
+        assert_eq!(cfg.backend, BackendKind::Native);
+    }
+
+    #[test]
+    fn full_roundtrip() {
+        let cfg = ExperimentConfig::from_json_text(
+            r#"{
+              "workload": "lm_small", "steps": 100, "ckpt_every": 20,
+              "step_size": 2, "seed": 7, "backend": "pjrt", "verify": true,
+              "codec": {"mode": "zero_context", "bits": 2, "window": 5,
+                        "hidden": 32, "alpha": 1e-4, "log_moment2": false}
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.workload, "lm_small");
+        assert_eq!(cfg.step_size, 2);
+        assert_eq!(cfg.backend, BackendKind::Pjrt);
+        assert_eq!(cfg.codec.mode, ContextMode::ZeroContext);
+        assert_eq!(cfg.codec.bits, 2);
+        assert_eq!(cfg.codec.window, 5);
+        assert_eq!(cfg.codec.prune.alpha, 1e-4);
+        assert!(!cfg.codec.log_moment2);
+        // Provenance serialization parses back.
+        let j = cfg.to_json().to_string();
+        assert!(Json::parse(&j).is_ok());
+    }
+
+    #[test]
+    fn typos_rejected() {
+        assert!(ExperimentConfig::from_json_text(r#"{"workloda": "x"}"#).is_err());
+        assert!(ExperimentConfig::from_json_text(r#"{"codec": {"bitz": 4}}"#).is_err());
+    }
+
+    #[test]
+    fn invariants_enforced() {
+        assert!(ExperimentConfig::from_json_text(r#"{"ckpt_every": 0}"#).is_err());
+        assert!(ExperimentConfig::from_json_text(r#"{"codec": {"window": 4}}"#).is_err());
+        assert!(ExperimentConfig::from_json_text(r#"{"codec": {"bits": 9}}"#).is_err());
+        assert!(ExperimentConfig::from_json_text(r#"{"step_size": 0}"#).is_err());
+    }
+
+    #[test]
+    fn unknown_backend_rejected() {
+        assert!(ExperimentConfig::from_json_text(r#"{"backend": "gpu"}"#).is_err());
+    }
+}

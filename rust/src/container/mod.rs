@@ -1,0 +1,214 @@
+//! `.cpcm` compressed-checkpoint container format.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic    [8]  = "CPCM0001"
+//! hdr_len  u32
+//! header   [hdr_len]   JSON (step, ref_step, codec config, tensor list,
+//!                      per-set stats)
+//! n_blobs  u32
+//! blobs    n × (u32 len, bytes)   order defined by the codec:
+//!                      per set: center tables, then AC shard streams
+//! crc32    u32         over everything before it
+//! ```
+//!
+//! The header is self-describing: `cpcm info file.cpcm` pretty-prints it,
+//! and the decoder rebuilds its models purely from header fields (plus the
+//! reference checkpoint and chain symbol maps — see [`crate::codec`]).
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+const MAGIC: &[u8; 8] = b"CPCM0001";
+
+/// A parsed (or under-construction) container.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Container {
+    /// Header document.
+    pub header: Json,
+    /// Opaque blob sections, in codec-defined order.
+    pub blobs: Vec<Vec<u8>>,
+}
+
+impl Container {
+    /// New container with the given header.
+    pub fn new(header: Json) -> Self {
+        Self { header, blobs: Vec::new() }
+    }
+
+    /// Append a blob, returning its index.
+    pub fn push_blob(&mut self, blob: Vec<u8>) -> usize {
+        self.blobs.push(blob);
+        self.blobs.len() - 1
+    }
+
+    /// Blob by index.
+    pub fn blob(&self, i: usize) -> Result<&[u8]> {
+        self.blobs
+            .get(i)
+            .map(|b| b.as_slice())
+            .ok_or_else(|| Error::format(format!("container missing blob {i}")))
+    }
+
+    /// Serialize with trailing CRC.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let header = self.header.to_string();
+        let mut out = Vec::with_capacity(
+            header.len() + self.blobs.iter().map(|b| b.len() + 4).sum::<usize>() + 64,
+        );
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        out.extend_from_slice(&(self.blobs.len() as u32).to_le_bytes());
+        for b in &self.blobs {
+            out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+            out.extend_from_slice(b);
+        }
+        let crc = crc32fast::hash(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Parse and CRC-check.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        if bytes.len() < 8 + 4 + 4 + 4 || &bytes[..8] != MAGIC {
+            return Err(Error::format("not a cpcm container"));
+        }
+        let body_len = bytes.len() - 4;
+        let stored_crc = u32::from_le_bytes(bytes[body_len..].try_into().unwrap());
+        if crc32fast::hash(&bytes[..body_len]) != stored_crc {
+            return Err(Error::format("container CRC mismatch (corrupt file)"));
+        }
+        let mut pos = 8usize;
+        let take_u32 = |pos: &mut usize| -> Result<u32> {
+            if *pos + 4 > body_len {
+                return Err(Error::format("container truncated"));
+            }
+            let v = u32::from_le_bytes(bytes[*pos..*pos + 4].try_into().unwrap());
+            *pos += 4;
+            Ok(v)
+        };
+        let hdr_len = take_u32(&mut pos)? as usize;
+        if pos + hdr_len > body_len {
+            return Err(Error::format("container truncated in header"));
+        }
+        let header_text = std::str::from_utf8(&bytes[pos..pos + hdr_len])
+            .map_err(|_| Error::format("header not utf-8"))?;
+        let header = Json::parse(header_text)?;
+        pos += hdr_len;
+        let n_blobs = take_u32(&mut pos)? as usize;
+        let mut blobs = Vec::with_capacity(n_blobs);
+        for _ in 0..n_blobs {
+            let len = take_u32(&mut pos)? as usize;
+            if pos + len > body_len {
+                return Err(Error::format("container truncated in blob"));
+            }
+            blobs.push(bytes[pos..pos + len].to_vec());
+            pos += len;
+        }
+        if pos != body_len {
+            return Err(Error::format("trailing bytes in container"));
+        }
+        Ok(Self { header, blobs })
+    }
+
+    /// Total serialized size (compression-ratio denominator).
+    pub fn size_bytes(&self) -> usize {
+        8 + 4
+            + self.header.to_string().len()
+            + 4
+            + self.blobs.iter().map(|b| b.len() + 4).sum::<usize>()
+            + 4
+    }
+}
+
+/// Pack a center table (sorted f32s) as bytes.
+pub fn centers_to_bytes(centers: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(2 + centers.len() * 4);
+    out.extend_from_slice(&(centers.len() as u16).to_le_bytes());
+    for &c in centers {
+        out.extend_from_slice(&c.to_le_bytes());
+    }
+    out
+}
+
+/// Parse a center table.
+pub fn centers_from_bytes(bytes: &[u8]) -> Result<Vec<f32>> {
+    if bytes.len() < 2 {
+        return Err(Error::format("centers blob too short"));
+    }
+    let n = u16::from_le_bytes([bytes[0], bytes[1]]) as usize;
+    if bytes.len() != 2 + n * 4 {
+        return Err(Error::format("centers blob length mismatch"));
+    }
+    Ok(bytes[2..]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Container {
+        let mut c = Container::new(Json::obj(vec![
+            ("step", Json::num(5000)),
+            ("mode", Json::str("lstm")),
+        ]));
+        c.push_blob(vec![1, 2, 3]);
+        c.push_blob(vec![]);
+        c.push_blob(vec![0xFF; 100]);
+        c
+    }
+
+    #[test]
+    fn roundtrip() {
+        let c = sample();
+        let bytes = c.to_bytes();
+        let back = Container::from_bytes(&bytes).unwrap();
+        assert_eq!(back, c);
+        assert_eq!(bytes.len(), c.size_bytes());
+    }
+
+    #[test]
+    fn crc_detects_corruption() {
+        let mut bytes = sample().to_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        assert!(Container::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = sample().to_bytes();
+        bytes[0] = b'X';
+        assert!(Container::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let bytes = sample().to_bytes();
+        for cut in [5, 12, bytes.len() - 5] {
+            assert!(Container::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn missing_blob_index() {
+        let c = sample();
+        assert!(c.blob(2).is_ok());
+        assert!(c.blob(3).is_err());
+    }
+
+    #[test]
+    fn centers_roundtrip() {
+        let cs = vec![-1.5f32, 0.0, 2.25, 1e-7];
+        let bytes = centers_to_bytes(&cs);
+        assert_eq!(centers_from_bytes(&bytes).unwrap(), cs);
+        let empty = centers_to_bytes(&[]);
+        assert_eq!(centers_from_bytes(&empty).unwrap(), Vec::<f32>::new());
+        assert!(centers_from_bytes(&bytes[..5]).is_err());
+    }
+}

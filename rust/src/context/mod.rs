@@ -1,0 +1,245 @@
+//! Context formation — paper Fig. 2 (§III).
+//!
+//! For the weight at 2-D position `(r, c)` of the current checkpoint, the
+//! context is the quantized symbol at the *same* position in the reference
+//! (previous) checkpoint together with its surrounding neighbors: a
+//! `window × window` patch (default 3×3 ⇒ sequence length 9, matching the
+//! paper's LSTM `sequence length = 9`).
+//!
+//! Tensors are folded to 2-D via [`crate::tensor::Tensor::rows_cols`].
+//! Out-of-bounds neighbors read as symbol 0 (the zero/pruned symbol).
+//!
+//! Ordering: neighbors are emitted in row-major order with the co-located
+//! symbol **last**, so the LSTM's final step — the one whose output feeds
+//! the softmax — is conditioned most directly on the co-located reference
+//! value (the strongest predictor per the paper's Fig. 1 correlation).
+
+use crate::{Error, Result};
+
+/// Context extractor over one tensor's reference symbol map.
+#[derive(Clone, Debug)]
+pub struct ContextExtractor {
+    rows: usize,
+    cols: usize,
+    window: usize,
+    /// Neighbor offsets (dr, dc), co-located entry last.
+    offsets: Vec<(isize, isize)>,
+}
+
+impl ContextExtractor {
+    /// Build for a `rows × cols` map and an odd `window` size (1, 3, 5…).
+    pub fn new(rows: usize, cols: usize, window: usize) -> Result<Self> {
+        if window == 0 || window % 2 == 0 {
+            return Err(Error::config(format!("context window {window} must be odd and > 0")));
+        }
+        let half = (window / 2) as isize;
+        let mut offsets = Vec::with_capacity(window * window);
+        for dr in -half..=half {
+            for dc in -half..=half {
+                if (dr, dc) != (0, 0) {
+                    offsets.push((dr, dc));
+                }
+            }
+        }
+        offsets.push((0, 0)); // co-located last
+        Ok(Self { rows, cols, window, offsets })
+    }
+
+    /// Context sequence length (`window²`).
+    pub fn seq_len(&self) -> usize {
+        self.window * self.window
+    }
+
+    /// Total positions in the map.
+    pub fn len(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// True if the map is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Extract the context of flat position `idx` from `ref_syms`
+    /// (row-major, length `rows*cols`) into `out` (length `seq_len`).
+    #[inline]
+    pub fn extract_into(&self, ref_syms: &[u16], idx: usize, out: &mut [i32]) {
+        debug_assert_eq!(ref_syms.len(), self.len());
+        debug_assert_eq!(out.len(), self.seq_len());
+        let r = (idx / self.cols) as isize;
+        let c = (idx % self.cols) as isize;
+        // Fast path: fully interior position — no bounds checks per neighbor.
+        let half = (self.window / 2) as isize;
+        if r >= half && r + half < self.rows as isize && c >= half && c + half < self.cols as isize
+        {
+            for (k, &(dr, dc)) in self.offsets.iter().enumerate() {
+                let j = (r + dr) as usize * self.cols + (c + dc) as usize;
+                out[k] = ref_syms[j] as i32;
+            }
+        } else {
+            for (k, &(dr, dc)) in self.offsets.iter().enumerate() {
+                let rr = r + dr;
+                let cc = c + dc;
+                out[k] = if rr >= 0 && rr < self.rows as isize && cc >= 0 && cc < self.cols as isize
+                {
+                    ref_syms[rr as usize * self.cols + cc as usize] as i32
+                } else {
+                    0
+                };
+            }
+        }
+    }
+
+    /// Gather contexts for positions `[start, start+count)` into a flat
+    /// `count × seq_len` buffer (row-major), zero-padding positions past the
+    /// end of the map — used to fill fixed-size LSTM batches.
+    pub fn gather_batch(&self, ref_syms: &[u16], start: usize, count: usize, out: &mut [i32]) {
+        debug_assert_eq!(out.len(), count * self.seq_len());
+        let s = self.seq_len();
+        for b in 0..count {
+            let idx = start + b;
+            let dst = &mut out[b * s..(b + 1) * s];
+            if idx < self.len() {
+                self.extract_into(ref_syms, idx, dst);
+            } else {
+                dst.fill(0);
+            }
+        }
+    }
+}
+
+/// Zero-context extractor: the paper's third experimental setup ("context
+/// is replaced by zero") — always produces all-zero context sequences, so
+/// the LSTM degenerates to a learned order-0 estimator.
+pub fn zero_context(seq_len: usize, count: usize) -> Vec<i32> {
+    vec![0; seq_len * count]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 3×4 map with distinct symbols 1..=12 for position arithmetic checks.
+    fn map() -> Vec<u16> {
+        (1..=12).collect()
+    }
+
+    #[test]
+    fn interior_context_row_major_center_last() {
+        // Map:
+        //  1  2  3  4
+        //  5  6  7  8
+        //  9 10 11 12
+        let ex = ContextExtractor::new(3, 4, 3).unwrap();
+        let mut out = vec![0i32; 9];
+        // Position (1,1) = flat 5, value 6.
+        ex.extract_into(&map(), 5, &mut out);
+        assert_eq!(out, vec![1, 2, 3, 5, 7, 9, 10, 11, 6]);
+    }
+
+    #[test]
+    fn corner_pads_zero() {
+        let ex = ContextExtractor::new(3, 4, 3).unwrap();
+        let mut out = vec![0i32; 9];
+        // Top-left corner (0,0), value 1.
+        ex.extract_into(&map(), 0, &mut out);
+        assert_eq!(out, vec![0, 0, 0, 0, 2, 0, 5, 6, 1]);
+        // Bottom-right corner (2,3), value 12.
+        ex.extract_into(&map(), 11, &mut out);
+        assert_eq!(out, vec![7, 8, 0, 11, 0, 0, 0, 0, 12]);
+    }
+
+    #[test]
+    fn window_one_is_colocated_only() {
+        let ex = ContextExtractor::new(3, 4, 1).unwrap();
+        assert_eq!(ex.seq_len(), 1);
+        let mut out = vec![0i32; 1];
+        ex.extract_into(&map(), 6, &mut out);
+        assert_eq!(out, vec![7]);
+    }
+
+    #[test]
+    fn window_five() {
+        let ex = ContextExtractor::new(3, 4, 5).unwrap();
+        assert_eq!(ex.seq_len(), 25);
+        let mut out = vec![0i32; 25];
+        ex.extract_into(&map(), 5, &mut out);
+        // Co-located last.
+        assert_eq!(out[24], 6);
+        // Far corners of the 5×5 window fall outside the 3×4 map.
+        assert_eq!(out[0], 0);
+    }
+
+    #[test]
+    fn even_or_zero_window_rejected() {
+        assert!(ContextExtractor::new(3, 3, 2).is_err());
+        assert!(ContextExtractor::new(3, 3, 0).is_err());
+        assert!(ContextExtractor::new(3, 3, 3).is_ok());
+    }
+
+    #[test]
+    fn gather_batch_pads_past_end() {
+        let ex = ContextExtractor::new(3, 4, 3).unwrap();
+        let mut out = vec![-1i32; 4 * 9];
+        ex.gather_batch(&map(), 10, 4, &mut out);
+        // Positions 10, 11 valid; 12, 13 padded with zeros.
+        assert_eq!(out[8], 11); // co-located of flat 10
+        assert_eq!(out[9 + 8], 12);
+        assert!(out[18..].iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn vector_tensor_single_row() {
+        // 1-D tensors fold to one row; vertical neighbors all pad to 0.
+        let ex = ContextExtractor::new(1, 6, 3).unwrap();
+        let syms: Vec<u16> = (1..=6).collect();
+        let mut out = vec![0i32; 9];
+        ex.extract_into(&syms, 2, &mut out);
+        assert_eq!(out, vec![0, 0, 0, 2, 4, 0, 0, 0, 3]);
+    }
+
+    #[test]
+    fn interior_matches_slow_path() {
+        use crate::util::prop::forall;
+        forall("context fast path == slow path", 20, |g| {
+            let rows = g.usize_range(1, 12);
+            let cols = g.usize_range(1, 12);
+            let window = *g.choose(&[1usize, 3, 5]);
+            let syms: Vec<u16> = g.symbols(rows * cols, 16);
+            let ex = ContextExtractor::new(rows, cols, window).unwrap();
+            let mut fast = vec![0i32; ex.seq_len()];
+            for idx in 0..rows * cols {
+                ex.extract_into(&syms, idx, &mut fast);
+                // Reference: naive gather.
+                let r = (idx / cols) as isize;
+                let c = (idx % cols) as isize;
+                let half = (window / 2) as isize;
+                let mut slow = Vec::new();
+                for dr in -half..=half {
+                    for dc in -half..=half {
+                        if (dr, dc) == (0, 0) {
+                            continue;
+                        }
+                        let (rr, cc) = (r + dr, c + dc);
+                        slow.push(
+                            if rr >= 0 && rr < rows as isize && cc >= 0 && cc < cols as isize {
+                                syms[rr as usize * cols + cc as usize] as i32
+                            } else {
+                                0
+                            },
+                        );
+                    }
+                }
+                slow.push(syms[idx] as i32);
+                assert_eq!(fast, slow, "idx={idx} rows={rows} cols={cols} w={window}");
+            }
+        });
+    }
+
+    #[test]
+    fn zero_context_shape() {
+        let z = zero_context(9, 5);
+        assert_eq!(z.len(), 45);
+        assert!(z.iter().all(|&x| x == 0));
+    }
+}

@@ -1,0 +1,345 @@
+//! Compression coordinator: the Layer-3 service tying the system together.
+//!
+//! Training (the producer) submits checkpoints; a dedicated compression
+//! worker (the consumer) encodes them against the evolving reference chain
+//! and writes `.cpcm` containers. The bounded submission queue gives
+//! backpressure: if compression falls behind, `submit` blocks rather than
+//! buffering unboundedly (checkpoints are large).
+//!
+//! The coordinator owns the *chain state* the codec needs:
+//! - the reconstructed reference checkpoints (the decoder-visible values,
+//!   as returned by `encode().recon`), and
+//! - their quantized symbol maps (the context source, paper Fig. 2).
+//!
+//! A history of `step_size` entries supports the paper's Eq.-6 experiment
+//! (`s = 2` references the checkpoint before the previous one, Fig. 4).
+//! Keyframes (intra frames) bound error accumulation and chain length.
+
+use crate::checkpoint::Checkpoint;
+use crate::codec::{Codec, CodecConfig, EncodeStats, SymbolMaps};
+use crate::lstm::Backend;
+use crate::metrics::Metrics;
+use crate::{Error, Result};
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::{mpsc, Arc};
+
+/// Coordinator settings.
+#[derive(Clone)]
+pub struct CoordinatorConfig {
+    pub codec: CodecConfig,
+    pub backend: Backend,
+    /// Output directory for `.cpcm` files.
+    pub out_dir: PathBuf,
+    /// Eq.-6 step size `s` (1 ⇒ reference is the previous checkpoint).
+    pub step_size: u64,
+    /// Intra frame every N checkpoints (0 ⇒ only the first).
+    pub keyframe_every: u64,
+    /// Decode each container after writing and verify it reproduces the
+    /// encoder's reconstruction bit-exactly.
+    pub verify: bool,
+    /// Submission queue depth (backpressure bound).
+    pub queue_depth: usize,
+}
+
+impl CoordinatorConfig {
+    /// Defaults matching the paper's main experiment (s = 1).
+    pub fn new(codec: CodecConfig, backend: Backend, out_dir: impl Into<PathBuf>) -> Self {
+        Self {
+            codec,
+            backend,
+            out_dir: out_dir.into(),
+            step_size: 1,
+            keyframe_every: 0,
+            verify: false,
+            queue_depth: 2,
+        }
+    }
+}
+
+/// Per-checkpoint result row.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub step: u64,
+    pub ref_step: Option<u64>,
+    pub bytes: usize,
+    pub stats: EncodeStats,
+    pub path: PathBuf,
+}
+
+/// Handle to the running coordinator.
+pub struct Coordinator {
+    tx: Option<SyncSender<Checkpoint>>,
+    worker: Option<std::thread::JoinHandle<Result<Vec<JobResult>>>>,
+    metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    /// Start the compression worker.
+    pub fn start(cfg: CoordinatorConfig) -> Result<Self> {
+        std::fs::create_dir_all(&cfg.out_dir)?;
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = mpsc::sync_channel::<Checkpoint>(cfg.queue_depth);
+        let m = metrics.clone();
+        let worker = std::thread::Builder::new()
+            .name("cpcm-coordinator".into())
+            .spawn(move || worker_loop(cfg, rx, m))
+            .map_err(Error::Io)?;
+        Ok(Self { tx: Some(tx), worker: Some(worker), metrics })
+    }
+
+    /// Submit a checkpoint for compression. Blocks when the queue is full
+    /// (backpressure on the trainer).
+    pub fn submit(&self, ck: Checkpoint) -> Result<()> {
+        self.tx
+            .as_ref()
+            .expect("coordinator already finished")
+            .send(ck)
+            .map_err(|_| Error::codec("coordinator worker died"))
+    }
+
+    /// Shared metrics registry.
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    /// Close the queue, wait for the worker, and return all job results.
+    pub fn finish(mut self) -> Result<Vec<JobResult>> {
+        drop(self.tx.take());
+        self.worker
+            .take()
+            .expect("finish called twice")
+            .join()
+            .map_err(|_| Error::codec("coordinator worker panicked"))?
+    }
+}
+
+/// Chain entry: what the decoder will have at this step.
+struct ChainEntry {
+    recon: Checkpoint,
+    syms: SymbolMaps,
+}
+
+fn worker_loop(
+    cfg: CoordinatorConfig,
+    rx: Receiver<Checkpoint>,
+    metrics: Arc<Metrics>,
+) -> Result<Vec<JobResult>> {
+    let codec = Codec::new(cfg.codec.clone(), cfg.backend.clone());
+    // History of the last `step_size` chain entries; front = oldest.
+    let mut history: VecDeque<ChainEntry> = VecDeque::new();
+    let mut results = Vec::new();
+    let mut index: u64 = 0;
+
+    while let Ok(ck) = rx.recv() {
+        let step = ck.step;
+        let force_key = index == 0
+            || (cfg.keyframe_every > 0 && index % cfg.keyframe_every == 0)
+            || history.len() < cfg.step_size as usize;
+        // Eq. 6: reference is the entry `s` checkpoints back.
+        let reference = if force_key { None } else { history.front() };
+
+        let t0 = std::time::Instant::now();
+        let out = codec.encode(
+            &ck,
+            reference.map(|e| &e.recon),
+            reference.map(|e| &e.syms),
+        )?;
+        metrics.time("encode", t0.elapsed().as_secs_f64());
+        metrics.count("checkpoints", 1);
+        metrics.count("bytes_out", out.bytes.len() as u64);
+        metrics.count("bytes_raw", ck.raw_bytes() as u64);
+        metrics.gauge("last_ratio", out.stats.ratio());
+
+        let path = cfg.out_dir.join(format!("ckpt_{step:010}.cpcm"));
+        let tmp = cfg.out_dir.join(format!(".tmp_{step}"));
+        std::fs::write(&tmp, &out.bytes)?;
+        std::fs::rename(&tmp, &path)?;
+
+        if cfg.verify {
+            let (decoded, dsyms) = Codec::decode(
+                &cfg.backend,
+                &out.bytes,
+                reference.map(|e| &e.recon),
+                reference.map(|e| &e.syms),
+            )?;
+            if decoded != out.recon || dsyms != out.syms {
+                return Err(Error::codec(format!(
+                    "verification failed for step {step}: decode != encoder reconstruction"
+                )));
+            }
+            metrics.count("verified", 1);
+        }
+
+        results.push(JobResult {
+            step,
+            ref_step: reference.map(|e| e.recon.step),
+            bytes: out.bytes.len(),
+            stats: out.stats,
+            path,
+        });
+
+        history.push_back(ChainEntry { recon: out.recon, syms: out.syms });
+        while history.len() > cfg.step_size as usize {
+            history.pop_front();
+        }
+        index += 1;
+    }
+    Ok(results)
+}
+
+/// Decode a directory of `.cpcm` containers in chain order, returning the
+/// reconstructed checkpoints (the decompression path of the CLI and the
+/// resume examples). `upto` limits the decode to steps ≤ it.
+pub fn decode_chain(
+    dir: &std::path::Path,
+    backend: &Backend,
+    upto: Option<u64>,
+) -> Result<Vec<Checkpoint>> {
+    let mut files: Vec<(u64, PathBuf)> = std::fs::read_dir(dir)?
+        .filter_map(|e| {
+            let p = e.ok()?.path();
+            let name = p.file_name()?.to_string_lossy().into_owned();
+            let step = name.strip_prefix("ckpt_")?.strip_suffix(".cpcm")?.parse().ok()?;
+            Some((step, p))
+        })
+        .collect();
+    files.sort();
+    let mut out: Vec<Checkpoint> = Vec::new();
+    // step → (index into out, syms)
+    let mut chain: Vec<(u64, SymbolMaps)> = Vec::new();
+    for (step, path) in files {
+        if let Some(limit) = upto {
+            if step > limit {
+                break;
+            }
+        }
+        let bytes = std::fs::read(&path)?;
+        // Peek the header for the reference step.
+        let container = crate::container::Container::from_bytes(&bytes)?;
+        let ref_step = container.header.get("ref_step").and_then(|v| v.as_u64());
+        let (reference, prev_syms) = match ref_step {
+            None => (None, None),
+            Some(rs) => {
+                let idx = chain
+                    .iter()
+                    .position(|(s, _)| *s == rs)
+                    .ok_or_else(|| {
+                        Error::codec(format!("chain broken: step {step} needs {rs}"))
+                    })?;
+                (Some(&out[idx]), Some(&chain[idx].1))
+            }
+        };
+        let (ck, syms) = Codec::decode(backend, &bytes, reference, prev_syms)?;
+        debug_assert_eq!(ck.step, step);
+        out.push(ck);
+        chain.push((step, syms));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::ContextMode;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("cpcm_coord_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn small_codec(mode: ContextMode) -> CodecConfig {
+        CodecConfig { mode, hidden: 8, embed: 8, batch: 32, quant_iters: 4, ..Default::default() }
+    }
+
+    fn layers() -> Vec<(&'static str, Vec<usize>)> {
+        vec![("w", vec![20, 12]), ("b", vec![30])]
+    }
+
+    #[test]
+    fn pipeline_compresses_and_chain_decodes() {
+        let dir = tmpdir("pipe");
+        let mut cfg =
+            CoordinatorConfig::new(small_codec(ContextMode::Lstm), Backend::Native, &dir);
+        cfg.verify = true;
+        let coord = Coordinator::start(cfg).unwrap();
+        for i in 0..4u64 {
+            coord.submit(Checkpoint::synthetic(1000 * (i + 1), &layers(), 100 + i)).unwrap();
+        }
+        let metrics = coord.metrics();
+        let results = coord.finish().unwrap();
+        assert_eq!(results.len(), 4);
+        assert_eq!(results[0].ref_step, None);
+        assert_eq!(results[1].ref_step, Some(1000));
+        assert_eq!(metrics.counter("checkpoints"), 4);
+        assert_eq!(metrics.counter("verified"), 4);
+
+        // Chain decode reproduces all reconstructions.
+        let decoded = decode_chain(&dir, &Backend::Native, None).unwrap();
+        assert_eq!(decoded.len(), 4);
+        assert_eq!(decoded[3].step, 4000);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn step_size_two_references_two_back() {
+        let dir = tmpdir("s2");
+        let mut cfg =
+            CoordinatorConfig::new(small_codec(ContextMode::Order0), Backend::Native, &dir);
+        cfg.step_size = 2;
+        let coord = Coordinator::start(cfg).unwrap();
+        for i in 0..5u64 {
+            coord.submit(Checkpoint::synthetic(100 * (i + 1), &layers(), i)).unwrap();
+        }
+        let results = coord.finish().unwrap();
+        // First two are intra (history shorter than s), then refs go 2 back.
+        assert_eq!(results[0].ref_step, None);
+        assert_eq!(results[1].ref_step, None);
+        assert_eq!(results[2].ref_step, Some(100));
+        assert_eq!(results[3].ref_step, Some(200));
+        assert_eq!(results[4].ref_step, Some(300));
+        let decoded = decode_chain(&dir, &Backend::Native, None).unwrap();
+        assert_eq!(decoded.len(), 5);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn keyframes_reset_chain() {
+        let dir = tmpdir("key");
+        let mut cfg =
+            CoordinatorConfig::new(small_codec(ContextMode::Order0), Backend::Native, &dir);
+        cfg.keyframe_every = 2;
+        let coord = Coordinator::start(cfg).unwrap();
+        for i in 0..4u64 {
+            coord.submit(Checkpoint::synthetic(10 * (i + 1), &layers(), i)).unwrap();
+        }
+        let results = coord.finish().unwrap();
+        assert_eq!(results[0].ref_step, None);
+        assert_eq!(results[1].ref_step, Some(10));
+        assert_eq!(results[2].ref_step, None); // keyframe
+        assert_eq!(results[3].ref_step, Some(30));
+        // Decoding only up to step 30 works without the full prefix chain
+        // ... wait, 40 references 30; decode up to 30 must include the
+        // keyframe at 30 (intra) and its predecessors.
+        let decoded = decode_chain(&dir, &Backend::Native, Some(30)).unwrap();
+        assert_eq!(decoded.len(), 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn decode_chain_detects_missing_reference() {
+        let dir = tmpdir("broken");
+        let cfg = CoordinatorConfig::new(small_codec(ContextMode::Order0), Backend::Native, &dir);
+        let coord = Coordinator::start(cfg).unwrap();
+        for i in 0..3u64 {
+            coord.submit(Checkpoint::synthetic(10 * (i + 1), &layers(), i)).unwrap();
+        }
+        coord.finish().unwrap();
+        // Remove the intra frame → chain is unrecoverable.
+        std::fs::remove_file(dir.join("ckpt_0000000010.cpcm")).unwrap();
+        assert!(decode_chain(&dir, &Backend::Native, None).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

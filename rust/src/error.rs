@@ -1,0 +1,67 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error type for all cpcm operations.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// I/O failure (checkpoint store, container files, artifacts).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// XLA / PJRT runtime failure.
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// Malformed container, manifest, or config input.
+    #[error("format error: {0}")]
+    Format(String),
+
+    /// JSON parse error (configs, manifests).
+    #[error("json error at byte {at}: {msg}")]
+    Json { at: usize, msg: String },
+
+    /// Arithmetic-coder bitstream corruption or model mismatch.
+    #[error("codec error: {0}")]
+    Codec(String),
+
+    /// Shape/layout mismatch between tensors or checkpoints.
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// Invalid configuration value.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// A required AOT artifact is missing (run `make artifacts`).
+    #[error("missing artifact {0} — run `make artifacts`")]
+    MissingArtifact(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Shorthand for a format error.
+    pub fn format(msg: impl Into<String>) -> Self {
+        Error::Format(msg.into())
+    }
+    /// Shorthand for a codec error.
+    pub fn codec(msg: impl Into<String>) -> Self {
+        Error::Codec(msg.into())
+    }
+    /// Shorthand for a shape error.
+    pub fn shape(msg: impl Into<String>) -> Self {
+        Error::Shape(msg.into())
+    }
+    /// Shorthand for a config error.
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+}

@@ -1,0 +1,55 @@
+//! # cpcm — Prediction- and Context-Modeling Checkpoint Compression
+//!
+//! A from-scratch reproduction of *“An Efficient Compression of Deep Neural
+//! Network Checkpoints Based on Prediction and Context Modeling”*
+//! (Y. L. Kim, E. A. Belyaev, ITMO University, 2025).
+//!
+//! The system compresses training checkpoints `P_t = {W_t, O_t}` (weights +
+//! Adam moments) in four stages:
+//!
+//! 1. [`delta`] — weight residuals `W_t − W_{t−s}` against a reference
+//!    checkpoint (paper Eq. 3/6);
+//! 2. [`prune`] — ExCP joint weight/momentum pruning (paper Eq. 4–5);
+//! 3. [`quant`] — non-uniform k-means quantization to `2^n − 1` centers;
+//! 4. [`codec`] — the paper's contribution: adaptive arithmetic coding
+//!    ([`ac`]) of the quantized symbols, with per-symbol probabilities
+//!    predicted by an online-updated LSTM ([`lstm`]) whose context
+//!    ([`context`]) is the co-located 3×3 neighborhood of the quantized
+//!    residuals of the *previous* checkpoint (paper Fig. 2).
+//!
+//! The architecture is three-layer: this crate is the Layer-3 coordinator
+//! (request path, pure Rust); the LSTM probability model and the training
+//! workloads are Layer-2 JAX programs AOT-lowered to HLO text and executed
+//! through PJRT by [`runtime`]; the LSTM cell itself is a Layer-1 Pallas
+//! kernel (see `python/compile/kernels/`). Python never runs at
+//! compression/decompression time.
+//!
+//! Entry points:
+//! - [`codec::Codec`] — compress/decompress one checkpoint against a reference;
+//! - [`coordinator::Coordinator`] — multi-threaded compression service over a
+//!   stream of checkpoints produced by training;
+//! - [`trainer::Trainer`] — drives AOT train-step executables to produce real
+//!   Adam checkpoints for the experiments;
+//! - [`baselines`] — ExCP(+DEFLATE / order-0 AC) and other comparison points.
+
+pub mod ac;
+pub mod baselines;
+pub mod checkpoint;
+pub mod cli;
+pub mod codec;
+pub mod config;
+pub mod container;
+pub mod context;
+pub mod coordinator;
+pub mod delta;
+pub mod error;
+pub mod lstm;
+pub mod metrics;
+pub mod prune;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod trainer;
+pub mod util;
+
+pub use error::{Error, Result};

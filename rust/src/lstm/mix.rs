@@ -1,0 +1,234 @@
+//! Bayesian mixture of the LSTM and an adaptive order-0 expert.
+//!
+//! Extension over the paper (its future-work direction of stronger
+//! probability modeling, cf. CMIX-style context mixing): the coding
+//! distribution is `w·p_lstm + (1−w)·p_order0`, with `w` updated after
+//! every batch by exponentiated-gradient / Bayes weighting on each
+//! expert's batch log-loss (forgetting factor for non-stationarity).
+//!
+//! Properties:
+//! - deterministic and decoder-symmetric (weights depend only on coded
+//!   symbols and contexts);
+//! - the mixture's asymptotic code length is within the mixing regret of
+//!   the *better* expert, so the codec can no longer lose badly to plain
+//!   adaptive AC while the LSTM is still warming up — the failure mode
+//!   measured in EXPERIMENTS.md §Tuning.
+
+use super::{LstmCfg, ProbModel};
+use crate::Result;
+
+/// Mixture wrapper implementing [`ProbModel`].
+pub struct MixModel {
+    lstm: Box<dyn ProbModel>,
+    /// Order-0 expert: adaptive frequencies (mirrors `ac::AdaptiveModel`).
+    freqs: Vec<u32>,
+    total: u32,
+    increment: u32,
+    /// Log-weights of (lstm, order0), kept normalized max=0.
+    log_w: [f64; 2],
+    /// Per-call scratch of the last blended probabilities' components is
+    /// not kept: update() recomputes the LSTM's view, costing one extra
+    /// forward per batch (~15%) in exchange for statelessness.
+    cfg: LstmCfg,
+}
+
+/// Forgetting factor on the expert log-weights (non-stationary streams).
+const FORGET: f64 = 0.98;
+/// Weight floor so a temporarily bad expert can recover.
+const W_FLOOR: f64 = 1e-3;
+
+impl MixModel {
+    /// Wrap an LSTM-backend model.
+    pub fn new(lstm: Box<dyn ProbModel>) -> Self {
+        let cfg = lstm.cfg().clone();
+        let a = cfg.alphabet;
+        Self {
+            lstm,
+            freqs: vec![1; a],
+            total: a as u32,
+            increment: 32,
+            log_w: [0.0, 0.0],
+            cfg,
+        }
+    }
+
+    fn weights(&self) -> (f32, f32) {
+        let m = self.log_w[0].max(self.log_w[1]);
+        let e0 = (self.log_w[0] - m).exp();
+        let e1 = (self.log_w[1] - m).exp();
+        let w = (e0 / (e0 + e1)).clamp(W_FLOOR, 1.0 - W_FLOOR);
+        (w as f32, 1.0 - w as f32)
+    }
+
+    fn order0_probs(&self) -> Vec<f32> {
+        let inv = 1.0 / self.total as f32;
+        self.freqs.iter().map(|&f| f as f32 * inv).collect()
+    }
+
+    fn update_counts(&mut self, sym: u16) {
+        self.freqs[sym as usize] += self.increment;
+        self.total += self.increment;
+        if self.total >= crate::ac::MAX_TOTAL {
+            self.total = 0;
+            for f in &mut self.freqs {
+                *f = (*f + 1) >> 1;
+                self.total += *f;
+            }
+        }
+    }
+
+    fn blend(&self, lstm_probs: &[f32], rows: usize) -> Vec<f32> {
+        let a = self.cfg.alphabet;
+        let p0 = self.order0_probs();
+        let (wl, w0) = self.weights();
+        let mut out = vec![0.0f32; rows * a];
+        for r in 0..rows {
+            for s in 0..a {
+                out[r * a + s] = wl * lstm_probs[r * a + s] + w0 * p0[s];
+            }
+        }
+        out
+    }
+}
+
+impl ProbModel for MixModel {
+    fn cfg(&self) -> &LstmCfg {
+        &self.cfg
+    }
+
+    fn probs(&mut self, contexts: &[i32]) -> Result<Vec<f32>> {
+        let rows = contexts.len() / self.cfg.seq;
+        let lp = self.lstm.probs(contexts)?;
+        Ok(self.blend(&lp, rows))
+    }
+
+    fn update(&mut self, contexts: &[i32], targets: &[u16]) -> Result<f32> {
+        let rows = targets.len();
+        let a = self.cfg.alphabet;
+        // Expert losses on this batch (before adaptation).
+        let lp = self.lstm.probs(contexts)?;
+        let p0 = self.order0_probs();
+        let mut loss_l = 0.0f64;
+        let mut loss_0 = 0.0f64;
+        for (r, &t) in targets.iter().enumerate() {
+            loss_l -= (lp[r * a + t as usize].max(1e-12) as f64).ln();
+            loss_0 -= (p0[t as usize].max(1e-12) as f64).ln();
+        }
+        loss_l /= rows as f64;
+        loss_0 /= rows as f64;
+        // Bayes/EG weight update with forgetting.
+        self.log_w[0] = FORGET * self.log_w[0] - loss_l;
+        self.log_w[1] = FORGET * self.log_w[1] - loss_0;
+        // Renormalize to keep magnitudes bounded.
+        let m = self.log_w[0].max(self.log_w[1]);
+        self.log_w[0] -= m;
+        self.log_w[1] -= m;
+        // Adapt both experts.
+        let lstm_loss = self.lstm.update(contexts, targets)?;
+        for &t in targets {
+            self.update_counts(t);
+        }
+        Ok(lstm_loss)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ac::{Cdf, Decoder, Encoder};
+    use crate::lstm::Backend;
+    use crate::util::rng::Pcg64;
+
+    fn cfg() -> LstmCfg {
+        LstmCfg { alphabet: 8, seq: 4, embed: 8, hidden: 8, batch: 16, ..Default::default() }
+    }
+
+    fn make() -> MixModel {
+        MixModel::new(Backend::Native.make(&cfg()).unwrap())
+    }
+
+    #[test]
+    fn probs_are_distributions() {
+        let mut m = make();
+        let ctx = vec![0i32; 16 * 4];
+        let p = m.probs(&ctx).unwrap();
+        for row in p.chunks(8) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "sum {s}");
+        }
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let mut a = make();
+        let mut b = make();
+        let mut rng = Pcg64::seed(3);
+        for _ in 0..5 {
+            let ctx: Vec<i32> = (0..16 * 4).map(|_| rng.below(8) as i32).collect();
+            let tgt: Vec<u16> = (0..16).map(|_| rng.below(8) as u16).collect();
+            assert_eq!(a.probs(&ctx).unwrap(), b.probs(&ctx).unwrap());
+            assert_eq!(a.update(&ctx, &tgt).unwrap(), b.update(&ctx, &tgt).unwrap());
+        }
+    }
+
+    #[test]
+    fn tracks_order0_on_skewed_random_stream() {
+        // Contexts carry no signal; symbols heavily skewed. The mixture
+        // must settle near the order-0 expert and code close to entropy.
+        let mut m = make();
+        let mut rng = Pcg64::seed(4);
+        let mut enc = Encoder::new();
+        let mut n = 0usize;
+        for _ in 0..120 {
+            let ctx: Vec<i32> = (0..16 * 4).map(|_| rng.below(8) as i32).collect();
+            let tgt: Vec<u16> =
+                (0..16).map(|_| if rng.f64() < 0.9 { 0 } else { rng.below(8) as u16 }).collect();
+            let probs = m.probs(&ctx).unwrap();
+            for (r, &t) in tgt.iter().enumerate() {
+                Cdf::from_probs(&probs[r * 8..(r + 1) * 8]).encode(&mut enc, t);
+                n += 1;
+            }
+            m.update(&ctx, &tgt).unwrap();
+        }
+        let bits = enc.finish().len() as f64 * 8.0 / n as f64;
+        // Entropy ≈ 0.9·log2(1/0.9) + ... ≈ 0.75 bits; allow transient.
+        assert!(bits < 1.25, "bits/sym {bits}");
+        // Order-0 expert should dominate the weights.
+        let (wl, w0) = m.weights();
+        assert!(w0 > wl, "w_lstm={wl} w_order0={w0}");
+    }
+
+    #[test]
+    fn mixture_roundtrip_through_coder() {
+        let mut rng = Pcg64::seed(5);
+        let pairs: Vec<(Vec<i32>, Vec<u16>)> = (0..20)
+            .map(|_| {
+                (
+                    (0..16 * 4).map(|_| rng.below(8) as i32).collect(),
+                    (0..16).map(|_| rng.below(8) as u16).collect(),
+                )
+            })
+            .collect();
+        let mut enc_m = make();
+        let mut enc = Encoder::new();
+        for (ctx, tgt) in &pairs {
+            let probs = enc_m.probs(ctx).unwrap();
+            for (r, &t) in tgt.iter().enumerate() {
+                Cdf::from_probs(&probs[r * 8..(r + 1) * 8]).encode(&mut enc, t);
+            }
+            enc_m.update(ctx, tgt).unwrap();
+        }
+        let buf = enc.finish();
+        let mut dec_m = make();
+        let mut dec = Decoder::new(&buf).unwrap();
+        for (ctx, tgt) in &pairs {
+            let probs = dec_m.probs(ctx).unwrap();
+            let mut got = Vec::new();
+            for r in 0..tgt.len() {
+                got.push(Cdf::from_probs(&probs[r * 8..(r + 1) * 8]).decode(&mut dec));
+            }
+            assert_eq!(&got, tgt);
+            dec_m.update(ctx, &got).unwrap();
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! The LSTM probability model driving the arithmetic coder (paper §III).
+//!
+//! For every weight to code, the quantized context sequence from the
+//! *previous* checkpoint ([`crate::context`]) is fed through an embedding →
+//! multi-layer LSTM → linear head → softmax, producing the symbol
+//! distribution the range coder uses. After each batch the model takes one
+//! Adam step on (contexts, observed symbols) — the online adaptation that
+//! both encoder and decoder replay so no parameters are ever transmitted.
+//!
+//! Two interchangeable backends implement [`ProbModel`]:
+//!
+//! - [`native::NativeLstm`] — pure-Rust forward/BPTT/Adam. Fast on small
+//!   configs, zero runtime dependencies, fully deterministic.
+//! - [`pjrt::PjrtLstm`] — executes the AOT-compiled JAX programs (Layer 2,
+//!   containing the Layer-1 Pallas cell) through [`crate::runtime`].
+//!
+//! The two backends use different parameter initializations and float
+//! orderings, so streams are **not** interchangeable between them; the
+//! container header records which backend (and config) wrote a stream, and
+//! the decoder instantiates the same one. Within one backend, encode and
+//! decode replay identical f32 operation sequences and therefore identical
+//! probabilities — this is what makes the adaptive scheme lossless.
+
+pub mod mix;
+pub mod native;
+pub mod pjrt;
+
+use crate::runtime::RuntimeHandle;
+use crate::{Error, Result};
+
+/// Probability-model hyperparameters (mirror of python `LstmConfig`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LstmCfg {
+    pub alphabet: usize,
+    pub seq: usize,
+    pub embed: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub batch: usize,
+    pub lr: f32,
+    pub b1: f32,
+    pub b2: f32,
+    pub eps: f32,
+    /// Parameter-init seed (both sides must agree; stored in containers).
+    pub seed: u64,
+}
+
+impl Default for LstmCfg {
+    /// Default experiment config: 4-bit alphabet, 3×3 context, h64
+    /// (the paper's §IV optimizer hyperparameters).
+    fn default() -> Self {
+        Self {
+            alphabet: 16,
+            seq: 9,
+            embed: 64,
+            hidden: 64,
+            layers: 2,
+            batch: 256,
+            lr: 1e-3,
+            b1: 0.0,
+            b2: 0.9999,
+            eps: 1e-5,
+            seed: 0,
+        }
+    }
+}
+
+impl LstmCfg {
+    /// Paper §IV configuration: hidden 512 × 2 layers, embed 512, batch 256.
+    pub fn paper() -> Self {
+        Self { embed: 512, hidden: 512, ..Self::default() }
+    }
+
+    /// Tiny configuration used by unit tests.
+    pub fn tiny() -> Self {
+        Self { embed: 16, hidden: 16, batch: 32, ..Self::default() }
+    }
+
+    /// AOT program name prefix for this config
+    /// (`lstm_a{A}_s{S}_h{H}_b{B}`; must exist in the manifest).
+    pub fn program_prefix(&self) -> String {
+        format!("lstm_a{}_s{}_h{}_b{}", self.alphabet, self.seq, self.hidden, self.batch)
+    }
+
+    /// Validate field ranges.
+    pub fn validate(&self) -> Result<()> {
+        if self.alphabet < 2 || self.alphabet > 4096 {
+            return Err(Error::config("alphabet out of range"));
+        }
+        if self.seq == 0 || self.layers == 0 || self.hidden == 0 || self.batch == 0 {
+            return Err(Error::config("zero-sized lstm dimension"));
+        }
+        Ok(())
+    }
+}
+
+/// A batched, adaptively trained symbol-probability model.
+///
+/// Contract shared by encoder and decoder:
+/// - `probs(contexts)` — `contexts` is `batch × seq` i32 symbols (row-major);
+///   returns `batch × alphabet` probabilities. Must not mutate state.
+/// - `update(contexts, targets)` — one optimizer step on the observed batch;
+///   returns the training loss. Called after each coded batch.
+///
+/// Implementations must be deterministic: the same construction parameters
+/// and call sequence must yield bit-identical probabilities.
+pub trait ProbModel: Send {
+    /// The model configuration.
+    fn cfg(&self) -> &LstmCfg;
+    /// Predict symbol distributions for a batch of context sequences.
+    fn probs(&mut self, contexts: &[i32]) -> Result<Vec<f32>>;
+    /// Adapt on the observed batch; returns the cross-entropy loss.
+    fn update(&mut self, contexts: &[i32], targets: &[u16]) -> Result<f32>;
+}
+
+/// Which [`ProbModel`] implementation to use. Recorded (as `id()`) in the
+/// container header so decode reconstructs the same one.
+#[derive(Clone)]
+pub enum Backend {
+    /// Pure-Rust LSTM.
+    Native,
+    /// AOT JAX/Pallas LSTM through the PJRT runtime thread.
+    Pjrt(RuntimeHandle),
+}
+
+impl Backend {
+    /// Stable identifier stored in containers.
+    pub fn id(&self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Pjrt(_) => "pjrt",
+        }
+    }
+
+    /// Instantiate a fresh model in its initial state.
+    pub fn make(&self, cfg: &LstmCfg) -> Result<Box<dyn ProbModel>> {
+        cfg.validate()?;
+        match self {
+            Backend::Native => Ok(Box::new(native::NativeLstm::new(cfg.clone()))),
+            Backend::Pjrt(h) => Ok(Box::new(pjrt::PjrtLstm::new(h.clone(), cfg.clone())?)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cfg_program_prefix() {
+        assert_eq!(LstmCfg::default().program_prefix(), "lstm_a16_s9_h64_b256");
+        assert_eq!(LstmCfg::tiny().program_prefix(), "lstm_a16_s9_h16_b32");
+    }
+
+    #[test]
+    fn cfg_validation() {
+        assert!(LstmCfg::default().validate().is_ok());
+        assert!(LstmCfg { alphabet: 1, ..Default::default() }.validate().is_err());
+        assert!(LstmCfg { seq: 0, ..Default::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn backend_ids() {
+        assert_eq!(Backend::Native.id(), "native");
+    }
+}

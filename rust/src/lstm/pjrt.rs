@@ -1,0 +1,196 @@
+//! PJRT-backed probability model: executes the AOT JAX/Pallas programs.
+//!
+//! Uses the `lstm_*_init` / `lstm_*_probs` / `lstm_*_train` programs from
+//! the artifact manifest (see `python/compile/aot.py`). Parameters and
+//! Adam state live as [`HostTensor`]s and round-trip through the runtime
+//! thread on every call; the AOT batch size is fixed, so smaller batches
+//! are zero-padded and the padding rows' outputs discarded (padding also
+//! enters `update`, with padded targets fixed to symbol 0 — both encoder
+//! and decoder do this identically, preserving determinism).
+
+use super::{LstmCfg, ProbModel};
+use crate::runtime::{HostTensor, RuntimeHandle};
+use crate::{Error, Result};
+
+/// JAX/Pallas LSTM over the PJRT runtime thread.
+pub struct PjrtLstm {
+    cfg: LstmCfg,
+    rt: RuntimeHandle,
+    probs_prog: String,
+    train_prog: String,
+    /// Flat params, then Adam m and v (same order as the manifest spec).
+    params: Vec<HostTensor>,
+    m: Vec<HostTensor>,
+    v: Vec<HostTensor>,
+    step: f32,
+}
+
+impl PjrtLstm {
+    /// Instantiate via the config's `lstm_*_init` program.
+    pub fn new(rt: RuntimeHandle, cfg: LstmCfg) -> Result<Self> {
+        let prefix = cfg.program_prefix();
+        let init_prog = format!("{prefix}_init");
+        let params = rt.run(&init_prog, vec![HostTensor::scalar_i32(cfg.seed as i32)])?;
+        let m: Vec<HostTensor> = params.iter().map(HostTensor::zeros_like).collect();
+        let v = m.clone();
+        Ok(Self {
+            cfg,
+            rt,
+            probs_prog: format!("{prefix}_probs"),
+            train_prog: format!("{prefix}_train"),
+            params,
+            m,
+            v,
+            step: 0.0,
+        })
+    }
+
+    /// Pad a `rows × seq` context buffer up to the AOT batch size.
+    fn pad_contexts(&self, contexts: &[i32], rows: usize) -> Vec<i32> {
+        let want = self.cfg.batch * self.cfg.seq;
+        let mut out = Vec::with_capacity(want);
+        out.extend_from_slice(contexts);
+        out.resize(want, 0);
+        debug_assert!(rows <= self.cfg.batch);
+        out
+    }
+}
+
+impl ProbModel for PjrtLstm {
+    fn cfg(&self) -> &LstmCfg {
+        &self.cfg
+    }
+
+    fn probs(&mut self, contexts: &[i32]) -> Result<Vec<f32>> {
+        let seq = self.cfg.seq;
+        if contexts.is_empty() || contexts.len() % seq != 0 {
+            return Err(Error::shape("context buffer not a multiple of seq"));
+        }
+        let rows = contexts.len() / seq;
+        if rows > self.cfg.batch {
+            return Err(Error::shape(format!(
+                "batch {rows} exceeds AOT batch {}",
+                self.cfg.batch
+            )));
+        }
+        let padded = self.pad_contexts(contexts, rows);
+        let tokens = HostTensor::i32(vec![self.cfg.batch, seq], padded)?;
+        let mut args = self.params.clone();
+        args.push(tokens);
+        let out = self.rt.run(&self.probs_prog, args)?;
+        let all = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| Error::Xla("probs program returned nothing".into()))?
+            .into_f32s()?;
+        Ok(all[..rows * self.cfg.alphabet].to_vec())
+    }
+
+    fn update(&mut self, contexts: &[i32], targets: &[u16]) -> Result<f32> {
+        let seq = self.cfg.seq;
+        if contexts.is_empty() || contexts.len() % seq != 0 {
+            return Err(Error::shape("context buffer not a multiple of seq"));
+        }
+        let rows = contexts.len() / seq;
+        if targets.len() != rows {
+            return Err(Error::shape("targets length != batch rows"));
+        }
+        let padded = self.pad_contexts(contexts, rows);
+        let mut tgt: Vec<i32> = targets.iter().map(|&t| t as i32).collect();
+        tgt.resize(self.cfg.batch, 0);
+
+        self.step += 1.0;
+        let n = self.params.len();
+        let mut args = Vec::with_capacity(3 * n + 3);
+        args.extend(self.params.iter().cloned());
+        args.extend(self.m.iter().cloned());
+        args.extend(self.v.iter().cloned());
+        args.push(HostTensor::scalar_f32(self.step));
+        args.push(HostTensor::i32(vec![self.cfg.batch, seq], padded)?);
+        args.push(HostTensor::i32(vec![self.cfg.batch], tgt)?);
+        let mut out = self.rt.run(&self.train_prog, args)?;
+        if out.len() != 3 * n + 1 {
+            return Err(Error::Xla(format!(
+                "train program returned {} outputs, want {}",
+                out.len(),
+                3 * n + 1
+            )));
+        }
+        let loss = out.pop().unwrap().f32s()?[0];
+        self.v = out.split_off(2 * n);
+        self.m = out.split_off(n);
+        self.params = out;
+        Ok(loss)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn handle() -> Option<RuntimeHandle> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(RuntimeHandle::spawn(dir).unwrap())
+    }
+
+    #[test]
+    fn probs_and_update_roundtrip() {
+        let Some(rt) = handle() else { return };
+        let cfg = LstmCfg::tiny();
+        let mut model = PjrtLstm::new(rt, cfg.clone()).unwrap();
+        let ctx: Vec<i32> = (0..cfg.batch * cfg.seq).map(|i| (i % 16) as i32).collect();
+        let probs = model.probs(&ctx).unwrap();
+        assert_eq!(probs.len(), cfg.batch * cfg.alphabet);
+        for row in probs.chunks(cfg.alphabet) {
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+        }
+        let targets = vec![3u16; cfg.batch];
+        let l1 = model.update(&ctx, &targets).unwrap();
+        let mut l_last = l1;
+        for _ in 0..10 {
+            l_last = model.update(&ctx, &targets).unwrap();
+        }
+        assert!(l_last < l1, "loss did not drop: {l1} → {l_last}");
+    }
+
+    #[test]
+    fn partial_batch_padding() {
+        let Some(rt) = handle() else { return };
+        let cfg = LstmCfg::tiny();
+        let mut model = PjrtLstm::new(rt, cfg.clone()).unwrap();
+        // 5 rows out of 32.
+        let ctx = vec![1i32; 5 * cfg.seq];
+        let probs = model.probs(&ctx).unwrap();
+        assert_eq!(probs.len(), 5 * cfg.alphabet);
+        let loss = model.update(&ctx, &[0, 1, 2, 3, 4]).unwrap();
+        assert!(loss.is_finite());
+        // Oversized batch rejected.
+        let big = vec![0i32; (cfg.batch + 1) * cfg.seq];
+        assert!(model.probs(&big).is_err());
+    }
+
+    #[test]
+    fn deterministic_replay_across_instances() {
+        // The decode-side contract: a fresh model replaying the same call
+        // sequence produces identical probabilities.
+        let Some(rt) = handle() else { return };
+        let cfg = LstmCfg::tiny();
+        let mut a = PjrtLstm::new(rt.clone(), cfg.clone()).unwrap();
+        let mut b = PjrtLstm::new(rt, cfg.clone()).unwrap();
+        let ctx: Vec<i32> = (0..cfg.batch * cfg.seq).map(|i| ((i * 7) % 16) as i32).collect();
+        let tgt: Vec<u16> = (0..cfg.batch).map(|i| (i % 16) as u16).collect();
+        for _ in 0..3 {
+            let pa = a.probs(&ctx).unwrap();
+            let pb = b.probs(&ctx).unwrap();
+            assert_eq!(pa, pb);
+            let la = a.update(&ctx, &tgt).unwrap();
+            let lb = b.update(&ctx, &tgt).unwrap();
+            assert_eq!(la, lb);
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! cpcm CLI entrypoint.
+fn main() {
+    if let Err(e) = cpcm::cli::run(std::env::args().skip(1).collect()) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

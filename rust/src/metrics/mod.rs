@@ -1,0 +1,148 @@
+//! Lightweight metrics registry for the coordinator and CLI.
+//!
+//! Counters are lock-free atomics; gauges/timings go through a mutex (off
+//! the hot path). Snapshots serialize to JSON for logs and reports.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Shared metrics sink.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, &'static AtomicU64>>,
+    gauges: Mutex<BTreeMap<String, f64>>,
+    timings: Mutex<BTreeMap<String, TimingAgg>>,
+}
+
+#[derive(Clone, Copy, Default, Debug)]
+struct TimingAgg {
+    count: u64,
+    total_s: f64,
+    max_s: f64,
+}
+
+impl Metrics {
+    /// New empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Increment a named counter by `n`.
+    pub fn count(&self, name: &str, n: u64) {
+        let mut map = self.counters.lock().unwrap();
+        let cell = map.entry(name.to_string()).or_insert_with(|| {
+            // Counters live for the process lifetime; leak one atomic each.
+            Box::leak(Box::new(AtomicU64::new(0)))
+        });
+        cell.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Read a counter.
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Set a gauge to an absolute value.
+    pub fn gauge(&self, name: &str, value: f64) {
+        self.gauges.lock().unwrap().insert(name.to_string(), value);
+    }
+
+    /// Record one timed operation.
+    pub fn time(&self, name: &str, seconds: f64) {
+        let mut map = self.timings.lock().unwrap();
+        let agg = map.entry(name.to_string()).or_default();
+        agg.count += 1;
+        agg.total_s += seconds;
+        agg.max_s = agg.max_s.max(seconds);
+    }
+
+    /// Time a closure and record it.
+    pub fn timed<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.time(name, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Snapshot everything as JSON.
+    pub fn snapshot(&self) -> Json {
+        let mut counters = BTreeMap::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            counters.insert(k.clone(), Json::num(v.load(Ordering::Relaxed) as f64));
+        }
+        let mut gauges = BTreeMap::new();
+        for (k, v) in self.gauges.lock().unwrap().iter() {
+            gauges.insert(k.clone(), Json::num(*v));
+        }
+        let mut timings = BTreeMap::new();
+        for (k, t) in self.timings.lock().unwrap().iter() {
+            timings.insert(
+                k.clone(),
+                Json::obj(vec![
+                    ("count", Json::num(t.count as f64)),
+                    ("total_s", Json::num(t.total_s)),
+                    ("mean_s", Json::num(if t.count > 0 { t.total_s / t.count as f64 } else { 0.0 })),
+                    ("max_s", Json::num(t.max_s)),
+                ]),
+            );
+        }
+        Json::Obj(
+            [
+                ("counters".to_string(), Json::Obj(counters)),
+                ("gauges".to_string(), Json::Obj(gauges)),
+                ("timings".to_string(), Json::Obj(timings)),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn counters_accumulate_across_threads() {
+        let m = Arc::new(Metrics::new());
+        let mut joins = Vec::new();
+        for _ in 0..8 {
+            let m = m.clone();
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    m.count("jobs", 1);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(m.counter("jobs"), 8000);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn gauges_and_timings() {
+        let m = Metrics::new();
+        m.gauge("ratio", 42.5);
+        m.time("encode", 0.5);
+        m.time("encode", 1.5);
+        let out = m.timed("t", || 7);
+        assert_eq!(out, 7);
+        let snap = m.snapshot();
+        assert_eq!(snap.get("gauges").unwrap().get("ratio").unwrap().as_f64(), Some(42.5));
+        let enc = snap.get("timings").unwrap().get("encode").unwrap();
+        assert_eq!(enc.get("count").unwrap().as_f64(), Some(2.0));
+        assert_eq!(enc.get("mean_s").unwrap().as_f64(), Some(1.0));
+        assert_eq!(enc.get("max_s").unwrap().as_f64(), Some(1.5));
+    }
+}

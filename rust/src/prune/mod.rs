@@ -1,0 +1,236 @@
+//! ExCP joint weight/momentum pruning — paper Eq. 4 and Eq. 5 (§II).
+//!
+//! Weight residuals are pruned with a per-element threshold driven by the
+//! second Adam moment (paper `m_t`):
+//!
+//! `r_w(i) = α · median(|W|) / sqrt(m_t(i))`,  keep iff `|Δw(i)| > r_w(i)`
+//!
+//! — elements whose historical gradient magnitude is large (large `m_t`)
+//! get a *lower* threshold and are kept more often. Momentum entries are
+//! pruned with a global threshold on the first moment (paper `v_t`) AND the
+//! weight mask:
+//!
+//! `r_o = β · mean(|v_t|)`,  keep iff `|v_t(i)| > r_o` and kept(i)
+//!
+//! Pruned positions are set to exactly 0.0; the k-means quantizer then maps
+//! them to the reserved zero symbol, so no separate mask is stored.
+
+use crate::delta::Residual;
+use crate::util::stats;
+
+/// Pruning hyperparameters (paper α, β). Defaults follow ExCP.
+#[derive(Clone, Copy, Debug)]
+pub struct PruneConfig {
+    /// Weight-residual threshold scale α of Eq. 4.
+    pub alpha: f64,
+    /// Momentum threshold scale β of Eq. 5.
+    pub beta: f64,
+    /// Numerical floor added under the sqrt to avoid dividing by zero for
+    /// never-updated parameters.
+    pub eps: f64,
+    /// Disable pruning entirely (ablation switch).
+    pub enabled: bool,
+}
+
+impl Default for PruneConfig {
+    fn default() -> Self {
+        Self { alpha: 5e-5, beta: 2.0, eps: 1e-12, enabled: true }
+    }
+}
+
+/// Per-tensor pruning outcome counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PruneStats {
+    pub total: usize,
+    pub kept_weights: usize,
+    pub kept_momentum: usize,
+}
+
+impl PruneStats {
+    /// Fraction of weight residuals surviving.
+    pub fn weight_density(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.kept_weights as f64 / self.total as f64
+        }
+    }
+    /// Fraction of momentum entries surviving.
+    pub fn momentum_density(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.kept_momentum as f64 / self.total as f64
+        }
+    }
+
+    fn merge(&mut self, other: PruneStats) {
+        self.total += other.total;
+        self.kept_weights += other.kept_weights;
+        self.kept_momentum += other.kept_momentum;
+    }
+}
+
+/// Compute the Eq.-4 weight mask for one tensor.
+///
+/// `dw` is the weight residual, `w` the *current* weights (for `median(|W|)`),
+/// `exp_avg_sq` the second moment (paper `m_t`).
+pub fn weight_mask(dw: &[f32], w: &[f32], exp_avg_sq: &[f32], cfg: &PruneConfig) -> Vec<bool> {
+    let med = stats::median_abs(w);
+    dw.iter()
+        .zip(exp_avg_sq)
+        .map(|(&d, &m)| {
+            let r_w = cfg.alpha * med / (m.max(0.0) as f64 + cfg.eps).sqrt();
+            (d as f64).abs() > r_w
+        })
+        .collect()
+}
+
+/// Compute the Eq.-5 momentum mask for one tensor.
+///
+/// `exp_avg` is the first moment (paper `v_t`); `wmask` the Eq.-4 mask.
+pub fn momentum_mask(exp_avg: &[f32], wmask: &[bool], cfg: &PruneConfig) -> Vec<bool> {
+    let r_o = cfg.beta * stats::mean_abs(exp_avg);
+    exp_avg
+        .iter()
+        .zip(wmask)
+        .map(|(&v, &kw)| kw && (v as f64).abs() > r_o)
+        .collect()
+}
+
+/// Prune a whole residual in place (weights by Eq. 4, both moments by
+/// Eq. 5), returning aggregate stats.
+pub fn prune_residual(res: &mut Residual, weights_now: &crate::tensor::TensorSet, cfg: &PruneConfig) -> PruneStats {
+    let mut agg = PruneStats::default();
+    if !cfg.enabled {
+        for e in res.dw.iter() {
+            agg.total += e.tensor.len();
+        }
+        agg.kept_weights = agg.total;
+        agg.kept_momentum = agg.total;
+        return agg;
+    }
+    // Collect per-tensor masks first (immutable pass), then apply.
+    let mut masks: Vec<(Vec<bool>, Vec<bool>)> = Vec::with_capacity(res.dw.len());
+    for ((d, w), (m1, m2)) in res
+        .dw
+        .iter()
+        .zip(weights_now.iter())
+        .zip(res.exp_avg.iter().zip(res.exp_avg_sq.iter()))
+    {
+        debug_assert_eq!(d.name, w.name);
+        debug_assert_eq!(d.name, m1.name);
+        let wm = weight_mask(d.tensor.data(), w.tensor.data(), m2.tensor.data(), cfg);
+        let om = momentum_mask(m1.tensor.data(), &wm, cfg);
+        let mut st = PruneStats { total: d.tensor.len(), ..Default::default() };
+        st.kept_weights = wm.iter().filter(|&&b| b).count();
+        st.kept_momentum = om.iter().filter(|&&b| b).count();
+        agg.merge(st);
+        masks.push((wm, om));
+    }
+    for (i, e) in res.dw.iter_mut().enumerate() {
+        apply_mask(e.tensor.data_mut(), &masks[i].0);
+    }
+    for (i, e) in res.exp_avg.iter_mut().enumerate() {
+        apply_mask(e.tensor.data_mut(), &masks[i].1);
+    }
+    for (i, e) in res.exp_avg_sq.iter_mut().enumerate() {
+        apply_mask(e.tensor.data_mut(), &masks[i].1);
+    }
+    agg
+}
+
+fn apply_mask(xs: &mut [f32], mask: &[bool]) {
+    for (x, &keep) in xs.iter_mut().zip(mask) {
+        if !keep {
+            *x = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::Checkpoint;
+    use crate::delta;
+
+    #[test]
+    fn weight_mask_keeps_large_residuals() {
+        // Uniform second moment → uniform threshold; only big |dw| survive.
+        let dw = [0.0f32, 1e-6, 0.5, -0.4, 1e-9];
+        let w = [0.1f32, -0.2, 0.3, 0.1, 0.2];
+        let m2 = [1e-4f32; 5];
+        let cfg = PruneConfig::default();
+        let mask = weight_mask(&dw, &w, &m2, &cfg);
+        assert!(!mask[0]);
+        assert!(mask[2]);
+        assert!(mask[3]);
+        assert!(!mask[4]);
+    }
+
+    #[test]
+    fn high_second_moment_lowers_threshold() {
+        // Same residual, different m_t: the high-m_t element is kept.
+        // alpha=1e-5, med=0.5: r_w = 5e-6/sqrt(m). m=1e-2 → 5e-5 < 1e-4
+        // (kept); m=1e-12 → 5.0 > 1e-4 (pruned).
+        let dw = [1e-4f32, 1e-4];
+        let w = [0.5f32, 0.5];
+        let m2 = [1e-2f32, 1e-12];
+        let cfg = PruneConfig { alpha: 1e-5, ..Default::default() };
+        let mask = weight_mask(&dw, &w, &m2, &cfg);
+        assert!(mask[0], "high m_t should be kept");
+        assert!(!mask[1], "low m_t should be pruned");
+    }
+
+    #[test]
+    fn momentum_mask_requires_weight_mask() {
+        let v = [10.0f32, 10.0, 0.0, 10.0];
+        let wmask = [true, false, true, true];
+        let cfg = PruneConfig { beta: 0.1, ..Default::default() };
+        let mask = momentum_mask(&v, &wmask, &cfg);
+        assert_eq!(mask, vec![true, false, false, true]);
+    }
+
+    #[test]
+    fn prune_residual_zeroes_and_counts() {
+        let c0 = Checkpoint::synthetic(1000, &[("w", vec![64, 64])], 1);
+        let c1 = Checkpoint::synthetic(2000, &[("w", vec![64, 64])], 2);
+        let mut r = delta::diff(&c1, &c0).unwrap();
+        let cfg = PruneConfig::default();
+        let stats = prune_residual(&mut r, &c1.weights, &cfg);
+        assert_eq!(stats.total, 64 * 64);
+        assert!(stats.kept_weights < stats.total);
+        assert!(stats.kept_momentum <= stats.kept_weights);
+        // Pruned weight positions must be exactly zero.
+        let zeros = r.dw.get("w").unwrap().data().iter().filter(|&&x| x == 0.0).count();
+        assert_eq!(zeros, stats.total - stats.kept_weights);
+        // Both moments share the momentum mask.
+        let z1 = r.exp_avg.get("w").unwrap().data().iter().filter(|&&x| x == 0.0).count();
+        let z2 = r.exp_avg_sq.get("w").unwrap().data().iter().filter(|&&x| x == 0.0).count();
+        assert!(z1 >= stats.total - stats.kept_momentum);
+        assert!(z2 >= stats.total - stats.kept_momentum);
+    }
+
+    #[test]
+    fn disabled_prune_keeps_everything() {
+        let c0 = Checkpoint::synthetic(1, &[("w", vec![32])], 3);
+        let c1 = Checkpoint::synthetic(2, &[("w", vec![32])], 4);
+        let mut r = delta::diff(&c1, &c0).unwrap();
+        let before = r.dw.get("w").unwrap().clone();
+        let cfg = PruneConfig { enabled: false, ..Default::default() };
+        let stats = prune_residual(&mut r, &c1.weights, &cfg);
+        assert_eq!(stats.kept_weights, 32);
+        assert_eq!(r.dw.get("w").unwrap(), &before);
+    }
+
+    #[test]
+    fn alpha_zero_keeps_all_nonzero_residuals() {
+        let c0 = Checkpoint::synthetic(1, &[("w", vec![128])], 5);
+        let c1 = Checkpoint::synthetic(2, &[("w", vec![128])], 6);
+        let mut r = delta::diff(&c1, &c0).unwrap();
+        let nonzero = r.dw.get("w").unwrap().data().iter().filter(|&&x| x != 0.0).count();
+        let cfg = PruneConfig { alpha: 0.0, ..Default::default() };
+        let stats = prune_residual(&mut r, &c1.weights, &cfg);
+        assert_eq!(stats.kept_weights, nonzero);
+    }
+}

@@ -1,0 +1,368 @@
+//! Non-uniform quantization — paper §II, last paragraph.
+//!
+//! "The pruned values are set to zero, and the remaining parameters are
+//! clustered using the k-means algorithm to `2^n − 1` cluster centers.
+//! These clusters are stored as indices and centers."
+//!
+//! Symbol 0 is reserved for exact zero (pruned positions); symbols
+//! `1 ..= 2^n − 1` index the k-means centers, which are kept sorted
+//! ascending so that symbol magnitude correlates with value magnitude —
+//! this gives the LSTM context model a meaningful ordinal alphabet.
+//!
+//! The quantizer is deterministic: k-means++ seeding uses a fixed-seed
+//! [`Pcg64`] stream, and fitting subsamples deterministically when the
+//! input exceeds `sample_cap`.
+
+use crate::util::bitio;
+use crate::util::rng::Pcg64;
+use crate::{Error, Result};
+
+/// Quantizer configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct QuantConfig {
+    /// Bits per symbol `n`; alphabet is `2^n` (zero + `2^n − 1` centers).
+    pub bits: u8,
+    /// Lloyd iterations after k-means++ seeding.
+    pub iters: usize,
+    /// Max values used to *fit* centers (assignment always covers all).
+    pub sample_cap: usize,
+    /// PRNG seed for k-means++ (fixed ⇒ reproducible artifacts).
+    pub seed: u64,
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        Self { bits: 4, iters: 12, sample_cap: 1 << 16, seed: 0x5eed }
+    }
+}
+
+impl QuantConfig {
+    /// Alphabet size `2^n`.
+    pub fn alphabet(&self) -> usize {
+        1usize << self.bits
+    }
+    /// Number of k-means centers `2^n − 1`.
+    pub fn centers(&self) -> usize {
+        self.alphabet() - 1
+    }
+}
+
+/// Quantization result for one tensor: per-element symbols plus the center
+/// table. `symbols[i] == 0` ⇔ the element is exactly zero.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Quantized {
+    pub symbols: Vec<u16>,
+    /// Sorted ascending; `centers[s-1]` is the value of symbol `s`.
+    pub centers: Vec<f32>,
+}
+
+impl Quantized {
+    /// Reconstruct values (the lossy inverse).
+    pub fn dequantize(&self) -> Vec<f32> {
+        self.symbols
+            .iter()
+            .map(|&s| if s == 0 { 0.0 } else { self.centers[s as usize - 1] })
+            .collect()
+    }
+
+    /// Pack symbols at `bits` per symbol (paper: "multiple lower-precision
+    /// numbers … combined into a single higher-precision number").
+    pub fn pack(&self, bits: u8) -> Vec<u8> {
+        bitio::pack_symbols(&self.symbols, bits)
+    }
+}
+
+/// Unpack symbols previously packed with [`Quantized::pack`].
+pub fn unpack(buf: &[u8], bits: u8, count: usize) -> Result<Vec<u16>> {
+    bitio::unpack_symbols(buf, bits, count)
+}
+
+/// Quantize `values` under `cfg`. Zeros map to symbol 0; non-zeros are
+/// k-means-clustered to `2^n − 1` centers.
+pub fn quantize(values: &[f32], cfg: &QuantConfig) -> Result<Quantized> {
+    if cfg.bits == 0 || cfg.bits > 12 {
+        return Err(Error::config(format!("quant bits {} out of range 1..=12", cfg.bits)));
+    }
+    let nonzero: Vec<f32> = values.iter().copied().filter(|&x| x != 0.0).collect();
+    let centers = fit_centers(&nonzero, cfg);
+    let symbols = assign(values, &centers);
+    Ok(Quantized { symbols, centers })
+}
+
+/// Fit `2^n − 1` sorted centers to the nonzero values.
+fn fit_centers(nonzero: &[f32], cfg: &QuantConfig) -> Vec<f32> {
+    let k = cfg.centers();
+    if nonzero.is_empty() {
+        return Vec::new();
+    }
+    // Deterministic subsample for fitting.
+    let sample: Vec<f32> = if nonzero.len() > cfg.sample_cap {
+        let stride = nonzero.len() as f64 / cfg.sample_cap as f64;
+        (0..cfg.sample_cap).map(|i| nonzero[(i as f64 * stride) as usize]).collect()
+    } else {
+        nonzero.to_vec()
+    };
+
+    // Fewer distinct values than centers → exact representation.
+    let mut distinct = sample.clone();
+    distinct.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    distinct.dedup();
+    if distinct.len() <= k {
+        return distinct;
+    }
+
+    let mut centers = kmeans_pp_seed(&sample, k, cfg.seed);
+    lloyd(&sample, &mut centers, cfg.iters);
+    centers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    centers.dedup();
+    centers
+}
+
+/// k-means++ seeding (deterministic PRNG).
+fn kmeans_pp_seed(xs: &[f32], k: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed, xs.len() as u64);
+    let mut centers = Vec::with_capacity(k);
+    centers.push(xs[rng.below_usize(xs.len())]);
+    let mut d2: Vec<f64> = xs.iter().map(|&x| dist2(x, centers[0])).collect();
+    while centers.len() < k {
+        let total: f64 = d2.iter().sum();
+        let next = if total <= 0.0 {
+            // All points coincide with a center; any point works.
+            xs[rng.below_usize(xs.len())]
+        } else {
+            let mut t = rng.f64() * total;
+            let mut idx = xs.len() - 1;
+            for (i, &d) in d2.iter().enumerate() {
+                t -= d;
+                if t < 0.0 {
+                    idx = i;
+                    break;
+                }
+            }
+            xs[idx]
+        };
+        centers.push(next);
+        for (i, &x) in xs.iter().enumerate() {
+            let d = dist2(x, next);
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+    }
+    centers
+}
+
+#[inline]
+fn dist2(a: f32, b: f32) -> f64 {
+    let d = a as f64 - b as f64;
+    d * d
+}
+
+/// Lloyd iterations specialized for 1-D: sort centers, assign by midpoint
+/// binary search, recompute means. Empty clusters are respawned at the
+/// point farthest from its center.
+fn lloyd(xs: &[f32], centers: &mut Vec<f32>, iters: usize) {
+    for _ in 0..iters {
+        centers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mids = midpoints(centers);
+        let mut sums = vec![0.0f64; centers.len()];
+        let mut counts = vec![0usize; centers.len()];
+        let mut far: Vec<(f64, f32)> = vec![(-1.0, 0.0); centers.len()];
+        for &x in xs {
+            let c = mids.partition_point(|&m| m < x);
+            sums[c] += x as f64;
+            counts[c] += 1;
+            let d = dist2(x, centers[c]);
+            if d > far[c].0 {
+                far[c] = (d, x);
+            }
+        }
+        // Respawn empties at the globally farthest point.
+        let global_far = far
+            .iter()
+            .cloned()
+            .max_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+            .unwrap_or((0.0, 0.0))
+            .1;
+        let mut moved = false;
+        for i in 0..centers.len() {
+            if counts[i] > 0 {
+                let new = (sums[i] / counts[i] as f64) as f32;
+                if new != centers[i] {
+                    moved = true;
+                }
+                centers[i] = new;
+            } else {
+                centers[i] = global_far;
+                moved = true;
+            }
+        }
+        if !moved {
+            break;
+        }
+    }
+    centers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+fn midpoints(sorted_centers: &[f32]) -> Vec<f32> {
+    sorted_centers.windows(2).map(|w| (w[0] + w[1]) / 2.0).collect()
+}
+
+/// Assign every value to a symbol: 0 for exact zero, otherwise the nearest
+/// center's index + 1 (binary search over midpoints — O(log k) each).
+pub fn assign(values: &[f32], centers: &[f32]) -> Vec<u16> {
+    if centers.is_empty() {
+        return vec![0; values.len()];
+    }
+    let mids = midpoints(centers);
+    values
+        .iter()
+        .map(|&x| {
+            if x == 0.0 {
+                0
+            } else {
+                (mids.partition_point(|&m| m < x) + 1) as u16
+            }
+        })
+        .collect()
+}
+
+/// Mean squared quantization error (diagnostics / ablations).
+pub fn mse(values: &[f32], q: &Quantized) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let deq = q.dequantize();
+    values
+        .iter()
+        .zip(&deq)
+        .map(|(&a, &b)| dist2(a, b))
+        .sum::<f64>()
+        / values.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn zeros_map_to_symbol_zero() {
+        let vals = [0.0f32, 1.0, 0.0, -1.0, 0.0];
+        let q = quantize(&vals, &QuantConfig::default()).unwrap();
+        assert_eq!(q.symbols[0], 0);
+        assert_eq!(q.symbols[2], 0);
+        assert_eq!(q.symbols[4], 0);
+        assert_ne!(q.symbols[1], 0);
+        assert_ne!(q.symbols[3], 0);
+    }
+
+    #[test]
+    fn few_distinct_values_are_exact() {
+        let vals = [0.5f32, -0.25, 0.5, 0.75, -0.25, 0.0];
+        let q = quantize(&vals, &QuantConfig { bits: 2, ..Default::default() }).unwrap();
+        // 3 distinct non-zeros fit exactly into 2^2−1 = 3 centers.
+        assert_eq!(q.dequantize(), vals.to_vec());
+    }
+
+    #[test]
+    fn centers_sorted_ascending() {
+        let mut g = Pcg64::seed(5);
+        let vals: Vec<f32> = (0..5000).map(|_| g.normal_f32()).collect();
+        let q = quantize(&vals, &QuantConfig::default()).unwrap();
+        for w in q.centers.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn more_bits_reduce_mse() {
+        let mut g = Pcg64::seed(6);
+        let vals: Vec<f32> = (0..8000).map(|_| g.normal_f32() * 0.01).collect();
+        let q2 = quantize(&vals, &QuantConfig { bits: 2, ..Default::default() }).unwrap();
+        let q4 = quantize(&vals, &QuantConfig { bits: 4, ..Default::default() }).unwrap();
+        let q6 = quantize(&vals, &QuantConfig { bits: 6, ..Default::default() }).unwrap();
+        let (e2, e4, e6) = (mse(&vals, &q2), mse(&vals, &q4), mse(&vals, &q6));
+        assert!(e4 < e2, "e4={e4} e2={e2}");
+        assert!(e6 < e4, "e6={e6} e4={e4}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut g = Pcg64::seed(7);
+        let vals: Vec<f32> = (0..4000).map(|_| g.normal_f32()).collect();
+        let a = quantize(&vals, &QuantConfig::default()).unwrap();
+        let b = quantize(&vals, &QuantConfig::default()).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut g = Pcg64::seed(8);
+        let vals: Vec<f32> =
+            (0..1000).map(|_| if g.f64() < 0.8 { 0.0 } else { g.normal_f32() }).collect();
+        let cfg = QuantConfig { bits: 4, ..Default::default() };
+        let q = quantize(&vals, &cfg).unwrap();
+        let packed = q.pack(cfg.bits);
+        assert_eq!(packed.len(), vals.len().div_ceil(2));
+        let syms = unpack(&packed, cfg.bits, vals.len()).unwrap();
+        assert_eq!(syms, q.symbols);
+    }
+
+    #[test]
+    fn symbols_within_alphabet() {
+        forall("quant alphabet bound", 20, |g| {
+            let n = g.size(3000).max(1);
+            let sparsity = g.rng().f64();
+            let vals = g.sparse_residuals(n, sparsity, 0.05);
+            let bits = *g.choose(&[2u8, 3, 4, 5]);
+            let cfg = QuantConfig { bits, ..Default::default() };
+            let q = quantize(&vals, &cfg).unwrap();
+            let alphabet = 1u16 << bits;
+            for (&v, &s) in vals.iter().zip(&q.symbols) {
+                assert!(s < alphabet);
+                assert_eq!(s == 0, v == 0.0, "zero symbol iff zero value");
+            }
+        });
+    }
+
+    #[test]
+    fn assignment_is_nearest_center() {
+        forall("quant nearest center", 15, |g| {
+            let n = g.size(800).max(1);
+            let vals = g.sparse_residuals(n, 0.5, 1.0);
+            let q = quantize(&vals, &QuantConfig { bits: 3, ..Default::default() }).unwrap();
+            for (&v, &s) in vals.iter().zip(&q.symbols) {
+                if v == 0.0 {
+                    continue;
+                }
+                let assigned = q.centers[s as usize - 1];
+                let best = q
+                    .centers
+                    .iter()
+                    .map(|&c| dist2(v, c))
+                    .fold(f64::INFINITY, f64::min);
+                assert!(dist2(v, assigned) <= best + 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn empty_and_all_zero_inputs() {
+        let q = quantize(&[], &QuantConfig::default()).unwrap();
+        assert!(q.symbols.is_empty());
+        assert!(q.centers.is_empty());
+        let q = quantize(&[0.0; 10], &QuantConfig::default()).unwrap();
+        assert_eq!(q.symbols, vec![0u16; 10]);
+        assert!(q.centers.is_empty());
+        assert_eq!(q.dequantize(), vec![0.0f32; 10]);
+    }
+
+    #[test]
+    fn bad_bits_rejected() {
+        assert!(quantize(&[1.0], &QuantConfig { bits: 0, ..Default::default() }).is_err());
+        assert!(quantize(&[1.0], &QuantConfig { bits: 13, ..Default::default() }).is_err());
+    }
+
+    use crate::util::rng::Pcg64;
+}

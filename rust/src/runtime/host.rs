@@ -1,0 +1,200 @@
+//! Host-side tensor value type and Literal conversions.
+
+use crate::{Error, Result};
+
+/// Element type of a [`HostTensor`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+/// A `Send`-able host tensor: shape + flat data. The only value type that
+/// crosses the runtime boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    shape: Vec<usize>,
+    data: Data,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    /// f32 tensor; validates element count.
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        check_count(&shape, data.len())?;
+        Ok(Self { shape, data: Data::F32(data) })
+    }
+
+    /// i32 tensor; validates element count.
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        check_count(&shape, data.len())?;
+        Ok(Self { shape, data: Data::I32(data) })
+    }
+
+    /// Rank-0 f32 scalar.
+    pub fn scalar_f32(v: f32) -> Self {
+        Self { shape: vec![], data: Data::F32(vec![v]) }
+    }
+
+    /// Rank-0 i32 scalar.
+    pub fn scalar_i32(v: i32) -> Self {
+        Self { shape: vec![], data: Data::I32(vec![v]) }
+    }
+
+    /// Zeros with the shape/dtype of `other`.
+    pub fn zeros_like(other: &HostTensor) -> Self {
+        let n = other.len();
+        Self {
+            shape: other.shape.clone(),
+            data: match other.data {
+                Data::F32(_) => Data::F32(vec![0.0; n]),
+                Data::I32(_) => Data::I32(vec![0; n]),
+            },
+        }
+    }
+
+    /// Shape.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+
+    /// True if zero elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Element type.
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            Data::F32(_) => DType::F32,
+            Data::I32(_) => DType::I32,
+        }
+    }
+
+    /// Borrow as f32 slice.
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            Data::I32(_) => Err(Error::shape("tensor is i32, expected f32")),
+        }
+    }
+
+    /// Borrow as i32 slice.
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            Data::F32(_) => Err(Error::shape("tensor is f32, expected i32")),
+        }
+    }
+
+    /// Consume into an f32 vector.
+    pub fn into_f32s(self) -> Result<Vec<f32>> {
+        match self.data {
+            Data::F32(v) => Ok(v),
+            Data::I32(_) => Err(Error::shape("tensor is i32, expected f32")),
+        }
+    }
+
+    /// Mutable f32 access.
+    pub fn f32s_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            Data::F32(v) => Ok(v),
+            Data::I32(_) => Err(Error::shape("tensor is i32, expected f32")),
+        }
+    }
+}
+
+fn check_count(shape: &[usize], n: usize) -> Result<()> {
+    let want: usize = shape.iter().product();
+    if want != n {
+        return Err(Error::shape(format!("shape {shape:?} wants {want} elems, got {n}")));
+    }
+    Ok(())
+}
+
+/// Convert to an xla literal (on the runtime thread only).
+pub(super) fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    let lit = match &t.data {
+        Data::F32(v) => xla::Literal::vec1(v),
+        Data::I32(v) => xla::Literal::vec1(v),
+    };
+    Ok(lit.reshape(&dims)?)
+}
+
+/// Convert from an xla literal.
+pub(super) fn from_literal(l: &xla::Literal) -> Result<HostTensor> {
+    let shape = l.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => HostTensor::f32(dims, l.to_vec::<f32>()?),
+        xla::ElementType::S32 => HostTensor::i32(dims, l.to_vec::<i32>()?),
+        other => Err(Error::Xla(format!("unsupported output element type {other:?}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_validates() {
+        assert!(HostTensor::f32(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::f32(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(HostTensor::i32(vec![4], vec![1, 2, 3, 4]).is_ok());
+    }
+
+    #[test]
+    fn dtype_accessors() {
+        let f = HostTensor::f32(vec![2], vec![1.0, 2.0]).unwrap();
+        assert_eq!(f.dtype(), DType::F32);
+        assert!(f.f32s().is_ok());
+        assert!(f.i32s().is_err());
+        let i = HostTensor::scalar_i32(5);
+        assert_eq!(i.dtype(), DType::I32);
+        assert_eq!(i.i32s().unwrap(), &[5]);
+    }
+
+    #[test]
+    fn scalars_have_one_element() {
+        assert_eq!(HostTensor::scalar_f32(1.5).len(), 1);
+        assert_eq!(HostTensor::scalar_f32(1.5).shape(), &[] as &[usize]);
+    }
+
+    #[test]
+    fn zeros_like_matches() {
+        let t = HostTensor::f32(vec![3, 2], vec![1.0; 6]).unwrap();
+        let z = HostTensor::zeros_like(&t);
+        assert_eq!(z.shape(), t.shape());
+        assert_eq!(z.f32s().unwrap(), &[0.0; 6]);
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let lit = to_literal(&t).unwrap();
+        let back = from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32_scalar() {
+        let t = HostTensor::scalar_i32(-7);
+        let lit = to_literal(&t).unwrap();
+        let back = from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+}

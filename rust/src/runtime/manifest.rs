@@ -1,0 +1,155 @@
+//! Parsed form of `artifacts/manifest.json` (written by `python -m
+//! compile.aot`). Describes each AOT program: HLO file, kind, model
+//! hyperparameters and the flat parameter layout the Rust side mirrors.
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One program entry.
+#[derive(Clone, Debug)]
+pub struct ProgramInfo {
+    /// HLO text file name (relative to the artifacts dir).
+    pub file: String,
+    /// Program kind: `lstm_probs`, `lstm_train`, `lstm_init`, `lm_train`,
+    /// `lm_eval`, `lm_init`, `vit_train`, `vit_init`.
+    pub kind: String,
+    /// Model hyperparameters (alphabet/hidden/… or vocab/dim/…).
+    pub config: Json,
+    /// Flat parameter layout: (name, shape) in argument order.
+    pub params: Vec<(String, Vec<usize>)>,
+}
+
+impl ProgramInfo {
+    /// Config field as usize.
+    pub fn cfg_usize(&self, key: &str) -> Result<usize> {
+        self.config.req_usize(key)
+    }
+    /// Config field as f64.
+    pub fn cfg_f64(&self, key: &str) -> Result<f64> {
+        self.config.req_f64(key)
+    }
+    /// Total parameter element count.
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    programs: BTreeMap<String, ProgramInfo>,
+}
+
+impl Manifest {
+    /// Load and parse from a file path.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    /// Parse from JSON text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let root = Json::parse(text)?;
+        let version = root.req_usize("version")?;
+        if version != 1 {
+            return Err(Error::format(format!("unsupported manifest version {version}")));
+        }
+        let progs = root
+            .req("programs")?
+            .as_obj()
+            .ok_or_else(|| Error::format("'programs' not an object"))?;
+        let mut programs = BTreeMap::new();
+        for (name, p) in progs {
+            let mut params = Vec::new();
+            for entry in p.req_arr("params")? {
+                let pname = entry.req_str("name")?.to_string();
+                let shape = entry
+                    .req_arr("shape")?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| Error::format("bad shape dim")))
+                    .collect::<Result<Vec<usize>>>()?;
+                params.push((pname, shape));
+            }
+            programs.insert(
+                name.clone(),
+                ProgramInfo {
+                    file: p.req_str("file")?.to_string(),
+                    kind: p.req_str("kind")?.to_string(),
+                    config: p.req("config")?.clone(),
+                    params,
+                },
+            );
+        }
+        Ok(Self { programs })
+    }
+
+    /// Look up a program.
+    pub fn program(&self, name: &str) -> Result<&ProgramInfo> {
+        self.programs
+            .get(name)
+            .ok_or_else(|| Error::format(format!("program '{name}' not in manifest")))
+    }
+
+    /// All program names (sorted).
+    pub fn names(&self) -> Vec<&str> {
+        self.programs.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Names of programs with the given kind.
+    pub fn by_kind(&self, kind: &str) -> Vec<&str> {
+        self.programs
+            .iter()
+            .filter(|(_, p)| p.kind == kind)
+            .map(|(n, _)| n.as_str())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "programs": {
+        "lstm_x_probs": {
+          "file": "lstm_x_probs.hlo.txt",
+          "kind": "lstm_probs",
+          "config": {"alphabet": 16, "hidden": 64, "lr": 0.001},
+          "params": [
+            {"name": "embed", "shape": [16, 64]},
+            {"name": "head.b", "shape": [16]}
+          ]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let p = m.program("lstm_x_probs").unwrap();
+        assert_eq!(p.kind, "lstm_probs");
+        assert_eq!(p.cfg_usize("alphabet").unwrap(), 16);
+        assert_eq!(p.cfg_f64("lr").unwrap(), 0.001);
+        assert_eq!(p.params[0], ("embed".into(), vec![16, 64]));
+        assert_eq!(p.param_count(), 16 * 64 + 16);
+        assert_eq!(m.by_kind("lstm_probs"), vec!["lstm_x_probs"]);
+        assert!(m.by_kind("nope").is_empty());
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        assert!(Manifest::parse(r#"{"version": 9, "programs": {}}"#).is_err());
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        assert!(Manifest::parse(r#"{"version": 1}"#).is_err());
+        assert!(Manifest::parse(
+            r#"{"version":1,"programs":{"x":{"file":"f","kind":"k","params":[]}}}"#
+        )
+        .is_err());
+    }
+}

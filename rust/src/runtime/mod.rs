@@ -1,0 +1,178 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! This is the only place the `xla` crate is touched. The flow (mirroring
+//! /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Compiled executables are cached per
+//! program name.
+//!
+//! All host↔device traffic goes through [`HostTensor`] (shape + dtype +
+//! flat data), the `Send`-able value type the rest of the crate uses; raw
+//! `xla` handles never escape this module. Because the underlying PJRT
+//! wrappers hold raw pointers (`!Send`), a [`Runtime`] must stay on the
+//! thread that created it; [`RuntimeHandle::spawn`] provides a `Send +
+//! Clone` handle that proxies requests to a dedicated runtime thread over
+//! channels — this is what the multi-threaded coordinator uses.
+
+mod host;
+mod manifest;
+mod shared;
+
+pub use host::HostTensor;
+pub use manifest::{Manifest, ProgramInfo};
+pub use shared::RuntimeHandle;
+
+use crate::{Error, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// Single-threaded PJRT runtime over an artifacts directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (must contain `manifest.json`; run
+    /// `make artifacts` to produce it) and create a CPU PJRT client.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        if !manifest_path.exists() {
+            return Err(Error::MissingArtifact("manifest.json".into()));
+        }
+        let manifest = Manifest::load(&manifest_path)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// The parsed artifact manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (and cache) the executable for `program`.
+    fn load(&self, program: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(program) {
+            return Ok(exe.clone());
+        }
+        let info = self.manifest.program(program)?;
+        let path = self.dir.join(&info.file);
+        if !path.exists() {
+            return Err(Error::MissingArtifact(info.file.clone()));
+        }
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.cache.borrow_mut().insert(program.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Force compilation of `program` (warm the cache).
+    pub fn precompile(&self, program: &str) -> Result<()> {
+        self.load(program).map(|_| ())
+    }
+
+    /// Execute `program` with the given host inputs and return the host
+    /// outputs. Programs are lowered with `return_tuple=True`, so the
+    /// single result literal is always a tuple.
+    pub fn run(&self, program: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let exe = self.load(program)?;
+        let args: Vec<xla::Literal> =
+            inputs.iter().map(host::to_literal).collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&args)?;
+        let lit = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| Error::Xla("program produced no output".into()))?
+            .to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        parts.into_iter().map(|l| host::from_literal(&l)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arts() -> PathBuf {
+        // Tests run from the crate root.
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn need_artifacts() -> Option<Runtime> {
+        let dir = arts();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(Runtime::open(dir).expect("runtime open"))
+    }
+
+    #[test]
+    fn open_missing_dir_fails() {
+        assert!(Runtime::open("/nonexistent/cpcm").is_err());
+    }
+
+    #[test]
+    fn manifest_lists_programs() {
+        let Some(rt) = need_artifacts() else { return };
+        let names = rt.manifest().names();
+        assert!(names.iter().any(|n| n.starts_with("lstm_")));
+        assert!(names.iter().any(|n| n.starts_with("lm_tiny")));
+        assert!(rt.manifest().program("no_such_program").is_err());
+    }
+
+    #[test]
+    fn lstm_init_and_probs_roundtrip() {
+        let Some(rt) = need_artifacts() else { return };
+        // Smallest test config emitted by aot.py.
+        let name = "lstm_a16_s9_h16_b32";
+        let params = rt.run(&format!("{name}_init"), &[HostTensor::scalar_i32(7)]).unwrap();
+        let info = rt.manifest().program(&format!("{name}_probs")).unwrap();
+        assert_eq!(params.len(), info.params.len());
+        // probs(params, tokens) → [32, 16] rows summing to 1.
+        let tokens = HostTensor::i32(vec![32, 9], vec![0; 32 * 9]).unwrap();
+        let mut args = params.clone();
+        args.push(tokens);
+        let out = rt.run(&format!("{name}_probs"), &args).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape(), &[32, 16]);
+        let probs = out[0].f32s().unwrap();
+        for row in probs.chunks(16) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "row sum {s}");
+        }
+        // Deterministic across calls.
+        let out2 = rt.run(&format!("{name}_probs"), &args).unwrap();
+        assert_eq!(out[0].f32s().unwrap(), out2[0].f32s().unwrap());
+    }
+
+    #[test]
+    fn lstm_train_step_runs_and_returns_loss() {
+        let Some(rt) = need_artifacts() else { return };
+        let name = "lstm_a16_s9_h16_b32";
+        let params = rt.run(&format!("{name}_init"), &[HostTensor::scalar_i32(0)]).unwrap();
+        let zeros: Vec<HostTensor> = params.iter().map(HostTensor::zeros_like).collect();
+        let mut args = params.clone();
+        args.extend(zeros.iter().cloned());
+        args.extend(zeros.iter().cloned());
+        args.push(HostTensor::scalar_f32(1.0));
+        args.push(HostTensor::i32(vec![32, 9], vec![1; 32 * 9]).unwrap());
+        args.push(HostTensor::i32(vec![32], vec![3; 32]).unwrap());
+        let out = rt.run(&format!("{name}_train"), &args).unwrap();
+        // params' + m' + v' + loss
+        assert_eq!(out.len(), 3 * params.len() + 1);
+        let loss = out.last().unwrap().f32s().unwrap()[0];
+        assert!(loss.is_finite() && loss > 0.0, "loss={loss}");
+    }
+}

@@ -1,0 +1,141 @@
+//! `Send`-able handle to a dedicated runtime thread.
+//!
+//! The `xla` wrappers hold raw pointers and are `!Send`, so a [`Runtime`]
+//! cannot move between threads. [`RuntimeHandle::spawn`] starts one thread
+//! that owns the `Runtime` and serves execute requests over an mpsc
+//! channel; handles are cheap to clone and share across the coordinator's
+//! worker pool. Requests are processed strictly in arrival order, which
+//! also serializes PJRT access (XLA:CPU parallelizes internally).
+
+use super::{HostTensor, Runtime};
+use crate::{Error, Result};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+enum Request {
+    Run { program: String, inputs: Vec<HostTensor>, reply: mpsc::Sender<Result<Vec<HostTensor>>> },
+    Precompile { program: String, reply: mpsc::Sender<Result<()>> },
+    Shutdown,
+}
+
+/// Cloneable, `Send` handle to a runtime thread.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: mpsc::Sender<Request>,
+    // Joined on last drop.
+    _join: Arc<JoinOnDrop>,
+}
+
+struct JoinOnDrop {
+    tx: mpsc::Sender<Request>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Drop for JoinOnDrop {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl RuntimeHandle {
+    /// Spawn the runtime thread over `artifacts_dir`. Fails fast (in the
+    /// caller) if the directory/manifest cannot be opened.
+    pub fn spawn(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = artifacts_dir.into();
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("cpcm-runtime".into())
+            .spawn(move || {
+                let rt = match Runtime::open(&dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Run { program, inputs, reply } => {
+                            let _ = reply.send(rt.run(&program, &inputs));
+                        }
+                        Request::Precompile { program, reply } => {
+                            let _ = reply.send(rt.precompile(&program));
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })
+            .map_err(Error::Io)?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Xla("runtime thread died during startup".into()))??;
+        Ok(Self { tx: tx.clone(), _join: Arc::new(JoinOnDrop { tx, handle: Mutex::new(Some(handle)) }) })
+    }
+
+    /// Execute `program` on the runtime thread.
+    pub fn run(&self, program: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Run { program: program.to_string(), inputs, reply })
+            .map_err(|_| Error::Xla("runtime thread gone".into()))?;
+        rx.recv().map_err(|_| Error::Xla("runtime thread dropped reply".into()))?
+    }
+
+    /// Warm the executable cache for `program`.
+    pub fn precompile(&self, program: &str) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Precompile { program: program.to_string(), reply })
+            .map_err(|_| Error::Xla("runtime thread gone".into()))?;
+        rx.recv().map_err(|_| Error::Xla("runtime thread dropped reply".into()))?
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn spawn_fails_on_missing_dir() {
+        assert!(RuntimeHandle::spawn("/nonexistent/cpcm").is_err());
+    }
+
+    #[test]
+    fn shared_handle_runs_from_multiple_threads() {
+        if !arts_dir().join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let h = RuntimeHandle::spawn(arts_dir()).unwrap();
+        let mut joins = Vec::new();
+        for seed in 0..4 {
+            let h = h.clone();
+            joins.push(std::thread::spawn(move || {
+                let out = h
+                    .run("lstm_a16_s9_h16_b32_init", vec![HostTensor::scalar_i32(seed)])
+                    .unwrap();
+                assert!(!out.is_empty());
+                out[0].clone()
+            }));
+        }
+        let results: Vec<HostTensor> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        // Different seeds → different embeddings; same seed → identical.
+        assert_ne!(results[0], results[1]);
+        let again = h
+            .run("lstm_a16_s9_h16_b32_init", vec![HostTensor::scalar_i32(0)])
+            .unwrap();
+        assert_eq!(results[0], again[0]);
+    }
+}

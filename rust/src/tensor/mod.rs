@@ -1,0 +1,226 @@
+//! Named f32 tensors — the checkpoint payload type.
+//!
+//! Checkpoints are trees of named parameters; we keep them as a flat,
+//! name-sorted list of [`Tensor`]s (row-major `Vec<f32>` + shape). The
+//! context-modeling stage views each tensor as a 2-D map (paper Fig. 1
+//! shows residuals as images), so [`Tensor::rows_cols`] defines the
+//! canonical 2-D folding used by [`crate::context`].
+
+use crate::{Error, Result};
+
+/// A dense row-major f32 tensor with a shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Create from shape + data; validates element count.
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::shape(format!(
+                "shape {shape:?} wants {n} elems, got {}",
+                data.len()
+            )));
+        }
+        Ok(Self { shape, data })
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    /// Shape.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Immutable data.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable data.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the raw buffer.
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Canonical 2-D folding for context modeling: a matrix keeps its
+    /// (rows, cols); higher-rank tensors fold trailing dims into cols;
+    /// vectors/scalars become a single row.
+    pub fn rows_cols(&self) -> (usize, usize) {
+        match self.shape.len() {
+            0 => (1, 1),
+            1 => (1, self.shape[0]),
+            _ => {
+                let rows = self.shape[0];
+                let cols = self.shape[1..].iter().product();
+                (rows, cols)
+            }
+        }
+    }
+}
+
+/// One named entry of a checkpoint ("transformer.h.0.attn.wq", …).
+#[derive(Clone, Debug, PartialEq)]
+pub struct NamedTensor {
+    pub name: String,
+    pub tensor: Tensor,
+}
+
+/// An ordered set of named tensors (sorted by name, unique names) — used for
+/// weights, first moments and second moments alike.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TensorSet {
+    entries: Vec<NamedTensor>,
+}
+
+impl TensorSet {
+    /// Empty set.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build from entries; sorts by name and rejects duplicates.
+    pub fn from_entries(mut entries: Vec<NamedTensor>) -> Result<Self> {
+        entries.sort_by(|a, b| a.name.cmp(&b.name));
+        for w in entries.windows(2) {
+            if w[0].name == w[1].name {
+                return Err(Error::shape(format!("duplicate tensor name '{}'", w[0].name)));
+            }
+        }
+        Ok(Self { entries })
+    }
+
+    /// Insert (or replace) a tensor by name.
+    pub fn insert(&mut self, name: impl Into<String>, tensor: Tensor) {
+        let name = name.into();
+        match self.entries.binary_search_by(|e| e.name.cmp(&name)) {
+            Ok(i) => self.entries[i].tensor = tensor,
+            Err(i) => self.entries.insert(i, NamedTensor { name, tensor }),
+        }
+    }
+
+    /// Look up by name.
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.entries
+            .binary_search_by(|e| e.name.as_str().cmp(name))
+            .ok()
+            .map(|i| &self.entries[i].tensor)
+    }
+
+    /// Iterate entries in name order.
+    pub fn iter(&self) -> impl Iterator<Item = &NamedTensor> {
+        self.entries.iter()
+    }
+
+    /// Mutable iteration in name order.
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut NamedTensor> {
+        self.entries.iter_mut()
+    }
+
+    /// Number of tensors.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True if no tensors.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total element count.
+    pub fn param_count(&self) -> usize {
+        self.entries.iter().map(|e| e.tensor.len()).sum()
+    }
+
+    /// Total bytes as raw f32.
+    pub fn raw_bytes(&self) -> usize {
+        self.param_count() * 4
+    }
+
+    /// True when both sets have identical names and shapes (required between
+    /// a checkpoint and its reference).
+    pub fn same_layout(&self, other: &TensorSet) -> bool {
+        self.len() == other.len()
+            && self
+                .iter()
+                .zip(other.iter())
+                .all(|(a, b)| a.name == b.name && a.tensor.shape() == b.tensor.shape())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_len() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn rows_cols_folding() {
+        assert_eq!(Tensor::zeros(vec![]).rows_cols(), (1, 1));
+        assert_eq!(Tensor::zeros(vec![7]).rows_cols(), (1, 7));
+        assert_eq!(Tensor::zeros(vec![4, 5]).rows_cols(), (4, 5));
+        assert_eq!(Tensor::zeros(vec![4, 5, 6]).rows_cols(), (4, 30));
+    }
+
+    #[test]
+    fn set_sorted_and_unique() {
+        let mut s = TensorSet::new();
+        s.insert("b", Tensor::zeros(vec![2]));
+        s.insert("a", Tensor::zeros(vec![3]));
+        let names: Vec<&str> = s.iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(names, vec!["a", "b"]);
+        assert_eq!(s.param_count(), 5);
+        assert_eq!(s.get("a").unwrap().len(), 3);
+        assert!(s.get("zz").is_none());
+
+        // replace keeps count
+        s.insert("a", Tensor::zeros(vec![4]));
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get("a").unwrap().len(), 4);
+    }
+
+    #[test]
+    fn from_entries_rejects_duplicates() {
+        let e = vec![
+            NamedTensor { name: "x".into(), tensor: Tensor::zeros(vec![1]) },
+            NamedTensor { name: "x".into(), tensor: Tensor::zeros(vec![2]) },
+        ];
+        assert!(TensorSet::from_entries(e).is_err());
+    }
+
+    #[test]
+    fn same_layout() {
+        let mut a = TensorSet::new();
+        a.insert("w", Tensor::zeros(vec![2, 2]));
+        let mut b = TensorSet::new();
+        b.insert("w", Tensor::zeros(vec![2, 2]));
+        assert!(a.same_layout(&b));
+        b.insert("w", Tensor::zeros(vec![4]));
+        assert!(!a.same_layout(&b));
+    }
+}

@@ -1,0 +1,189 @@
+//! Built-in micro/macro benchmark harness.
+//!
+//! `criterion` is unavailable offline; the `[[bench]]` targets use
+//! `harness = false` and this module instead. It provides warmup, multiple
+//! timed samples, and median/mean/min reporting, plus a tiny CSV/Markdown
+//! table emitter used by the figure-regeneration benches.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+    /// Optional throughput denominator (elements per iteration).
+    pub elems: Option<u64>,
+}
+
+impl Sample {
+    /// Throughput in millions of elements per second (if `elems` set).
+    pub fn melems_per_sec(&self) -> Option<f64> {
+        self.elems.map(|n| n as f64 / self.median.as_secs_f64() / 1e6)
+    }
+}
+
+/// Benchmark runner with fixed warmup/sample counts.
+pub struct Bench {
+    pub warmup: usize,
+    pub samples: usize,
+    results: Vec<Sample>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    /// Default: 3 warmup runs, 10 samples.
+    pub fn new() -> Self {
+        Self { warmup: 3, samples: 10, results: Vec::new() }
+    }
+
+    /// Quick mode for CI-style runs.
+    pub fn quick() -> Self {
+        Self { warmup: 1, samples: 3, results: Vec::new() }
+    }
+
+    /// Time `f`, which should perform one full iteration of the workload.
+    /// `elems` is the number of logical elements processed per iteration
+    /// (for throughput reporting); pass 0 to skip.
+    pub fn run(&mut self, name: &str, elems: u64, mut f: impl FnMut()) -> Sample {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times: Vec<Duration> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed());
+        }
+        times.sort();
+        let median = times[times.len() / 2];
+        let mean = times.iter().sum::<Duration>() / times.len() as u32;
+        let min = times[0];
+        let s = Sample {
+            name: name.to_string(),
+            median,
+            mean,
+            min,
+            elems: if elems > 0 { Some(elems) } else { None },
+        };
+        let thr = s
+            .melems_per_sec()
+            .map(|t| format!("  {t:10.2} Melem/s"))
+            .unwrap_or_default();
+        println!(
+            "bench {name:<44} median {:>12?}  min {:>12?}{thr}",
+            median, min
+        );
+        self.results.push(s.clone());
+        s
+    }
+
+    /// All recorded samples.
+    pub fn results(&self) -> &[Sample] {
+        &self.results
+    }
+}
+
+/// Minimal table printer for figure benches: rows of (label, values).
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<(String, Vec<f64>)>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, label: impl Into<String>, values: Vec<f64>) {
+        assert_eq!(values.len(), self.columns.len());
+        self.rows.push((label.into(), values));
+    }
+
+    /// Print as a Markdown table (goes into EXPERIMENTS.md) and echo a CSV
+    /// block for plotting.
+    pub fn print(&self) {
+        println!("\n### {}\n", self.title);
+        print!("| |");
+        for c in &self.columns {
+            print!(" {c} |");
+        }
+        println!();
+        print!("|---|");
+        for _ in &self.columns {
+            print!("---|");
+        }
+        println!();
+        for (label, vals) in &self.rows {
+            print!("| {label} |");
+            for v in vals {
+                if v.abs() >= 1000.0 || (*v != 0.0 && v.abs() < 0.01) {
+                    print!(" {v:.3e} |");
+                } else {
+                    print!(" {v:.4} |");
+                }
+            }
+            println!();
+        }
+        println!("\ncsv,{}", self.columns.join(","));
+        for (label, vals) in &self.rows {
+            let vs: Vec<String> = vals.iter().map(|v| format!("{v}")).collect();
+            println!("csv,{label},{}", vs.join(","));
+        }
+        println!();
+    }
+
+    /// Serialize rows as CSV text (used to append results to files).
+    pub fn to_csv(&self) -> String {
+        let mut out = format!("label,{}\n", self.columns.join(","));
+        for (label, vals) in &self.rows {
+            let vs: Vec<String> = vals.iter().map(|v| format!("{v}")).collect();
+            out.push_str(&format!("{label},{}\n", vs.join(",")));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut b = Bench::quick();
+        let s = b.run("noop", 100, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(s.min <= s.median);
+        assert_eq!(b.results().len(), 1);
+        assert!(s.melems_per_sec().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn table_csv() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row("r1", vec![1.0, 2.0]);
+        let csv = t.to_csv();
+        assert!(csv.contains("label,a,b"));
+        assert!(csv.contains("r1,1,2"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row("r1", vec![1.0]);
+    }
+}

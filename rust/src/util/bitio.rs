@@ -1,0 +1,214 @@
+//! Bit-level I/O over byte buffers.
+//!
+//! Used by the quantizer for packing n-bit symbol indices (the paper packs
+//! several int4/int2 values into one int8 at save time) and by parts of the
+//! container format. The arithmetic coder has its own byte-oriented
+//! renormalization and does not go through this module.
+
+use crate::{Error, Result};
+
+/// MSB-first bit writer into an owned `Vec<u8>`.
+#[derive(Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Bits accumulated in `cur`, from the MSB side.
+    cur: u8,
+    nbits: u8,
+}
+
+impl BitWriter {
+    /// Create an empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write the low `n` bits of `value`, MSB first. `n <= 32`.
+    #[inline]
+    pub fn write_bits(&mut self, value: u32, n: u8) {
+        debug_assert!(n <= 32);
+        debug_assert!(n == 32 || value < (1u32 << n), "value {value} does not fit in {n} bits");
+        let mut left = n;
+        while left > 0 {
+            let room = 8 - self.nbits;
+            let take = room.min(left);
+            let shift = left - take;
+            let chunk = ((value >> shift) as u8) & ((1u16 << take) - 1) as u8;
+            self.cur |= chunk << (room - take);
+            self.nbits += take;
+            left -= take;
+            if self.nbits == 8 {
+                self.buf.push(self.cur);
+                self.cur = 0;
+                self.nbits = 0;
+            }
+        }
+    }
+
+    /// Write a single bit.
+    #[inline]
+    pub fn write_bit(&mut self, bit: bool) {
+        self.write_bits(bit as u32, 1);
+    }
+
+    /// Number of complete bytes written so far (excluding the partial byte).
+    pub fn byte_len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Total bits written.
+    pub fn bit_len(&self) -> usize {
+        self.buf.len() * 8 + self.nbits as usize
+    }
+
+    /// Flush the partial byte (zero-padded) and return the buffer.
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.buf.push(self.cur);
+        }
+        self.buf
+    }
+}
+
+/// MSB-first bit reader over a byte slice.
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    /// Bits already consumed from `buf[pos]`.
+    consumed: u8,
+}
+
+impl<'a> BitReader<'a> {
+    /// Create a reader over `buf`.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0, consumed: 0 }
+    }
+
+    /// Read `n` bits MSB-first. Errors on overrun.
+    #[inline]
+    pub fn read_bits(&mut self, n: u8) -> Result<u32> {
+        debug_assert!(n <= 32);
+        let mut out: u32 = 0;
+        let mut left = n;
+        while left > 0 {
+            if self.pos >= self.buf.len() {
+                return Err(Error::codec("bit reader overrun"));
+            }
+            let avail = 8 - self.consumed;
+            let take = avail.min(left);
+            let byte = self.buf[self.pos];
+            let chunk = (byte >> (avail - take)) & ((1u16 << take) - 1) as u8;
+            out = (out << take) | chunk as u32;
+            self.consumed += take;
+            left -= take;
+            if self.consumed == 8 {
+                self.consumed = 0;
+                self.pos += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Read one bit.
+    #[inline]
+    pub fn read_bit(&mut self) -> Result<bool> {
+        Ok(self.read_bits(1)? != 0)
+    }
+
+    /// Total bits consumed.
+    pub fn bits_read(&self) -> usize {
+        self.pos * 8 + self.consumed as usize
+    }
+}
+
+/// Pack a slice of symbols, each fitting in `bits` bits, MSB-first.
+pub fn pack_symbols(symbols: &[u16], bits: u8) -> Vec<u8> {
+    let mut w = BitWriter::new();
+    for &s in symbols {
+        w.write_bits(s as u32, bits);
+    }
+    w.finish()
+}
+
+/// Unpack `count` symbols of `bits` bits each.
+pub fn unpack_symbols(buf: &[u8], bits: u8, count: usize) -> Result<Vec<u16>> {
+    let mut r = BitReader::new(buf);
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        out.push(r.read_bits(bits)? as u16);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn roundtrip_single_bits() {
+        let mut w = BitWriter::new();
+        let pattern = [true, false, true, true, false, false, true, false, true];
+        for &b in &pattern {
+            w.write_bit(b);
+        }
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        for &b in &pattern {
+            assert_eq!(r.read_bit().unwrap(), b);
+        }
+    }
+
+    #[test]
+    fn roundtrip_mixed_widths() {
+        let mut rng = Pcg64::seed(11);
+        let items: Vec<(u32, u8)> = (0..500)
+            .map(|_| {
+                let n = 1 + rng.below(24) as u8;
+                let v = (rng.next_u64() as u32) & ((1u32 << n) - 1);
+                (v, n)
+            })
+            .collect();
+        let mut w = BitWriter::new();
+        for &(v, n) in &items {
+            w.write_bits(v, n);
+        }
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        for &(v, n) in &items {
+            assert_eq!(r.read_bits(n).unwrap(), v, "width {n}");
+        }
+    }
+
+    #[test]
+    fn pack_unpack_int4() {
+        let syms: Vec<u16> = (0..33).map(|i| (i % 16) as u16).collect();
+        let packed = pack_symbols(&syms, 4);
+        assert_eq!(packed.len(), 17); // ceil(33*4/8)
+        let out = unpack_symbols(&packed, 4, 33).unwrap();
+        assert_eq!(out, syms);
+    }
+
+    #[test]
+    fn pack_unpack_int2() {
+        let syms: Vec<u16> = (0..41).map(|i| (i % 4) as u16).collect();
+        let packed = pack_symbols(&syms, 2);
+        assert_eq!(packed.len(), 11); // ceil(41*2/8)
+        assert_eq!(unpack_symbols(&packed, 2, 41).unwrap(), syms);
+    }
+
+    #[test]
+    fn overrun_is_error() {
+        let buf = [0xFFu8];
+        let mut r = BitReader::new(&buf);
+        assert!(r.read_bits(8).is_ok());
+        assert!(r.read_bits(1).is_err());
+    }
+
+    #[test]
+    fn write_32_bits() {
+        let mut w = BitWriter::new();
+        w.write_bits(0xDEAD_BEEF, 32);
+        let buf = w.finish();
+        assert_eq!(buf, vec![0xDE, 0xAD, 0xBE, 0xEF]);
+    }
+}

@@ -1,0 +1,15 @@
+//! Self-contained utility substrates.
+//!
+//! The offline build environment has no `serde`, `rand`, `proptest` or
+//! `criterion`, so this module provides the minimal, well-tested equivalents
+//! the rest of the crate needs: a JSON parser/writer ([`json`]), a PCG64
+//! PRNG ([`rng`]), bit-level I/O ([`bitio`]), descriptive statistics
+//! ([`stats`]), a property-testing mini-framework ([`prop`]) and a bench
+//! harness ([`bench`]).
+
+pub mod bench;
+pub mod bitio;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,155 @@
+//! Property-testing mini-framework.
+//!
+//! `proptest` is not available in the offline registry, so this module
+//! provides the subset the test suite needs: run a property over many
+//! PCG64-seeded random cases, and on failure report the failing case index
+//! and seed so it can be replayed deterministically.
+//!
+//! ```no_run
+//! use cpcm::util::prop::{forall, Gen};
+//! forall("addition commutes", 256, |g| {
+//!     let a = g.i32_range(-1000, 1000);
+//!     let b = g.i32_range(-1000, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::Pcg64;
+
+/// Per-case generator handed to properties; wraps a deterministic PRNG with
+/// convenience samplers.
+pub struct Gen {
+    rng: Pcg64,
+    /// Case index, exposed so properties can scale sizes with progress
+    /// (small cases first — poor man's shrinking).
+    pub case: usize,
+    pub cases: usize,
+}
+
+impl Gen {
+    /// Uniform usize in `[lo, hi]` (inclusive).
+    pub fn usize_range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below_usize(hi - lo + 1)
+    }
+
+    /// Uniform i32 in `[lo, hi]` (inclusive).
+    pub fn i32_range(&mut self, lo: i32, hi: i32) -> i32 {
+        lo + self.rng.below((hi as i64 - lo as i64 + 1) as u64) as i32
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.f32() * (hi - lo)
+    }
+
+    /// Standard normal f32.
+    pub fn normal(&mut self) -> f32 {
+        self.rng.normal_f32()
+    }
+
+    /// Bernoulli with probability `p`.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.f64() < p
+    }
+
+    /// A size that grows with the case index — early cases are small, which
+    /// makes failures easier to read (approximate shrinking).
+    pub fn size(&mut self, max: usize) -> usize {
+        let cap = ((self.case + 1) * max) / self.cases.max(1);
+        self.usize_range(0, cap.max(1).min(max))
+    }
+
+    /// Vector of f32 drawn from a mixture resembling pruned residuals:
+    /// mostly zeros plus gaussian spikes — the worst case for the codec.
+    pub fn sparse_residuals(&mut self, n: usize, sparsity: f64, scale: f32) -> Vec<f32> {
+        (0..n)
+            .map(|_| if self.bool(sparsity) { 0.0 } else { self.normal() * scale })
+            .collect()
+    }
+
+    /// Vector of symbols below `alphabet`.
+    pub fn symbols(&mut self, n: usize, alphabet: u16) -> Vec<u16> {
+        (0..n).map(|_| self.rng.below(alphabet as u64) as u16).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below_usize(xs.len())]
+    }
+
+    /// Access the raw RNG.
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` over `cases` deterministic random cases. Panics (failing the
+/// enclosing test) with the case index and seed on first failure.
+pub fn forall(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen)) {
+    // Base seed derived from the property name so different properties do
+    // not share streams but remain reproducible run-to-run.
+    let base = name.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x1000_0000_01b3)
+    });
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen { rng: Pcg64::new(seed, 0xa11ce), case, cases };
+            prop(&mut g);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at case {case}/{cases} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case by seed (for debugging).
+pub fn replay(seed: u64, mut prop: impl FnMut(&mut Gen)) {
+    let mut g = Gen { rng: Pcg64::new(seed, 0xa11ce), case: 0, cases: 1 };
+    prop(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("trivial", 64, |g| {
+            let n = g.usize_range(0, 100);
+            assert!(n <= 100);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must fail'")]
+    fn forall_reports_failure() {
+        forall("must fail", 16, |g| {
+            let n = g.usize_range(0, 100);
+            assert!(n < 5, "n too big: {n}");
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first = Vec::new();
+        forall("det", 8, |g| first.push(g.usize_range(0, 1_000_000)));
+        let mut second = Vec::new();
+        forall("det", 8, |g| second.push(g.usize_range(0, 1_000_000)));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn sparse_residuals_respect_sparsity() {
+        forall("sparsity", 8, |g| {
+            let xs = g.sparse_residuals(4000, 0.9, 0.01);
+            let zeros = xs.iter().filter(|&&x| x == 0.0).count();
+            assert!(zeros > 3200, "zeros={zeros}");
+        });
+    }
+}

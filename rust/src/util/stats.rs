@@ -1,0 +1,195 @@
+//! Descriptive statistics used by the pruning thresholds (paper Eq. 4–5
+//! need `median(W)` and `mean(v_t)`) and by the Fig.-1 correlation analysis.
+
+/// Arithmetic mean. Returns 0 for empty input.
+pub fn mean(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+/// Mean of absolute values.
+pub fn mean_abs(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| (x as f64).abs()).sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance.
+pub fn variance(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|&x| (x as f64 - m) * (x as f64 - m)).sum::<f64>() / xs.len() as f64
+}
+
+/// Standard deviation.
+pub fn std_dev(xs: &[f32]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Median of absolute values via quickselect (O(n) expected, no full sort).
+/// This is the `median(W)` term of the paper's Eq. 4 threshold, which ExCP
+/// computes over |W|.
+pub fn median_abs(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f32> = xs.iter().map(|x| x.abs()).collect();
+    let mid = v.len() / 2;
+    let (_, m, _) = v.select_nth_unstable_by(mid, |a, b| a.partial_cmp(b).unwrap());
+    let hi = *m as f64;
+    if v.len() % 2 == 1 {
+        hi
+    } else {
+        // Even length: average of the two middle elements. After
+        // select_nth the lower part contains all elements <= v[mid]; its
+        // max is the other middle element.
+        let lo = v[..mid].iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        (lo + hi) / 2.0
+    }
+}
+
+/// Quantile in [0,1] by nearest-rank on a sorted copy.
+pub fn quantile(xs: &[f32], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((q * (v.len() - 1) as f64).round() as usize).min(v.len() - 1);
+    v[idx] as f64
+}
+
+/// Pearson correlation coefficient between two equally-sized samples.
+/// Returns 0 when either side has zero variance.
+pub fn pearson(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    let ma = mean(a);
+    let mb = mean(b);
+    let mut cov = 0.0;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    for (&x, &y) in a.iter().zip(b) {
+        let dx = x as f64 - ma;
+        let dy = y as f64 - mb;
+        cov += dx * dy;
+        va += dx * dx;
+        vb += dy * dy;
+    }
+    if va == 0.0 || vb == 0.0 {
+        0.0
+    } else {
+        cov / (va.sqrt() * vb.sqrt())
+    }
+}
+
+/// Shannon entropy (bits/symbol) of a discrete symbol stream with the given
+/// alphabet size — the lower bound an order-0 coder can reach; used in tests
+/// and EXPERIMENTS.md to sanity-check coder efficiency.
+pub fn entropy_bits(symbols: &[u16], alphabet: usize) -> f64 {
+    if symbols.is_empty() {
+        return 0.0;
+    }
+    let mut counts = vec![0u64; alphabet];
+    for &s in symbols {
+        counts[s as usize] += 1;
+    }
+    let n = symbols.len() as f64;
+    counts
+        .iter()
+        .filter(|&&c| c > 0)
+        .map(|&c| {
+            let p = c as f64 / n;
+            -p * p.log2()
+        })
+        .sum()
+}
+
+/// Fraction of zero symbols — sparsity after pruning.
+pub fn sparsity(symbols: &[u16]) -> f64 {
+    if symbols.is_empty() {
+        return 0.0;
+    }
+    symbols.iter().filter(|&&s| s == 0).count() as f64 / symbols.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_median() {
+        let xs = [1.0f32, -2.0, 3.0, -4.0, 5.0];
+        assert!((mean(&xs) - 0.6).abs() < 1e-9);
+        assert!((median_abs(&xs) - 3.0).abs() < 1e-9);
+        assert!((mean_abs(&xs) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn median_even_length() {
+        let xs = [1.0f32, 2.0, 3.0, 10.0];
+        assert!((median_abs(&xs) - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn median_matches_sort_reference() {
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::seed(9);
+        for n in [1usize, 2, 3, 10, 101, 1000] {
+            let xs: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let mut sorted: Vec<f32> = xs.iter().map(|x| x.abs()).collect();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let expect = if n % 2 == 1 {
+                sorted[n / 2] as f64
+            } else {
+                (sorted[n / 2 - 1] as f64 + sorted[n / 2] as f64) / 2.0
+            };
+            assert!((median_abs(&xs) - expect).abs() < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn pearson_perfect() {
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [2.0f32, 4.0, 6.0, 8.0];
+        assert!((pearson(&a, &b) - 1.0).abs() < 1e-12);
+        let c = [-2.0f32, -4.0, -6.0, -8.0];
+        assert!((pearson(&a, &c) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_zero_variance() {
+        let a = [1.0f32, 1.0, 1.0];
+        let b = [1.0f32, 2.0, 3.0];
+        assert_eq!(pearson(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn entropy_uniform_and_constant() {
+        let uniform: Vec<u16> = (0..1024).map(|i| (i % 16) as u16).collect();
+        assert!((entropy_bits(&uniform, 16) - 4.0).abs() < 1e-9);
+        let constant = vec![3u16; 100];
+        assert_eq!(entropy_bits(&constant, 16), 0.0);
+    }
+
+    #[test]
+    fn sparsity_counts_zeros() {
+        let s = [0u16, 0, 1, 2, 0, 3];
+        assert!((sparsity(&s) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_basics() {
+        let xs = [5.0f32, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 5.0);
+        assert_eq!(quantile(&xs, 0.5), 3.0);
+    }
+}

@@ -1,0 +1,203 @@
+//! Cross-module integration tests: the full pipeline over both
+//! probability-model backends, chain semantics, and backend isolation.
+//!
+//! Tests that need AOT artifacts skip politely when `make artifacts` has
+//! not run (mirroring the in-crate runtime tests).
+
+use cpcm::checkpoint::Checkpoint;
+use cpcm::codec::{Codec, CodecConfig, ContextMode, SymbolMaps};
+use cpcm::coordinator::{decode_chain, Coordinator, CoordinatorConfig};
+use cpcm::lstm::Backend;
+use cpcm::runtime::RuntimeHandle;
+use cpcm::util::prop::forall;
+use std::path::PathBuf;
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts().join("manifest.json").exists()
+}
+
+fn layers() -> Vec<(&'static str, Vec<usize>)> {
+    vec![("enc.w", vec![18, 14]), ("enc.b", vec![22]), ("dec.w", vec![6, 6, 3])]
+}
+
+/// Codec config matching the AOT `lstm_a16_s9_h16_b32` test program.
+fn pjrt_codec_cfg() -> CodecConfig {
+    CodecConfig { hidden: 16, embed: 16, batch: 32, quant_iters: 4, ..Default::default() }
+}
+
+#[test]
+fn pjrt_backend_full_codec_roundtrip() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = RuntimeHandle::spawn(artifacts()).unwrap();
+    let backend = Backend::Pjrt(rt);
+    let codec = Codec::new(pjrt_codec_cfg(), backend.clone());
+    let c0 = Checkpoint::synthetic(100, &layers(), 50);
+    let c1 = Checkpoint::synthetic(200, &layers(), 51);
+
+    let e0 = codec.encode(&c0, None, None).unwrap();
+    let (d0, s0) = Codec::decode(&backend, &e0.bytes, None, None).unwrap();
+    assert_eq!(d0, e0.recon);
+
+    let e1 = codec.encode(&c1, Some(&e0.recon), Some(&e0.syms)).unwrap();
+    let (d1, s1) = Codec::decode(&backend, &e1.bytes, Some(&d0), Some(&s0)).unwrap();
+    assert_eq!(d1, e1.recon);
+    assert_eq!(s1, e1.syms);
+}
+
+#[test]
+fn backend_mismatch_is_rejected() {
+    if !have_artifacts() {
+        return;
+    }
+    // Encode with native, try to decode with pjrt: must fail loudly (the
+    // two backends use different parameter initializations).
+    let codec = Codec::new(pjrt_codec_cfg(), Backend::Native);
+    let c0 = Checkpoint::synthetic(1, &layers(), 52);
+    let e0 = codec.encode(&c0, None, None).unwrap();
+    let rt = RuntimeHandle::spawn(artifacts()).unwrap();
+    let err = Codec::decode(&Backend::Pjrt(rt), &e0.bytes, None, None);
+    assert!(err.is_err());
+    let msg = format!("{}", err.err().unwrap());
+    assert!(msg.contains("backend"), "unexpected error: {msg}");
+}
+
+#[test]
+fn coordinator_with_pjrt_backend() {
+    if !have_artifacts() {
+        return;
+    }
+    let dir = std::env::temp_dir().join(format!("cpcm_it_pjrt_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let rt = RuntimeHandle::spawn(artifacts()).unwrap();
+    let mut cfg = CoordinatorConfig::new(pjrt_codec_cfg(), Backend::Pjrt(rt.clone()), &dir);
+    cfg.verify = true;
+    let coord = Coordinator::start(cfg).unwrap();
+    for i in 0..3u64 {
+        coord.submit(Checkpoint::synthetic(10 * (i + 1), &layers(), 60 + i)).unwrap();
+    }
+    let results = coord.finish().unwrap();
+    assert_eq!(results.len(), 3);
+    let decoded = decode_chain(&dir, &Backend::Pjrt(rt), None).unwrap();
+    assert_eq!(decoded.len(), 3);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn long_chain_stays_lossless_native() {
+    // 8-frame chain; every decode must equal the encoder's reconstruction
+    // bit-for-bit even as quantization error accumulates in the weights.
+    let codec = Codec::new(
+        CodecConfig { hidden: 8, embed: 8, batch: 32, quant_iters: 4, ..Default::default() },
+        Backend::Native,
+    );
+    let mut prev_enc: Option<(Checkpoint, SymbolMaps)> = None;
+    let mut prev_dec: Option<(Checkpoint, SymbolMaps)> = None;
+    for i in 0..8u64 {
+        let ck = Checkpoint::synthetic(100 * (i + 1), &layers(), 70 + i);
+        let out = codec
+            .encode(&ck, prev_enc.as_ref().map(|p| &p.0), prev_enc.as_ref().map(|p| &p.1))
+            .unwrap();
+        let (dec, syms) = Codec::decode(
+            &Backend::Native,
+            &out.bytes,
+            prev_dec.as_ref().map(|p| &p.0),
+            prev_dec.as_ref().map(|p| &p.1),
+        )
+        .unwrap();
+        assert_eq!(dec, out.recon, "frame {i}");
+        assert_eq!(syms, out.syms, "frame {i}");
+        prev_enc = Some((out.recon, out.syms));
+        prev_dec = Some((dec, syms));
+    }
+}
+
+#[test]
+fn prop_random_checkpoint_chains_roundtrip() {
+    forall("codec chain roundtrip", 6, |g| {
+        let n_layers = g.usize_range(1, 3);
+        let shapes: Vec<(String, Vec<usize>)> = (0..n_layers)
+            .map(|i| {
+                let rank = g.usize_range(1, 2);
+                let shape: Vec<usize> =
+                    (0..rank + 1).map(|_| g.usize_range(2, 12)).collect();
+                (format!("l{i}"), shape)
+            })
+            .collect();
+        let shape_refs: Vec<(&str, Vec<usize>)> =
+            shapes.iter().map(|(n, s)| (n.as_str(), s.clone())).collect();
+        let mode = *g.choose(&[ContextMode::Lstm, ContextMode::ZeroContext, ContextMode::Order0]);
+        let bits = *g.choose(&[2u8, 4]);
+        let window = *g.choose(&[1usize, 3]);
+        let codec = Codec::new(
+            CodecConfig {
+                mode,
+                bits,
+                window,
+                hidden: 8,
+                embed: 8,
+                batch: 16,
+                quant_iters: 3,
+                ..Default::default()
+            },
+            Backend::Native,
+        );
+        let c0 = Checkpoint::synthetic(1, &shape_refs, 1000 + g.case as u64);
+        let c1 = Checkpoint::synthetic(2, &shape_refs, 2000 + g.case as u64);
+        let e0 = codec.encode(&c0, None, None).unwrap();
+        let (d0, s0) = Codec::decode(&Backend::Native, &e0.bytes, None, None).unwrap();
+        assert_eq!(d0, e0.recon);
+        let e1 = codec.encode(&c1, Some(&e0.recon), Some(&e0.syms)).unwrap();
+        let (d1, _) = Codec::decode(&Backend::Native, &e1.bytes, Some(&d0), Some(&s0)).unwrap();
+        assert_eq!(d1, e1.recon);
+    });
+}
+
+#[test]
+fn failure_injection_truncated_and_bitflipped_containers() {
+    let codec = Codec::new(
+        CodecConfig { hidden: 8, embed: 8, batch: 16, ..Default::default() },
+        Backend::Native,
+    );
+    let c0 = Checkpoint::synthetic(1, &layers(), 90);
+    let bytes = codec.encode(&c0, None, None).unwrap().bytes;
+    // Truncations at various points must error, never panic.
+    for cut in [0, 1, 7, 8, 12, bytes.len() / 2, bytes.len() - 1] {
+        assert!(
+            Codec::decode(&Backend::Native, &bytes[..cut], None, None).is_err(),
+            "cut={cut}"
+        );
+    }
+    // Single-bit flips anywhere must be caught by the CRC.
+    let mut rng = cpcm::util::rng::Pcg64::seed(9);
+    for _ in 0..24 {
+        let mut corrupted = bytes.clone();
+        let pos = rng.below_usize(corrupted.len());
+        corrupted[pos] ^= 1 << rng.below(8);
+        assert!(Codec::decode(&Backend::Native, &corrupted, None, None).is_err());
+    }
+}
+
+#[test]
+fn excp_and_proposed_agree_on_front_end() {
+    // Both pipelines share prune+quant, so their reconstructions from the
+    // same inputs must be identical — only the entropy stage differs.
+    let cfg = CodecConfig { hidden: 8, embed: 8, batch: 16, ..Default::default() };
+    let c0 = Checkpoint::synthetic(1, &layers(), 91);
+    let c1 = Checkpoint::synthetic(2, &layers(), 92);
+    let proposed = Codec::new(cfg.clone(), Backend::Native);
+    let excp = cpcm::baselines::ExcpCodec::new(cfg);
+    let p0 = proposed.encode(&c0, None, None).unwrap();
+    let x0 = excp.encode(&c0, None).unwrap();
+    assert_eq!(p0.recon, x0.recon);
+    let p1 = proposed.encode(&c1, Some(&p0.recon), Some(&p0.syms)).unwrap();
+    let x1 = excp.encode(&c1, Some(&x0.recon)).unwrap();
+    assert_eq!(p1.recon, x1.recon);
+    assert_eq!(p1.syms, x1.syms);
+}
