@@ -23,7 +23,7 @@ fn delta_bytes(cfg: &CodecConfig, ck0: &Checkpoint, ck1: &Checkpoint) -> usize {
     e1.bytes.len()
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     if !common::require_artifacts() {
         return Ok(());
     }
@@ -77,6 +77,14 @@ fn main() -> anyhow::Result<()> {
     run("lr=1e-3 (paper)", CodecConfig { lr: 1e-3, ..base.clone() });
     run("lr=3e-3 (bench default)", CodecConfig { lr: 3e-3, ..base.clone() });
     run("lr=6e-3", CodecConfig { lr: 6e-3, ..base.clone() });
+
+    // Coding lanes (format 2): the per-lane model resets cost a small,
+    // bounded amount of ratio — this row quantifies it (speed scaling is
+    // measured by `cargo bench --bench hotpath`).
+    run("lanes=1 (baseline)", CodecConfig { lanes: 1, ..base.clone() });
+    run("lanes=2", CodecConfig { lanes: 2, ..base.clone() });
+    run("lanes=4", CodecConfig { lanes: 4, ..base.clone() });
+    run("lanes=8", CodecConfig { lanes: 8, ..base.clone() });
 
     // Second-moment log transform.
     run("log_moment2=false", CodecConfig { log_moment2: false, ..base.clone() });

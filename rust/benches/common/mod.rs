@@ -40,7 +40,7 @@ pub fn checkpoint_trajectory(
     n_ckpts: usize,
     every: u64,
     seed: u64,
-) -> anyhow::Result<(Vec<Checkpoint>, Vec<f32>)> {
+) -> cpcm::Result<(Vec<Checkpoint>, Vec<f32>)> {
     let mut tr = Trainer::new(artifacts(), workload, seed)?;
     let mut ckpts = Vec::with_capacity(n_ckpts);
     let mut losses = Vec::new();
@@ -60,7 +60,7 @@ pub fn resumed_trajectory(
     n_ckpts: usize,
     every: u64,
     seed: u64,
-) -> anyhow::Result<Vec<Checkpoint>> {
+) -> cpcm::Result<Vec<Checkpoint>> {
     let mut tr = Trainer::new(artifacts(), workload, seed)?;
     tr.restore(restored)?;
     let mut ckpts = Vec::with_capacity(n_ckpts);
@@ -75,9 +75,11 @@ pub fn resumed_trajectory(
 /// h16 LSTM, one reference-warmup pass, lr raised to 3e-3 — on the short
 /// synthetic streams the adaptation transient dominates at the paper's
 /// 1e-3 (see EXPERIMENTS.md §Tuning; the paper's 410M-param streams give
-/// the model ~1000× more adaptation data per checkpoint).
+/// the model ~1000× more adaptation data per checkpoint). Lanes pinned to
+/// 1 so reported byte sizes are machine-independent (the auto default
+/// would pick the local core count); the lane ablation overrides it.
 pub fn bench_codec() -> CodecConfig {
-    CodecConfig { hidden: 16, embed: 16, batch: 256, lr: 3e-3, ..CodecConfig::default() }
+    CodecConfig { hidden: 16, embed: 16, batch: 256, lr: 3e-3, lanes: 1, ..CodecConfig::default() }
 }
 
 /// Write a results file under bench_results/ (gitignored scratch).

@@ -57,7 +57,7 @@ fn dump_pgm(path: &str, syms: &[u16], rows: usize, cols: usize, alphabet: usize)
     let _ = std::fs::write(path, out);
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     if !common::require_artifacts() {
         return Ok(());
     }

@@ -58,7 +58,7 @@ fn run_excp(cfg: &CodecConfig, ckpts: &[Checkpoint]) -> Vec<(u64, usize, f64)> {
     rows
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     if !common::require_artifacts() {
         return Ok(());
     }

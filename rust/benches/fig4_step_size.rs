@@ -57,7 +57,7 @@ fn run_excp_chain(s: usize, ckpts: &[Checkpoint]) -> Vec<(u64, usize)> {
     rows
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     if !common::require_artifacts() {
         return Ok(());
     }

@@ -2,8 +2,14 @@
 //!
 //! Covers each stage of the pipeline in isolation so the perf pass can
 //! attribute regressions: range coder, adaptive model, CDF construction,
-//! context gather, k-means quantizer, native-LSTM probs/update, and the
-//! end-to-end symbol throughput of the codec.
+//! context gather, k-means quantizer, native-LSTM probs/update, the
+//! end-to-end symbol throughput of the codec, and the lane-scaling sweep
+//! of the format-2 parallel encode/decode.
+//!
+//! Besides the human-readable table, the run writes
+//! `BENCH_hotpath.json` (crate root): every sample's median seconds and
+//! throughput plus the lane-scaling sweep, so the perf trajectory is
+//! machine-diffable across PRs.
 //!
 //! Run: `cargo bench --bench hotpath`
 
@@ -16,6 +22,8 @@ use cpcm::context::ContextExtractor;
 use cpcm::lstm::{Backend, LstmCfg, ProbModel};
 use cpcm::quant::{quantize, QuantConfig};
 use cpcm::util::bench::Bench;
+use cpcm::util::json::Json;
+use cpcm::util::pool;
 use cpcm::util::rng::Pcg64;
 
 fn main() {
@@ -116,6 +124,8 @@ fn main() {
     });
 
     // ---- End-to-end codec symbol throughput -----------------------------
+    // Pinned to one lane so these rows stay comparable with pre-lane
+    // baselines; the lane sweep below measures the scaling.
     let layers: Vec<(&str, Vec<usize>)> = vec![("w", vec![128, 96])];
     let c0 = Checkpoint::synthetic(1, &layers, 1);
     let c1 = Checkpoint::synthetic(2, &layers, 2);
@@ -126,7 +136,14 @@ fn main() {
         ("codec/e2e full-context lstm", ContextMode::Lstm),
     ] {
         let codec = Codec::new(
-            CodecConfig { mode, hidden: 16, embed: 16, batch: 256, ..CodecConfig::default() },
+            CodecConfig {
+                mode,
+                hidden: 16,
+                embed: 16,
+                batch: 256,
+                lanes: 1,
+                ..CodecConfig::default()
+            },
             Backend::Native,
         );
         let e0 = codec.encode(&c0, None, None).unwrap();
@@ -135,5 +152,87 @@ fn main() {
                 codec.encode(&c1, Some(&e0.recon), Some(&e0.syms)).unwrap().bytes.len(),
             );
         });
+    }
+
+    // ---- Lane-parallel scaling (format 2) -------------------------------
+    // Bigger checkpoint so the 3 × L fan-out has work to distribute.
+    let lane_layers: Vec<(&str, Vec<usize>)> = vec![("w", vec![256, 128])];
+    let l0 = Checkpoint::synthetic(1, &lane_layers, 3);
+    let l1 = Checkpoint::synthetic(2, &lane_layers, 4);
+    let lane_syms = (l1.param_count() * 3) as u64;
+    let mut lane_rows: Vec<Json> = Vec::new();
+    let mut encode_rate_by_lanes: Vec<(usize, f64)> = Vec::new();
+    for lanes in [1usize, 2, 4, 8] {
+        let codec = Codec::new(
+            CodecConfig {
+                mode: ContextMode::Lstm,
+                hidden: 16,
+                embed: 16,
+                batch: 256,
+                lanes,
+                ..CodecConfig::default()
+            },
+            Backend::Native,
+        );
+        let e0 = codec.encode(&l0, None, None).unwrap();
+        let mut bytes = Vec::new();
+        let enc_sample =
+            b.run(&format!("codec/lanes={lanes} encode (lstm)"), lane_syms, || {
+                bytes = codec.encode(&l1, Some(&e0.recon), Some(&e0.syms)).unwrap().bytes;
+            });
+        let dec_sample =
+            b.run(&format!("codec/lanes={lanes} decode (lstm)"), lane_syms, || {
+                std::hint::black_box(
+                    Codec::decode(&Backend::Native, &bytes, Some(&e0.recon), Some(&e0.syms))
+                        .unwrap(),
+                );
+            });
+        let enc_rate = lane_syms as f64 / enc_sample.median.as_secs_f64();
+        let dec_rate = lane_syms as f64 / dec_sample.median.as_secs_f64();
+        encode_rate_by_lanes.push((lanes, enc_rate));
+        lane_rows.push(Json::obj(vec![
+            ("lanes", Json::num(lanes as f64)),
+            ("encode_syms_per_sec", Json::num(enc_rate)),
+            ("decode_syms_per_sec", Json::num(dec_rate)),
+            ("container_bytes", Json::num(bytes.len() as f64)),
+        ]));
+    }
+    if let (Some((_, r1)), Some((_, r4))) = (
+        encode_rate_by_lanes.first().copied(),
+        encode_rate_by_lanes.iter().find(|(l, _)| *l == 4).copied(),
+    ) {
+        println!(
+            "\nlane scaling: encode lanes=4 is {:.2}x lanes=1 \
+             ({} hardware threads available)",
+            r4 / r1,
+            pool::available_workers()
+        );
+    }
+
+    // ---- Machine-readable dump ------------------------------------------
+    let samples: Vec<Json> = b
+        .results()
+        .iter()
+        .map(|s| {
+            let mut fields = vec![
+                ("name", Json::str(s.name.clone())),
+                ("median_seconds", Json::num(s.median.as_secs_f64())),
+                ("min_seconds", Json::num(s.min.as_secs_f64())),
+            ];
+            if let Some(t) = s.melems_per_sec() {
+                fields.push(("melems_per_sec", Json::num(t)));
+            }
+            Json::obj(fields)
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("hotpath")),
+        ("available_parallelism", Json::num(pool::available_workers() as f64)),
+        ("samples", Json::Arr(samples)),
+        ("lane_scaling", Json::Arr(lane_rows)),
+    ]);
+    match std::fs::write("BENCH_hotpath.json", doc.to_string_pretty()) {
+        Ok(()) => println!("wrote BENCH_hotpath.json"),
+        Err(e) => eprintln!("could not write BENCH_hotpath.json: {e}"),
     }
 }

@@ -51,7 +51,7 @@ fn arg(name: &str, default: &str) -> String {
         .unwrap_or_else(|| default.to_string())
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let hidden: usize = arg("--hidden", "16").parse()?;
     let steps: u64 = arg("--steps", "40").parse()?;
     let lr: f32 = arg("--lr", "0.001").parse()?;

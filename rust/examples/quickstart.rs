@@ -11,7 +11,7 @@ use cpcm::checkpoint::Checkpoint;
 use cpcm::codec::{Codec, CodecConfig};
 use cpcm::lstm::Backend;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // A toy "model": three layers of Adam state (weights + both moments).
     let layers: Vec<(&str, Vec<usize>)> =
         vec![("encoder.w", vec![96, 64]), ("encoder.b", vec![96]), ("head.w", vec![64, 32])];

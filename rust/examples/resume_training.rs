@@ -16,7 +16,7 @@ use cpcm::lstm::Backend;
 use cpcm::runtime::RuntimeHandle;
 use cpcm::trainer::Trainer;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let artifacts = "artifacts";
     let workload = "lm_micro";
     let half: u64 = 60;

@@ -15,7 +15,7 @@ use cpcm::coordinator::{Coordinator, CoordinatorConfig};
 use cpcm::lstm::Backend;
 use cpcm::trainer::Trainer;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let out = std::path::PathBuf::from("runs/step_size");
     let _ = std::fs::remove_dir_all(&out);
     std::fs::create_dir_all(&out)?;

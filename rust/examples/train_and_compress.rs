@@ -29,7 +29,7 @@ fn arg(name: &str, default: &str) -> String {
         .unwrap_or_else(|| default.to_string())
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let workload = arg("--workload", "lm_micro");
     let steps: u64 = arg("--steps", "300").parse()?;
     let ckpt_every: u64 = arg("--ckpt-every", "50").parse()?;

@@ -3,8 +3,9 @@
 //! - [`ExcpCodec`] — the ExCP pipeline as published: same delta + Eq.-4/5
 //!   pruning + k-means quantization front-end, but the quantized symbols
 //!   are bit-packed and handed to a general-purpose LZ77+entropy compressor
-//!   (DEFLATE here; ExCP used 7-zip/LZMA — same family, see DESIGN.md §3).
-//! - [`raw_gzip`] — whole-checkpoint DEFLATE with no modeling at all, the
+//!   ([`crate::util::lz`], the in-tree DEFLATE stand-in; ExCP used
+//!   7-zip/LZMA — same family, see DESIGN.md §3).
+//! - [`raw_gzip`] — whole-checkpoint LZ with no modeling at all, the
 //!   naive operating point.
 //!
 //! The proposed method and its zero-context ablation are the `Lstm` /
@@ -19,13 +20,10 @@ use crate::quant::{self, QuantConfig, Quantized};
 use crate::tensor::Tensor;
 use crate::util::bitio;
 use crate::util::json::Json;
+use crate::util::lz;
 use crate::{Error, Result};
-use flate2::read::DeflateDecoder;
-use flate2::write::DeflateEncoder;
-use flate2::Compression;
-use std::io::{Read, Write};
 
-/// ExCP-style codec: prune + quantize + bit-pack + DEFLATE.
+/// ExCP-style codec: prune + quantize + bit-pack + LZ.
 pub struct ExcpCodec {
     cfg: CodecConfig,
 }
@@ -218,24 +216,20 @@ impl ExcpCodec {
     }
 }
 
-/// Whole-checkpoint DEFLATE of the raw serialized form — the no-modeling
+/// Whole-checkpoint LZ of the raw serialized form — the no-modeling
 /// operating point.
 pub fn raw_gzip(ck: &Checkpoint) -> usize {
     deflate(&ck.to_bytes()).len()
 }
 
+/// DEFLATE-shaped entry points over the in-tree LZ coder (kept under the
+/// historical names so the baseline reads like the ExCP paper's pipeline).
 fn deflate(data: &[u8]) -> Vec<u8> {
-    let mut enc = DeflateEncoder::new(Vec::new(), Compression::best());
-    enc.write_all(data).expect("vec write");
-    enc.finish().expect("deflate finish")
+    lz::compress(data)
 }
 
 fn inflate(data: &[u8]) -> Result<Vec<u8>> {
-    let mut out = Vec::new();
-    DeflateDecoder::new(data)
-        .read_to_end(&mut out)
-        .map_err(|e| Error::codec(format!("inflate failed: {e}")))?;
-    Ok(out)
+    lz::decompress(data)
 }
 
 /// Shared with the main codec's log-domain handling (identical transform).

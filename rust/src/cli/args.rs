@@ -61,6 +61,18 @@ impl Args {
     pub fn flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }
+
+    /// Parse `--key value` into `T`, reporting the flag name on failure.
+    /// Returns `Ok(None)` when the flag is absent.
+    pub fn parsed<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| Error::config(format!("invalid --{key}: '{v}'"))),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -96,6 +108,14 @@ mod tests {
         // A value starting with '-' but not '--' is accepted.
         let a = Args::parse(&v(&["--offset", "-5"])).unwrap();
         assert_eq!(a.get("offset"), Some("-5"));
+    }
+
+    #[test]
+    fn parsed_typed_values() {
+        let a = Args::parse(&v(&["--lanes", "8", "--bad", "xyz"])).unwrap();
+        assert_eq!(a.parsed::<u64>("lanes").unwrap(), Some(8));
+        assert_eq!(a.parsed::<u64>("absent").unwrap(), None);
+        assert!(a.parsed::<u64>("bad").is_err());
     }
 
     #[test]

@@ -3,7 +3,9 @@
 //! ```text
 //! cpcm train      --workload lm_tiny --steps 300 --ckpt-every 50 \
 //!                 --out runs/demo [--compress] [--mode lstm] [--backend native]
+//!                 [--lanes N]
 //! cpcm compress   --ckpts runs/demo/raw --out runs/demo/cpcm [--mode ...]
+//!                 [--lanes N]
 //! cpcm decompress --cpcm runs/demo/cpcm --step 100 --out ck.bin [--backend ...]
 //! cpcm verify     --ckpts runs/demo/raw --cpcm runs/demo/cpcm
 //! cpcm info       --file runs/demo/cpcm/ckpt_0000000100.cpcm
@@ -111,6 +113,10 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(v) = args.get("hidden") {
         cfg.codec.hidden = parse_num::<u64>(v, "hidden")? as usize;
         cfg.codec.embed = cfg.codec.hidden;
+    }
+    // Coding lanes per parameter set (format-2 parallelism); 0 = auto.
+    if let Some(v) = args.parsed::<u64>("lanes")? {
+        cfg.codec.lanes = v as usize;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -348,6 +354,8 @@ mod tests {
             "order0".into(),
             "--bits".into(),
             "2".into(),
+            "--lanes".into(),
+            "4".into(),
             "--verify".into(),
         ])
         .unwrap();
@@ -356,7 +364,14 @@ mod tests {
         assert_eq!(cfg.steps, 10);
         assert_eq!(cfg.codec.mode, ContextMode::Order0);
         assert_eq!(cfg.codec.bits, 2);
+        assert_eq!(cfg.codec.lanes, 4);
         assert!(cfg.verify);
+    }
+
+    #[test]
+    fn lanes_out_of_range_rejected() {
+        let args = Args::parse(&["--lanes".into(), "400".into()]).unwrap();
+        assert!(experiment_config(&args).is_err());
     }
 
     #[test]

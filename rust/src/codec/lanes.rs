@@ -1,0 +1,226 @@
+//! Lane partitioning for parallel entropy coding (container format 2).
+//!
+//! A parameter set's symbol sequence is the concatenation of its tensors'
+//! symbols in tensor (name-sorted) order. [`LanePlan`] shards that global
+//! sequence into `L` fixed-size contiguous lanes: lane `l` covers global
+//! positions `[l·⌈total/L⌉, min((l+1)·⌈total/L⌉, total))`. Each lane is
+//! coded by its own arithmetic stream and its own model replica, so the
+//! `3 × L` (set × lane) tasks are fully independent — encode and decode
+//! both fan out across a work pool ([`crate::util::pool`]) and the bytes
+//! of every lane are a pure function of (config, symbols, reference
+//! maps), independent of scheduling.
+//!
+//! The partition is a *position* partition, not a tensor partition: a
+//! lane may start mid-tensor and span several tensors. [`LaneIter`] walks
+//! a lane's `(tensor index, element index)` pairs in O(1) amortized per
+//! step, which is what the per-position 3×3 reference-context gather
+//! ([`crate::context`]) needs.
+
+use std::ops::Range;
+
+/// Position layout of one parameter set, sharded into `lanes` lanes.
+#[derive(Clone, Debug)]
+pub struct LanePlan {
+    /// Element count per tensor (tensor order = name-sorted order).
+    counts: Vec<usize>,
+    /// Prefix sums of `counts`; `offsets[i]` is tensor `i`'s first global
+    /// position, `offsets[counts.len()]` the total.
+    offsets: Vec<usize>,
+    lanes: usize,
+    /// Lane width `⌈total/lanes⌉` (0 when the set is empty).
+    chunk: usize,
+}
+
+impl LanePlan {
+    /// Build a plan over per-tensor element counts.
+    pub fn new(counts: Vec<usize>, lanes: usize) -> Self {
+        let lanes = lanes.max(1);
+        let mut offsets = Vec::with_capacity(counts.len() + 1);
+        let mut acc = 0usize;
+        offsets.push(0);
+        for &c in &counts {
+            acc += c;
+            offsets.push(acc);
+        }
+        let chunk = acc.div_ceil(lanes);
+        Self { counts, offsets, lanes, chunk }
+    }
+
+    /// Total symbol positions across all tensors.
+    pub fn total(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+
+    /// Number of lanes.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Number of tensors.
+    pub fn n_tensors(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Per-tensor element counts.
+    pub fn counts(&self) -> &[usize] {
+        &self.counts
+    }
+
+    /// Global position range of `lane` (possibly empty for trailing lanes
+    /// of small sets).
+    pub fn lane_range(&self, lane: usize) -> Range<usize> {
+        debug_assert!(lane < self.lanes);
+        let start = (lane * self.chunk).min(self.total());
+        let end = ((lane + 1) * self.chunk).min(self.total());
+        start..end
+    }
+
+    /// Map a global position to `(tensor index, element index)`.
+    pub fn locate(&self, pos: usize) -> (usize, usize) {
+        debug_assert!(pos < self.total());
+        let ti = self.offsets.partition_point(|&o| o <= pos) - 1;
+        (ti, pos - self.offsets[ti])
+    }
+
+    /// Iterate `lane`'s `(tensor index, element index)` pairs in order.
+    pub fn iter_lane(&self, lane: usize) -> LaneIter<'_> {
+        let range = self.lane_range(lane);
+        let (ti, idx) = if range.start < self.total() {
+            self.locate(range.start)
+        } else {
+            (self.counts.len(), 0)
+        };
+        LaneIter { plan: self, pos: range.start, end: range.end, ti, idx }
+    }
+
+    /// Split a flat symbol buffer (length [`Self::total`]) into per-tensor
+    /// vectors.
+    pub fn split_flat(&self, flat: Vec<u16>) -> Vec<Vec<u16>> {
+        debug_assert_eq!(flat.len(), self.total());
+        let mut out = Vec::with_capacity(self.counts.len());
+        let mut rest = flat.as_slice();
+        for &c in &self.counts {
+            let (head, tail) = rest.split_at(c);
+            out.push(head.to_vec());
+            rest = tail;
+        }
+        out
+    }
+}
+
+/// Iterator over one lane's `(tensor, element)` positions.
+pub struct LaneIter<'a> {
+    plan: &'a LanePlan,
+    pos: usize,
+    end: usize,
+    ti: usize,
+    idx: usize,
+}
+
+impl Iterator for LaneIter<'_> {
+    type Item = (usize, usize);
+
+    fn next(&mut self) -> Option<(usize, usize)> {
+        if self.pos >= self.end {
+            return None;
+        }
+        // Skip empty tensors; `pos < end <= total` guarantees a payload
+        // tensor exists ahead.
+        while self.idx >= self.plan.counts[self.ti] {
+            self.ti += 1;
+            self.idx = 0;
+        }
+        let item = (self.ti, self.idx);
+        self.pos += 1;
+        self.idx += 1;
+        Some(item)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let n = self.end - self.pos;
+        (n, Some(n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn ranges_partition_the_total() {
+        let plan = LanePlan::new(vec![10, 3, 7], 4);
+        assert_eq!(plan.total(), 20);
+        let mut covered = 0usize;
+        for l in 0..plan.lanes() {
+            let r = plan.lane_range(l);
+            assert_eq!(r.start, covered.min(plan.total()));
+            covered = r.end;
+        }
+        assert_eq!(covered, 20);
+    }
+
+    #[test]
+    fn single_lane_covers_everything() {
+        let plan = LanePlan::new(vec![4, 4], 1);
+        assert_eq!(plan.lane_range(0), 0..8);
+        let walk: Vec<_> = plan.iter_lane(0).collect();
+        assert_eq!(walk.len(), 8);
+        assert_eq!(walk[0], (0, 0));
+        assert_eq!(walk[4], (1, 0));
+        assert_eq!(walk[7], (1, 3));
+    }
+
+    #[test]
+    fn more_lanes_than_positions_leaves_empty_lanes() {
+        let plan = LanePlan::new(vec![3], 8);
+        let nonempty: Vec<usize> =
+            (0..8).filter(|&l| !plan.lane_range(l).is_empty()).collect();
+        assert_eq!(nonempty, vec![0, 1, 2]);
+        assert_eq!(plan.iter_lane(7).count(), 0);
+    }
+
+    #[test]
+    fn empty_set() {
+        let plan = LanePlan::new(vec![], 4);
+        assert_eq!(plan.total(), 0);
+        for l in 0..4 {
+            assert!(plan.lane_range(l).is_empty());
+            assert_eq!(plan.iter_lane(l).count(), 0);
+        }
+        assert!(plan.split_flat(Vec::new()).is_empty());
+    }
+
+    #[test]
+    fn iter_skips_empty_tensors() {
+        let plan = LanePlan::new(vec![2, 0, 0, 3], 2);
+        let walk: Vec<_> = plan.iter_lane(0).chain(plan.iter_lane(1)).collect();
+        assert_eq!(walk, vec![(0, 0), (0, 1), (3, 0), (3, 1), (3, 2)]);
+    }
+
+    #[test]
+    fn split_flat_reassembles_tensors() {
+        let plan = LanePlan::new(vec![2, 0, 3], 2);
+        let split = plan.split_flat(vec![1, 2, 3, 4, 5]);
+        assert_eq!(split, vec![vec![1, 2], vec![], vec![3, 4, 5]]);
+    }
+
+    #[test]
+    fn prop_iter_matches_locate() {
+        forall("lane iter == locate", 40, |g| {
+            let n_tensors = g.usize_range(1, 6);
+            let counts: Vec<usize> = (0..n_tensors).map(|_| g.usize_range(0, 40)).collect();
+            let lanes = g.usize_range(1, 9);
+            let plan = LanePlan::new(counts, lanes);
+            let mut walked = 0usize;
+            for l in 0..lanes {
+                for (step, (ti, idx)) in plan.iter_lane(l).enumerate() {
+                    let pos = plan.lane_range(l).start + step;
+                    assert_eq!(plan.locate(pos), (ti, idx));
+                    walked += 1;
+                }
+            }
+            assert_eq!(walked, plan.total());
+        });
+    }
+}

@@ -14,6 +14,26 @@
 //!      third curve in Fig. 3);
 //!    - `Order0` mode: plain adaptive arithmetic coding, no model.
 //!
+//! ## Coding lanes (container format 2)
+//!
+//! The arithmetic stage is inherently serial *per stream*, so format 2
+//! shards every parameter set's symbol sequence into `L` fixed-size
+//! **lanes** ([`lanes::LanePlan`]): each lane gets its own arithmetic
+//! stream and its own model replica, making all `3 × L` (set × lane)
+//! coding tasks independent. Encode *and* decode fan the tasks out over a
+//! scoped work pool ([`crate::util::pool`]); lane bytes are a pure
+//! function of (config, symbols, reference maps), so the container is
+//! bit-deterministic regardless of scheduling. The per-lane model resets
+//! cost a small, bounded amount of ratio (each lane re-learns the
+//! marginal; the reference warmup below largely hides this) in exchange
+//! for near-linear encode/decode scaling — measured by
+//! `cargo bench --bench hotpath` (see EXPERIMENTS.md).
+//!
+//! Legacy format-1 containers (single stream per set, tensor-boundary
+//! batch flushes) remain fully decodable; [`Codec::encode_format1`] keeps
+//! the writer side of that path alive for fixtures and compatibility
+//! tests. [`Codec::decode`] dispatches on the header's `format` field.
+//!
 //! Decode mirrors the stages in reverse. The decoder needs (a) the
 //! container, (b) the reconstructed reference checkpoint, (c) the
 //! reference's *symbol maps* ([`SymbolMaps`], carried along the chain by
@@ -21,20 +41,27 @@
 //! reconstructed checkpoint it knows the decoder will produce, so chains
 //! use reconstructed references on both sides and stay bit-identical.
 
+mod lanes;
 mod stream;
 
+pub use lanes::LanePlan;
 pub use stream::{StreamCoder, StreamDecoder};
 
 use crate::checkpoint::Checkpoint;
 use crate::container::{centers_from_bytes, centers_to_bytes, Container};
 use crate::context::ContextExtractor;
 use crate::delta;
-use crate::lstm::{Backend, LstmCfg};
+use crate::lstm::{Backend, LstmCfg, ProbModel};
 use crate::prune::{self, PruneConfig};
 use crate::quant::{self, QuantConfig, Quantized};
-use crate::tensor::{Tensor, TensorSet};
+use crate::tensor::{rows_cols_of, Tensor, TensorSet};
 use crate::util::json::Json;
+use crate::util::pool::{self, Task};
 use crate::{ac, Error, Result};
+
+/// Hard cap on coding lanes (64 streams × 3 sets is far past the point of
+/// diminishing returns and bounds the per-lane stream overhead).
+pub const MAX_LANES: usize = 64;
 
 /// Entropy-coding mode for the quantized symbols.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -67,6 +94,11 @@ impl ContextMode {
             "order0" => Ok(ContextMode::Order0),
             other => Err(Error::format(format!("unknown context mode '{other}'"))),
         }
+    }
+    /// True for the modes whose contexts come from the reference symbol
+    /// maps (and which therefore run the reference warmup).
+    fn uses_reference_context(&self) -> bool {
+        matches!(self, ContextMode::Lstm | ContextMode::Mixed)
     }
 }
 
@@ -105,6 +137,13 @@ pub struct CodecConfig {
     /// k-means fitting controls.
     pub quant_iters: usize,
     pub quant_sample_cap: usize,
+    /// Coding lanes per parameter set (format 2): each lane is an
+    /// independent arithmetic stream + model replica, so encode/decode
+    /// parallelism is `3 × lanes`. `0` = auto (available hardware
+    /// threads); clamped to [`MAX_LANES`]. The resolved value is recorded
+    /// in the container header, so decode reuses the encoder's lane
+    /// layout regardless of the decoding machine.
+    pub lanes: usize,
 }
 
 impl Default for CodecConfig {
@@ -125,6 +164,7 @@ impl Default for CodecConfig {
             log_moment2: true,
             quant_iters: 12,
             quant_sample_cap: 1 << 16,
+            lanes: 0,
         }
     }
 }
@@ -154,6 +194,13 @@ impl CodecConfig {
         }
     }
 
+    /// Resolve the lane count this config encodes with (`lanes == 0` ⇒
+    /// available parallelism), clamped to `1..=MAX_LANES`.
+    pub fn effective_lanes(&self) -> usize {
+        let lanes = if self.lanes == 0 { pool::available_workers() } else { self.lanes };
+        lanes.clamp(1, MAX_LANES)
+    }
+
     /// Serialize into a header fragment.
     fn to_json(&self) -> Json {
         Json::obj(vec![
@@ -174,6 +221,7 @@ impl CodecConfig {
             ("log_moment2", Json::Bool(self.log_moment2)),
             ("quant_iters", Json::num(self.quant_iters as f64)),
             ("quant_sample_cap", Json::num(self.quant_sample_cap as f64)),
+            ("lanes", Json::num(self.lanes as f64)),
         ])
     }
 
@@ -199,6 +247,8 @@ impl CodecConfig {
             log_moment2: j.req("log_moment2")?.as_bool().unwrap_or(true),
             quant_iters: j.req_usize("quant_iters")?,
             quant_sample_cap: j.req_usize("quant_sample_cap")?,
+            // Absent in format-1 headers (single implicit lane).
+            lanes: j.get("lanes").and_then(|v| v.as_usize()).unwrap_or(1),
         })
     }
 }
@@ -223,6 +273,8 @@ pub struct EncodeStats {
     /// Mean LSTM adaptation loss per set (0 for Order0).
     pub set_loss: [f64; 3],
     pub encode_seconds: f64,
+    /// Coding lanes used (1 for format-1 containers).
+    pub lanes: usize,
 }
 
 impl EncodeStats {
@@ -254,14 +306,34 @@ pub struct Codec {
     backend: Backend,
 }
 
-/// Per-set encode result (produced on a worker thread).
-struct SetEncoded {
+/// One quantized tensor (produced by a quantization worker).
+struct QuantOut {
+    q: Quantized,
+    /// Dequantized values (log-domain already inverted) — the
+    /// decoder-exact reconstruction before the reference is added back.
+    recon: Vec<f32>,
+}
+
+/// One encoded lane (produced by a lane worker).
+struct LaneOut {
+    bytes: Vec<u8>,
+    loss: f64,
+    symbols: usize,
+}
+
+/// Per-set encode result of the legacy format-1 path.
+struct SetEncodedV1 {
     quantized: Vec<Quantized>,
     stream: Vec<u8>,
     loss: f64,
-    /// Dequantized values per tensor (log-domain already inverted) — the
-    /// decoder-exact reconstruction before the reference is added back.
     recon_vals: Vec<Vec<f32>>,
+}
+
+/// Front-end output shared by both container formats.
+struct FrontEnd {
+    header_tensors: Vec<Json>,
+    weight_density: f64,
+    momentum_density: f64,
 }
 
 impl Codec {
@@ -277,7 +349,7 @@ impl Codec {
 
     /// Instantiate the entropy-stage probability model for this config
     /// (wrapping the LSTM in the order-0 mixture for `Mixed` mode).
-    fn make_model(&self) -> Result<Box<dyn crate::lstm::ProbModel>> {
+    fn make_model(&self) -> Result<Box<dyn ProbModel>> {
         let inner = self.backend.make(&self.cfg.lstm_cfg())?;
         Ok(match self.cfg.mode {
             ContextMode::Mixed => Box::new(crate::lstm::mix::MixModel::new(inner)),
@@ -285,23 +357,18 @@ impl Codec {
         })
     }
 
-    /// Compress `current` against `reference` (None ⇒ self-contained intra
-    /// frame). `prev_syms` are the reference's symbol maps, if available.
-    pub fn encode(
+    /// Run delta + prune on `current`, filling the header tensor list.
+    fn front_end(
         &self,
         current: &Checkpoint,
         reference: Option<&Checkpoint>,
-        prev_syms: Option<&SymbolMaps>,
-    ) -> Result<EncodeOutput> {
-        let t0 = std::time::Instant::now();
+    ) -> Result<(delta::Residual, FrontEnd)> {
         let cfg = &self.cfg;
-
         // 1. Delta (Eq. 3/6).
         let mut residual = match reference {
             Some(r) => delta::diff(current, r)?,
             None => delta::intra(current),
         };
-
         // 2. ExCP pruning (Eq. 4–5). Intra frames keep all weights
         //    (alpha = 0): pruning full weights would destroy the model.
         let prune_cfg = if reference.is_some() {
@@ -311,7 +378,6 @@ impl Codec {
         };
         let pstats = prune::prune_residual(&mut residual, &current.weights, &prune_cfg);
 
-        // 3+4. Quantize and entropy-code each set.
         let mut header_tensors = Vec::new();
         for e in residual.dw.iter() {
             header_tensors.push(Json::obj(vec![
@@ -322,58 +388,28 @@ impl Codec {
                 ),
             ]));
         }
+        Ok((
+            residual,
+            FrontEnd {
+                header_tensors,
+                weight_density: pstats.weight_density(),
+                momentum_density: pstats.momentum_density(),
+            },
+        ))
+    }
 
-        // The three parameter-set streams are fully independent (own model,
-        // own arithmetic stream), so they encode on three worker threads.
-        let sets = [&residual.dw, &residual.exp_avg, &residual.exp_avg_sq];
-        let mut results: Vec<Result<SetEncoded>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = sets
-                .iter()
-                .enumerate()
-                .map(|(k, set)| {
-                    let set: &TensorSet = set;
-                    scope.spawn(move || self.encode_one_set(k, set, prev_syms))
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("set worker panicked")).collect()
-        });
-
-        let mut container = Container::new(Json::Null); // header set at the end
-        let mut syms = SymbolMaps::default();
-        let mut set_bytes = [0usize; 3];
-        let mut set_loss = [0.0f64; 3];
-        let mut recon = Checkpoint { step: current.step, ..Default::default() };
-        for (k, result) in results.drain(..).enumerate() {
-            let enc = result?;
-            for q in &enc.quantized {
-                container.push_blob(centers_to_bytes(&q.centers));
-            }
-            set_bytes[k] = enc.stream.len();
-            set_loss[k] = enc.loss;
-            container.push_blob(enc.stream);
-            for (e, vals) in sets[k].iter().zip(enc.recon_vals) {
-                let tensor = Tensor::new(e.tensor.shape().to_vec(), vals)?;
-                match k {
-                    0 => recon.weights.insert(e.name.clone(), tensor),
-                    1 => recon.exp_avg.insert(e.name.clone(), tensor),
-                    _ => recon.exp_avg_sq.insert(e.name.clone(), tensor),
-                }
-            }
-            syms.sets[k] = enc.quantized.into_iter().map(|q| q.symbols).collect();
-        }
-        // Add the reference back onto the weight residuals — the same f32
-        // op sequence the decoder performs, so recon is decode-exact.
-        if let Some(r) = reference {
-            for (d, rt) in recon.weights.iter_mut().zip(r.weights.iter()) {
-                for (x, &rv) in d.tensor.data_mut().iter_mut().zip(rt.tensor.data()) {
-                    *x += rv;
-                }
-            }
-        }
-
-        // Header.
-        let header = Json::obj(vec![
-            ("format", Json::num(1)),
+    /// Shared header assembly.
+    fn make_header(
+        &self,
+        format: u64,
+        current: &Checkpoint,
+        reference: Option<&Checkpoint>,
+        prev_syms: Option<&SymbolMaps>,
+        front: &FrontEnd,
+        cfg_json: Json,
+    ) -> Json {
+        Json::obj(vec![
+            ("format", Json::num(format as f64)),
             ("step", Json::num(current.step as f64)),
             (
                 "ref_step",
@@ -384,34 +420,622 @@ impl Codec {
             ),
             ("backend", Json::str(self.backend.id())),
             ("has_prev_syms", Json::Bool(prev_syms.is_some())),
-            ("codec", cfg.to_json()),
-            ("tensors", Json::Arr(header_tensors)),
+            ("codec", cfg_json),
+            ("tensors", Json::Arr(front.header_tensors.clone())),
             ("raw_bytes", Json::num(current.raw_bytes() as f64)),
-            ("weight_density", Json::num(pstats.weight_density())),
-            ("momentum_density", Json::num(pstats.momentum_density())),
-        ]);
-        container.header = header;
+            ("weight_density", Json::num(front.weight_density)),
+            ("momentum_density", Json::num(front.momentum_density)),
+        ])
+    }
+
+    /// Compress `current` against `reference` (None ⇒ self-contained intra
+    /// frame). `prev_syms` are the reference's symbol maps, if available.
+    /// Writes a format-2 (lane-parallel) container; both the quantization
+    /// and the `3 × lanes` entropy-coding tasks run on a scoped work pool.
+    pub fn encode(
+        &self,
+        current: &Checkpoint,
+        reference: Option<&Checkpoint>,
+        prev_syms: Option<&SymbolMaps>,
+    ) -> Result<EncodeOutput> {
+        let t0 = std::time::Instant::now();
+        let cfg = &self.cfg;
+        let lanes = cfg.effective_lanes();
+        let workers = pool::available_workers();
+
+        let (residual, front) = self.front_end(current, reference)?;
+        let sets = [&residual.dw, &residual.exp_avg, &residual.exp_avg_sq];
+
+        // Position layout — the three sets share it by format contract.
+        let counts: Vec<usize> = sets[0].iter().map(|e| e.tensor.len()).collect();
+        for set in &sets[1..] {
+            let same = set.len() == counts.len()
+                && set.iter().zip(&counts).all(|(e, &c)| e.tensor.len() == c);
+            if !same {
+                return Err(Error::shape("parameter sets must share one tensor layout"));
+            }
+        }
+        let plan = LanePlan::new(counts.clone(), lanes);
+        let extractors = self.build_extractors_from_sets(sets[0])?;
+        self.check_ref_maps(prev_syms, &counts)?;
+
+        // 3. Quantize every (set, tensor) on the pool.
+        let mut qtasks: Vec<Task<Result<QuantOut>>> = Vec::new();
+        for (k, set) in sets.iter().enumerate() {
+            let log_domain = k == 2 && cfg.log_moment2;
+            let qcfg = cfg.quant_cfg();
+            for e in set.iter() {
+                let data: &[f32] = e.tensor.data();
+                qtasks.push(Box::new(move || {
+                    let values = maybe_log(data, log_domain);
+                    let q = quant::quantize(&values, &qcfg)?;
+                    let mut recon = q.dequantize();
+                    if log_domain {
+                        for v in recon.iter_mut() {
+                            if *v != 0.0 {
+                                *v = v.exp();
+                            }
+                        }
+                    }
+                    Ok(QuantOut { q, recon })
+                }));
+            }
+        }
+        let mut qresults = pool::run_scoped(workers, qtasks)?.into_iter();
+        let mut quantized: [Vec<Quantized>; 3] = Default::default();
+        let mut recon_sets: [Vec<Vec<f32>>; 3] = Default::default();
+        for k in 0..3 {
+            for _ in 0..counts.len() {
+                let out = qresults.next().expect("quantization task missing")?;
+                quantized[k].push(out.q);
+                recon_sets[k].push(out.recon);
+            }
+        }
+
+        // 4. Entropy-code all 3 × lanes lane streams on the pool. Lanes
+        // read the per-tensor symbol vectors in place via the plan's
+        // (tensor, element) walk — no flattened copy of the symbols.
+        let mut ltasks: Vec<Task<Result<LaneOut>>> = Vec::with_capacity(3 * lanes);
+        for (k, set_syms) in quantized.iter().enumerate() {
+            let ref_maps = self.reference_maps(prev_syms, k);
+            for lane in 0..lanes {
+                let plan = &plan;
+                let extractors = extractors.as_slice();
+                let set_syms = set_syms.as_slice();
+                ltasks.push(Box::new(move || {
+                    self.encode_lane(plan, extractors, ref_maps, set_syms, lane)
+                }));
+            }
+        }
+        let mut lresults = pool::run_scoped(workers, ltasks)?.into_iter();
+
+        // Assemble the container: per set, center tables then lane streams.
+        let mut container = Container::new(Json::Null); // header set below
+        let mut set_bytes = [0usize; 3];
+        let mut set_loss = [0.0f64; 3];
+        for k in 0..3 {
+            for q in &quantized[k] {
+                container.push_blob(centers_to_bytes(&q.centers));
+            }
+            let mut loss_weighted = 0.0f64;
+            let mut syms_total = 0usize;
+            for _ in 0..lanes {
+                let lane = lresults.next().expect("lane task missing")?;
+                set_bytes[k] += lane.bytes.len();
+                loss_weighted += lane.loss * lane.symbols as f64;
+                syms_total += lane.symbols;
+                container.push_blob(lane.bytes);
+            }
+            set_loss[k] = if syms_total > 0 { loss_weighted / syms_total as f64 } else { 0.0 };
+        }
+
+        let (recon, syms) =
+            self.assemble_recon(current, reference, &sets, quantized, recon_sets)?;
+
+        let mut hdr_cfg = cfg.clone();
+        hdr_cfg.lanes = lanes; // record the resolved lane count
+        container.header =
+            self.make_header(2, current, reference, prev_syms, &front, hdr_cfg.to_json());
         let bytes = container.to_bytes();
 
         let stats = EncodeStats {
             raw_bytes: current.raw_bytes(),
             compressed_bytes: bytes.len(),
             set_bytes,
-            weight_density: pstats.weight_density(),
-            momentum_density: pstats.momentum_density(),
+            weight_density: front.weight_density,
+            momentum_density: front.momentum_density,
             set_loss,
             encode_seconds: t0.elapsed().as_secs_f64(),
+            lanes,
         };
         Ok(EncodeOutput { bytes, recon, syms, stats })
     }
 
-    /// Quantize + entropy-code one parameter set (runs on a worker thread).
-    fn encode_one_set(
+    /// Build the reconstruction + symbol maps from the quantization
+    /// results and add the reference back onto the weight residuals — the
+    /// same f32 op sequence the decoder performs, so recon is decode-exact.
+    fn assemble_recon(
+        &self,
+        current: &Checkpoint,
+        reference: Option<&Checkpoint>,
+        sets: &[&TensorSet; 3],
+        quantized: [Vec<Quantized>; 3],
+        recon_sets: [Vec<Vec<f32>>; 3],
+    ) -> Result<(Checkpoint, SymbolMaps)> {
+        let mut recon = Checkpoint { step: current.step, ..Default::default() };
+        let mut syms = SymbolMaps::default();
+        for (k, (qs, vals)) in quantized.into_iter().zip(recon_sets).enumerate() {
+            for (e, v) in sets[k].iter().zip(vals) {
+                let tensor = Tensor::new(e.tensor.shape().to_vec(), v)?;
+                match k {
+                    0 => recon.weights.insert(e.name.clone(), tensor),
+                    1 => recon.exp_avg.insert(e.name.clone(), tensor),
+                    _ => recon.exp_avg_sq.insert(e.name.clone(), tensor),
+                }
+            }
+            syms.sets[k] = qs.into_iter().map(|q| q.symbols).collect();
+        }
+        if let Some(r) = reference {
+            for (d, rt) in recon.weights.iter_mut().zip(r.weights.iter()) {
+                for (x, &rv) in d.tensor.data_mut().iter_mut().zip(rt.tensor.data()) {
+                    *x += rv;
+                }
+            }
+        }
+        Ok((recon, syms))
+    }
+
+    /// The reference symbol maps used for set `k`'s contexts (None unless
+    /// the mode consumes reference context and the maps are available).
+    fn reference_maps<'a>(
+        &self,
+        prev_syms: Option<&'a SymbolMaps>,
+        k: usize,
+    ) -> Option<&'a [Vec<u16>]> {
+        match (self.cfg.mode.uses_reference_context(), prev_syms) {
+            (true, Some(p)) => Some(p.sets[k].as_slice()),
+            _ => None,
+        }
+    }
+
+    /// Context extractors for a set's tensors (encode side).
+    fn build_extractors_from_sets(&self, set: &TensorSet) -> Result<Vec<ContextExtractor>> {
+        set.iter()
+            .map(|e| {
+                let (rows, cols) = e.tensor.rows_cols();
+                ContextExtractor::new(rows, cols, self.cfg.window)
+            })
+            .collect()
+    }
+
+    /// Context extractors from bare shapes (decode side).
+    fn build_extractors_from_shapes(&self, shapes: &[Vec<usize>]) -> Result<Vec<ContextExtractor>> {
+        shapes
+            .iter()
+            .map(|s| {
+                let (rows, cols) = rows_cols_of(s);
+                ContextExtractor::new(rows, cols, self.cfg.window)
+            })
+            .collect()
+    }
+
+    /// Reject reference symbol maps whose sizes disagree with the current
+    /// tensor layout (both sides check, so the failure is symmetric).
+    fn check_ref_maps(&self, prev_syms: Option<&SymbolMaps>, counts: &[usize]) -> Result<()> {
+        if !self.cfg.mode.uses_reference_context() {
+            return Ok(());
+        }
+        let Some(p) = prev_syms else { return Ok(()) };
+        for set in &p.sets {
+            for (m, &c) in set.iter().zip(counts) {
+                if m.len() != c {
+                    return Err(Error::codec("reference symbol map size mismatch"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Encode one lane of one parameter set (runs on a pool worker).
+    /// `set_syms` are the set's per-tensor quantized symbols, indexed by
+    /// the plan's (tensor, element) walk.
+    fn encode_lane(
+        &self,
+        plan: &LanePlan,
+        extractors: &[ContextExtractor],
+        ref_maps: Option<&[Vec<u16>]>,
+        set_syms: &[Quantized],
+        lane: usize,
+    ) -> Result<LaneOut> {
+        let cfg = &self.cfg;
+        let symbols = plan.lane_range(lane).len();
+        match cfg.mode {
+            ContextMode::Order0 => {
+                let mut model = ac::AdaptiveModel::new(1 << cfg.bits);
+                let mut enc = ac::Encoder::new();
+                for (ti, idx) in plan.iter_lane(lane) {
+                    model.encode(&mut enc, set_syms[ti].symbols[idx]);
+                }
+                Ok(LaneOut { bytes: enc.finish(), loss: 0.0, symbols })
+            }
+            ContextMode::Lstm | ContextMode::ZeroContext | ContextMode::Mixed => {
+                let mut model = self.make_model()?;
+                if let Some(maps) = ref_maps {
+                    self.warmup_lane(&mut model, plan, extractors, maps, lane)?;
+                }
+                let seq = cfg.window * cfg.window;
+                let mut coder = StreamCoder::new(model);
+                let mut ctx = vec![0i32; seq];
+                for (ti, idx) in plan.iter_lane(lane) {
+                    let map = ref_maps.and_then(|m| m.get(ti)).map(|v| v.as_slice());
+                    extractors[ti].extract_or_zero(map, idx, &mut ctx);
+                    coder.push(&ctx, set_syms[ti].symbols[idx])?;
+                }
+                let (bytes, loss, _ideal) = coder.finish()?;
+                Ok(LaneOut { bytes, loss, symbols })
+            }
+        }
+    }
+
+    /// Decode one lane of one parameter set (runs on a pool worker).
+    fn decode_lane(
+        &self,
+        plan: &LanePlan,
+        extractors: &[ContextExtractor],
+        ref_maps: Option<&[Vec<u16>]>,
+        stream: &[u8],
+        lane: usize,
+    ) -> Result<Vec<u16>> {
+        let cfg = &self.cfg;
+        let n = plan.lane_range(lane).len();
+        match cfg.mode {
+            ContextMode::Order0 => {
+                let mut model = ac::AdaptiveModel::new(1 << cfg.bits);
+                let mut dec = ac::Decoder::new(stream)?;
+                Ok((0..n).map(|_| model.decode(&mut dec)).collect())
+            }
+            ContextMode::Lstm | ContextMode::ZeroContext | ContextMode::Mixed => {
+                let mut model = self.make_model()?;
+                if let Some(maps) = ref_maps {
+                    self.warmup_lane(&mut model, plan, extractors, maps, lane)?;
+                }
+                let seq = cfg.window * cfg.window;
+                let mut sd = StreamDecoder::new(model, stream)?;
+                let mut ctx = vec![0i32; seq];
+                for (ti, idx) in plan.iter_lane(lane) {
+                    let map = ref_maps.and_then(|m| m.get(ti)).map(|v| v.as_slice());
+                    extractors[ti].extract_or_zero(map, idx, &mut ctx);
+                    sd.push(&ctx)?;
+                }
+                sd.flush()?;
+                Ok(sd.take())
+            }
+        }
+    }
+
+    /// Reference warmup over one lane's positions (extension over the
+    /// paper; `cfg.warmup_passes`, 0 = paper-exact): train the fresh lane
+    /// model on the reference checkpoint's own (context → co-located
+    /// symbol) pairs before any coding. Both sides hold the reference
+    /// symbol maps, so the passes are bit-free and exactly mirrored. Each
+    /// lane warms on *its own* shard of the reference, keeping total
+    /// warmup cost constant in the lane count.
+    fn warmup_lane(
+        &self,
+        model: &mut Box<dyn ProbModel>,
+        plan: &LanePlan,
+        extractors: &[ContextExtractor],
+        ref_maps: &[Vec<u16>],
+        lane: usize,
+    ) -> Result<()> {
+        let cfg = &self.cfg;
+        if cfg.warmup_passes == 0 {
+            return Ok(());
+        }
+        let seq = cfg.window * cfg.window;
+        let stride = cfg.warmup_stride.max(1);
+        let batch = cfg.batch;
+        let mut ctx = vec![0i32; seq];
+        let mut ctxs: Vec<i32> = Vec::with_capacity(batch * seq);
+        let mut tgts: Vec<u16> = Vec::with_capacity(batch);
+        for _pass in 0..cfg.warmup_passes {
+            for (step, (ti, idx)) in plan.iter_lane(lane).enumerate() {
+                if step % stride != 0 {
+                    continue;
+                }
+                let Some(map) = ref_maps.get(ti) else { continue };
+                extractors[ti].extract_into(map, idx, &mut ctx);
+                ctxs.extend_from_slice(&ctx);
+                tgts.push(map[idx]);
+                if tgts.len() == batch {
+                    model.update(&ctxs, &tgts)?;
+                    ctxs.clear();
+                    tgts.clear();
+                }
+            }
+            if !tgts.is_empty() {
+                model.update(&ctxs, &tgts)?;
+                ctxs.clear();
+                tgts.clear();
+            }
+        }
+        Ok(())
+    }
+
+    /// Decompress a container (either format). `reference` must be the
+    /// reconstructed checkpoint at the header's `ref_step`; `prev_syms`
+    /// must be present iff the encoder had them (recorded in the header).
+    pub fn decode(
+        backend: &Backend,
+        bytes: &[u8],
+        reference: Option<&Checkpoint>,
+        prev_syms: Option<&SymbolMaps>,
+    ) -> Result<(Checkpoint, SymbolMaps)> {
+        let container = Container::from_bytes(bytes)?;
+        let h = &container.header;
+        let format = h.get("format").and_then(|v| v.as_u64()).unwrap_or(1);
+        if format != 1 && format != 2 {
+            return Err(Error::format(format!("unsupported container format {format}")));
+        }
+        let cfg = CodecConfig::from_json(h.req("codec")?)?;
+        let step = h.req_usize("step")? as u64;
+        let ref_step = h.get("ref_step").and_then(|v| v.as_u64());
+        let backend_id = h.req_str("backend")?;
+        if backend_id != backend.id() {
+            return Err(Error::codec(format!(
+                "container was encoded with backend '{backend_id}', decoder uses '{}'",
+                backend.id()
+            )));
+        }
+        let had_prev = h.req("has_prev_syms")?.as_bool().unwrap_or(false);
+        if had_prev && prev_syms.is_none() && cfg.mode.uses_reference_context() {
+            return Err(Error::codec(
+                "container requires the reference's symbol maps (decode the chain in order)",
+            ));
+        }
+        match (ref_step, reference) {
+            (Some(rs), Some(r)) if r.step != rs => {
+                return Err(Error::codec(format!(
+                    "reference step {} does not match container ref_step {rs}",
+                    r.step
+                )));
+            }
+            (Some(rs), None) => {
+                return Err(Error::codec(format!("container needs reference step {rs}")));
+            }
+            _ => {}
+        }
+
+        // Tensor layout.
+        let mut names = Vec::new();
+        let mut shapes: Vec<Vec<usize>> = Vec::new();
+        for t in h.req_arr("tensors")? {
+            names.push(t.req_str("name")?.to_string());
+            let shape: Vec<usize> = t
+                .req_arr("shape")?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| Error::format("bad dim")))
+                .collect::<Result<_>>()?;
+            shapes.push(shape);
+        }
+        let n_tensors = names.len();
+        let counts: Vec<usize> = shapes.iter().map(|s| s.iter().product()).collect();
+
+        let codec = Codec::new(cfg.clone(), backend.clone());
+        let prev = prev_syms.filter(|_| had_prev);
+        codec.check_ref_maps(prev, &counts)?;
+
+        // Per set: the center tables, then the entropy stream(s). The
+        // header's lane count is untrusted input — bound it before any
+        // index arithmetic or allocation uses it.
+        if format == 2 && !(1..=MAX_LANES).contains(&cfg.lanes) {
+            return Err(Error::format(format!(
+                "container lane count {} outside 1..={MAX_LANES}",
+                cfg.lanes
+            )));
+        }
+        let streams_per_set = if format == 2 { cfg.lanes } else { 1 };
+        let mut per_set_centers: Vec<Vec<Vec<f32>>> = Vec::with_capacity(3);
+        for k in 0..3 {
+            let base = k * (n_tensors + streams_per_set);
+            let mut centers = Vec::with_capacity(n_tensors);
+            for ti in 0..n_tensors {
+                centers.push(centers_from_bytes(container.blob(base + ti)?)?);
+            }
+            per_set_centers.push(centers);
+        }
+
+        let syms = if format == 2 {
+            codec.decode_sets_v2(&container, &shapes, &counts, prev, streams_per_set)?
+        } else {
+            codec.decode_sets_v1(&container, &shapes, &counts, prev)?
+        };
+
+        // Dequantize + reconstruct.
+        let mut out = Checkpoint { step, ..Default::default() };
+        for k in 0..3 {
+            let log_domain = k == 2 && cfg.log_moment2;
+            for ((name, shape), (symbols, centers)) in names
+                .iter()
+                .zip(&shapes)
+                .zip(syms.sets[k].iter().zip(&per_set_centers[k]))
+            {
+                for &s in symbols {
+                    if s as usize > centers.len() {
+                        return Err(Error::codec("decoded symbol out of center range"));
+                    }
+                }
+                let q = Quantized { symbols: symbols.clone(), centers: centers.clone() };
+                let mut vals = q.dequantize();
+                if log_domain {
+                    for v in vals.iter_mut() {
+                        if *v != 0.0 {
+                            *v = v.exp();
+                        }
+                    }
+                }
+                let tensor = Tensor::new(shape.clone(), vals)?;
+                match k {
+                    0 => out.weights.insert(name.clone(), tensor),
+                    1 => out.exp_avg.insert(name.clone(), tensor),
+                    _ => out.exp_avg_sq.insert(name.clone(), tensor),
+                }
+            }
+        }
+        // Add the reference back onto the weight residuals.
+        if let Some(r) = reference {
+            for (d, rt) in out.weights.iter_mut().zip(r.weights.iter()) {
+                for (x, &rv) in d.tensor.data_mut().iter_mut().zip(rt.tensor.data()) {
+                    *x += rv;
+                }
+            }
+        }
+        Ok((out, syms))
+    }
+
+    /// Decode all `3 × lanes` format-2 lane streams on the pool and stitch
+    /// the per-lane shards back into per-tensor symbol maps.
+    fn decode_sets_v2(
+        &self,
+        container: &Container,
+        shapes: &[Vec<usize>],
+        counts: &[usize],
+        prev_syms: Option<&SymbolMaps>,
+        lanes: usize,
+    ) -> Result<SymbolMaps> {
+        let n_tensors = counts.len();
+        let plan = LanePlan::new(counts.to_vec(), lanes);
+        let extractors = self.build_extractors_from_shapes(shapes)?;
+        let mut tasks: Vec<Task<Result<Vec<u16>>>> = Vec::with_capacity(3 * lanes);
+        for k in 0..3 {
+            let base = k * (n_tensors + lanes) + n_tensors;
+            let ref_maps = self.reference_maps(prev_syms, k);
+            for lane in 0..lanes {
+                let stream = container.blob(base + lane)?;
+                let plan = &plan;
+                let extractors = extractors.as_slice();
+                tasks.push(Box::new(move || {
+                    self.decode_lane(plan, extractors, ref_maps, stream, lane)
+                }));
+            }
+        }
+        let mut results = pool::run_scoped(pool::available_workers(), tasks)?.into_iter();
+        let mut syms = SymbolMaps::default();
+        for k in 0..3 {
+            // Scatter each lane's shard straight into the per-tensor maps.
+            let mut per_tensor: Vec<Vec<u16>> =
+                counts.iter().map(|&c| vec![0u16; c]).collect();
+            for lane in 0..lanes {
+                let decoded = results.next().expect("lane decode missing")?;
+                if decoded.len() != plan.lane_range(lane).len() {
+                    return Err(Error::codec("lane decoded wrong symbol count"));
+                }
+                for ((ti, idx), s) in plan.iter_lane(lane).zip(decoded) {
+                    per_tensor[ti][idx] = s;
+                }
+            }
+            syms.sets[k] = per_tensor;
+        }
+        Ok(syms)
+    }
+
+    /// Decode the three legacy format-1 set streams (single stream per
+    /// set, tensor-boundary flushes) on the pool.
+    fn decode_sets_v1(
+        &self,
+        container: &Container,
+        shapes: &[Vec<usize>],
+        counts: &[usize],
+        prev_syms: Option<&SymbolMaps>,
+    ) -> Result<SymbolMaps> {
+        let n_tensors = counts.len();
+        let mut tasks: Vec<Task<Result<Vec<Vec<u16>>>>> = Vec::with_capacity(3);
+        for k in 0..3 {
+            let stream = container.blob(k * (n_tensors + 1) + n_tensors)?;
+            tasks.push(Box::new(move || {
+                self.decode_set_format1(stream, shapes, counts, prev_syms, k)
+            }));
+        }
+        let results = pool::run_scoped(pool::available_workers(), tasks)?;
+        let mut syms = SymbolMaps::default();
+        for (k, r) in results.into_iter().enumerate() {
+            syms.sets[k] = r?;
+        }
+        Ok(syms)
+    }
+
+    // ---- Legacy format-1 writer/reader -------------------------------
+    //
+    // The pre-lane pipeline, kept verbatim in behavior: one arithmetic
+    // stream per parameter set, batches flushed at tensor boundaries,
+    // warmup strided per tensor. Containers written by older builds (or
+    // by `encode_format1`) decode bit-exactly through `Codec::decode`.
+
+    /// Compress into a legacy format-1 container (single coding lane per
+    /// set). Prefer [`Codec::encode`]; this exists for compatibility
+    /// fixtures and the format-1 regression tests.
+    pub fn encode_format1(
+        &self,
+        current: &Checkpoint,
+        reference: Option<&Checkpoint>,
+        prev_syms: Option<&SymbolMaps>,
+    ) -> Result<EncodeOutput> {
+        let t0 = std::time::Instant::now();
+        let (residual, front) = self.front_end(current, reference)?;
+        let sets = [&residual.dw, &residual.exp_avg, &residual.exp_avg_sq];
+
+        let mut tasks: Vec<Task<Result<SetEncodedV1>>> = Vec::with_capacity(3);
+        for (k, set) in sets.iter().enumerate() {
+            let set: &TensorSet = set;
+            tasks.push(Box::new(move || self.encode_one_set_format1(k, set, prev_syms)));
+        }
+        let results = pool::run_scoped(pool::available_workers(), tasks)?;
+
+        let mut container = Container::new(Json::Null);
+        let mut set_bytes = [0usize; 3];
+        let mut set_loss = [0.0f64; 3];
+        let mut quantized: [Vec<Quantized>; 3] = Default::default();
+        let mut recon_sets: [Vec<Vec<f32>>; 3] = Default::default();
+        for (k, result) in results.into_iter().enumerate() {
+            let enc = result?;
+            for q in &enc.quantized {
+                container.push_blob(centers_to_bytes(&q.centers));
+            }
+            set_bytes[k] = enc.stream.len();
+            set_loss[k] = enc.loss;
+            container.push_blob(enc.stream);
+            quantized[k] = enc.quantized;
+            recon_sets[k] = enc.recon_vals;
+        }
+        let (recon, syms) =
+            self.assemble_recon(current, reference, &sets, quantized, recon_sets)?;
+
+        let mut hdr_cfg = self.cfg.clone();
+        hdr_cfg.lanes = 1;
+        container.header =
+            self.make_header(1, current, reference, prev_syms, &front, hdr_cfg.to_json());
+        let bytes = container.to_bytes();
+        let stats = EncodeStats {
+            raw_bytes: current.raw_bytes(),
+            compressed_bytes: bytes.len(),
+            set_bytes,
+            weight_density: front.weight_density,
+            momentum_density: front.momentum_density,
+            set_loss,
+            encode_seconds: t0.elapsed().as_secs_f64(),
+            lanes: 1,
+        };
+        Ok(EncodeOutput { bytes, recon, syms, stats })
+    }
+
+    /// Quantize + entropy-code one parameter set as format 1 (one stream,
+    /// tensor-boundary flushes).
+    fn encode_one_set_format1(
         &self,
         k: usize,
         set: &TensorSet,
         prev_syms: Option<&SymbolMaps>,
-    ) -> Result<SetEncoded> {
+    ) -> Result<SetEncodedV1> {
         let cfg = &self.cfg;
         let log_domain = k == 2 && cfg.log_moment2;
         let mut quantized: Vec<Quantized> = Vec::with_capacity(set.len());
@@ -444,29 +1068,26 @@ impl Codec {
             }
             ContextMode::Lstm | ContextMode::ZeroContext | ContextMode::Mixed => {
                 let mut model = self.make_model()?;
-                if matches!(cfg.mode, ContextMode::Lstm | ContextMode::Mixed) {
+                if cfg.mode.uses_reference_context() {
                     if let Some(p) = prev_syms {
-                        self.warmup(&mut model, set, &p.sets[k])?;
+                        let shapes: Vec<Vec<usize>> =
+                            set.iter().map(|e| e.tensor.shape().to_vec()).collect();
+                        self.warmup_format1(&mut model, &shapes, &p.sets[k])?;
                     }
                 }
                 let seq = cfg.window * cfg.window;
                 let mut coder = StreamCoder::new(model);
-                let zero_ctx = vec![0i32; seq];
                 let mut ctx_buf = vec![0i32; seq];
                 for (ti, (e, q)) in set.iter().zip(&quantized).enumerate() {
                     let (rows, cols) = e.tensor.rows_cols();
                     let extractor = ContextExtractor::new(rows, cols, cfg.window)?;
-                    let ref_map: Option<&[u16]> = match (cfg.mode, prev_syms) {
-                        (ContextMode::Lstm | ContextMode::Mixed, Some(p)) => {
-                            p.sets[k].get(ti).map(|v| v.as_slice())
-                        }
-                        _ => None,
-                    };
+                    let ref_map: Option<&[u16]> =
+                        match (cfg.mode.uses_reference_context(), prev_syms) {
+                            (true, Some(p)) => p.sets[k].get(ti).map(|v| v.as_slice()),
+                            _ => None,
+                        };
                     for (idx, &sym) in q.symbols.iter().enumerate() {
-                        match ref_map {
-                            Some(m) => extractor.extract_into(m, idx, &mut ctx_buf),
-                            None => ctx_buf.copy_from_slice(&zero_ctx),
-                        }
+                        extractor.extract_or_zero(ref_map, idx, &mut ctx_buf);
                         coder.push(&ctx_buf, sym)?;
                     }
                     coder.flush()?;
@@ -475,19 +1096,16 @@ impl Codec {
                 (bytes, loss)
             }
         };
-        Ok(SetEncoded { quantized, stream, loss, recon_vals })
+        Ok(SetEncodedV1 { quantized, stream, loss, recon_vals })
     }
 
-    /// Reference warmup (extension; `cfg.warmup_passes`, 0 = paper-exact):
-    /// train the fresh model on the reference checkpoint's own
-    /// (context → co-located symbol) pairs before any coding. Both sides
-    /// hold the reference symbol maps, so the passes are bit-free and
-    /// exactly mirrored. This teaches the identity-plus-noise mapping and
-    /// the marginal up front, removing most of the online cold start.
-    fn warmup(
+    /// Format-1 reference warmup: whole set, strided per tensor, batches
+    /// flushed at tensor boundaries (the original behavior — the format-2
+    /// lane warmup is [`Self::warmup_lane`]).
+    fn warmup_format1(
         &self,
-        model: &mut Box<dyn crate::lstm::ProbModel>,
-        set: &TensorSet,
+        model: &mut Box<dyn ProbModel>,
+        shapes: &[Vec<usize>],
         ref_maps: &[Vec<u16>],
     ) -> Result<()> {
         let cfg = &self.cfg;
@@ -500,12 +1118,13 @@ impl Codec {
         let mut ctxs: Vec<i32> = Vec::with_capacity(batch * seq);
         let mut tgts: Vec<u16> = Vec::with_capacity(batch);
         for _pass in 0..cfg.warmup_passes {
-            for (ti, e) in set.iter().enumerate() {
+            for (ti, shape) in shapes.iter().enumerate() {
                 let Some(ref_map) = ref_maps.get(ti) else { continue };
-                if ref_map.len() != e.tensor.len() {
+                let count: usize = shape.iter().product();
+                if ref_map.len() != count {
                     return Err(Error::codec("reference symbol map size mismatch"));
                 }
-                let (rows, cols) = e.tensor.rows_cols();
+                let (rows, cols) = rows_cols_of(shape);
                 let extractor = ContextExtractor::new(rows, cols, cfg.window)?;
                 let stride = cfg.warmup_stride.max(1);
                 for (idx, &sym) in ref_map.iter().enumerate().step_by(stride) {
@@ -528,152 +1147,23 @@ impl Codec {
         Ok(())
     }
 
-    /// Decompress a container. `reference` must be the reconstructed
-    /// checkpoint at the header's `ref_step`; `prev_syms` must be present
-    /// iff the encoder had them (recorded in the header).
-    pub fn decode(
-        backend: &Backend,
-        bytes: &[u8],
-        reference: Option<&Checkpoint>,
-        prev_syms: Option<&SymbolMaps>,
-    ) -> Result<(Checkpoint, SymbolMaps)> {
-        let container = Container::from_bytes(bytes)?;
-        let h = &container.header;
-        let cfg = CodecConfig::from_json(h.req("codec")?)?;
-        let step = h.req_usize("step")? as u64;
-        let ref_step = h.get("ref_step").and_then(|v| v.as_u64());
-        let backend_id = h.req_str("backend")?;
-        if backend_id != backend.id() {
-            return Err(Error::codec(format!(
-                "container was encoded with backend '{backend_id}', decoder uses '{}'",
-                backend.id()
-            )));
-        }
-        let had_prev = h.req("has_prev_syms")?.as_bool().unwrap_or(false);
-        if had_prev
-            && prev_syms.is_none()
-            && matches!(cfg.mode, ContextMode::Lstm | ContextMode::Mixed)
-        {
-            return Err(Error::codec(
-                "container requires the reference's symbol maps (decode the chain in order)",
-            ));
-        }
-        match (ref_step, reference) {
-            (Some(rs), Some(r)) if r.step != rs => {
-                return Err(Error::codec(format!(
-                    "reference step {} does not match container ref_step {rs}",
-                    r.step
-                )));
-            }
-            (Some(rs), None) => {
-                return Err(Error::codec(format!("container needs reference step {rs}")));
-            }
-            _ => {}
-        }
-
-        // Tensor layout.
-        let mut names = Vec::new();
-        let mut shapes = Vec::new();
-        for t in h.req_arr("tensors")? {
-            names.push(t.req_str("name")?.to_string());
-            let shape: Vec<usize> = t
-                .req_arr("shape")?
-                .iter()
-                .map(|d| d.as_usize().ok_or_else(|| Error::format("bad dim")))
-                .collect::<Result<_>>()?;
-            shapes.push(shape);
-        }
-        let n_tensors = names.len();
-
-        // Blobs: per set, n_tensors center tables then 1 stream. The three
-        // streams decode on three worker threads (mirrors encode).
-        let codec = Codec::new(cfg.clone(), backend.clone());
-        let mut per_set_centers: Vec<Vec<Vec<f32>>> = Vec::with_capacity(3);
-        let mut per_set_stream: Vec<&[u8]> = Vec::with_capacity(3);
-        for k in 0..3 {
-            let base = k * (n_tensors + 1);
-            let mut centers = Vec::with_capacity(n_tensors);
-            for ti in 0..n_tensors {
-                centers.push(centers_from_bytes(container.blob(base + ti)?)?);
-            }
-            per_set_centers.push(centers);
-            per_set_stream.push(container.blob(base + n_tensors)?);
-        }
-        let codec_ref = &codec;
-        let shapes_ref = &shapes;
-        let decoded: Vec<Result<Vec<Vec<u16>>>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..3)
-                .map(|k| {
-                    let centers = &per_set_centers[k];
-                    let stream = per_set_stream[k];
-                    let prev = prev_syms.filter(|_| had_prev);
-                    scope.spawn(move || {
-                        codec_ref.decode_set(stream, shapes_ref, centers, prev, k)
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("set worker panicked")).collect()
-        });
-        let mut syms = SymbolMaps::default();
-        let centers_all = per_set_centers;
-        for (k, d) in decoded.into_iter().enumerate() {
-            syms.sets[k] = d?;
-        }
-
-        // Dequantize + reconstruct.
-        let mut out = Checkpoint { step, ..Default::default() };
-        for k in 0..3 {
-            let log_domain = k == 2 && cfg.log_moment2;
-            for ((name, shape), (symbols, centers)) in names
-                .iter()
-                .zip(&shapes)
-                .zip(syms.sets[k].iter().zip(&centers_all[k]))
-            {
-                let q = Quantized { symbols: symbols.clone(), centers: centers.clone() };
-                let mut vals = q.dequantize();
-                if log_domain {
-                    for v in vals.iter_mut() {
-                        if *v != 0.0 {
-                            *v = v.exp();
-                        }
-                    }
-                }
-                let tensor = Tensor::new(shape.clone(), vals)?;
-                match k {
-                    0 => out.weights.insert(name.clone(), tensor),
-                    1 => out.exp_avg.insert(name.clone(), tensor),
-                    _ => out.exp_avg_sq.insert(name.clone(), tensor),
-                }
-            }
-        }
-        // Add the reference back onto the weight residuals.
-        if let Some(r) = reference {
-            for (d, rt) in out.weights.iter_mut().zip(r.weights.iter()) {
-                for (x, &rv) in d.tensor.data_mut().iter_mut().zip(rt.tensor.data()) {
-                    *x += rv;
-                }
-            }
-        }
-        Ok((out, syms))
-    }
-
-    /// Decode one set's symbol stream.
-    fn decode_set(
+    /// Decode one format-1 set stream (single stream, tensor-boundary
+    /// flushes).
+    fn decode_set_format1(
         &self,
         stream: &[u8],
         shapes: &[Vec<usize>],
-        centers: &[Vec<f32>],
+        counts: &[usize],
         prev_syms: Option<&SymbolMaps>,
         k: usize,
     ) -> Result<Vec<Vec<u16>>> {
         let cfg = &self.cfg;
-        let counts: Vec<usize> = shapes.iter().map(|s| s.iter().product()).collect();
         match cfg.mode {
             ContextMode::Order0 => {
                 let mut model = ac::AdaptiveModel::new(1 << cfg.bits);
                 let mut dec = ac::Decoder::new(stream)?;
                 let mut out = Vec::with_capacity(shapes.len());
-                for &n in &counts {
+                for &n in counts {
                     let mut syms = Vec::with_capacity(n);
                     for _ in 0..n {
                         syms.push(model.decode(&mut dec));
@@ -684,49 +1174,31 @@ impl Codec {
             }
             ContextMode::Lstm | ContextMode::ZeroContext | ContextMode::Mixed => {
                 let mut model = self.make_model()?;
-                if matches!(cfg.mode, ContextMode::Lstm | ContextMode::Mixed) {
+                if cfg.mode.uses_reference_context() {
                     if let Some(p) = prev_syms {
                         // Mirror the encoder's warmup exactly: same shapes
                         // (from the container header), same ref maps.
-                        let mut set = TensorSet::new();
-                        for (ti, shape) in shapes.iter().enumerate() {
-                            set.insert(format!("{ti:06}"), Tensor::zeros(shape.clone()));
-                        }
-                        self.warmup(&mut model, &set, &p.sets[k])?;
+                        self.warmup_format1(&mut model, shapes, &p.sets[k])?;
                     }
                 }
                 let seq = cfg.window * cfg.window;
                 let mut sd = StreamDecoder::new(model, stream)?;
-                let zero_ctx = vec![0i32; seq];
                 let mut ctx_buf = vec![0i32; seq];
                 let mut out = Vec::with_capacity(shapes.len());
                 for (ti, shape) in shapes.iter().enumerate() {
-                    let t = Tensor::zeros(shape.clone());
-                    let (rows, cols) = t.rows_cols();
+                    let (rows, cols) = rows_cols_of(shape);
                     let extractor = ContextExtractor::new(rows, cols, cfg.window)?;
-                    let ref_map: Option<&[u16]> = match (cfg.mode, prev_syms) {
-                        (ContextMode::Lstm | ContextMode::Mixed, Some(p)) => {
-                            p.sets[k].get(ti).map(|v| v.as_slice())
-                        }
-                        _ => None,
-                    };
+                    let ref_map: Option<&[u16]> =
+                        match (cfg.mode.uses_reference_context(), prev_syms) {
+                            (true, Some(p)) => p.sets[k].get(ti).map(|v| v.as_slice()),
+                            _ => None,
+                        };
                     for idx in 0..counts[ti] {
-                        match ref_map {
-                            Some(m) => extractor.extract_into(m, idx, &mut ctx_buf),
-                            None => ctx_buf.copy_from_slice(&zero_ctx),
-                        }
+                        extractor.extract_or_zero(ref_map, idx, &mut ctx_buf);
                         sd.push(&ctx_buf)?;
                     }
                     sd.flush()?;
                     out.push(sd.take());
-                }
-                // Sanity: center indices must be in range.
-                for (syms, cs) in out.iter().zip(centers) {
-                    for &s in syms {
-                        if s as usize > cs.len() {
-                            return Err(Error::codec("decoded symbol out of center range"));
-                        }
-                    }
                 }
                 Ok(out)
             }
@@ -760,6 +1232,9 @@ mod tests {
             embed: 8,
             batch: 32,
             quant_iters: 6,
+            // Multi-lane by default so the unit suite exercises the lane
+            // fan-out; tests/lanes.rs covers the full (mode × lanes) grid.
+            lanes: 2,
             ..Default::default()
         }
     }
@@ -783,6 +1258,7 @@ mod tests {
         assert_eq!(d1, e1.recon, "delta decode == encoder recon");
         assert_eq!(s1, e1.syms);
         assert!(e1.stats.ratio() > 1.0, "ratio {}", e1.stats.ratio());
+        assert_eq!(e1.stats.lanes, 2);
     }
 
     #[test]
@@ -803,6 +1279,81 @@ mod tests {
     #[test]
     fn roundtrip_mixed_chain() {
         chain(ContextMode::Mixed);
+    }
+
+    #[test]
+    fn auto_lanes_resolve_to_hardware() {
+        let cfg = CodecConfig::default();
+        assert_eq!(cfg.lanes, 0);
+        let l = cfg.effective_lanes();
+        assert!((1..=MAX_LANES).contains(&l));
+        let pinned = CodecConfig { lanes: 7, ..Default::default() };
+        assert_eq!(pinned.effective_lanes(), 7);
+        let over = CodecConfig { lanes: 10_000, ..Default::default() };
+        assert_eq!(over.effective_lanes(), MAX_LANES);
+    }
+
+    #[test]
+    fn lane_counts_change_bytes_not_decodability() {
+        // More lanes ⇒ different container bytes (independent streams),
+        // identical reconstruction.
+        let c0 = Checkpoint::synthetic(1, &layers(), 21);
+        let c1 = Checkpoint::synthetic(2, &layers(), 22);
+        let mut recons = Vec::new();
+        for lanes in [1usize, 3] {
+            let codec = Codec::new(
+                CodecConfig { lanes, ..small_cfg(ContextMode::Lstm) },
+                Backend::Native,
+            );
+            let e0 = codec.encode(&c0, None, None).unwrap();
+            let e1 = codec.encode(&c1, Some(&e0.recon), Some(&e0.syms)).unwrap();
+            let (d0, s0) = Codec::decode(&Backend::Native, &e0.bytes, None, None).unwrap();
+            let (d1, _) =
+                Codec::decode(&Backend::Native, &e1.bytes, Some(&d0), Some(&s0)).unwrap();
+            assert_eq!(d1, e1.recon, "lanes={lanes}");
+            recons.push(d1);
+        }
+        // The quantization front-end is lane-independent, so the decoded
+        // checkpoints agree across lane counts.
+        assert_eq!(recons[0], recons[1]);
+    }
+
+    #[test]
+    fn format1_containers_still_decode() {
+        // The legacy writer produces format-1 containers; the unified
+        // decoder must reproduce its reconstruction bit-exactly.
+        for mode in [
+            ContextMode::Lstm,
+            ContextMode::ZeroContext,
+            ContextMode::Mixed,
+            ContextMode::Order0,
+        ] {
+            let codec = Codec::new(small_cfg(mode), Backend::Native);
+            let c0 = Checkpoint::synthetic(10, &layers(), 31);
+            let c1 = Checkpoint::synthetic(20, &layers(), 32);
+            let e0 = codec.encode_format1(&c0, None, None).unwrap();
+            let (d0, s0) = Codec::decode(&Backend::Native, &e0.bytes, None, None).unwrap();
+            assert_eq!(d0, e0.recon, "{mode:?} intra");
+            assert_eq!(s0, e0.syms);
+            let e1 = codec.encode_format1(&c1, Some(&e0.recon), Some(&e0.syms)).unwrap();
+            let (d1, s1) =
+                Codec::decode(&Backend::Native, &e1.bytes, Some(&d0), Some(&s0)).unwrap();
+            assert_eq!(d1, e1.recon, "{mode:?} delta");
+            assert_eq!(s1, e1.syms);
+            assert_eq!(e1.stats.lanes, 1);
+        }
+    }
+
+    #[test]
+    fn format1_and_format2_share_the_front_end() {
+        // Same prune+quant pipeline ⇒ identical reconstructions and
+        // symbol maps; only the entropy-stage bytes differ.
+        let codec = Codec::new(small_cfg(ContextMode::Lstm), Backend::Native);
+        let c0 = Checkpoint::synthetic(5, &layers(), 41);
+        let v1 = codec.encode_format1(&c0, None, None).unwrap();
+        let v2 = codec.encode(&c0, None, None).unwrap();
+        assert_eq!(v1.recon, v2.recon);
+        assert_eq!(v1.syms, v2.syms);
     }
 
     #[test]

@@ -13,8 +13,15 @@
 //! The decoder mirrors this exactly — contexts depend only on the
 //! *reference* checkpoint's symbol map, so they are available before the
 //! symbols are decoded, and the update uses the just-decoded symbols.
-//! Batches are flushed early at tensor boundaries; encoder and decoder
-//! share that rule, keeping the model-state trajectories identical.
+//!
+//! Flush discipline: batches flush automatically when full, and the codec
+//! calls [`StreamCoder::flush`]/[`StreamDecoder::flush`] explicitly at
+//! stream boundaries. In container format 2 one `StreamCoder` covers one
+//! *coding lane* (a fixed-size shard of a parameter set's symbol
+//! sequence, see [`crate::codec`]) and flushes only at the lane end; the
+//! legacy format-1 path keeps the original tensor-boundary flushes.
+//! Either way, encoder and decoder share the rule, keeping the
+//! model-state trajectories identical.
 
 use crate::ac::{Cdf, Decoder, Encoder};
 use crate::lstm::ProbModel;

@@ -139,6 +139,7 @@ impl ExperimentConfig {
                     ("alpha", Json::num(self.codec.prune.alpha)),
                     ("beta", Json::num(self.codec.prune.beta)),
                     ("log_moment2", Json::Bool(self.codec.log_moment2)),
+                    ("lanes", Json::num(self.codec.lanes as f64)),
                 ]),
             ),
         ])
@@ -157,6 +158,12 @@ impl ExperimentConfig {
         }
         if self.codec.bits == 0 || self.codec.bits > 8 {
             return Err(Error::config("codec.bits must be in 1..=8"));
+        }
+        if self.codec.lanes > crate::codec::MAX_LANES {
+            return Err(Error::config(format!(
+                "codec.lanes must be 0 (auto) or 1..={}",
+                crate::codec::MAX_LANES
+            )));
         }
         Ok(())
     }
@@ -210,6 +217,8 @@ fn apply_codec(c: &mut CodecConfig, j: &Json) -> Result<()> {
             "lr" => c.lr = req_f64(val)? as f32,
             "warmup_passes" => c.warmup_passes = req_u64(val)? as usize,
             "warmup_stride" => c.warmup_stride = (req_u64(val)? as usize).max(1),
+            // 0 = auto (available hardware threads).
+            "lanes" => c.lanes = req_u64(val)? as usize,
             other => return Err(Error::config(format!("unknown codec key '{other}'"))),
         }
     }
@@ -244,7 +253,8 @@ mod tests {
               "workload": "lm_small", "steps": 100, "ckpt_every": 20,
               "step_size": 2, "seed": 7, "backend": "pjrt", "verify": true,
               "codec": {"mode": "zero_context", "bits": 2, "window": 5,
-                        "hidden": 32, "alpha": 1e-4, "log_moment2": false}
+                        "hidden": 32, "alpha": 1e-4, "log_moment2": false,
+                        "lanes": 8}
             }"#,
         )
         .unwrap();
@@ -256,6 +266,7 @@ mod tests {
         assert_eq!(cfg.codec.window, 5);
         assert_eq!(cfg.codec.prune.alpha, 1e-4);
         assert!(!cfg.codec.log_moment2);
+        assert_eq!(cfg.codec.lanes, 8);
         // Provenance serialization parses back.
         let j = cfg.to_json().to_string();
         assert!(Json::parse(&j).is_ok());
@@ -273,6 +284,8 @@ mod tests {
         assert!(ExperimentConfig::from_json_text(r#"{"codec": {"window": 4}}"#).is_err());
         assert!(ExperimentConfig::from_json_text(r#"{"codec": {"bits": 9}}"#).is_err());
         assert!(ExperimentConfig::from_json_text(r#"{"step_size": 0}"#).is_err());
+        assert!(ExperimentConfig::from_json_text(r#"{"codec": {"lanes": 65}}"#).is_err());
+        assert!(ExperimentConfig::from_json_text(r#"{"codec": {"lanes": 0}}"#).is_ok());
     }
 
     #[test]

@@ -5,13 +5,24 @@
 //! ```text
 //! magic    [8]  = "CPCM0001"
 //! hdr_len  u32
-//! header   [hdr_len]   JSON (step, ref_step, codec config, tensor list,
-//!                      per-set stats)
+//! header   [hdr_len]   JSON (format, step, ref_step, codec config incl.
+//!                      lane count, tensor list, per-set stats)
 //! n_blobs  u32
-//! blobs    n × (u32 len, bytes)   order defined by the codec:
-//!                      per set: center tables, then AC shard streams
+//! blobs    n × (u32 len, bytes)   order defined by the codec
 //! crc32    u32         over everything before it
 //! ```
+//!
+//! The byte framing is shared by both header **formats**; only the blob
+//! layout and stream semantics differ (dispatched on the header's
+//! `format` field, see [`crate::codec`]):
+//!
+//! - `format: 1` (legacy) — per parameter set: `n_tensors` center tables,
+//!   then **one** arithmetic stream covering the whole set;
+//! - `format: 2` (lane-parallel) — per parameter set: `n_tensors` center
+//!   tables, then `codec.lanes` independent arithmetic lane streams, each
+//!   coding a fixed-size contiguous shard of the set's symbol sequence
+//!   with its own model replica. Lane blob index within a set:
+//!   `k * (n_tensors + lanes) + n_tensors + lane`.
 //!
 //! The header is self-describing: `cpcm info file.cpcm` pretty-prints it,
 //! and the decoder rebuilds its models purely from header fields (plus the
@@ -65,7 +76,7 @@ impl Container {
             out.extend_from_slice(&(b.len() as u32).to_le_bytes());
             out.extend_from_slice(b);
         }
-        let crc = crc32fast::hash(&out);
+        let crc = crate::util::crc32::hash(&out);
         out.extend_from_slice(&crc.to_le_bytes());
         out
     }
@@ -77,7 +88,7 @@ impl Container {
         }
         let body_len = bytes.len() - 4;
         let stored_crc = u32::from_le_bytes(bytes[body_len..].try_into().unwrap());
-        if crc32fast::hash(&bytes[..body_len]) != stored_crc {
+        if crate::util::crc32::hash(&bytes[..body_len]) != stored_crc {
             return Err(Error::format("container CRC mismatch (corrupt file)"));
         }
         let mut pos = 8usize;

@@ -90,6 +90,19 @@ impl ContextExtractor {
         }
     }
 
+    /// Extract the context of `idx` from `ref_syms` when a reference map
+    /// is available, else fill `out` with zeros (intra frames and the
+    /// zero-context mode). This is the per-position gather the coding
+    /// lanes run ([`crate::codec`]): each lane reads the *shared* reference
+    /// symbol map immutably, so any number of lanes gather concurrently.
+    #[inline]
+    pub fn extract_or_zero(&self, ref_syms: Option<&[u16]>, idx: usize, out: &mut [i32]) {
+        match ref_syms {
+            Some(m) => self.extract_into(m, idx, out),
+            None => out.fill(0),
+        }
+    }
+
     /// Gather contexts for positions `[start, start+count)` into a flat
     /// `count × seq_len` buffer (row-major), zero-padding positions past the
     /// end of the map — used to fill fixed-size LSTM batches.
@@ -241,5 +254,15 @@ mod tests {
         let z = zero_context(9, 5);
         assert_eq!(z.len(), 45);
         assert!(z.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn extract_or_zero_dispatches() {
+        let ex = ContextExtractor::new(3, 4, 3).unwrap();
+        let mut out = vec![-1i32; 9];
+        ex.extract_or_zero(None, 5, &mut out);
+        assert!(out.iter().all(|&x| x == 0));
+        ex.extract_or_zero(Some(&map()), 5, &mut out);
+        assert_eq!(out, vec![1, 2, 3, 5, 7, 9, 10, 11, 6]);
     }
 }

@@ -19,6 +19,7 @@ use crate::checkpoint::Checkpoint;
 use crate::codec::{Codec, CodecConfig, EncodeStats, SymbolMaps};
 use crate::lstm::Backend;
 use crate::metrics::Metrics;
+use crate::util::pool;
 use crate::{Error, Result};
 use std::collections::VecDeque;
 use std::path::PathBuf;
@@ -158,13 +159,23 @@ fn worker_loop(
         std::fs::rename(&tmp, &path)?;
 
         if cfg.verify {
+            // The decode itself fans out over 3 × lanes pool tasks inside
+            // `Codec::decode`; the bit-exactness comparison below reuses
+            // the same pool across the four independent checks.
             let (decoded, dsyms) = Codec::decode(
                 &cfg.backend,
                 &out.bytes,
                 reference.map(|e| &e.recon),
                 reference.map(|e| &e.syms),
             )?;
-            if decoded != out.recon || dsyms != out.syms {
+            let checks: Vec<pool::Task<bool>> = vec![
+                Box::new(|| decoded.step == out.recon.step && decoded.weights == out.recon.weights),
+                Box::new(|| decoded.exp_avg == out.recon.exp_avg),
+                Box::new(|| decoded.exp_avg_sq == out.recon.exp_avg_sq),
+                Box::new(|| dsyms == out.syms),
+            ];
+            let ok = pool::run_scoped(pool::available_workers(), checks)?;
+            if ok.iter().any(|&b| !b) {
                 return Err(Error::codec(format!(
                     "verification failed for step {step}: decode != encoder reconstruction"
                 )));

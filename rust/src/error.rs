@@ -1,43 +1,71 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (the offline registry has no
+//! `thiserror`); the variants and messages match the original derive.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error type for all cpcm operations.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// I/O failure (checkpoint store, container files, artifacts).
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// XLA / PJRT runtime failure.
-    #[error("xla error: {0}")]
     Xla(String),
 
     /// Malformed container, manifest, or config input.
-    #[error("format error: {0}")]
     Format(String),
 
     /// JSON parse error (configs, manifests).
-    #[error("json error at byte {at}: {msg}")]
     Json { at: usize, msg: String },
 
     /// Arithmetic-coder bitstream corruption or model mismatch.
-    #[error("codec error: {0}")]
     Codec(String),
 
     /// Shape/layout mismatch between tensors or checkpoints.
-    #[error("shape error: {0}")]
     Shape(String),
 
     /// Invalid configuration value.
-    #[error("config error: {0}")]
     Config(String),
 
     /// A required AOT artifact is missing (run `make artifacts`).
-    #[error("missing artifact {0} — run `make artifacts`")]
     MissingArtifact(String),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Format(m) => write!(f, "format error: {m}"),
+            Error::Json { at, msg } => write!(f, "json error at byte {at}: {msg}"),
+            Error::Codec(m) => write!(f, "codec error: {m}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::MissingArtifact(m) => {
+                write!(f, "missing artifact {m} — run `make artifacts`")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
@@ -63,5 +91,26 @@ impl Error {
     /// Shorthand for a config error.
     pub fn config(msg: impl Into<String>) -> Self {
         Error::Config(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_variant() {
+        assert_eq!(format!("{}", Error::codec("bad stream")), "codec error: bad stream");
+        assert_eq!(format!("{}", Error::Json { at: 7, msg: "x".into() }), "json error at byte 7: x");
+        let io: Error = std::io::Error::new(std::io::ErrorKind::Other, "boom").into();
+        assert!(format!("{io}").contains("boom"));
+    }
+
+    #[test]
+    fn io_source_is_chained() {
+        use std::error::Error as _;
+        let e: Error = std::io::Error::new(std::io::ErrorKind::Other, "inner").into();
+        assert!(e.source().is_some());
+        assert!(Error::codec("x").source().is_none());
     }
 }

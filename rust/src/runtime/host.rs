@@ -126,6 +126,7 @@ fn check_count(shape: &[usize], n: usize) -> Result<()> {
 }
 
 /// Convert to an xla literal (on the runtime thread only).
+#[cfg(feature = "pjrt")]
 pub(super) fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
     let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
     let lit = match &t.data {
@@ -136,6 +137,7 @@ pub(super) fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
 }
 
 /// Convert from an xla literal.
+#[cfg(feature = "pjrt")]
 pub(super) fn from_literal(l: &xla::Literal) -> Result<HostTensor> {
     let shape = l.array_shape()?;
     let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -182,6 +184,7 @@ mod tests {
         assert_eq!(z.f32s().unwrap(), &[0.0; 6]);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_roundtrip_f32() {
         let t = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
@@ -190,6 +193,7 @@ mod tests {
         assert_eq!(back, t);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_roundtrip_i32_scalar() {
         let t = HostTensor::scalar_i32(-7);

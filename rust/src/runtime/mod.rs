@@ -1,7 +1,12 @@
 //! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
 //!
-//! This is the only place the `xla` crate is touched. The flow (mirroring
-//! /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! This is the only place the `xla` crate is touched, and it is gated
+//! behind the `pjrt` cargo feature (the bindings are not in the offline
+//! registry; see Cargo.toml). With the feature off, [`RuntimeHandle`]
+//! still exists as a type so the rest of the crate compiles unchanged,
+//! but `spawn` reports the backend as unavailable.
+//!
+//! The flow (mirroring /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
 //! `client.compile` → `execute`. Compiled executables are cached per
 //! program name.
@@ -22,13 +27,19 @@ pub use host::HostTensor;
 pub use manifest::{Manifest, ProgramInfo};
 pub use shared::RuntimeHandle;
 
+#[cfg(feature = "pjrt")]
 use crate::{Error, Result};
+#[cfg(feature = "pjrt")]
 use std::cell::RefCell;
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
 use std::rc::Rc;
 
 /// Single-threaded PJRT runtime over an artifacts directory.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
@@ -36,6 +47,7 @@ pub struct Runtime {
     cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Open the artifacts directory (must contain `manifest.json`; run
     /// `make artifacts` to produce it) and create a CPU PJRT client.
@@ -100,7 +112,7 @@ impl Runtime {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 

@@ -6,13 +6,24 @@
 //! channel; handles are cheap to clone and share across the coordinator's
 //! worker pool. Requests are processed strictly in arrival order, which
 //! also serializes PJRT access (XLA:CPU parallelizes internally).
+//!
+//! Without the `pjrt` cargo feature the handle is a stub whose `spawn`
+//! fails cleanly, keeping every `RuntimeHandle` consumer compiling while
+//! the `xla` bindings are absent from the offline registry.
+//!
+//! [`Runtime`]: super::Runtime
 
-use super::{HostTensor, Runtime};
+#[cfg(feature = "pjrt")]
+use super::Runtime;
+use super::HostTensor;
 use crate::{Error, Result};
 use std::path::PathBuf;
+#[cfg(feature = "pjrt")]
 use std::sync::mpsc;
+#[cfg(feature = "pjrt")]
 use std::sync::{Arc, Mutex};
 
+#[cfg(feature = "pjrt")]
 enum Request {
     Run { program: String, inputs: Vec<HostTensor>, reply: mpsc::Sender<Result<Vec<HostTensor>>> },
     Precompile { program: String, reply: mpsc::Sender<Result<()>> },
@@ -20,6 +31,7 @@ enum Request {
 }
 
 /// Cloneable, `Send` handle to a runtime thread.
+#[cfg(feature = "pjrt")]
 #[derive(Clone)]
 pub struct RuntimeHandle {
     tx: mpsc::Sender<Request>,
@@ -27,11 +39,13 @@ pub struct RuntimeHandle {
     _join: Arc<JoinOnDrop>,
 }
 
+#[cfg(feature = "pjrt")]
 struct JoinOnDrop {
     tx: mpsc::Sender<Request>,
     handle: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Drop for JoinOnDrop {
     fn drop(&mut self) {
         let _ = self.tx.send(Request::Shutdown);
@@ -41,6 +55,7 @@ impl Drop for JoinOnDrop {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl RuntimeHandle {
     /// Spawn the runtime thread over `artifacts_dir`. Fails fast (in the
     /// caller) if the directory/manifest cannot be opened.
@@ -99,21 +114,58 @@ impl RuntimeHandle {
     }
 }
 
+/// Stub handle used when the crate is built without the `pjrt` feature:
+/// every entry point reports the backend as unavailable.
+#[cfg(not(feature = "pjrt"))]
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    _priv: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl RuntimeHandle {
+    fn unavailable() -> Error {
+        Error::Xla(
+            "PJRT backend unavailable: cpcm was built without the `pjrt` feature \
+             (use the native backend, or vendor the xla bindings and enable it)"
+                .into(),
+        )
+    }
+
+    /// Always fails: the `xla` bindings are not compiled in.
+    pub fn spawn(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+        let _ = artifacts_dir.into();
+        Err(Self::unavailable())
+    }
+
+    /// Unreachable in practice (`spawn` never hands out a stub handle).
+    pub fn run(&self, _program: &str, _inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        Err(Self::unavailable())
+    }
+
+    /// Unreachable in practice (`spawn` never hands out a stub handle).
+    pub fn precompile(&self, _program: &str) -> Result<()> {
+        Err(Self::unavailable())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    fn arts_dir() -> PathBuf {
-        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-    }
+    #[cfg(feature = "pjrt")]
+    use std::path::PathBuf;
 
     #[test]
     fn spawn_fails_on_missing_dir() {
         assert!(RuntimeHandle::spawn("/nonexistent/cpcm").is_err());
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn shared_handle_runs_from_multiple_threads() {
+        fn arts_dir() -> PathBuf {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        }
         if !arts_dir().join("manifest.json").exists() {
             eprintln!("skipping: run `make artifacts` first");
             return;

@@ -68,14 +68,21 @@ impl Tensor {
     /// (rows, cols); higher-rank tensors fold trailing dims into cols;
     /// vectors/scalars become a single row.
     pub fn rows_cols(&self) -> (usize, usize) {
-        match self.shape.len() {
-            0 => (1, 1),
-            1 => (1, self.shape[0]),
-            _ => {
-                let rows = self.shape[0];
-                let cols = self.shape[1..].iter().product();
-                (rows, cols)
-            }
+        rows_cols_of(&self.shape)
+    }
+}
+
+/// [`Tensor::rows_cols`] for a bare shape — used by the decoder, which
+/// knows tensor shapes from the container header without materializing
+/// the tensors.
+pub fn rows_cols_of(shape: &[usize]) -> (usize, usize) {
+    match shape.len() {
+        0 => (1, 1),
+        1 => (1, shape[0]),
+        _ => {
+            let rows = shape[0];
+            let cols = shape[1..].iter().product();
+            (rows, cols)
         }
     }
 }
@@ -185,6 +192,8 @@ mod tests {
         assert_eq!(Tensor::zeros(vec![7]).rows_cols(), (1, 7));
         assert_eq!(Tensor::zeros(vec![4, 5]).rows_cols(), (4, 5));
         assert_eq!(Tensor::zeros(vec![4, 5, 6]).rows_cols(), (4, 30));
+        assert_eq!(rows_cols_of(&[4, 5, 6]), (4, 30));
+        assert_eq!(rows_cols_of(&[]), (1, 1));
     }
 
     #[test]

@@ -1,0 +1,55 @@
+//! CRC-32 (IEEE 802.3, the zlib/`crc32fast` polynomial).
+//!
+//! The offline registry has no `crc32fast`; this is the standard
+//! reflected-polynomial table implementation. Byte-for-byte compatible
+//! with `crc32fast::hash` (poly 0xEDB88320, init/xorout 0xFFFFFFFF), so
+//! containers written before the vendoring swap still CRC-check.
+
+const POLY: u32 = 0xEDB8_8320;
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { POLY ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = build_table();
+
+/// CRC-32 of `bytes` (one-shot).
+pub fn hash(bytes: &[u8]) -> u32 {
+    let mut crc = !0u32;
+    for &b in bytes {
+        crc = TABLE[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // The canonical CRC-32 check value.
+        assert_eq!(hash(b"123456789"), 0xCBF4_3926);
+        assert_eq!(hash(b""), 0);
+        assert_eq!(hash(b"a"), 0xE8B7_BE43);
+    }
+
+    #[test]
+    fn sensitive_to_any_bit() {
+        let a = hash(b"hello world");
+        let b = hash(b"hello worle");
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,226 @@
+//! Self-contained LZ77 + adaptive-arithmetic byte compressor.
+//!
+//! Stands in for DEFLATE in the ExCP baseline ([`crate::baselines`]): the
+//! offline registry has no `flate2`, so this module provides the same
+//! general-purpose "LZ + entropy coder" family with the crate's own range
+//! coder ([`crate::ac`]) as the entropy stage. Same interface shape
+//! (`compress`/`decompress` over byte slices), deterministic output.
+//!
+//! Format: `u64 LE` uncompressed length, then one arithmetic stream of
+//! tokens. Each token is a flag bit (literal/match) under a [`BitModel`],
+//! a literal byte under an order-0 [`AdaptiveModel`], or a match:
+//! length−3 under a 128-symbol model (match lengths 3..=130) and a
+//! distance coded as an adaptive log₂ bucket plus raw offset bits
+//! (window 64 KiB). Matching uses a greedy hash-chain search.
+
+use crate::ac::{AdaptiveModel, BitModel, Decoder, Encoder};
+use crate::{Error, Result};
+
+const MIN_MATCH: usize = 3;
+const MAX_MATCH: usize = 130;
+const WINDOW: usize = 65_535;
+const HASH_BITS: u32 = 15;
+const MAX_CHAIN: usize = 32;
+/// Sentinel for "no previous position" in the hash chains.
+const NIL: u32 = u32::MAX;
+
+#[inline]
+fn hash3(data: &[u8], i: usize) -> usize {
+    let v = u32::from_le_bytes([data[i], data[i + 1], data[i + 2], 0]);
+    (v.wrapping_mul(0x9E37_79B1) >> (32 - HASH_BITS)) as usize
+}
+
+/// Token models, shared (and identically updated) by both directions.
+struct Models {
+    flag: BitModel,
+    lit: AdaptiveModel,
+    len: AdaptiveModel,
+    dist_slot: AdaptiveModel,
+}
+
+impl Models {
+    fn new() -> Self {
+        Self {
+            flag: BitModel::new(),
+            lit: AdaptiveModel::new(256),
+            len: AdaptiveModel::new(MAX_MATCH - MIN_MATCH + 1),
+            dist_slot: AdaptiveModel::new(16),
+        }
+    }
+}
+
+/// Compress `data` (deterministic; empty input allowed).
+pub fn compress(data: &[u8]) -> Vec<u8> {
+    let n = data.len();
+    let mut out = Vec::with_capacity(n / 2 + 16);
+    out.extend_from_slice(&(n as u64).to_le_bytes());
+
+    let mut m = Models::new();
+    let mut enc = Encoder::new();
+    let mut head = vec![NIL; 1 << HASH_BITS];
+    let mut prev = vec![NIL; n];
+
+    let mut i = 0usize;
+    while i < n {
+        let (mut best_len, mut best_dist) = (0usize, 0usize);
+        if i + MIN_MATCH <= n {
+            let h = hash3(data, i);
+            let mut cand = head[h];
+            let mut chain = 0usize;
+            while cand != NIL && chain < MAX_CHAIN {
+                let c = cand as usize;
+                let dist = i - c;
+                if dist > WINDOW {
+                    break;
+                }
+                let max_len = (n - i).min(MAX_MATCH);
+                let mut l = 0usize;
+                while l < max_len && data[c + l] == data[i + l] {
+                    l += 1;
+                }
+                if l > best_len {
+                    best_len = l;
+                    best_dist = dist;
+                    if l == max_len {
+                        break;
+                    }
+                }
+                cand = prev[c];
+                chain += 1;
+            }
+        }
+
+        if best_len >= MIN_MATCH {
+            m.flag.encode(&mut enc, true);
+            m.len.encode(&mut enc, (best_len - MIN_MATCH) as u16);
+            let slot = 31 - (best_dist as u32).leading_zeros();
+            m.dist_slot.encode(&mut enc, slot as u16);
+            enc.encode_raw(best_dist as u32 - (1 << slot), slot as u8);
+            // Index every covered position so later matches can reach here.
+            let end = i + best_len;
+            while i < end {
+                if i + MIN_MATCH <= n {
+                    let h = hash3(data, i);
+                    prev[i] = head[h];
+                    head[h] = i as u32;
+                }
+                i += 1;
+            }
+        } else {
+            m.flag.encode(&mut enc, false);
+            m.lit.encode(&mut enc, data[i] as u16);
+            if i + MIN_MATCH <= n {
+                let h = hash3(data, i);
+                prev[i] = head[h];
+                head[h] = i as u32;
+            }
+            i += 1;
+        }
+    }
+    out.extend_from_slice(&enc.finish());
+    out
+}
+
+/// Decompress a [`compress`]-produced buffer.
+pub fn decompress(bytes: &[u8]) -> Result<Vec<u8>> {
+    if bytes.len() < 8 {
+        return Err(Error::codec("lz stream shorter than its length header"));
+    }
+    let n64 = u64::from_le_bytes(bytes[..8].try_into().unwrap());
+    let n = usize::try_from(n64)
+        .map_err(|_| Error::codec("lz stream length exceeds address space"))?;
+    let mut m = Models::new();
+    let mut dec = Decoder::new(&bytes[8..])?;
+    // The header length is untrusted: cap the preallocation and let the
+    // vector grow as real tokens arrive.
+    let mut out: Vec<u8> = Vec::with_capacity(n.min(1 << 20));
+    while out.len() < n {
+        if m.flag.decode(&mut dec) {
+            let len = m.len.decode(&mut dec) as usize + MIN_MATCH;
+            let slot = m.dist_slot.decode(&mut dec) as u32;
+            let dist = ((1u32 << slot) + dec.decode_raw(slot as u8)) as usize;
+            if dist == 0 || dist > out.len() || out.len() + len > n {
+                return Err(Error::codec("lz stream corrupt (bad match)"));
+            }
+            let start = out.len() - dist;
+            // Byte-by-byte: matches may overlap their own output.
+            for k in 0..len {
+                let b = out[start + k];
+                out.push(b);
+            }
+        } else {
+            out.push(m.lit.decode(&mut dec) as u8);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn empty_roundtrip() {
+        let c = compress(&[]);
+        assert_eq!(decompress(&c).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn repetitive_data_compresses_hard() {
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i % 7) as u8).collect();
+        let c = compress(&data);
+        assert!(c.len() < data.len() / 10, "compressed {} of {}", c.len(), data.len());
+        assert_eq!(decompress(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn random_data_survives_roundtrip() {
+        let mut rng = Pcg64::seed(3);
+        let data: Vec<u8> = (0..50_000).map(|_| rng.below(256) as u8).collect();
+        let c = compress(&data);
+        assert_eq!(decompress(&c).unwrap(), data);
+        // Incompressible input must not blow up.
+        assert!(c.len() < data.len() + 1024);
+    }
+
+    #[test]
+    fn truncated_input_rejected() {
+        assert!(decompress(&[]).is_err());
+        assert!(decompress(&[1, 2, 3]).is_err());
+        // Length header present but arithmetic stream missing.
+        assert!(decompress(&[9, 0, 0, 0, 0, 0, 0, 0, 1]).is_err());
+    }
+
+    #[test]
+    fn overlapping_matches() {
+        // "aaaa…" forces dist-1 matches that overlap their own output.
+        let data = vec![b'a'; 4000];
+        let c = compress(&data);
+        assert!(c.len() < 100);
+        assert_eq!(decompress(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn prop_roundtrip_mixed_content() {
+        forall("lz roundtrip", 25, |g| {
+            let n = g.size(4000);
+            let mut data = Vec::with_capacity(n);
+            while data.len() < n {
+                if g.bool(0.5) && !data.is_empty() {
+                    // Repeat a previous span.
+                    let start = g.usize_range(0, data.len() - 1);
+                    let len = g.usize_range(1, 40).min(data.len() - start);
+                    let span: Vec<u8> = data[start..start + len].to_vec();
+                    data.extend_from_slice(&span);
+                } else {
+                    data.push(g.usize_range(0, 255) as u8);
+                }
+            }
+            data.truncate(n);
+            let c = compress(&data);
+            assert_eq!(decompress(&c).unwrap(), data);
+        });
+    }
+}

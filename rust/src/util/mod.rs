@@ -1,15 +1,20 @@
 //! Self-contained utility substrates.
 //!
-//! The offline build environment has no `serde`, `rand`, `proptest` or
-//! `criterion`, so this module provides the minimal, well-tested equivalents
-//! the rest of the crate needs: a JSON parser/writer ([`json`]), a PCG64
-//! PRNG ([`rng`]), bit-level I/O ([`bitio`]), descriptive statistics
-//! ([`stats`]), a property-testing mini-framework ([`prop`]) and a bench
-//! harness ([`bench`]).
+//! The offline build environment has no `serde`, `rand`, `proptest`,
+//! `criterion`, `crc32fast` or `flate2`, so this module provides the
+//! minimal, well-tested equivalents the rest of the crate needs: a JSON
+//! parser/writer ([`json`]), a PCG64 PRNG ([`rng`]), bit-level I/O
+//! ([`bitio`]), CRC-32 ([`crc32`]), an LZ77+range-coder byte compressor
+//! ([`lz`]), descriptive statistics ([`stats`]), a property-testing
+//! mini-framework ([`prop`]), a bench harness ([`bench`]) and a scoped
+//! work pool ([`pool`]).
 
 pub mod bench;
 pub mod bitio;
+pub mod crc32;
 pub mod json;
+pub mod lz;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;

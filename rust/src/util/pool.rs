@@ -1,0 +1,155 @@
+//! Minimal scoped work pool (no external dependencies).
+//!
+//! [`run_scoped`] executes a batch of heterogeneous-cost tasks on up to
+//! `workers` scoped threads and returns the results **in task order**.
+//! Workers pull tasks from a shared atomic cursor, so long tasks do not
+//! starve short ones behind a static partition. Panics inside a task are
+//! caught and surfaced as [`Error`] (carrying the panic message) instead
+//! of aborting the process — one poisoned coding lane fails the encode
+//! cleanly.
+//!
+//! Used by the codec's `3 × L` lane fan-out ([`crate::codec`]) and by the
+//! coordinator's encode→decode verification ([`crate::coordinator`]).
+
+use crate::{Error, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// A unit of work for [`run_scoped`].
+pub type Task<'a, T> = Box<dyn FnOnce() -> T + Send + 'a>;
+
+/// Number of hardware threads (≥ 1).
+pub fn available_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `tasks` on at most `workers` threads (clamped to the task count;
+/// the calling thread counts as one worker, so `workers == 1` runs
+/// everything inline without spawning). Returns results in task order, or
+/// the first panic as an error.
+pub fn run_scoped<'a, T: Send>(workers: usize, tasks: Vec<Task<'a, T>>) -> Result<Vec<T>> {
+    let n = tasks.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let workers = workers.clamp(1, n);
+    let slots: Vec<Mutex<Option<Task<'a, T>>>> =
+        tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let results: Vec<Mutex<Option<std::thread::Result<T>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+
+    std::thread::scope(|scope| {
+        for _ in 1..workers {
+            scope.spawn(|| worker_loop(&next, &slots, &results));
+        }
+        worker_loop(&next, &slots, &results);
+    });
+
+    let mut out = Vec::with_capacity(n);
+    for slot in results {
+        match slot.into_inner().expect("pool result mutex poisoned") {
+            Some(Ok(v)) => out.push(v),
+            Some(Err(payload)) => {
+                return Err(Error::codec(format!(
+                    "worker panicked: {}",
+                    panic_message(payload.as_ref())
+                )))
+            }
+            None => return Err(Error::codec("pool task was never executed")),
+        }
+    }
+    Ok(out)
+}
+
+fn worker_loop<'a, T: Send>(
+    next: &AtomicUsize,
+    slots: &[Mutex<Option<Task<'a, T>>>],
+    results: &[Mutex<Option<std::thread::Result<T>>>],
+) {
+    loop {
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= slots.len() {
+            break;
+        }
+        // Take the task out before running it so the lock is not held
+        // across a potential panic.
+        let task = slots[i].lock().expect("pool task mutex poisoned").take();
+        if let Some(task) = task {
+            let outcome = catch_unwind(AssertUnwindSafe(task));
+            *results[i].lock().expect("pool result mutex poisoned") = Some(outcome);
+        }
+    }
+}
+
+/// Best-effort extraction of a panic payload's message.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_come_back_in_task_order() {
+        let tasks: Vec<Task<usize>> = (0..64)
+            .map(|i| {
+                let b: Task<usize> = Box::new(move || {
+                    // Uneven task cost to shuffle completion order.
+                    if i % 7 == 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                    i * 10
+                });
+                b
+            })
+            .collect();
+        let out = run_scoped(4, tasks).unwrap();
+        assert_eq!(out, (0..64).map(|i| i * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_runs_inline() {
+        let tasks: Vec<Task<u32>> = (0..5).map(|i| Box::new(move || i) as Task<u32>).collect();
+        assert_eq!(run_scoped(1, tasks).unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_task_list() {
+        let out: Vec<u8> = run_scoped(8, Vec::new()).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn panic_becomes_error_not_abort() {
+        let tasks: Vec<Task<u32>> = vec![
+            Box::new(|| 1),
+            Box::new(|| panic!("lane 1 poisoned")),
+            Box::new(|| 3),
+        ];
+        let err = run_scoped(2, tasks).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("worker panicked"), "{msg}");
+        assert!(msg.contains("lane 1 poisoned"), "{msg}");
+    }
+
+    #[test]
+    fn tasks_can_borrow_from_the_caller() {
+        let data: Vec<u64> = (0..1000).collect();
+        let chunks: Vec<&[u64]> = data.chunks(100).collect();
+        let tasks: Vec<Task<u64>> = chunks
+            .into_iter()
+            .map(|c| Box::new(move || c.iter().sum::<u64>()) as Task<u64>)
+            .collect();
+        let sums = run_scoped(3, tasks).unwrap();
+        assert_eq!(sums.iter().sum::<u64>(), data.iter().sum::<u64>());
+    }
+}
