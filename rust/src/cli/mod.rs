@@ -3,9 +3,9 @@
 //! ```text
 //! cpcm train      --workload lm_tiny --steps 300 --ckpt-every 50 \
 //!                 --out runs/demo [--compress] [--mode lstm] [--backend native]
-//!                 [--lanes N]
+//!                 [--lanes N] [--queue-depth N]
 //! cpcm compress   --ckpts runs/demo/raw --out runs/demo/cpcm [--mode ...]
-//!                 [--lanes N]
+//!                 [--lanes N] [--queue-depth N]
 //! cpcm decompress --cpcm runs/demo/cpcm --step 100 --out ck.bin [--backend ...]
 //! cpcm verify     --ckpts runs/demo/raw --cpcm runs/demo/cpcm
 //! cpcm info       --file runs/demo/cpcm/ckpt_0000000100.cpcm
@@ -14,6 +14,10 @@
 //!
 //! Flags mirror [`crate::config::ExperimentConfig`]; `--config file.json`
 //! loads a base config that individual flags then override.
+//!
+//! `decompress` restores through the directory's `manifest.json` when one
+//! is present (decoding only the requested step's reference ancestry) and
+//! falls back to a full chain decode for manifest-less directories.
 
 mod args;
 
@@ -21,7 +25,9 @@ use crate::checkpoint::Store;
 use crate::codec::ContextMode;
 use crate::config::{BackendKind, ExperimentConfig};
 use crate::container::Container;
-use crate::coordinator::{decode_chain, Coordinator, CoordinatorConfig};
+use crate::coordinator::{
+    decode_chain, restore_step, ChainManifest, Coordinator, CoordinatorConfig,
+};
 use crate::lstm::Backend;
 use crate::runtime::RuntimeHandle;
 use crate::trainer::Trainer;
@@ -118,6 +124,10 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(v) = args.parsed::<u64>("lanes")? {
         cfg.codec.lanes = v as usize;
     }
+    // Coordinator queue depth (submission + stage queues).
+    if let Some(v) = args.parsed::<u64>("queue-depth")? {
+        cfg.queue_depth = v as usize;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -155,6 +165,7 @@ fn cmd_train(args: Args) -> Result<()> {
         ccfg.step_size = cfg.step_size;
         ccfg.keyframe_every = cfg.keyframe_every;
         ccfg.verify = cfg.verify;
+        ccfg.queue_depth = cfg.queue_depth;
         Some(Coordinator::start(ccfg)?)
     } else {
         None
@@ -229,6 +240,7 @@ fn cmd_compress(args: Args) -> Result<()> {
     ccfg.step_size = cfg.step_size;
     ccfg.keyframe_every = cfg.keyframe_every;
     ccfg.verify = cfg.verify;
+    ccfg.queue_depth = cfg.queue_depth;
     let coord = Coordinator::start(ccfg)?;
     for step in &steps {
         coord.submit(store.load(*step)?)?;
@@ -251,8 +263,10 @@ fn cmd_compress(args: Args) -> Result<()> {
     Ok(())
 }
 
-/// `cpcm decompress` — decode the chain up to `--step` and write the raw
-/// checkpoint file.
+/// `cpcm decompress` — restore the checkpoint at `--step` and write the
+/// raw checkpoint file. With a `manifest.json` in the container directory
+/// only the step's reference ancestry is decoded (random access);
+/// otherwise the chain is decoded front-to-back up to the step.
 fn cmd_decompress(args: Args) -> Result<()> {
     let cpcm = args.req("cpcm")?;
     let step: u64 = parse_num(args.req("step")?, "step")?;
@@ -260,11 +274,15 @@ fn cmd_decompress(args: Args) -> Result<()> {
     let backend_kind = BackendKind::parse(args.get("backend").unwrap_or("native"))?;
     let artifacts = args.get("artifacts").unwrap_or("artifacts");
     let backend = make_backend(backend_kind, artifacts)?;
-    let chain = decode_chain(std::path::Path::new(cpcm), &backend, Some(step))?;
-    let ck = chain
-        .into_iter()
-        .find(|c| c.step == step)
-        .ok_or_else(|| Error::config(format!("step {step} not found in {cpcm}")))?;
+    let dir = std::path::Path::new(cpcm);
+    let ck = if ChainManifest::exists_in(dir) {
+        restore_step(dir, &backend, step)?
+    } else {
+        decode_chain(dir, &backend, Some(step))?
+            .into_iter()
+            .find(|c| c.step == step)
+            .ok_or_else(|| Error::config(format!("step {step} not found in {cpcm}")))?
+    };
     std::fs::write(out, ck.to_bytes())?;
     println!("wrote step {step} ({} params) to {out}", ck.param_count());
     Ok(())
@@ -356,6 +374,8 @@ mod tests {
             "2".into(),
             "--lanes".into(),
             "4".into(),
+            "--queue-depth".into(),
+            "3".into(),
             "--verify".into(),
         ])
         .unwrap();
@@ -365,7 +385,14 @@ mod tests {
         assert_eq!(cfg.codec.mode, ContextMode::Order0);
         assert_eq!(cfg.codec.bits, 2);
         assert_eq!(cfg.codec.lanes, 4);
+        assert_eq!(cfg.queue_depth, 3);
         assert!(cfg.verify);
+    }
+
+    #[test]
+    fn zero_queue_depth_rejected() {
+        let args = Args::parse(&["--queue-depth".into(), "0".into()]).unwrap();
+        assert!(experiment_config(&args).is_err());
     }
 
     #[test]

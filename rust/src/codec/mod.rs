@@ -34,6 +34,19 @@
 //! the writer side of that path alive for fixtures and compatibility
 //! tests. [`Codec::decode`] dispatches on the header's `format` field.
 //!
+//! ## Pipeline split
+//!
+//! An encode factors into a **chain-sequential** half and an
+//! **embarrassingly parallel** half, and the public API exposes the seam:
+//! [`Codec::prepare`] runs delta → prune → quantize and returns a
+//! [`PreparedEncode`] carrying the reconstruction and symbol maps the
+//! *next* checkpoint needs as its reference, while
+//! [`Codec::encode_prepared`] turns a prepared checkpoint into container
+//! bytes (the `3 × lanes` entropy tasks plus container assembly). The
+//! coordinator uses this to overlap `prepare(k+1)` with the entropy
+//! coding of `k`; [`Codec::encode`] composes the two halves and is
+//! byte-identical to the original single-pass writer.
+//!
 //! Decode mirrors the stages in reverse. The decoder needs (a) the
 //! container, (b) the reconstructed reference checkpoint, (c) the
 //! reference's *symbol maps* ([`SymbolMaps`], carried along the chain by
@@ -300,6 +313,40 @@ pub struct EncodeOutput {
     pub stats: EncodeStats,
 }
 
+/// Output of the chain-sequential front half of an encode (see
+/// [`Codec::prepare`]): the chain state (`recon`, `syms`) the *next*
+/// checkpoint's prepare needs, plus everything [`Codec::encode_prepared`]
+/// needs to finish the container without touching the chain again.
+///
+/// This split is what lets the coordinator pipeline checkpoints: once
+/// `prepare(k)` returns, `prepare(k+1)` can start against `recon`/`syms`
+/// while the (much slower) entropy stage of `k` still runs.
+pub struct PreparedEncode {
+    /// Training step of the prepared checkpoint.
+    pub step: u64,
+    /// Step of the reference it was prepared against (None ⇒ intra frame).
+    pub ref_step: Option<u64>,
+    /// Decoder-exact reconstruction (the next chain reference).
+    pub recon: Checkpoint,
+    /// Quantized symbol maps (the next checkpoint's context source; also
+    /// the exact symbols the entropy stage codes).
+    pub syms: SymbolMaps,
+    /// Raw f32 size of the source checkpoint.
+    pub raw_bytes: usize,
+    /// Fully-assembled format-2 container header.
+    header: Json,
+    /// Lane partition shared by all three parameter sets.
+    plan: LanePlan,
+    /// Per-tensor context extractors (encode side).
+    extractors: Vec<ContextExtractor>,
+    /// Per-set, per-tensor k-means center tables.
+    centers: [Vec<Vec<f32>>; 3],
+    /// Resolved lane count recorded in the header.
+    lanes: usize,
+    weight_density: f64,
+    momentum_density: f64,
+}
+
 /// The checkpoint codec.
 pub struct Codec {
     cfg: CodecConfig,
@@ -431,7 +478,13 @@ impl Codec {
     /// Compress `current` against `reference` (None ⇒ self-contained intra
     /// frame). `prev_syms` are the reference's symbol maps, if available.
     /// Writes a format-2 (lane-parallel) container; both the quantization
-    /// and the `3 × lanes` entropy-coding tasks run on a scoped work pool.
+    /// and the `3 × lanes` entropy-coding tasks run on the persistent work
+    /// pool.
+    ///
+    /// Internally this is [`Codec::prepare`] followed by
+    /// [`Codec::encode_prepared`]; the two halves perform the exact same
+    /// operations in the exact same order as the original single-pass
+    /// writer, so the container bytes are unchanged by the split.
     pub fn encode(
         &self,
         current: &Checkpoint,
@@ -439,6 +492,27 @@ impl Codec {
         prev_syms: Option<&SymbolMaps>,
     ) -> Result<EncodeOutput> {
         let t0 = std::time::Instant::now();
+        let prep = self.prepare(current, reference, prev_syms)?;
+        let (bytes, mut stats) = self.encode_prepared(&prep, prev_syms)?;
+        stats.encode_seconds = t0.elapsed().as_secs_f64();
+        Ok(EncodeOutput { bytes, recon: prep.recon, syms: prep.syms, stats })
+    }
+
+    /// Chain-sequential front half of an encode: delta (Eq. 3/6), ExCP
+    /// pruning (Eq. 4–5), k-means quantization, reconstruction and header
+    /// assembly. Quantization of every (set, tensor) pair fans out over
+    /// the persistent pool.
+    ///
+    /// The returned [`PreparedEncode`] carries the chain state for the
+    /// *next* checkpoint (`recon`, `syms`), so a pipelined caller can
+    /// start preparing checkpoint `k+1` as soon as this returns — while
+    /// [`Codec::encode_prepared`] for `k` is still entropy-coding.
+    pub fn prepare(
+        &self,
+        current: &Checkpoint,
+        reference: Option<&Checkpoint>,
+        prev_syms: Option<&SymbolMaps>,
+    ) -> Result<PreparedEncode> {
         let cfg = &self.cfg;
         let lanes = cfg.effective_lanes();
         let workers = pool::available_workers();
@@ -459,7 +533,7 @@ impl Codec {
         let extractors = self.build_extractors_from_sets(sets[0])?;
         self.check_ref_maps(prev_syms, &counts)?;
 
-        // 3. Quantize every (set, tensor) on the pool.
+        // Quantize every (set, tensor) on the pool.
         let mut qtasks: Vec<Task<Result<QuantOut>>> = Vec::new();
         for (k, set) in sets.iter().enumerate() {
             let log_domain = k == 2 && cfg.log_moment2;
@@ -492,15 +566,67 @@ impl Codec {
             }
         }
 
-        // 4. Entropy-code all 3 × lanes lane streams on the pool. Lanes
-        // read the per-tensor symbol vectors in place via the plan's
+        // Center tables go into the container; the symbols move into
+        // `syms` below (the entropy stage reads them from there).
+        let centers: [Vec<Vec<f32>>; 3] = [
+            quantized[0].iter().map(|q| q.centers.clone()).collect(),
+            quantized[1].iter().map(|q| q.centers.clone()).collect(),
+            quantized[2].iter().map(|q| q.centers.clone()).collect(),
+        ];
+
+        let (recon, syms) =
+            self.assemble_recon(current, reference, &sets, quantized, recon_sets)?;
+
+        let mut hdr_cfg = cfg.clone();
+        hdr_cfg.lanes = lanes; // record the resolved lane count
+        let header =
+            self.make_header(2, current, reference, prev_syms, &front, hdr_cfg.to_json());
+
+        Ok(PreparedEncode {
+            step: current.step,
+            ref_step: reference.map(|r| r.step),
+            recon,
+            syms,
+            raw_bytes: current.raw_bytes(),
+            header,
+            plan,
+            extractors,
+            centers,
+            lanes,
+            weight_density: front.weight_density,
+            momentum_density: front.momentum_density,
+        })
+    }
+
+    /// Entropy-code a [`PreparedEncode`] into the final container bytes:
+    /// all `3 × lanes` lane streams fan out over the persistent pool, then
+    /// the container is assembled (per set: center tables, then lane
+    /// streams). `prev_syms` must be the same reference symbol maps passed
+    /// to [`Codec::prepare`] (the lanes re-derive their warmup contexts
+    /// from them).
+    ///
+    /// Lane bytes are a pure function of (config, symbols, reference
+    /// maps), so the output is bit-deterministic regardless of how the
+    /// pool schedules the tasks — and identical to the pre-split
+    /// single-pass writer.
+    pub fn encode_prepared(
+        &self,
+        prep: &PreparedEncode,
+        prev_syms: Option<&SymbolMaps>,
+    ) -> Result<(Vec<u8>, EncodeStats)> {
+        let t0 = std::time::Instant::now();
+        let lanes = prep.lanes;
+        let workers = pool::available_workers();
+
+        // Entropy-code all 3 × lanes lane streams on the pool. Lanes read
+        // the per-tensor symbol vectors in place via the plan's
         // (tensor, element) walk — no flattened copy of the symbols.
         let mut ltasks: Vec<Task<Result<LaneOut>>> = Vec::with_capacity(3 * lanes);
-        for (k, set_syms) in quantized.iter().enumerate() {
+        for (k, set_syms) in prep.syms.sets.iter().enumerate() {
             let ref_maps = self.reference_maps(prev_syms, k);
             for lane in 0..lanes {
-                let plan = &plan;
-                let extractors = extractors.as_slice();
+                let plan = &prep.plan;
+                let extractors = prep.extractors.as_slice();
                 let set_syms = set_syms.as_slice();
                 ltasks.push(Box::new(move || {
                     self.encode_lane(plan, extractors, ref_maps, set_syms, lane)
@@ -510,12 +636,12 @@ impl Codec {
         let mut lresults = pool::run_scoped(workers, ltasks)?.into_iter();
 
         // Assemble the container: per set, center tables then lane streams.
-        let mut container = Container::new(Json::Null); // header set below
+        let mut container = Container::new(prep.header.clone());
         let mut set_bytes = [0usize; 3];
         let mut set_loss = [0.0f64; 3];
         for k in 0..3 {
-            for q in &quantized[k] {
-                container.push_blob(centers_to_bytes(&q.centers));
+            for centers in &prep.centers[k] {
+                container.push_blob(centers_to_bytes(centers));
             }
             let mut loss_weighted = 0.0f64;
             let mut syms_total = 0usize;
@@ -528,27 +654,19 @@ impl Codec {
             }
             set_loss[k] = if syms_total > 0 { loss_weighted / syms_total as f64 } else { 0.0 };
         }
-
-        let (recon, syms) =
-            self.assemble_recon(current, reference, &sets, quantized, recon_sets)?;
-
-        let mut hdr_cfg = cfg.clone();
-        hdr_cfg.lanes = lanes; // record the resolved lane count
-        container.header =
-            self.make_header(2, current, reference, prev_syms, &front, hdr_cfg.to_json());
         let bytes = container.to_bytes();
 
         let stats = EncodeStats {
-            raw_bytes: current.raw_bytes(),
+            raw_bytes: prep.raw_bytes,
             compressed_bytes: bytes.len(),
             set_bytes,
-            weight_density: front.weight_density,
-            momentum_density: front.momentum_density,
+            weight_density: prep.weight_density,
+            momentum_density: prep.momentum_density,
             set_loss,
             encode_seconds: t0.elapsed().as_secs_f64(),
             lanes,
         };
-        Ok(EncodeOutput { bytes, recon, syms, stats })
+        Ok((bytes, stats))
     }
 
     /// Build the reconstruction + symbol maps from the quantization
@@ -637,14 +755,14 @@ impl Codec {
     }
 
     /// Encode one lane of one parameter set (runs on a pool worker).
-    /// `set_syms` are the set's per-tensor quantized symbols, indexed by
-    /// the plan's (tensor, element) walk.
+    /// `set_syms` are the set's per-tensor quantized symbol maps, indexed
+    /// by the plan's (tensor, element) walk.
     fn encode_lane(
         &self,
         plan: &LanePlan,
         extractors: &[ContextExtractor],
         ref_maps: Option<&[Vec<u16>]>,
-        set_syms: &[Quantized],
+        set_syms: &[Vec<u16>],
         lane: usize,
     ) -> Result<LaneOut> {
         let cfg = &self.cfg;
@@ -654,7 +772,7 @@ impl Codec {
                 let mut model = ac::AdaptiveModel::new(1 << cfg.bits);
                 let mut enc = ac::Encoder::new();
                 for (ti, idx) in plan.iter_lane(lane) {
-                    model.encode(&mut enc, set_syms[ti].symbols[idx]);
+                    model.encode(&mut enc, set_syms[ti][idx]);
                 }
                 Ok(LaneOut { bytes: enc.finish(), loss: 0.0, symbols })
             }
@@ -669,7 +787,7 @@ impl Codec {
                 for (ti, idx) in plan.iter_lane(lane) {
                     let map = ref_maps.and_then(|m| m.get(ti)).map(|v| v.as_slice());
                     extractors[ti].extract_or_zero(map, idx, &mut ctx);
-                    coder.push(&ctx, set_syms[ti].symbols[idx])?;
+                    coder.push(&ctx, set_syms[ti][idx])?;
                 }
                 let (bytes, loss, _ideal) = coder.finish()?;
                 Ok(LaneOut { bytes, loss, symbols })
@@ -1316,6 +1434,33 @@ mod tests {
         // The quantization front-end is lane-independent, so the decoded
         // checkpoints agree across lane counts.
         assert_eq!(recons[0], recons[1]);
+    }
+
+    #[test]
+    fn prepare_plus_encode_prepared_matches_encode() {
+        // The pipeline split must be invisible in the output: running the
+        // two halves by hand yields byte-identical containers and the
+        // same chain state as the one-shot `encode`.
+        let codec = Codec::new(small_cfg(ContextMode::Lstm), Backend::Native);
+        let c0 = Checkpoint::synthetic(7, &layers(), 55);
+        let c1 = Checkpoint::synthetic(8, &layers(), 56);
+
+        let whole0 = codec.encode(&c0, None, None).unwrap();
+        let prep0 = codec.prepare(&c0, None, None).unwrap();
+        assert_eq!(prep0.step, 7);
+        assert_eq!(prep0.ref_step, None);
+        let (bytes0, stats0) = codec.encode_prepared(&prep0, None).unwrap();
+        assert_eq!(bytes0, whole0.bytes);
+        assert_eq!(prep0.recon, whole0.recon);
+        assert_eq!(prep0.syms, whole0.syms);
+        assert_eq!(stats0.lanes, whole0.stats.lanes);
+        assert_eq!(stats0.compressed_bytes, whole0.stats.compressed_bytes);
+
+        let whole1 = codec.encode(&c1, Some(&whole0.recon), Some(&whole0.syms)).unwrap();
+        let prep1 = codec.prepare(&c1, Some(&prep0.recon), Some(&prep0.syms)).unwrap();
+        assert_eq!(prep1.ref_step, Some(7));
+        let (bytes1, _) = codec.encode_prepared(&prep1, Some(&prep0.syms)).unwrap();
+        assert_eq!(bytes1, whole1.bytes);
     }
 
     #[test]

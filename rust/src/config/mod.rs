@@ -58,6 +58,9 @@ pub struct ExperimentConfig {
     pub backend: BackendKind,
     /// Decode-and-verify every container right after encoding.
     pub verify: bool,
+    /// Depth of the coordinator's submission queue and of each pipeline
+    /// stage queue (backpressure bound; ≥ 1).
+    pub queue_depth: usize,
     /// Codec settings.
     pub codec: CodecConfig,
 }
@@ -75,6 +78,7 @@ impl Default for ExperimentConfig {
             out_dir: "runs/default".into(),
             backend: BackendKind::Native,
             verify: false,
+            queue_depth: 2,
             codec: CodecConfig::default(),
         }
     }
@@ -101,6 +105,7 @@ impl ExperimentConfig {
                     cfg.verify =
                         val.as_bool().ok_or_else(|| Error::config("verify must be bool"))?
                 }
+                "queue_depth" => cfg.queue_depth = req_u64(val)? as usize,
                 "codec" => apply_codec(&mut cfg.codec, val)?,
                 other => return Err(Error::config(format!("unknown config key '{other}'"))),
             }
@@ -127,6 +132,7 @@ impl ExperimentConfig {
             ("out_dir", Json::str(self.out_dir.clone())),
             ("backend", Json::str(self.backend.as_str())),
             ("verify", Json::Bool(self.verify)),
+            ("queue_depth", Json::num(self.queue_depth as f64)),
             (
                 "codec",
                 Json::obj(vec![
@@ -152,6 +158,9 @@ impl ExperimentConfig {
         }
         if self.step_size == 0 {
             return Err(Error::config("step_size must be >= 1"));
+        }
+        if self.queue_depth == 0 {
+            return Err(Error::config("queue_depth must be >= 1"));
         }
         if self.codec.window % 2 == 0 {
             return Err(Error::config("codec.window must be odd"));
@@ -252,6 +261,7 @@ mod tests {
             r#"{
               "workload": "lm_small", "steps": 100, "ckpt_every": 20,
               "step_size": 2, "seed": 7, "backend": "pjrt", "verify": true,
+              "queue_depth": 4,
               "codec": {"mode": "zero_context", "bits": 2, "window": 5,
                         "hidden": 32, "alpha": 1e-4, "log_moment2": false,
                         "lanes": 8}
@@ -260,6 +270,7 @@ mod tests {
         .unwrap();
         assert_eq!(cfg.workload, "lm_small");
         assert_eq!(cfg.step_size, 2);
+        assert_eq!(cfg.queue_depth, 4);
         assert_eq!(cfg.backend, BackendKind::Pjrt);
         assert_eq!(cfg.codec.mode, ContextMode::ZeroContext);
         assert_eq!(cfg.codec.bits, 2);
@@ -284,6 +295,7 @@ mod tests {
         assert!(ExperimentConfig::from_json_text(r#"{"codec": {"window": 4}}"#).is_err());
         assert!(ExperimentConfig::from_json_text(r#"{"codec": {"bits": 9}}"#).is_err());
         assert!(ExperimentConfig::from_json_text(r#"{"step_size": 0}"#).is_err());
+        assert!(ExperimentConfig::from_json_text(r#"{"queue_depth": 0}"#).is_err());
         assert!(ExperimentConfig::from_json_text(r#"{"codec": {"lanes": 65}}"#).is_err());
         assert!(ExperimentConfig::from_json_text(r#"{"codec": {"lanes": 0}}"#).is_ok());
     }

@@ -27,6 +27,11 @@
 //! The header is self-describing: `cpcm info file.cpcm` pretty-prints it,
 //! and the decoder rebuilds its models purely from header fields (plus the
 //! reference checkpoint and chain symbol maps — see [`crate::codec`]).
+//!
+//! A directory of containers written by the coordinator additionally
+//! carries a `manifest.json` index (step → file, reference parent,
+//! trailer CRC — see [`crate::coordinator::ChainManifest`]); the trailer
+//! CRC is readable without parsing via [`Container::stored_crc`].
 
 use crate::util::json::Json;
 use crate::{Error, Result};
@@ -124,6 +129,20 @@ impl Container {
         Ok(Self { header, blobs })
     }
 
+    /// The CRC-32 recorded in a serialized container's trailer (the last
+    /// four bytes), read without parsing or checksumming the body. The
+    /// chain manifest ([`crate::coordinator::ChainManifest`]) stores this
+    /// value so a restore can reject a swapped or stale container before
+    /// any entropy decoding starts; [`Container::from_bytes`] still
+    /// re-verifies the checksum over the full body.
+    pub fn stored_crc(bytes: &[u8]) -> Result<u32> {
+        if bytes.len() < 8 + 4 + 4 + 4 || &bytes[..8] != MAGIC {
+            return Err(Error::format("not a cpcm container"));
+        }
+        let tail: [u8; 4] = bytes[bytes.len() - 4..].try_into().unwrap();
+        Ok(u32::from_le_bytes(tail))
+    }
+
     /// Total serialized size (compression-ratio denominator).
     pub fn size_bytes(&self) -> usize {
         8 + 4
@@ -181,6 +200,17 @@ mod tests {
         let back = Container::from_bytes(&bytes).unwrap();
         assert_eq!(back, c);
         assert_eq!(bytes.len(), c.size_bytes());
+    }
+
+    #[test]
+    fn stored_crc_matches_trailer() {
+        let bytes = sample().to_bytes();
+        let crc = Container::stored_crc(&bytes).unwrap();
+        assert_eq!(crc, crate::util::crc32::hash(&bytes[..bytes.len() - 4]));
+        assert!(Container::stored_crc(&bytes[..6]).is_err());
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(Container::stored_crc(&bad).is_err());
     }
 
     #[test]

@@ -1,0 +1,297 @@
+//! Chain manifest: the random-access index over a directory of `.cpcm`
+//! containers.
+//!
+//! The coordinator's write stage appends one [`ManifestEntry`] per
+//! checkpoint and atomically rewrites `manifest.json` after every
+//! container (temp file + rename), so the manifest is crash-consistent:
+//! it never references a container that was not fully written.
+//!
+//! The manifest is what makes mid-chain restore cheap: instead of
+//! scanning and decoding the whole directory in step order,
+//! [`crate::coordinator::restore_step`] asks [`ChainManifest::ancestry`]
+//! for the minimal decode list — the target step's reference parents back
+//! to the nearest intra frame — and decodes only those containers. Each
+//! entry also records the container's trailer CRC-32 so a swapped or
+//! truncated file is detected *before* any entropy decoding starts.
+//!
+//! Schema (`manifest.json`, version 1):
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "checkpoints": [
+//!     {"step": 100, "ref_step": null, "file": "ckpt_0000000100.cpcm",
+//!      "format": 2, "lanes": 4, "bytes": 48213, "crc32": 3735928559}
+//!   ]
+//! }
+//! ```
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// File name of the manifest inside a container directory.
+pub const MANIFEST_FILE: &str = "manifest.json";
+
+const MANIFEST_VERSION: usize = 1;
+
+/// One compressed checkpoint in the chain.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ManifestEntry {
+    /// Training step of the checkpoint.
+    pub step: u64,
+    /// Reference parent (None ⇒ self-contained intra frame).
+    pub ref_step: Option<u64>,
+    /// Container file name, relative to the manifest's directory.
+    pub file: String,
+    /// Container format (see [`crate::container`]).
+    pub format: u64,
+    /// Coding lanes recorded in the container header.
+    pub lanes: usize,
+    /// Serialized container size in bytes.
+    pub bytes: u64,
+    /// The CRC-32 stored in the container trailer.
+    pub crc32: u32,
+}
+
+/// Step-indexed manifest of a container directory.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ChainManifest {
+    entries: BTreeMap<u64, ManifestEntry>,
+}
+
+impl ChainManifest {
+    /// New empty manifest.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add (or replace) the entry for `entry.step`.
+    pub fn insert(&mut self, entry: ManifestEntry) {
+        self.entries.insert(entry.step, entry);
+    }
+
+    /// Entry for `step`, if present.
+    pub fn entry(&self, step: u64) -> Option<&ManifestEntry> {
+        self.entries.get(&step)
+    }
+
+    /// All steps, ascending.
+    pub fn steps(&self) -> Vec<u64> {
+        self.entries.keys().copied().collect()
+    }
+
+    /// Number of checkpoints in the manifest.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when the manifest has no entries.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Minimal decode order for `step`: its reference ancestry from the
+    /// nearest intra frame (first) down to `step` itself (last). Errors if
+    /// `step` or any parent is missing, or the reference links cycle.
+    pub fn ancestry(&self, step: u64) -> Result<Vec<u64>> {
+        let mut chain = Vec::new();
+        let mut cur = step;
+        loop {
+            let entry = self.entries.get(&cur).ok_or_else(|| {
+                Error::format(format!("manifest has no entry for step {cur}"))
+            })?;
+            chain.push(cur);
+            match entry.ref_step {
+                None => break,
+                Some(parent) => {
+                    if chain.len() > self.entries.len() {
+                        return Err(Error::format("manifest reference chain has a cycle"));
+                    }
+                    cur = parent;
+                }
+            }
+        }
+        chain.reverse();
+        Ok(chain)
+    }
+
+    /// Serialize to the version-1 JSON document.
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .entries
+            .values()
+            .map(|e| {
+                Json::obj(vec![
+                    ("step", Json::num(e.step as f64)),
+                    (
+                        "ref_step",
+                        match e.ref_step {
+                            Some(r) => Json::num(r as f64),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("file", Json::str(e.file.clone())),
+                    ("format", Json::num(e.format as f64)),
+                    ("lanes", Json::num(e.lanes as f64)),
+                    ("bytes", Json::num(e.bytes as f64)),
+                    ("crc32", Json::num(e.crc32 as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("version", Json::num(MANIFEST_VERSION as f64)),
+            ("checkpoints", Json::Arr(rows)),
+        ])
+    }
+
+    /// Parse a version-1 JSON document.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let version = j.req_usize("version")?;
+        if version != MANIFEST_VERSION {
+            return Err(Error::format(format!("unsupported manifest version {version}")));
+        }
+        let mut entries = BTreeMap::new();
+        for e in j.req_arr("checkpoints")? {
+            let step = e.req_usize("step")? as u64;
+            let ref_step = match e.req("ref_step")? {
+                Json::Null => None,
+                v => Some(
+                    v.as_u64()
+                        .ok_or_else(|| Error::format("manifest ref_step must be a step or null"))?,
+                ),
+            };
+            let crc = e.req_usize("crc32")?;
+            if crc > u32::MAX as usize {
+                return Err(Error::format("manifest crc32 out of range"));
+            }
+            let entry = ManifestEntry {
+                step,
+                ref_step,
+                file: e.req_str("file")?.to_string(),
+                format: e.req_usize("format")? as u64,
+                lanes: e.req_usize("lanes")?,
+                bytes: e.req_usize("bytes")? as u64,
+                crc32: crc as u32,
+            };
+            if entries.insert(step, entry).is_some() {
+                return Err(Error::format(format!("duplicate manifest entry for step {step}")));
+            }
+        }
+        Ok(Self { entries })
+    }
+
+    /// Path of the manifest file inside `dir`.
+    pub fn path_in(dir: &Path) -> PathBuf {
+        dir.join(MANIFEST_FILE)
+    }
+
+    /// True if `dir` contains a manifest file.
+    pub fn exists_in(dir: &Path) -> bool {
+        Self::path_in(dir).is_file()
+    }
+
+    /// Load `dir`'s manifest.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(Self::path_in(dir))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Atomically (re)write `dir`'s manifest (temp file + rename).
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        let tmp = dir.join(".tmp_manifest");
+        std::fs::write(&tmp, self.to_json().to_string_pretty())?;
+        std::fs::rename(&tmp, Self::path_in(dir))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(step: u64, ref_step: Option<u64>) -> ManifestEntry {
+        ManifestEntry {
+            step,
+            ref_step,
+            file: format!("ckpt_{step:010}.cpcm"),
+            format: 2,
+            lanes: 4,
+            bytes: 1000 + step,
+            crc32: 0xDEAD_0000 ^ step as u32,
+        }
+    }
+
+    fn sample() -> ChainManifest {
+        let mut m = ChainManifest::new();
+        m.insert(entry(10, None));
+        m.insert(entry(20, Some(10)));
+        m.insert(entry(30, None)); // keyframe
+        m.insert(entry(40, Some(30)));
+        m.insert(entry(50, Some(40)));
+        m
+    }
+
+    #[test]
+    fn ancestry_walks_to_the_nearest_keyframe() {
+        let m = sample();
+        assert_eq!(m.ancestry(50).unwrap(), vec![30, 40, 50]);
+        assert_eq!(m.ancestry(20).unwrap(), vec![10, 20]);
+        assert_eq!(m.ancestry(30).unwrap(), vec![30]);
+        assert!(m.ancestry(999).is_err());
+    }
+
+    #[test]
+    fn ancestry_detects_missing_parent_and_cycles() {
+        let mut m = ChainManifest::new();
+        m.insert(entry(20, Some(10))); // parent never written
+        assert!(m.ancestry(20).is_err());
+
+        let mut m = ChainManifest::new();
+        m.insert(entry(1, Some(2)));
+        m.insert(entry(2, Some(1)));
+        assert!(m.ancestry(1).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = sample();
+        let j = m.to_json();
+        let back = ChainManifest::from_json(&j).unwrap();
+        assert_eq!(back, m);
+        // Serialized text parses back too (the on-disk path).
+        let text = j.to_string_pretty();
+        let reparsed = ChainManifest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(reparsed, m);
+        assert_eq!(reparsed.steps(), vec![10, 20, 30, 40, 50]);
+        assert_eq!(reparsed.len(), 5);
+    }
+
+    #[test]
+    fn bad_documents_rejected() {
+        let wrong_version = Json::parse(r#"{"version": 2, "checkpoints": []}"#).unwrap();
+        assert!(ChainManifest::from_json(&wrong_version).is_err());
+        assert!(ChainManifest::from_json(&Json::parse(r#"{"version": 1}"#).unwrap()).is_err());
+        // Duplicate step.
+        let dup = r#"{"version": 1, "checkpoints": [
+            {"step": 1, "ref_step": null, "file": "a", "format": 2, "lanes": 1, "bytes": 1, "crc32": 0},
+            {"step": 1, "ref_step": null, "file": "b", "format": 2, "lanes": 1, "bytes": 1, "crc32": 0}
+        ]}"#;
+        assert!(ChainManifest::from_json(&Json::parse(dup).unwrap()).is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir()
+            .join(format!("cpcm_manifest_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = sample();
+        m.save(&dir).unwrap();
+        assert!(ChainManifest::exists_in(&dir));
+        let back = ChainManifest::load(&dir).unwrap();
+        assert_eq!(back, m);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,37 +1,81 @@
-//! Compression coordinator: the Layer-3 service tying the system together.
+//! Compression coordinator: the Layer-3 **pipelined checkpoint service**.
 //!
-//! Training (the producer) submits checkpoints; a dedicated compression
-//! worker (the consumer) encodes them against the evolving reference chain
-//! and writes `.cpcm` containers. The bounded submission queue gives
-//! backpressure: if compression falls behind, `submit` blocks rather than
-//! buffering unboundedly (checkpoints are large).
+//! Training (the producer) submits checkpoints; three dedicated stage
+//! threads carry each checkpoint through the codec while the next one is
+//! already in flight:
 //!
-//! The coordinator owns the *chain state* the codec needs:
-//! - the reconstructed reference checkpoints (the decoder-visible values,
-//!   as returned by `encode().recon`), and
-//! - their quantized symbol maps (the context source, paper Fig. 2).
+//! ```text
+//!  submit ──▶ [submit queue] ──▶ prep ──▶ [encode queue] ──▶ encode ──▶ [write queue] ──▶ write
+//!             (backpressure)    delta      (bounded)         3×L lane     (bounded)       file +
+//!                               prune                        entropy                      manifest +
+//!                               quant                        coding                       verify
+//! ```
 //!
-//! A history of `step_size` entries supports the paper's Eq.-6 experiment
-//! (`s = 2` references the checkpoint before the previous one, Fig. 4).
-//! Keyframes (intra frames) bound error accumulation and chain length.
+//! The *prep* stage is the only chain-sequential part (checkpoint `k+1`'s
+//! delta needs `k`'s reconstruction, which quantization produces), so the
+//! expensive entropy stage of `k` overlaps with the prediction/quantization
+//! of `k+1` — exactly the decoupling the paper's reference-chain ordering
+//! permits ([`crate::codec::Codec::prepare`] /
+//! [`crate::codec::Codec::encode_prepared`]). All queues are bounded
+//! ([`crate::util::queue::BoundedQueue`], depth
+//! [`CoordinatorConfig::queue_depth`]): a fast trainer blocks in
+//! [`Coordinator::submit`] — or sheds load via
+//! [`Coordinator::try_submit`] — instead of buffering unbounded
+//! checkpoints. Per-stage queue waits, stage timings and high-water queue
+//! depths land in [`Coordinator::metrics`].
+//!
+//! The coordinator owns the *chain state* the codec needs: the
+//! reconstructed reference checkpoints (decoder-visible values) and their
+//! quantized symbol maps (the context source, paper Fig. 2), shared
+//! across stages as `Arc<PreparedEncode>`. A history of `step_size`
+//! entries supports the paper's Eq.-6 experiment (`s = 2` references the
+//! checkpoint before the previous one, Fig. 4); keyframes (intra frames)
+//! bound error accumulation and chain length.
+//!
+//! The write stage additionally maintains the **chain manifest**
+//! ([`ChainManifest`], `manifest.json`): step → container file, reference
+//! parent, format, lanes and CRC. [`restore_step`] uses it to restore any
+//! step by decoding only that step's reference ancestry;
+//! [`decode_chain`] remains the manifest-free full-directory path.
+//!
+//! ## Shutdown contract
+//!
+//! [`Coordinator::finish`] closes the intake, lets the stages drain, and
+//! joins **all three** stage threads before returning — on success *and*
+//! on error. When any stage fails, its input and output queues are closed
+//! so upstream producers unblock (blocked [`Coordinator::submit`] calls
+//! return an error) and downstream stages drain and exit; `finish` then
+//! reports the first error in pipeline order. Dropping a coordinator
+//! without calling `finish` performs the same close-and-join, so no
+//! stage thread ever outlives the handle. Lane/quantization workers are
+//! not owned here: they belong to the process-wide persistent pool
+//! ([`crate::util::pool`]), which parks (never leaks) its threads between
+//! encodes; `finish` snapshots the pool's spawn/generation counters into
+//! the metrics registry (`pool_threads_spawned`, `pool_jobs`).
+
+mod manifest;
+
+pub use manifest::{ChainManifest, ManifestEntry, MANIFEST_FILE};
 
 use crate::checkpoint::Checkpoint;
-use crate::codec::{Codec, CodecConfig, EncodeStats, SymbolMaps};
+use crate::codec::{Codec, CodecConfig, EncodeStats, PreparedEncode, SymbolMaps};
+use crate::container::Container;
 use crate::lstm::Backend;
 use crate::metrics::Metrics;
 use crate::util::pool;
+use crate::util::queue::{BoundedQueue, PushError};
 use crate::{Error, Result};
 use std::collections::VecDeque;
-use std::path::PathBuf;
-use std::sync::mpsc::{Receiver, SyncSender};
-use std::sync::{mpsc, Arc};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
 
 /// Coordinator settings.
 #[derive(Clone)]
 pub struct CoordinatorConfig {
     pub codec: CodecConfig,
     pub backend: Backend,
-    /// Output directory for `.cpcm` files.
+    /// Output directory for `.cpcm` files and `manifest.json`.
     pub out_dir: PathBuf,
     /// Eq.-6 step size `s` (1 ⇒ reference is the previous checkpoint).
     pub step_size: u64,
@@ -40,7 +84,9 @@ pub struct CoordinatorConfig {
     /// Decode each container after writing and verify it reproduces the
     /// encoder's reconstruction bit-exactly.
     pub verify: bool,
-    /// Submission queue depth (backpressure bound).
+    /// Depth of the submission queue *and* of each inter-stage queue
+    /// (backpressure bound; min 1). Total checkpoints in flight are
+    /// bounded by `3 · queue_depth + 3` (three queues plus one per stage).
     pub queue_depth: usize,
 }
 
@@ -69,107 +115,347 @@ pub struct JobResult {
     pub path: PathBuf,
 }
 
-/// Handle to the running coordinator.
+/// Outcome of a non-blocking [`Coordinator::try_submit`].
+pub enum SubmitOutcome {
+    /// The checkpoint was queued.
+    Queued,
+    /// The queue was full; the checkpoint is handed back untouched.
+    Rejected(Checkpoint),
+}
+
+/// Shared chain state of one prepared checkpoint (reconstruction + symbol
+/// maps), held by the prep-stage history and by in-flight jobs.
+type ChainRef = Arc<PreparedEncode>;
+
+/// Job flowing prep → encode.
+struct EncodeJob {
+    prep: ChainRef,
+    reference: Option<ChainRef>,
+    /// Seconds spent in the prep stage (folded into the reported
+    /// `encode_seconds` so the CLI keeps showing whole-encode time).
+    prep_seconds: f64,
+}
+
+/// Job flowing encode → write.
+struct WriteJob {
+    prep: ChainRef,
+    reference: Option<ChainRef>,
+    bytes: Vec<u8>,
+    stats: EncodeStats,
+}
+
+/// Handle to the running pipeline.
+///
+/// See the module docs for the shutdown contract: [`Coordinator::finish`]
+/// (or `drop`) closes the intake and joins every stage thread on all
+/// paths.
 pub struct Coordinator {
-    tx: Option<SyncSender<Checkpoint>>,
-    worker: Option<std::thread::JoinHandle<Result<Vec<JobResult>>>>,
+    submit_q: BoundedQueue<Checkpoint>,
+    prep: Option<std::thread::JoinHandle<Result<()>>>,
+    encode: Option<std::thread::JoinHandle<Result<()>>>,
+    write: Option<std::thread::JoinHandle<Result<Vec<JobResult>>>>,
     metrics: Arc<Metrics>,
 }
 
 impl Coordinator {
-    /// Start the compression worker.
+    /// Start the three pipeline stage threads.
     pub fn start(cfg: CoordinatorConfig) -> Result<Self> {
         std::fs::create_dir_all(&cfg.out_dir)?;
         let metrics = Arc::new(Metrics::new());
-        let (tx, rx) = mpsc::sync_channel::<Checkpoint>(cfg.queue_depth);
-        let m = metrics.clone();
-        let worker = std::thread::Builder::new()
-            .name("cpcm-coordinator".into())
-            .spawn(move || worker_loop(cfg, rx, m))
-            .map_err(Error::Io)?;
-        Ok(Self { tx: Some(tx), worker: Some(worker), metrics })
+        let depth = cfg.queue_depth.max(1);
+        let submit_q: BoundedQueue<Checkpoint> = BoundedQueue::new(depth);
+        let encode_q: BoundedQueue<EncodeJob> = BoundedQueue::new(depth);
+        let write_q: BoundedQueue<WriteJob> = BoundedQueue::new(depth);
+        // Each stage owns its own config/backend clone (cheap: backends
+        // are handles) — no shared-config synchronization to reason about.
+
+        let prep = {
+            let cfg = cfg.clone();
+            let in_q = submit_q.clone();
+            let out_q = encode_q.clone();
+            let metrics = metrics.clone();
+            std::thread::Builder::new().name("cpcm-prep".into()).spawn(move || {
+                let codec = Codec::new(cfg.codec.clone(), cfg.backend.clone());
+                let result = prep_loop(&cfg, &codec, &in_q, &out_q, &metrics);
+                // Close both sides so a blocked producer errors out and
+                // the downstream stages drain and exit (see module docs).
+                in_q.close();
+                out_q.close();
+                result
+            })
+        };
+
+        let encode = {
+            let cfg = cfg.clone();
+            let in_q = encode_q.clone();
+            let out_q = write_q.clone();
+            let metrics = metrics.clone();
+            std::thread::Builder::new().name("cpcm-encode".into()).spawn(move || {
+                let codec = Codec::new(cfg.codec.clone(), cfg.backend.clone());
+                let result = encode_loop(&codec, &in_q, &out_q, &metrics);
+                in_q.close();
+                out_q.close();
+                result
+            })
+        };
+
+        let write = {
+            let in_q = write_q.clone();
+            let metrics = metrics.clone();
+            std::thread::Builder::new().name("cpcm-write".into()).spawn(move || {
+                let result = write_loop(&cfg, &in_q, &metrics);
+                in_q.close();
+                result
+            })
+        };
+
+        match (prep, encode, write) {
+            (Ok(prep), Ok(encode), Ok(write)) => Ok(Self {
+                submit_q,
+                prep: Some(prep),
+                encode: Some(encode),
+                write: Some(write),
+                metrics,
+            }),
+            (prep, encode, write) => {
+                // A stage failed to spawn: close every queue so the stages
+                // that *did* spawn drain and exit, join them, and report
+                // the first spawn error — no thread outlives this failure.
+                submit_q.close();
+                encode_q.close();
+                write_q.close();
+                let mut first_err: Option<std::io::Error> = None;
+                match prep {
+                    Ok(h) => drop(h.join()),
+                    Err(e) => first_err = first_err.or(Some(e)),
+                }
+                match encode {
+                    Ok(h) => drop(h.join()),
+                    Err(e) => first_err = first_err.or(Some(e)),
+                }
+                match write {
+                    Ok(h) => drop(h.join()),
+                    Err(e) => first_err = first_err.or(Some(e)),
+                }
+                Err(Error::Io(first_err.expect("at least one stage spawn failed")))
+            }
+        }
     }
 
-    /// Submit a checkpoint for compression. Blocks when the queue is full
-    /// (backpressure on the trainer).
+    /// Submit a checkpoint for compression. Blocks while the submission
+    /// queue is full (backpressure on the trainer); fails once the
+    /// pipeline has shut down (e.g. a stage errored).
     pub fn submit(&self, ck: Checkpoint) -> Result<()> {
-        self.tx
-            .as_ref()
-            .expect("coordinator already finished")
-            .send(ck)
-            .map_err(|_| Error::codec("coordinator worker died"))
+        let t0 = Instant::now();
+        match self.submit_q.push(ck) {
+            Ok(()) => {
+                self.metrics.time("submit_wait", t0.elapsed().as_secs_f64());
+                self.metrics.gauge_max("depth_submit", self.submit_q.len() as f64);
+                self.metrics.count("submitted", 1);
+                Ok(())
+            }
+            Err(_) => Err(Error::codec("coordinator pipeline is shut down")),
+        }
     }
 
-    /// Shared metrics registry.
+    /// Non-blocking submit: when the submission queue is full the
+    /// checkpoint is handed back as [`SubmitOutcome::Rejected`] instead of
+    /// blocking the trainer (counted in the `submit_rejected` metric).
+    pub fn try_submit(&self, ck: Checkpoint) -> Result<SubmitOutcome> {
+        match self.submit_q.try_push(ck) {
+            Ok(()) => {
+                self.metrics.gauge_max("depth_submit", self.submit_q.len() as f64);
+                self.metrics.count("submitted", 1);
+                Ok(SubmitOutcome::Queued)
+            }
+            Err(PushError::Full(ck)) => {
+                self.metrics.count("submit_rejected", 1);
+                Ok(SubmitOutcome::Rejected(ck))
+            }
+            Err(PushError::Closed(_)) => {
+                Err(Error::codec("coordinator pipeline is shut down"))
+            }
+        }
+    }
+
+    /// Shared metrics registry (per-stage timings, queue waits, high-water
+    /// queue depths, persistent-pool counters).
     pub fn metrics(&self) -> Arc<Metrics> {
         self.metrics.clone()
     }
 
-    /// Close the queue, wait for the worker, and return all job results.
+    /// Close the intake, drain the pipeline, join all three stage threads
+    /// and return the per-checkpoint results in submission order.
+    ///
+    /// On error the same join discipline applies — every stage thread is
+    /// joined before the first failure (in pipeline order) is returned, so
+    /// no thread outlives this call.
     pub fn finish(mut self) -> Result<Vec<JobResult>> {
-        drop(self.tx.take());
-        self.worker
-            .take()
-            .expect("finish called twice")
-            .join()
-            .map_err(|_| Error::codec("coordinator worker panicked"))?
+        self.submit_q.close();
+        self.join_stages()
+    }
+
+    /// Join whatever stage threads are still running (idempotent). Every
+    /// thread is joined *before* any failure is propagated, so even a
+    /// panicking stage cannot leave another one detached.
+    fn join_stages(&mut self) -> Result<Vec<JobResult>> {
+        let prep_res = self.prep.take().map(|h| h.join());
+        let encode_res = self.encode.take().map(|h| h.join());
+        let write_res = self.write.take().map(|h| h.join());
+        let stats = pool::global_stats();
+        self.metrics.gauge("pool_threads", stats.threads as f64);
+        self.metrics.gauge("pool_threads_spawned", stats.threads_spawned as f64);
+        self.metrics.gauge("pool_jobs", stats.jobs as f64);
+        flatten_stage(prep_res, "prep")?;
+        flatten_stage(encode_res, "encode")?;
+        match write_res {
+            None => Ok(Vec::new()),
+            Some(Err(_)) => Err(Error::codec("coordinator write stage panicked")),
+            Some(Ok(results)) => results,
+        }
     }
 }
 
-/// Chain entry: what the decoder will have at this step.
-struct ChainEntry {
-    recon: Checkpoint,
-    syms: SymbolMaps,
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        // `finish` leaves every handle None; an abandoned coordinator
+        // still shuts down cleanly rather than detaching its stages.
+        self.submit_q.close();
+        let _ = self.join_stages();
+    }
 }
 
-fn worker_loop(
-    cfg: CoordinatorConfig,
-    rx: Receiver<Checkpoint>,
-    metrics: Arc<Metrics>,
-) -> Result<Vec<JobResult>> {
-    let codec = Codec::new(cfg.codec.clone(), cfg.backend.clone());
-    // History of the last `step_size` chain entries; front = oldest.
-    let mut history: VecDeque<ChainEntry> = VecDeque::new();
-    let mut results = Vec::new();
-    let mut index: u64 = 0;
+/// Collapse a joined unit-stage outcome into a crate `Result`.
+fn flatten_stage(joined: Option<std::thread::Result<Result<()>>>, stage: &str) -> Result<()> {
+    match joined {
+        None => Ok(()),
+        Some(Err(_)) => Err(Error::codec(format!("coordinator {stage} stage panicked"))),
+        Some(Ok(result)) => result,
+    }
+}
 
-    while let Ok(ck) = rx.recv() {
-        let step = ck.step;
+/// Stage 1: chain-sequential delta/prediction + prune/quant. Owns the
+/// reference history; the only stage that must see checkpoints in order.
+fn prep_loop(
+    cfg: &CoordinatorConfig,
+    codec: &Codec,
+    in_q: &BoundedQueue<Checkpoint>,
+    out_q: &BoundedQueue<EncodeJob>,
+    metrics: &Metrics,
+) -> Result<()> {
+    // History of the last `step_size` chain entries; front = oldest.
+    let mut history: VecDeque<ChainRef> = VecDeque::new();
+    let mut index: u64 = 0;
+    while let Some(ck) = in_q.pop() {
         let force_key = index == 0
             || (cfg.keyframe_every > 0 && index % cfg.keyframe_every == 0)
             || history.len() < cfg.step_size as usize;
         // Eq. 6: reference is the entry `s` checkpoints back.
-        let reference = if force_key { None } else { history.front() };
+        let reference: Option<ChainRef> =
+            if force_key { None } else { history.front().cloned() };
 
-        let t0 = std::time::Instant::now();
-        let out = codec.encode(
+        let t0 = Instant::now();
+        let prep = codec.prepare(
             &ck,
-            reference.map(|e| &e.recon),
-            reference.map(|e| &e.syms),
+            reference.as_deref().map(|e| &e.recon),
+            reference.as_deref().map(|e| &e.syms),
         )?;
-        metrics.time("encode", t0.elapsed().as_secs_f64());
-        metrics.count("checkpoints", 1);
-        metrics.count("bytes_out", out.bytes.len() as u64);
+        let prep_seconds = t0.elapsed().as_secs_f64();
+        metrics.time("stage_prepare", prep_seconds);
         metrics.count("bytes_raw", ck.raw_bytes() as u64);
-        metrics.gauge("last_ratio", out.stats.ratio());
 
-        let path = cfg.out_dir.join(format!("ckpt_{step:010}.cpcm"));
+        let prep: ChainRef = Arc::new(prep);
+        history.push_back(prep.clone());
+        while history.len() > cfg.step_size as usize {
+            history.pop_front();
+        }
+        index += 1;
+
+        let t0 = Instant::now();
+        if out_q.push(EncodeJob { prep, reference, prep_seconds }).is_err() {
+            // Downstream stage shut down; its error is authoritative.
+            return Ok(());
+        }
+        metrics.time("encode_queue_wait", t0.elapsed().as_secs_f64());
+        metrics.gauge_max("depth_encode", out_q.len() as f64);
+    }
+    Ok(())
+}
+
+/// Stage 2: the `3 × lanes` entropy fan-out on the persistent pool plus
+/// container assembly. Order-preserving (single consumer, FIFO queues)
+/// but chain-independent: runs while stage 1 prepares the next checkpoint.
+fn encode_loop(
+    codec: &Codec,
+    in_q: &BoundedQueue<EncodeJob>,
+    out_q: &BoundedQueue<WriteJob>,
+    metrics: &Metrics,
+) -> Result<()> {
+    while let Some(job) = in_q.pop() {
+        let t0 = Instant::now();
+        let (bytes, mut stats) = codec
+            .encode_prepared(&job.prep, job.reference.as_deref().map(|e| &e.syms))?;
+        metrics.time("stage_entropy", t0.elapsed().as_secs_f64());
+        stats.encode_seconds += job.prep_seconds;
+
+        let t0 = Instant::now();
+        let write = WriteJob { prep: job.prep, reference: job.reference, bytes, stats };
+        if out_q.push(write).is_err() {
+            return Ok(());
+        }
+        metrics.time("write_queue_wait", t0.elapsed().as_secs_f64());
+        metrics.gauge_max("depth_write", out_q.len() as f64);
+    }
+    Ok(())
+}
+
+/// Stage 3: atomic container write, manifest update, optional
+/// decode-and-verify, result accumulation.
+fn write_loop(
+    cfg: &CoordinatorConfig,
+    in_q: &BoundedQueue<WriteJob>,
+    metrics: &Metrics,
+) -> Result<Vec<JobResult>> {
+    let mut results = Vec::new();
+    let mut manifest = ChainManifest::new();
+    while let Some(job) = in_q.pop() {
+        let step = job.prep.step;
+        let t0 = Instant::now();
+        let name = format!("ckpt_{step:010}.cpcm");
+        let path = cfg.out_dir.join(&name);
         let tmp = cfg.out_dir.join(format!(".tmp_{step}"));
-        std::fs::write(&tmp, &out.bytes)?;
+        std::fs::write(&tmp, &job.bytes)?;
         std::fs::rename(&tmp, &path)?;
 
+        // Manifest after container: it never references a missing file.
+        manifest.insert(ManifestEntry {
+            step,
+            ref_step: job.prep.ref_step,
+            file: name,
+            format: 2,
+            lanes: job.stats.lanes,
+            bytes: job.bytes.len() as u64,
+            crc32: Container::stored_crc(&job.bytes)?,
+        });
+        manifest.save(&cfg.out_dir)?;
+        metrics.time("stage_write", t0.elapsed().as_secs_f64());
+
         if cfg.verify {
+            let t0 = Instant::now();
             // The decode itself fans out over 3 × lanes pool tasks inside
             // `Codec::decode`; the bit-exactness comparison below reuses
             // the same pool across the four independent checks.
             let (decoded, dsyms) = Codec::decode(
                 &cfg.backend,
-                &out.bytes,
-                reference.map(|e| &e.recon),
-                reference.map(|e| &e.syms),
+                &job.bytes,
+                job.reference.as_deref().map(|e| &e.recon),
+                job.reference.as_deref().map(|e| &e.syms),
             )?;
+            let out = &job.prep;
             let checks: Vec<pool::Task<bool>> = vec![
-                Box::new(|| decoded.step == out.recon.step && decoded.weights == out.recon.weights),
+                Box::new(|| {
+                    decoded.step == out.recon.step && decoded.weights == out.recon.weights
+                }),
                 Box::new(|| decoded.exp_avg == out.recon.exp_avg),
                 Box::new(|| decoded.exp_avg_sq == out.recon.exp_avg_sq),
                 Box::new(|| dsyms == out.syms),
@@ -180,29 +466,79 @@ fn worker_loop(
                     "verification failed for step {step}: decode != encoder reconstruction"
                 )));
             }
+            metrics.time("stage_verify", t0.elapsed().as_secs_f64());
             metrics.count("verified", 1);
         }
 
+        metrics.count("checkpoints", 1);
+        metrics.count("bytes_out", job.bytes.len() as u64);
+        metrics.gauge("last_ratio", job.stats.ratio());
+
         results.push(JobResult {
             step,
-            ref_step: reference.map(|e| e.recon.step),
-            bytes: out.bytes.len(),
-            stats: out.stats,
+            ref_step: job.prep.ref_step,
+            bytes: job.bytes.len(),
+            stats: job.stats,
             path,
         });
-
-        history.push_back(ChainEntry { recon: out.recon, syms: out.syms });
-        while history.len() > cfg.step_size as usize {
-            history.pop_front();
-        }
-        index += 1;
     }
     Ok(results)
 }
 
+/// Restore the checkpoint at exactly `step` from a coordinator output
+/// directory by decoding **only** its reference ancestry, as indexed by
+/// the directory's `manifest.json` (see [`ChainManifest::ancestry`]).
+/// Each container's trailer CRC is checked against the manifest before
+/// decoding. The result is bit-identical to the corresponding entry of a
+/// full [`decode_chain`] pass.
+pub fn restore_step(dir: &Path, backend: &Backend, step: u64) -> Result<Checkpoint> {
+    let manifest = ChainManifest::load(dir)?;
+    restore_step_with(&manifest, dir, backend, step)
+}
+
+/// [`restore_step`] with a pre-loaded manifest (amortizes the manifest
+/// parse across many restores).
+pub fn restore_step_with(
+    manifest: &ChainManifest,
+    dir: &Path,
+    backend: &Backend,
+    step: u64,
+) -> Result<Checkpoint> {
+    let chain = manifest.ancestry(step)?;
+    let mut prev: Option<(Checkpoint, SymbolMaps)> = None;
+    for s in chain {
+        let entry = manifest.entry(s).expect("ancestry returned an unindexed step");
+        let bytes = std::fs::read(dir.join(&entry.file))?;
+        let stored = Container::stored_crc(&bytes)?;
+        if stored != entry.crc32 {
+            return Err(Error::format(format!(
+                "container for step {s} does not match the manifest \
+                 (crc {:08x} recorded, {stored:08x} on disk)",
+                entry.crc32
+            )));
+        }
+        let (ck, syms) = Codec::decode(
+            backend,
+            &bytes,
+            prev.as_ref().map(|p| &p.0),
+            prev.as_ref().map(|p| &p.1),
+        )?;
+        if ck.step != s {
+            return Err(Error::codec(format!(
+                "container {} holds step {}, manifest says {s}",
+                entry.file, ck.step
+            )));
+        }
+        prev = Some((ck, syms));
+    }
+    Ok(prev.expect("ancestry is never empty").0)
+}
+
 /// Decode a directory of `.cpcm` containers in chain order, returning the
 /// reconstructed checkpoints (the decompression path of the CLI and the
-/// resume examples). `upto` limits the decode to steps ≤ it.
+/// resume examples). `upto` limits the decode to steps ≤ it. Works with
+/// or without a manifest (pure directory scan); use [`restore_step`] for
+/// manifest-indexed random access to a single step.
 pub fn decode_chain(
     dir: &std::path::Path,
     backend: &Backend,
@@ -286,11 +622,26 @@ mod tests {
         assert_eq!(results[1].ref_step, Some(1000));
         assert_eq!(metrics.counter("checkpoints"), 4);
         assert_eq!(metrics.counter("verified"), 4);
+        assert_eq!(metrics.counter("submitted"), 4);
+        assert_eq!(metrics.timing_count("submit_wait"), 4);
+        assert_eq!(metrics.timing_count("stage_prepare"), 4);
+        assert_eq!(metrics.timing_count("stage_entropy"), 4);
+        assert_eq!(metrics.timing_count("stage_write"), 4);
+        assert!(metrics.gauge_value("pool_threads_spawned").is_some());
 
         // Chain decode reproduces all reconstructions.
         let decoded = decode_chain(&dir, &Backend::Native, None).unwrap();
         assert_eq!(decoded.len(), 4);
         assert_eq!(decoded[3].step, 4000);
+
+        // The manifest indexes every container and restores any step
+        // bit-exactly.
+        let manifest = ChainManifest::load(&dir).unwrap();
+        assert_eq!(manifest.steps(), vec![1000, 2000, 3000, 4000]);
+        for (i, step) in [1000u64, 3000].into_iter().enumerate() {
+            let restored = restore_step(&dir, &Backend::Native, step).unwrap();
+            assert_eq!(restored, decoded[if i == 0 { 0 } else { 2 }]);
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -313,6 +664,14 @@ mod tests {
         assert_eq!(results[4].ref_step, Some(300));
         let decoded = decode_chain(&dir, &Backend::Native, None).unwrap();
         assert_eq!(decoded.len(), 5);
+        // Eq.-6 chains restore through the manifest too (two interleaved
+        // ancestries).
+        assert_eq!(
+            ChainManifest::load(&dir).unwrap().ancestry(500).unwrap(),
+            vec![100, 300, 500]
+        );
+        assert_eq!(restore_step(&dir, &Backend::Native, 500).unwrap(), decoded[4]);
+        assert_eq!(restore_step(&dir, &Backend::Native, 400).unwrap(), decoded[3]);
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -331,11 +690,12 @@ mod tests {
         assert_eq!(results[1].ref_step, Some(10));
         assert_eq!(results[2].ref_step, None); // keyframe
         assert_eq!(results[3].ref_step, Some(30));
-        // Decoding only up to step 30 works without the full prefix chain
-        // ... wait, 40 references 30; decode up to 30 must include the
-        // keyframe at 30 (intra) and its predecessors.
+        // Decoding only up to step 30 works: the keyframe at 30 is intra.
         let decoded = decode_chain(&dir, &Backend::Native, Some(30)).unwrap();
         assert_eq!(decoded.len(), 3);
+        // Restoring past the keyframe touches only the short ancestry.
+        let manifest = ChainManifest::load(&dir).unwrap();
+        assert_eq!(manifest.ancestry(40).unwrap(), vec![30, 40]);
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -351,6 +711,89 @@ mod tests {
         // Remove the intra frame → chain is unrecoverable.
         std::fs::remove_file(dir.join("ckpt_0000000010.cpcm")).unwrap();
         assert!(decode_chain(&dir, &Backend::Native, None).is_err());
+        assert!(restore_step(&dir, &Backend::Native, 30).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stage_error_shuts_the_pipeline_down_cleanly() {
+        // A mid-chain layout change makes the prep stage's delta fail; the
+        // pipeline must drain, every stage thread must join, and finish
+        // must surface the error (not hang, not panic).
+        let dir = tmpdir("err");
+        let cfg = CoordinatorConfig::new(small_codec(ContextMode::Order0), Backend::Native, &dir);
+        let coord = Coordinator::start(cfg).unwrap();
+        coord.submit(Checkpoint::synthetic(10, &layers(), 1)).unwrap();
+        let other = vec![("w", vec![7usize, 3]), ("b", vec![4usize])];
+        coord.submit(Checkpoint::synthetic(20, &other, 2)).unwrap();
+        // Give the prep stage time to hit the error, then keep submitting
+        // until the closed intake is observable.
+        let mut saw_shutdown = false;
+        for i in 0..200u64 {
+            match coord.submit(Checkpoint::synthetic(30 + i, &layers(), 3)) {
+                Ok(()) => std::thread::sleep(std::time::Duration::from_millis(5)),
+                Err(_) => {
+                    saw_shutdown = true;
+                    break;
+                }
+            }
+        }
+        assert!(saw_shutdown, "intake never closed after a stage error");
+        let err = coord.finish().unwrap_err();
+        let msg = format!("{err}");
+        // The prep stage's delta error must surface verbatim, not a
+        // generic "stage died" message.
+        assert!(msg.contains("layouts differ"), "{msg}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn drop_without_finish_joins_stages() {
+        let dir = tmpdir("drop");
+        let cfg = CoordinatorConfig::new(small_codec(ContextMode::Order0), Backend::Native, &dir);
+        let coord = Coordinator::start(cfg).unwrap();
+        coord.submit(Checkpoint::synthetic(10, &layers(), 7)).unwrap();
+        // Dropping the handle (e.g. on an early error return in the
+        // caller) must not leave detached stage threads behind.
+        drop(coord);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn try_submit_rejects_instead_of_blocking() {
+        let dir = tmpdir("try");
+        let mut cfg =
+            CoordinatorConfig::new(small_codec(ContextMode::Lstm), Backend::Native, &dir);
+        cfg.queue_depth = 1;
+        let coord = Coordinator::start(cfg).unwrap();
+        let metrics = coord.metrics();
+        let mut queued = 0u64;
+        let mut rejected = 0u64;
+        let mut step = 0u64;
+        // Push much faster than the encoder drains; with a depth-1 queue
+        // at least one rejection is effectively certain, and rejected
+        // checkpoints come back intact for retry.
+        while queued < 6 {
+            let ck = Checkpoint::synthetic(10 * (step + 1), &layers(), step);
+            match coord.try_submit(ck).unwrap() {
+                SubmitOutcome::Queued => {
+                    queued += 1;
+                    step += 1;
+                }
+                SubmitOutcome::Rejected(ck) => {
+                    rejected += 1;
+                    assert_eq!(ck.step, 10 * (step + 1));
+                }
+            }
+        }
+        let results = coord.finish().unwrap();
+        assert_eq!(results.len(), 6);
+        assert_eq!(metrics.counter("submitted"), 6);
+        assert_eq!(metrics.counter("submit_rejected"), rejected);
+        // Results stay in submission order with contiguous steps.
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.step, 10 * (i as u64 + 1));
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

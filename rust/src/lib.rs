@@ -25,12 +25,23 @@
 //! compression/decompression time.
 //!
 //! Entry points:
-//! - [`codec::Codec`] — compress/decompress one checkpoint against a reference;
-//! - [`coordinator::Coordinator`] — multi-threaded compression service over a
-//!   stream of checkpoints produced by training;
+//! - [`codec::Codec`] — compress/decompress one checkpoint against a
+//!   reference; [`codec::Codec::prepare`] / [`codec::Codec::encode_prepared`]
+//!   expose the pipeline seam between the chain-sequential front half and
+//!   the parallel entropy half;
+//! - [`coordinator::Coordinator`] — the pipelined, backpressured
+//!   compression service over a stream of training checkpoints (bounded
+//!   queues, per-stage metrics, chain manifest);
+//! - [`coordinator::restore_step`] — manifest-indexed random access: restore
+//!   any step by decoding only its reference ancestry;
 //! - [`trainer::Trainer`] — drives AOT train-step executables to produce real
 //!   Adam checkpoints for the experiments;
 //! - [`baselines`] — ExCP(+DEFLATE / order-0 AC) and other comparison points.
+//!
+//! Repository-level documentation: `README.md` (quickstart and feature
+//! matrix), `ARCHITECTURE.md` (byte-exact container layouts, the codec
+//! pipeline, the coordinator/manifest flow and a module map) and
+//! `EXPERIMENTS.md` (bench suite and measured results).
 
 pub mod ac;
 pub mod baselines;

@@ -55,6 +55,22 @@ impl Metrics {
         self.gauges.lock().unwrap().insert(name.to_string(), value);
     }
 
+    /// Read a gauge (`None` if never set).
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.gauges.lock().unwrap().get(name).copied()
+    }
+
+    /// Track a gauge as a running maximum (used for high-water queue
+    /// depths: the instantaneous depth is racy, the high-water mark is
+    /// what backpressure tuning needs).
+    pub fn gauge_max(&self, name: &str, value: f64) {
+        let mut map = self.gauges.lock().unwrap();
+        let entry = map.entry(name.to_string()).or_insert(value);
+        if value > *entry {
+            *entry = value;
+        }
+    }
+
     /// Record one timed operation.
     pub fn time(&self, name: &str, seconds: f64) {
         let mut map = self.timings.lock().unwrap();
@@ -70,6 +86,16 @@ impl Metrics {
         let out = f();
         self.time(name, t0.elapsed().as_secs_f64());
         out
+    }
+
+    /// Number of recorded samples for a timing (0 if never recorded).
+    pub fn timing_count(&self, name: &str) -> u64 {
+        self.timings.lock().unwrap().get(name).map(|t| t.count).unwrap_or(0)
+    }
+
+    /// Total recorded seconds for a timing (0.0 if never recorded).
+    pub fn timing_total(&self, name: &str) -> f64 {
+        self.timings.lock().unwrap().get(name).map(|t| t.total_s).unwrap_or(0.0)
     }
 
     /// Snapshot everything as JSON.
@@ -138,6 +164,15 @@ mod tests {
         m.time("encode", 1.5);
         let out = m.timed("t", || 7);
         assert_eq!(out, 7);
+        assert_eq!(m.gauge_value("ratio"), Some(42.5));
+        assert_eq!(m.gauge_value("missing"), None);
+        assert_eq!(m.timing_count("encode"), 2);
+        assert_eq!(m.timing_count("missing"), 0);
+        assert!((m.timing_total("encode") - 2.0).abs() < 1e-12);
+        m.gauge_max("depth", 3.0);
+        m.gauge_max("depth", 1.0);
+        m.gauge_max("depth", 5.0);
+        assert_eq!(m.gauge_value("depth"), Some(5.0));
         let snap = m.snapshot();
         assert_eq!(snap.get("gauges").unwrap().get("ratio").unwrap().as_f64(), Some(42.5));
         let enc = snap.get("timings").unwrap().get("encode").unwrap();

@@ -14,10 +14,11 @@
 //! All host↔device traffic goes through [`HostTensor`] (shape + dtype +
 //! flat data), the `Send`-able value type the rest of the crate uses; raw
 //! `xla` handles never escape this module. Because the underlying PJRT
-//! wrappers hold raw pointers (`!Send`), a [`Runtime`] must stay on the
-//! thread that created it; [`RuntimeHandle::spawn`] provides a `Send +
-//! Clone` handle that proxies requests to a dedicated runtime thread over
-//! channels — this is what the multi-threaded coordinator uses.
+//! wrappers hold raw pointers (`!Send`), a `Runtime` (the feature-gated
+//! executor type) must stay on the thread that created it;
+//! [`RuntimeHandle::spawn`] provides a `Send + Clone` handle that proxies
+//! requests to a dedicated runtime thread over channels — this is what
+//! the multi-threaded coordinator uses.
 
 mod host;
 mod manifest;

@@ -1,17 +1,16 @@
 //! `Send`-able handle to a dedicated runtime thread.
 //!
-//! The `xla` wrappers hold raw pointers and are `!Send`, so a [`Runtime`]
-//! cannot move between threads. [`RuntimeHandle::spawn`] starts one thread
-//! that owns the `Runtime` and serves execute requests over an mpsc
-//! channel; handles are cheap to clone and share across the coordinator's
-//! worker pool. Requests are processed strictly in arrival order, which
-//! also serializes PJRT access (XLA:CPU parallelizes internally).
+//! The `xla` wrappers hold raw pointers and are `!Send`, so a `Runtime`
+//! (the feature-gated executor in the parent module) cannot move between
+//! threads. [`RuntimeHandle::spawn`] starts one thread that owns the
+//! `Runtime` and serves execute requests over an mpsc channel; handles
+//! are cheap to clone — each coordinator stage keeps its own. Requests
+//! are processed strictly in arrival order, which also serializes PJRT
+//! access (XLA:CPU parallelizes internally).
 //!
 //! Without the `pjrt` cargo feature the handle is a stub whose `spawn`
 //! fails cleanly, keeping every `RuntimeHandle` consumer compiling while
 //! the `xla` bindings are absent from the offline registry.
-//!
-//! [`Runtime`]: super::Runtime
 
 #[cfg(feature = "pjrt")]
 use super::Runtime;

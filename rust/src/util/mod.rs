@@ -6,8 +6,8 @@
 //! parser/writer ([`json`]), a PCG64 PRNG ([`rng`]), bit-level I/O
 //! ([`bitio`]), CRC-32 ([`crc32`]), an LZ77+range-coder byte compressor
 //! ([`lz`]), descriptive statistics ([`stats`]), a property-testing
-//! mini-framework ([`prop`]), a bench harness ([`bench`]) and a scoped
-//! work pool ([`pool`]).
+//! mini-framework ([`prop`]), a bench harness ([`bench`]), a persistent
+//! work pool ([`pool`]) and a bounded backpressure queue ([`queue`]).
 
 pub mod bench;
 pub mod bitio;
@@ -16,5 +16,6 @@ pub mod json;
 pub mod lz;
 pub mod pool;
 pub mod prop;
+pub mod queue;
 pub mod rng;
 pub mod stats;

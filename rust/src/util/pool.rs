@@ -1,20 +1,42 @@
-//! Minimal scoped work pool (no external dependencies).
+//! Persistent work pool (no external dependencies).
 //!
-//! [`run_scoped`] executes a batch of heterogeneous-cost tasks on up to
-//! `workers` scoped threads and returns the results **in task order**.
-//! Workers pull tasks from a shared atomic cursor, so long tasks do not
-//! starve short ones behind a static partition. Panics inside a task are
-//! caught and surfaced as [`Error`] (carrying the panic message) instead
-//! of aborting the process — one poisoned coding lane fails the encode
-//! cleanly.
+//! [`run_scoped`] executes a batch of heterogeneous-cost tasks on the
+//! process-wide [`PersistentPool`] and returns the results **in task
+//! order**. Workers pull tasks from a shared atomic cursor, so long tasks
+//! do not starve short ones behind a static partition. Panics inside a
+//! task are caught and surfaced as [`Error`] (carrying the panic message)
+//! instead of aborting the process — one poisoned coding lane fails the
+//! encode cleanly.
+//!
+//! ## Persistence
+//!
+//! Pool threads are spawned **once** (lazily, on the first batch) and
+//! parked on a condvar between batches, so a high-rate checkpoint stream
+//! through [`crate::coordinator`] pays the thread-spawn cost once per
+//! process instead of once per encode. The submitting thread always
+//! participates in its own batch, so progress never depends on a pool
+//! thread being free (or existing at all — a single-core machine runs a
+//! zero-thread pool and every batch inline).
+//!
+//! Multiple threads may submit batches concurrently (the pipelined
+//! coordinator overlaps the quantization of checkpoint *k+1* with the
+//! entropy coding of checkpoint *k*); batches share the fixed worker set.
+//! Results are bit-deterministic regardless of scheduling: a task's output
+//! depends only on the task, and [`run_scoped`] reassembles outputs in
+//! task order.
+//!
+//! Thread reuse is observable through [`global_stats`]: `threads_spawned`
+//! stays constant across consecutive batches while `jobs` (the batch
+//! generation counter) keeps increasing — the coordinator snapshots both
+//! into its [`crate::metrics`] registry.
 //!
 //! Used by the codec's `3 × L` lane fan-out ([`crate::codec`]) and by the
 //! coordinator's encode→decode verification ([`crate::coordinator`]).
 
 use crate::{Error, Result};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// A unit of work for [`run_scoped`].
 pub type Task<'a, T> = Box<dyn FnOnce() -> T + Send + 'a>;
@@ -24,43 +46,274 @@ pub fn available_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
-/// Run `tasks` on at most `workers` threads (clamped to the task count;
-/// the calling thread counts as one worker, so `workers == 1` runs
-/// everything inline without spawning). Returns results in task order, or
-/// the first panic as an error.
-pub fn run_scoped<'a, T: Send>(workers: usize, tasks: Vec<Task<'a, T>>) -> Result<Vec<T>> {
-    let n = tasks.len();
-    if n == 0 {
-        return Ok(Vec::new());
-    }
-    let workers = workers.clamp(1, n);
-    let slots: Vec<Mutex<Option<Task<'a, T>>>> =
-        tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
-    let results: Vec<Mutex<Option<std::thread::Result<T>>>> =
-        (0..n).map(|_| Mutex::new(None)).collect();
-    let next = AtomicUsize::new(0);
+/// Counters describing a pool's lifetime activity (see [`global_stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Worker threads currently owned by the pool (excludes submitters).
+    pub threads: usize,
+    /// Total worker threads ever spawned. For a healthy persistent pool
+    /// this equals `threads` forever — it increasing between two batches
+    /// would mean threads are being re-created per job.
+    pub threads_spawned: u64,
+    /// Batches executed so far (the pool "generation" counter; inline
+    /// single-worker batches count too).
+    pub jobs: u64,
+}
 
-    std::thread::scope(|scope| {
-        for _ in 1..workers {
-            scope.spawn(|| worker_loop(&next, &slots, &results));
+/// One submitted batch, visible to pool workers.
+///
+/// `work` is the submitter's batch closure with its lifetime erased to
+/// `'static`. Safety: the submitter blocks in `PersistentPool::run_batch`
+/// until this entry has `claims_left == 0 && running == 0` and is removed
+/// from the queue, so no worker can observe the reference after the
+/// closure's stack frame is gone. Claims and completions are both updated
+/// under the pool mutex, so revocation cannot race a claim.
+struct Batch {
+    id: u64,
+    work: &'static (dyn Fn() + Sync),
+    /// How many more pool workers may still join this batch.
+    claims_left: usize,
+    /// Pool workers currently executing `work`.
+    running: usize,
+}
+
+#[derive(Default)]
+struct PoolState {
+    queue: Vec<Batch>,
+    next_id: u64,
+    shutdown: bool,
+}
+
+struct PoolInner {
+    state: Mutex<PoolState>,
+    /// Signals workers: a batch is claimable (or shutdown).
+    work_cv: Condvar,
+    /// Signals submitters: a batch's `running` count dropped.
+    done_cv: Condvar,
+    threads_spawned: AtomicU64,
+    jobs: AtomicU64,
+}
+
+/// A fixed-size pool of parked worker threads executing scoped batches.
+///
+/// Most code should use the free [`run_scoped`], which targets the lazy
+/// process-wide instance; owned pools exist for tests and for callers that
+/// need deterministic thread teardown — dropping an owned pool drains the
+/// queue and joins every worker.
+pub struct PersistentPool {
+    inner: Arc<PoolInner>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl PersistentPool {
+    /// Spawn a pool with `threads` parked workers (0 is valid: every batch
+    /// then runs inline on its submitting thread).
+    pub fn new(threads: usize) -> Self {
+        let inner = Arc::new(PoolInner {
+            state: Mutex::new(PoolState::default()),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            threads_spawned: AtomicU64::new(0),
+            jobs: AtomicU64::new(0),
+        });
+        let mut handles = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let inner = inner.clone();
+            inner.threads_spawned.fetch_add(1, Ordering::Relaxed);
+            let handle = std::thread::Builder::new()
+                .name(format!("cpcm-pool-{i}"))
+                .spawn(move || worker_main(&inner))
+                .expect("failed to spawn pool worker");
+            handles.push(handle);
         }
-        worker_loop(&next, &slots, &results);
-    });
+        Self { inner, handles: Mutex::new(handles) }
+    }
 
-    let mut out = Vec::with_capacity(n);
-    for slot in results {
-        match slot.into_inner().expect("pool result mutex poisoned") {
-            Some(Ok(v)) => out.push(v),
-            Some(Err(payload)) => {
-                return Err(Error::codec(format!(
-                    "worker panicked: {}",
-                    panic_message(payload.as_ref())
-                )))
+    /// Lifetime counters (thread count, spawn total, batch total).
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            threads: self.handles.lock().expect("pool handles poisoned").len(),
+            threads_spawned: self.inner.threads_spawned.load(Ordering::Relaxed),
+            jobs: self.inner.jobs.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Run `tasks` on at most `workers` threads of this pool (clamped to
+    /// the task count; the calling thread counts as one worker, so
+    /// `workers == 1` runs everything inline without touching the pool).
+    /// Returns results in task order, or the first panic as an error.
+    pub fn run_scoped<'a, T: Send>(
+        &self,
+        workers: usize,
+        tasks: Vec<Task<'a, T>>,
+    ) -> Result<Vec<T>> {
+        let n = tasks.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let workers = workers.clamp(1, n);
+        let slots: Vec<Mutex<Option<Task<'a, T>>>> =
+            tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
+        let results: Vec<Mutex<Option<std::thread::Result<T>>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        let next = AtomicUsize::new(0);
+
+        self.inner.jobs.fetch_add(1, Ordering::Relaxed);
+        {
+            let work = || worker_loop(&next, &slots, &results);
+            self.run_batch(workers - 1, &work);
+        }
+
+        let mut out = Vec::with_capacity(n);
+        for slot in results {
+            match slot.into_inner().expect("pool result mutex poisoned") {
+                Some(Ok(v)) => out.push(v),
+                Some(Err(payload)) => {
+                    return Err(Error::codec(format!(
+                        "worker panicked: {}",
+                        panic_message(payload.as_ref())
+                    )))
+                }
+                None => return Err(Error::codec("pool task was never executed")),
             }
-            None => return Err(Error::codec("pool task was never executed")),
+        }
+        Ok(out)
+    }
+
+    /// Execute `work` on the calling thread plus up to `helpers` pool
+    /// workers, returning only when every worker that entered `work` has
+    /// left it (so `work` may borrow from the caller's stack).
+    fn run_batch(&self, helpers: usize, work: &(dyn Fn() + Sync)) {
+        if helpers == 0 {
+            work();
+            return;
+        }
+        // SAFETY: `work` outlives this call, and this function does not
+        // return until the batch entry has been removed from the queue
+        // with no worker running it (see `Batch` docs).
+        let work_static: &'static (dyn Fn() + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn() + Sync), &'static (dyn Fn() + Sync)>(work)
+        };
+        let id;
+        {
+            let mut st = self.inner.state.lock().expect("pool state poisoned");
+            id = st.next_id;
+            st.next_id += 1;
+            st.queue.push(Batch { id, work: work_static, claims_left: helpers, running: 0 });
+        }
+        self.inner.work_cv.notify_all();
+
+        // The guard — not straight-line code — performs the revoke-and-wait
+        // cleanup, so it runs even if `work` unwinds on this thread; the
+        // batch entry must never outlive this frame (it borrows it).
+        let _guard = BatchGuard { inner: &self.inner, id };
+
+        // Participate in our own batch. On return (or unwind) all tasks
+        // have been *claimed*, but helpers may still be finishing their
+        // last one; `_guard` revokes the unclaimed helper slots and waits
+        // the stragglers out before the borrowed frame dies.
+        work();
+    }
+
+    /// Ask workers to exit once the queue drains, then join them all.
+    /// Called by `Drop`; idempotent.
+    pub fn shutdown(&self) {
+        {
+            let mut st = self.inner.state.lock().expect("pool state poisoned");
+            st.shutdown = true;
+        }
+        self.inner.work_cv.notify_all();
+        let mut handles = self.handles.lock().expect("pool handles poisoned");
+        for handle in handles.drain(..) {
+            let _ = handle.join();
         }
     }
-    Ok(out)
+}
+
+impl Drop for PersistentPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Unwind-safe completion of one submitted batch: on drop, revoke the
+/// batch's unclaimed helper slots and block until no worker is still
+/// inside its closure, then remove the queue entry. Runs on the normal
+/// path *and* when the submitter's own `work()` panics — without it, an
+/// unwinding submitter would leave workers a dangling reference into its
+/// freed stack frame. Uses poison-tolerant locking: aborting via a second
+/// panic inside drop would skip the cleanup this guard exists for.
+struct BatchGuard<'a> {
+    inner: &'a PoolInner,
+    id: u64,
+}
+
+impl Drop for BatchGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.inner.state.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            let Some(pos) = st.queue.iter().position(|b| b.id == self.id) else {
+                return;
+            };
+            st.queue[pos].claims_left = 0;
+            if st.queue[pos].running == 0 {
+                st.queue.remove(pos);
+                return;
+            }
+            st = match self.inner.done_cv.wait(st) {
+                Ok(guard) => guard,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+        }
+    }
+}
+
+fn worker_main(inner: &PoolInner) {
+    let mut st = inner.state.lock().expect("pool state poisoned");
+    loop {
+        if let Some(pos) = st.queue.iter().position(|b| b.claims_left > 0) {
+            let batch = &mut st.queue[pos];
+            batch.claims_left -= 1;
+            batch.running += 1;
+            let id = batch.id;
+            let work = batch.work;
+            drop(st);
+            // Task panics are already caught inside `worker_loop`; this
+            // guard only ensures the `running` count is restored if the
+            // batch closure itself unwinds (e.g. a poisoned task mutex).
+            let _ = catch_unwind(AssertUnwindSafe(work));
+            st = inner.state.lock().expect("pool state poisoned");
+            if let Some(b) = st.queue.iter_mut().find(|b| b.id == id) {
+                b.running -= 1;
+            }
+            inner.done_cv.notify_all();
+        } else if st.shutdown {
+            return;
+        } else {
+            st = inner.work_cv.wait(st).expect("pool state poisoned");
+        }
+    }
+}
+
+/// The process-wide pool: `available_workers() - 1` parked threads
+/// (submitters always participate in their own batches, so total
+/// parallelism is the hardware thread count).
+pub fn global() -> &'static PersistentPool {
+    static GLOBAL: OnceLock<PersistentPool> = OnceLock::new();
+    GLOBAL.get_or_init(|| PersistentPool::new(available_workers().saturating_sub(1)))
+}
+
+/// Lifetime counters of the process-wide pool (metrics surface).
+pub fn global_stats() -> PoolStats {
+    global().stats()
+}
+
+/// Run `tasks` on at most `workers` threads of the process-wide
+/// persistent pool (clamped to the task count; the calling thread counts
+/// as one worker, so `workers == 1` runs everything inline). Returns
+/// results in task order, or the first panic as an error.
+pub fn run_scoped<'a, T: Send>(workers: usize, tasks: Vec<Task<'a, T>>) -> Result<Vec<T>> {
+    global().run_scoped(workers, tasks)
 }
 
 fn worker_loop<'a, T: Send>(
@@ -151,5 +404,79 @@ mod tests {
             .collect();
         let sums = run_scoped(3, tasks).unwrap();
         assert_eq!(sums.iter().sum::<u64>(), data.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn global_pool_reuses_threads_across_batches() {
+        // Warm the pool, then check the spawn counter stays flat while
+        // the job counter advances — the persistence acceptance check.
+        let mk = |n: usize| -> Vec<Task<usize>> {
+            (0..n).map(|i| Box::new(move || i) as Task<usize>).collect()
+        };
+        run_scoped(8, mk(16)).unwrap();
+        let s0 = global_stats();
+        run_scoped(8, mk(16)).unwrap();
+        let s1 = global_stats();
+        run_scoped(8, mk(16)).unwrap();
+        let s2 = global_stats();
+        assert_eq!(s0.threads_spawned, s1.threads_spawned);
+        assert_eq!(s1.threads_spawned, s2.threads_spawned);
+        assert_eq!(s1.threads_spawned, s1.threads as u64);
+        assert!(s1.jobs > s0.jobs, "{s1:?} vs {s0:?}");
+        assert!(s2.jobs > s1.jobs, "{s2:?} vs {s1:?}");
+    }
+
+    #[test]
+    fn owned_pool_drop_joins_workers() {
+        let pool = PersistentPool::new(3);
+        let tasks: Vec<Task<u32>> = (0..10).map(|i| Box::new(move || i) as Task<u32>).collect();
+        let out = pool.run_scoped(4, tasks).unwrap();
+        assert_eq!(out.len(), 10);
+        assert_eq!(pool.stats().threads, 3);
+        pool.shutdown();
+        assert_eq!(pool.stats().threads, 0);
+        // Drop after explicit shutdown is a no-op (idempotent).
+        drop(pool);
+    }
+
+    #[test]
+    fn zero_thread_pool_runs_inline() {
+        let pool = PersistentPool::new(0);
+        let tasks: Vec<Task<u32>> = (0..6).map(|i| Box::new(move || i * 2) as Task<u32>).collect();
+        assert_eq!(pool.run_scoped(4, tasks).unwrap(), vec![0, 2, 4, 6, 8, 10]);
+    }
+
+    #[test]
+    fn concurrent_submitters_share_the_pool() {
+        let pool = Arc::new(PersistentPool::new(2));
+        let mut joins = Vec::new();
+        for t in 0..4u64 {
+            let pool = pool.clone();
+            joins.push(std::thread::spawn(move || {
+                for round in 0..8u64 {
+                    let tasks: Vec<Task<u64>> = (0..16)
+                        .map(|i| Box::new(move || t * 1000 + round * 100 + i) as Task<u64>)
+                        .collect();
+                    let out = pool.run_scoped(3, tasks).unwrap();
+                    let expect: Vec<u64> =
+                        (0..16).map(|i| t * 1000 + round * 100 + i).collect();
+                    assert_eq!(out, expect);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn panicking_batch_does_not_wedge_the_pool() {
+        // A panic in one batch must leave the pool usable for the next.
+        let pool = PersistentPool::new(2);
+        let tasks: Vec<Task<u32>> =
+            vec![Box::new(|| panic!("boom")), Box::new(|| 2), Box::new(|| 3)];
+        assert!(pool.run_scoped(3, tasks).is_err());
+        let tasks: Vec<Task<u32>> = (0..4).map(|i| Box::new(move || i) as Task<u32>).collect();
+        assert_eq!(pool.run_scoped(3, tasks).unwrap(), vec![0, 1, 2, 3]);
     }
 }

@@ -1,0 +1,221 @@
+//! Bounded MPMC queue with blocking *and* rejecting producers.
+//!
+//! The coordinator's pipeline stages are connected by [`BoundedQueue`]s:
+//! a fixed capacity gives **backpressure** (a fast trainer blocks in
+//! `submit` instead of buffering unbounded multi-hundred-MB checkpoints),
+//! while [`BoundedQueue::try_push`] lets latency-sensitive producers shed
+//! load instead of stalling. Unlike `std::sync::mpsc::sync_channel`, the
+//! queue exposes its current depth ([`BoundedQueue::len`]) so the
+//! coordinator can publish per-stage queue-depth gauges.
+//!
+//! Closing ([`BoundedQueue::close`]) is cooperative shutdown: producers
+//! get their item back ([`PushError::Closed`]), consumers drain whatever
+//! is left and then see `None`. Clones share the same queue.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Outcome of a failed [`BoundedQueue::try_push`] / [`BoundedQueue::push`],
+/// returning the rejected item to the caller.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError<T> {
+    /// Queue is at capacity (only returned by `try_push`).
+    Full(T),
+    /// Queue was closed; no more items will be accepted.
+    Closed(T),
+}
+
+struct Shared<T> {
+    state: Mutex<State<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded blocking FIFO shared by cloning.
+pub struct BoundedQueue<T> {
+    shared: Arc<Shared<T>>,
+}
+
+impl<T> Clone for BoundedQueue<T> {
+    fn clone(&self) -> Self {
+        Self { shared: self.shared.clone() }
+    }
+}
+
+impl<T> BoundedQueue<T> {
+    /// New queue holding at most `capacity` items (min 1).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            shared: Arc::new(Shared {
+                state: Mutex::new(State { items: VecDeque::new(), closed: false }),
+                not_full: Condvar::new(),
+                not_empty: Condvar::new(),
+                capacity: capacity.max(1),
+            }),
+        }
+    }
+
+    /// Capacity the queue was built with.
+    pub fn capacity(&self) -> usize {
+        self.shared.capacity
+    }
+
+    /// Items currently queued (racy by nature; for gauges/diagnostics).
+    pub fn len(&self) -> usize {
+        self.shared.state.lock().expect("queue poisoned").items.len()
+    }
+
+    /// True when no items are queued.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Blocking push: waits while the queue is full. Fails only when the
+    /// queue has been closed, handing the item back.
+    pub fn push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut st = self.shared.state.lock().expect("queue poisoned");
+        loop {
+            if st.closed {
+                return Err(PushError::Closed(item));
+            }
+            if st.items.len() < self.shared.capacity {
+                st.items.push_back(item);
+                self.shared.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.shared.not_full.wait(st).expect("queue poisoned");
+        }
+    }
+
+    /// Non-blocking push: rejects with [`PushError::Full`] instead of
+    /// waiting when the queue is at capacity.
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut st = self.shared.state.lock().expect("queue poisoned");
+        if st.closed {
+            return Err(PushError::Closed(item));
+        }
+        if st.items.len() >= self.shared.capacity {
+            return Err(PushError::Full(item));
+        }
+        st.items.push_back(item);
+        self.shared.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop: waits for an item; returns `None` once the queue is
+    /// closed **and** drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.shared.state.lock().expect("queue poisoned");
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.shared.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.shared.not_empty.wait(st).expect("queue poisoned");
+        }
+    }
+
+    /// Close the queue: producers start failing, consumers drain what is
+    /// left. Idempotent.
+    pub fn close(&self) {
+        let mut st = self.shared.state.lock().expect("queue poisoned");
+        st.closed = true;
+        drop(st);
+        self.shared.not_full.notify_all();
+        self.shared.not_empty.notify_all();
+    }
+
+    /// True once [`BoundedQueue::close`] has been called.
+    pub fn is_closed(&self) -> bool {
+        self.shared.state.lock().expect("queue poisoned").closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(4);
+        for i in 0..4 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.len(), 4);
+        for i in 0..4 {
+            assert_eq!(q.pop(), Some(i));
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn try_push_rejects_when_full() {
+        let q = BoundedQueue::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.try_push(3), Err(PushError::Full(3)));
+        assert_eq!(q.pop(), Some(1));
+        q.try_push(3).unwrap();
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn close_rejects_producers_and_drains_consumers() {
+        let q = BoundedQueue::new(4);
+        q.push("a").unwrap();
+        q.push("b").unwrap();
+        q.close();
+        assert!(q.is_closed());
+        assert_eq!(q.push("c"), Err(PushError::Closed("c")));
+        assert_eq!(q.try_push("d"), Err(PushError::Closed("d")));
+        assert_eq!(q.pop(), Some("a"));
+        assert_eq!(q.pop(), Some("b"));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn blocking_push_waits_for_capacity() {
+        let q = BoundedQueue::new(1);
+        q.push(10u32).unwrap();
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || q2.push(20u32));
+        // Give the producer time to block on the full queue.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(q.pop(), Some(10));
+        producer.join().unwrap().unwrap();
+        assert_eq!(q.pop(), Some(20));
+    }
+
+    #[test]
+    fn pop_blocks_until_item_or_close() {
+        let q: BoundedQueue<u8> = BoundedQueue::new(2);
+        let q2 = q.clone();
+        let consumer = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.push(7).unwrap();
+        assert_eq!(consumer.join().unwrap(), Some(7));
+        let q3 = q.clone();
+        let consumer = std::thread::spawn(move || q3.pop());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert_eq!(consumer.join().unwrap(), None);
+    }
+
+    #[test]
+    fn capacity_is_at_least_one() {
+        let q: BoundedQueue<u8> = BoundedQueue::new(0);
+        assert_eq!(q.capacity(), 1);
+        q.push(1).unwrap();
+        assert_eq!(q.try_push(2), Err(PushError::Full(2)));
+    }
+}

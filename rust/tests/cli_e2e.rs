@@ -53,8 +53,15 @@ fn train_compress_decompress_verify_info() {
     assert!(out.join("compression.csv").exists());
     assert!(out.join("config.json").exists());
     let cpcm_dir = out.join("cpcm");
-    let containers: Vec<_> = std::fs::read_dir(&cpcm_dir).unwrap().collect();
+    let containers: Vec<_> = std::fs::read_dir(&cpcm_dir)
+        .unwrap()
+        .filter(|e| {
+            e.as_ref().unwrap().file_name().to_string_lossy().ends_with(".cpcm")
+        })
+        .collect();
     assert_eq!(containers.len(), 2);
+    // The coordinator also maintains the chain manifest alongside.
+    assert!(cpcm_dir.join("manifest.json").exists());
 
     // info on one container.
     run(&[

@@ -1,0 +1,170 @@
+//! Service-path integration: the pipelined, backpressured coordinator
+//! end-to-end — submit N checkpoints, watch the per-stage metrics, then
+//! restore arbitrary mid-chain steps through the chain manifest and check
+//! them bit-exactly against the direct full-directory decode.
+//!
+//! Also pins the persistent-pool acceptance property: consecutive encodes
+//! reuse the same pool threads (flat spawn counter, advancing job
+//! counter).
+
+use cpcm::checkpoint::Checkpoint;
+use cpcm::codec::{Codec, CodecConfig, ContextMode};
+use cpcm::coordinator::{
+    decode_chain, restore_step, ChainManifest, Coordinator, CoordinatorConfig, SubmitOutcome,
+};
+use cpcm::lstm::Backend;
+use cpcm::util::pool;
+use std::path::PathBuf;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("cpcm_service_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn layers() -> Vec<(&'static str, Vec<usize>)> {
+    vec![("enc.w", vec![24, 10]), ("enc.b", vec![40]), ("head.w", vec![8, 6])]
+}
+
+fn small_codec(mode: ContextMode) -> CodecConfig {
+    CodecConfig {
+        mode,
+        hidden: 8,
+        embed: 8,
+        batch: 32,
+        quant_iters: 4,
+        lanes: 2,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn backpressured_service_manifest_restore_roundtrip() {
+    let dir = tmpdir("roundtrip");
+    let mut cfg = CoordinatorConfig::new(small_codec(ContextMode::Lstm), Backend::Native, &dir);
+    cfg.queue_depth = 1; // tightest backpressure
+    cfg.keyframe_every = 3;
+    cfg.verify = true;
+    let coord = Coordinator::start(cfg).unwrap();
+    let n = 7u64;
+    for i in 0..n {
+        coord.submit(Checkpoint::synthetic(100 * (i + 1), &layers(), 40 + i)).unwrap();
+    }
+    let metrics = coord.metrics();
+    let results = coord.finish().unwrap();
+    assert_eq!(results.len(), n as usize);
+
+    // Per-stage pipeline metrics: every checkpoint passed through every
+    // stage, submit waits were measured, queue depths were observed.
+    assert_eq!(metrics.counter("checkpoints"), n);
+    assert_eq!(metrics.counter("verified"), n);
+    assert_eq!(metrics.counter("submitted"), n);
+    assert_eq!(metrics.timing_count("submit_wait"), n);
+    assert_eq!(metrics.timing_count("stage_prepare"), n);
+    assert_eq!(metrics.timing_count("stage_entropy"), n);
+    assert_eq!(metrics.timing_count("stage_write"), n);
+    assert_eq!(metrics.timing_count("stage_verify"), n);
+    assert!(metrics.gauge_value("depth_submit").is_some());
+    assert!(metrics.gauge_value("depth_encode").is_some());
+    assert!(metrics.gauge_value("depth_write").is_some());
+    // Persistent-pool counters are snapshotted into the registry.
+    assert!(metrics.gauge_value("pool_jobs").unwrap() > 0.0);
+    assert!(metrics.gauge_value("pool_threads_spawned").is_some());
+
+    // Mid-chain random access: the manifest restore of any step is
+    // bit-exact against the direct full-chain decode.
+    let decoded = decode_chain(&dir, &Backend::Native, None).unwrap();
+    assert_eq!(decoded.len(), n as usize);
+    for target in [1usize, 3, 4, 6] {
+        let step = 100 * (target as u64 + 1);
+        let restored = restore_step(&dir, &Backend::Native, step).unwrap();
+        assert_eq!(restored, decoded[target], "manifest restore of step {step}");
+    }
+
+    // keyframe_every = 3 ⇒ intra frames at indices 0, 3, 6; the manifest
+    // ancestry stops at the nearest keyframe instead of walking the whole
+    // chain (random access is O(chain segment), not O(directory)).
+    let manifest = ChainManifest::load(&dir).unwrap();
+    assert_eq!(manifest.len(), n as usize);
+    assert_eq!(manifest.ancestry(500).unwrap(), vec![400, 500]);
+    assert_eq!(manifest.ancestry(700).unwrap(), vec![700]);
+    assert_eq!(manifest.ancestry(300).unwrap(), vec![100, 200, 300]);
+
+    // Restoring an unknown step is a clean error.
+    assert!(restore_step(&dir, &Backend::Native, 9999).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn manifest_crc_catches_swapped_containers() {
+    let dir = tmpdir("swap");
+    let cfg = CoordinatorConfig::new(small_codec(ContextMode::Order0), Backend::Native, &dir);
+    let coord = Coordinator::start(cfg).unwrap();
+    for i in 0..3u64 {
+        coord.submit(Checkpoint::synthetic(10 * (i + 1), &layers(), i)).unwrap();
+    }
+    coord.finish().unwrap();
+    // Overwrite step 30's container with step 20's bytes: the file is a
+    // valid container, but the manifest CRC no longer matches, so the
+    // restore fails before any entropy decoding.
+    std::fs::copy(dir.join("ckpt_0000000020.cpcm"), dir.join("ckpt_0000000030.cpcm")).unwrap();
+    let err = restore_step(&dir, &Backend::Native, 30).unwrap_err();
+    assert!(format!("{err}").contains("manifest"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn persistent_pool_reused_across_consecutive_encodes() {
+    // ISSUE acceptance: the pool must reuse threads across ≥ 2
+    // consecutive encodes — observable as a flat spawn counter next to an
+    // advancing job (generation) counter.
+    let codec = Codec::new(small_codec(ContextMode::Order0), Backend::Native);
+    let c0 = Checkpoint::synthetic(1, &layers(), 1);
+    let c1 = Checkpoint::synthetic(2, &layers(), 2);
+    let c2 = Checkpoint::synthetic(3, &layers(), 3);
+
+    let e0 = codec.encode(&c0, None, None).unwrap();
+    let s0 = pool::global_stats();
+    let e1 = codec.encode(&c1, Some(&e0.recon), Some(&e0.syms)).unwrap();
+    let s1 = pool::global_stats();
+    let _e2 = codec.encode(&c2, Some(&e1.recon), Some(&e1.syms)).unwrap();
+    let s2 = pool::global_stats();
+
+    assert_eq!(s0.threads_spawned, s1.threads_spawned, "threads respawned between encodes");
+    assert_eq!(s1.threads_spawned, s2.threads_spawned, "threads respawned between encodes");
+    assert!(s1.jobs > s0.jobs, "second encode ran no pool jobs: {s1:?} vs {s0:?}");
+    assert!(s2.jobs > s1.jobs, "third encode ran no pool jobs: {s2:?} vs {s1:?}");
+}
+
+#[test]
+fn try_submit_backpressure_sheds_load_not_correctness() {
+    let dir = tmpdir("shed");
+    let mut cfg = CoordinatorConfig::new(small_codec(ContextMode::Order0), Backend::Native, &dir);
+    cfg.queue_depth = 1;
+    let coord = Coordinator::start(cfg).unwrap();
+    let metrics = coord.metrics();
+    let mut queued = 0u64;
+    let mut rejected = 0u64;
+    while queued < 5 {
+        let ck = Checkpoint::synthetic(100 * (queued + 1), &layers(), queued);
+        match coord.try_submit(ck).unwrap() {
+            SubmitOutcome::Queued => queued += 1,
+            SubmitOutcome::Rejected(ck) => {
+                // The checkpoint comes back intact for a later retry.
+                assert_eq!(ck.step, 100 * (queued + 1));
+                rejected += 1;
+            }
+        }
+    }
+    let results = coord.finish().unwrap();
+    assert_eq!(results.len(), 5);
+    assert_eq!(metrics.counter("submitted"), 5);
+    assert_eq!(metrics.counter("submit_rejected"), rejected);
+    // Everything accepted was compressed, in submission order.
+    for (i, r) in results.iter().enumerate() {
+        assert_eq!(r.step, 100 * (i as u64 + 1));
+    }
+    let decoded = decode_chain(&dir, &Backend::Native, None).unwrap();
+    assert_eq!(decoded.len(), 5);
+    let _ = std::fs::remove_dir_all(&dir);
+}
