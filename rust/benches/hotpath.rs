@@ -27,7 +27,12 @@ use cpcm::util::pool;
 use cpcm::util::rng::Pcg64;
 
 fn main() {
-    let mut b = Bench::new();
+    // BENCH_QUICK=1 (the CI artifact job) trades sample count for time.
+    let mut b = if std::env::var_os("BENCH_QUICK").is_some() {
+        Bench::quick()
+    } else {
+        Bench::new()
+    };
     let mut rng = Pcg64::seed(0xbe);
 
     // ---- Range coder -------------------------------------------------
@@ -209,6 +214,65 @@ fn main() {
         );
     }
 
+    // ---- Shard-size sweep (format 3 streaming) --------------------------
+    // Same checkpoint encoded at shrinking shard budgets. The v3 points
+    // run the REAL streaming path — `sharded::encode_streaming` reading
+    // from a file-backed `CheckpointFileReader` — so throughput covers the
+    // range-read + two-pass pipeline, not the in-memory encoder. The RSS
+    // column is process telemetry (current VmRSS after the point); the
+    // strict shard-bounded-memory assertion lives in tests/memory.rs,
+    // which runs in a clean process where high-water deltas are
+    // meaningful.
+    let shard_layers: Vec<(&str, Vec<usize>)> = vec![("w", vec![512, 128])];
+    let s0 = Checkpoint::synthetic(1, &shard_layers, 5);
+    let shard_raw = s0.raw_bytes();
+    let shard_syms = (s0.param_count() * 3) as u64;
+    let ckpt_path = std::env::temp_dir().join(format!("cpcm_hotpath_{}.bin", std::process::id()));
+    std::fs::write(&ckpt_path, s0.to_bytes()).unwrap();
+    let mut shard_rows: Vec<Json> = Vec::new();
+    for (label, shard_bytes) in [
+        ("v2 (unsharded, in-memory)", 0usize),
+        ("v3 shard=raw", shard_raw),
+        ("v3 shard=raw/4", shard_raw / 4),
+        ("v3 shard=raw/8", shard_raw / 8),
+    ] {
+        let codec = Codec::new(
+            CodecConfig {
+                mode: ContextMode::Order0,
+                bits: 4,
+                lanes: 2,
+                shard_bytes,
+                ..CodecConfig::default()
+            },
+            Backend::Native,
+        );
+        let mut bytes = Vec::new();
+        let enc = b.run(&format!("codec/shard {label} encode"), shard_syms, || {
+            if shard_bytes == 0 {
+                bytes = codec.encode(&s0, None, None).unwrap().bytes;
+            } else {
+                let mut src =
+                    cpcm::checkpoint::CheckpointFileReader::open(&ckpt_path).unwrap();
+                let mut out = Vec::new();
+                cpcm::codec::sharded::encode_streaming(&codec, &mut src, None, None, &mut out)
+                    .unwrap();
+                bytes = out;
+            }
+        });
+        let dec = b.run(&format!("codec/shard {label} decode"), shard_syms, || {
+            std::hint::black_box(Codec::decode(&Backend::Native, &bytes, None, None).unwrap());
+        });
+        let rss = cpcm::util::bench::current_rss_bytes().unwrap_or(0);
+        shard_rows.push(Json::obj(vec![
+            ("shard_bytes", Json::num(shard_bytes as f64)),
+            ("encode_syms_per_sec", Json::num(shard_syms as f64 / enc.median.as_secs_f64())),
+            ("decode_syms_per_sec", Json::num(shard_syms as f64 / dec.median.as_secs_f64())),
+            ("container_bytes", Json::num(bytes.len() as f64)),
+            ("rss_after_bytes", Json::num(rss as f64)),
+        ]));
+    }
+    let _ = std::fs::remove_file(&ckpt_path);
+
     // ---- Machine-readable dump ------------------------------------------
     let samples: Vec<Json> = b
         .results()
@@ -230,6 +294,7 @@ fn main() {
         ("available_parallelism", Json::num(pool::available_workers() as f64)),
         ("samples", Json::Arr(samples)),
         ("lane_scaling", Json::Arr(lane_rows)),
+        ("shard_sweep", Json::Arr(shard_rows)),
     ]);
     match std::fs::write("BENCH_hotpath.json", doc.to_string_pretty()) {
         Ok(()) => println!("wrote BENCH_hotpath.json"),

@@ -11,8 +11,10 @@
 //! the reference-checkpoint cache of the compression coordinator; the
 //! compressed format lives in [`crate::container`].
 
+mod reader;
 mod store;
 
+pub use reader::CheckpointFileReader;
 pub use store::Store;
 
 use crate::tensor::{Tensor, TensorSet};
@@ -158,8 +160,12 @@ fn read_set(r: &mut impl Read) -> Result<TensorSet> {
         for _ in 0..rank[0] {
             shape.push(read_u32(r)? as usize);
         }
-        let n: usize = shape.iter().product();
-        let mut bytes = vec![0u8; n * 4];
+        let n = shape
+            .iter()
+            .try_fold(1usize, |a, &d| a.checked_mul(d))
+            .and_then(|n| n.checked_mul(4))
+            .ok_or_else(|| Error::format("tensor shape product overflows"))?;
+        let mut bytes = vec![0u8; n];
         r.read_exact(&mut bytes)?;
         let data: Vec<f32> = bytes
             .chunks_exact(4)
@@ -168,6 +174,98 @@ fn read_set(r: &mut impl Read) -> Result<TensorSet> {
         set.insert(name, Tensor::new(shape, data)?);
     }
     Ok(set)
+}
+
+/// Streaming writer for the raw checkpoint format: byte-identical to
+/// [`Checkpoint::write_to`] without ever materializing the checkpoint.
+///
+/// The layout (names + shapes, shared by the three sets) is fixed up
+/// front; tensors are then pushed one at a time in set-major order
+/// (all weights, then first moments, then second moments), each with just
+/// its own values resident. Tests and the `#[ignore]` memory test use
+/// this to build larger-than-RAM fixtures tensor by tensor.
+pub struct StreamingCheckpointWriter<W: Write> {
+    w: W,
+    layout: Vec<(String, Vec<usize>)>,
+    /// Tensors pushed so far (0 ..= 3 × layout.len()).
+    pushed: usize,
+}
+
+impl<W: Write> StreamingCheckpointWriter<W> {
+    /// Write the file prelude and the first set's tensor-count header.
+    pub fn new(mut w: W, step: u64, layout: &[(String, Vec<usize>)]) -> Result<Self> {
+        if layout.len() > u32::MAX as usize {
+            return Err(Error::format("too many tensors"));
+        }
+        w.write_all(MAGIC)?;
+        w.write_all(&step.to_le_bytes())?;
+        let mut this = Self { w, layout: layout.to_vec(), pushed: 0 };
+        this.begin_set()?;
+        if this.layout.is_empty() {
+            // No tensors to trigger the later set headers: emit them now.
+            this.begin_set()?;
+            this.begin_set()?;
+        }
+        Ok(this)
+    }
+
+    fn begin_set(&mut self) -> Result<()> {
+        self.w.write_all(&(self.layout.len() as u32).to_le_bytes())?;
+        Ok(())
+    }
+
+    /// Append the next tensor's values (set-major order over the layout).
+    pub fn push_tensor(&mut self, values: &[f32]) -> Result<()> {
+        let n = self.layout.len();
+        if self.pushed == 3 * n {
+            return Err(Error::format("all tensors already written"));
+        }
+        let (name, shape) = &self.layout[self.pushed % n];
+        let count: usize = shape.iter().product();
+        if values.len() != count {
+            return Err(Error::shape(format!(
+                "tensor '{name}' expects {count} values, got {}",
+                values.len()
+            )));
+        }
+        let name_bytes = name.as_bytes();
+        if name_bytes.len() > u16::MAX as usize {
+            return Err(Error::format("tensor name too long"));
+        }
+        if shape.len() > u8::MAX as usize {
+            return Err(Error::format("tensor rank too large"));
+        }
+        self.w.write_all(&(name_bytes.len() as u16).to_le_bytes())?;
+        self.w.write_all(name_bytes)?;
+        self.w.write_all(&[shape.len() as u8])?;
+        for &d in shape.iter() {
+            self.w.write_all(&(d as u32).to_le_bytes())?;
+        }
+        let mut bytes = Vec::with_capacity(values.len() * 4);
+        for &x in values {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        self.w.write_all(&bytes)?;
+        self.pushed += 1;
+        if self.pushed < 3 * n && self.pushed % n == 0 {
+            self.begin_set()?;
+        }
+        Ok(())
+    }
+
+    /// Flush and finish; errors unless exactly `3 × layout.len()` tensors
+    /// were pushed.
+    pub fn finish(mut self) -> Result<()> {
+        if self.pushed != 3 * self.layout.len() {
+            return Err(Error::format(format!(
+                "wrote {} of {} tensors",
+                self.pushed,
+                3 * self.layout.len()
+            )));
+        }
+        self.w.flush()?;
+        Ok(())
+    }
 }
 
 fn read_u16(r: &mut impl Read) -> Result<u16> {
@@ -242,5 +340,41 @@ mod tests {
     fn raw_bytes_counts_all_sets() {
         let ck = sample();
         assert_eq!(ck.raw_bytes(), 3 * ck.weights.raw_bytes());
+    }
+
+    #[test]
+    fn streaming_writer_matches_write_to() {
+        let ck = sample();
+        let expect = ck.to_bytes();
+        let layout: Vec<(String, Vec<usize>)> =
+            ck.weights.iter().map(|e| (e.name.clone(), e.tensor.shape().to_vec())).collect();
+        let mut out = Vec::new();
+        let mut w = StreamingCheckpointWriter::new(&mut out, ck.step, &layout).unwrap();
+        for set in [&ck.weights, &ck.exp_avg, &ck.exp_avg_sq] {
+            for e in set.iter() {
+                w.push_tensor(e.tensor.data()).unwrap();
+            }
+        }
+        w.finish().unwrap();
+        assert_eq!(out, expect);
+        // Round-trips through the normal reader too.
+        assert_eq!(Checkpoint::from_bytes(&out).unwrap(), ck);
+    }
+
+    #[test]
+    fn streaming_writer_enforces_shape_and_count() {
+        let layout = vec![("w".to_string(), vec![2usize, 2])];
+        let mut out = Vec::new();
+        let mut w = StreamingCheckpointWriter::new(&mut out, 1, &layout).unwrap();
+        assert!(w.push_tensor(&[1.0; 3]).is_err(), "wrong element count");
+        for _ in 0..3 {
+            w.push_tensor(&[1.0; 4]).unwrap();
+        }
+        assert!(w.push_tensor(&[1.0; 4]).is_err(), "too many tensors");
+        w.finish().unwrap();
+
+        let mut out = Vec::new();
+        let w = StreamingCheckpointWriter::new(&mut out, 1, &layout).unwrap();
+        assert!(w.finish().is_err(), "incomplete write rejected");
     }
 }

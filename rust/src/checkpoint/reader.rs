@@ -1,0 +1,219 @@
+//! Seekable range-reads over a raw checkpoint file.
+//!
+//! [`CheckpointFileReader`] opens a `ckpt_*.bin` file (the format of
+//! [`super::Checkpoint::write_to`]), parses only the tensor *headers*
+//! (names, shapes, data offsets) and serves arbitrary `(set, tensor,
+//! range)` value reads by seeking — the backing file is never loaded
+//! whole. It implements [`crate::codec::sharded::ShardSource`], which is
+//! what lets [`crate::codec::sharded::encode_streaming`] compress a
+//! larger-than-RAM checkpoint with peak memory bounded by the shard
+//! budget.
+
+use super::{read_u16, read_u32, read_u64, MAGIC};
+use crate::codec::sharded::ShardSource;
+use crate::{Error, Result};
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+use std::ops::Range;
+use std::path::Path;
+
+/// Per-set byte offsets of every tensor's f32 data within the file.
+pub struct CheckpointFileReader {
+    file: File,
+    step: u64,
+    names: Vec<String>,
+    shapes: Vec<Vec<usize>>,
+    counts: Vec<usize>,
+    /// `data_offsets[set][tensor]` — file offset of the tensor's first f32.
+    data_offsets: [Vec<u64>; 3],
+}
+
+impl CheckpointFileReader {
+    /// Open and index `path`. Validates the magic, that the three sets
+    /// share one layout, and that every tensor's data extent lies within
+    /// the file (a truncated file fails here, not mid-read).
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let mut file = File::open(path.as_ref())?;
+        let file_len = file.metadata()?.len();
+        let mut magic = [0u8; 8];
+        file.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(Error::format("bad checkpoint magic"));
+        }
+        let step = read_u64(&mut file)?;
+
+        let mut names: Vec<String> = Vec::new();
+        let mut shapes: Vec<Vec<usize>> = Vec::new();
+        let mut counts: Vec<usize> = Vec::new();
+        let mut data_offsets: [Vec<u64>; 3] = Default::default();
+        for (set, offsets) in data_offsets.iter_mut().enumerate() {
+            let count = read_u32(&mut file)? as usize;
+            if set > 0 && count != names.len() {
+                return Err(Error::shape("checkpoint sets have different tensor counts"));
+            }
+            for ti in 0..count {
+                let name_len = read_u16(&mut file)? as usize;
+                let mut name = vec![0u8; name_len];
+                file.read_exact(&mut name)?;
+                let name = String::from_utf8(name)
+                    .map_err(|_| Error::format("non-utf8 tensor name"))?;
+                let mut rank = [0u8; 1];
+                file.read_exact(&mut rank)?;
+                let mut shape = Vec::with_capacity(rank[0] as usize);
+                for _ in 0..rank[0] {
+                    shape.push(read_u32(&mut file)? as usize);
+                }
+                let n = shape
+                    .iter()
+                    .try_fold(1usize, |a, &d| a.checked_mul(d))
+                    .ok_or_else(|| Error::format("tensor shape product overflows"))?;
+                if set == 0 {
+                    names.push(name);
+                    shapes.push(shape);
+                    counts.push(n);
+                } else if names[ti] != name || shapes[ti] != shape {
+                    return Err(Error::shape("checkpoint sets have different layouts"));
+                }
+                let offset = file.stream_position()?;
+                let data_bytes = (n as u64)
+                    .checked_mul(4)
+                    .ok_or_else(|| Error::format("tensor data size overflows"))?;
+                if offset.checked_add(data_bytes).map(|end| end > file_len).unwrap_or(true) {
+                    return Err(Error::format("checkpoint file truncated in tensor data"));
+                }
+                offsets.push(offset);
+                file.seek(SeekFrom::Current(data_bytes as i64))?;
+            }
+        }
+        Ok(Self { file, step, names, shapes, counts, data_offsets })
+    }
+
+    /// Training step recorded in the file.
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+
+    /// Tensor names (name-sorted, as written by the store).
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// Tensor shapes, parallel to [`Self::names`].
+    pub fn shapes(&self) -> &[Vec<usize>] {
+        &self.shapes
+    }
+
+    /// Per-tensor element counts.
+    pub fn counts(&self) -> &[usize] {
+        &self.counts
+    }
+
+    /// Read elements `range` of tensor `tensor` in `set` (0 = weights,
+    /// 1 = first moment, 2 = second moment).
+    pub fn read_values(
+        &mut self,
+        set: usize,
+        tensor: usize,
+        range: Range<usize>,
+    ) -> Result<Vec<f32>> {
+        let offsets = self
+            .data_offsets
+            .get(set)
+            .ok_or_else(|| Error::shape(format!("set {set} out of range")))?;
+        let (&offset, &count) = offsets
+            .get(tensor)
+            .zip(self.counts.get(tensor))
+            .ok_or_else(|| Error::shape(format!("tensor {tensor} out of range")))?;
+        if range.end > count || range.start > range.end {
+            return Err(Error::shape("value range out of tensor bounds"));
+        }
+        let n = range.len();
+        self.file.seek(SeekFrom::Start(offset + range.start as u64 * 4))?;
+        let mut bytes = vec![0u8; n * 4];
+        self.file.read_exact(&mut bytes)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+impl ShardSource for CheckpointFileReader {
+    fn step(&self) -> u64 {
+        self.step
+    }
+    fn names(&self) -> &[String] {
+        &self.names
+    }
+    fn shapes(&self) -> &[Vec<usize>] {
+        &self.shapes
+    }
+    fn read(&mut self, set: usize, tensor: usize, range: Range<usize>) -> Result<Vec<f32>> {
+        self.read_values(set, tensor, range)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::{Checkpoint, Store};
+    use std::path::PathBuf;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("cpcm_reader_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn range_reads_match_in_memory_checkpoint() {
+        let dir = tmpdir("ranges");
+        let store = Store::open(&dir).unwrap();
+        let ck = Checkpoint::synthetic(
+            42,
+            &[("a.w", vec![7, 5]), ("b.w", vec![13]), ("z", vec![2, 2, 2])],
+            9,
+        );
+        let path = store.save(&ck).unwrap();
+        let mut r = CheckpointFileReader::open(&path).unwrap();
+        assert_eq!(r.step(), 42);
+        assert_eq!(r.names(), &["a.w".to_string(), "b.w".into(), "z".into()]);
+        assert_eq!(r.counts(), &[35, 13, 8]);
+        let sets = [&ck.weights, &ck.exp_avg, &ck.exp_avg_sq];
+        for (set, ts) in sets.iter().enumerate() {
+            for (ti, e) in ts.iter().enumerate() {
+                let full = r.read_values(set, ti, 0..e.tensor.len()).unwrap();
+                assert_eq!(full, e.tensor.data(), "set {set} tensor {ti}");
+                // Mid-tensor windows.
+                let n = e.tensor.len();
+                let mid = r.read_values(set, ti, n / 3..n / 2 + 1).unwrap();
+                assert_eq!(mid, &e.tensor.data()[n / 3..n / 2 + 1]);
+                // Empty range.
+                assert!(r.read_values(set, ti, 1..1).unwrap().is_empty());
+            }
+        }
+        // Out-of-bounds requests fail cleanly.
+        assert!(r.read_values(0, 0, 0..36).is_err());
+        assert!(r.read_values(0, 9, 0..1).is_err());
+        assert!(r.read_values(3, 0, 0..1).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_file_rejected_at_open() {
+        let dir = tmpdir("trunc");
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = Checkpoint::synthetic(7, &[("w", vec![16, 16])], 3);
+        let bytes = ck.to_bytes();
+        let path = dir.join("cut.bin");
+        std::fs::write(&path, &bytes[..bytes.len() - 10]).unwrap();
+        assert!(CheckpointFileReader::open(&path).is_err());
+        // Bad magic too.
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        std::fs::write(&path, &bad).unwrap();
+        assert!(CheckpointFileReader::open(&path).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

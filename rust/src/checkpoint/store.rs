@@ -46,6 +46,18 @@ impl Store {
         Ok(final_path)
     }
 
+    /// Open a seekable range-reader over the checkpoint at `step` (the
+    /// larger-than-RAM path: tensors are fetched by range on demand
+    /// instead of loading the whole file — see
+    /// [`crate::checkpoint::CheckpointFileReader`]).
+    pub fn reader(&self, step: u64) -> Result<super::CheckpointFileReader> {
+        let path = self.path_for(step);
+        if !path.is_file() {
+            return Err(Error::format(format!("no checkpoint for step {step} at {path:?}")));
+        }
+        super::CheckpointFileReader::open(&path)
+    }
+
     /// Load the checkpoint saved at `step`.
     pub fn load(&self, step: u64) -> Result<Checkpoint> {
         let path = self.path_for(step);
@@ -138,6 +150,20 @@ mod tests {
         let store = Store::open(&dir).unwrap();
         assert!(store.load(777).is_err());
         assert_eq!(store.latest().unwrap(), None);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reader_serves_saved_checkpoints() {
+        let dir = tmpdir("reader");
+        let store = Store::open(&dir).unwrap();
+        let ck = Checkpoint::synthetic(5, &[("w", vec![6, 4])], 11);
+        store.save(&ck).unwrap();
+        let mut r = store.reader(5).unwrap();
+        assert_eq!(r.step(), 5);
+        let vals = r.read_values(0, 0, 4..10).unwrap();
+        assert_eq!(vals, &ck.weights.get("w").unwrap().data()[4..10]);
+        assert!(store.reader(999).is_err());
         let _ = fs::remove_dir_all(&dir);
     }
 

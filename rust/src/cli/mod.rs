@@ -3,9 +3,9 @@
 //! ```text
 //! cpcm train      --workload lm_tiny --steps 300 --ckpt-every 50 \
 //!                 --out runs/demo [--compress] [--mode lstm] [--backend native]
-//!                 [--lanes N] [--queue-depth N]
+//!                 [--lanes N] [--queue-depth N] [--shard-bytes N]
 //! cpcm compress   --ckpts runs/demo/raw --out runs/demo/cpcm [--mode ...]
-//!                 [--lanes N] [--queue-depth N]
+//!                 [--lanes N] [--queue-depth N] [--shard-bytes N]
 //! cpcm decompress --cpcm runs/demo/cpcm --step 100 --out ck.bin [--backend ...]
 //! cpcm verify     --ckpts runs/demo/raw --cpcm runs/demo/cpcm
 //! cpcm info       --file runs/demo/cpcm/ckpt_0000000100.cpcm
@@ -123,6 +123,11 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
     // Coding lanes per parameter set (format-2 parallelism); 0 = auto.
     if let Some(v) = args.parsed::<u64>("lanes")? {
         cfg.codec.lanes = v as usize;
+    }
+    // Streaming shard budget in raw value bytes (0 = unsharded format 2;
+    // >0 writes format-3 containers with bounded encoder memory).
+    if let Some(v) = args.parsed::<u64>("shard-bytes")? {
+        cfg.codec.shard_bytes = v as usize;
     }
     // Coordinator queue depth (submission + stage queues).
     if let Some(v) = args.parsed::<u64>("queue-depth")? {
@@ -376,6 +381,8 @@ mod tests {
             "4".into(),
             "--queue-depth".into(),
             "3".into(),
+            "--shard-bytes".into(),
+            "1048576".into(),
             "--verify".into(),
         ])
         .unwrap();
@@ -386,7 +393,14 @@ mod tests {
         assert_eq!(cfg.codec.bits, 2);
         assert_eq!(cfg.codec.lanes, 4);
         assert_eq!(cfg.queue_depth, 3);
+        assert_eq!(cfg.codec.shard_bytes, 1 << 20);
         assert!(cfg.verify);
+    }
+
+    #[test]
+    fn tiny_shard_bytes_rejected() {
+        let args = Args::parse(&["--shard-bytes".into(), "4".into()]).unwrap();
+        assert!(experiment_config(&args).is_err());
     }
 
     #[test]

@@ -29,6 +29,26 @@
 //! for near-linear encode/decode scaling — measured by
 //! `cargo bench --bench hotpath` (see EXPERIMENTS.md).
 //!
+//! ## Streaming shards (container format 3)
+//!
+//! Format 2 still assumes the whole checkpoint (and its reference) fits in
+//! memory. Format 3 adds an outer partition for larger-than-RAM
+//! checkpoints: the shared per-set position space is cut into fixed-budget
+//! **shards** ([`ShardLayout`]; `CodecConfig::shard_bytes` > 0 selects the
+//! format, ~64 MiB is a good default budget). Every shard is an
+//! independent coding unit — k-means centers fitted per *fragment* (the
+//! intersection of a tensor with the shard), its own `lanes` lane streams
+//! per set, and its own CRC in the shard index appended before the
+//! container trailer. Shards stream to disk as they finish
+//! ([`crate::container::ContainerStreamWriter`],
+//! [`sharded::encode_streaming`]), bounding peak encoder memory by the
+//! shard budget; decode restores shard-by-shard (each shard's `3 × lanes`
+//! tasks fan out over the pool) and [`sharded::decode_weight_tensor`]
+//! uses the shard index for per-tensor random access. With
+//! `shard_bytes = ∞` (a single shard) the format-3 payload blobs are
+//! byte-identical to the format-2 blobs — pinned by the round-trip
+//! property suite.
+//!
 //! Legacy format-1 containers (single stream per set, tensor-boundary
 //! batch flushes) remain fully decodable; [`Codec::encode_format1`] keeps
 //! the writer side of that path alive for fixtures and compatibility
@@ -55,13 +75,18 @@
 //! use reconstructed references on both sides and stay bit-identical.
 
 mod lanes;
+mod shard;
+pub mod sharded;
 mod stream;
 
 pub use lanes::LanePlan;
+pub use shard::{Fragment, Pos, ShardIndexEntry, ShardLayout, ShardPlan};
 pub use stream::{StreamCoder, StreamDecoder};
 
+use shard::ShardIndexBuilder;
+
 use crate::checkpoint::Checkpoint;
-use crate::container::{centers_from_bytes, centers_to_bytes, Container};
+use crate::container::{centers_from_bytes, centers_to_bytes, Container, ContainerStreamWriter};
 use crate::context::ContextExtractor;
 use crate::delta;
 use crate::lstm::{Backend, LstmCfg, ProbModel};
@@ -157,6 +182,14 @@ pub struct CodecConfig {
     /// in the container header, so decode reuses the encoder's lane
     /// layout regardless of the decoding machine.
     pub lanes: usize,
+    /// Shard budget in raw value bytes (across the three parameter sets,
+    /// 12 bytes per position) for streaming containers. `0` disables
+    /// sharding and writes container format 2; any positive value writes
+    /// format 3 with `max(1, shard_bytes / 12)` positions per shard
+    /// (~64 MiB is a good production default). Peak encoder memory on the
+    /// streaming path is bounded by this budget instead of the checkpoint
+    /// size.
+    pub shard_bytes: usize,
 }
 
 impl Default for CodecConfig {
@@ -178,6 +211,7 @@ impl Default for CodecConfig {
             quant_iters: 12,
             quant_sample_cap: 1 << 16,
             lanes: 0,
+            shard_bytes: 0,
         }
     }
 }
@@ -214,6 +248,50 @@ impl CodecConfig {
         lanes.clamp(1, MAX_LANES)
     }
 
+    /// True when this config writes streaming (format-3) containers.
+    pub fn sharded(&self) -> bool {
+        self.shard_bytes > 0
+    }
+
+    /// Positions per shard implied by `shard_bytes` (each position spans
+    /// the three sets' f32 values, 12 bytes).
+    pub fn shard_values(&self) -> usize {
+        (self.shard_bytes / 12).max(1)
+    }
+
+    /// Sanity caps applied to header-supplied configs before any shift,
+    /// multiplication or allocation uses them — a forged header must fail
+    /// cleanly, not panic or size a buffer from hostile numbers. The caps
+    /// are sized so the *largest in-cap* model/batch allocation stays in
+    /// the tens of megabytes (hidden 1024 → LSTM weight blocks ~32 MB;
+    /// batch 8192 × seq 961 context rows ~31 MB), while every
+    /// configuration a realistic entropy model uses (paper: hidden 64,
+    /// window 3, batch 256) sits far inside them. The encode side
+    /// enforces the same caps in
+    /// [`crate::config::ExperimentConfig::validate`], so every container a
+    /// legitimate encoder writes passes this check.
+    pub(crate) fn validate_untrusted(&self) -> Result<()> {
+        if self.bits == 0 || self.bits > 12 {
+            return Err(Error::format(format!("codec bits {} outside 1..=12", self.bits)));
+        }
+        if self.window == 0 || self.window % 2 == 0 || self.window > 31 {
+            return Err(Error::format(format!(
+                "codec window {} must be odd and <= 31",
+                self.window
+            )));
+        }
+        if self.hidden == 0 || self.hidden > 1024 || self.embed == 0 || self.embed > 1024 {
+            return Err(Error::format("codec hidden/embed size outside 1..=1024"));
+        }
+        if self.layers == 0 || self.layers > 16 {
+            return Err(Error::format(format!("codec layers {} outside 1..=16", self.layers)));
+        }
+        if self.batch == 0 || self.batch > 8192 {
+            return Err(Error::format(format!("codec batch {} outside 1..=8192", self.batch)));
+        }
+        Ok(())
+    }
+
     /// Serialize into a header fragment.
     fn to_json(&self) -> Json {
         Json::obj(vec![
@@ -235,6 +313,7 @@ impl CodecConfig {
             ("quant_iters", Json::num(self.quant_iters as f64)),
             ("quant_sample_cap", Json::num(self.quant_sample_cap as f64)),
             ("lanes", Json::num(self.lanes as f64)),
+            ("shard_bytes", Json::num(self.shard_bytes as f64)),
         ])
     }
 
@@ -262,6 +341,8 @@ impl CodecConfig {
             quant_sample_cap: j.req_usize("quant_sample_cap")?,
             // Absent in format-1 headers (single implicit lane).
             lanes: j.get("lanes").and_then(|v| v.as_usize()).unwrap_or(1),
+            // Absent in pre-format-3 headers (unsharded).
+            shard_bytes: j.get("shard_bytes").and_then(|v| v.as_usize()).unwrap_or(0),
         })
     }
 }
@@ -288,6 +369,8 @@ pub struct EncodeStats {
     pub encode_seconds: f64,
     /// Coding lanes used (1 for format-1 containers).
     pub lanes: usize,
+    /// Shards written (1 for format-1/2 containers).
+    pub shards: usize,
 }
 
 impl EncodeStats {
@@ -333,18 +416,35 @@ pub struct PreparedEncode {
     pub syms: SymbolMaps,
     /// Raw f32 size of the source checkpoint.
     pub raw_bytes: usize,
-    /// Fully-assembled format-2 container header.
+    /// Fully-assembled container header.
     header: Json,
-    /// Lane partition shared by all three parameter sets.
-    plan: LanePlan,
+    /// Container format this prepare targets (2, or 3 when
+    /// `CodecConfig::shard_bytes` > 0).
+    format: u64,
+    /// Per-shard coding plans (a single whole-checkpoint shard for
+    /// format 2).
+    shards: Vec<ShardPlan>,
     /// Per-tensor context extractors (encode side).
     extractors: Vec<ContextExtractor>,
-    /// Per-set, per-tensor k-means center tables.
+    /// Per-set k-means center tables, one per fragment in shard-major
+    /// order (== per tensor for format 2).
     centers: [Vec<Vec<f32>>; 3],
     /// Resolved lane count recorded in the header.
     lanes: usize,
     weight_density: f64,
     momentum_density: f64,
+}
+
+impl PreparedEncode {
+    /// Container format this prepare will serialize as (2 or 3).
+    pub fn container_format(&self) -> u64 {
+        self.format
+    }
+
+    /// Number of shards the container will carry (1 for format 2).
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
 }
 
 /// The checkpoint codec.
@@ -366,6 +466,105 @@ struct LaneOut {
     bytes: Vec<u8>,
     loss: f64,
     symbols: usize,
+}
+
+/// One shard's encoded blobs plus per-set accounting.
+#[derive(Default)]
+struct ShardEncodeOut {
+    /// Blobs in container order (per set: centers, then lane streams).
+    blobs: Vec<Vec<u8>>,
+    set_bytes: [usize; 3],
+    loss_weighted: [f64; 3],
+    symbols: [usize; 3],
+}
+
+/// Accumulates per-set entropy-stage stats across shards.
+#[derive(Default)]
+struct SetStatsAcc {
+    set_bytes: [usize; 3],
+    loss_weighted: [f64; 3],
+    symbols: [usize; 3],
+}
+
+impl SetStatsAcc {
+    fn add(&mut self, out: &ShardEncodeOut) {
+        for k in 0..3 {
+            self.set_bytes[k] += out.set_bytes[k];
+            self.loss_weighted[k] += out.loss_weighted[k];
+            self.symbols[k] += out.symbols[k];
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn into_stats(
+        self,
+        raw_bytes: usize,
+        compressed_bytes: usize,
+        weight_density: f64,
+        momentum_density: f64,
+        encode_seconds: f64,
+        lanes: usize,
+        shards: usize,
+    ) -> EncodeStats {
+        let mut set_loss = [0.0f64; 3];
+        for k in 0..3 {
+            set_loss[k] = if self.symbols[k] > 0 {
+                self.loss_weighted[k] / self.symbols[k] as f64
+            } else {
+                0.0
+            };
+        }
+        EncodeStats {
+            raw_bytes,
+            compressed_bytes,
+            set_bytes: self.set_bytes,
+            weight_density,
+            momentum_density,
+            set_loss,
+            encode_seconds,
+            lanes,
+            shards,
+        }
+    }
+}
+
+/// Dequantize a run of decoded symbols against its center table into
+/// `out`, rejecting out-of-alphabet symbols and applying the log-domain
+/// inverse. The ONE implementation of symbol→value mapping shared by the
+/// v1/v2 decode tail, the v3 shard decode and the random-access reader —
+/// a bounds or log-domain change cannot drift between paths. The op
+/// sequence (`centers[s-1]`, then `exp` on non-zero) matches the
+/// encoder's reconstruction exactly, which is what keeps chains bit-exact.
+fn dequant_symbols_into(
+    symbols: &[u16],
+    centers: &[f32],
+    log_domain: bool,
+    out: &mut [f32],
+) -> Result<()> {
+    debug_assert_eq!(symbols.len(), out.len());
+    for (o, &s) in out.iter_mut().zip(symbols) {
+        if s as usize > centers.len() {
+            return Err(Error::codec("decoded symbol out of center range"));
+        }
+        let mut v = if s == 0 { 0.0 } else { centers[s as usize - 1] };
+        if log_domain && v != 0.0 {
+            v = v.exp();
+        }
+        *o = v;
+    }
+    Ok(())
+}
+
+/// Add the reference weights back onto decoded/reconstructed weight
+/// residuals in place — the shared final step of every delta decode, kept
+/// as one function so encoder reconstruction and decoder output perform
+/// the identical f32 op sequence.
+fn add_reference_weights(out: &mut Checkpoint, reference: &Checkpoint) {
+    for (d, rt) in out.weights.iter_mut().zip(reference.weights.iter()) {
+        for (x, &rv) in d.tensor.data_mut().iter_mut().zip(rt.tensor.data()) {
+            *x += rv;
+        }
+    }
 }
 
 /// Per-set encode result of the legacy format-1 path.
@@ -445,34 +644,65 @@ impl Codec {
         ))
     }
 
-    /// Shared header assembly.
+    /// Shared header assembly. `shard` carries format-3's
+    /// `(shard_values, n_shards)`; both the prepare path and the streaming
+    /// encoder build headers through here, so the two paths stay
+    /// byte-identical.
+    #[allow(clippy::too_many_arguments)]
     fn make_header(
         &self,
         format: u64,
-        current: &Checkpoint,
-        reference: Option<&Checkpoint>,
-        prev_syms: Option<&SymbolMaps>,
-        front: &FrontEnd,
+        step: u64,
+        ref_step: Option<u64>,
+        has_prev_syms: bool,
+        tensors: Vec<Json>,
+        raw_bytes: usize,
+        weight_density: f64,
+        momentum_density: f64,
         cfg_json: Json,
+        shard: Option<(usize, usize)>,
     ) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("format", Json::num(format as f64)),
-            ("step", Json::num(current.step as f64)),
+            ("step", Json::num(step as f64)),
             (
                 "ref_step",
-                match reference {
-                    Some(r) => Json::num(r.step as f64),
+                match ref_step {
+                    Some(r) => Json::num(r as f64),
                     None => Json::Null,
                 },
             ),
             ("backend", Json::str(self.backend.id())),
-            ("has_prev_syms", Json::Bool(prev_syms.is_some())),
+            ("has_prev_syms", Json::Bool(has_prev_syms)),
             ("codec", cfg_json),
-            ("tensors", Json::Arr(front.header_tensors.clone())),
-            ("raw_bytes", Json::num(current.raw_bytes() as f64)),
-            ("weight_density", Json::num(front.weight_density)),
-            ("momentum_density", Json::num(front.momentum_density)),
-        ])
+            ("tensors", Json::Arr(tensors)),
+            ("raw_bytes", Json::num(raw_bytes as f64)),
+            ("weight_density", Json::num(weight_density)),
+            ("momentum_density", Json::num(momentum_density)),
+        ];
+        if let Some((shard_values, n_shards)) = shard {
+            pairs.push(("shard_values", Json::num(shard_values as f64)));
+            pairs.push(("n_shards", Json::num(n_shards as f64)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Header `tensors` list from bare names/shapes (streaming path; the
+    /// prepare path derives the same rows from its residual).
+    fn tensors_json(names: &[String], shapes: &[Vec<usize>]) -> Vec<Json> {
+        names
+            .iter()
+            .zip(shapes)
+            .map(|(name, shape)| {
+                Json::obj(vec![
+                    ("name", Json::str(name.clone())),
+                    (
+                        "shape",
+                        Json::Arr(shape.iter().map(|&d| Json::num(d as f64)).collect()),
+                    ),
+                ])
+            })
+            .collect()
     }
 
     /// Compress `current` against `reference` (None ⇒ self-contained intra
@@ -529,17 +759,33 @@ impl Codec {
                 return Err(Error::shape("parameter sets must share one tensor layout"));
             }
         }
-        let plan = LanePlan::new(counts.clone(), lanes);
+        // Shard partition: the whole checkpoint as one shard for format 2,
+        // fixed-budget shards for format 3.
+        let format: u64 = if cfg.sharded() { 3 } else { 2 };
+        let layout = if cfg.sharded() {
+            ShardLayout::new(counts.clone(), cfg.shard_values())?
+        } else {
+            ShardLayout::whole(counts.clone())
+        };
+        let shards: Vec<ShardPlan> =
+            (0..layout.n_shards()).map(|s| ShardPlan::new(&layout, s, lanes)).collect();
+        let frags: Vec<Fragment> =
+            shards.iter().flat_map(|sp| sp.fragments().iter().copied()).collect();
         let extractors = self.build_extractors_from_sets(sets[0])?;
         self.check_ref_maps(prev_syms, &counts)?;
 
-        // Quantize every (set, tensor) on the pool.
+        // Quantize every (set, fragment) on the pool (fragments are whole
+        // tensors for format 2 — byte-identical to the per-tensor path).
         let mut qtasks: Vec<Task<Result<QuantOut>>> = Vec::new();
         for (k, set) in sets.iter().enumerate() {
             let log_domain = k == 2 && cfg.log_moment2;
             let qcfg = cfg.quant_cfg();
-            for e in set.iter() {
-                let data: &[f32] = e.tensor.data();
+            let data_refs: Vec<&[f32]> = set.iter().map(|e| e.tensor.data()).collect();
+            for f in &frags {
+                // Copy the tensor slice reference out of `data_refs` so the
+                // task's borrow is tied to the residual, not the local Vec.
+                let tensor_data: &[f32] = data_refs[f.tensor];
+                let data = &tensor_data[f.start..f.start + f.len];
                 qtasks.push(Box::new(move || {
                     let values = maybe_log(data, log_domain);
                     let q = quant::quantize(&values, &qcfg)?;
@@ -556,31 +802,55 @@ impl Codec {
             }
         }
         let mut qresults = pool::run_scoped(workers, qtasks)?.into_iter();
-        let mut quantized: [Vec<Quantized>; 3] = Default::default();
-        let mut recon_sets: [Vec<Vec<f32>>; 3] = Default::default();
-        for k in 0..3 {
-            for _ in 0..counts.len() {
+
+        // Stitch fragment results back into per-tensor symbol maps (the
+        // chain state) and per-tensor reconstruction values; center tables
+        // stay per fragment (the container stores them per shard).
+        let mut centers: [Vec<Vec<f32>>; 3] = Default::default();
+        let mut syms = SymbolMaps::default();
+        let mut recon = Checkpoint { step: current.step, ..Default::default() };
+        for (k, set) in sets.iter().enumerate() {
+            let mut tensor_syms: Vec<Vec<u16>> =
+                counts.iter().map(|&c| vec![0u16; c]).collect();
+            let mut tensor_vals: Vec<Vec<f32>> =
+                counts.iter().map(|&c| vec![0f32; c]).collect();
+            for f in &frags {
                 let out = qresults.next().expect("quantization task missing")?;
-                quantized[k].push(out.q);
-                recon_sets[k].push(out.recon);
+                tensor_syms[f.tensor][f.start..f.start + f.len]
+                    .copy_from_slice(&out.q.symbols);
+                tensor_vals[f.tensor][f.start..f.start + f.len].copy_from_slice(&out.recon);
+                centers[k].push(out.q.centers);
             }
+            for (e, v) in set.iter().zip(tensor_vals) {
+                let tensor = Tensor::new(e.tensor.shape().to_vec(), v)?;
+                match k {
+                    0 => recon.weights.insert(e.name.clone(), tensor),
+                    1 => recon.exp_avg.insert(e.name.clone(), tensor),
+                    _ => recon.exp_avg_sq.insert(e.name.clone(), tensor),
+                }
+            }
+            syms.sets[k] = tensor_syms;
         }
-
-        // Center tables go into the container; the symbols move into
-        // `syms` below (the entropy stage reads them from there).
-        let centers: [Vec<Vec<f32>>; 3] = [
-            quantized[0].iter().map(|q| q.centers.clone()).collect(),
-            quantized[1].iter().map(|q| q.centers.clone()).collect(),
-            quantized[2].iter().map(|q| q.centers.clone()).collect(),
-        ];
-
-        let (recon, syms) =
-            self.assemble_recon(current, reference, &sets, quantized, recon_sets)?;
+        // Add the reference back onto the weight residuals — the same f32
+        // op sequence the decoder performs, so recon is decode-exact.
+        if let Some(r) = reference {
+            add_reference_weights(&mut recon, r);
+        }
 
         let mut hdr_cfg = cfg.clone();
         hdr_cfg.lanes = lanes; // record the resolved lane count
-        let header =
-            self.make_header(2, current, reference, prev_syms, &front, hdr_cfg.to_json());
+        let header = self.make_header(
+            format,
+            current.step,
+            reference.map(|r| r.step),
+            prev_syms.is_some(),
+            front.header_tensors.clone(),
+            current.raw_bytes(),
+            front.weight_density,
+            front.momentum_density,
+            hdr_cfg.to_json(),
+            (format == 3).then(|| (layout.shard_values(), layout.n_shards())),
+        );
 
         Ok(PreparedEncode {
             step: current.step,
@@ -589,7 +859,8 @@ impl Codec {
             syms,
             raw_bytes: current.raw_bytes(),
             header,
-            plan,
+            format,
+            shards,
             extractors,
             centers,
             lanes,
@@ -615,58 +886,128 @@ impl Codec {
         prev_syms: Option<&SymbolMaps>,
     ) -> Result<(Vec<u8>, EncodeStats)> {
         let t0 = std::time::Instant::now();
-        let lanes = prep.lanes;
-        let workers = pool::available_workers();
+        let mut bytes = Vec::new();
+        let mut acc = SetStatsAcc::default();
+        self.write_prepared_shards(prep, prev_syms, &mut bytes, &mut acc)?;
+        let stats = acc.into_stats(
+            prep.raw_bytes,
+            bytes.len(),
+            prep.weight_density,
+            prep.momentum_density,
+            t0.elapsed().as_secs_f64(),
+            prep.lanes,
+            prep.shards.len(),
+        );
+        Ok((bytes, stats))
+    }
 
-        // Entropy-code all 3 × lanes lane streams on the pool. Lanes read
-        // the per-tensor symbol vectors in place via the plan's
-        // (tensor, element) walk — no flattened copy of the symbols.
+    /// Write a prepared encode's shards through the streaming container
+    /// writer (per shard, per set: fragment center tables then lane
+    /// streams; format 3 appends the shard index). Each shard's
+    /// `3 × lanes` lane tasks fan out over the pool as their own batch, so
+    /// only one shard's blobs are in flight at a time.
+    fn write_prepared_shards<W: std::io::Write>(
+        &self,
+        prep: &PreparedEncode,
+        prev_syms: Option<&SymbolMaps>,
+        sink: W,
+        acc: &mut SetStatsAcc,
+    ) -> Result<()> {
+        let lanes = prep.lanes;
+        let v3 = prep.format == 3;
+        let n_blobs: usize = prep
+            .shards
+            .iter()
+            .map(|sp| 3 * (sp.fragments().len() + lanes))
+            .sum::<usize>()
+            + usize::from(v3);
+        let mut w = ContainerStreamWriter::new(sink, &prep.header, n_blobs as u32)?;
+        let mut index: Vec<ShardIndexEntry> = Vec::with_capacity(prep.shards.len());
+        let mut frag_cursor = 0usize;
+        for sp in &prep.shards {
+            let nf = sp.fragments().len();
+            let frag_centers: [&[Vec<f32>]; 3] = [
+                &prep.centers[0][frag_cursor..frag_cursor + nf],
+                &prep.centers[1][frag_cursor..frag_cursor + nf],
+                &prep.centers[2][frag_cursor..frag_cursor + nf],
+            ];
+            let frag_syms: [Vec<&[u16]>; 3] = std::array::from_fn(|k| {
+                sp.fragments()
+                    .iter()
+                    .map(|f| &prep.syms.sets[k][f.tensor][f.start..f.start + f.len])
+                    .collect()
+            });
+            let out = self.encode_shard_blobs(
+                sp,
+                &prep.extractors,
+                prev_syms,
+                frag_centers,
+                [&frag_syms[0], &frag_syms[1], &frag_syms[2]],
+            )?;
+            // Shard CRCs only exist in the format-3 index; don't pay the
+            // extra checksum pass on format-2 writes.
+            let mut ib = v3.then(|| ShardIndexBuilder::new(w.offset()));
+            for blob in &out.blobs {
+                if let Some(ib) = ib.as_mut() {
+                    ib.add_blob(blob);
+                }
+                w.push_blob(blob)?;
+            }
+            if let Some(ib) = ib {
+                index.push(ib.finish());
+            }
+            acc.add(&out);
+            frag_cursor += nf;
+        }
+        if v3 {
+            w.push_blob(&shard::index_to_bytes(&index))?;
+        }
+        w.finish()?;
+        Ok(())
+    }
+
+    /// Entropy-code one shard into its container blobs (per set: fragment
+    /// center tables, then `lanes` lane streams). The `3 × lanes` lane
+    /// tasks run on the persistent pool; blob bytes are a pure function of
+    /// (config, symbols, reference maps), independent of scheduling.
+    fn encode_shard_blobs(
+        &self,
+        sp: &ShardPlan,
+        extractors: &[ContextExtractor],
+        prev_syms: Option<&SymbolMaps>,
+        frag_centers: [&[Vec<f32>]; 3],
+        frag_syms: [&[&[u16]]; 3],
+    ) -> Result<ShardEncodeOut> {
+        let lanes = sp.lanes();
         let mut ltasks: Vec<Task<Result<LaneOut>>> = Vec::with_capacity(3 * lanes);
-        for (k, set_syms) in prep.syms.sets.iter().enumerate() {
+        for k in 0..3 {
             let ref_maps = self.reference_maps(prev_syms, k);
+            let syms = frag_syms[k];
             for lane in 0..lanes {
-                let plan = &prep.plan;
-                let extractors = prep.extractors.as_slice();
-                let set_syms = set_syms.as_slice();
                 ltasks.push(Box::new(move || {
-                    self.encode_lane(plan, extractors, ref_maps, set_syms, lane)
+                    self.encode_lane(sp, extractors, ref_maps, syms, lane)
                 }));
             }
         }
-        let mut lresults = pool::run_scoped(workers, ltasks)?.into_iter();
+        let mut lresults = pool::run_scoped(pool::available_workers(), ltasks)?.into_iter();
 
-        // Assemble the container: per set, center tables then lane streams.
-        let mut container = Container::new(prep.header.clone());
-        let mut set_bytes = [0usize; 3];
-        let mut set_loss = [0.0f64; 3];
+        let mut out = ShardEncodeOut {
+            blobs: Vec::with_capacity(3 * (sp.fragments().len() + lanes)),
+            ..Default::default()
+        };
         for k in 0..3 {
-            for centers in &prep.centers[k] {
-                container.push_blob(centers_to_bytes(centers));
+            for centers in frag_centers[k] {
+                out.blobs.push(centers_to_bytes(centers));
             }
-            let mut loss_weighted = 0.0f64;
-            let mut syms_total = 0usize;
             for _ in 0..lanes {
                 let lane = lresults.next().expect("lane task missing")?;
-                set_bytes[k] += lane.bytes.len();
-                loss_weighted += lane.loss * lane.symbols as f64;
-                syms_total += lane.symbols;
-                container.push_blob(lane.bytes);
+                out.set_bytes[k] += lane.bytes.len();
+                out.loss_weighted[k] += lane.loss * lane.symbols as f64;
+                out.symbols[k] += lane.symbols;
+                out.blobs.push(lane.bytes);
             }
-            set_loss[k] = if syms_total > 0 { loss_weighted / syms_total as f64 } else { 0.0 };
         }
-        let bytes = container.to_bytes();
-
-        let stats = EncodeStats {
-            raw_bytes: prep.raw_bytes,
-            compressed_bytes: bytes.len(),
-            set_bytes,
-            weight_density: prep.weight_density,
-            momentum_density: prep.momentum_density,
-            set_loss,
-            encode_seconds: t0.elapsed().as_secs_f64(),
-            lanes,
-        };
-        Ok((bytes, stats))
+        Ok(out)
     }
 
     /// Build the reconstruction + symbol maps from the quantization
@@ -754,40 +1095,42 @@ impl Codec {
         Ok(())
     }
 
-    /// Encode one lane of one parameter set (runs on a pool worker).
-    /// `set_syms` are the set's per-tensor quantized symbol maps, indexed
-    /// by the plan's (tensor, element) walk.
+    /// Encode one lane of one parameter set over one shard (runs on a pool
+    /// worker). `frag_syms` holds the shard's quantized symbols per
+    /// fragment; contexts index the *full-tensor* extractors and reference
+    /// maps via the walk's tensor coordinates, so a fragment that starts
+    /// mid-tensor still sees its true 2-D neighborhood.
     fn encode_lane(
         &self,
-        plan: &LanePlan,
+        sp: &ShardPlan,
         extractors: &[ContextExtractor],
         ref_maps: Option<&[Vec<u16>]>,
-        set_syms: &[Vec<u16>],
+        frag_syms: &[&[u16]],
         lane: usize,
     ) -> Result<LaneOut> {
         let cfg = &self.cfg;
-        let symbols = plan.lane_range(lane).len();
+        let symbols = sp.lane_len(lane);
         match cfg.mode {
             ContextMode::Order0 => {
                 let mut model = ac::AdaptiveModel::new(1 << cfg.bits);
                 let mut enc = ac::Encoder::new();
-                for (ti, idx) in plan.iter_lane(lane) {
-                    model.encode(&mut enc, set_syms[ti][idx]);
+                for p in sp.iter_lane(lane) {
+                    model.encode(&mut enc, frag_syms[p.frag][p.local]);
                 }
                 Ok(LaneOut { bytes: enc.finish(), loss: 0.0, symbols })
             }
             ContextMode::Lstm | ContextMode::ZeroContext | ContextMode::Mixed => {
                 let mut model = self.make_model()?;
                 if let Some(maps) = ref_maps {
-                    self.warmup_lane(&mut model, plan, extractors, maps, lane)?;
+                    self.warmup_lane(&mut model, sp, extractors, maps, lane)?;
                 }
                 let seq = cfg.window * cfg.window;
                 let mut coder = StreamCoder::new(model);
                 let mut ctx = vec![0i32; seq];
-                for (ti, idx) in plan.iter_lane(lane) {
-                    let map = ref_maps.and_then(|m| m.get(ti)).map(|v| v.as_slice());
-                    extractors[ti].extract_or_zero(map, idx, &mut ctx);
-                    coder.push(&ctx, set_syms[ti][idx])?;
+                for p in sp.iter_lane(lane) {
+                    let map = ref_maps.and_then(|m| m.get(p.tensor)).map(|v| v.as_slice());
+                    extractors[p.tensor].extract_or_zero(map, p.elem, &mut ctx);
+                    coder.push(&ctx, frag_syms[p.frag][p.local])?;
                 }
                 let (bytes, loss, _ideal) = coder.finish()?;
                 Ok(LaneOut { bytes, loss, symbols })
@@ -795,17 +1138,18 @@ impl Codec {
         }
     }
 
-    /// Decode one lane of one parameter set (runs on a pool worker).
+    /// Decode one lane of one parameter set over one shard (runs on a pool
+    /// worker).
     fn decode_lane(
         &self,
-        plan: &LanePlan,
+        sp: &ShardPlan,
         extractors: &[ContextExtractor],
         ref_maps: Option<&[Vec<u16>]>,
         stream: &[u8],
         lane: usize,
     ) -> Result<Vec<u16>> {
         let cfg = &self.cfg;
-        let n = plan.lane_range(lane).len();
+        let n = sp.lane_len(lane);
         match cfg.mode {
             ContextMode::Order0 => {
                 let mut model = ac::AdaptiveModel::new(1 << cfg.bits);
@@ -815,14 +1159,14 @@ impl Codec {
             ContextMode::Lstm | ContextMode::ZeroContext | ContextMode::Mixed => {
                 let mut model = self.make_model()?;
                 if let Some(maps) = ref_maps {
-                    self.warmup_lane(&mut model, plan, extractors, maps, lane)?;
+                    self.warmup_lane(&mut model, sp, extractors, maps, lane)?;
                 }
                 let seq = cfg.window * cfg.window;
                 let mut sd = StreamDecoder::new(model, stream)?;
                 let mut ctx = vec![0i32; seq];
-                for (ti, idx) in plan.iter_lane(lane) {
-                    let map = ref_maps.and_then(|m| m.get(ti)).map(|v| v.as_slice());
-                    extractors[ti].extract_or_zero(map, idx, &mut ctx);
+                for p in sp.iter_lane(lane) {
+                    let map = ref_maps.and_then(|m| m.get(p.tensor)).map(|v| v.as_slice());
+                    extractors[p.tensor].extract_or_zero(map, p.elem, &mut ctx);
                     sd.push(&ctx)?;
                 }
                 sd.flush()?;
@@ -836,12 +1180,12 @@ impl Codec {
     /// model on the reference checkpoint's own (context → co-located
     /// symbol) pairs before any coding. Both sides hold the reference
     /// symbol maps, so the passes are bit-free and exactly mirrored. Each
-    /// lane warms on *its own* shard of the reference, keeping total
-    /// warmup cost constant in the lane count.
+    /// lane warms on *its own* slice of the reference, keeping total
+    /// warmup cost constant in the lane and shard counts.
     fn warmup_lane(
         &self,
         model: &mut Box<dyn ProbModel>,
-        plan: &LanePlan,
+        sp: &ShardPlan,
         extractors: &[ContextExtractor],
         ref_maps: &[Vec<u16>],
         lane: usize,
@@ -857,14 +1201,14 @@ impl Codec {
         let mut ctxs: Vec<i32> = Vec::with_capacity(batch * seq);
         let mut tgts: Vec<u16> = Vec::with_capacity(batch);
         for _pass in 0..cfg.warmup_passes {
-            for (step, (ti, idx)) in plan.iter_lane(lane).enumerate() {
+            for (step, p) in sp.iter_lane(lane).enumerate() {
                 if step % stride != 0 {
                     continue;
                 }
-                let Some(map) = ref_maps.get(ti) else { continue };
-                extractors[ti].extract_into(map, idx, &mut ctx);
+                let Some(map) = ref_maps.get(p.tensor) else { continue };
+                extractors[p.tensor].extract_into(map, p.elem, &mut ctx);
                 ctxs.extend_from_slice(&ctx);
-                tgts.push(map[idx]);
+                tgts.push(map[p.elem]);
                 if tgts.len() == batch {
                     model.update(&ctxs, &tgts)?;
                     ctxs.clear();
@@ -890,69 +1234,46 @@ impl Codec {
         prev_syms: Option<&SymbolMaps>,
     ) -> Result<(Checkpoint, SymbolMaps)> {
         let container = Container::from_bytes(bytes)?;
-        let h = &container.header;
-        let format = h.get("format").and_then(|v| v.as_u64()).unwrap_or(1);
-        if format != 1 && format != 2 {
-            return Err(Error::format(format!("unsupported container format {format}")));
-        }
-        let cfg = CodecConfig::from_json(h.req("codec")?)?;
-        let step = h.req_usize("step")? as u64;
-        let ref_step = h.get("ref_step").and_then(|v| v.as_u64());
-        let backend_id = h.req_str("backend")?;
-        if backend_id != backend.id() {
-            return Err(Error::codec(format!(
-                "container was encoded with backend '{backend_id}', decoder uses '{}'",
-                backend.id()
-            )));
-        }
-        let had_prev = h.req("has_prev_syms")?.as_bool().unwrap_or(false);
-        if had_prev && prev_syms.is_none() && cfg.mode.uses_reference_context() {
-            return Err(Error::codec(
-                "container requires the reference's symbol maps (decode the chain in order)",
-            ));
-        }
-        match (ref_step, reference) {
-            (Some(rs), Some(r)) if r.step != rs => {
-                return Err(Error::codec(format!(
-                    "reference step {} does not match container ref_step {rs}",
-                    r.step
-                )));
+        let hdr = parse_untrusted_header(&container, bytes.len(), backend)?;
+        let prev = check_chain_inputs(&hdr, reference, prev_syms)?;
+
+        let codec = Codec::new(hdr.cfg.clone(), backend.clone());
+        codec.check_ref_maps(prev, &hdr.counts)?;
+
+        // Format 3: shard-by-shard restore with its own blob layout.
+        if hdr.format == 3 {
+            let geom = parse_v3_geometry(&hdr, &container, bytes)?;
+            let (vals, syms) = codec.decode_v3(&container, &geom, &hdr.shapes, prev)?;
+            let DecodeHeader { step, names, shapes, .. } = hdr;
+            let mut out = Checkpoint { step, ..Default::default() };
+            for (k, set_vals) in vals.into_iter().enumerate() {
+                for ((name, shape), v) in names.iter().zip(&shapes).zip(set_vals) {
+                    let tensor = Tensor::new(shape.clone(), v)?;
+                    match k {
+                        0 => out.weights.insert(name.clone(), tensor),
+                        1 => out.exp_avg.insert(name.clone(), tensor),
+                        _ => out.exp_avg_sq.insert(name.clone(), tensor),
+                    }
+                }
             }
-            (Some(rs), None) => {
-                return Err(Error::codec(format!("container needs reference step {rs}")));
+            if let Some(r) = reference {
+                add_reference_weights(&mut out, r);
             }
-            _ => {}
+            return Ok((out, syms));
         }
 
-        // Tensor layout.
-        let mut names = Vec::new();
-        let mut shapes: Vec<Vec<usize>> = Vec::new();
-        for t in h.req_arr("tensors")? {
-            names.push(t.req_str("name")?.to_string());
-            let shape: Vec<usize> = t
-                .req_arr("shape")?
-                .iter()
-                .map(|d| d.as_usize().ok_or_else(|| Error::format("bad dim")))
-                .collect::<Result<_>>()?;
-            shapes.push(shape);
-        }
+        // Formats 1 and 2: per set, the center tables then the entropy
+        // stream(s); strict blob count.
+        let DecodeHeader { format, cfg, step, names, shapes, counts, .. } = hdr;
         let n_tensors = names.len();
-        let counts: Vec<usize> = shapes.iter().map(|s| s.iter().product()).collect();
-
-        let codec = Codec::new(cfg.clone(), backend.clone());
-        let prev = prev_syms.filter(|_| had_prev);
-        codec.check_ref_maps(prev, &counts)?;
-
-        // Per set: the center tables, then the entropy stream(s). The
-        // header's lane count is untrusted input — bound it before any
-        // index arithmetic or allocation uses it.
-        if format == 2 && !(1..=MAX_LANES).contains(&cfg.lanes) {
+        let streams_per_set = if format == 2 { cfg.lanes } else { 1 };
+        if container.blobs.len() != 3 * (n_tensors + streams_per_set) {
             return Err(Error::format(format!(
-                "container lane count {} outside 1..={MAX_LANES}",
-                cfg.lanes
+                "container has {} blobs, layout implies {}",
+                container.blobs.len(),
+                3 * (n_tensors + streams_per_set)
             )));
         }
-        let streams_per_set = if format == 2 { cfg.lanes } else { 1 };
         let mut per_set_centers: Vec<Vec<Vec<f32>>> = Vec::with_capacity(3);
         for k in 0..3 {
             let base = k * (n_tensors + streams_per_set);
@@ -978,20 +1299,8 @@ impl Codec {
                 .zip(&shapes)
                 .zip(syms.sets[k].iter().zip(&per_set_centers[k]))
             {
-                for &s in symbols {
-                    if s as usize > centers.len() {
-                        return Err(Error::codec("decoded symbol out of center range"));
-                    }
-                }
-                let q = Quantized { symbols: symbols.clone(), centers: centers.clone() };
-                let mut vals = q.dequantize();
-                if log_domain {
-                    for v in vals.iter_mut() {
-                        if *v != 0.0 {
-                            *v = v.exp();
-                        }
-                    }
-                }
+                let mut vals = vec![0f32; symbols.len()];
+                dequant_symbols_into(symbols, centers, log_domain, &mut vals)?;
                 let tensor = Tensor::new(shape.clone(), vals)?;
                 match k {
                     0 => out.weights.insert(name.clone(), tensor),
@@ -1002,17 +1311,106 @@ impl Codec {
         }
         // Add the reference back onto the weight residuals.
         if let Some(r) = reference {
-            for (d, rt) in out.weights.iter_mut().zip(r.weights.iter()) {
-                for (x, &rv) in d.tensor.data_mut().iter_mut().zip(rt.tensor.data()) {
-                    *x += rv;
-                }
-            }
+            add_reference_weights(&mut out, r);
         }
         Ok((out, syms))
     }
 
+    /// Decode a format-3 container shard by shard (geometry already
+    /// structurally validated by [`parse_v3_geometry`]): for each shard
+    /// run its `3 × lanes` lane decodes on the pool, scatter the symbols
+    /// into the per-tensor maps and dequantize each fragment with its own
+    /// center table. Returns per-set per-tensor values plus the symbol
+    /// maps.
+    #[allow(clippy::type_complexity)]
+    fn decode_v3(
+        &self,
+        container: &Container,
+        geom: &V3Geometry,
+        shapes: &[Vec<usize>],
+        prev_syms: Option<&SymbolMaps>,
+    ) -> Result<([Vec<Vec<f32>>; 3], SymbolMaps)> {
+        let counts = geom.layout.counts();
+        let extractors = self.build_extractors_from_shapes(shapes)?;
+        let mut syms_sets: [Vec<Vec<u16>>; 3] =
+            std::array::from_fn(|_| counts.iter().map(|&c| vec![0u16; c]).collect());
+        let mut vals: [Vec<Vec<f32>>; 3] =
+            std::array::from_fn(|_| counts.iter().map(|&c| vec![0f32; c]).collect());
+        for (sp, &cursor) in geom.plans.iter().zip(&geom.cursors) {
+            self.decode_one_shard(
+                container,
+                cursor,
+                sp,
+                &extractors,
+                prev_syms,
+                &mut syms_sets,
+                &mut vals,
+            )?;
+        }
+        let mut syms = SymbolMaps::default();
+        for (k, s) in syms_sets.into_iter().enumerate() {
+            syms.sets[k] = s;
+        }
+        Ok((vals, syms))
+    }
+
+    /// Decode one shard's blobs (starting at blob index `cursor`, from the
+    /// precomputed geometry) into the per-tensor symbol and value buffers.
+    /// The `3 × lanes` lane decodes fan out over the pool.
+    #[allow(clippy::too_many_arguments)]
+    fn decode_one_shard(
+        &self,
+        container: &Container,
+        cursor: usize,
+        sp: &ShardPlan,
+        extractors: &[ContextExtractor],
+        prev_syms: Option<&SymbolMaps>,
+        out_syms: &mut [Vec<Vec<u16>>; 3],
+        out_vals: &mut [Vec<Vec<f32>>; 3],
+    ) -> Result<()> {
+        let lanes = sp.lanes();
+        let nf = sp.fragments().len();
+        let mut centers: [Vec<Vec<f32>>; 3] = Default::default();
+        let mut tasks: Vec<Task<Result<Vec<u16>>>> = Vec::with_capacity(3 * lanes);
+        for k in 0..3 {
+            let base = cursor + k * (nf + lanes);
+            for fi in 0..nf {
+                centers[k].push(centers_from_bytes(container.blob(base + fi)?)?);
+            }
+            let ref_maps = self.reference_maps(prev_syms, k);
+            for lane in 0..lanes {
+                let stream = container.blob(base + nf + lane)?;
+                tasks.push(Box::new(move || {
+                    self.decode_lane(sp, extractors, ref_maps, stream, lane)
+                }));
+            }
+        }
+        let mut results = pool::run_scoped(pool::available_workers(), tasks)?.into_iter();
+        for k in 0..3 {
+            for lane in 0..lanes {
+                let decoded = results.next().expect("lane decode missing")?;
+                if decoded.len() != sp.lane_len(lane) {
+                    return Err(Error::codec("lane decoded wrong symbol count"));
+                }
+                for (p, s) in sp.iter_lane(lane).zip(decoded) {
+                    out_syms[k][p.tensor][p.elem] = s;
+                }
+            }
+            // Dequantize fragment-wise with the fragment's center table —
+            // the identical f32 ops the encoder ran to build its recon.
+            let log_domain = k == 2 && self.cfg.log_moment2;
+            for (f, cs) in sp.fragments().iter().zip(&centers[k]) {
+                let syms = &out_syms[k][f.tensor][f.start..f.start + f.len];
+                let dst = &mut out_vals[k][f.tensor][f.start..f.start + f.len];
+                dequant_symbols_into(syms, cs, log_domain, dst)?;
+            }
+        }
+        Ok(())
+    }
+
     /// Decode all `3 × lanes` format-2 lane streams on the pool and stitch
-    /// the per-lane shards back into per-tensor symbol maps.
+    /// the per-lane slices back into per-tensor symbol maps. Uses the
+    /// single-shard plan, whose walk equals the format-2 lane walk.
     fn decode_sets_v2(
         &self,
         container: &Container,
@@ -1022,7 +1420,8 @@ impl Codec {
         lanes: usize,
     ) -> Result<SymbolMaps> {
         let n_tensors = counts.len();
-        let plan = LanePlan::new(counts.to_vec(), lanes);
+        let layout = ShardLayout::whole(counts.to_vec());
+        let sp = ShardPlan::new(&layout, 0, lanes);
         let extractors = self.build_extractors_from_shapes(shapes)?;
         let mut tasks: Vec<Task<Result<Vec<u16>>>> = Vec::with_capacity(3 * lanes);
         for k in 0..3 {
@@ -1030,26 +1429,26 @@ impl Codec {
             let ref_maps = self.reference_maps(prev_syms, k);
             for lane in 0..lanes {
                 let stream = container.blob(base + lane)?;
-                let plan = &plan;
+                let sp = &sp;
                 let extractors = extractors.as_slice();
                 tasks.push(Box::new(move || {
-                    self.decode_lane(plan, extractors, ref_maps, stream, lane)
+                    self.decode_lane(sp, extractors, ref_maps, stream, lane)
                 }));
             }
         }
         let mut results = pool::run_scoped(pool::available_workers(), tasks)?.into_iter();
         let mut syms = SymbolMaps::default();
         for k in 0..3 {
-            // Scatter each lane's shard straight into the per-tensor maps.
+            // Scatter each lane's slice straight into the per-tensor maps.
             let mut per_tensor: Vec<Vec<u16>> =
                 counts.iter().map(|&c| vec![0u16; c]).collect();
             for lane in 0..lanes {
                 let decoded = results.next().expect("lane decode missing")?;
-                if decoded.len() != plan.lane_range(lane).len() {
+                if decoded.len() != sp.lane_len(lane) {
                     return Err(Error::codec("lane decoded wrong symbol count"));
                 }
-                for ((ti, idx), s) in plan.iter_lane(lane).zip(decoded) {
-                    per_tensor[ti][idx] = s;
+                for (p, s) in sp.iter_lane(lane).zip(decoded) {
+                    per_tensor[p.tensor][p.elem] = s;
                 }
             }
             syms.sets[k] = per_tensor;
@@ -1130,8 +1529,18 @@ impl Codec {
 
         let mut hdr_cfg = self.cfg.clone();
         hdr_cfg.lanes = 1;
-        container.header =
-            self.make_header(1, current, reference, prev_syms, &front, hdr_cfg.to_json());
+        container.header = self.make_header(
+            1,
+            current.step,
+            reference.map(|r| r.step),
+            prev_syms.is_some(),
+            front.header_tensors.clone(),
+            current.raw_bytes(),
+            front.weight_density,
+            front.momentum_density,
+            hdr_cfg.to_json(),
+            None,
+        );
         let bytes = container.to_bytes();
         let stats = EncodeStats {
             raw_bytes: current.raw_bytes(),
@@ -1142,6 +1551,7 @@ impl Codec {
             set_loss,
             encode_seconds: t0.elapsed().as_secs_f64(),
             lanes: 1,
+            shards: 1,
         };
         Ok(EncodeOutput { bytes, recon, syms, stats })
     }
@@ -1322,6 +1732,249 @@ impl Codec {
             }
         }
     }
+}
+
+/// Element count of a header-supplied shape with the same arithmetic
+/// [`crate::tensor::rows_cols_of`] performs (`rows × Π(trailing dims)`),
+/// but checked — any intermediate overflow is a format error instead of a
+/// panic or a silent wrap.
+fn checked_shape_count(shape: &[usize]) -> Result<usize> {
+    let cols = shape
+        .get(1..)
+        .unwrap_or(&[])
+        .iter()
+        .try_fold(1usize, |a, &d| a.checked_mul(d));
+    let count = match (shape.first(), cols) {
+        (None, _) => Some(1),
+        (Some(&rows), Some(c)) => rows.checked_mul(c),
+        _ => None,
+    };
+    count.ok_or_else(|| Error::format("tensor shape product overflows"))
+}
+
+/// The most values a container of `container_bytes` may plausibly
+/// declare: 2^14 values per container byte, floored so tiny legitimate
+/// containers never trip it. The worst *achievable* expansion (an
+/// all-zero checkpoint, where adaptive AC codes each constant symbol in a
+/// fraction of a bit) measures in the low thousands ×, so 16384× keeps
+/// ample headroom while rejecting headers forged to declare astronomical
+/// totals. Note the honest limit of this guard: decode output buffers are
+/// inherently proportional to the *declared* checkpoint size, so a forged
+/// header within the ratio cap can still demand `16384 × file size` —
+/// callers decoding untrusted containers should impose an external
+/// resource bound as well; this cap only removes the
+/// absurd-amplification corner.
+fn max_declared_values(container_bytes: usize) -> usize {
+    container_bytes.saturating_mul(1 << 14).max(1 << 22)
+}
+
+/// Untrusted-header fields every decode path validates identically before
+/// any blob is touched. Shared by [`Codec::decode`] and the random-access
+/// reader ([`sharded::decode_weight_tensor`]) so a hardening change in
+/// one can never silently miss the other.
+pub(crate) struct DecodeHeader {
+    pub(crate) format: u64,
+    pub(crate) cfg: CodecConfig,
+    pub(crate) step: u64,
+    pub(crate) ref_step: Option<u64>,
+    pub(crate) had_prev: bool,
+    pub(crate) names: Vec<String>,
+    pub(crate) shapes: Vec<Vec<usize>>,
+    pub(crate) counts: Vec<usize>,
+}
+
+/// Parse and cap-check a container header: format range, codec dimension
+/// caps ([`CodecConfig::validate_untrusted`]), backend match, checked
+/// tensor shape arithmetic, the declared-values plausibility cap and the
+/// lane bound.
+pub(crate) fn parse_untrusted_header(
+    container: &Container,
+    container_bytes: usize,
+    backend: &Backend,
+) -> Result<DecodeHeader> {
+    let h = &container.header;
+    let format = h.get("format").and_then(|v| v.as_u64()).unwrap_or(1);
+    if !(1..=3).contains(&format) {
+        return Err(Error::format(format!("unsupported container format {format}")));
+    }
+    let cfg = CodecConfig::from_json(h.req("codec")?)?;
+    // The header is untrusted input: cap every model/alphabet dimension
+    // before it reaches a shift, a multiplication or an allocation.
+    cfg.validate_untrusted()?;
+    let backend_id = h.req_str("backend")?;
+    if backend_id != backend.id() {
+        return Err(Error::codec(format!(
+            "container was encoded with backend '{backend_id}', decoder uses '{}'",
+            backend.id()
+        )));
+    }
+    let step = h.req_usize("step")? as u64;
+    let ref_step = h.get("ref_step").and_then(|v| v.as_u64());
+    let had_prev = h.req("has_prev_syms")?.as_bool().unwrap_or(false);
+
+    // Tensor layout — checked arithmetic throughout: a forged shape must
+    // error, not overflow a product or size an allocation.
+    let mut names = Vec::new();
+    let mut shapes: Vec<Vec<usize>> = Vec::new();
+    for t in h.req_arr("tensors")? {
+        names.push(t.req_str("name")?.to_string());
+        let shape: Vec<usize> = t
+            .req_arr("shape")?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| Error::format("bad dim")))
+            .collect::<Result<_>>()?;
+        shapes.push(shape);
+    }
+    let counts: Vec<usize> =
+        shapes.iter().map(|s| checked_shape_count(s)).collect::<Result<_>>()?;
+    let total: usize = counts
+        .iter()
+        .try_fold(0usize, |a, &c| a.checked_add(c))
+        .ok_or_else(|| Error::format("tensor sizes overflow"))?;
+    // Plausibility cap: see `max_declared_values` for what this does and
+    // does not bound.
+    if total > max_declared_values(container_bytes) {
+        return Err(Error::format(format!(
+            "container declares {total} values, implausible for {container_bytes} bytes"
+        )));
+    }
+    // The header's lane count is untrusted input — bound it before any
+    // index arithmetic or allocation uses it.
+    if format >= 2 && !(1..=MAX_LANES).contains(&cfg.lanes) {
+        return Err(Error::format(format!(
+            "container lane count {} outside 1..={MAX_LANES}",
+            cfg.lanes
+        )));
+    }
+    Ok(DecodeHeader { format, cfg, step, ref_step, had_prev, names, shapes, counts })
+}
+
+/// Validate the caller-supplied chain inputs against the header and
+/// return `prev_syms` filtered to "the encoder actually had them".
+pub(crate) fn check_chain_inputs<'a>(
+    hdr: &DecodeHeader,
+    reference: Option<&Checkpoint>,
+    prev_syms: Option<&'a SymbolMaps>,
+) -> Result<Option<&'a SymbolMaps>> {
+    if hdr.had_prev && prev_syms.is_none() && hdr.cfg.mode.uses_reference_context() {
+        return Err(Error::codec(
+            "container requires the reference's symbol maps (decode the chain in order)",
+        ));
+    }
+    match (hdr.ref_step, reference) {
+        (Some(rs), Some(r)) if r.step != rs => {
+            return Err(Error::codec(format!(
+                "reference step {} does not match container ref_step {rs}",
+                r.step
+            )));
+        }
+        (Some(rs), None) => {
+            return Err(Error::codec(format!("container needs reference step {rs}")));
+        }
+        _ => {}
+    }
+    Ok(prev_syms.filter(|_| hdr.had_prev))
+}
+
+/// A format-3 container's structural geometry: the shard layout, the
+/// per-shard plans, the parsed shard index, and each shard's blob cursor.
+pub(crate) struct V3Geometry {
+    pub(crate) layout: ShardLayout,
+    pub(crate) plans: Vec<ShardPlan>,
+    pub(crate) index: Vec<ShardIndexEntry>,
+    /// First blob index of each shard within `Container::blobs`.
+    pub(crate) cursors: Vec<usize>,
+}
+
+/// Parse and structurally validate a format-3 container: shard fields
+/// consistent with the tensor layout, blob count exact, and every index
+/// entry's offset/blob-count matching the recomputed layout (O(n_blobs)).
+///
+/// Per-shard CRCs are deliberately NOT checked here: on a whole-buffer
+/// read the container trailer CRC (verified by `Container::from_bytes`)
+/// already covers every payload and index byte, so re-hashing the payload
+/// would double checksum cost for no added integrity. The random-access
+/// path checks [`verify_shard_crc`] for exactly the shards it decodes —
+/// the index CRCs exist for (future) seek-based readers that never hash
+/// the whole file.
+pub(crate) fn parse_v3_geometry(
+    hdr: &DecodeHeader,
+    container: &Container,
+    raw: &[u8],
+) -> Result<V3Geometry> {
+    let h = &container.header;
+    let shard_values = h.req_usize("shard_values")?;
+    let layout = ShardLayout::new(hdr.counts.clone(), shard_values)?;
+    if layout.n_shards() != h.req_usize("n_shards")? {
+        return Err(Error::format("header n_shards does not match the tensor layout"));
+    }
+    let lanes = hdr.cfg.lanes;
+    // Derive the expected blob count WITHOUT materializing per-shard
+    // plans: Σ fragments = Σ_t |shards intersecting tensor t| (O(tensors)),
+    // all checked — so a forged header declaring billions of shards is
+    // rejected by this count before any O(n_shards) allocation happens.
+    let total_fragments = (0..layout.counts().len())
+        .try_fold(0usize, |acc, ti| acc.checked_add(layout.tensor_shards(ti).len()));
+    let expected_blobs = total_fragments
+        .and_then(|f| layout.n_shards().checked_mul(lanes).and_then(|l| f.checked_add(l)))
+        .and_then(|n| n.checked_mul(3))
+        .and_then(|n| n.checked_add(1))
+        .ok_or_else(|| Error::format("format-3 blob count overflows"))?;
+    if container.blobs.len() != expected_blobs {
+        return Err(Error::format(format!(
+            "format-3 container has {} blobs, layout implies {expected_blobs}",
+            container.blobs.len()
+        )));
+    }
+    // Blob count matched the actual (size-bounded) container, so n_shards
+    // is now known small; building the plans is safe.
+    let plans: Vec<ShardPlan> =
+        (0..layout.n_shards()).map(|s| ShardPlan::new(&layout, s, lanes)).collect();
+    let index = shard::index_from_bytes(container.blob(expected_blobs - 1)?, plans.len())?;
+
+    // Header length from the raw framing (byte-exact, unlike
+    // re-serializing the parsed header).
+    let header_len = u32::from_le_bytes(raw[8..12].try_into().unwrap()) as u64;
+    let mut offset = 8 + 4 + header_len + 4;
+    let mut cursor = 0usize;
+    let mut cursors = Vec::with_capacity(plans.len());
+    for (s, (sp, e)) in plans.iter().zip(&index).enumerate() {
+        if e.offset != offset {
+            return Err(Error::format(format!(
+                "shard {s} index offset {} does not match blob layout {offset}",
+                e.offset
+            )));
+        }
+        let n = 3 * (sp.fragments().len() + lanes);
+        if e.n_blobs as usize != n {
+            return Err(Error::format(format!(
+                "shard {s} index declares {} blobs, layout implies {n}",
+                e.n_blobs
+            )));
+        }
+        cursors.push(cursor);
+        for b in &container.blobs[cursor..cursor + n] {
+            offset += 4 + b.len() as u64;
+        }
+        cursor += n;
+    }
+    Ok(V3Geometry { layout, plans, index, cursors })
+}
+
+/// Check shard `s`'s index CRC against its framed blob bytes (the
+/// random-access integrity check — see [`parse_v3_geometry`]).
+pub(crate) fn verify_shard_crc(container: &Container, geom: &V3Geometry, s: usize) -> Result<()> {
+    let sp = &geom.plans[s];
+    let n = 3 * (sp.fragments().len() + sp.lanes());
+    let cursor = geom.cursors[s];
+    let mut ib = ShardIndexBuilder::new(geom.index[s].offset);
+    for b in &container.blobs[cursor..cursor + n] {
+        ib.add_blob(b);
+    }
+    if ib.finish().crc32 != geom.index[s].crc32 {
+        return Err(Error::format(format!("shard {s} CRC mismatch in shard index")));
+    }
+    Ok(())
 }
 
 /// Apply (or skip) the log transform for the second-moment set.
@@ -1567,6 +2220,111 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn v3_roundtrip_chain_with_mid_tensor_shards() {
+        // Shard budget of 40 positions × 12 bytes: boundaries land inside
+        // every tensor of `layers()` (24·16=384, 40, 64 elements).
+        for mode in [ContextMode::Lstm, ContextMode::Order0] {
+            let cfg = CodecConfig { shard_bytes: 40 * 12, ..small_cfg(mode) };
+            let codec = Codec::new(cfg, Backend::Native);
+            let c0 = Checkpoint::synthetic(10, &layers(), 71);
+            let c1 = Checkpoint::synthetic(20, &layers(), 72);
+            let e0 = codec.encode(&c0, None, None).unwrap();
+            assert!(e0.stats.shards > 1, "expected multiple shards");
+            let (d0, s0) = Codec::decode(&Backend::Native, &e0.bytes, None, None).unwrap();
+            assert_eq!(d0, e0.recon, "{mode:?} v3 intra");
+            assert_eq!(s0, e0.syms);
+            let e1 = codec.encode(&c1, Some(&e0.recon), Some(&e0.syms)).unwrap();
+            let (d1, s1) =
+                Codec::decode(&Backend::Native, &e1.bytes, Some(&d0), Some(&s0)).unwrap();
+            assert_eq!(d1, e1.recon, "{mode:?} v3 delta");
+            assert_eq!(s1, e1.syms);
+        }
+    }
+
+    #[test]
+    fn v3_single_shard_payload_equals_v2() {
+        // shard_bytes covering the whole checkpoint ⇒ one shard whose
+        // payload blobs are byte-identical to the format-2 container; v3
+        // adds only the header shard fields and the trailing shard index.
+        let base = small_cfg(ContextMode::Lstm);
+        let v2 = Codec::new(base.clone(), Backend::Native);
+        let v3 = Codec::new(
+            CodecConfig { shard_bytes: usize::MAX / 2, ..base },
+            Backend::Native,
+        );
+        let c0 = Checkpoint::synthetic(3, &layers(), 91);
+        let c1 = Checkpoint::synthetic(4, &layers(), 92);
+        let e2a = v2.encode(&c0, None, None).unwrap();
+        let e3a = v3.encode(&c0, None, None).unwrap();
+        assert_eq!(e3a.stats.shards, 1);
+        assert_eq!(e2a.recon, e3a.recon, "front-end is shard-invariant at one shard");
+        assert_eq!(e2a.syms, e3a.syms);
+        let p2 = Container::from_bytes(&e2a.bytes).unwrap();
+        let p3 = Container::from_bytes(&e3a.bytes).unwrap();
+        assert_eq!(p3.blobs.len(), p2.blobs.len() + 1, "v3 = v2 payload + index");
+        assert_eq!(&p3.blobs[..p2.blobs.len()], p2.blobs.as_slice());
+
+        // Same on a delta frame (warmup paths included).
+        let e2b = v2.encode(&c1, Some(&e2a.recon), Some(&e2a.syms)).unwrap();
+        let e3b = v3.encode(&c1, Some(&e3a.recon), Some(&e3a.syms)).unwrap();
+        let p2 = Container::from_bytes(&e2b.bytes).unwrap();
+        let p3 = Container::from_bytes(&e3b.bytes).unwrap();
+        assert_eq!(&p3.blobs[..p2.blobs.len()], p2.blobs.as_slice());
+    }
+
+    #[test]
+    fn v3_shard_counts_recorded_in_header_and_stats() {
+        let cfg = CodecConfig { shard_bytes: 100 * 12, ..small_cfg(ContextMode::Order0) };
+        let codec = Codec::new(cfg, Backend::Native);
+        let c0 = Checkpoint::synthetic(1, &layers(), 13);
+        let total: usize = layers().iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+        let e0 = codec.encode(&c0, None, None).unwrap();
+        assert_eq!(e0.stats.shards, total.div_ceil(100));
+        let container = Container::from_bytes(&e0.bytes).unwrap();
+        assert_eq!(
+            container.header.req_usize("n_shards").unwrap(),
+            total.div_ceil(100)
+        );
+        assert_eq!(container.header.req_usize("shard_values").unwrap(), 100);
+        assert_eq!(
+            container.header.get("format").and_then(|v| v.as_u64()),
+            Some(3)
+        );
+    }
+
+    #[test]
+    fn forged_header_dimensions_error_cleanly() {
+        // A corrupt-but-CRC-valid header must produce Errors, not panics
+        // or giant allocations (decode hardening).
+        let codec = Codec::new(small_cfg(ContextMode::Order0), Backend::Native);
+        let c0 = Checkpoint::synthetic(1, &layers(), 14);
+        let bytes = codec.encode(&c0, None, None).unwrap().bytes;
+        let container = Container::from_bytes(&bytes).unwrap();
+        let mutate = |key: &str, val: Json| {
+            let mut c = container.clone();
+            if let Json::Obj(map) = &mut c.header {
+                if key == "bits" || key == "window" || key == "batch" {
+                    if let Some(Json::Obj(codec_map)) = map.get_mut("codec") {
+                        codec_map.insert(key.to_string(), val);
+                    }
+                } else {
+                    map.insert(key.to_string(), val);
+                }
+            }
+            Codec::decode(&Backend::Native, &c.to_bytes(), None, None)
+        };
+        assert!(mutate("bits", Json::num(200.0)).is_err());
+        assert!(mutate("window", Json::num(4.0)).is_err());
+        assert!(mutate("batch", Json::num(1e12)).is_err());
+        // Implausibly huge declared tensor.
+        let huge = Json::Arr(vec![Json::obj(vec![
+            ("name", Json::str("w")),
+            ("shape", Json::Arr(vec![Json::num(1e9), Json::num(1e9)])),
+        ])]);
+        assert!(mutate("tensors", huge).is_err());
     }
 
     #[test]

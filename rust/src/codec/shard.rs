@@ -1,0 +1,474 @@
+//! Shard partitioning for streaming containers (container format 3).
+//!
+//! Format 2 parallelized the entropy stage by splitting a parameter set's
+//! symbol sequence into *lanes*, but the whole checkpoint still had to be
+//! resident to encode or decode. Format 3 adds an outer partition: the
+//! shared per-set position space is cut into fixed-budget **shards**
+//! ([`ShardLayout`]), and every shard is a fully independent coding unit —
+//! its own k-means center tables (fitted per *fragment*, the intersection
+//! of a tensor with the shard's position range), its own `3 × lanes` lane
+//! streams, and its own CRC recorded in the shard index appended before
+//! the container trailer. Peak encoder memory is therefore bounded by the
+//! shard budget instead of the checkpoint size, and any shard (hence any
+//! tensor) can be decoded without touching the rest of the container.
+//!
+//! A [`ShardPlan`] describes one shard: its fragment list plus a
+//! [`LanePlan`] over the fragment lengths. [`ShardPlan::iter_lane`] walks
+//! a lane's positions as [`Pos`] records carrying both the
+//! fragment-relative coordinates (which index the shard-local symbol
+//! buffers) and the tensor-absolute coordinates (which index the
+//! full-tensor context extractors and reference symbol maps).
+//!
+//! The single-shard layout ([`ShardLayout::whole`]) reproduces the
+//! format-2 walk exactly — one fragment per tensor, fragment index ==
+//! tensor index — which is how the format-2 code path shares the lane
+//! coders with format 3 without changing a single output byte.
+
+use super::lanes::LanePlan;
+use crate::util::crc32::Crc32;
+use crate::{Error, Result};
+use std::ops::Range;
+
+/// A contiguous run of one tensor's elements inside one shard.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fragment {
+    /// Tensor index (name-sorted order, shared by the three sets).
+    pub tensor: usize,
+    /// First element (tensor-relative).
+    pub start: usize,
+    /// Element count (0 only for empty tensors, which still carry a center
+    /// table so the blob layout stays derivable from the header).
+    pub len: usize,
+}
+
+/// The shard partition of one checkpoint's per-set position space.
+#[derive(Clone, Debug)]
+pub struct ShardLayout {
+    /// Element count per tensor.
+    counts: Vec<usize>,
+    /// Prefix sums of `counts`; `offsets[i]` is tensor `i`'s first global
+    /// position, `offsets[counts.len()]` the total.
+    offsets: Vec<usize>,
+    /// Positions per shard (≥ 1).
+    shard_values: usize,
+    n_shards: usize,
+}
+
+impl ShardLayout {
+    /// Partition `counts` into shards of `shard_values` positions each
+    /// (the last shard may be shorter). `shard_values` must be ≥ 1.
+    pub fn new(counts: Vec<usize>, shard_values: usize) -> Result<Self> {
+        if shard_values == 0 {
+            return Err(Error::format("shard_values must be >= 1"));
+        }
+        let mut offsets = Vec::with_capacity(counts.len() + 1);
+        let mut acc = 0usize;
+        offsets.push(0);
+        for &c in &counts {
+            acc += c;
+            offsets.push(acc);
+        }
+        let n_shards = if acc == 0 { 1 } else { acc.div_ceil(shard_values) };
+        Ok(Self { counts, offsets, shard_values, n_shards })
+    }
+
+    /// The trivial single-shard layout (used by the format-2 code path).
+    pub fn whole(counts: Vec<usize>) -> Self {
+        let total: usize = counts.iter().sum();
+        Self::new(counts, total.max(1)).expect("shard_values >= 1 by construction")
+    }
+
+    /// Total positions across all tensors.
+    pub fn total(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+
+    /// Number of shards (≥ 1 even for empty checkpoints).
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// Positions per shard.
+    pub fn shard_values(&self) -> usize {
+        self.shard_values
+    }
+
+    /// Per-tensor element counts.
+    pub fn counts(&self) -> &[usize] {
+        &self.counts
+    }
+
+    /// Global position range of shard `s`.
+    pub fn shard_range(&self, s: usize) -> Range<usize> {
+        debug_assert!(s < self.n_shards);
+        let start = (s * self.shard_values).min(self.total());
+        let end = ((s + 1) * self.shard_values).min(self.total());
+        start..end
+    }
+
+    /// The shard that owns global position `pos` (positions at or past the
+    /// end clamp to the last shard — this is where trailing empty tensors
+    /// park their center tables).
+    fn shard_of(&self, pos: usize) -> usize {
+        (pos / self.shard_values).min(self.n_shards - 1)
+    }
+
+    /// Fragments of shard `s`, in tensor order: every tensor whose element
+    /// range intersects the shard, plus every *empty* tensor whose global
+    /// offset falls in the shard (so each tensor's center table appears in
+    /// exactly one shard and the decoder can recompute the blob layout
+    /// from the header alone).
+    pub fn fragments(&self, s: usize) -> Vec<Fragment> {
+        let range = self.shard_range(s);
+        let mut out = Vec::new();
+        for (ti, &count) in self.counts.iter().enumerate() {
+            if count == 0 {
+                if self.shard_of(self.offsets[ti]) == s {
+                    out.push(Fragment { tensor: ti, start: 0, len: 0 });
+                }
+                continue;
+            }
+            let t0 = self.offsets[ti];
+            let t1 = self.offsets[ti + 1];
+            let lo = range.start.max(t0);
+            let hi = range.end.min(t1);
+            if lo < hi {
+                out.push(Fragment { tensor: ti, start: lo - t0, len: hi - lo });
+            }
+        }
+        out
+    }
+
+    /// The shards whose position ranges intersect tensor `ti` (per-tensor
+    /// random access decodes exactly these). Empty tensors resolve to the
+    /// single shard holding their (empty) center table.
+    pub fn tensor_shards(&self, ti: usize) -> Range<usize> {
+        debug_assert!(ti < self.counts.len());
+        if self.counts[ti] == 0 {
+            let s = self.shard_of(self.offsets[ti]);
+            return s..s + 1;
+        }
+        let first = self.shard_of(self.offsets[ti]);
+        let last = self.shard_of(self.offsets[ti + 1] - 1);
+        first..last + 1
+    }
+}
+
+/// One position of a shard lane walk: both coordinate systems at once.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Pos {
+    /// Fragment index within the shard (indexes shard-local buffers).
+    pub frag: usize,
+    /// Element index within the fragment.
+    pub local: usize,
+    /// Tensor index (indexes extractors and reference symbol maps).
+    pub tensor: usize,
+    /// Element index within the tensor (`fragment.start + local`).
+    pub elem: usize,
+}
+
+/// One shard's coding plan: its fragments plus the lane partition of its
+/// positions. For the single-shard layout this walks positions exactly
+/// like the format-2 [`LanePlan`] over whole tensors.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    fragments: Vec<Fragment>,
+    plan: LanePlan,
+}
+
+impl ShardPlan {
+    /// Plan shard `s` of `layout` with `lanes` coding lanes.
+    pub fn new(layout: &ShardLayout, s: usize, lanes: usize) -> Self {
+        let fragments = layout.fragments(s);
+        let lens: Vec<usize> = fragments.iter().map(|f| f.len).collect();
+        Self { fragments, plan: LanePlan::new(lens, lanes) }
+    }
+
+    /// The shard's fragments, in tensor order.
+    pub fn fragments(&self) -> &[Fragment] {
+        &self.fragments
+    }
+
+    /// Number of coding lanes.
+    pub fn lanes(&self) -> usize {
+        self.plan.lanes()
+    }
+
+    /// Total positions in the shard.
+    pub fn total(&self) -> usize {
+        self.plan.total()
+    }
+
+    /// Symbol count of `lane`.
+    pub fn lane_len(&self, lane: usize) -> usize {
+        self.plan.lane_range(lane).len()
+    }
+
+    /// Walk `lane`'s positions in coding order.
+    pub fn iter_lane(&self, lane: usize) -> impl Iterator<Item = Pos> + '_ {
+        self.plan.iter_lane(lane).map(move |(fi, local)| {
+            let f = self.fragments[fi];
+            Pos { frag: fi, local, tensor: f.tensor, elem: f.start + local }
+        })
+    }
+}
+
+/// One row of the format-3 shard index: where the shard's blobs start in
+/// the file, how many blobs it owns, and the CRC-32 over its framed blob
+/// bytes (each blob's `u32` length prefix followed by its payload).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardIndexEntry {
+    /// File offset of the shard's first blob length field.
+    pub offset: u64,
+    /// Blob count (`3 × (fragments + lanes)`).
+    pub n_blobs: u32,
+    /// CRC-32 over the shard's framed blob bytes.
+    pub crc32: u32,
+}
+
+/// Incrementally accumulates one shard's index row while its blobs are
+/// written (the CRC covers the same framed bytes the container writes).
+#[derive(Clone, Debug)]
+pub struct ShardIndexBuilder {
+    offset: u64,
+    n_blobs: u32,
+    crc: Crc32,
+}
+
+impl ShardIndexBuilder {
+    /// Start a shard whose first blob lands at file `offset`.
+    pub fn new(offset: u64) -> Self {
+        Self { offset, n_blobs: 0, crc: Crc32::new() }
+    }
+
+    /// Fold one blob (as framed in the container: length then payload).
+    pub fn add_blob(&mut self, blob: &[u8]) {
+        self.crc.update(&(blob.len() as u32).to_le_bytes());
+        self.crc.update(blob);
+        self.n_blobs += 1;
+    }
+
+    /// Finish into an index row.
+    pub fn finish(self) -> ShardIndexEntry {
+        ShardIndexEntry { offset: self.offset, n_blobs: self.n_blobs, crc32: self.crc.finalize() }
+    }
+}
+
+/// Serialize the shard index blob (all little-endian):
+///
+/// ```text
+/// n_shards  u32
+/// entries   n × (offset u64, n_blobs u32, crc32 u32)
+/// ```
+pub fn index_to_bytes(entries: &[ShardIndexEntry]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + entries.len() * 16);
+    out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+    for e in entries {
+        out.extend_from_slice(&e.offset.to_le_bytes());
+        out.extend_from_slice(&e.n_blobs.to_le_bytes());
+        out.extend_from_slice(&e.crc32.to_le_bytes());
+    }
+    out
+}
+
+/// Parse a shard index blob, enforcing the expected shard count (known
+/// from the header) before any per-entry work — a corrupt count cannot
+/// drive allocation.
+pub fn index_from_bytes(bytes: &[u8], expect_shards: usize) -> Result<Vec<ShardIndexEntry>> {
+    if bytes.len() < 4 {
+        return Err(Error::format("shard index blob too short"));
+    }
+    let n = u32::from_le_bytes(bytes[..4].try_into().unwrap()) as usize;
+    if n != expect_shards {
+        return Err(Error::format(format!(
+            "shard index declares {n} shards, header says {expect_shards}"
+        )));
+    }
+    if bytes.len() != 4 + n * 16 {
+        return Err(Error::format("shard index blob length mismatch"));
+    }
+    let mut out = Vec::with_capacity(n);
+    for chunk in bytes[4..].chunks_exact(16) {
+        out.push(ShardIndexEntry {
+            offset: u64::from_le_bytes(chunk[..8].try_into().unwrap()),
+            n_blobs: u32::from_le_bytes(chunk[8..12].try_into().unwrap()),
+            crc32: u32::from_le_bytes(chunk[12..16].try_into().unwrap()),
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn whole_layout_is_one_shard_of_whole_tensors() {
+        let layout = ShardLayout::whole(vec![5, 0, 3]);
+        assert_eq!(layout.n_shards(), 1);
+        assert_eq!(layout.total(), 8);
+        let frags = layout.fragments(0);
+        assert_eq!(
+            frags,
+            vec![
+                Fragment { tensor: 0, start: 0, len: 5 },
+                Fragment { tensor: 1, start: 0, len: 0 },
+                Fragment { tensor: 2, start: 0, len: 3 },
+            ]
+        );
+        // The single-shard walk equals the format-2 LanePlan walk.
+        let sp = ShardPlan::new(&layout, 0, 3);
+        let walked: Vec<(usize, usize)> =
+            (0..3).flat_map(|l| sp.iter_lane(l)).map(|p| (p.tensor, p.elem)).collect();
+        let plan = LanePlan::new(vec![5, 0, 3], 3);
+        let expect: Vec<(usize, usize)> = (0..3).flat_map(|l| plan.iter_lane(l)).collect();
+        assert_eq!(walked, expect);
+        // frag/local mirror tensor/elem in the single-shard case.
+        for p in (0..3).flat_map(|l| sp.iter_lane(l)) {
+            assert_eq!((p.frag, p.local), (p.tensor, p.elem));
+        }
+    }
+
+    #[test]
+    fn mid_tensor_boundaries_split_fragments() {
+        // 10 positions, shards of 4: [0,4) [4,8) [8,10).
+        let layout = ShardLayout::new(vec![6, 4], 4).unwrap();
+        assert_eq!(layout.n_shards(), 3);
+        assert_eq!(
+            layout.fragments(0),
+            vec![Fragment { tensor: 0, start: 0, len: 4 }]
+        );
+        assert_eq!(
+            layout.fragments(1),
+            vec![
+                Fragment { tensor: 0, start: 4, len: 2 },
+                Fragment { tensor: 1, start: 0, len: 2 },
+            ]
+        );
+        assert_eq!(
+            layout.fragments(2),
+            vec![Fragment { tensor: 1, start: 2, len: 2 }]
+        );
+        assert_eq!(layout.tensor_shards(0), 0..2);
+        assert_eq!(layout.tensor_shards(1), 1..3);
+    }
+
+    #[test]
+    fn shard_larger_than_checkpoint_degenerates_to_one() {
+        let layout = ShardLayout::new(vec![3, 2], 1000).unwrap();
+        assert_eq!(layout.n_shards(), 1);
+        assert_eq!(layout.shard_range(0), 0..5);
+        assert_eq!(layout.tensor_shards(1), 0..1);
+    }
+
+    #[test]
+    fn empty_checkpoint_has_one_shard_with_all_center_slots() {
+        let layout = ShardLayout::new(vec![0, 0], 7).unwrap();
+        assert_eq!(layout.n_shards(), 1);
+        assert_eq!(layout.fragments(0).len(), 2);
+        assert_eq!(layout.tensor_shards(0), 0..1);
+        let sp = ShardPlan::new(&layout, 0, 2);
+        assert_eq!(sp.total(), 0);
+        assert_eq!(sp.iter_lane(0).count(), 0);
+    }
+
+    #[test]
+    fn zero_shard_values_rejected() {
+        assert!(ShardLayout::new(vec![1], 0).is_err());
+    }
+
+    #[test]
+    fn empty_tensor_center_slot_lands_in_exactly_one_shard() {
+        // Empty tensor sits between two full ones; shards of 2.
+        let layout = ShardLayout::new(vec![3, 0, 3], 2).unwrap();
+        let mut seen = vec![0usize; 3];
+        for s in 0..layout.n_shards() {
+            for f in layout.fragments(s) {
+                seen[f.tensor] += 1;
+                if f.tensor == 1 {
+                    assert_eq!(f.len, 0);
+                }
+            }
+        }
+        // Tensors 0 and 2 span shards; tensor 1 appears exactly once.
+        assert_eq!(seen[1], 1);
+        assert!(seen[0] >= 1 && seen[2] >= 1);
+    }
+
+    #[test]
+    fn index_roundtrip_and_validation() {
+        let entries = vec![
+            ShardIndexEntry { offset: 64, n_blobs: 9, crc32: 0xDEAD_BEEF },
+            ShardIndexEntry { offset: 4096, n_blobs: 12, crc32: 1 },
+        ];
+        let bytes = index_to_bytes(&entries);
+        assert_eq!(index_from_bytes(&bytes, 2).unwrap(), entries);
+        assert!(index_from_bytes(&bytes, 3).is_err());
+        assert!(index_from_bytes(&bytes[..bytes.len() - 1], 2).is_err());
+        assert!(index_from_bytes(&bytes[..3], 2).is_err());
+    }
+
+    #[test]
+    fn builder_crc_covers_framed_blob_bytes() {
+        let mut b = ShardIndexBuilder::new(100);
+        b.add_blob(&[1, 2, 3]);
+        b.add_blob(&[]);
+        let e = b.finish();
+        assert_eq!(e.offset, 100);
+        assert_eq!(e.n_blobs, 2);
+        let mut framed = Vec::new();
+        framed.extend_from_slice(&3u32.to_le_bytes());
+        framed.extend_from_slice(&[1, 2, 3]);
+        framed.extend_from_slice(&0u32.to_le_bytes());
+        assert_eq!(e.crc32, crate::util::crc32::hash(&framed));
+    }
+
+    #[test]
+    fn prop_fragments_partition_positions_and_iteration_matches() {
+        forall("shard fragments partition", 60, |g| {
+            let n_tensors = g.usize_range(1, 6);
+            let counts: Vec<usize> = (0..n_tensors).map(|_| g.usize_range(0, 30)).collect();
+            let total: usize = counts.iter().sum();
+            let shard_values = g.usize_range(1, (total + 5).max(2));
+            let lanes = g.usize_range(1, 5);
+            let layout = ShardLayout::new(counts.clone(), shard_values).unwrap();
+
+            // Every (tensor, elem) position appears exactly once across all
+            // shards and lanes, in global order within a shard.
+            let mut walked: Vec<(usize, usize)> = Vec::new();
+            let mut center_slots = vec![0usize; n_tensors];
+            for s in 0..layout.n_shards() {
+                let sp = ShardPlan::new(&layout, s, lanes);
+                for f in sp.fragments() {
+                    if f.len == 0 {
+                        center_slots[f.tensor] += 1;
+                    }
+                }
+                for lane in 0..lanes {
+                    for p in sp.iter_lane(lane) {
+                        assert_eq!(p.elem, sp.fragments()[p.frag].start + p.local);
+                        walked.push((p.tensor, p.elem));
+                    }
+                }
+            }
+            let mut expect: Vec<(usize, usize)> = Vec::new();
+            for (ti, &c) in counts.iter().enumerate() {
+                for e in 0..c {
+                    expect.push((ti, e));
+                }
+            }
+            walked.sort_unstable();
+            expect.sort_unstable();
+            assert_eq!(walked, expect);
+            // Empty tensors get exactly one center slot; full tensors get
+            // one fragment per intersecting shard.
+            for (ti, &c) in counts.iter().enumerate() {
+                if c == 0 {
+                    assert_eq!(center_slots[ti], 1, "tensor {ti}");
+                    assert_eq!(layout.tensor_shards(ti).len(), 1);
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,581 @@
+//! Streaming sharded encode and random-access decode (container
+//! format 3) for larger-than-RAM checkpoints.
+//!
+//! The in-memory pipeline ([`Codec::prepare`] / [`Codec::encode_prepared`])
+//! holds the whole residual, reconstruction and symbol maps at once. This
+//! module encodes straight from a [`ShardSource`] — an abstract range-read
+//! interface over a checkpoint's tensors — and pushes each shard's blobs
+//! through [`crate::container::ContainerStreamWriter`] as they finish, so
+//! peak memory is bounded by
+//!
+//! - one shard of values per set (the `shard_bytes` budget),
+//! - one tensor during the per-tensor pruning-statistics pass
+//!   (`median(|W|)` and `mean(|v_t|)` are tensor-global, Eq. 4–5), and
+//! - the reference symbol maps *iff* a context mode is used (u16 per
+//!   position; `Order0` needs nothing and is fully streaming).
+//!
+//! The streamed container is **byte-identical** to the one the in-memory
+//! path writes for the same inputs: both build the header through
+//! `Codec::make_header`, prune through the shared per-element predicates
+//! ([`crate::prune::keep_weight`] / [`crate::prune::keep_momentum`]),
+//! quantize identical fragment slices, and entropy-code through
+//! `Codec::encode_shard_blobs`. The equivalence is pinned by tests here
+//! and by the round-trip property suite.
+//!
+//! [`decode_weight_tensor`] is the random-access read path: using the
+//! shard index it entropy-decodes only the shards a tensor intersects,
+//! instead of the whole container.
+
+use super::shard::{index_to_bytes, ShardIndexBuilder};
+use super::{
+    check_chain_inputs, checked_shape_count, maybe_log, parse_untrusted_header,
+    parse_v3_geometry, verify_shard_crc, Codec, SetStatsAcc, ShardLayout, ShardPlan,
+    SymbolMaps,
+};
+use crate::checkpoint::Checkpoint;
+use crate::codec::EncodeStats;
+use crate::container::{centers_from_bytes, Container, ContainerStreamWriter};
+use crate::lstm::Backend;
+use crate::prune::{self, PruneConfig, PruneStats};
+use crate::quant::{self, Quantized};
+use crate::tensor::Tensor;
+use crate::util::pool::{self, Task};
+use crate::util::stats;
+use crate::{Error, Result};
+use std::io::Write;
+use std::ops::Range;
+
+/// Range-read access to one checkpoint's three parameter sets. The
+/// layout (`names`/`shapes`, name-sorted, shared by the sets) is known up
+/// front; values are fetched on demand so implementations can be backed
+/// by memory ([`CheckpointSource`]) or by a file on disk
+/// ([`crate::checkpoint::CheckpointFileReader`]).
+pub trait ShardSource {
+    /// Training step of the checkpoint.
+    fn step(&self) -> u64;
+    /// Tensor names, ascending.
+    fn names(&self) -> &[String];
+    /// Tensor shapes, parallel to [`ShardSource::names`].
+    fn shapes(&self) -> &[Vec<usize>];
+    /// Values of `set` (0 = weights, 1 = first moment, 2 = second moment)
+    /// of tensor `tensor`, elements `range`.
+    fn read(&mut self, set: usize, tensor: usize, range: Range<usize>) -> Result<Vec<f32>>;
+}
+
+/// [`ShardSource`] over an in-memory [`Checkpoint`] (used by tests and by
+/// callers that have the checkpoint resident anyway but want format-3
+/// output through the same code path).
+pub struct CheckpointSource<'a> {
+    step: u64,
+    names: Vec<String>,
+    shapes: Vec<Vec<usize>>,
+    sets: [Vec<&'a [f32]>; 3],
+}
+
+impl<'a> CheckpointSource<'a> {
+    /// Wrap `ck`, validating that the three sets share one tensor layout.
+    pub fn new(ck: &'a Checkpoint) -> Result<Self> {
+        if !ck.weights.same_layout(&ck.exp_avg) || !ck.weights.same_layout(&ck.exp_avg_sq) {
+            return Err(Error::shape("parameter sets must share one tensor layout"));
+        }
+        let names: Vec<String> = ck.weights.iter().map(|e| e.name.clone()).collect();
+        let shapes: Vec<Vec<usize>> =
+            ck.weights.iter().map(|e| e.tensor.shape().to_vec()).collect();
+        let sets = [
+            ck.weights.iter().map(|e| e.tensor.data()).collect(),
+            ck.exp_avg.iter().map(|e| e.tensor.data()).collect(),
+            ck.exp_avg_sq.iter().map(|e| e.tensor.data()).collect(),
+        ];
+        Ok(Self { step: ck.step, names, shapes, sets })
+    }
+}
+
+impl ShardSource for CheckpointSource<'_> {
+    fn step(&self) -> u64 {
+        self.step
+    }
+    fn names(&self) -> &[String] {
+        &self.names
+    }
+    fn shapes(&self) -> &[Vec<usize>] {
+        &self.shapes
+    }
+    fn read(&mut self, set: usize, tensor: usize, range: Range<usize>) -> Result<Vec<f32>> {
+        let data = self
+            .sets
+            .get(set)
+            .and_then(|s| s.get(tensor))
+            .ok_or_else(|| Error::shape("shard source read out of bounds"))?;
+        data.get(range)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| Error::shape("shard source range out of bounds"))
+    }
+}
+
+/// `src.read` with a defensive length check.
+fn read_checked(
+    src: &mut dyn ShardSource,
+    set: usize,
+    tensor: usize,
+    range: Range<usize>,
+) -> Result<Vec<f32>> {
+    let n = range.len();
+    let v = src.read(set, tensor, range)?;
+    if v.len() != n {
+        return Err(Error::shape("shard source returned wrong value count"));
+    }
+    Ok(v)
+}
+
+/// Per-tensor pruning state computed in the statistics pass.
+struct PruneScalars {
+    /// `median(|W|)` per tensor (Eq. 4).
+    med: Vec<f64>,
+    /// `β · mean(|v_t|)` per tensor (Eq. 5).
+    r_o: Vec<f64>,
+    stats: PruneStats,
+}
+
+/// Encode `current` straight from a [`ShardSource`] into `out` as a
+/// format-3 container, shard by shard. `reference` (same layout) provides
+/// the delta reference for non-intra frames; `prev_syms` the reference's
+/// symbol maps for the context modes. Requires a sharded codec config
+/// (`shard_bytes > 0`).
+///
+/// The output bytes equal `codec.encode(...)` for the same inputs; only
+/// the peak memory differs. The chain state (`recon`, `syms`) is *not*
+/// produced — chained delta encoding of larger-than-RAM checkpoints keeps
+/// its reference on disk and re-reads it per shard.
+pub fn encode_streaming<W: Write>(
+    codec: &Codec,
+    current: &mut dyn ShardSource,
+    mut reference: Option<&mut dyn ShardSource>,
+    prev_syms: Option<&SymbolMaps>,
+    out: W,
+) -> Result<EncodeStats> {
+    let t0 = std::time::Instant::now();
+    let cfg = codec.cfg();
+    if !cfg.sharded() {
+        return Err(Error::config("streaming encode requires codec.shard_bytes > 0"));
+    }
+    let lanes = cfg.effective_lanes();
+    let names = current.names().to_vec();
+    let shapes = current.shapes().to_vec();
+    if names.windows(2).any(|w| w[0] >= w[1]) {
+        return Err(Error::format("shard source tensors must be strictly name-sorted"));
+    }
+    if let Some(r) = reference.as_deref() {
+        if r.names() != names.as_slice() || r.shapes() != shapes.as_slice() {
+            return Err(Error::shape("checkpoint layouts differ between current and reference"));
+        }
+    }
+    let counts: Vec<usize> =
+        shapes.iter().map(|s| checked_shape_count(s)).collect::<Result<_>>()?;
+    let total: usize = counts.iter().sum();
+    codec.check_ref_maps(prev_syms, &counts)?;
+
+    let layout = ShardLayout::new(counts.clone(), cfg.shard_values())?;
+    let plans: Vec<ShardPlan> =
+        (0..layout.n_shards()).map(|s| ShardPlan::new(&layout, s, lanes)).collect();
+    let extractors = codec.build_extractors_from_shapes(&shapes)?;
+
+    // Intra frames keep all weights (alpha = 0), mirroring the in-memory
+    // front end exactly.
+    let pcfg = if reference.is_some() {
+        cfg.prune
+    } else {
+        PruneConfig { alpha: 0.0, ..cfg.prune }
+    };
+
+    // Pass A — per-tensor pruning scalars and the density counters the
+    // header carries. One tensor resident at a time.
+    let scalars = prune_scalars(current, reference.as_deref_mut(), &counts, &pcfg)?;
+
+    // Header (identical construction to the prepare path).
+    let mut hdr_cfg = cfg.clone();
+    hdr_cfg.lanes = lanes;
+    let raw_bytes = 3 * 4 * total;
+    let header = codec.make_header(
+        3,
+        current.step(),
+        reference.as_deref().map(|r| r.step()),
+        prev_syms.is_some(),
+        Codec::tensors_json(&names, &shapes),
+        raw_bytes,
+        scalars.stats.weight_density(),
+        scalars.stats.momentum_density(),
+        hdr_cfg.to_json(),
+        Some((layout.shard_values(), layout.n_shards())),
+    );
+
+    // Pass B — per shard: read, delta, prune, quantize, entropy-code and
+    // stream out. Only the shard under work is resident.
+    let n_blobs: usize =
+        plans.iter().map(|sp| 3 * (sp.fragments().len() + lanes)).sum::<usize>() + 1;
+    let mut w = ContainerStreamWriter::new(out, &header, n_blobs as u32)?;
+    let mut index = Vec::with_capacity(plans.len());
+    let mut acc = SetStatsAcc::default();
+    for sp in &plans {
+        let (frag_syms, frag_centers) =
+            quantize_shard(codec, current, reference.as_deref_mut(), sp, &pcfg, &scalars)?;
+        let syms_refs: [Vec<&[u16]>; 3] =
+            std::array::from_fn(|k| frag_syms[k].iter().map(|v| v.as_slice()).collect());
+        let blobs = codec.encode_shard_blobs(
+            sp,
+            &extractors,
+            prev_syms,
+            [&frag_centers[0], &frag_centers[1], &frag_centers[2]],
+            [&syms_refs[0], &syms_refs[1], &syms_refs[2]],
+        )?;
+        let mut ib = ShardIndexBuilder::new(w.offset());
+        for blob in &blobs.blobs {
+            ib.add_blob(blob);
+            w.push_blob(blob)?;
+        }
+        index.push(ib.finish());
+        acc.add(&blobs);
+    }
+    w.push_blob(&index_to_bytes(&index))?;
+    let total_bytes = w.finish()?;
+    Ok(acc.into_stats(
+        raw_bytes,
+        total_bytes as usize,
+        scalars.stats.weight_density(),
+        scalars.stats.momentum_density(),
+        t0.elapsed().as_secs_f64(),
+        lanes,
+        plans.len(),
+    ))
+}
+
+/// Pass A of the streaming encode: per-tensor `median(|W|)` and momentum
+/// thresholds plus the aggregate keep counters — the tensor-global inputs
+/// of Eq. 4–5 that fragments cannot compute locally.
+fn prune_scalars(
+    current: &mut dyn ShardSource,
+    mut reference: Option<&mut dyn ShardSource>,
+    counts: &[usize],
+    pcfg: &PruneConfig,
+) -> Result<PruneScalars> {
+    let n = counts.len();
+    let total: usize = counts.iter().sum();
+    let mut out = PruneScalars {
+        med: vec![0.0; n],
+        r_o: vec![0.0; n],
+        stats: PruneStats::default(),
+    };
+    if !pcfg.enabled {
+        out.stats = PruneStats { total, kept_weights: total, kept_momentum: total };
+        return Ok(out);
+    }
+    for ti in 0..n {
+        let c = counts[ti];
+        let w = read_checked(current, 0, ti, 0..c)?;
+        let m1 = read_checked(current, 1, ti, 0..c)?;
+        let m2 = read_checked(current, 2, ti, 0..c)?;
+        out.med[ti] = stats::median_abs(&w);
+        out.r_o[ti] = prune::momentum_threshold(&m1, pcfg);
+        let dw: Vec<f32> = match reference.as_deref_mut() {
+            Some(r) => {
+                let rw = read_checked(r, 0, ti, 0..c)?;
+                w.iter().zip(&rw).map(|(&a, &b)| a - b).collect()
+            }
+            None => w,
+        };
+        out.stats.total += c;
+        for j in 0..c {
+            let kw = prune::keep_weight(dw[j], out.med[ti], m2[j], pcfg);
+            if kw {
+                out.stats.kept_weights += 1;
+            }
+            if prune::keep_momentum(m1[j], kw, out.r_o[ti]) {
+                out.stats.kept_momentum += 1;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Pass B, one shard: read every fragment's values, apply delta + the
+/// Eq. 4–5 masks using the precomputed per-tensor scalars, and k-means
+/// quantize each (set, fragment) — identical inputs, hence identical
+/// symbols and centers, to the in-memory prepare path.
+#[allow(clippy::type_complexity)]
+fn quantize_shard(
+    codec: &Codec,
+    current: &mut dyn ShardSource,
+    mut reference: Option<&mut dyn ShardSource>,
+    sp: &ShardPlan,
+    pcfg: &PruneConfig,
+    scalars: &PruneScalars,
+) -> Result<([Vec<Vec<u16>>; 3], [Vec<Vec<f32>>; 3])> {
+    let cfg = codec.cfg();
+    let qcfg = cfg.quant_cfg();
+    let mut quantized: [Vec<Quantized>; 3] = Default::default();
+    for f in sp.fragments() {
+        let range = f.start..f.start + f.len;
+        let wv = read_checked(current, 0, f.tensor, range.clone())?;
+        let mut dw: Vec<f32> = match reference.as_deref_mut() {
+            Some(r) => {
+                let rw = read_checked(r, 0, f.tensor, range.clone())?;
+                wv.iter().zip(&rw).map(|(&a, &b)| a - b).collect()
+            }
+            None => wv,
+        };
+        let mut m1 = read_checked(current, 1, f.tensor, range.clone())?;
+        let mut m2 = read_checked(current, 2, f.tensor, range)?;
+        if pcfg.enabled {
+            for j in 0..f.len {
+                let kw = prune::keep_weight(dw[j], scalars.med[f.tensor], m2[j], pcfg);
+                let km = prune::keep_momentum(m1[j], kw, scalars.r_o[f.tensor]);
+                if !kw {
+                    dw[j] = 0.0;
+                }
+                if !km {
+                    m1[j] = 0.0;
+                    m2[j] = 0.0;
+                }
+            }
+        }
+        quantized[0].push(quant::quantize(&dw, &qcfg)?);
+        quantized[1].push(quant::quantize(&m1, &qcfg)?);
+        let m2v = maybe_log(&m2, cfg.log_moment2);
+        quantized[2].push(quant::quantize(&m2v, &qcfg)?);
+    }
+    let mut syms: [Vec<Vec<u16>>; 3] = Default::default();
+    let mut centers: [Vec<Vec<f32>>; 3] = Default::default();
+    for (k, qs) in quantized.into_iter().enumerate() {
+        for q in qs {
+            syms[k].push(q.symbols);
+            centers[k].push(q.centers);
+        }
+    }
+    Ok((syms, centers))
+}
+
+/// Random access: decode ONE weight tensor out of a format-3 container,
+/// entropy-decoding only the shards its positions intersect (located via
+/// the shard index). `reference` must be the reconstructed reference
+/// checkpoint for delta frames; `prev_syms` the reference symbol maps for
+/// the context modes. Bit-identical to the corresponding tensor of a full
+/// [`Codec::decode`].
+pub fn decode_weight_tensor(
+    backend: &Backend,
+    bytes: &[u8],
+    name: &str,
+    reference: Option<&Checkpoint>,
+    prev_syms: Option<&SymbolMaps>,
+) -> Result<Tensor> {
+    let container = Container::from_bytes(bytes)?;
+    // Same untrusted-header validation as the full decoder (shared helper
+    // — hardening cannot drift between the two read paths).
+    let hdr = parse_untrusted_header(&container, bytes.len(), backend)?;
+    if hdr.format != 3 {
+        return Err(Error::format(format!(
+            "per-tensor random access needs a format-3 container (got {})",
+            hdr.format
+        )));
+    }
+    let prev = check_chain_inputs(&hdr, reference, prev_syms)?;
+    let ti = hdr
+        .names
+        .iter()
+        .position(|n| n == name)
+        .ok_or_else(|| Error::format(format!("container has no tensor '{name}'")))?;
+
+    let codec = Codec::new(hdr.cfg.clone(), backend.clone());
+    codec.check_ref_maps(prev, &hdr.counts)?;
+    let geom = parse_v3_geometry(&hdr, &container, bytes)?;
+    let lanes = hdr.cfg.lanes;
+
+    let extractors = codec.build_extractors_from_shapes(&hdr.shapes)?;
+    let mut vals = vec![0f32; hdr.counts[ti]];
+    for s in geom.layout.tensor_shards(ti) {
+        // The shards we are about to trust get their index CRC checked
+        // (the whole-file trailer CRC was already verified by from_bytes;
+        // this additionally pins index/payload consistency for the
+        // random-access contract).
+        verify_shard_crc(&container, &geom, s)?;
+        let sp = &geom.plans[s];
+        let nf = sp.fragments().len();
+        let base = geom.cursors[s]; // set 0 comes first within the shard
+        let mut centers: Vec<Vec<f32>> = Vec::with_capacity(nf);
+        for fi in 0..nf {
+            centers.push(centers_from_bytes(container.blob(base + fi)?)?);
+        }
+        let ref_maps = codec.reference_maps(prev, 0);
+        let mut tasks: Vec<Task<Result<Vec<u16>>>> = Vec::with_capacity(lanes);
+        for lane in 0..lanes {
+            let stream = container.blob(base + nf + lane)?;
+            let extractors = extractors.as_slice();
+            let codec = &codec;
+            tasks.push(Box::new(move || {
+                codec.decode_lane(sp, extractors, ref_maps, stream, lane)
+            }));
+        }
+        let results = pool::run_scoped(pool::available_workers(), tasks)?;
+        // Scatter this shard's symbols; keep per-fragment buffers so each
+        // fragment dequantizes with its own center table.
+        let mut frag_syms: Vec<Vec<u16>> =
+            sp.fragments().iter().map(|f| vec![0u16; f.len]).collect();
+        for (lane, decoded) in results.into_iter().enumerate() {
+            let decoded = decoded?;
+            if decoded.len() != sp.lane_len(lane) {
+                return Err(Error::codec("lane decoded wrong symbol count"));
+            }
+            for (p, sym) in sp.iter_lane(lane).zip(decoded) {
+                frag_syms[p.frag][p.local] = sym;
+            }
+        }
+        for ((f, syms), cs) in sp.fragments().iter().zip(&frag_syms).zip(&centers) {
+            if f.tensor != ti {
+                continue;
+            }
+            // Weights are never log-domain; shared dequant keeps the
+            // bounds check and value mapping identical to the full decode.
+            super::dequant_symbols_into(
+                syms,
+                cs,
+                false,
+                &mut vals[f.start..f.start + f.len],
+            )?;
+        }
+    }
+    // Add the reference weights back (delta frames).
+    if let Some(r) = reference {
+        let rt = r
+            .weights
+            .get(name)
+            .ok_or_else(|| Error::shape(format!("reference has no tensor '{name}'")))?;
+        if rt.len() != vals.len() {
+            return Err(Error::shape("reference tensor size mismatch"));
+        }
+        for (x, &rv) in vals.iter_mut().zip(rt.data()) {
+            *x += rv;
+        }
+    }
+    Tensor::new(hdr.shapes[ti].clone(), vals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::{CodecConfig, ContextMode};
+
+    fn layers() -> Vec<(&'static str, Vec<usize>)> {
+        vec![("a.w", vec![14, 9]), ("b.w", vec![33]), ("c.w", vec![5, 4, 2])]
+    }
+
+    fn cfg(mode: ContextMode, shard_bytes: usize) -> CodecConfig {
+        CodecConfig {
+            mode,
+            hidden: 8,
+            embed: 8,
+            batch: 32,
+            quant_iters: 4,
+            lanes: 2,
+            shard_bytes,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn streamed_intra_equals_in_memory_bytes() {
+        // 20 positions per shard → boundaries inside every tensor.
+        for mode in [ContextMode::Order0, ContextMode::Lstm] {
+            let codec = Codec::new(cfg(mode, 20 * 12), Backend::Native);
+            let ck = Checkpoint::synthetic(5, &layers(), 61);
+            let whole = codec.encode(&ck, None, None).unwrap();
+            let mut out = Vec::new();
+            let mut src = CheckpointSource::new(&ck).unwrap();
+            let stats =
+                encode_streaming(&codec, &mut src, None, None, &mut out).unwrap();
+            assert_eq!(out, whole.bytes, "{mode:?} streamed == in-memory");
+            assert_eq!(stats.compressed_bytes, whole.stats.compressed_bytes);
+            assert_eq!(stats.shards, whole.stats.shards);
+            assert!(stats.shards > 1);
+        }
+    }
+
+    #[test]
+    fn streamed_delta_equals_in_memory_bytes() {
+        let codec = Codec::new(cfg(ContextMode::Lstm, 25 * 12), Backend::Native);
+        let c0 = Checkpoint::synthetic(1, &layers(), 62);
+        let c1 = Checkpoint::synthetic(2, &layers(), 63);
+        let e0 = codec.encode(&c0, None, None).unwrap();
+        let whole = codec.encode(&c1, Some(&e0.recon), Some(&e0.syms)).unwrap();
+
+        let mut out = Vec::new();
+        let mut cur = CheckpointSource::new(&c1).unwrap();
+        let mut refr = CheckpointSource::new(&e0.recon).unwrap();
+        encode_streaming(&codec, &mut cur, Some(&mut refr), Some(&e0.syms), &mut out)
+            .unwrap();
+        assert_eq!(out, whole.bytes);
+
+        // And the streamed container decodes against the same chain state.
+        let (d1, _) =
+            Codec::decode(&Backend::Native, &out, Some(&e0.recon), Some(&e0.syms)).unwrap();
+        assert_eq!(d1, whole.recon);
+    }
+
+    #[test]
+    fn prune_disabled_also_matches() {
+        let mut c = cfg(ContextMode::Order0, 17 * 12);
+        c.prune.enabled = false;
+        let codec = Codec::new(c, Backend::Native);
+        let ck = Checkpoint::synthetic(9, &layers(), 64);
+        let whole = codec.encode(&ck, None, None).unwrap();
+        let mut out = Vec::new();
+        let mut src = CheckpointSource::new(&ck).unwrap();
+        encode_streaming(&codec, &mut src, None, None, &mut out).unwrap();
+        assert_eq!(out, whole.bytes);
+    }
+
+    #[test]
+    fn random_access_matches_full_decode() {
+        for mode in [ContextMode::Order0, ContextMode::Lstm] {
+            let codec = Codec::new(cfg(mode, 30 * 12), Backend::Native);
+            let c0 = Checkpoint::synthetic(1, &layers(), 65);
+            let c1 = Checkpoint::synthetic(2, &layers(), 66);
+            let e0 = codec.encode(&c0, None, None).unwrap();
+            let e1 = codec.encode(&c1, Some(&e0.recon), Some(&e0.syms)).unwrap();
+            let (full, _) =
+                Codec::decode(&Backend::Native, &e1.bytes, Some(&e0.recon), Some(&e0.syms))
+                    .unwrap();
+            for (name, _) in layers() {
+                let t = decode_weight_tensor(
+                    &Backend::Native,
+                    &e1.bytes,
+                    name,
+                    Some(&e0.recon),
+                    Some(&e0.syms),
+                )
+                .unwrap();
+                assert_eq!(&t, full.weights.get(name).unwrap(), "{mode:?} {name}");
+            }
+            // Unknown tensors and wrong formats fail cleanly.
+            assert!(decode_weight_tensor(
+                &Backend::Native,
+                &e1.bytes,
+                "nope",
+                Some(&e0.recon),
+                Some(&e0.syms)
+            )
+            .is_err());
+            let v2 = Codec::new(cfg(mode, 0), Backend::Native);
+            let e = v2.encode(&c0, None, None).unwrap();
+            assert!(
+                decode_weight_tensor(&Backend::Native, &e.bytes, "a.w", None, None).is_err()
+            );
+        }
+    }
+
+    #[test]
+    fn unsharded_config_rejected() {
+        let codec = Codec::new(cfg(ContextMode::Order0, 0), Backend::Native);
+        let ck = Checkpoint::synthetic(1, &layers(), 67);
+        let mut src = CheckpointSource::new(&ck).unwrap();
+        let mut out = Vec::new();
+        assert!(encode_streaming(&codec, &mut src, None, None, &mut out).is_err());
+    }
+}

@@ -146,6 +146,7 @@ impl ExperimentConfig {
                     ("beta", Json::num(self.codec.prune.beta)),
                     ("log_moment2", Json::Bool(self.codec.log_moment2)),
                     ("lanes", Json::num(self.codec.lanes as f64)),
+                    ("shard_bytes", Json::num(self.codec.shard_bytes as f64)),
                 ]),
             ),
         ])
@@ -173,6 +174,29 @@ impl ExperimentConfig {
                 "codec.lanes must be 0 (auto) or 1..={}",
                 crate::codec::MAX_LANES
             )));
+        }
+        // Mirror the decoder's untrusted-header caps so every container we
+        // can be configured to write is one any decoder will accept.
+        if self.codec.window > 31 {
+            return Err(Error::config("codec.window must be <= 31"));
+        }
+        if self.codec.hidden == 0
+            || self.codec.hidden > 1024
+            || self.codec.embed == 0
+            || self.codec.embed > 1024
+        {
+            return Err(Error::config("codec.hidden/embed must be in 1..=1024"));
+        }
+        if self.codec.layers == 0 || self.codec.layers > 16 {
+            return Err(Error::config("codec.layers must be in 1..=16"));
+        }
+        if self.codec.batch == 0 || self.codec.batch > 8192 {
+            return Err(Error::config("codec.batch must be in 1..=8192"));
+        }
+        if self.codec.shard_bytes > 0 && self.codec.shard_bytes < 12 {
+            return Err(Error::config(
+                "codec.shard_bytes must be 0 (unsharded) or >= 12 (one position)",
+            ));
         }
         Ok(())
     }
@@ -228,6 +252,9 @@ fn apply_codec(c: &mut CodecConfig, j: &Json) -> Result<()> {
             "warmup_stride" => c.warmup_stride = (req_u64(val)? as usize).max(1),
             // 0 = auto (available hardware threads).
             "lanes" => c.lanes = req_u64(val)? as usize,
+            // 0 = unsharded (format 2); >0 = streaming format 3 with this
+            // many raw value bytes per shard (~64 MiB is a good default).
+            "shard_bytes" => c.shard_bytes = req_u64(val)? as usize,
             other => return Err(Error::config(format!("unknown codec key '{other}'"))),
         }
     }
@@ -264,7 +291,7 @@ mod tests {
               "queue_depth": 4,
               "codec": {"mode": "zero_context", "bits": 2, "window": 5,
                         "hidden": 32, "alpha": 1e-4, "log_moment2": false,
-                        "lanes": 8}
+                        "lanes": 8, "shard_bytes": 1048576}
             }"#,
         )
         .unwrap();
@@ -278,6 +305,7 @@ mod tests {
         assert_eq!(cfg.codec.prune.alpha, 1e-4);
         assert!(!cfg.codec.log_moment2);
         assert_eq!(cfg.codec.lanes, 8);
+        assert_eq!(cfg.codec.shard_bytes, 1 << 20);
         // Provenance serialization parses back.
         let j = cfg.to_json().to_string();
         assert!(Json::parse(&j).is_ok());
@@ -298,6 +326,13 @@ mod tests {
         assert!(ExperimentConfig::from_json_text(r#"{"queue_depth": 0}"#).is_err());
         assert!(ExperimentConfig::from_json_text(r#"{"codec": {"lanes": 65}}"#).is_err());
         assert!(ExperimentConfig::from_json_text(r#"{"codec": {"lanes": 0}}"#).is_ok());
+        assert!(ExperimentConfig::from_json_text(r#"{"codec": {"shard_bytes": 4}}"#).is_err());
+        assert!(ExperimentConfig::from_json_text(r#"{"codec": {"shard_bytes": 0}}"#).is_ok());
+        assert!(
+            ExperimentConfig::from_json_text(r#"{"codec": {"shard_bytes": 67108864}}"#).is_ok()
+        );
+        assert!(ExperimentConfig::from_json_text(r#"{"codec": {"window": 257}}"#).is_err());
+        assert!(ExperimentConfig::from_json_text(r#"{"codec": {"batch": 0}}"#).is_err());
     }
 
     #[test]

@@ -114,6 +114,11 @@ impl Container {
         let header = Json::parse(header_text)?;
         pos += hdr_len;
         let n_blobs = take_u32(&mut pos)? as usize;
+        // Each declared blob needs at least its 4-byte length field, so a
+        // forged count cannot drive the allocation past the input size.
+        if n_blobs > (body_len - pos) / 4 {
+            return Err(Error::format("container declares more blobs than fit"));
+        }
         let mut blobs = Vec::with_capacity(n_blobs);
         for _ in 0..n_blobs {
             let len = take_u32(&mut pos)? as usize;
@@ -150,6 +155,82 @@ impl Container {
             + 4
             + self.blobs.iter().map(|b| b.len() + 4).sum::<usize>()
             + 4
+    }
+}
+
+/// Streaming writer producing byte-identical output to
+/// [`Container::to_bytes`] without holding more than one blob in memory.
+///
+/// The container framing is stream-friendly by construction: the header
+/// and blob count go first, each blob is self-delimiting, and the trailer
+/// CRC folds incrementally ([`crate::util::crc32::Crc32`]). The format-3
+/// encoder uses this to push shard blobs to disk as they finish — peak
+/// encoder memory stays bounded by the shard budget — while the in-memory
+/// path writes into a `Vec<u8>` sink and gets the exact same bytes.
+///
+/// The blob count must be known up front (it is derivable from the header
+/// for every format) and [`ContainerStreamWriter::finish`] enforces it.
+pub struct ContainerStreamWriter<W: std::io::Write> {
+    w: W,
+    crc: crate::util::crc32::Crc32,
+    /// Bytes written so far (also the next blob's file offset).
+    written: u64,
+    declared_blobs: u32,
+    pushed_blobs: u32,
+}
+
+impl<W: std::io::Write> ContainerStreamWriter<W> {
+    /// Write the container prefix (magic, header, blob count).
+    pub fn new(mut w: W, header: &Json, n_blobs: u32) -> Result<Self> {
+        let header = header.to_string();
+        let mut crc = crate::util::crc32::Crc32::new();
+        let mut written = 0u64;
+        let mut emit = |w: &mut W, bytes: &[u8]| -> Result<()> {
+            w.write_all(bytes)?;
+            crc.update(bytes);
+            written += bytes.len() as u64;
+            Ok(())
+        };
+        emit(&mut w, MAGIC)?;
+        emit(&mut w, &(header.len() as u32).to_le_bytes())?;
+        emit(&mut w, header.as_bytes())?;
+        emit(&mut w, &n_blobs.to_le_bytes())?;
+        Ok(Self { w, crc, written, declared_blobs: n_blobs, pushed_blobs: 0 })
+    }
+
+    /// Current file offset — the offset the *next* blob's length field
+    /// will land at (recorded in the format-3 shard index).
+    pub fn offset(&self) -> u64 {
+        self.written
+    }
+
+    /// Append one blob (length prefix + payload).
+    pub fn push_blob(&mut self, blob: &[u8]) -> Result<()> {
+        if self.pushed_blobs == self.declared_blobs {
+            return Err(Error::format("more blobs pushed than declared"));
+        }
+        let len = (blob.len() as u32).to_le_bytes();
+        self.w.write_all(&len)?;
+        self.crc.update(&len);
+        self.w.write_all(blob)?;
+        self.crc.update(blob);
+        self.written += 4 + blob.len() as u64;
+        self.pushed_blobs += 1;
+        Ok(())
+    }
+
+    /// Write the trailer CRC and flush; returns the total container size.
+    pub fn finish(mut self) -> Result<u64> {
+        if self.pushed_blobs != self.declared_blobs {
+            return Err(Error::format(format!(
+                "container declared {} blobs but {} were written",
+                self.declared_blobs, self.pushed_blobs
+            )));
+        }
+        let crc = self.crc.finalize();
+        self.w.write_all(&crc.to_le_bytes())?;
+        self.w.flush()?;
+        Ok(self.written + 4)
     }
 }
 
@@ -241,6 +322,60 @@ mod tests {
         let c = sample();
         assert!(c.blob(2).is_ok());
         assert!(c.blob(3).is_err());
+    }
+
+    #[test]
+    fn stream_writer_matches_to_bytes() {
+        let c = sample();
+        let expect = c.to_bytes();
+        let mut sink = Vec::new();
+        let mut w =
+            ContainerStreamWriter::new(&mut sink, &c.header, c.blobs.len() as u32).unwrap();
+        let mut offsets = Vec::new();
+        for b in &c.blobs {
+            offsets.push(w.offset());
+            w.push_blob(b).unwrap();
+        }
+        let total = w.finish().unwrap();
+        assert_eq!(sink, expect);
+        assert_eq!(total as usize, expect.len());
+        // Reported offsets point at each blob's length field.
+        for (i, &off) in offsets.iter().enumerate() {
+            let off = off as usize;
+            let len = u32::from_le_bytes(sink[off..off + 4].try_into().unwrap()) as usize;
+            assert_eq!(len, c.blobs[i].len());
+            assert_eq!(&sink[off + 4..off + 4 + len], c.blobs[i].as_slice());
+        }
+    }
+
+    #[test]
+    fn stream_writer_enforces_blob_count() {
+        let c = sample();
+        let mut sink = Vec::new();
+        let w = ContainerStreamWriter::new(&mut sink, &c.header, 2).unwrap();
+        // Too few blobs.
+        assert!(w.finish().is_err());
+        let mut sink = Vec::new();
+        let mut w = ContainerStreamWriter::new(&mut sink, &c.header, 1).unwrap();
+        w.push_blob(&[1]).unwrap();
+        // Too many blobs.
+        assert!(w.push_blob(&[2]).is_err());
+    }
+
+    #[test]
+    fn forged_blob_count_cannot_drive_allocation() {
+        // Craft a container whose n_blobs field claims u32::MAX blobs with
+        // almost no body behind it; the parser must reject it up front
+        // (the CRC is made valid so the count check itself is exercised).
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(b"{}");
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        let crc = crate::util::crc32::hash(&bytes);
+        bytes.extend_from_slice(&crc.to_le_bytes());
+        let err = Container::from_bytes(&bytes).unwrap_err();
+        assert!(format!("{err}").contains("blobs"), "{err}");
     }
 
     #[test]

@@ -49,6 +49,9 @@ pub struct ManifestEntry {
     pub format: u64,
     /// Coding lanes recorded in the container header.
     pub lanes: usize,
+    /// Shards in the container (1 for format-1/2; format 3 records the
+    /// streaming shard count — see [`crate::codec::ShardLayout`]).
+    pub shards: u64,
     /// Serialized container size in bytes.
     pub bytes: u64,
     /// The CRC-32 stored in the container trailer.
@@ -135,6 +138,7 @@ impl ChainManifest {
                     ("file", Json::str(e.file.clone())),
                     ("format", Json::num(e.format as f64)),
                     ("lanes", Json::num(e.lanes as f64)),
+                    ("shards", Json::num(e.shards as f64)),
                     ("bytes", Json::num(e.bytes as f64)),
                     ("crc32", Json::num(e.crc32 as f64)),
                 ])
@@ -172,6 +176,8 @@ impl ChainManifest {
                 file: e.req_str("file")?.to_string(),
                 format: e.req_usize("format")? as u64,
                 lanes: e.req_usize("lanes")?,
+                // Absent in manifests written before streaming shards.
+                shards: e.get("shards").and_then(|v| v.as_u64()).unwrap_or(1),
                 bytes: e.req_usize("bytes")? as u64,
                 crc32: crc as u32,
             };
@@ -218,6 +224,7 @@ mod tests {
             file: format!("ckpt_{step:010}.cpcm"),
             format: 2,
             lanes: 4,
+            shards: 1,
             bytes: 1000 + step,
             crc32: 0xDEAD_0000 ^ step as u32,
         }
@@ -279,6 +286,16 @@ mod tests {
             {"step": 1, "ref_step": null, "file": "b", "format": 2, "lanes": 1, "bytes": 1, "crc32": 0}
         ]}"#;
         assert!(ChainManifest::from_json(&Json::parse(dup).unwrap()).is_err());
+    }
+
+    #[test]
+    fn pre_shard_manifests_parse_with_default_shard_count() {
+        // Rows written before the `shards` field existed must keep loading.
+        let old = r#"{"version": 1, "checkpoints": [
+            {"step": 7, "ref_step": null, "file": "a", "format": 2, "lanes": 2, "bytes": 10, "crc32": 3}
+        ]}"#;
+        let m = ChainManifest::from_json(&Json::parse(old).unwrap()).unwrap();
+        assert_eq!(m.entry(7).unwrap().shards, 1);
     }
 
     #[test]

@@ -432,8 +432,9 @@ fn write_loop(
             step,
             ref_step: job.prep.ref_step,
             file: name,
-            format: 2,
+            format: job.prep.container_format(),
             lanes: job.stats.lanes,
+            shards: job.prep.n_shards() as u64,
             bytes: job.bytes.len() as u64,
             crc32: Container::stored_crc(&job.bytes)?,
         });
@@ -508,12 +509,24 @@ pub fn restore_step_with(
     let mut prev: Option<(Checkpoint, SymbolMaps)> = None;
     for s in chain {
         let entry = manifest.entry(s).expect("ancestry returned an unindexed step");
-        let bytes = std::fs::read(dir.join(&entry.file))?;
-        let stored = Container::stored_crc(&bytes)?;
+        let path = dir.join(&entry.file);
+        // Every failure below names the offending step and file: a restore
+        // walks a whole ancestry, and "CRC mismatch" without saying which
+        // container broke sends the operator grepping.
+        let bytes = std::fs::read(&path).map_err(|e| {
+            Error::format(format!(
+                "restoring step {step}: cannot read step {s} container {}: {e}",
+                path.display()
+            ))
+        })?;
+        let stored = Container::stored_crc(&bytes).map_err(|e| {
+            Error::format(format!("step {s} container {} is not a container: {e}", path.display()))
+        })?;
         if stored != entry.crc32 {
             return Err(Error::format(format!(
-                "container for step {s} does not match the manifest \
+                "step {s} container {} does not match the manifest \
                  (crc {:08x} recorded, {stored:08x} on disk)",
+                path.display(),
                 entry.crc32
             )));
         }
@@ -522,11 +535,18 @@ pub fn restore_step_with(
             &bytes,
             prev.as_ref().map(|p| &p.0),
             prev.as_ref().map(|p| &p.1),
-        )?;
+        )
+        .map_err(|e| {
+            Error::codec(format!(
+                "restoring step {step}: decoding step {s} container {} failed: {e}",
+                path.display()
+            ))
+        })?;
         if ck.step != s {
             return Err(Error::codec(format!(
                 "container {} holds step {}, manifest says {s}",
-                entry.file, ck.step
+                path.display(),
+                ck.step
             )));
         }
         prev = Some((ck, syms));
@@ -642,6 +662,37 @@ mod tests {
             let restored = restore_step(&dir, &Backend::Native, step).unwrap();
             assert_eq!(restored, decoded[if i == 0 { 0 } else { 2 }]);
         }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sharded_format3_pipeline_roundtrips_and_manifests() {
+        // Shard budget of 30 positions: every layers() tensor splits.
+        let dir = tmpdir("v3");
+        let mut codec = small_codec(ContextMode::Order0);
+        codec.shard_bytes = 30 * 12;
+        let mut cfg = CoordinatorConfig::new(codec, Backend::Native, &dir);
+        cfg.verify = true;
+        let coord = Coordinator::start(cfg).unwrap();
+        for i in 0..3u64 {
+            coord.submit(Checkpoint::synthetic(10 * (i + 1), &layers(), 200 + i)).unwrap();
+        }
+        let results = coord.finish().unwrap();
+        assert_eq!(results.len(), 3);
+        let total: usize = layers().iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+        for r in &results {
+            assert_eq!(r.stats.shards, total.div_ceil(30));
+        }
+        // Manifest records format 3 and the shard count; restore works.
+        let manifest = ChainManifest::load(&dir).unwrap();
+        for step in manifest.steps() {
+            let e = manifest.entry(step).unwrap();
+            assert_eq!(e.format, 3);
+            assert_eq!(e.shards as usize, total.div_ceil(30));
+        }
+        let decoded = decode_chain(&dir, &Backend::Native, None).unwrap();
+        assert_eq!(decoded.len(), 3);
+        assert_eq!(restore_step(&dir, &Backend::Native, 30).unwrap(), decoded[2]);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

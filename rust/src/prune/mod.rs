@@ -71,31 +71,44 @@ impl PruneStats {
     }
 }
 
+/// Eq.-4 per-element keep decision, given the tensor's `median(|W|)`.
+///
+/// Factored out of [`weight_mask`] so the streaming sharded encoder
+/// ([`crate::codec::sharded`]), which sees tensors one fragment at a time,
+/// applies the *identical* f64 expression — bit-equal masks are what keep
+/// the streamed container byte-identical to the in-memory one.
+#[inline]
+pub fn keep_weight(dw: f32, med_abs_w: f64, exp_avg_sq: f32, cfg: &PruneConfig) -> bool {
+    let r_w = cfg.alpha * med_abs_w / (exp_avg_sq.max(0.0) as f64 + cfg.eps).sqrt();
+    (dw as f64).abs() > r_w
+}
+
+/// The Eq.-5 per-tensor momentum threshold `r_o = β · mean(|v_t|)`.
+pub fn momentum_threshold(exp_avg: &[f32], cfg: &PruneConfig) -> f64 {
+    cfg.beta * stats::mean_abs(exp_avg)
+}
+
+/// Eq.-5 per-element keep decision, given the tensor's [`momentum_threshold`].
+#[inline]
+pub fn keep_momentum(exp_avg: f32, kept_weight: bool, r_o: f64) -> bool {
+    kept_weight && (exp_avg as f64).abs() > r_o
+}
+
 /// Compute the Eq.-4 weight mask for one tensor.
 ///
 /// `dw` is the weight residual, `w` the *current* weights (for `median(|W|)`),
 /// `exp_avg_sq` the second moment (paper `m_t`).
 pub fn weight_mask(dw: &[f32], w: &[f32], exp_avg_sq: &[f32], cfg: &PruneConfig) -> Vec<bool> {
     let med = stats::median_abs(w);
-    dw.iter()
-        .zip(exp_avg_sq)
-        .map(|(&d, &m)| {
-            let r_w = cfg.alpha * med / (m.max(0.0) as f64 + cfg.eps).sqrt();
-            (d as f64).abs() > r_w
-        })
-        .collect()
+    dw.iter().zip(exp_avg_sq).map(|(&d, &m)| keep_weight(d, med, m, cfg)).collect()
 }
 
 /// Compute the Eq.-5 momentum mask for one tensor.
 ///
 /// `exp_avg` is the first moment (paper `v_t`); `wmask` the Eq.-4 mask.
 pub fn momentum_mask(exp_avg: &[f32], wmask: &[bool], cfg: &PruneConfig) -> Vec<bool> {
-    let r_o = cfg.beta * stats::mean_abs(exp_avg);
-    exp_avg
-        .iter()
-        .zip(wmask)
-        .map(|(&v, &kw)| kw && (v as f64).abs() > r_o)
-        .collect()
+    let r_o = momentum_threshold(exp_avg, cfg);
+    exp_avg.iter().zip(wmask).map(|(&v, &kw)| keep_momentum(v, kw, r_o)).collect()
 }
 
 /// Prune a whole residual in place (weights by Eq. 4, both moments by

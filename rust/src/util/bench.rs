@@ -91,6 +91,32 @@ impl Bench {
     }
 }
 
+/// Current resident-set size of this process in bytes (Linux `VmRSS`).
+/// `None` on platforms without `/proc/self/status`.
+pub fn current_rss_bytes() -> Option<u64> {
+    proc_status_kb("VmRSS:")
+}
+
+/// Peak (high-water) resident-set size of this process in bytes (Linux
+/// `VmHWM`). The kernel counter is monotone for the process lifetime, so
+/// memory tests measure a *delta*: read before and after the section under
+/// test and subtract. `None` on platforms without `/proc/self/status`.
+pub fn peak_rss_bytes() -> Option<u64> {
+    proc_status_kb("VmHWM:")
+}
+
+/// Parse a `kB` line of `/proc/self/status` into bytes.
+fn proc_status_kb(key: &str) -> Option<u64> {
+    let text = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix(key) {
+            let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
 /// Minimal table printer for figure benches: rows of (label, values).
 pub struct Table {
     pub title: String,
@@ -185,5 +211,19 @@ mod tests {
     fn table_rejects_wrong_arity() {
         let mut t = Table::new("t", &["a", "b"]);
         t.row("r1", vec![1.0]);
+    }
+
+    #[test]
+    fn rss_probe_is_sane_where_available() {
+        // On Linux both gauges exist and peak >= current > 0; elsewhere the
+        // probe degrades to None and callers skip.
+        match (current_rss_bytes(), peak_rss_bytes()) {
+            (Some(cur), Some(peak)) => {
+                assert!(cur > 0);
+                assert!(peak >= cur, "peak {peak} < current {cur}");
+            }
+            (None, None) => {}
+            other => panic!("probe half-available: {other:?}"),
+        }
     }
 }

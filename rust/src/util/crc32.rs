@@ -27,11 +27,45 @@ static TABLE: [u32; 256] = build_table();
 
 /// CRC-32 of `bytes` (one-shot).
 pub fn hash(bytes: &[u8]) -> u32 {
-    let mut crc = !0u32;
-    for &b in bytes {
-        crc = TABLE[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    let mut h = Crc32::new();
+    h.update(bytes);
+    h.finalize()
+}
+
+/// Incremental CRC-32 hasher — same polynomial and init/xorout as
+/// [`hash`], so `Crc32` fed the same bytes in any chunking produces the
+/// identical value. Used by the streaming container writer, which cannot
+/// buffer the whole file to checksum it in one shot.
+#[derive(Clone, Debug)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Self::new()
     }
-    !crc
+}
+
+impl Crc32 {
+    /// Fresh hasher.
+    pub fn new() -> Self {
+        Self { state: !0u32 }
+    }
+
+    /// Fold `bytes` into the running checksum.
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut crc = self.state;
+        for &b in bytes {
+            crc = TABLE[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+        }
+        self.state = crc;
+    }
+
+    /// The CRC-32 of everything updated so far (the hasher stays usable).
+    pub fn finalize(&self) -> u32 {
+        !self.state
+    }
 }
 
 #[cfg(test)]
@@ -51,5 +85,23 @@ mod tests {
         let a = hash(b"hello world");
         let b = hash(b"hello worle");
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn incremental_matches_one_shot_for_any_chunking() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(1000).collect();
+        let expect = hash(&data);
+        for chunk in [1usize, 3, 7, 256, 999, 1000] {
+            let mut h = Crc32::new();
+            for c in data.chunks(chunk) {
+                h.update(c);
+            }
+            assert_eq!(h.finalize(), expect, "chunk={chunk}");
+        }
+        // Empty updates are no-ops; finalize is repeatable.
+        let mut h = Crc32::new();
+        h.update(b"");
+        assert_eq!(h.finalize(), hash(b""));
+        assert_eq!(h.finalize(), hash(b""));
     }
 }

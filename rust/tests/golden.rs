@@ -1,0 +1,118 @@
+//! Golden-container pins: tiny deterministic containers for every format
+//! live in `tests/data/`, and each test re-encodes the same inputs and
+//! byte-compares against the checked-in fixture — any accidental change
+//! to the on-disk format fails here before it ships.
+//!
+//! Bootstrap rule: if a fixture file does not exist yet, the test writes
+//! it (and still validates self-consistency); the file must then be
+//! committed. An existing fixture is never rewritten — a mismatch is a
+//! format regression (or an intentional format change, which should add a
+//! NEW format + fixture rather than mutate an old one).
+//!
+//! Fixture configs avoid transcendental math in the *codec* (`Order0`
+//! mode, `log_moment2 = false`): the pipeline is then pure IEEE-754
+//! add/mul/div/sqrt/compare and bit-stable across toolchains and opt
+//! levels. (The synthetic input generator itself uses libm `ln`/`cos`;
+//! fixtures are generated on the Linux CI runners — see
+//! `tests/data/README.md`.) Lane count is pinned (never `0 = auto`).
+
+use cpcm::checkpoint::Checkpoint;
+use cpcm::codec::{Codec, CodecConfig, ContextMode, SymbolMaps};
+use cpcm::lstm::Backend;
+use std::path::PathBuf;
+
+fn data_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/data")
+}
+
+/// Compare `bytes` against the pinned fixture `name`, bootstrapping the
+/// fixture on first run. Returns the pinned bytes (== `bytes`).
+fn pin(name: &str, bytes: &[u8]) -> Vec<u8> {
+    let path = data_dir().join(name);
+    if !path.exists() {
+        std::fs::create_dir_all(data_dir()).unwrap();
+        std::fs::write(&path, bytes).unwrap();
+        eprintln!(
+            "golden: bootstrapped tests/data/{name} ({} bytes) — commit it to pin the format",
+            bytes.len()
+        );
+    }
+    let stored = std::fs::read(&path).unwrap();
+    assert_eq!(
+        stored, bytes,
+        "golden fixture {name} no longer matches a fresh encode: the on-disk \
+         format changed. If intentional, introduce a new container format \
+         (and a new fixture) instead of mutating this one."
+    );
+    stored
+}
+
+fn golden_layers() -> Vec<(&'static str, Vec<usize>)> {
+    vec![("dense.w", vec![9, 7]), ("dense.b", vec![11]), ("head.w", vec![4, 3])]
+}
+
+/// The pinned codec config: deterministic across platforms (see module
+/// docs) and multi-lane so the lane layout is pinned too.
+fn golden_cfg(shard_bytes: usize) -> CodecConfig {
+    CodecConfig {
+        mode: ContextMode::Order0,
+        bits: 3,
+        lanes: 2,
+        quant_iters: 4,
+        log_moment2: false,
+        shard_bytes,
+        ..Default::default()
+    }
+}
+
+/// Encode the fixed two-frame chain; returns
+/// `(intra, delta, recons, syms)` for pinning and decode checks.
+type Chain = ((Vec<u8>, Checkpoint, SymbolMaps), (Vec<u8>, Checkpoint, SymbolMaps));
+
+fn golden_chain(cfg: CodecConfig, format1: bool) -> Chain {
+    let codec = Codec::new(cfg, Backend::Native);
+    let c0 = Checkpoint::synthetic(1000, &golden_layers(), 0xB0);
+    let c1 = Checkpoint::synthetic(2000, &golden_layers(), 0xB1);
+    let e0 = if format1 {
+        codec.encode_format1(&c0, None, None).unwrap()
+    } else {
+        codec.encode(&c0, None, None).unwrap()
+    };
+    let e1 = if format1 {
+        codec.encode_format1(&c1, Some(&e0.recon), Some(&e0.syms)).unwrap()
+    } else {
+        codec.encode(&c1, Some(&e0.recon), Some(&e0.syms)).unwrap()
+    };
+    ((e0.bytes, e0.recon, e0.syms), (e1.bytes, e1.recon, e1.syms))
+}
+
+fn check_format(tag: &str, cfg: CodecConfig, format1: bool) {
+    let ((b0, r0, s0), (b1, r1, s1)) = golden_chain(cfg, format1);
+    let p0 = pin(&format!("golden_{tag}_intra.cpcm"), &b0);
+    let p1 = pin(&format!("golden_{tag}_delta.cpcm"), &b1);
+    // The PINNED bytes (possibly written by an older build) must decode
+    // bit-exactly to today's encoder reconstruction.
+    let (d0, ds0) = Codec::decode(&Backend::Native, &p0, None, None).unwrap();
+    assert_eq!(d0, r0, "{tag} intra decode");
+    assert_eq!(ds0, s0, "{tag} intra syms");
+    let (d1, ds1) = Codec::decode(&Backend::Native, &p1, Some(&d0), Some(&ds0)).unwrap();
+    assert_eq!(d1, r1, "{tag} delta decode");
+    assert_eq!(ds1, s1, "{tag} delta syms");
+}
+
+#[test]
+fn golden_v1_containers_stay_bit_stable() {
+    check_format("v1", golden_cfg(0), true);
+}
+
+#[test]
+fn golden_v2_containers_stay_bit_stable() {
+    check_format("v2", golden_cfg(0), false);
+}
+
+#[test]
+fn golden_v3_containers_stay_bit_stable() {
+    // 25 positions per shard: boundaries land inside every tensor, so the
+    // fixture pins the fragment layout and the shard index too.
+    check_format("v3", golden_cfg(25 * 12), false);
+}

@@ -1,0 +1,240 @@
+//! Property-based round-trip battery over the full format space.
+//!
+//! Random tensor layouts and codec configs are drawn across
+//! `format ∈ {1, 2, 3} × lanes ∈ {1, 2, 4} × prune × quant bits × shard
+//! sizes` — including shard boundaries landing mid-tensor and shards
+//! larger than the whole checkpoint — and every case must:
+//!
+//! - round-trip a two-frame chain (intra + delta) bit-exactly: decoded
+//!   checkpoints equal the encoder's reconstruction, decoded symbol maps
+//!   equal the encoder's;
+//! - encode deterministically (same inputs ⇒ same bytes);
+//! - for format 3 at `shard_bytes = ∞`, carry a payload byte-identical to
+//!   the format-2 container (v3 ≡ v2 + shard index);
+//! - for format 3, stream-encode to the identical bytes via
+//!   [`cpcm::codec::sharded::encode_streaming`].
+//!
+//! The heavy LSTM modes run on a reduced case count; the `Order0` grid
+//! carries the breadth.
+
+use cpcm::checkpoint::Checkpoint;
+use cpcm::codec::{sharded, Codec, CodecConfig, ContextMode};
+use cpcm::container::Container;
+use cpcm::lstm::Backend;
+use cpcm::util::prop::{forall, Gen};
+
+/// Random tensor layout: 1–4 tensors of rank 1–3, a few elements to a few
+/// hundred, occasionally empty.
+fn random_layout(g: &mut Gen) -> Vec<(String, Vec<usize>)> {
+    let n = g.usize_range(1, 4);
+    (0..n)
+        .map(|i| {
+            let shape = match g.usize_range(0, 3) {
+                0 => vec![g.usize_range(1, 60)],
+                1 => vec![g.usize_range(1, 14), g.usize_range(1, 12)],
+                2 => vec![g.usize_range(1, 5), g.usize_range(1, 4), g.usize_range(1, 3)],
+                // Rare empty tensor (zero dim) to stress fragment slots.
+                _ => vec![0, g.usize_range(1, 4)],
+            };
+            (format!("t{i:02}.w"), shape)
+        })
+        .collect()
+}
+
+fn random_cfg(g: &mut Gen, mode: ContextMode, total_positions: usize) -> CodecConfig {
+    let lanes = *g.choose(&[1usize, 2, 4]);
+    // Shard budget: mid-tensor splits, tensor-aligned-ish, or bigger than
+    // the whole checkpoint.
+    let shard_values = *g.choose(&[
+        g.usize_range(1, 9),                  // tiny: many mid-tensor splits
+        g.usize_range(10, 80),                // medium
+        total_positions.max(1) * 2,           // shard > checkpoint
+    ]);
+    let mut cfg = CodecConfig {
+        mode,
+        bits: *g.choose(&[2u8, 3]),
+        hidden: 4,
+        embed: 4,
+        layers: 1,
+        batch: 16,
+        quant_iters: 3,
+        lanes,
+        shard_bytes: shard_values * 12,
+        ..Default::default()
+    };
+    cfg.prune.enabled = g.bool(0.7);
+    if g.bool(0.5) {
+        cfg.prune.alpha = 5e-4;
+    }
+    cfg.log_moment2 = g.bool(0.5);
+    if g.bool(0.5) {
+        cfg.warmup_passes = 0;
+    }
+    cfg
+}
+
+/// Encode a two-frame chain under `cfg` (format chosen by the caller via
+/// `cfg.shard_bytes` / `format1`), decode it, and assert bit-exactness.
+fn roundtrip_case(
+    g: &mut Gen,
+    cfg: CodecConfig,
+    layers: &[(String, Vec<usize>)],
+    format1: bool,
+) {
+    let layers_ref: Vec<(&str, Vec<usize>)> =
+        layers.iter().map(|(n, s)| (n.as_str(), s.clone())).collect();
+    let seed = g.usize_range(0, 1 << 30) as u64;
+    let c0 = Checkpoint::synthetic(100, &layers_ref, seed);
+    let c1 = Checkpoint::synthetic(200, &layers_ref, seed ^ 0xABCD);
+    let codec = Codec::new(cfg.clone(), Backend::Native);
+
+    fn encode(
+        codec: &Codec,
+        format1: bool,
+        cur: &Checkpoint,
+        r: Option<&Checkpoint>,
+        s: Option<&cpcm::codec::SymbolMaps>,
+    ) -> cpcm::codec::EncodeOutput {
+        if format1 {
+            codec.encode_format1(cur, r, s).unwrap()
+        } else {
+            codec.encode(cur, r, s).unwrap()
+        }
+    }
+    let e0 = encode(&codec, format1, &c0, None, None);
+    // Determinism: a second encode of the same inputs is byte-identical.
+    assert_eq!(
+        e0.bytes,
+        encode(&codec, format1, &c0, None, None).bytes,
+        "nondeterministic encode"
+    );
+    let (d0, s0) = Codec::decode(&Backend::Native, &e0.bytes, None, None).unwrap();
+    assert_eq!(d0, e0.recon, "intra recon mismatch");
+    assert_eq!(s0, e0.syms, "intra syms mismatch");
+
+    let e1 = encode(&codec, format1, &c1, Some(&e0.recon), Some(&e0.syms));
+    let (d1, s1) = Codec::decode(&Backend::Native, &e1.bytes, Some(&d0), Some(&s0)).unwrap();
+    assert_eq!(d1, e1.recon, "delta recon mismatch");
+    assert_eq!(s1, e1.syms, "delta syms mismatch");
+
+    if !format1 && cfg.sharded() {
+        // The streamed encoder must produce the identical container.
+        let mut streamed = Vec::new();
+        let mut cur = sharded::CheckpointSource::new(&c1).unwrap();
+        let mut refr = sharded::CheckpointSource::new(&e0.recon).unwrap();
+        sharded::encode_streaming(
+            &codec,
+            &mut cur,
+            Some(&mut refr),
+            Some(&e0.syms),
+            &mut streamed,
+        )
+        .unwrap();
+        assert_eq!(streamed, e1.bytes, "streamed != in-memory");
+    }
+}
+
+#[test]
+fn prop_order0_grid_roundtrips_bit_exactly() {
+    forall("order0 format grid", 18, |g| {
+        let layers = random_layout(g);
+        let total: usize =
+            layers.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+        let mut cfg = random_cfg(g, ContextMode::Order0, total);
+        // A third of the cases each: format 1, format 2, format 3.
+        let format = *g.choose(&[1usize, 2, 3]);
+        if format != 3 {
+            cfg.shard_bytes = 0;
+        }
+        roundtrip_case(g, cfg, &layers, format == 1);
+    });
+}
+
+#[test]
+fn prop_model_modes_roundtrip_bit_exactly() {
+    forall("lstm/zero-context format grid", 6, |g| {
+        let layers = random_layout(g);
+        let total: usize =
+            layers.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+        let mode = *g.choose(&[ContextMode::Lstm, ContextMode::ZeroContext]);
+        let mut cfg = random_cfg(g, mode, total);
+        // Keep the shard count bounded for the model modes (each shard ×
+        // lane × set builds a model replica).
+        if cfg.shard_values() < total / 4 {
+            cfg.shard_bytes = (total / 3).max(1) * 12;
+        }
+        let format = *g.choose(&[2usize, 3]);
+        if format == 2 {
+            cfg.shard_bytes = 0;
+        }
+        roundtrip_case(g, cfg, &layers, false);
+    });
+}
+
+#[test]
+fn prop_v3_at_infinite_shard_equals_v2_payload() {
+    forall("v3(inf) == v2 payload", 8, |g| {
+        let layers = random_layout(g);
+        let layers_ref: Vec<(&str, Vec<usize>)> =
+            layers.iter().map(|(n, s)| (n.as_str(), s.clone())).collect();
+        let mode = *g.choose(&[ContextMode::Order0, ContextMode::Lstm]);
+        let mut cfg = random_cfg(g, mode, 0);
+        cfg.shard_bytes = 0;
+        let seed = g.usize_range(0, 1 << 30) as u64;
+        let c0 = Checkpoint::synthetic(7, &layers_ref, seed);
+        let c1 = Checkpoint::synthetic(8, &layers_ref, seed + 1);
+
+        let v2 = Codec::new(cfg.clone(), Backend::Native);
+        let v3 = Codec::new(
+            CodecConfig { shard_bytes: usize::MAX / 2, ..cfg },
+            Backend::Native,
+        );
+        let a2 = v2.encode(&c0, None, None).unwrap();
+        let a3 = v3.encode(&c0, None, None).unwrap();
+        assert_eq!(a3.stats.shards, 1);
+        assert_eq!(a2.recon, a3.recon);
+        assert_eq!(a2.syms, a3.syms);
+        let b2 = v2.encode(&c1, Some(&a2.recon), Some(&a2.syms)).unwrap();
+        let b3 = v3.encode(&c1, Some(&a3.recon), Some(&a3.syms)).unwrap();
+        for (two, three) in [(&a2.bytes, &a3.bytes), (&b2.bytes, &b3.bytes)] {
+            let p2 = Container::from_bytes(two).unwrap();
+            let p3 = Container::from_bytes(three).unwrap();
+            assert_eq!(p3.blobs.len(), p2.blobs.len() + 1, "v3 = v2 payload + index");
+            assert_eq!(&p3.blobs[..p2.blobs.len()], p2.blobs.as_slice());
+        }
+    });
+}
+
+#[test]
+fn prop_decoded_values_are_shard_invariant() {
+    // The entropy stage never changes values; quantization granularity
+    // does (per fragment), but reconstruction must stay bit-exact per
+    // *format instance* and lane counts must not change values at all.
+    forall("lane invariance under sharding", 6, |g| {
+        let layers = random_layout(g);
+        let layers_ref: Vec<(&str, Vec<usize>)> =
+            layers.iter().map(|(n, s)| (n.as_str(), s.clone())).collect();
+        let total: usize =
+            layers.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+        let shard_values = g.usize_range(1, total.max(1) * 2);
+        let seed = g.usize_range(0, 1 << 30) as u64;
+        let c0 = Checkpoint::synthetic(1, &layers_ref, seed);
+        let mut recons = Vec::new();
+        for lanes in [1usize, 4] {
+            let cfg = CodecConfig {
+                mode: ContextMode::Order0,
+                bits: 3,
+                quant_iters: 3,
+                lanes,
+                shard_bytes: shard_values * 12,
+                ..Default::default()
+            };
+            let codec = Codec::new(cfg, Backend::Native);
+            let e = codec.encode(&c0, None, None).unwrap();
+            let (d, _) = Codec::decode(&Backend::Native, &e.bytes, None, None).unwrap();
+            assert_eq!(d, e.recon);
+            recons.push(d);
+        }
+        assert_eq!(recons[0], recons[1], "lane count changed decoded values");
+    });
+}

@@ -114,6 +114,35 @@ fn manifest_crc_catches_swapped_containers() {
 }
 
 #[test]
+fn restore_errors_name_the_offending_step_and_file() {
+    // Regression: a manifest/trailer CRC mismatch mid-ancestry must say
+    // WHICH step and WHICH file broke, not just "mismatch" — a restore of
+    // step 30 that fails on step 20's container points at step 20.
+    let dir = tmpdir("errctx");
+    let cfg = CoordinatorConfig::new(small_codec(ContextMode::Order0), Backend::Native, &dir);
+    let coord = Coordinator::start(cfg).unwrap();
+    for i in 0..3u64 {
+        coord.submit(Checkpoint::synthetic(10 * (i + 1), &layers(), 30 + i)).unwrap();
+    }
+    coord.finish().unwrap();
+    // Swap step 20's container for step 10's: valid container, wrong CRC
+    // versus the manifest entry.
+    std::fs::copy(dir.join("ckpt_0000000010.cpcm"), dir.join("ckpt_0000000020.cpcm")).unwrap();
+    let err = restore_step(&dir, &Backend::Native, 30).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("step 20"), "missing offending step: {msg}");
+    assert!(msg.contains("ckpt_0000000020.cpcm"), "missing offending file path: {msg}");
+    assert!(msg.contains("manifest"), "should name the manifest check: {msg}");
+
+    // A deleted mid-chain container also names itself.
+    std::fs::remove_file(dir.join("ckpt_0000000020.cpcm")).unwrap();
+    let err = restore_step(&dir, &Backend::Native, 30).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("ckpt_0000000020.cpcm"), "missing file path: {msg}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn persistent_pool_reused_across_consecutive_encodes() {
     // ISSUE acceptance: the pool must reuse threads across ≥ 2
     // consecutive encodes — observable as a flat spawn counter next to an
