@@ -1,0 +1,180 @@
+//! Bench-regression gate: compare two `BENCH_hotpath.json` documents and
+//! fail (exit 1) when any shared throughput metric regressed beyond the
+//! tolerance.
+//!
+//! ```text
+//! cargo run --release --example bench_compare -- \
+//!     benches/BENCH_baseline.json BENCH_hotpath.json \
+//!     [--tolerance 0.25] [--report BENCH_compare.md]
+//! ```
+//!
+//! Compared metrics (higher is better):
+//! - every `samples[].melems_per_sec` (matched by sample name),
+//! - `lane_scaling[]` encode/decode symbol rates (matched by lane count),
+//! - `shard_sweep[]` encode/decode/streaming-decode rates (matched by
+//!   shard budget).
+//!
+//! Metrics present in only one document are listed as added/removed, not
+//! failed — the gate must not block PRs that extend the bench. A baseline
+//! with `"placeholder": true` puts the gate in **seed mode**: the report
+//! is still produced (and uploaded by CI), but nothing can fail; commit a
+//! measured `BENCH_hotpath.json` from the CI runner class as
+//! `rust/benches/BENCH_baseline.json` to arm the gate.
+
+use cpcm::util::json::Json;
+use std::collections::BTreeMap;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: bench_compare <baseline.json> <current.json> \
+         [--tolerance 0.25] [--report out.md]"
+    );
+    std::process::exit(2)
+}
+
+/// Flatten one BENCH_hotpath.json document into metric-name → throughput.
+fn metrics(doc: &Json) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    if let Some(samples) = doc.get("samples").and_then(|v| v.as_arr()) {
+        for s in samples {
+            if let (Some(name), Some(t)) = (
+                s.get("name").and_then(|v| v.as_str()),
+                s.get("melems_per_sec").and_then(|v| v.as_f64()),
+            ) {
+                out.insert(format!("sample: {name}"), t);
+            }
+        }
+    }
+    if let Some(rows) = doc.get("lane_scaling").and_then(|v| v.as_arr()) {
+        for r in rows {
+            let Some(lanes) = r.get("lanes").and_then(|v| v.as_u64()) else { continue };
+            for key in ["encode_syms_per_sec", "decode_syms_per_sec"] {
+                if let Some(t) = r.get(key).and_then(|v| v.as_f64()) {
+                    out.insert(format!("lanes={lanes} {key}"), t);
+                }
+            }
+        }
+    }
+    if let Some(rows) = doc.get("shard_sweep").and_then(|v| v.as_arr()) {
+        for r in rows {
+            let Some(sb) = r.get("shard_bytes").and_then(|v| v.as_u64()) else { continue };
+            for key in
+                ["encode_syms_per_sec", "decode_syms_per_sec", "decode_stream_syms_per_sec"]
+            {
+                // 0 marks "not measured at this point" (e.g. streaming
+                // decode on the unsharded row) — not a metric.
+                if let Some(t) = r.get(key).and_then(|v| v.as_f64()).filter(|&t| t > 0.0) {
+                    out.insert(format!("shard_bytes={sb} {key}"), t);
+                }
+            }
+        }
+    }
+    out
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut paths: Vec<&str> = Vec::new();
+    let mut tolerance = 0.25f64;
+    let mut report_path: Option<&str> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--tolerance" => {
+                i += 1;
+                tolerance = args.get(i).and_then(|s| s.parse().ok()).unwrap_or_else(|| usage());
+            }
+            "--report" => {
+                i += 1;
+                report_path = Some(args.get(i).map(|s| s.as_str()).unwrap_or_else(|| usage()));
+            }
+            p => paths.push(p),
+        }
+        i += 1;
+    }
+    if paths.len() != 2 {
+        usage();
+    }
+    let read = |p: &str| -> Json {
+        let text = std::fs::read_to_string(p).unwrap_or_else(|e| {
+            eprintln!("bench_compare: cannot read {p}: {e}");
+            std::process::exit(2)
+        });
+        Json::parse(&text).unwrap_or_else(|e| {
+            eprintln!("bench_compare: {p} is not valid JSON: {e}");
+            std::process::exit(2)
+        })
+    };
+    let baseline = read(paths[0]);
+    let current = read(paths[1]);
+    let seed_mode = baseline.get("placeholder").and_then(|v| v.as_bool()).unwrap_or(false);
+
+    let base = metrics(&baseline);
+    let cur = metrics(&current);
+
+    let mut report = String::new();
+    report.push_str("# Bench regression report (hotpath)\n\n");
+    report.push_str(&format!(
+        "baseline: `{}` · current: `{}` · tolerance: fail below {:.0}% of baseline\n\n",
+        paths[0],
+        paths[1],
+        (1.0 - tolerance) * 100.0
+    ));
+
+    let mut regressions = 0usize;
+    if seed_mode {
+        report.push_str(
+            "**SEED MODE** — the committed baseline is a placeholder (no measured \
+             numbers yet). Nothing can fail. To arm the gate, download this run's \
+             `BENCH_hotpath` artifact and commit it as `rust/benches/BENCH_baseline.json`.\n\n",
+        );
+    }
+    report.push_str("| metric | baseline | current | ratio | status |\n");
+    report.push_str("|---|---|---|---|---|\n");
+    for (name, &b) in &base {
+        let Some(&c) = cur.get(name) else {
+            report.push_str(&format!("| {name} | {b:.3e} | — | — | removed |\n"));
+            continue;
+        };
+        let ratio = if b > 0.0 { c / b } else { f64::INFINITY };
+        let status = if ratio < 1.0 - tolerance {
+            regressions += 1;
+            "**REGRESSION**"
+        } else if ratio > 1.0 + tolerance {
+            "improved"
+        } else {
+            "ok"
+        };
+        report.push_str(&format!("| {name} | {b:.3e} | {c:.3e} | {ratio:.2}x | {status} |\n"));
+    }
+    for (name, &c) in &cur {
+        if !base.contains_key(name) {
+            report.push_str(&format!("| {name} | — | {c:.3e} | — | added |\n"));
+        }
+    }
+    report.push('\n');
+    let verdict = if seed_mode {
+        "seed mode: gate not armed".to_string()
+    } else if regressions > 0 {
+        format!("{regressions} metric(s) regressed more than {:.0}%", tolerance * 100.0)
+    } else {
+        format!(
+            "no regression beyond {:.0}% across {} shared metrics",
+            tolerance * 100.0,
+            base.keys().filter(|k| cur.contains_key(*k)).count()
+        )
+    };
+    report.push_str(&format!("**Verdict:** {verdict}\n"));
+
+    print!("{report}");
+    if let Some(p) = report_path {
+        if let Err(e) = std::fs::write(p, &report) {
+            eprintln!("bench_compare: cannot write report {p}: {e}");
+            std::process::exit(2);
+        }
+        eprintln!("wrote {p}");
+    }
+    if regressions > 0 && !seed_mode {
+        std::process::exit(1);
+    }
+}

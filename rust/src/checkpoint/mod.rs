@@ -13,9 +13,11 @@
 
 mod reader;
 mod store;
+mod writer;
 
 pub use reader::CheckpointFileReader;
 pub use store::Store;
+pub use writer::CheckpointFileWriter;
 
 use crate::tensor::{Tensor, TensorSet};
 use crate::util::rng::Pcg64;

@@ -7,7 +7,8 @@
 //! whole. It implements [`crate::codec::sharded::ShardSource`], which is
 //! what lets [`crate::codec::sharded::encode_streaming`] compress a
 //! larger-than-RAM checkpoint with peak memory bounded by the shard
-//! budget.
+//! budget. [`super::CheckpointFileWriter`] is the seek-based write-side
+//! counterpart used by the streaming decoder.
 
 use super::{read_u16, read_u32, read_u64, MAGIC};
 use crate::codec::sharded::ShardSource;

@@ -29,13 +29,16 @@ impl Store {
         &self.root
     }
 
-    fn path_for(&self, step: u64) -> PathBuf {
+    /// Path the checkpoint for `step` is (or would be) stored at — the
+    /// seek-based writers of the streaming restore produce files here
+    /// directly, so [`Store::reader`] can serve them back by range.
+    pub fn file_path(&self, step: u64) -> PathBuf {
         self.root.join(format!("ckpt_{step:010}.bin"))
     }
 
     /// Atomically persist a checkpoint.
     pub fn save(&self, ck: &Checkpoint) -> Result<PathBuf> {
-        let final_path = self.path_for(ck.step);
+        let final_path = self.file_path(ck.step);
         let tmp = self.root.join(format!(".tmp_ckpt_{}", ck.step));
         {
             let mut w = BufWriter::new(fs::File::create(&tmp)?);
@@ -51,7 +54,7 @@ impl Store {
     /// instead of loading the whole file — see
     /// [`crate::checkpoint::CheckpointFileReader`]).
     pub fn reader(&self, step: u64) -> Result<super::CheckpointFileReader> {
-        let path = self.path_for(step);
+        let path = self.file_path(step);
         if !path.is_file() {
             return Err(Error::format(format!("no checkpoint for step {step} at {path:?}")));
         }
@@ -60,7 +63,7 @@ impl Store {
 
     /// Load the checkpoint saved at `step`.
     pub fn load(&self, step: u64) -> Result<Checkpoint> {
-        let path = self.path_for(step);
+        let path = self.file_path(step);
         let file = fs::File::open(&path).map_err(|e| {
             Error::format(format!("no checkpoint for step {step} at {path:?}: {e}"))
         })?;
@@ -98,13 +101,13 @@ impl Store {
     /// Remove the checkpoint at `step` (used by retention policies: once a
     /// compressed container is verified, the raw file can be dropped).
     pub fn remove(&self, step: u64) -> Result<()> {
-        fs::remove_file(self.path_for(step))?;
+        fs::remove_file(self.file_path(step))?;
         Ok(())
     }
 
     /// Size in bytes of the stored file for `step`.
     pub fn file_size(&self, step: u64) -> Result<u64> {
-        Ok(fs::metadata(self.path_for(step))?.len())
+        Ok(fs::metadata(self.file_path(step))?.len())
     }
 }
 

@@ -1,0 +1,236 @@
+//! Seek-based range-writes into a raw checkpoint file.
+//!
+//! [`CheckpointFileWriter`] is the write-side counterpart of
+//! [`super::CheckpointFileReader`]: it lays out a `ckpt_*.bin` file (the
+//! exact byte format of [`super::Checkpoint::write_to`]) from the tensor
+//! layout alone — magic, step, per-set tensor headers — and then serves
+//! arbitrary `(set, tensor, range)` value writes by seeking. The restored
+//! checkpoint is never resident as a whole, which is what lets
+//! [`crate::codec::sharded::decode_streaming`] restore a larger-than-RAM
+//! container shard by shard with peak memory bounded by the shard budget.
+//!
+//! Once every element has been written the file is byte-identical to
+//! `Checkpoint::write_to` of the same data (unwritten ranges read as
+//! 0.0f32 — the file is sized up front via `set_len`).
+
+use super::MAGIC;
+use crate::{Error, Result};
+use std::fs::File;
+use std::io::{Seek, SeekFrom, Write};
+use std::ops::Range;
+use std::path::Path;
+
+/// Pre-laid-out raw checkpoint file accepting ranged value writes.
+pub struct CheckpointFileWriter {
+    file: File,
+    counts: Vec<usize>,
+    /// `data_offsets[set][tensor]` — file offset of the tensor's first f32.
+    data_offsets: [Vec<u64>; 3],
+}
+
+impl CheckpointFileWriter {
+    /// Create `path` and write the full framing (magic, step, three
+    /// tensor-set header blocks), leaving the value regions to be filled
+    /// by [`Self::write_values`]. `names` must be strictly ascending (the
+    /// order [`super::Checkpoint::write_to`] produces); `shapes` is
+    /// parallel to it and shared by the three sets.
+    pub fn create(
+        path: impl AsRef<Path>,
+        step: u64,
+        names: &[String],
+        shapes: &[Vec<usize>],
+    ) -> Result<Self> {
+        if names.len() != shapes.len() {
+            return Err(Error::shape("names and shapes must be parallel"));
+        }
+        if names.len() > u32::MAX as usize {
+            return Err(Error::format("too many tensors"));
+        }
+        if names.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(Error::format("checkpoint tensors must be strictly name-sorted"));
+        }
+        let counts: Vec<usize> = shapes
+            .iter()
+            .map(|s| {
+                s.iter()
+                    .try_fold(1usize, |a, &d| a.checked_mul(d))
+                    .ok_or_else(|| Error::format("tensor shape product overflows"))
+            })
+            .collect::<Result<_>>()?;
+
+        let mut file = File::create(path.as_ref())?;
+        file.write_all(MAGIC)?;
+        file.write_all(&step.to_le_bytes())?;
+        let mut data_offsets: [Vec<u64>; 3] = Default::default();
+        for offsets in data_offsets.iter_mut() {
+            file.write_all(&(names.len() as u32).to_le_bytes())?;
+            for ((name, shape), &count) in names.iter().zip(shapes).zip(&counts) {
+                let name_bytes = name.as_bytes();
+                if name_bytes.len() > u16::MAX as usize {
+                    return Err(Error::format("tensor name too long"));
+                }
+                if shape.len() > u8::MAX as usize {
+                    return Err(Error::format("tensor rank too large"));
+                }
+                file.write_all(&(name_bytes.len() as u16).to_le_bytes())?;
+                file.write_all(name_bytes)?;
+                file.write_all(&[shape.len() as u8])?;
+                for &d in shape {
+                    if d > u32::MAX as usize {
+                        return Err(Error::format("tensor dimension too large"));
+                    }
+                    file.write_all(&(d as u32).to_le_bytes())?;
+                }
+                let offset = file.stream_position()?;
+                let data_bytes = (count as u64)
+                    .checked_mul(4)
+                    .ok_or_else(|| Error::format("tensor data size overflows"))?;
+                offsets.push(offset);
+                file.seek(SeekFrom::Start(
+                    offset
+                        .checked_add(data_bytes)
+                        .ok_or_else(|| Error::format("checkpoint file size overflows"))?,
+                ))?;
+            }
+        }
+        // Materialize the trailing value region so the file has its final
+        // size even before the last write lands.
+        let end = file.stream_position()?;
+        file.set_len(end)?;
+        Ok(Self { file, counts, data_offsets })
+    }
+
+    /// Per-tensor element counts.
+    pub fn counts(&self) -> &[usize] {
+        &self.counts
+    }
+
+    /// Write elements `range` of tensor `tensor` in `set` (0 = weights,
+    /// 1 = first moment, 2 = second moment). `vals.len()` must equal
+    /// `range.len()`.
+    pub fn write_values(
+        &mut self,
+        set: usize,
+        tensor: usize,
+        range: Range<usize>,
+        vals: &[f32],
+    ) -> Result<()> {
+        let offsets = self
+            .data_offsets
+            .get(set)
+            .ok_or_else(|| Error::shape(format!("set {set} out of range")))?;
+        let (&offset, &count) = offsets
+            .get(tensor)
+            .zip(self.counts.get(tensor))
+            .ok_or_else(|| Error::shape(format!("tensor {tensor} out of range")))?;
+        if range.start > range.end || range.end > count {
+            return Err(Error::shape("value range out of tensor bounds"));
+        }
+        if vals.len() != range.len() {
+            return Err(Error::shape("value count does not match the range"));
+        }
+        self.file.seek(SeekFrom::Start(offset + range.start as u64 * 4))?;
+        let mut bytes = Vec::with_capacity(vals.len() * 4);
+        for &x in vals {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        self.file.write_all(&bytes)?;
+        Ok(())
+    }
+
+    /// Flush and close the file.
+    pub fn finish(mut self) -> Result<()> {
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::{Checkpoint, CheckpointFileReader};
+    use std::path::PathBuf;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("cpcm_writer_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn ranged_writes_reproduce_write_to_bytes() {
+        let dir = tmpdir("bytes");
+        let ck = Checkpoint::synthetic(
+            31,
+            &[("a.w", vec![7, 5]), ("b.w", vec![13]), ("z", vec![2, 2, 2])],
+            3,
+        );
+        let names: Vec<String> = ck.weights.iter().map(|e| e.name.clone()).collect();
+        let shapes: Vec<Vec<usize>> =
+            ck.weights.iter().map(|e| e.tensor.shape().to_vec()).collect();
+        let path = dir.join("out.bin");
+        let mut w = CheckpointFileWriter::create(&path, 31, &names, &shapes).unwrap();
+        assert_eq!(w.counts(), &[35, 13, 8]);
+        // Scattered, out-of-order, fragment-sized writes.
+        let sets = [&ck.weights, &ck.exp_avg, &ck.exp_avg_sq];
+        for set in [1usize, 0, 2] {
+            for (ti, e) in sets[set].iter().enumerate() {
+                let data = e.tensor.data();
+                let n = data.len();
+                // Back half first, then front half.
+                w.write_values(set, ti, n / 2..n, &data[n / 2..]).unwrap();
+                w.write_values(set, ti, 0..n / 2, &data[..n / 2]).unwrap();
+            }
+        }
+        w.finish().unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), ck.to_bytes());
+        // And the seekable reader serves it back.
+        let mut r = CheckpointFileReader::open(&path).unwrap();
+        assert_eq!(r.step(), 31);
+        let a = ck.weights.get("a.w").unwrap();
+        assert_eq!(r.read_values(0, 0, 3..9).unwrap(), &a.data()[3..9]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bounds_and_layout_enforced() {
+        let dir = tmpdir("bounds");
+        let path = dir.join("out.bin");
+        let names = vec!["a".to_string(), "b".to_string()];
+        let shapes = vec![vec![2usize, 3], vec![4usize]];
+        let mut w = CheckpointFileWriter::create(&path, 1, &names, &shapes).unwrap();
+        assert!(w.write_values(0, 0, 0..7, &[0.0; 7]).is_err(), "past tensor end");
+        assert!(w.write_values(0, 2, 0..1, &[0.0]).is_err(), "no such tensor");
+        assert!(w.write_values(3, 0, 0..1, &[0.0]).is_err(), "no such set");
+        assert!(w.write_values(0, 0, 0..2, &[0.0; 3]).is_err(), "length mismatch");
+        w.write_values(0, 0, 0..0, &[]).unwrap();
+        // Unsorted names rejected.
+        let bad = vec!["b".to_string(), "a".to_string()];
+        assert!(CheckpointFileWriter::create(dir.join("x.bin"), 1, &bad, &shapes).is_err());
+        // Mismatched arity rejected.
+        assert!(
+            CheckpointFileWriter::create(dir.join("y.bin"), 1, &names, &shapes[..1].to_vec())
+                .is_err()
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unwritten_ranges_read_as_zero() {
+        let dir = tmpdir("zero");
+        let path = dir.join("out.bin");
+        let names = vec!["w".to_string()];
+        let shapes = vec![vec![4usize]];
+        let mut w = CheckpointFileWriter::create(&path, 9, &names, &shapes).unwrap();
+        w.write_values(0, 0, 1..3, &[1.5, -2.5]).unwrap();
+        // Other sets/ranges untouched.
+        w.finish().unwrap();
+        let ck = Checkpoint::from_bytes(&std::fs::read(&path).unwrap()).unwrap();
+        assert_eq!(ck.step, 9);
+        assert_eq!(ck.weights.get("w").unwrap().data(), &[0.0, 1.5, -2.5, 0.0]);
+        assert!(ck.exp_avg.get("w").unwrap().data().iter().all(|&x| x == 0.0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -16,8 +16,10 @@
 //! loads a base config that individual flags then override.
 //!
 //! `decompress` restores through the directory's `manifest.json` when one
-//! is present (decoding only the requested step's reference ancestry) and
-//! falls back to a full chain decode for manifest-less directories.
+//! is present (decoding only the requested step's reference ancestry —
+//! streamed shard-by-shard to disk when the whole ancestry is format 3,
+//! so restore memory stays bounded by the shard budget) and falls back to
+//! a full chain decode for manifest-less directories.
 
 mod args;
 
@@ -26,7 +28,7 @@ use crate::codec::ContextMode;
 use crate::config::{BackendKind, ExperimentConfig};
 use crate::container::Container;
 use crate::coordinator::{
-    decode_chain, restore_step, ChainManifest, Coordinator, CoordinatorConfig,
+    decode_chain, restore_step_to_file, ChainManifest, Coordinator, CoordinatorConfig,
 };
 use crate::lstm::Backend;
 use crate::runtime::RuntimeHandle;
@@ -270,8 +272,11 @@ fn cmd_compress(args: Args) -> Result<()> {
 
 /// `cpcm decompress` — restore the checkpoint at `--step` and write the
 /// raw checkpoint file. With a `manifest.json` in the container directory
-/// only the step's reference ancestry is decoded (random access);
-/// otherwise the chain is decoded front-to-back up to the step.
+/// only the step's reference ancestry is decoded, and all-format-3
+/// ancestries restore **streaming**: shard-by-shard to disk with
+/// references read by range, so recovery works for checkpoints larger
+/// than RAM ([`crate::coordinator::restore_step_to_file`]). Manifest-less
+/// directories decode the chain front-to-back up to the step.
 fn cmd_decompress(args: Args) -> Result<()> {
     let cpcm = args.req("cpcm")?;
     let step: u64 = parse_num(args.req("step")?, "step")?;
@@ -280,16 +285,19 @@ fn cmd_decompress(args: Args) -> Result<()> {
     let artifacts = args.get("artifacts").unwrap_or("artifacts");
     let backend = make_backend(backend_kind, artifacts)?;
     let dir = std::path::Path::new(cpcm);
-    let ck = if ChainManifest::exists_in(dir) {
-        restore_step(dir, &backend, step)?
+    if ChainManifest::exists_in(dir) {
+        restore_step_to_file(dir, &backend, step, std::path::Path::new(out))?;
+        let params: usize =
+            crate::checkpoint::CheckpointFileReader::open(out)?.counts().iter().sum();
+        println!("wrote step {step} ({params} params) to {out}");
     } else {
-        decode_chain(dir, &backend, Some(step))?
+        let ck = decode_chain(dir, &backend, Some(step))?
             .into_iter()
             .find(|c| c.step == step)
-            .ok_or_else(|| Error::config(format!("step {step} not found in {cpcm}")))?
-    };
-    std::fs::write(out, ck.to_bytes())?;
-    println!("wrote step {step} ({} params) to {out}", ck.param_count());
+            .ok_or_else(|| Error::config(format!("step {step} not found in {cpcm}")))?;
+        std::fs::write(out, ck.to_bytes())?;
+        println!("wrote step {step} ({} params) to {out}", ck.param_count());
+    }
     Ok(())
 }
 

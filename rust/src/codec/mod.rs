@@ -78,10 +78,12 @@ mod lanes;
 mod shard;
 pub mod sharded;
 mod stream;
+pub mod syms;
 
 pub use lanes::LanePlan;
 pub use shard::{Fragment, Pos, ShardIndexEntry, ShardLayout, ShardPlan};
 pub use stream::{StreamCoder, StreamDecoder};
+pub use syms::{SymbolMapFileReader, SymbolMapFileWriter, SymbolSink, SymbolSource};
 
 use shard::ShardIndexBuilder;
 
@@ -555,6 +557,91 @@ fn dequant_symbols_into(
     Ok(())
 }
 
+/// One tensor's reference-symbol view for one shard: either the full
+/// in-memory map, or an owned row-aligned *window* of it sized to the
+/// shard plan (rows the shard's contexts can touch, fragment rows ±
+/// `window/2`), built from ranged [`SymbolSource`] reads on the streaming
+/// paths. For every position a shard visits the two variants produce
+/// bit-identical contexts and warmup targets — pinned by the
+/// streamed ≡ in-memory byte-equality tests.
+pub(crate) enum MapView<'a> {
+    Full(&'a [u16]),
+    Window {
+        data: Vec<u16>,
+        /// Flat element offset of `data[0]` within the full map.
+        start: usize,
+    },
+}
+
+impl MapView<'_> {
+    /// Gather the context of flat position `idx` through `ex`.
+    #[inline]
+    fn extract(&self, ex: &ContextExtractor, idx: usize, out: &mut [i32]) {
+        match self {
+            MapView::Full(m) => ex.extract_into(m, idx, out),
+            MapView::Window { data, start } => ex.extract_window_into(data, *start, idx, out),
+        }
+    }
+
+    /// Symbol at flat position `idx` (None when outside the window).
+    #[inline]
+    fn get(&self, idx: usize) -> Option<u16> {
+        match self {
+            MapView::Full(m) => m.get(idx).copied(),
+            MapView::Window { data, start } => {
+                idx.checked_sub(*start).and_then(|o| data.get(o)).copied()
+            }
+        }
+    }
+}
+
+/// Per-tensor reference views for one (shard, set) — what the lane coders
+/// and the reference warmup read contexts from.
+pub(crate) struct RefMapViews<'a> {
+    /// Indexed by tensor id; None for tensors without a reference map in
+    /// scope (full path: map missing; streaming path: tensor not in shard).
+    views: Vec<Option<MapView<'a>>>,
+}
+
+impl<'a> RefMapViews<'a> {
+    /// Views over full in-memory maps (the non-streaming paths).
+    fn full(maps: &'a [Vec<u16>]) -> Self {
+        Self { views: maps.iter().map(|m| Some(MapView::Full(m))).collect() }
+    }
+
+    /// Empty view set for `n` tensors, to be filled with windows.
+    pub(crate) fn windowed(n: usize) -> Self {
+        Self { views: (0..n).map(|_| None).collect() }
+    }
+
+    /// Install `view` for `tensor`.
+    pub(crate) fn set(&mut self, tensor: usize, view: MapView<'a>) {
+        self.views[tensor] = Some(view);
+    }
+
+    /// The view of `tensor`, if any.
+    #[inline]
+    fn view(&self, tensor: usize) -> Option<&MapView<'a>> {
+        self.views.get(tensor).and_then(|v| v.as_ref())
+    }
+}
+
+/// Context gather with an optional view: zeros when no reference map is
+/// in scope (intra frames, zero-context mode) — the view-typed counterpart
+/// of [`ContextExtractor::extract_or_zero`].
+#[inline]
+fn extract_view_or_zero(
+    ex: &ContextExtractor,
+    view: Option<&MapView<'_>>,
+    idx: usize,
+    out: &mut [i32],
+) {
+    match view {
+        Some(v) => v.extract(ex, idx, out),
+        None => out.fill(0),
+    }
+}
+
 /// Add the reference weights back onto decoded/reconstructed weight
 /// residuals in place — the shared final step of every delta decode, kept
 /// as one function so encoder reconstruction and decoder output perform
@@ -923,6 +1010,7 @@ impl Codec {
             + usize::from(v3);
         let mut w = ContainerStreamWriter::new(sink, &prep.header, n_blobs as u32)?;
         let mut index: Vec<ShardIndexEntry> = Vec::with_capacity(prep.shards.len());
+        let ref_views = self.full_ref_views(prev_syms);
         let mut frag_cursor = 0usize;
         for sp in &prep.shards {
             let nf = sp.fragments().len();
@@ -940,7 +1028,7 @@ impl Codec {
             let out = self.encode_shard_blobs(
                 sp,
                 &prep.extractors,
-                prev_syms,
+                &ref_views,
                 frag_centers,
                 [&frag_syms[0], &frag_syms[1], &frag_syms[2]],
             )?;
@@ -969,19 +1057,21 @@ impl Codec {
     /// Entropy-code one shard into its container blobs (per set: fragment
     /// center tables, then `lanes` lane streams). The `3 × lanes` lane
     /// tasks run on the persistent pool; blob bytes are a pure function of
-    /// (config, symbols, reference maps), independent of scheduling.
+    /// (config, symbols, reference views), independent of scheduling.
+    /// `ref_views` carries the per-set reference-symbol views — full maps
+    /// on the in-memory path, per-shard windows on the streaming path.
     fn encode_shard_blobs(
         &self,
         sp: &ShardPlan,
         extractors: &[ContextExtractor],
-        prev_syms: Option<&SymbolMaps>,
+        ref_views: &[Option<RefMapViews<'_>>; 3],
         frag_centers: [&[Vec<f32>]; 3],
         frag_syms: [&[&[u16]]; 3],
     ) -> Result<ShardEncodeOut> {
         let lanes = sp.lanes();
         let mut ltasks: Vec<Task<Result<LaneOut>>> = Vec::with_capacity(3 * lanes);
         for k in 0..3 {
-            let ref_maps = self.reference_maps(prev_syms, k);
+            let ref_maps = ref_views[k].as_ref();
             let syms = frag_syms[k];
             for lane in 0..lanes {
                 ltasks.push(Box::new(move || {
@@ -1044,17 +1134,27 @@ impl Codec {
         Ok((recon, syms))
     }
 
-    /// The reference symbol maps used for set `k`'s contexts (None unless
-    /// the mode consumes reference context and the maps are available).
-    fn reference_maps<'a>(
+    /// The reference views used for set `k`'s contexts (None unless the
+    /// mode consumes reference context and the maps are available).
+    fn reference_views<'a>(
         &self,
         prev_syms: Option<&'a SymbolMaps>,
         k: usize,
-    ) -> Option<&'a [Vec<u16>]> {
+    ) -> Option<RefMapViews<'a>> {
         match (self.cfg.mode.uses_reference_context(), prev_syms) {
-            (true, Some(p)) => Some(p.sets[k].as_slice()),
+            (true, Some(p)) => Some(RefMapViews::full(p.sets[k].as_slice())),
             _ => None,
         }
+    }
+
+    /// All three sets' full-map reference views at once (the in-memory
+    /// encode/decode paths; the streaming paths build windowed views per
+    /// shard instead — see [`sharded`]).
+    fn full_ref_views<'a>(
+        &self,
+        prev_syms: Option<&'a SymbolMaps>,
+    ) -> [Option<RefMapViews<'a>>; 3] {
+        std::array::from_fn(|k| self.reference_views(prev_syms, k))
     }
 
     /// Context extractors for a set's tensors (encode side).
@@ -1098,13 +1198,14 @@ impl Codec {
     /// Encode one lane of one parameter set over one shard (runs on a pool
     /// worker). `frag_syms` holds the shard's quantized symbols per
     /// fragment; contexts index the *full-tensor* extractors and reference
-    /// maps via the walk's tensor coordinates, so a fragment that starts
-    /// mid-tensor still sees its true 2-D neighborhood.
+    /// views via the walk's tensor coordinates, so a fragment that starts
+    /// mid-tensor still sees its true 2-D neighborhood (windowed views
+    /// cover exactly those rows).
     fn encode_lane(
         &self,
         sp: &ShardPlan,
         extractors: &[ContextExtractor],
-        ref_maps: Option<&[Vec<u16>]>,
+        ref_maps: Option<&RefMapViews<'_>>,
         frag_syms: &[&[u16]],
         lane: usize,
     ) -> Result<LaneOut> {
@@ -1128,8 +1229,8 @@ impl Codec {
                 let mut coder = StreamCoder::new(model);
                 let mut ctx = vec![0i32; seq];
                 for p in sp.iter_lane(lane) {
-                    let map = ref_maps.and_then(|m| m.get(p.tensor)).map(|v| v.as_slice());
-                    extractors[p.tensor].extract_or_zero(map, p.elem, &mut ctx);
+                    let view = ref_maps.and_then(|m| m.view(p.tensor));
+                    extract_view_or_zero(&extractors[p.tensor], view, p.elem, &mut ctx);
                     coder.push(&ctx, frag_syms[p.frag][p.local])?;
                 }
                 let (bytes, loss, _ideal) = coder.finish()?;
@@ -1144,7 +1245,7 @@ impl Codec {
         &self,
         sp: &ShardPlan,
         extractors: &[ContextExtractor],
-        ref_maps: Option<&[Vec<u16>]>,
+        ref_maps: Option<&RefMapViews<'_>>,
         stream: &[u8],
         lane: usize,
     ) -> Result<Vec<u16>> {
@@ -1165,8 +1266,8 @@ impl Codec {
                 let mut sd = StreamDecoder::new(model, stream)?;
                 let mut ctx = vec![0i32; seq];
                 for p in sp.iter_lane(lane) {
-                    let map = ref_maps.and_then(|m| m.get(p.tensor)).map(|v| v.as_slice());
-                    extractors[p.tensor].extract_or_zero(map, p.elem, &mut ctx);
+                    let view = ref_maps.and_then(|m| m.view(p.tensor));
+                    extract_view_or_zero(&extractors[p.tensor], view, p.elem, &mut ctx);
                     sd.push(&ctx)?;
                 }
                 sd.flush()?;
@@ -1179,15 +1280,17 @@ impl Codec {
     /// paper; `cfg.warmup_passes`, 0 = paper-exact): train the fresh lane
     /// model on the reference checkpoint's own (context → co-located
     /// symbol) pairs before any coding. Both sides hold the reference
-    /// symbol maps, so the passes are bit-free and exactly mirrored. Each
+    /// symbol views, so the passes are bit-free and exactly mirrored. Each
     /// lane warms on *its own* slice of the reference, keeping total
-    /// warmup cost constant in the lane and shard counts.
+    /// warmup cost constant in the lane and shard counts. Windowed views
+    /// cover every position the lane visits, so the streaming paths warm
+    /// up on the identical pairs — bit-identical statistics.
     fn warmup_lane(
         &self,
         model: &mut Box<dyn ProbModel>,
         sp: &ShardPlan,
         extractors: &[ContextExtractor],
-        ref_maps: &[Vec<u16>],
+        ref_maps: &RefMapViews<'_>,
         lane: usize,
     ) -> Result<()> {
         let cfg = &self.cfg;
@@ -1205,10 +1308,13 @@ impl Codec {
                 if step % stride != 0 {
                     continue;
                 }
-                let Some(map) = ref_maps.get(p.tensor) else { continue };
-                extractors[p.tensor].extract_into(map, p.elem, &mut ctx);
+                let Some(map) = ref_maps.view(p.tensor) else { continue };
+                map.extract(&extractors[p.tensor], p.elem, &mut ctx);
+                let target = map
+                    .get(p.elem)
+                    .ok_or_else(|| Error::codec("reference window missed a warmup target"))?;
                 ctxs.extend_from_slice(&ctx);
-                tgts.push(map[p.elem]);
+                tgts.push(target);
                 if tgts.len() == batch {
                     model.update(&ctxs, &tgts)?;
                     ctxs.clear();
@@ -1234,7 +1340,7 @@ impl Codec {
         prev_syms: Option<&SymbolMaps>,
     ) -> Result<(Checkpoint, SymbolMaps)> {
         let container = Container::from_bytes(bytes)?;
-        let hdr = parse_untrusted_header(&container, bytes.len(), backend)?;
+        let hdr = parse_untrusted_header(&container.header, bytes.len(), backend)?;
         let prev = check_chain_inputs(&hdr, reference, prev_syms)?;
 
         let codec = Codec::new(hdr.cfg.clone(), backend.clone());
@@ -1332,6 +1438,7 @@ impl Codec {
     ) -> Result<([Vec<Vec<f32>>; 3], SymbolMaps)> {
         let counts = geom.layout.counts();
         let extractors = self.build_extractors_from_shapes(shapes)?;
+        let ref_views = self.full_ref_views(prev_syms);
         let mut syms_sets: [Vec<Vec<u16>>; 3] =
             std::array::from_fn(|_| counts.iter().map(|&c| vec![0u16; c]).collect());
         let mut vals: [Vec<Vec<f32>>; 3] =
@@ -1342,7 +1449,7 @@ impl Codec {
                 cursor,
                 sp,
                 &extractors,
-                prev_syms,
+                &ref_views,
                 &mut syms_sets,
                 &mut vals,
             )?;
@@ -1364,7 +1471,7 @@ impl Codec {
         cursor: usize,
         sp: &ShardPlan,
         extractors: &[ContextExtractor],
-        prev_syms: Option<&SymbolMaps>,
+        ref_views: &[Option<RefMapViews<'_>>; 3],
         out_syms: &mut [Vec<Vec<u16>>; 3],
         out_vals: &mut [Vec<Vec<f32>>; 3],
     ) -> Result<()> {
@@ -1377,7 +1484,7 @@ impl Codec {
             for fi in 0..nf {
                 centers[k].push(centers_from_bytes(container.blob(base + fi)?)?);
             }
-            let ref_maps = self.reference_maps(prev_syms, k);
+            let ref_maps = ref_views[k].as_ref();
             for lane in 0..lanes {
                 let stream = container.blob(base + nf + lane)?;
                 tasks.push(Box::new(move || {
@@ -1423,10 +1530,11 @@ impl Codec {
         let layout = ShardLayout::whole(counts.to_vec());
         let sp = ShardPlan::new(&layout, 0, lanes);
         let extractors = self.build_extractors_from_shapes(shapes)?;
+        let ref_views = self.full_ref_views(prev_syms);
         let mut tasks: Vec<Task<Result<Vec<u16>>>> = Vec::with_capacity(3 * lanes);
         for k in 0..3 {
             let base = k * (n_tensors + lanes) + n_tensors;
-            let ref_maps = self.reference_maps(prev_syms, k);
+            let ref_maps = ref_views[k].as_ref();
             for lane in 0..lanes {
                 let stream = container.blob(base + lane)?;
                 let sp = &sp;
@@ -1786,13 +1894,15 @@ pub(crate) struct DecodeHeader {
 /// Parse and cap-check a container header: format range, codec dimension
 /// caps ([`CodecConfig::validate_untrusted`]), backend match, checked
 /// tensor shape arithmetic, the declared-values plausibility cap and the
-/// lane bound.
+/// lane bound. Takes the bare header document so the whole-buffer decoder
+/// ([`Codec::decode`]), the random-access reader
+/// ([`sharded::decode_weight_tensor`]) and the streaming restorer
+/// ([`sharded::decode_streaming`]) all share one hardening path.
 pub(crate) fn parse_untrusted_header(
-    container: &Container,
+    h: &Json,
     container_bytes: usize,
     backend: &Backend,
 ) -> Result<DecodeHeader> {
-    let h = &container.header;
     let format = h.get("format").and_then(|v| v.as_u64()).unwrap_or(1);
     if !(1..=3).contains(&format) {
         return Err(Error::format(format!("unsupported container format {format}")));
@@ -1849,6 +1959,32 @@ pub(crate) fn parse_untrusted_header(
     Ok(DecodeHeader { format, cfg, step, ref_step, had_prev, names, shapes, counts })
 }
 
+/// The chain-input rule every decode path enforces identically, stated
+/// over the reference's *step* and the mere presence of prev-syms so the
+/// in-memory decoder ([`check_chain_inputs`]) and the streaming restorer
+/// ([`sharded::decode_streaming`], whose reference is a [`sharded::ShardSource`]
+/// rather than a [`Checkpoint`]) cannot drift: a context-mode container
+/// whose encoder had reference symbol maps needs them, and the supplied
+/// reference must match the header's `ref_step` exactly.
+pub(crate) fn check_chain_rule(
+    hdr: &DecodeHeader,
+    reference_step: Option<u64>,
+    have_prev_syms: bool,
+) -> Result<()> {
+    if hdr.had_prev && !have_prev_syms && hdr.cfg.mode.uses_reference_context() {
+        return Err(Error::codec(
+            "container requires the reference's symbol maps (decode the chain in order)",
+        ));
+    }
+    match (hdr.ref_step, reference_step) {
+        (Some(rs), Some(r)) if r != rs => Err(Error::codec(format!(
+            "reference step {r} does not match container ref_step {rs}"
+        ))),
+        (Some(rs), None) => Err(Error::codec(format!("container needs reference step {rs}"))),
+        _ => Ok(()),
+    }
+}
+
 /// Validate the caller-supplied chain inputs against the header and
 /// return `prev_syms` filtered to "the encoder actually had them".
 pub(crate) fn check_chain_inputs<'a>(
@@ -1856,23 +1992,7 @@ pub(crate) fn check_chain_inputs<'a>(
     reference: Option<&Checkpoint>,
     prev_syms: Option<&'a SymbolMaps>,
 ) -> Result<Option<&'a SymbolMaps>> {
-    if hdr.had_prev && prev_syms.is_none() && hdr.cfg.mode.uses_reference_context() {
-        return Err(Error::codec(
-            "container requires the reference's symbol maps (decode the chain in order)",
-        ));
-    }
-    match (hdr.ref_step, reference) {
-        (Some(rs), Some(r)) if r.step != rs => {
-            return Err(Error::codec(format!(
-                "reference step {} does not match container ref_step {rs}",
-                r.step
-            )));
-        }
-        (Some(rs), None) => {
-            return Err(Error::codec(format!("container needs reference step {rs}")));
-        }
-        _ => {}
-    }
+    check_chain_rule(hdr, reference.map(|r| r.step), prev_syms.is_some())?;
     Ok(prev_syms.filter(|_| hdr.had_prev))
 }
 
@@ -1909,17 +2029,11 @@ pub(crate) fn parse_v3_geometry(
         return Err(Error::format("header n_shards does not match the tensor layout"));
     }
     let lanes = hdr.cfg.lanes;
-    // Derive the expected blob count WITHOUT materializing per-shard
-    // plans: Σ fragments = Σ_t |shards intersecting tensor t| (O(tensors)),
-    // all checked — so a forged header declaring billions of shards is
-    // rejected by this count before any O(n_shards) allocation happens.
-    let total_fragments = (0..layout.counts().len())
-        .try_fold(0usize, |acc, ti| acc.checked_add(layout.tensor_shards(ti).len()));
-    let expected_blobs = total_fragments
-        .and_then(|f| layout.n_shards().checked_mul(lanes).and_then(|l| f.checked_add(l)))
-        .and_then(|n| n.checked_mul(3))
-        .and_then(|n| n.checked_add(1))
-        .ok_or_else(|| Error::format("format-3 blob count overflows"))?;
+    // Expected blob count in O(tensors) with checked arithmetic (see
+    // `ShardLayout::expected_v3_blobs`) — a forged header declaring
+    // billions of shards is rejected here before any O(n_shards)
+    // allocation happens.
+    let expected_blobs = layout.expected_v3_blobs(lanes)?;
     if container.blobs.len() != expected_blobs {
         return Err(Error::format(format!(
             "format-3 container has {} blobs, layout implies {expected_blobs}",

@@ -139,6 +139,23 @@ impl ShardLayout {
         out
     }
 
+    /// Total blob count a format-3 container over this layout carries:
+    /// `3 × (Σ fragments + n_shards × lanes) + 1` (the trailing shard
+    /// index). Computed in O(tensors) with checked arithmetic and WITHOUT
+    /// materializing per-shard plans, so a forged header declaring
+    /// billions of shards is rejected by a count comparison before any
+    /// O(n_shards) allocation happens. Shared by the whole-buffer and the
+    /// streaming decoders.
+    pub fn expected_v3_blobs(&self, lanes: usize) -> Result<usize> {
+        let total_fragments = (0..self.counts.len())
+            .try_fold(0usize, |acc, ti| acc.checked_add(self.tensor_shards(ti).len()));
+        total_fragments
+            .and_then(|f| self.n_shards.checked_mul(lanes).and_then(|l| f.checked_add(l)))
+            .and_then(|n| n.checked_mul(3))
+            .and_then(|n| n.checked_add(1))
+            .ok_or_else(|| Error::format("format-3 blob count overflows"))
+    }
+
     /// The shards whose position ranges intersect tensor `ti` (per-tensor
     /// random access decodes exactly these). Empty tensors resolve to the
     /// single shard holding their (empty) center table.

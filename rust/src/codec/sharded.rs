@@ -1,5 +1,5 @@
-//! Streaming sharded encode and random-access decode (container
-//! format 3) for larger-than-RAM checkpoints.
+//! Streaming sharded encode, streaming decode-to-disk and random-access
+//! decode (container format 3) for larger-than-RAM checkpoints.
 //!
 //! The in-memory pipeline ([`Codec::prepare`] / [`Codec::encode_prepared`])
 //! holds the whole residual, reconstruction and symbol maps at once. This
@@ -11,39 +11,53 @@
 //! - one shard of values per set (the `shard_bytes` budget),
 //! - one tensor during the per-tensor pruning-statistics pass
 //!   (`median(|W|)` and `mean(|v_t|)` are tensor-global, Eq. 4–5), and
-//! - the reference symbol maps *iff* a context mode is used (u16 per
-//!   position; `Order0` needs nothing and is fully streaming).
+//! - one shard's *windowed* reference symbol maps when a context mode is
+//!   used (fragment rows ± `window/2`, fetched by range through
+//!   [`SymbolSource`]; `Order0` needs nothing).
+//!
+//! [`decode_streaming`] is the restore mirror: it range-reads a format-3
+//! container through [`crate::container::ContainerFileReader`], decodes
+//! shard by shard (verifying each shard's index CRC as it goes), adds the
+//! delta reference back via ranged [`ShardSource`] reads, and scatters
+//! values straight into the raw `.bin` layout with the seek-based
+//! [`crate::checkpoint::CheckpointFileWriter`] — so a whole delta chain
+//! restores with peak RSS ~O(shard)
+//! ([`crate::coordinator::restore_step_to_file`]).
 //!
 //! The streamed container is **byte-identical** to the one the in-memory
 //! path writes for the same inputs: both build the header through
 //! `Codec::make_header`, prune through the shared per-element predicates
 //! ([`crate::prune::keep_weight`] / [`crate::prune::keep_momentum`]),
 //! quantize identical fragment slices, and entropy-code through
-//! `Codec::encode_shard_blobs`. The equivalence is pinned by tests here
-//! and by the round-trip property suite.
+//! `Codec::encode_shard_blobs`; the streamed restore likewise writes the
+//! exact bytes of `Checkpoint::to_bytes()` of the in-memory decode. Both
+//! equivalences are pinned by tests here and by the round-trip and
+//! streaming-restore property suites.
 //!
 //! [`decode_weight_tensor`] is the random-access read path: using the
 //! shard index it entropy-decodes only the shards a tensor intersects,
 //! instead of the whole container.
 
-use super::shard::{index_to_bytes, ShardIndexBuilder};
+use super::shard::{index_from_bytes, index_to_bytes, ShardIndexBuilder};
+use super::syms::{SymbolMapFileWriter, SymbolSink, SymbolSource};
 use super::{
     check_chain_inputs, checked_shape_count, maybe_log, parse_untrusted_header,
-    parse_v3_geometry, verify_shard_crc, Codec, SetStatsAcc, ShardLayout, ShardPlan,
-    SymbolMaps,
+    parse_v3_geometry, verify_shard_crc, Codec, ContextExtractor, MapView, RefMapViews,
+    SetStatsAcc, ShardLayout, ShardPlan, SymbolMaps,
 };
-use crate::checkpoint::Checkpoint;
+use crate::checkpoint::{Checkpoint, CheckpointFileWriter};
 use crate::codec::EncodeStats;
-use crate::container::{centers_from_bytes, Container, ContainerStreamWriter};
+use crate::container::{centers_from_bytes, Container, ContainerFileReader, ContainerStreamWriter};
 use crate::lstm::Backend;
 use crate::prune::{self, PruneConfig, PruneStats};
 use crate::quant::{self, Quantized};
-use crate::tensor::Tensor;
+use crate::tensor::{rows_cols_of, Tensor};
 use crate::util::pool::{self, Task};
 use crate::util::stats;
 use crate::{Error, Result};
 use std::io::Write;
 use std::ops::Range;
+use std::path::Path;
 
 /// Range-read access to one checkpoint's three parameter sets. The
 /// layout (`names`/`shapes`, name-sorted, shared by the sets) is known up
@@ -127,6 +141,46 @@ fn read_checked(
     Ok(v)
 }
 
+/// Build the per-set *windowed* reference views one shard's coding lanes
+/// and warmup read: for every payload fragment, the reference rows
+/// `fragment rows ± window/2` (clamped to the tensor) fetched by range
+/// from `src`. Contexts and warmup targets gathered through these windows
+/// are bit-identical to full-map gathers for every position the shard
+/// visits — pinned by the streamed ≡ in-memory equality tests.
+fn windowed_ref_views(
+    src: &mut dyn SymbolSource,
+    sp: &ShardPlan,
+    shapes: &[Vec<usize>],
+    n_tensors: usize,
+    window: usize,
+) -> Result<[Option<RefMapViews<'static>>; 3]> {
+    let half = window / 2;
+    let mut out: [Option<RefMapViews<'static>>; 3] =
+        std::array::from_fn(|_| Some(RefMapViews::windowed(n_tensors)));
+    for f in sp.fragments() {
+        if f.len == 0 {
+            continue;
+        }
+        // Non-empty fragment ⇒ the folded tensor has rows ≥ 1, cols ≥ 1.
+        let (rows, cols) = rows_cols_of(&shapes[f.tensor]);
+        let r0 = f.start / cols;
+        let r1 = (f.start + f.len - 1) / cols;
+        let lo = r0.saturating_sub(half) * cols;
+        let hi = (r1 + half + 1).min(rows) * cols;
+        for (k, views) in out.iter_mut().enumerate() {
+            let data = src.read_syms(k, f.tensor, lo..hi)?;
+            if data.len() != hi - lo {
+                return Err(Error::codec("symbol source returned wrong symbol count"));
+            }
+            views
+                .as_mut()
+                .expect("windowed views are Some by construction")
+                .set(f.tensor, MapView::Window { data, start: lo });
+        }
+    }
+    Ok(out)
+}
+
 /// Per-tensor pruning state computed in the statistics pass.
 struct PruneScalars {
     /// `median(|W|)` per tensor (Eq. 4).
@@ -138,9 +192,13 @@ struct PruneScalars {
 
 /// Encode `current` straight from a [`ShardSource`] into `out` as a
 /// format-3 container, shard by shard. `reference` (same layout) provides
-/// the delta reference for non-intra frames; `prev_syms` the reference's
-/// symbol maps for the context modes. Requires a sharded codec config
-/// (`shard_bytes > 0`).
+/// the delta reference for non-intra frames; `prev_syms` serves ranged
+/// reads of the reference's symbol maps for the context modes — per
+/// shard, only a *windowed* map (fragment rows ± `window/2`) is built
+/// from it, so even the chain state never has to be resident as a whole
+/// ([`SymbolMaps`] implements [`SymbolSource`] for in-memory callers;
+/// [`super::SymbolMapFileReader`] reads a `.syms` sidecar). Requires a
+/// sharded codec config (`shard_bytes > 0`).
 ///
 /// The output bytes equal `codec.encode(...)` for the same inputs; only
 /// the peak memory differs. The chain state (`recon`, `syms`) is *not*
@@ -150,7 +208,7 @@ pub fn encode_streaming<W: Write>(
     codec: &Codec,
     current: &mut dyn ShardSource,
     mut reference: Option<&mut dyn ShardSource>,
-    prev_syms: Option<&SymbolMaps>,
+    mut prev_syms: Option<&mut dyn SymbolSource>,
     out: W,
 ) -> Result<EncodeStats> {
     let t0 = std::time::Instant::now();
@@ -159,6 +217,7 @@ pub fn encode_streaming<W: Write>(
         return Err(Error::config("streaming encode requires codec.shard_bytes > 0"));
     }
     let lanes = cfg.effective_lanes();
+    let use_ctx = cfg.mode.uses_reference_context();
     let names = current.names().to_vec();
     let shapes = current.shapes().to_vec();
     if names.windows(2).any(|w| w[0] >= w[1]) {
@@ -172,7 +231,11 @@ pub fn encode_streaming<W: Write>(
     let counts: Vec<usize> =
         shapes.iter().map(|s| checked_shape_count(s)).collect::<Result<_>>()?;
     let total: usize = counts.iter().sum();
-    codec.check_ref_maps(prev_syms, &counts)?;
+    if use_ctx {
+        if let Some(src) = prev_syms.as_deref_mut() {
+            src.check_layout(&counts)?;
+        }
+    }
 
     let layout = ShardLayout::new(counts.clone(), cfg.shard_values())?;
     let plans: Vec<ShardPlan> =
@@ -220,10 +283,18 @@ pub fn encode_streaming<W: Write>(
             quantize_shard(codec, current, reference.as_deref_mut(), sp, &pcfg, &scalars)?;
         let syms_refs: [Vec<&[u16]>; 3] =
             std::array::from_fn(|k| frag_syms[k].iter().map(|v| v.as_slice()).collect());
+        // Windowed reference views: only the reference rows this shard's
+        // contexts can touch are read (and resident).
+        let ref_views: [Option<RefMapViews<'_>>; 3] = match prev_syms.as_deref_mut() {
+            Some(src) if use_ctx => {
+                windowed_ref_views(src, sp, &shapes, counts.len(), cfg.window)?
+            }
+            _ => std::array::from_fn(|_| None),
+        };
         let blobs = codec.encode_shard_blobs(
             sp,
             &extractors,
-            prev_syms,
+            &ref_views,
             [&frag_centers[0], &frag_centers[1], &frag_centers[2]],
             [&syms_refs[0], &syms_refs[1], &syms_refs[2]],
         )?;
@@ -369,7 +440,7 @@ pub fn decode_weight_tensor(
     let container = Container::from_bytes(bytes)?;
     // Same untrusted-header validation as the full decoder (shared helper
     // — hardening cannot drift between the two read paths).
-    let hdr = parse_untrusted_header(&container, bytes.len(), backend)?;
+    let hdr = parse_untrusted_header(&container.header, bytes.len(), backend)?;
     if hdr.format != 3 {
         return Err(Error::format(format!(
             "per-tensor random access needs a format-3 container (got {})",
@@ -389,6 +460,7 @@ pub fn decode_weight_tensor(
     let lanes = hdr.cfg.lanes;
 
     let extractors = codec.build_extractors_from_shapes(&hdr.shapes)?;
+    let ref_views0 = codec.reference_views(prev, 0);
     let mut vals = vec![0f32; hdr.counts[ti]];
     for s in geom.layout.tensor_shards(ti) {
         // The shards we are about to trust get their index CRC checked
@@ -403,7 +475,7 @@ pub fn decode_weight_tensor(
         for fi in 0..nf {
             centers.push(centers_from_bytes(container.blob(base + fi)?)?);
         }
-        let ref_maps = codec.reference_maps(prev, 0);
+        let ref_maps = ref_views0.as_ref();
         let mut tasks: Vec<Task<Result<Vec<u16>>>> = Vec::with_capacity(lanes);
         for lane in 0..lanes {
             let stream = container.blob(base + nf + lane)?;
@@ -457,6 +529,267 @@ pub fn decode_weight_tensor(
     Tensor::new(hdr.shapes[ti].clone(), vals)
 }
 
+/// What a [`decode_streaming`] run produced.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamRestoreStats {
+    /// Training step restored.
+    pub step: u64,
+    /// Shards decoded.
+    pub shards: usize,
+    /// True when a `.syms` sidecar was written (context mode + a sidecar
+    /// path was supplied) — the next chain step reads its reference
+    /// symbols from it.
+    pub wrote_syms: bool,
+}
+
+/// Restore a format-3 container shard by shard, writing the raw
+/// checkpoint straight to `out_path` (the exact byte format of
+/// [`Checkpoint::write_to`], via seek-based
+/// [`crate::checkpoint::CheckpointFileWriter`] range writes) — the decode
+/// mirror of [`encode_streaming`]. Peak memory is ~one shard: the
+/// container is range-read through [`ContainerFileReader`], the delta
+/// reference is range-read through a [`ShardSource`] (e.g.
+/// [`crate::checkpoint::Store::reader`]), and the reference symbol maps
+/// of the context modes are *windowed* per shard through a
+/// [`SymbolSource`].
+///
+/// Integrity: each shard's index CRC is verified as it is range-read
+/// (errors localize to a shard), and because the restore touches every
+/// body byte exactly once in file order, the container's trailer CRC —
+/// header bytes included — is verified in the same pass. Open the
+/// container with [`ContainerFileReader::open_streaming`] so nothing is
+/// read or hashed twice ([`ContainerFileReader::open`] also works; it
+/// just prepays a redundant whole-file pass).
+///
+/// `syms_out_path` (honored only for the reference-context modes) writes
+/// the decoded symbol maps as a `.syms` sidecar so the next chain step
+/// can read them back by range — see
+/// [`crate::coordinator::restore_step_to_file`] for the full on-disk
+/// chain walk.
+///
+/// The written file is byte-identical to `Checkpoint::to_bytes()` of the
+/// in-memory [`Codec::decode`] reconstruction — pinned by the streaming
+/// restore test battery.
+pub fn decode_streaming(
+    backend: &Backend,
+    container: &mut ContainerFileReader,
+    mut reference: Option<&mut dyn ShardSource>,
+    mut prev_syms: Option<&mut dyn SymbolSource>,
+    out_path: &Path,
+    syms_out_path: Option<&Path>,
+) -> Result<StreamRestoreStats> {
+    let hdr = parse_untrusted_header(container.header(), container.file_len() as usize, backend)?;
+    if hdr.format != 3 {
+        return Err(Error::format(format!(
+            "streaming restore needs a format-3 container (got {})",
+            hdr.format
+        )));
+    }
+    let codec = Codec::new(hdr.cfg.clone(), backend.clone());
+    let use_ctx = codec.cfg().mode.uses_reference_context();
+
+    // The shared chain-input rule (one implementation with the in-memory
+    // decoder — see `check_chain_rule`), plus the ranged-source extras:
+    // prev-syms filtering and the reference layout check.
+    super::check_chain_rule(
+        &hdr,
+        reference.as_deref().map(|r| r.step()),
+        prev_syms.is_some(),
+    )?;
+    if !(hdr.had_prev && use_ctx) {
+        prev_syms = None;
+    }
+    if let Some(r) = reference.as_deref() {
+        if r.names() != hdr.names.as_slice() || r.shapes() != hdr.shapes.as_slice() {
+            return Err(Error::shape("checkpoint layouts differ between container and reference"));
+        }
+    }
+    if let Some(src) = prev_syms.as_deref_mut() {
+        src.check_layout(&hdr.counts)?;
+    }
+
+    // Structural geometry (the streaming analogue of `parse_v3_geometry`:
+    // same header checks, but the per-shard offset/blob-count/CRC checks
+    // happen incrementally as each shard is range-read).
+    let h = container.header();
+    let shard_values = h.req_usize("shard_values")?;
+    let layout = ShardLayout::new(hdr.counts.clone(), shard_values)?;
+    if layout.n_shards() != h.req_usize("n_shards")? {
+        return Err(Error::format("header n_shards does not match the tensor layout"));
+    }
+    let lanes = hdr.cfg.lanes;
+    let expected_blobs = layout.expected_v3_blobs(lanes)?;
+    if container.n_blobs() as usize != expected_blobs {
+        return Err(Error::format(format!(
+            "format-3 container has {} blobs, layout implies {expected_blobs}",
+            container.n_blobs()
+        )));
+    }
+    // The shard index is the last blob before the trailer; its size is
+    // fixed by n_shards, so it can be range-read without walking the file.
+    let n_shards = layout.n_shards();
+    let index_span = 4 + (4 + 16 * n_shards as u64); // length field + payload
+    let index_off = container
+        .body_end()
+        .checked_sub(index_span)
+        .filter(|&o| o >= container.blobs_start())
+        .ok_or_else(|| Error::format("container too small for its shard index"))?;
+    let (mut index_blobs, index_end) = container.read_blobs_at(index_off, 1)?;
+    if index_end != container.body_end() {
+        return Err(Error::format("shard index blob length mismatch"));
+    }
+    let index_raw = index_blobs.pop().expect("one blob read");
+    let index = index_from_bytes(&index_raw, n_shards)?;
+
+    // Running whole-body CRC: the restore touches every body byte exactly
+    // once — prefix (folded at open), then each shard's framed blobs in
+    // file order, then the index blob — so the trailer CRC is verified in
+    // the same single pass. This is what protects the *header* bytes on
+    // `ContainerFileReader::open_streaming` opens (shard payloads are
+    // additionally pinned by the per-shard index CRCs below).
+    let mut body_crc = container.prefix_crc();
+
+    let mut out = CheckpointFileWriter::create(out_path, hdr.step, &hdr.names, &hdr.shapes)?;
+    let mut syms_out = match syms_out_path {
+        Some(p) if use_ctx => Some(SymbolMapFileWriter::create(p, hdr.step, &hdr.counts)?),
+        _ => None,
+    };
+    let extractors = codec.build_extractors_from_shapes(&hdr.shapes)?;
+
+    let mut next_offset = container.blobs_start();
+    for (s, e) in index.iter().enumerate() {
+        let sp = ShardPlan::new(&layout, s, lanes);
+        let n = 3 * (sp.fragments().len() + lanes);
+        if e.offset != next_offset {
+            return Err(Error::format(format!(
+                "shard {s} index offset {} does not match blob layout {next_offset}",
+                e.offset
+            )));
+        }
+        if e.n_blobs as usize != n {
+            return Err(Error::format(format!(
+                "shard {s} index declares {} blobs, layout implies {n}",
+                e.n_blobs
+            )));
+        }
+        let (blobs, end) = container.read_blobs_at(e.offset, n)?;
+        next_offset = end;
+        // Index CRC over the framed blob bytes — the integrity pin of the
+        // random-access contract, checked for exactly the bytes decoded.
+        let mut ib = ShardIndexBuilder::new(e.offset);
+        for b in &blobs {
+            ib.add_blob(b);
+            body_crc.update(&(b.len() as u32).to_le_bytes());
+            body_crc.update(b);
+        }
+        if ib.finish().crc32 != e.crc32 {
+            return Err(Error::format(format!("shard {s} CRC mismatch in shard index")));
+        }
+        decode_shard_streaming(
+            &codec,
+            &sp,
+            &extractors,
+            &hdr.shapes,
+            &blobs,
+            reference.as_deref_mut(),
+            prev_syms.as_deref_mut(),
+            &mut out,
+            syms_out.as_mut(),
+        )?;
+    }
+    if next_offset != index_off {
+        return Err(Error::format("shard blobs do not end at the shard index"));
+    }
+    body_crc.update(&(index_raw.len() as u32).to_le_bytes());
+    body_crc.update(&index_raw);
+    if body_crc.finalize() != container.stored_crc() {
+        return Err(Error::format("container CRC mismatch (corrupt file)"));
+    }
+    out.finish()?;
+    let wrote_syms = syms_out.is_some();
+    if let Some(w) = syms_out {
+        w.finish()?;
+    }
+    Ok(StreamRestoreStats { step: hdr.step, shards: n_shards, wrote_syms })
+}
+
+/// Decode one shard's blobs into the output sinks: windowed reference
+/// views → `3 × lanes` pool lane decodes → per-fragment scatter,
+/// dequantize, delta add-back (ranged reference reads) → ranged value and
+/// symbol writes. The f32 op sequence per element (dequantize, then
+/// `+= reference`) is identical to the in-memory decode, which is what
+/// keeps the output bit-exact.
+#[allow(clippy::too_many_arguments)]
+fn decode_shard_streaming(
+    codec: &Codec,
+    sp: &ShardPlan,
+    extractors: &[ContextExtractor],
+    shapes: &[Vec<usize>],
+    blobs: &[Vec<u8>],
+    mut reference: Option<&mut dyn ShardSource>,
+    prev_syms: Option<&mut dyn SymbolSource>,
+    out: &mut CheckpointFileWriter,
+    mut syms_out: Option<&mut SymbolMapFileWriter>,
+) -> Result<()> {
+    let cfg = codec.cfg();
+    let lanes = sp.lanes();
+    let nf = sp.fragments().len();
+    let ref_views: [Option<RefMapViews<'_>>; 3] = match prev_syms {
+        Some(src) => windowed_ref_views(src, sp, shapes, shapes.len(), cfg.window)?,
+        None => std::array::from_fn(|_| None),
+    };
+    let mut centers: [Vec<Vec<f32>>; 3] = Default::default();
+    let mut tasks: Vec<Task<Result<Vec<u16>>>> = Vec::with_capacity(3 * lanes);
+    for k in 0..3 {
+        let base = k * (nf + lanes);
+        for blob in &blobs[base..base + nf] {
+            centers[k].push(centers_from_bytes(blob)?);
+        }
+        let ref_maps = ref_views[k].as_ref();
+        for lane in 0..lanes {
+            let stream = blobs[base + nf + lane].as_slice();
+            tasks.push(Box::new(move || {
+                codec.decode_lane(sp, extractors, ref_maps, stream, lane)
+            }));
+        }
+    }
+    let mut results = pool::run_scoped(pool::available_workers(), tasks)?.into_iter();
+    for k in 0..3 {
+        let mut frag_syms: Vec<Vec<u16>> =
+            sp.fragments().iter().map(|f| vec![0u16; f.len]).collect();
+        for lane in 0..lanes {
+            let decoded = results.next().expect("lane decode missing")?;
+            if decoded.len() != sp.lane_len(lane) {
+                return Err(Error::codec("lane decoded wrong symbol count"));
+            }
+            for (p, s) in sp.iter_lane(lane).zip(decoded) {
+                frag_syms[p.frag][p.local] = s;
+            }
+        }
+        let log_domain = k == 2 && cfg.log_moment2;
+        for ((f, syms), cs) in sp.fragments().iter().zip(&frag_syms).zip(&centers[k]) {
+            let range = f.start..f.start + f.len;
+            let mut vals = vec![0f32; f.len];
+            super::dequant_symbols_into(syms, cs, log_domain, &mut vals)?;
+            if k == 0 {
+                // Delta frames: add the reference weights back, read by
+                // range — same op order as `add_reference_weights`.
+                if let Some(r) = reference.as_deref_mut() {
+                    let rv = read_checked(r, 0, f.tensor, range.clone())?;
+                    for (x, &v) in vals.iter_mut().zip(&rv) {
+                        *x += v;
+                    }
+                }
+            }
+            out.write_values(k, f.tensor, range, &vals)?;
+            if let Some(w) = syms_out.as_mut() {
+                w.write_syms(k, f.tensor, f.start, syms)?;
+            }
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -505,10 +838,13 @@ mod tests {
         let e0 = codec.encode(&c0, None, None).unwrap();
         let whole = codec.encode(&c1, Some(&e0.recon), Some(&e0.syms)).unwrap();
 
+        // The windowed-map path (ranged SymbolSource reads) must produce
+        // the exact bytes the full-map in-memory encoder wrote.
         let mut out = Vec::new();
         let mut cur = CheckpointSource::new(&c1).unwrap();
         let mut refr = CheckpointSource::new(&e0.recon).unwrap();
-        encode_streaming(&codec, &mut cur, Some(&mut refr), Some(&e0.syms), &mut out)
+        let mut ref_syms = e0.syms.clone();
+        encode_streaming(&codec, &mut cur, Some(&mut refr), Some(&mut ref_syms), &mut out)
             .unwrap();
         assert_eq!(out, whole.bytes);
 
@@ -516,6 +852,136 @@ mod tests {
         let (d1, _) =
             Codec::decode(&Backend::Native, &out, Some(&e0.recon), Some(&e0.syms)).unwrap();
         assert_eq!(d1, whole.recon);
+    }
+
+    #[test]
+    fn decode_streaming_writes_the_in_memory_bytes() {
+        let dir = std::env::temp_dir()
+            .join(format!("cpcm_decstream_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        for mode in [ContextMode::Order0, ContextMode::Lstm] {
+            let codec = Codec::new(cfg(mode, 20 * 12), Backend::Native);
+            let c0 = Checkpoint::synthetic(5, &layers(), 81);
+            let c1 = Checkpoint::synthetic(6, &layers(), 82);
+            let e0 = codec.encode(&c0, None, None).unwrap();
+            let e1 = codec.encode(&c1, Some(&e0.recon), Some(&e0.syms)).unwrap();
+
+            // Intra step: no reference, no prev syms.
+            let p0 = dir.join(format!("{mode:?}_0.cpcm"));
+            std::fs::write(&p0, &e0.bytes).unwrap();
+            let out0 = dir.join(format!("{mode:?}_0.bin"));
+            let syms0 = dir.join(format!("{mode:?}_0.syms"));
+            let mut cr = ContainerFileReader::open(&p0).unwrap();
+            let stats =
+                decode_streaming(&Backend::Native, &mut cr, None, None, &out0, Some(&syms0))
+                    .unwrap();
+            assert_eq!(stats.step, 5);
+            assert!(stats.shards > 1);
+            assert_eq!(
+                std::fs::read(&out0).unwrap(),
+                e0.recon.to_bytes(),
+                "{mode:?} intra streamed restore != in-memory decode"
+            );
+
+            // Delta step: reference values by range from the restored
+            // intra file; reference symbols by range from the sidecar
+            // (context mode) — the full on-disk hop.
+            let p1 = dir.join(format!("{mode:?}_1.cpcm"));
+            std::fs::write(&p1, &e1.bytes).unwrap();
+            let out1 = dir.join(format!("{mode:?}_1.bin"));
+            let mut cr = ContainerFileReader::open(&p1).unwrap();
+            let mut refr = crate::checkpoint::CheckpointFileReader::open(&out0).unwrap();
+            let mut sidecar = if stats.wrote_syms {
+                let r = crate::codec::SymbolMapFileReader::open(&syms0).unwrap();
+                assert_eq!(r.step(), 5);
+                Some(r)
+            } else {
+                // Order0 consumes no reference context; no sidecar exists.
+                assert_eq!(mode, ContextMode::Order0);
+                None
+            };
+            let prev: Option<&mut dyn SymbolSource> =
+                sidecar.as_mut().map(|r| r as &mut dyn SymbolSource);
+            decode_streaming(
+                &Backend::Native,
+                &mut cr,
+                Some(&mut refr),
+                prev,
+                &out1,
+                None,
+            )
+            .unwrap();
+            assert_eq!(
+                std::fs::read(&out1).unwrap(),
+                e1.recon.to_bytes(),
+                "{mode:?} delta streamed restore != in-memory decode"
+            );
+
+            // Wrong-format containers are rejected.
+            let v2 = Codec::new(cfg(mode, 0), Backend::Native);
+            let ev2 = v2.encode(&c0, None, None).unwrap();
+            let pv2 = dir.join(format!("{mode:?}_v2.cpcm"));
+            std::fs::write(&pv2, &ev2.bytes).unwrap();
+            let mut cr = ContainerFileReader::open(&pv2).unwrap();
+            assert!(decode_streaming(
+                &Backend::Native,
+                &mut cr,
+                None,
+                None,
+                &dir.join("x.bin"),
+                None
+            )
+            .is_err());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn header_tamper_is_caught_by_the_running_body_crc() {
+        // Flip a header byte that survives parsing AND validation AND
+        // does not change Order0 decode output (a digit of the codec
+        // seed): neither the structural checks nor the per-shard index
+        // CRCs can see it — only the whole-body trailer CRC folded across
+        // the streaming pass.
+        let codec = Codec::new(cfg(ContextMode::Order0, 20 * 12), Backend::Native);
+        let ck = Checkpoint::synthetic(5, &layers(), 83);
+        let e = codec.encode(&ck, None, None).unwrap();
+        let mut bytes = e.bytes.clone();
+        let p = bytes
+            .windows(7)
+            .position(|w| w == b"\"seed\":")
+            .expect("header carries the codec seed")
+            + 7;
+        assert!(bytes[p].is_ascii_digit());
+        bytes[p] = if bytes[p] == b'9' { b'8' } else { bytes[p] + 1 };
+
+        let dir = std::env::temp_dir()
+            .join(format!("cpcm_hdrtamper_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.cpcm");
+        std::fs::write(&path, &bytes).unwrap();
+        // Strict open catches it up front…
+        assert!(ContainerFileReader::open(&path).is_err());
+        // …and the lazy open catches it by the end of the decode pass.
+        let mut cr = ContainerFileReader::open_streaming(&path).unwrap();
+        let err = decode_streaming(
+            &Backend::Native,
+            &mut cr,
+            None,
+            None,
+            &dir.join("t.bin"),
+            None,
+        )
+        .unwrap_err();
+        assert!(
+            format!("{err}").contains("CRC mismatch"),
+            "expected the body CRC to reject the tampered header: {err}"
+        );
+        // The in-memory decoder rejects it too (parity).
+        assert!(Codec::decode(&Backend::Native, &bytes, None, None).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,391 @@
+//! Reference-symbol sources, sinks and the on-disk `.syms` sidecar.
+//!
+//! The context modes (paper Fig. 2) condition on the *reference*
+//! checkpoint's quantized symbol maps. Holding those maps resident costs
+//! `3 × 2` bytes per position — the last whole-checkpoint allocation on
+//! the streaming paths. This module abstracts them behind ranged reads:
+//!
+//! - [`SymbolSource`] — ranged `(set, tensor, range)` reads of a reference
+//!   symbol map. The streaming encoder/decoder build *windowed* per-shard
+//!   maps from it ([`crate::codec::sharded`]), so only the rows a shard's
+//!   contexts can touch are resident.
+//! - [`SymbolSink`] — ranged writes of the symbols a streaming decode
+//!   produces, so the *next* chain step can read them back by range.
+//! - [`SymbolMapFileWriter`] / [`SymbolMapFileReader`] — the seek-based
+//!   `.syms` sidecar implementation used by the on-disk chain restore
+//!   ([`crate::coordinator::restore_step_to_file`]).
+//! - [`SymbolMaps`] implements both traits, so in-memory chain state flows
+//!   through the identical code path (and pins windowed ≡ full-map bits).
+//!
+//! Sidecar layout (all little-endian):
+//!
+//! ```text
+//! magic     [8]  = "CPCMSYM1"
+//! step      u64
+//! n_tensors u32
+//! counts    n × u64          (per-tensor element counts, name-sorted order)
+//! data      3 sets × Σcounts × u16   (set-major, tensor-major, row-major)
+//! ```
+
+use super::SymbolMaps;
+use crate::{Error, Result};
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::ops::Range;
+use std::path::Path;
+
+const SYMS_MAGIC: &[u8; 8] = b"CPCMSYM1";
+
+/// Ranged read access to one checkpoint's reference symbol maps (the
+/// chain state the context modes condition on).
+pub trait SymbolSource {
+    /// Reject a source whose per-tensor symbol counts disagree with the
+    /// coding layout (the streaming counterpart of
+    /// `Codec::check_ref_maps`).
+    fn check_layout(&mut self, counts: &[usize]) -> Result<()>;
+
+    /// Symbols of `set` (0 = ΔW, 1 = first moment, 2 = second moment) of
+    /// tensor `tensor`, elements `range`. Must return exactly
+    /// `range.len()` symbols.
+    fn read_syms(&mut self, set: usize, tensor: usize, range: Range<usize>) -> Result<Vec<u16>>;
+}
+
+/// Ranged write access for the symbol maps a streaming decode produces.
+pub trait SymbolSink {
+    /// Store `syms` as elements `start..start + syms.len()` of `tensor`
+    /// in `set`.
+    fn write_syms(&mut self, set: usize, tensor: usize, start: usize, syms: &[u16])
+        -> Result<()>;
+}
+
+impl SymbolMaps {
+    /// Maps of the right shape, all zero — the scatter target for
+    /// in-memory [`SymbolSink`] use.
+    pub fn zeroed(counts: &[usize]) -> Self {
+        let mut maps = SymbolMaps::default();
+        for set in maps.sets.iter_mut() {
+            *set = counts.iter().map(|&c| vec![0u16; c]).collect();
+        }
+        maps
+    }
+}
+
+impl SymbolSource for SymbolMaps {
+    fn check_layout(&mut self, counts: &[usize]) -> Result<()> {
+        for set in &self.sets {
+            if set.len() != counts.len() {
+                return Err(Error::codec("reference symbol map tensor count mismatch"));
+            }
+            for (m, &c) in set.iter().zip(counts) {
+                if m.len() != c {
+                    return Err(Error::codec("reference symbol map size mismatch"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn read_syms(&mut self, set: usize, tensor: usize, range: Range<usize>) -> Result<Vec<u16>> {
+        self.sets
+            .get(set)
+            .and_then(|s| s.get(tensor))
+            .and_then(|m| m.get(range))
+            .map(|s| s.to_vec())
+            .ok_or_else(|| Error::shape("symbol source read out of bounds"))
+    }
+}
+
+impl SymbolSink for SymbolMaps {
+    fn write_syms(
+        &mut self,
+        set: usize,
+        tensor: usize,
+        start: usize,
+        syms: &[u16],
+    ) -> Result<()> {
+        let dst = self
+            .sets
+            .get_mut(set)
+            .and_then(|s| s.get_mut(tensor))
+            .and_then(|m| m.get_mut(start..start + syms.len()))
+            .ok_or_else(|| Error::shape("symbol sink write out of bounds"))?;
+        dst.copy_from_slice(syms);
+        Ok(())
+    }
+}
+
+/// Shared offset arithmetic of the sidecar file.
+struct SymsLayout {
+    counts: Vec<usize>,
+    /// Prefix sums of `counts` (`prefix[n_tensors]` = total positions).
+    prefix: Vec<usize>,
+    /// File offset of the first data u16.
+    data_start: u64,
+}
+
+impl SymsLayout {
+    fn new(counts: Vec<usize>) -> Result<Self> {
+        if counts.len() > u32::MAX as usize {
+            return Err(Error::format("too many tensors for a symbol sidecar"));
+        }
+        let mut prefix = Vec::with_capacity(counts.len() + 1);
+        let mut acc = 0usize;
+        prefix.push(0);
+        for &c in &counts {
+            acc = acc
+                .checked_add(c)
+                .ok_or_else(|| Error::format("symbol sidecar size overflows"))?;
+            prefix.push(acc);
+        }
+        // 3 sets × total × 2 bytes must fit the offset arithmetic.
+        acc.checked_mul(6).ok_or_else(|| Error::format("symbol sidecar size overflows"))?;
+        let data_start = (8 + 8 + 4 + 8 * counts.len()) as u64;
+        Ok(Self { counts, prefix, data_start })
+    }
+
+    fn total(&self) -> usize {
+        *self.prefix.last().unwrap()
+    }
+
+    fn file_len(&self) -> u64 {
+        self.data_start + 6 * self.total() as u64
+    }
+
+    /// Offset of element `elem` of `tensor` in `set`; bounds-checked.
+    fn offset(&self, set: usize, tensor: usize, range: &Range<usize>) -> Result<u64> {
+        if set >= 3 {
+            return Err(Error::shape(format!("symbol set {set} out of range")));
+        }
+        let &count = self
+            .counts
+            .get(tensor)
+            .ok_or_else(|| Error::shape(format!("symbol tensor {tensor} out of range")))?;
+        if range.start > range.end || range.end > count {
+            return Err(Error::shape("symbol range out of tensor bounds"));
+        }
+        let pos = set * self.total() + self.prefix[tensor] + range.start;
+        Ok(self.data_start + 2 * pos as u64)
+    }
+}
+
+/// Seek-based writer for the `.syms` sidecar: scattered ranged writes in
+/// any order (the streaming decode produces symbols shard by shard, all
+/// three sets interleaved), byte layout fixed up front.
+pub struct SymbolMapFileWriter {
+    file: File,
+    layout: SymsLayout,
+}
+
+impl SymbolMapFileWriter {
+    /// Create `path`, write the header and size the file (unwritten data
+    /// ranges read as symbol 0).
+    pub fn create(path: impl AsRef<Path>, step: u64, counts: &[usize]) -> Result<Self> {
+        let layout = SymsLayout::new(counts.to_vec())?;
+        let mut file = File::create(path.as_ref())?;
+        file.write_all(SYMS_MAGIC)?;
+        file.write_all(&step.to_le_bytes())?;
+        file.write_all(&(counts.len() as u32).to_le_bytes())?;
+        for &c in counts {
+            file.write_all(&(c as u64).to_le_bytes())?;
+        }
+        file.set_len(layout.file_len())?;
+        Ok(Self { file, layout })
+    }
+
+    /// Flush and close.
+    pub fn finish(mut self) -> Result<()> {
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+impl SymbolSink for SymbolMapFileWriter {
+    fn write_syms(
+        &mut self,
+        set: usize,
+        tensor: usize,
+        start: usize,
+        syms: &[u16],
+    ) -> Result<()> {
+        let range = start..start + syms.len();
+        let offset = self.layout.offset(set, tensor, &range)?;
+        self.file.seek(SeekFrom::Start(offset))?;
+        let mut bytes = Vec::with_capacity(syms.len() * 2);
+        for &s in syms {
+            bytes.extend_from_slice(&s.to_le_bytes());
+        }
+        self.file.write_all(&bytes)?;
+        Ok(())
+    }
+}
+
+/// Seek-based reader over a `.syms` sidecar; the file is validated (magic,
+/// exact length) at open and never loaded whole.
+pub struct SymbolMapFileReader {
+    file: File,
+    step: u64,
+    layout: SymsLayout,
+}
+
+impl SymbolMapFileReader {
+    /// Open and validate `path`.
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let mut file = File::open(path.as_ref())?;
+        let file_len = file.metadata()?.len();
+        let mut magic = [0u8; 8];
+        file.read_exact(&mut magic)?;
+        if &magic != SYMS_MAGIC {
+            return Err(Error::format("bad symbol sidecar magic"));
+        }
+        let mut b8 = [0u8; 8];
+        file.read_exact(&mut b8)?;
+        let step = u64::from_le_bytes(b8);
+        let mut b4 = [0u8; 4];
+        file.read_exact(&mut b4)?;
+        let n = u32::from_le_bytes(b4) as usize;
+        // Header must fit before any count-sized allocation is trusted.
+        if (20 + 8 * n as u64) > file_len {
+            return Err(Error::format("symbol sidecar truncated in header"));
+        }
+        let mut counts = Vec::with_capacity(n);
+        for _ in 0..n {
+            file.read_exact(&mut b8)?;
+            let c = usize::try_from(u64::from_le_bytes(b8))
+                .map_err(|_| Error::format("symbol sidecar count overflows"))?;
+            counts.push(c);
+        }
+        let layout = SymsLayout::new(counts)?;
+        if layout.file_len() != file_len {
+            return Err(Error::format(format!(
+                "symbol sidecar is {file_len} bytes, layout implies {}",
+                layout.file_len()
+            )));
+        }
+        Ok(Self { file, step, layout })
+    }
+
+    /// Training step recorded in the sidecar.
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+
+    /// Per-tensor element counts.
+    pub fn counts(&self) -> &[usize] {
+        &self.layout.counts
+    }
+}
+
+impl SymbolSource for SymbolMapFileReader {
+    fn check_layout(&mut self, counts: &[usize]) -> Result<()> {
+        if self.layout.counts != counts {
+            return Err(Error::codec("reference symbol sidecar layout mismatch"));
+        }
+        Ok(())
+    }
+
+    fn read_syms(&mut self, set: usize, tensor: usize, range: Range<usize>) -> Result<Vec<u16>> {
+        let offset = self.layout.offset(set, tensor, &range)?;
+        self.file.seek(SeekFrom::Start(offset))?;
+        let mut bytes = vec![0u8; range.len() * 2];
+        self.file.read_exact(&mut bytes)?;
+        Ok(bytes.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_maps(counts: &[usize]) -> SymbolMaps {
+        let mut maps = SymbolMaps::zeroed(counts);
+        for (k, set) in maps.sets.iter_mut().enumerate() {
+            for (ti, m) in set.iter_mut().enumerate() {
+                for (i, s) in m.iter_mut().enumerate() {
+                    *s = ((k * 31 + ti * 7 + i) % 13) as u16;
+                }
+            }
+        }
+        maps
+    }
+
+    #[test]
+    fn in_memory_source_and_sink_roundtrip() {
+        let counts = [10usize, 0, 7];
+        let mut src = sample_maps(&counts);
+        src.check_layout(&counts).unwrap();
+        assert!(src.check_layout(&[10, 0]).is_err());
+        assert!(src.check_layout(&[10, 0, 8]).is_err());
+        let mid = src.read_syms(1, 0, 3..8).unwrap();
+        assert_eq!(mid, src.sets[1][0][3..8].to_vec());
+        assert!(src.read_syms(0, 0, 3..11).is_err());
+        assert!(src.read_syms(3, 0, 0..1).is_err());
+
+        let mut sink = SymbolMaps::zeroed(&counts);
+        for k in 0..3 {
+            for (ti, &c) in counts.iter().enumerate() {
+                let syms = src.read_syms(k, ti, 0..c).unwrap();
+                sink.write_syms(k, ti, 0, &syms).unwrap();
+            }
+        }
+        assert_eq!(sink, src);
+        assert!(sink.write_syms(0, 0, 9, &[1, 2]).is_err());
+    }
+
+    #[test]
+    fn sidecar_file_roundtrips_scattered_writes() {
+        let dir = std::env::temp_dir().join(format!("cpcm_syms_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ref.syms");
+        let counts = [9usize, 0, 5, 16];
+        let mut src = sample_maps(&counts);
+
+        let mut w = SymbolMapFileWriter::create(&path, 42, &counts).unwrap();
+        // Scattered, out-of-order ranged writes (the decode access pattern).
+        for k in [2usize, 0, 1] {
+            for (ti, &c) in counts.iter().enumerate() {
+                let mut start = 0usize;
+                while start < c {
+                    let end = (start + 4).min(c);
+                    let syms = src.read_syms(k, ti, start..end).unwrap();
+                    w.write_syms(k, ti, start, &syms).unwrap();
+                    start = end;
+                }
+            }
+        }
+        assert!(w.write_syms(0, 0, 8, &[1, 2]).is_err(), "out-of-bounds write");
+        w.finish().unwrap();
+
+        let mut r = SymbolMapFileReader::open(&path).unwrap();
+        assert_eq!(r.step(), 42);
+        assert_eq!(r.counts(), &counts);
+        r.check_layout(&counts).unwrap();
+        assert!(r.check_layout(&[9, 0, 5]).is_err());
+        for k in 0..3 {
+            for (ti, &c) in counts.iter().enumerate() {
+                assert_eq!(
+                    r.read_syms(k, ti, 0..c).unwrap(),
+                    src.read_syms(k, ti, 0..c).unwrap(),
+                    "set {k} tensor {ti}"
+                );
+            }
+        }
+        // Mid-tensor window read.
+        assert_eq!(
+            r.read_syms(2, 3, 5..11).unwrap(),
+            src.read_syms(2, 3, 5..11).unwrap()
+        );
+        assert!(r.read_syms(0, 0, 0..10).is_err());
+
+        // Truncated or mislabeled files are rejected at open.
+        let bytes = std::fs::read(&path).unwrap();
+        let cut = dir.join("cut.syms");
+        std::fs::write(&cut, &bytes[..bytes.len() - 3]).unwrap();
+        assert!(SymbolMapFileReader::open(&cut).is_err());
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        std::fs::write(&cut, &bad).unwrap();
+        assert!(SymbolMapFileReader::open(&cut).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -234,6 +234,191 @@ impl<W: std::io::Write> ContainerStreamWriter<W> {
     }
 }
 
+/// Seekable range-reader over a serialized container file.
+///
+/// [`Container::from_bytes`] loads every blob at once; this reader is the
+/// larger-than-RAM counterpart used by
+/// [`crate::codec::sharded::decode_streaming`]: `open` verifies the
+/// trailer CRC in a chunked pass (O(1) memory), parses the header, and
+/// then serves framed blob runs by offset — the format-3 shard index
+/// supplies the offsets, so a shard-by-shard decode only ever holds one
+/// shard's blobs.
+pub struct ContainerFileReader {
+    file: std::fs::File,
+    header: Json,
+    /// Total file size (including the 4-byte CRC trailer).
+    file_len: u64,
+    /// Blob count declared by the framing.
+    n_blobs: u32,
+    /// Offset of the first blob's length field.
+    blobs_start: u64,
+    /// The trailer CRC (verified against the body by [`Self::open`];
+    /// only read by [`Self::open_streaming`]).
+    stored_crc: u32,
+    /// Running CRC over the prefix bytes `[0, blobs_start)` — the seed a
+    /// sequential reader continues with the framed blob bytes to verify
+    /// the trailer without a second pass (see [`Self::prefix_crc`]).
+    prefix_crc: crate::util::crc32::Crc32,
+}
+
+impl ContainerFileReader {
+    /// Open `path`: validate magic and framing, verify the trailer CRC
+    /// over the whole body in fixed-size chunks (O(1) memory), and parse
+    /// the header.
+    pub fn open(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        Self::open_with(path, true)
+    }
+
+    /// [`ContainerFileReader::open`] WITHOUT the whole-body CRC pass —
+    /// for shard-by-shard readers that verify each format-3 shard's index
+    /// CRC as they range-read it ([`crate::codec::sharded::decode_streaming`]),
+    /// where re-hashing the whole file first would double checksum cost
+    /// and add a full sequential read pass per larger-than-RAM restore.
+    /// Magic, framing and header are still validated, and the trailer CRC
+    /// value is still read (for manifest comparison via
+    /// [`ContainerFileReader::stored_crc`]) — it is just not recomputed.
+    pub fn open_streaming(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        Self::open_with(path, false)
+    }
+
+    fn open_with(path: impl AsRef<std::path::Path>, verify_body: bool) -> Result<Self> {
+        use std::io::{Read, Seek, SeekFrom};
+        let mut file = std::fs::File::open(path.as_ref())?;
+        let file_len = file.metadata()?.len();
+        if file_len < (8 + 4 + 4 + 4) as u64 {
+            return Err(Error::format("not a cpcm container"));
+        }
+        let body_len = file_len - 4;
+
+        // Prefix: magic, header, blob count — rejected before any
+        // body-sized work happens; CRC'd as read (see `prefix_crc`).
+        let mut prefix_crc = crate::util::crc32::Crc32::new();
+        let mut magic = [0u8; 8];
+        file.read_exact(&mut magic)?;
+        if magic != *MAGIC {
+            return Err(Error::format("not a cpcm container"));
+        }
+        prefix_crc.update(&magic);
+        let mut b4 = [0u8; 4];
+        file.read_exact(&mut b4)?;
+        prefix_crc.update(&b4);
+        let hdr_len = u32::from_le_bytes(b4) as u64;
+        if 8 + 4 + hdr_len + 4 > body_len {
+            return Err(Error::format("container truncated in header"));
+        }
+        let mut hdr_bytes = vec![0u8; hdr_len as usize];
+        file.read_exact(&mut hdr_bytes)?;
+        prefix_crc.update(&hdr_bytes);
+        let header_text = std::str::from_utf8(&hdr_bytes)
+            .map_err(|_| Error::format("header not utf-8"))?;
+        let header = Json::parse(header_text)?;
+        file.read_exact(&mut b4)?;
+        prefix_crc.update(&b4);
+        let n_blobs = u32::from_le_bytes(b4);
+        let blobs_start = 8 + 4 + hdr_len + 4;
+        // Each declared blob needs at least its 4-byte length field.
+        if n_blobs as u64 > (body_len - blobs_start) / 4 {
+            return Err(Error::format("container declares more blobs than fit"));
+        }
+
+        // Trailer CRC — recomputed over the body in chunks when asked.
+        file.seek(SeekFrom::Start(body_len))?;
+        let mut tail = [0u8; 4];
+        file.read_exact(&mut tail)?;
+        let stored_crc = u32::from_le_bytes(tail);
+        if verify_body {
+            file.seek(SeekFrom::Start(0))?;
+            let mut crc = crate::util::crc32::Crc32::new();
+            let mut remaining = body_len;
+            let mut buf = vec![0u8; 1 << 18];
+            while remaining > 0 {
+                let n = remaining.min(buf.len() as u64) as usize;
+                file.read_exact(&mut buf[..n])?;
+                crc.update(&buf[..n]);
+                remaining -= n as u64;
+            }
+            if crc.finalize() != stored_crc {
+                return Err(Error::format("container CRC mismatch (corrupt file)"));
+            }
+        }
+        Ok(Self { file, header, file_len, n_blobs, blobs_start, stored_crc, prefix_crc })
+    }
+
+    /// Parsed container header.
+    pub fn header(&self) -> &Json {
+        &self.header
+    }
+
+    /// Total file size in bytes.
+    pub fn file_len(&self) -> u64 {
+        self.file_len
+    }
+
+    /// Blob count declared by the framing.
+    pub fn n_blobs(&self) -> u32 {
+        self.n_blobs
+    }
+
+    /// Offset of the first blob's length field.
+    pub fn blobs_start(&self) -> u64 {
+        self.blobs_start
+    }
+
+    /// Offset one past the last blob byte (where the trailer CRC begins).
+    pub fn body_end(&self) -> u64 {
+        self.file_len - 4
+    }
+
+    /// The trailer CRC-32 value — what the chain manifest records per
+    /// container (verified against the body by [`Self::open`], taken on
+    /// trust by [`Self::open_streaming`] until the caller finishes its own
+    /// sequential pass — see [`Self::prefix_crc`]).
+    pub fn stored_crc(&self) -> u32 {
+        self.stored_crc
+    }
+
+    /// Running CRC state over the prefix bytes `[0, blobs_start)`. A
+    /// reader that consumes the remaining body **in file order** (all
+    /// framed blobs, then the trailing blob) can fold those bytes onto a
+    /// clone of this state and compare `finalize()` against
+    /// [`Self::stored_crc`] — whole-file integrity (header included) in
+    /// the same single pass, which is how
+    /// [`crate::codec::sharded::decode_streaming`] verifies containers
+    /// opened with [`Self::open_streaming`].
+    pub fn prefix_crc(&self) -> crate::util::crc32::Crc32 {
+        self.prefix_crc.clone()
+    }
+
+    /// Read `count` consecutive framed blobs starting at file `offset`;
+    /// returns the blob payloads and the offset one past the run.
+    pub fn read_blobs_at(&mut self, offset: u64, count: usize) -> Result<(Vec<Vec<u8>>, u64)> {
+        use std::io::{Read, Seek, SeekFrom};
+        let body_end = self.body_end();
+        if offset < self.blobs_start || offset > body_end {
+            return Err(Error::format("blob offset outside the container body"));
+        }
+        self.file.seek(SeekFrom::Start(offset))?;
+        let mut pos = offset;
+        let mut blobs = Vec::with_capacity(count);
+        for _ in 0..count {
+            if pos + 4 > body_end {
+                return Err(Error::format("container truncated in blob"));
+            }
+            let mut b4 = [0u8; 4];
+            self.file.read_exact(&mut b4)?;
+            let len = u32::from_le_bytes(b4) as u64;
+            if pos + 4 + len > body_end {
+                return Err(Error::format("container truncated in blob"));
+            }
+            let mut blob = vec![0u8; len as usize];
+            self.file.read_exact(&mut blob)?;
+            blobs.push(blob);
+            pos += 4 + len;
+        }
+        Ok((blobs, pos))
+    }
+}
+
 /// Pack a center table (sorted f32s) as bytes.
 pub fn centers_to_bytes(centers: &[f32]) -> Vec<u8> {
     let mut out = Vec::with_capacity(2 + centers.len() * 4);
@@ -376,6 +561,61 @@ mod tests {
         bytes.extend_from_slice(&crc.to_le_bytes());
         let err = Container::from_bytes(&bytes).unwrap_err();
         assert!(format!("{err}").contains("blobs"), "{err}");
+    }
+
+    #[test]
+    fn file_reader_serves_framed_blob_runs() {
+        let dir = std::env::temp_dir().join(format!("cpcm_creader_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let c = sample();
+        let bytes = c.to_bytes();
+        let path = dir.join("c.cpcm");
+        std::fs::write(&path, &bytes).unwrap();
+
+        let mut r = ContainerFileReader::open(&path).unwrap();
+        assert_eq!(r.header(), &c.header);
+        assert_eq!(r.n_blobs(), 3);
+        assert_eq!(r.file_len() as usize, bytes.len());
+        assert_eq!(r.stored_crc(), Container::stored_crc(&bytes).unwrap());
+        let start = r.blobs_start();
+        let (blobs, end) = r.read_blobs_at(start, 3).unwrap();
+        assert_eq!(blobs, c.blobs);
+        assert_eq!(end, r.body_end());
+        // Partial runs and re-reads work (seek-based).
+        let (one, mid) = r.read_blobs_at(start, 1).unwrap();
+        assert_eq!(one[0], c.blobs[0]);
+        let (rest, end2) = r.read_blobs_at(mid, 2).unwrap();
+        assert_eq!(rest, c.blobs[1..]);
+        assert_eq!(end2, end);
+        // Out-of-body offsets and over-long runs fail cleanly.
+        assert!(r.read_blobs_at(0, 1).is_err());
+        assert!(r.read_blobs_at(start, 4).is_err());
+
+        // Corruption anywhere fails the chunked CRC at open.
+        let mut bad = bytes.clone();
+        let mid_byte = bad.len() / 2;
+        bad[mid_byte] ^= 0x10;
+        std::fs::write(dir.join("bad.cpcm"), &bad).unwrap();
+        assert!(ContainerFileReader::open(dir.join("bad.cpcm")).is_err());
+        std::fs::write(dir.join("cut.cpcm"), &bytes[..bytes.len() - 7]).unwrap();
+        assert!(ContainerFileReader::open(dir.join("cut.cpcm")).is_err());
+
+        // open_streaming skips the body CRC pass (shard readers verify
+        // per-shard CRCs instead) but still validates magic + framing and
+        // exposes the trailer value for manifest comparison.
+        let mut rs = ContainerFileReader::open_streaming(&path).unwrap();
+        assert_eq!(rs.stored_crc(), Container::stored_crc(&bytes).unwrap());
+        assert_eq!(rs.read_blobs_at(rs.blobs_start(), 3).unwrap().0, c.blobs);
+        // Lazy open: mid-body truncation surfaces at read time, not open.
+        let mut cut = ContainerFileReader::open_streaming(dir.join("cut.cpcm")).unwrap();
+        let start = cut.blobs_start();
+        assert!(cut.read_blobs_at(start, 3).is_err());
+        let mut not = bytes.clone();
+        not[0] = b'X';
+        std::fs::write(dir.join("not.cpcm"), &not).unwrap();
+        assert!(ContainerFileReader::open_streaming(dir.join("not.cpcm")).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

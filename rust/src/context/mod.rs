@@ -90,6 +90,43 @@ impl ContextExtractor {
         }
     }
 
+    /// [`Self::extract_into`] against a *windowed* reference map: `data`
+    /// holds only flat positions `[start, start + data.len())` of the full
+    /// row-major map (a row-aligned window). Callers size the window so
+    /// every in-map neighbor of the positions they visit falls inside it
+    /// (fragment rows ± `window/2` — see the streaming shard paths in
+    /// [`crate::codec::sharded`]); an in-map access that nevertheless
+    /// misses the window reads as 0, debug-asserted against. Out-of-map
+    /// neighbors read as 0 exactly like the full-map path, so for covered
+    /// positions the produced context is bit-identical to
+    /// [`Self::extract_into`] over the whole map.
+    #[inline]
+    pub fn extract_window_into(&self, data: &[u16], start: usize, idx: usize, out: &mut [i32]) {
+        debug_assert!(start + data.len() <= self.len());
+        debug_assert_eq!(out.len(), self.seq_len());
+        let r = (idx / self.cols) as isize;
+        let c = (idx % self.cols) as isize;
+        for (k, &(dr, dc)) in self.offsets.iter().enumerate() {
+            let rr = r + dr;
+            let cc = c + dc;
+            out[k] = if rr >= 0 && rr < self.rows as isize && cc >= 0 && cc < self.cols as isize
+            {
+                let j = rr as usize * self.cols + cc as usize;
+                debug_assert!(
+                    j >= start && j - start < data.len(),
+                    "window [{start}, {}) missed in-map position {j}",
+                    start + data.len()
+                );
+                match j.checked_sub(start).and_then(|o| data.get(o)) {
+                    Some(&s) => s as i32,
+                    None => 0,
+                }
+            } else {
+                0
+            };
+        }
+    }
+
     /// Extract the context of `idx` from `ref_syms` when a reference map
     /// is available, else fill `out` with zeros (intra frames and the
     /// zero-context mode). This is the per-position gather the coding
@@ -245,6 +282,32 @@ mod tests {
                 }
                 slow.push(syms[idx] as i32);
                 assert_eq!(fast, slow, "idx={idx} rows={rows} cols={cols} w={window}");
+            }
+        });
+    }
+
+    #[test]
+    fn windowed_extract_matches_full_map() {
+        use crate::util::prop::forall;
+        forall("windowed context == full context", 20, |g| {
+            let rows = g.usize_range(1, 12);
+            let cols = g.usize_range(1, 12);
+            let window = *g.choose(&[1usize, 3, 5]);
+            let half = window / 2;
+            let syms: Vec<u16> = g.symbols(rows * cols, 16);
+            let ex = ContextExtractor::new(rows, cols, window).unwrap();
+            // Random row-aligned fragment; the window covers its rows ± half.
+            let r0 = g.usize_range(0, rows - 1);
+            let r1 = g.usize_range(r0, rows - 1);
+            let lo = r0.saturating_sub(half) * cols;
+            let hi = (r1 + half + 1).min(rows) * cols;
+            let data = &syms[lo..hi];
+            let mut full = vec![0i32; ex.seq_len()];
+            let mut win = vec![0i32; ex.seq_len()];
+            for idx in r0 * cols..(r1 + 1) * cols {
+                ex.extract_into(&syms, idx, &mut full);
+                ex.extract_window_into(data, lo, idx, &mut win);
+                assert_eq!(win, full, "idx={idx} rows={rows} cols={cols} w={window}");
             }
         });
     }

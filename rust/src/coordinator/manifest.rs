@@ -120,6 +120,17 @@ impl ChainManifest {
         Ok(chain)
     }
 
+    /// True when every step of `step`'s reference ancestry is a format-3
+    /// (sharded) container — the precondition for the shard-by-shard
+    /// on-disk restore of [`crate::coordinator::restore_step_to_file`].
+    /// Errors if `step` or a parent is missing from the manifest.
+    pub fn streaming_restorable(&self, step: u64) -> Result<bool> {
+        Ok(self
+            .ancestry(step)?
+            .iter()
+            .all(|s| self.entries.get(s).map(|e| e.format == 3).unwrap_or(false)))
+    }
+
     /// Serialize to the version-1 JSON document.
     pub fn to_json(&self) -> Json {
         let rows: Vec<Json> = self
@@ -259,6 +270,19 @@ mod tests {
         m.insert(entry(1, Some(2)));
         m.insert(entry(2, Some(1)));
         assert!(m.ancestry(1).is_err());
+    }
+
+    #[test]
+    fn streaming_restorable_requires_all_format3_ancestors() {
+        let mut m = ChainManifest::new();
+        m.insert(ManifestEntry { format: 3, ..entry(10, None) });
+        m.insert(ManifestEntry { format: 3, ..entry(20, Some(10)) });
+        m.insert(ManifestEntry { format: 2, ..entry(30, Some(20)) });
+        m.insert(ManifestEntry { format: 3, ..entry(40, Some(30)) });
+        assert!(m.streaming_restorable(20).unwrap());
+        assert!(!m.streaming_restorable(30).unwrap(), "format-2 target");
+        assert!(!m.streaming_restorable(40).unwrap(), "format-2 mid-chain");
+        assert!(m.streaming_restorable(999).is_err());
     }
 
     #[test]

@@ -36,6 +36,10 @@
 //! ([`ChainManifest`], `manifest.json`): step → container file, reference
 //! parent, format, lanes and CRC. [`restore_step`] uses it to restore any
 //! step by decoding only that step's reference ancestry;
+//! [`restore_step_to_file`] is the larger-than-RAM variant (all-format-3
+//! ancestries stream shard-by-shard to disk with references read by range
+//! through [`Store::reader`]); [`restore_tensor`] random-accesses one
+//! weight tensor without entropy-decoding the target container in full;
 //! [`decode_chain`] remains the manifest-free full-directory path.
 //!
 //! ## Shutdown contract
@@ -57,7 +61,7 @@ mod manifest;
 
 pub use manifest::{ChainManifest, ManifestEntry, MANIFEST_FILE};
 
-use crate::checkpoint::Checkpoint;
+use crate::checkpoint::{Checkpoint, Store};
 use crate::codec::{Codec, CodecConfig, EncodeStats, PreparedEncode, SymbolMaps};
 use crate::container::Container;
 use crate::lstm::Backend;
@@ -506,30 +510,58 @@ pub fn restore_step_with(
     step: u64,
 ) -> Result<Checkpoint> {
     let chain = manifest.ancestry(step)?;
+    Ok(decode_ancestry(manifest, dir, backend, step, &chain)?
+        .expect("ancestry is never empty")
+        .0)
+}
+
+/// Read a manifest-indexed container, checking the recorded CRC against
+/// the trailer before any entropy decoding starts. Every failure names
+/// the offending step and file: a restore walks a whole ancestry, and
+/// "CRC mismatch" without saying which container broke sends the operator
+/// grepping. `target` is the step the overall restore is for.
+fn read_manifest_container(
+    entry: &ManifestEntry,
+    dir: &Path,
+    target: u64,
+) -> Result<(Vec<u8>, PathBuf)> {
+    let s = entry.step;
+    let path = dir.join(&entry.file);
+    let bytes = std::fs::read(&path).map_err(|e| {
+        Error::format(format!(
+            "restoring step {target}: cannot read step {s} container {}: {e}",
+            path.display()
+        ))
+    })?;
+    let stored = Container::stored_crc(&bytes).map_err(|e| {
+        Error::format(format!("step {s} container {} is not a container: {e}", path.display()))
+    })?;
+    if stored != entry.crc32 {
+        return Err(Error::format(format!(
+            "step {s} container {} does not match the manifest \
+             (crc {:08x} recorded, {stored:08x} on disk)",
+            path.display(),
+            entry.crc32
+        )));
+    }
+    Ok((bytes, path))
+}
+
+/// Decode the manifest entries of `chain` in order, fully in memory,
+/// returning the final (checkpoint, symbol maps) — the shared ancestry
+/// walk of [`restore_step_with`] and [`restore_tensor`]. `target` is the
+/// step the overall restore is for (used in error messages).
+fn decode_ancestry(
+    manifest: &ChainManifest,
+    dir: &Path,
+    backend: &Backend,
+    target: u64,
+    chain: &[u64],
+) -> Result<Option<(Checkpoint, SymbolMaps)>> {
     let mut prev: Option<(Checkpoint, SymbolMaps)> = None;
-    for s in chain {
+    for &s in chain {
         let entry = manifest.entry(s).expect("ancestry returned an unindexed step");
-        let path = dir.join(&entry.file);
-        // Every failure below names the offending step and file: a restore
-        // walks a whole ancestry, and "CRC mismatch" without saying which
-        // container broke sends the operator grepping.
-        let bytes = std::fs::read(&path).map_err(|e| {
-            Error::format(format!(
-                "restoring step {step}: cannot read step {s} container {}: {e}",
-                path.display()
-            ))
-        })?;
-        let stored = Container::stored_crc(&bytes).map_err(|e| {
-            Error::format(format!("step {s} container {} is not a container: {e}", path.display()))
-        })?;
-        if stored != entry.crc32 {
-            return Err(Error::format(format!(
-                "step {s} container {} does not match the manifest \
-                 (crc {:08x} recorded, {stored:08x} on disk)",
-                path.display(),
-                entry.crc32
-            )));
-        }
+        let (bytes, path) = read_manifest_container(entry, dir, target)?;
         let (ck, syms) = Codec::decode(
             backend,
             &bytes,
@@ -538,7 +570,7 @@ pub fn restore_step_with(
         )
         .map_err(|e| {
             Error::codec(format!(
-                "restoring step {step}: decoding step {s} container {} failed: {e}",
+                "restoring step {target}: decoding step {s} container {} failed: {e}",
                 path.display()
             ))
         })?;
@@ -551,7 +583,189 @@ pub fn restore_step_with(
         }
         prev = Some((ck, syms));
     }
-    Ok(prev.expect("ancestry is never empty").0)
+    Ok(prev)
+}
+
+/// Restore the checkpoint at `step` directly **to a raw `.bin` file** —
+/// the larger-than-RAM restore path. When every step of the reference
+/// ancestry is a format-3 container, the whole chain is decoded
+/// streaming: each container is range-read
+/// ([`crate::container::ContainerFileReader`]), values scatter to disk
+/// through [`crate::checkpoint::CheckpointFileWriter`], reference
+/// checkpoints are read by range through [`Store::reader`] instead of
+/// being held in RAM, and the context modes read windowed reference
+/// symbols from a `.syms` sidecar — peak RSS stays ~O(shard) for the
+/// entire chain ([`crate::codec::sharded::decode_streaming`]). Ancestries
+/// containing format-1/2 containers fall back to the in-memory
+/// [`restore_step_with`] walk and write its bytes.
+///
+/// Intermediate chain artifacts live in a `.restore_<step>_<pid>` work
+/// directory next to `out_path` and are removed on every exit path; the
+/// final file lands at `out_path` via rename. The produced bytes are
+/// bit-identical to `restore_step(..)?.to_bytes()` on both paths.
+pub fn restore_step_to_file(
+    dir: &Path,
+    backend: &Backend,
+    step: u64,
+    out_path: &Path,
+) -> Result<()> {
+    let manifest = ChainManifest::load(dir)?;
+    let chain = manifest.ancestry(step)?;
+    if !manifest.streaming_restorable(step)? {
+        // Mixed/legacy chains: in-memory walk, same output bytes.
+        let ck = decode_ancestry(&manifest, dir, backend, step, &chain)?
+            .expect("ancestry is never empty")
+            .0;
+        std::fs::write(out_path, ck.to_bytes())?;
+        return Ok(());
+    }
+
+    let work = out_path
+        .parent()
+        .map(|p| p.to_path_buf())
+        .unwrap_or_else(|| PathBuf::from("."))
+        .join(format!(".restore_{step}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&work);
+    let result = restore_chain_streaming(&manifest, dir, backend, step, &chain, &work, out_path);
+    let _ = std::fs::remove_dir_all(&work);
+    result
+}
+
+/// The streaming walk of [`restore_step_to_file`]: decode each ancestry
+/// step into the `work` store, chaining references (values) and `.syms`
+/// sidecars (context symbols) by range, then move the target step's file
+/// to `out_path`.
+fn restore_chain_streaming(
+    manifest: &ChainManifest,
+    dir: &Path,
+    backend: &Backend,
+    step: u64,
+    chain: &[u64],
+    work: &Path,
+    out_path: &Path,
+) -> Result<()> {
+    use crate::codec::sharded;
+    use crate::codec::{SymbolMapFileReader, SymbolSource};
+
+    let store = Store::open(work)?;
+    let syms_path = |s: u64| work.join(format!("ckpt_{s:010}.syms"));
+    let mut prev_step: Option<u64> = None;
+    let mut prev_wrote_syms = false;
+    for (i, &s) in chain.iter().enumerate() {
+        let entry = manifest.entry(s).expect("ancestry returned an unindexed step");
+        let path = dir.join(&entry.file);
+        // `open_streaming`: no up-front whole-body CRC pass — the restore
+        // reads every body byte exactly once anyway, and decode_streaming
+        // verifies the per-shard index CRCs as it goes plus the trailer
+        // CRC (header included) over that same single pass, so an extra
+        // full read per chain step would buy nothing on exactly the files
+        // this path exists for (larger than RAM).
+        let mut container =
+            crate::container::ContainerFileReader::open_streaming(&path).map_err(|e| {
+                Error::format(format!(
+                    "restoring step {step}: cannot open step {s} container {}: {e}",
+                    path.display()
+                ))
+            })?;
+        if container.stored_crc() != entry.crc32 {
+            return Err(Error::format(format!(
+                "step {s} container {} does not match the manifest \
+                 (crc {:08x} recorded, {:08x} on disk)",
+                path.display(),
+                entry.crc32,
+                container.stored_crc()
+            )));
+        }
+        // Chain inputs by range from the previous step's on-disk restore.
+        let mut reference = match prev_step {
+            Some(ps) => Some(store.reader(ps)?),
+            None => None,
+        };
+        let mut prev_syms = match prev_step {
+            Some(ps) if prev_wrote_syms => Some(SymbolMapFileReader::open(syms_path(ps))?),
+            _ => None,
+        };
+        let last = i + 1 == chain.len();
+        let out_file = store.file_path(s);
+        let sidecar = syms_path(s);
+        let stats = sharded::decode_streaming(
+            backend,
+            &mut container,
+            reference.as_mut().map(|r| r as &mut dyn sharded::ShardSource),
+            prev_syms.as_mut().map(|r| r as &mut dyn SymbolSource),
+            &out_file,
+            // The final step's symbols have no consumer.
+            if last { None } else { Some(sidecar.as_path()) },
+        )
+        .map_err(|e| {
+            Error::codec(format!(
+                "restoring step {step}: decoding step {s} container {} failed: {e}",
+                path.display()
+            ))
+        })?;
+        if stats.step != s {
+            return Err(Error::codec(format!(
+                "container {} holds step {}, manifest says {s}",
+                path.display(),
+                stats.step
+            )));
+        }
+        // The previous reference and sidecar are no longer needed.
+        if let Some(ps) = prev_step {
+            let _ = store.remove(ps);
+            let _ = std::fs::remove_file(syms_path(ps));
+        }
+        prev_step = Some(s);
+        prev_wrote_syms = stats.wrote_syms;
+        if last {
+            std::fs::rename(&out_file, out_path)?;
+        }
+    }
+    Ok(())
+}
+
+/// Restore ONE weight tensor of `step` — the per-tensor random-access
+/// path. When the manifest records `step`'s container as format 3, only
+/// the shards `name` intersects are entropy-decoded
+/// ([`crate::codec::sharded::decode_weight_tensor`]); the reference
+/// ancestry *up to the parent* is still decoded in full (it is the coding
+/// context), but the target container — typically the big one being
+/// inspected — is not. Legacy formats fall back to a full restore and
+/// extract the tensor.
+pub fn restore_tensor(
+    dir: &Path,
+    backend: &Backend,
+    step: u64,
+    name: &str,
+) -> Result<crate::tensor::Tensor> {
+    let manifest = ChainManifest::load(dir)?;
+    let chain = manifest.ancestry(step)?;
+    let entry = manifest.entry(step).expect("ancestry contains its target");
+    if entry.format != 3 {
+        let ck = decode_ancestry(&manifest, dir, backend, step, &chain)?
+            .expect("ancestry is never empty")
+            .0;
+        return ck
+            .weights
+            .get(name)
+            .cloned()
+            .ok_or_else(|| Error::shape(format!("step {step} has no tensor '{name}'")));
+    }
+    let prev = decode_ancestry(&manifest, dir, backend, step, &chain[..chain.len() - 1])?;
+    let (bytes, path) = read_manifest_container(entry, dir, step)?;
+    crate::codec::sharded::decode_weight_tensor(
+        backend,
+        &bytes,
+        name,
+        prev.as_ref().map(|p| &p.0),
+        prev.as_ref().map(|p| &p.1),
+    )
+    .map_err(|e| {
+        Error::codec(format!(
+            "restoring tensor '{name}' of step {step} from {}: {e}",
+            path.display()
+        ))
+    })
 }
 
 /// Decode a directory of `.cpcm` containers in chain order, returning the
@@ -693,6 +907,61 @@ mod tests {
         let decoded = decode_chain(&dir, &Backend::Native, None).unwrap();
         assert_eq!(decoded.len(), 3);
         assert_eq!(restore_step(&dir, &Backend::Native, 30).unwrap(), decoded[2]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn restore_step_to_file_matches_in_memory_restore() {
+        // Format-3 chain (streaming path) AND format-2 chain (fallback
+        // path): both must write restore_step's exact bytes.
+        for (tag, shard_bytes) in [("v3", 25 * 12), ("v2", 0)] {
+            let dir = tmpdir(&format!("tofile_{tag}"));
+            let mut codec = small_codec(ContextMode::Lstm);
+            codec.shard_bytes = shard_bytes;
+            let cfg = CoordinatorConfig::new(codec, Backend::Native, &dir);
+            let coord = Coordinator::start(cfg).unwrap();
+            for i in 0..3u64 {
+                coord
+                    .submit(Checkpoint::synthetic(10 * (i + 1), &layers(), 300 + i))
+                    .unwrap();
+            }
+            coord.finish().unwrap();
+            for step in [10u64, 30] {
+                let expect = restore_step(&dir, &Backend::Native, step).unwrap();
+                let out = dir.join(format!("restored_{step}.bin"));
+                restore_step_to_file(&dir, &Backend::Native, step, &out).unwrap();
+                assert_eq!(
+                    std::fs::read(&out).unwrap(),
+                    expect.to_bytes(),
+                    "{tag} step {step}"
+                );
+            }
+            // The work directory is cleaned up on success.
+            assert!(std::fs::read_dir(&dir)
+                .unwrap()
+                .all(|e| !e.unwrap().file_name().to_string_lossy().starts_with(".restore_")));
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn restore_tensor_random_accesses_format3_targets() {
+        let dir = tmpdir("tensor");
+        let mut codec = small_codec(ContextMode::Lstm);
+        codec.shard_bytes = 30 * 12;
+        let cfg = CoordinatorConfig::new(codec, Backend::Native, &dir);
+        let coord = Coordinator::start(cfg).unwrap();
+        for i in 0..3u64 {
+            coord.submit(Checkpoint::synthetic(10 * (i + 1), &layers(), 400 + i)).unwrap();
+        }
+        coord.finish().unwrap();
+        let full = restore_step(&dir, &Backend::Native, 30).unwrap();
+        for (name, _) in layers() {
+            let t = restore_tensor(&dir, &Backend::Native, 30, name).unwrap();
+            assert_eq!(&t, full.weights.get(name).unwrap(), "{name}");
+        }
+        assert!(restore_tensor(&dir, &Backend::Native, 30, "nope").is_err());
+        assert!(restore_tensor(&dir, &Backend::Native, 999, "w").is_err());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

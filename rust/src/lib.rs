@@ -34,6 +34,10 @@
 //!   queues, per-stage metrics, chain manifest);
 //! - [`coordinator::restore_step`] — manifest-indexed random access: restore
 //!   any step by decoding only its reference ancestry;
+//! - [`coordinator::restore_step_to_file`] — the larger-than-RAM restore:
+//!   format-3 chains stream shard-by-shard to disk with references read by
+//!   range ([`codec::sharded::decode_streaming`]);
+//!   [`coordinator::restore_tensor`] random-accesses one weight tensor;
 //! - [`trainer::Trainer`] — drives AOT train-step executables to produce real
 //!   Adam checkpoints for the experiments;
 //! - [`baselines`] — ExCP(+DEFLATE / order-0 AC) and other comparison points.

@@ -118,15 +118,17 @@ fn roundtrip_case(
     assert_eq!(s1, e1.syms, "delta syms mismatch");
 
     if !format1 && cfg.sharded() {
-        // The streamed encoder must produce the identical container.
+        // The streamed encoder (windowed reference maps built from ranged
+        // SymbolSource reads) must produce the identical container.
         let mut streamed = Vec::new();
         let mut cur = sharded::CheckpointSource::new(&c1).unwrap();
         let mut refr = sharded::CheckpointSource::new(&e0.recon).unwrap();
+        let mut ref_syms = e0.syms.clone();
         sharded::encode_streaming(
             &codec,
             &mut cur,
             Some(&mut refr),
-            Some(&e0.syms),
+            Some(&mut ref_syms),
             &mut streamed,
         )
         .unwrap();
