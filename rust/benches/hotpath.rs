@@ -8,7 +8,9 @@
 //!
 //! Besides the human-readable table, the run writes
 //! `BENCH_hotpath.json` (crate root): every sample's median seconds and
-//! throughput plus the lane-scaling sweep, so the perf trajectory is
+//! throughput plus the lane-scaling, shard-size and shard-parallel
+//! scheduler sweeps (`encode_shard_par_syms_per_sec` is the tentpole
+//! metric of the shard × lane scheduler), so the perf trajectory is
 //! machine-diffable across PRs.
 //!
 //! Run: `cargo bench --bench hotpath`
@@ -301,6 +303,87 @@ fn main() {
     }
     let _ = std::fs::remove_file(&ckpt_path);
 
+    // ---- Shard-parallel scheduler sweep (format 3) ----------------------
+    // The same multi-shard checkpoint encoded with the shard × lane
+    // scheduler pinned to 1 shard at a time (the old sequential walk) vs
+    // small vs auto widths. Bytes are identical at every width (pinned by
+    // tests/sched.rs); the JSON rows carry the throughput so CI can gate
+    // the multi-shard speedup. lanes=1 keeps lane-level parallelism out
+    // of the picture — the gain measured here is shard-level.
+    let spar_layers: Vec<(&str, Vec<usize>)> = vec![("w", vec![512, 192])];
+    let sp0 = Checkpoint::synthetic(1, &spar_layers, 7);
+    let spar_syms = (sp0.param_count() * 3) as u64;
+    let spar_shard_bytes = (sp0.param_count() * 12) / 8; // 8 shards
+    let mut spar_rows: Vec<Json> = Vec::new();
+    let mut spar_rates: Vec<(usize, f64)> = Vec::new();
+    for shard_threads in [1usize, 2, 0] {
+        let codec = Codec::new(
+            CodecConfig {
+                mode: ContextMode::Order0,
+                bits: 4,
+                lanes: 1,
+                shard_bytes: spar_shard_bytes,
+                shard_threads,
+                ..CodecConfig::default()
+            },
+            Backend::Native,
+        );
+        let resolved = codec.cfg().effective_shard_threads();
+        let tag = if shard_threads == 0 { "auto".to_string() } else { shard_threads.to_string() };
+        let mut bytes = Vec::new();
+        let enc =
+            b.run(&format!("codec/shard-par threads={tag} encode"), spar_syms, || {
+                bytes = codec.encode(&sp0, None, None).unwrap().bytes;
+            });
+        // The parallel streaming restore at the same scheduler width.
+        let cpath = std::env::temp_dir()
+            .join(format!("cpcm_hotpath_spar_{}.cpcm", std::process::id()));
+        let opath = std::env::temp_dir()
+            .join(format!("cpcm_hotpath_spar_{}_out.bin", std::process::id()));
+        std::fs::write(&cpath, &bytes).unwrap();
+        let ds = b.run(
+            &format!("codec/shard-par threads={tag} decode streaming"),
+            spar_syms,
+            || {
+                let mut cr =
+                    cpcm::container::ContainerFileReader::open_streaming(&cpath).unwrap();
+                cpcm::codec::sharded::decode_streaming_with(
+                    &Backend::Native,
+                    &mut cr,
+                    None,
+                    None,
+                    &opath,
+                    None,
+                    shard_threads,
+                )
+                .unwrap();
+            },
+        );
+        let _ = std::fs::remove_file(&cpath);
+        let _ = std::fs::remove_file(&opath);
+        let enc_rate = spar_syms as f64 / enc.median.as_secs_f64();
+        let dec_rate = spar_syms as f64 / ds.median.as_secs_f64();
+        spar_rates.push((resolved, enc_rate));
+        spar_rows.push(Json::obj(vec![
+            // 0 = auto: the row key is the *requested* width so baseline
+            // comparisons line up across machines; the resolved count is
+            // carried alongside for the core-count context.
+            ("shard_threads", Json::num(shard_threads as f64)),
+            ("resolved_threads", Json::num(resolved as f64)),
+            ("encode_shard_par_syms_per_sec", Json::num(enc_rate)),
+            ("decode_stream_shard_par_syms_per_sec", Json::num(dec_rate)),
+            ("container_bytes", Json::num(bytes.len() as f64)),
+        ]));
+    }
+    if let (Some(&(_, r1)), Some(&(rn, ra))) = (spar_rates.first(), spar_rates.last()) {
+        println!(
+            "\nshard scaling: encode threads=auto({rn}) is {:.2}x threads=1 \
+             ({} hardware threads available)",
+            ra / r1,
+            pool::available_workers()
+        );
+    }
+
     // ---- Machine-readable dump ------------------------------------------
     let samples: Vec<Json> = b
         .results()
@@ -319,10 +402,14 @@ fn main() {
         .collect();
     let doc = Json::obj(vec![
         ("bench", Json::str("hotpath")),
+        // Runner core count: baseline comparisons are only honest when
+        // the two documents ran on the same class of machine —
+        // bench_compare flags a mismatch in its report.
         ("available_parallelism", Json::num(pool::available_workers() as f64)),
         ("samples", Json::Arr(samples)),
         ("lane_scaling", Json::Arr(lane_rows)),
         ("shard_sweep", Json::Arr(shard_rows)),
+        ("shard_par", Json::Arr(spar_rows)),
     ]);
     match std::fs::write("BENCH_hotpath.json", doc.to_string_pretty()) {
         Ok(()) => println!("wrote BENCH_hotpath.json"),

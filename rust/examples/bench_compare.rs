@@ -12,7 +12,14 @@
 //! - every `samples[].melems_per_sec` (matched by sample name),
 //! - `lane_scaling[]` encode/decode symbol rates (matched by lane count),
 //! - `shard_sweep[]` encode/decode/streaming-decode rates (matched by
-//!   shard budget).
+//!   shard budget),
+//! - `shard_par[]` shard-scheduler encode/streaming-decode rates
+//!   (matched by requested scheduler width, 0 = auto).
+//!
+//! A core-count mismatch between the two documents
+//! (`available_parallelism`) is called out in the report, since
+//! throughput ratios across different machines reflect hardware as much
+//! as code.
 //!
 //! Metrics present in only one document are listed as added/removed, not
 //! failed — the gate must not block PRs that extend the bench. A baseline
@@ -65,6 +72,20 @@ fn metrics(doc: &Json) -> BTreeMap<String, f64> {
                 // decode on the unsharded row) — not a metric.
                 if let Some(t) = r.get(key).and_then(|v| v.as_f64()).filter(|&t| t > 0.0) {
                     out.insert(format!("shard_bytes={sb} {key}"), t);
+                }
+            }
+        }
+    }
+    if let Some(rows) = doc.get("shard_par").and_then(|v| v.as_arr()) {
+        for r in rows {
+            // Keyed on the *requested* scheduler width (0 = auto) so rows
+            // line up across machines with different core counts.
+            let Some(st) = r.get("shard_threads").and_then(|v| v.as_u64()) else { continue };
+            for key in
+                ["encode_shard_par_syms_per_sec", "decode_stream_shard_par_syms_per_sec"]
+            {
+                if let Some(t) = r.get(key).and_then(|v| v.as_f64()).filter(|&t| t > 0.0) {
+                    out.insert(format!("shard_threads={st} {key}"), t);
                 }
             }
         }
@@ -128,6 +149,19 @@ fn main() {
              numbers yet). Nothing can fail. To arm the gate, download this run's \
              `BENCH_hotpath` artifact and commit it as `rust/benches/BENCH_baseline.json`.\n\n",
         );
+    }
+    // Throughput deltas are only honest between same-class machines: call
+    // out a core-count mismatch so a "regression" on a smaller runner is
+    // read for what it is.
+    let cores = |d: &Json| d.get("available_parallelism").and_then(|v| v.as_u64());
+    if let (Some(bc), Some(cc)) = (cores(&baseline), cores(&current)) {
+        if bc != cc {
+            report.push_str(&format!(
+                "**Core-count mismatch**: baseline measured on {bc} hardware threads, \
+                 this run on {cc} — throughput ratios partly reflect the hardware, \
+                 not the code.\n\n"
+            ));
+        }
     }
     report.push_str("| metric | baseline | current | ratio | status |\n");
     report.push_str("|---|---|---|---|---|\n");

@@ -3,10 +3,11 @@
 //! ```text
 //! cpcm train      --workload lm_tiny --steps 300 --ckpt-every 50 \
 //!                 --out runs/demo [--compress] [--mode lstm] [--backend native]
-//!                 [--lanes N] [--queue-depth N] [--shard-bytes N]
+//!                 [--lanes N] [--queue-depth N] [--shard-bytes N] [--shard-threads N]
 //! cpcm compress   --ckpts runs/demo/raw --out runs/demo/cpcm [--mode ...]
-//!                 [--lanes N] [--queue-depth N] [--shard-bytes N]
+//!                 [--lanes N] [--queue-depth N] [--shard-bytes N] [--shard-threads N]
 //! cpcm decompress --cpcm runs/demo/cpcm --step 100 --out ck.bin [--backend ...]
+//!                 [--shard-threads N]   # 0 = auto; 1 pins the strict one-shard RSS bound
 //! cpcm verify     --ckpts runs/demo/raw --cpcm runs/demo/cpcm
 //! cpcm info       --file runs/demo/cpcm/ckpt_0000000100.cpcm
 //! cpcm config     --write cpcm.json          # dump the default config
@@ -28,7 +29,7 @@ use crate::codec::ContextMode;
 use crate::config::{BackendKind, ExperimentConfig};
 use crate::container::Container;
 use crate::coordinator::{
-    decode_chain, restore_step_to_file, ChainManifest, Coordinator, CoordinatorConfig,
+    decode_chain, restore_step_to_file_with, ChainManifest, Coordinator, CoordinatorConfig,
 };
 use crate::lstm::Backend;
 use crate::runtime::RuntimeHandle;
@@ -130,6 +131,11 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
     // >0 writes format-3 containers with bounded encoder memory).
     if let Some(v) = args.parsed::<u64>("shard-bytes")? {
         cfg.codec.shard_bytes = v as usize;
+    }
+    // Shard-scheduler parallelism for format-3 paths (0 = auto, the
+    // available hardware threads); also bounds the streaming look-ahead.
+    if let Some(v) = args.parsed::<u64>("shard-threads")? {
+        cfg.codec.shard_threads = v as usize;
     }
     // Coordinator queue depth (submission + stage queues).
     if let Some(v) = args.parsed::<u64>("queue-depth")? {
@@ -275,18 +281,31 @@ fn cmd_compress(args: Args) -> Result<()> {
 /// only the step's reference ancestry is decoded, and all-format-3
 /// ancestries restore **streaming**: shard-by-shard to disk with
 /// references read by range, so recovery works for checkpoints larger
-/// than RAM ([`crate::coordinator::restore_step_to_file`]). Manifest-less
-/// directories decode the chain front-to-back up to the step.
+/// than RAM ([`crate::coordinator::restore_step_to_file_with`]).
+/// `--shard-threads` bounds the restore scheduler's width and therefore
+/// its peak RSS (~O(width · shard); 0 = auto, 1 = the strict one-shard
+/// bound). Manifest-less directories decode the chain front-to-back up
+/// to the step.
 fn cmd_decompress(args: Args) -> Result<()> {
     let cpcm = args.req("cpcm")?;
     let step: u64 = parse_num(args.req("step")?, "step")?;
     let out = args.req("out")?;
     let backend_kind = BackendKind::parse(args.get("backend").unwrap_or("native"))?;
     let artifacts = args.get("artifacts").unwrap_or("artifacts");
+    // Shard-scheduler width for the streaming restore (0 = auto); pass 1
+    // on memory-limited hosts to pin peak RSS at the strict one-shard
+    // bound.
+    let shard_threads = args.parsed::<u64>("shard-threads")?.unwrap_or(0) as usize;
+    if shard_threads > crate::codec::MAX_SHARD_THREADS {
+        return Err(Error::config(format!(
+            "--shard-threads must be 0 (auto) or 1..={}",
+            crate::codec::MAX_SHARD_THREADS
+        )));
+    }
     let backend = make_backend(backend_kind, artifacts)?;
     let dir = std::path::Path::new(cpcm);
     if ChainManifest::exists_in(dir) {
-        restore_step_to_file(dir, &backend, step, std::path::Path::new(out))?;
+        restore_step_to_file_with(dir, &backend, step, std::path::Path::new(out), shard_threads)?;
         let params: usize =
             crate::checkpoint::CheckpointFileReader::open(out)?.counts().iter().sum();
         println!("wrote step {step} ({params} params) to {out}");
@@ -391,6 +410,8 @@ mod tests {
             "3".into(),
             "--shard-bytes".into(),
             "1048576".into(),
+            "--shard-threads".into(),
+            "6".into(),
             "--verify".into(),
         ])
         .unwrap();
@@ -402,7 +423,14 @@ mod tests {
         assert_eq!(cfg.codec.lanes, 4);
         assert_eq!(cfg.queue_depth, 3);
         assert_eq!(cfg.codec.shard_bytes, 1 << 20);
+        assert_eq!(cfg.codec.shard_threads, 6);
         assert!(cfg.verify);
+    }
+
+    #[test]
+    fn shard_threads_out_of_range_rejected() {
+        let args = Args::parse(&["--shard-threads".into(), "9999".into()]).unwrap();
+        assert!(experiment_config(&args).is_err());
     }
 
     #[test]

@@ -15,6 +15,15 @@
 //! a lane's `(tensor index, element index)` pairs in O(1) amortized per
 //! step, which is what the per-position 3×3 reference-context gather
 //! ([`crate::context`]) needs.
+//!
+//! Under container format 3 the lanes are the **inner level of the
+//! shard × lane task graph**: every shard's `ShardPlan` embeds its own
+//! `LanePlan` over the shard's fragment lengths, and the shard scheduler
+//! (`codec::sched`) runs each shard's `3 × L` lane tasks as a nested
+//! pool sub-batch under the shard's job. Lane byte streams stay a pure
+//! function of (config, symbols, reference maps) — per-lane model
+//! replicas, no cross-lane state — which is what lets both levels
+//! schedule freely without changing a single output byte.
 
 use std::ops::Range;
 

@@ -42,9 +42,15 @@
 //! container trailer. Shards stream to disk as they finish
 //! ([`crate::container::ContainerStreamWriter`],
 //! [`sharded::encode_streaming`]), bounding peak encoder memory by the
-//! shard budget; decode restores shard-by-shard (each shard's `3 × lanes`
-//! tasks fan out over the pool) and [`sharded::decode_weight_tensor`]
-//! uses the shard index for per-tensor random access. With
+//! shard budget; decode restores shard-by-shard and
+//! [`sharded::decode_weight_tensor`] uses the shard index for per-tensor
+//! random access. Because every shard is independent, the work-stealing
+//! shard scheduler (the `sched` module) runs them concurrently on the
+//! persistent pool — each shard job nesting its own `3 × lanes` lane
+//! sub-batch, for total parallelism `min(shards · 3 · lanes, threads)` —
+//! while an ordered collector keeps the output bytes identical to the
+//! sequential walk (`CodecConfig::shard_threads` picks the shard-level
+//! parallelism; streaming paths bound their look-ahead by it). With
 //! `shard_bytes = ∞` (a single shard) the format-3 payload blobs are
 //! byte-identical to the format-2 blobs — pinned by the round-trip
 //! property suite.
@@ -75,6 +81,7 @@
 //! use reconstructed references on both sides and stay bit-identical.
 
 mod lanes;
+pub(crate) mod sched;
 mod shard;
 pub mod sharded;
 mod stream;
@@ -96,12 +103,20 @@ use crate::prune::{self, PruneConfig};
 use crate::quant::{self, QuantConfig, Quantized};
 use crate::tensor::{rows_cols_of, Tensor, TensorSet};
 use crate::util::json::Json;
-use crate::util::pool::{self, Task};
+use crate::util::pool::{self, PersistentPool, Task};
 use crate::{ac, Error, Result};
+use sched::SchedStats;
+use std::sync::Arc;
 
 /// Hard cap on coding lanes (64 streams × 3 sets is far past the point of
 /// diminishing returns and bounds the per-lane stream overhead).
 pub const MAX_LANES: usize = 64;
+
+/// Hard cap on the shard scheduler's width (`CodecConfig::shard_threads`)
+/// — a pure scheduling knob, so the cap only guards against nonsense
+/// values; one shared constant keeps config validation, the CLI and the
+/// runtime clamp in agreement.
+pub const MAX_SHARD_THREADS: usize = 4096;
 
 /// Entropy-coding mode for the quantized symbols.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -192,6 +207,17 @@ pub struct CodecConfig {
     /// streaming path is bounded by this budget instead of the checkpoint
     /// size.
     pub shard_bytes: usize,
+    /// Shard-level scheduler parallelism for format-3 paths: how many
+    /// shards the work-stealing scheduler (the `sched` module) keeps in
+    /// flight at once, each nesting its own `3 × lanes` lane sub-batch on
+    /// the pool.
+    /// `0` = auto (available hardware threads). Purely a *runtime*
+    /// scheduling knob: it is never written into container headers, and
+    /// output bytes are identical at every setting. On the streaming
+    /// paths it also bounds the look-ahead window, so peak memory is
+    /// `~O(shard_threads · shard)` — set 1 to recover the strict
+    /// one-shard-resident walk.
+    pub shard_threads: usize,
 }
 
 impl Default for CodecConfig {
@@ -214,6 +240,7 @@ impl Default for CodecConfig {
             quant_sample_cap: 1 << 16,
             lanes: 0,
             shard_bytes: 0,
+            shard_threads: 0,
         }
     }
 }
@@ -259,6 +286,18 @@ impl CodecConfig {
     /// the three sets' f32 values, 12 bytes).
     pub fn shard_values(&self) -> usize {
         (self.shard_bytes / 12).max(1)
+    }
+
+    /// Resolve the shard-scheduler parallelism (`shard_threads == 0` ⇒
+    /// available hardware threads), clamped to a sane range. The value
+    /// never affects output bytes — only how many shards run at once.
+    pub fn effective_shard_threads(&self) -> usize {
+        let t = if self.shard_threads == 0 {
+            pool::available_workers()
+        } else {
+            self.shard_threads
+        };
+        t.clamp(1, MAX_SHARD_THREADS)
     }
 
     /// Sanity caps applied to header-supplied configs before any shift,
@@ -345,6 +384,9 @@ impl CodecConfig {
             lanes: j.get("lanes").and_then(|v| v.as_usize()).unwrap_or(1),
             // Absent in pre-format-3 headers (unsharded).
             shard_bytes: j.get("shard_bytes").and_then(|v| v.as_usize()).unwrap_or(0),
+            // Scheduling knob, never serialized into headers (decoders
+            // pick their own parallelism; bytes are schedule-invariant).
+            shard_threads: 0,
         })
     }
 }
@@ -373,6 +415,12 @@ pub struct EncodeStats {
     pub lanes: usize,
     /// Shards written (1 for format-1/2 containers).
     pub shards: usize,
+    /// Total seconds shard jobs waited between scheduler-window
+    /// submission and compute start (0 outside the shard scheduler).
+    pub shard_queue_wait_seconds: f64,
+    /// High-water mark of concurrently encoding shards (scheduler
+    /// occupancy; 0 outside the shard scheduler).
+    pub shards_in_flight_max: usize,
 }
 
 impl EncodeStats {
@@ -453,6 +501,11 @@ impl PreparedEncode {
 pub struct Codec {
     cfg: CodecConfig,
     backend: Backend,
+    /// The work pool every fan-out (quantization, shard jobs, lane
+    /// sub-batches) runs on. Defaults to the process-wide persistent pool;
+    /// [`Codec::with_pool`] threads an explicit handle through instead —
+    /// the coordinator's stages pass theirs so pool choice is one seam.
+    pool: Arc<PersistentPool>,
 }
 
 /// One quantized tensor (produced by a quantization worker).
@@ -478,6 +531,19 @@ struct ShardEncodeOut {
     set_bytes: [usize; 3],
     loss_weighted: [f64; 3],
     symbols: [usize; 3],
+}
+
+/// One decoded shard in fragment-local buffers (symbols and dequantized
+/// values per (set, fragment)) — what [`Codec::decode_shard_frags`]
+/// returns so the scheduler's ordered collector (or the streaming
+/// restore's write phase) can scatter it without any shared mutable
+/// state between concurrent shard jobs.
+pub(crate) struct ShardDecodeOut {
+    /// `syms[k][fragment][local]` — decoded symbols.
+    pub(crate) syms: [Vec<Vec<u16>>; 3],
+    /// `vals[k][fragment][local]` — dequantized values (log-domain
+    /// already inverted; delta add-back is the caller's step).
+    pub(crate) vals: [Vec<Vec<f32>>; 3],
 }
 
 /// Accumulates per-set entropy-stage stats across shards.
@@ -526,6 +592,7 @@ impl SetStatsAcc {
             encode_seconds,
             lanes,
             shards,
+            ..Default::default()
         }
     }
 }
@@ -670,14 +737,27 @@ struct FrontEnd {
 }
 
 impl Codec {
-    /// Build a codec with the given config and probability-model backend.
+    /// Build a codec with the given config and probability-model backend,
+    /// running its fan-outs on the process-wide persistent pool.
     pub fn new(cfg: CodecConfig, backend: Backend) -> Self {
-        Self { cfg, backend }
+        Self::with_pool(cfg, backend, pool::global_handle())
+    }
+
+    /// Build a codec that runs every fan-out (quantization, shard jobs,
+    /// lane sub-batches) on an explicit pool handle — the seam the
+    /// coordinator's pipeline stages pass their pool through.
+    pub fn with_pool(cfg: CodecConfig, backend: Backend, pool: Arc<PersistentPool>) -> Self {
+        Self { cfg, backend, pool }
     }
 
     /// Configuration.
     pub fn cfg(&self) -> &CodecConfig {
         &self.cfg
+    }
+
+    /// The pool this codec fans out on.
+    pub(crate) fn pool(&self) -> &PersistentPool {
+        &self.pool
     }
 
     /// Instantiate the entropy-stage probability model for this config
@@ -888,7 +968,7 @@ impl Codec {
                 }));
             }
         }
-        let mut qresults = pool::run_scoped(workers, qtasks)?.into_iter();
+        let mut qresults = self.pool.run_scoped(workers, qtasks)?.into_iter();
 
         // Stitch fragment results back into per-tensor symbol maps (the
         // chain state) and per-tensor reconstruction values; center tables
@@ -975,8 +1055,8 @@ impl Codec {
         let t0 = std::time::Instant::now();
         let mut bytes = Vec::new();
         let mut acc = SetStatsAcc::default();
-        self.write_prepared_shards(prep, prev_syms, &mut bytes, &mut acc)?;
-        let stats = acc.into_stats(
+        let sched = self.write_prepared_shards(prep, prev_syms, &mut bytes, &mut acc)?;
+        let mut stats = acc.into_stats(
             prep.raw_bytes,
             bytes.len(),
             prep.weight_density,
@@ -985,23 +1065,29 @@ impl Codec {
             prep.lanes,
             prep.shards.len(),
         );
+        stats.shard_queue_wait_seconds = sched.queue_wait_seconds;
+        stats.shards_in_flight_max = sched.max_in_flight;
         Ok((bytes, stats))
     }
 
     /// Write a prepared encode's shards through the streaming container
     /// writer (per shard, per set: fragment center tables then lane
-    /// streams; format 3 appends the shard index). Each shard's
-    /// `3 × lanes` lane tasks fan out over the pool as their own batch, so
-    /// only one shard's blobs are in flight at a time.
+    /// streams; format 3 appends the shard index). Shards fan out over
+    /// the work-stealing scheduler ([`sched`]) — every shard job nests
+    /// its own `3 × lanes` lane sub-batch — and the ordered collector
+    /// writes blobs in shard-index order, so the bytes equal the
+    /// sequential walk at any thread count. Everything is resident here,
+    /// so the look-ahead is unbounded (`n_shards`).
     fn write_prepared_shards<W: std::io::Write>(
         &self,
         prep: &PreparedEncode,
         prev_syms: Option<&SymbolMaps>,
         sink: W,
         acc: &mut SetStatsAcc,
-    ) -> Result<()> {
+    ) -> Result<SchedStats> {
         let lanes = prep.lanes;
         let v3 = prep.format == 3;
+        let n_shards = prep.shards.len();
         let n_blobs: usize = prep
             .shards
             .iter()
@@ -1009,49 +1095,67 @@ impl Codec {
             .sum::<usize>()
             + usize::from(v3);
         let mut w = ContainerStreamWriter::new(sink, &prep.header, n_blobs as u32)?;
-        let mut index: Vec<ShardIndexEntry> = Vec::with_capacity(prep.shards.len());
+        let mut index: Vec<ShardIndexEntry> = Vec::with_capacity(n_shards);
         let ref_views = self.full_ref_views(prev_syms);
-        let mut frag_cursor = 0usize;
+        // Fragment-cursor prefix sums: shard s's centers/symbols start at
+        // fragment index `frag_offsets[s]` in the shard-major tables.
+        let mut frag_offsets = Vec::with_capacity(n_shards);
+        let mut cursor = 0usize;
         for sp in &prep.shards {
-            let nf = sp.fragments().len();
-            let frag_centers: [&[Vec<f32>]; 3] = [
-                &prep.centers[0][frag_cursor..frag_cursor + nf],
-                &prep.centers[1][frag_cursor..frag_cursor + nf],
-                &prep.centers[2][frag_cursor..frag_cursor + nf],
-            ];
-            let frag_syms: [Vec<&[u16]>; 3] = std::array::from_fn(|k| {
-                sp.fragments()
-                    .iter()
-                    .map(|f| &prep.syms.sets[k][f.tensor][f.start..f.start + f.len])
-                    .collect()
-            });
-            let out = self.encode_shard_blobs(
-                sp,
-                &prep.extractors,
-                &ref_views,
-                frag_centers,
-                [&frag_syms[0], &frag_syms[1], &frag_syms[2]],
-            )?;
-            // Shard CRCs only exist in the format-3 index; don't pay the
-            // extra checksum pass on format-2 writes.
-            let mut ib = v3.then(|| ShardIndexBuilder::new(w.offset()));
-            for blob in &out.blobs {
-                if let Some(ib) = ib.as_mut() {
-                    ib.add_blob(blob);
-                }
-                w.push_blob(blob)?;
-            }
-            if let Some(ib) = ib {
-                index.push(ib.finish());
-            }
-            acc.add(&out);
-            frag_cursor += nf;
+            frag_offsets.push(cursor);
+            cursor += sp.fragments().len();
         }
+        let sched = sched::run_shards_ordered(
+            &self.pool,
+            self.cfg.effective_shard_threads(),
+            n_shards,
+            n_shards,
+            |_| Ok(()),
+            |s, ()| {
+                let sp = &prep.shards[s];
+                let fc = frag_offsets[s];
+                let nf = sp.fragments().len();
+                let frag_centers: [&[Vec<f32>]; 3] = [
+                    &prep.centers[0][fc..fc + nf],
+                    &prep.centers[1][fc..fc + nf],
+                    &prep.centers[2][fc..fc + nf],
+                ];
+                let frag_syms: [Vec<&[u16]>; 3] = std::array::from_fn(|k| {
+                    sp.fragments()
+                        .iter()
+                        .map(|f| &prep.syms.sets[k][f.tensor][f.start..f.start + f.len])
+                        .collect()
+                });
+                self.encode_shard_blobs(
+                    sp,
+                    &prep.extractors,
+                    &ref_views,
+                    frag_centers,
+                    [&frag_syms[0], &frag_syms[1], &frag_syms[2]],
+                )
+            },
+            |_s, out| {
+                // Shard CRCs only exist in the format-3 index; don't pay
+                // the extra checksum pass on format-2 writes.
+                let mut ib = v3.then(|| ShardIndexBuilder::new(w.offset()));
+                for blob in &out.blobs {
+                    if let Some(ib) = ib.as_mut() {
+                        ib.add_blob(blob);
+                    }
+                    w.push_blob(blob)?;
+                }
+                if let Some(ib) = ib {
+                    index.push(ib.finish());
+                }
+                acc.add(&out);
+                Ok(())
+            },
+        )?;
         if v3 {
             w.push_blob(&shard::index_to_bytes(&index))?;
         }
         w.finish()?;
-        Ok(())
+        Ok(sched)
     }
 
     /// Entropy-code one shard into its container blobs (per set: fragment
@@ -1079,7 +1183,7 @@ impl Codec {
                 }));
             }
         }
-        let mut lresults = pool::run_scoped(pool::available_workers(), ltasks)?.into_iter();
+        let mut lresults = self.pool.run_scoped(pool::available_workers(), ltasks)?.into_iter();
 
         let mut out = ShardEncodeOut {
             blobs: Vec::with_capacity(3 * (sp.fragments().len() + lanes)),
@@ -1422,12 +1526,14 @@ impl Codec {
         Ok((out, syms))
     }
 
-    /// Decode a format-3 container shard by shard (geometry already
-    /// structurally validated by [`parse_v3_geometry`]): for each shard
-    /// run its `3 × lanes` lane decodes on the pool, scatter the symbols
-    /// into the per-tensor maps and dequantize each fragment with its own
-    /// center table. Returns per-set per-tensor values plus the symbol
-    /// maps.
+    /// Decode a format-3 container (geometry already structurally
+    /// validated by [`parse_v3_geometry`]): shards fan out over the
+    /// work-stealing scheduler — each shard job runs its `3 × lanes` lane
+    /// decodes as a nested pool sub-batch, dequantizes each fragment with
+    /// its own center table, and the ordered collector scatters the
+    /// results into the per-tensor maps in shard-index order. Returns
+    /// per-set per-tensor values plus the symbol maps, bit-identical to
+    /// the sequential walk at any thread count.
     #[allow(clippy::type_complexity)]
     fn decode_v3(
         &self,
@@ -1443,17 +1549,38 @@ impl Codec {
             std::array::from_fn(|_| counts.iter().map(|&c| vec![0u16; c]).collect());
         let mut vals: [Vec<Vec<f32>>; 3] =
             std::array::from_fn(|_| counts.iter().map(|&c| vec![0f32; c]).collect());
-        for (sp, &cursor) in geom.plans.iter().zip(&geom.cursors) {
-            self.decode_one_shard(
-                container,
-                cursor,
-                sp,
-                &extractors,
-                &ref_views,
-                &mut syms_sets,
-                &mut vals,
-            )?;
-        }
+        let n_shards = geom.plans.len();
+        let threads = self.cfg.effective_shard_threads();
+        // Look-ahead = scheduler width: decoded-but-unscattered fragment
+        // buffers stay bounded by ~threads · shard instead of piling up
+        // for the whole container.
+        sched::run_shards_ordered(
+            &self.pool,
+            threads,
+            threads,
+            n_shards,
+            |_| Ok(()),
+            |s, ()| {
+                let sp = &geom.plans[s];
+                let n = 3 * (sp.fragments().len() + sp.lanes());
+                let cursor = geom.cursors[s];
+                let blobs: Vec<&[u8]> =
+                    (0..n).map(|i| container.blob(cursor + i)).collect::<Result<_>>()?;
+                self.decode_shard_frags(sp, &extractors, &ref_views, &blobs)
+            },
+            |s, out| {
+                let sp = &geom.plans[s];
+                for k in 0..3 {
+                    for (fi, f) in sp.fragments().iter().enumerate() {
+                        let range = f.start..f.start + f.len;
+                        syms_sets[k][f.tensor][range.clone()]
+                            .copy_from_slice(&out.syms[k][fi]);
+                        vals[k][f.tensor][range].copy_from_slice(&out.vals[k][fi]);
+                    }
+                }
+                Ok(())
+            },
+        )?;
         let mut syms = SymbolMaps::default();
         for (k, s) in syms_sets.into_iter().enumerate() {
             syms.sets[k] = s;
@@ -1461,38 +1588,50 @@ impl Codec {
         Ok((vals, syms))
     }
 
-    /// Decode one shard's blobs (starting at blob index `cursor`, from the
-    /// precomputed geometry) into the per-tensor symbol and value buffers.
-    /// The `3 × lanes` lane decodes fan out over the pool.
-    #[allow(clippy::too_many_arguments)]
-    fn decode_one_shard(
+    /// Decode one shard's blobs (the shard's `3 × (fragments + lanes)`
+    /// blobs in container order) into per-fragment symbol and value
+    /// buffers: the `3 × lanes` lane decodes run as a nested pool
+    /// sub-batch, then each fragment dequantizes with its own center
+    /// table — the identical f32 ops the encoder ran to build its recon.
+    /// Shared by the in-memory v3 decode and the streaming restore, and
+    /// safe to run for many shards concurrently (no shared mutable
+    /// state).
+    pub(crate) fn decode_shard_frags(
         &self,
-        container: &Container,
-        cursor: usize,
         sp: &ShardPlan,
         extractors: &[ContextExtractor],
         ref_views: &[Option<RefMapViews<'_>>; 3],
-        out_syms: &mut [Vec<Vec<u16>>; 3],
-        out_vals: &mut [Vec<Vec<f32>>; 3],
-    ) -> Result<()> {
+        blobs: &[&[u8]],
+    ) -> Result<ShardDecodeOut> {
         let lanes = sp.lanes();
         let nf = sp.fragments().len();
+        if blobs.len() != 3 * (nf + lanes) {
+            return Err(Error::codec("shard blob count does not match its plan"));
+        }
         let mut centers: [Vec<Vec<f32>>; 3] = Default::default();
         let mut tasks: Vec<Task<Result<Vec<u16>>>> = Vec::with_capacity(3 * lanes);
         for k in 0..3 {
-            let base = cursor + k * (nf + lanes);
+            let base = k * (nf + lanes);
             for fi in 0..nf {
-                centers[k].push(centers_from_bytes(container.blob(base + fi)?)?);
+                centers[k].push(centers_from_bytes(blobs[base + fi])?);
             }
             let ref_maps = ref_views[k].as_ref();
             for lane in 0..lanes {
-                let stream = container.blob(base + nf + lane)?;
+                let stream = blobs[base + nf + lane];
                 tasks.push(Box::new(move || {
                     self.decode_lane(sp, extractors, ref_maps, stream, lane)
                 }));
             }
         }
-        let mut results = pool::run_scoped(pool::available_workers(), tasks)?.into_iter();
+        let mut results = self.pool.run_scoped(pool::available_workers(), tasks)?.into_iter();
+        let mut out = ShardDecodeOut {
+            syms: std::array::from_fn(|_| {
+                sp.fragments().iter().map(|f| vec![0u16; f.len]).collect()
+            }),
+            vals: std::array::from_fn(|_| {
+                sp.fragments().iter().map(|f| vec![0f32; f.len]).collect()
+            }),
+        };
         for k in 0..3 {
             for lane in 0..lanes {
                 let decoded = results.next().expect("lane decode missing")?;
@@ -1500,19 +1639,16 @@ impl Codec {
                     return Err(Error::codec("lane decoded wrong symbol count"));
                 }
                 for (p, s) in sp.iter_lane(lane).zip(decoded) {
-                    out_syms[k][p.tensor][p.elem] = s;
+                    out.syms[k][p.frag][p.local] = s;
                 }
             }
-            // Dequantize fragment-wise with the fragment's center table —
-            // the identical f32 ops the encoder ran to build its recon.
             let log_domain = k == 2 && self.cfg.log_moment2;
-            for (f, cs) in sp.fragments().iter().zip(&centers[k]) {
-                let syms = &out_syms[k][f.tensor][f.start..f.start + f.len];
-                let dst = &mut out_vals[k][f.tensor][f.start..f.start + f.len];
-                dequant_symbols_into(syms, cs, log_domain, dst)?;
+            let (syms_k, vals_k) = (&out.syms[k], &mut out.vals[k]);
+            for ((fs, fv), cs) in syms_k.iter().zip(vals_k.iter_mut()).zip(&centers[k]) {
+                dequant_symbols_into(fs, cs, log_domain, fv)?;
             }
         }
-        Ok(())
+        Ok(out)
     }
 
     /// Decode all `3 × lanes` format-2 lane streams on the pool and stitch
@@ -1544,7 +1680,7 @@ impl Codec {
                 }));
             }
         }
-        let mut results = pool::run_scoped(pool::available_workers(), tasks)?.into_iter();
+        let mut results = self.pool.run_scoped(pool::available_workers(), tasks)?.into_iter();
         let mut syms = SymbolMaps::default();
         for k in 0..3 {
             // Scatter each lane's slice straight into the per-tensor maps.
@@ -1581,7 +1717,7 @@ impl Codec {
                 self.decode_set_format1(stream, shapes, counts, prev_syms, k)
             }));
         }
-        let results = pool::run_scoped(pool::available_workers(), tasks)?;
+        let results = self.pool.run_scoped(pool::available_workers(), tasks)?;
         let mut syms = SymbolMaps::default();
         for (k, r) in results.into_iter().enumerate() {
             syms.sets[k] = r?;
@@ -1614,7 +1750,7 @@ impl Codec {
             let set: &TensorSet = set;
             tasks.push(Box::new(move || self.encode_one_set_format1(k, set, prev_syms)));
         }
-        let results = pool::run_scoped(pool::available_workers(), tasks)?;
+        let results = self.pool.run_scoped(pool::available_workers(), tasks)?;
 
         let mut container = Container::new(Json::Null);
         let mut set_bytes = [0usize; 3];
@@ -1660,6 +1796,7 @@ impl Codec {
             encode_seconds: t0.elapsed().as_secs_f64(),
             lanes: 1,
             shards: 1,
+            ..Default::default()
         };
         Ok(EncodeOutput { bytes, recon, syms, stats })
     }
@@ -2387,6 +2524,42 @@ mod tests {
         let p2 = Container::from_bytes(&e2b.bytes).unwrap();
         let p3 = Container::from_bytes(&e3b.bytes).unwrap();
         assert_eq!(&p3.blobs[..p2.blobs.len()], p2.blobs.as_slice());
+    }
+
+    #[test]
+    fn v3_bytes_are_identical_across_shard_thread_counts() {
+        // The shard scheduler is a pure scheduling change: containers and
+        // chain state must be byte/bit-identical at every thread count.
+        let c0 = Checkpoint::synthetic(10, &layers(), 75);
+        let c1 = Checkpoint::synthetic(20, &layers(), 76);
+        let mut reference: Option<(Vec<u8>, Vec<u8>)> = None;
+        for shard_threads in [1usize, 2, 8] {
+            let cfg = CodecConfig {
+                shard_bytes: 40 * 12,
+                shard_threads,
+                ..small_cfg(ContextMode::Lstm)
+            };
+            let codec = Codec::new(cfg, Backend::Native);
+            let e0 = codec.encode(&c0, None, None).unwrap();
+            assert!(e0.stats.shards > 1);
+            let e1 = codec.encode(&c1, Some(&e0.recon), Some(&e0.syms)).unwrap();
+            if shard_threads > 1 {
+                assert!(e1.stats.shards_in_flight_max >= 1);
+            }
+            match &reference {
+                None => reference = Some((e0.bytes.clone(), e1.bytes.clone())),
+                Some((b0, b1)) => {
+                    assert_eq!(&e0.bytes, b0, "threads={shard_threads} intra bytes");
+                    assert_eq!(&e1.bytes, b1, "threads={shard_threads} delta bytes");
+                }
+            }
+            // Decode (auto-threaded scheduler) restores bit-exactly.
+            let (d0, s0) = Codec::decode(&Backend::Native, &e0.bytes, None, None).unwrap();
+            assert_eq!(d0, e0.recon);
+            let (d1, _) =
+                Codec::decode(&Backend::Native, &e1.bytes, Some(&d0), Some(&s0)).unwrap();
+            assert_eq!(d1, e1.recon, "threads={shard_threads} restore");
+        }
     }
 
     #[test]

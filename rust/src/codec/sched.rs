@@ -1,0 +1,267 @@
+//! Work-stealing shard scheduler for format-3 containers.
+//!
+//! Format-3 shards were designed as fully independent coding units (own
+//! k-means fragments, own `3 × lanes` lane streams, own CRC), yet the
+//! original walk visited them strictly one at a time — parallelism capped
+//! at `min(3 · lanes, threads)` no matter how many shards the container
+//! carried. This module makes *shard × lane* the unit of parallelism:
+//! shard jobs fan out over the persistent pool ([`crate::util::pool`]),
+//! and each shard job nests its own `3 × lanes` lane sub-batch, so total
+//! parallelism reaches `min(shards · 3 · lanes, threads)`. Idle workers
+//! steal into whichever claimable batch — shard-level or lane-level — is
+//! in the pool queue, through the pool's shared task cursor.
+//!
+//! ## Determinism
+//!
+//! Output is **byte-identical** to the sequential shard walk at every
+//! thread count, by construction:
+//!
+//! - a shard's blobs are a pure function of (config, its symbols, its
+//!   reference views) — per-lane model replicas and windowed
+//!   [`super::syms::SymbolSource`] views are per-shard state, never
+//!   shared;
+//! - [`run_shards_ordered`] hands finished shards to the single-threaded
+//!   `consume` callback in strict shard-index order (an ordered-results
+//!   collector), so the container writer sees the exact sequential byte
+//!   stream.
+//!
+//! ## Bounded look-ahead
+//!
+//! The streaming paths must not hold the whole checkpoint: the scheduler
+//! admits at most `look_ahead` shards per window (prefetch → parallel
+//! produce → ordered consume), so peak memory stays
+//! `~O(shards_in_flight · shard)` instead of `O(n_shards · shard)`. The
+//! in-memory paths pass `look_ahead = n_shards` (everything is resident
+//! anyway). I/O stays on the calling thread: `prefetch` (sequential
+//! range reads, CRC folding) and `consume` (ordered writes) never run on
+//! pool workers — only the pure `produce` compute does.
+//!
+//! A window is a **barrier**: its prefetch I/O, its compute batch and
+//! its ordered writes alternate rather than overlap, so the slowest
+//! shard of a window stalls admission of the next. That is a deliberate
+//! trade — one scoped pool batch per window keeps the no-deadlock
+//! argument and the memory bound trivially auditable (nothing outlives
+//! its window) — and the stall is small while per-shard compute
+//! (quantize + entropy) dominates the range-read I/O, as it does on
+//! every measured configuration. A rolling window (admit shard
+//! `s + look_ahead` as shard `s` retires) would overlap the phases at
+//! the cost of per-task completion tracking; revisit if profiles ever
+//! show the barrier, not the coding, on the critical path.
+
+use crate::util::pool::{PersistentPool, Task};
+use crate::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+/// Telemetry of one scheduled shard walk (surfaced through
+/// [`super::EncodeStats`] and the coordinator's metrics registry).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub(crate) struct SchedStats {
+    /// Shard jobs executed.
+    pub(crate) shard_jobs: usize,
+    /// High-water mark of concurrently running shard jobs (occupancy).
+    pub(crate) max_in_flight: usize,
+    /// Total seconds shard jobs spent queued between window submission
+    /// and the start of their compute (per-shard queue wait, summed).
+    pub(crate) queue_wait_seconds: f64,
+}
+
+/// Run `n` shard jobs on `pool` with shard-level parallelism `threads`
+/// and at most `look_ahead` shards in flight, delivering results in
+/// strict shard-index order.
+///
+/// Per window of `look_ahead` shards: `prefetch(s)` runs on the calling
+/// thread in ascending order (sequential I/O — range reads, running
+/// CRCs); `produce(s, input)` runs on the pool (and may itself submit
+/// nested lane sub-batches); `consume(s, output)` runs on the calling
+/// thread in ascending order (sequential writes). Errors from any phase
+/// abort the walk; a `produce` error surfaces at its shard's consume
+/// position, so error order is deterministic too.
+pub(crate) fn run_shards_ordered<I, T, P, F, C>(
+    pool: &PersistentPool,
+    threads: usize,
+    look_ahead: usize,
+    n: usize,
+    mut prefetch: P,
+    produce: F,
+    mut consume: C,
+) -> Result<SchedStats>
+where
+    I: Send,
+    T: Send,
+    P: FnMut(usize) -> Result<I>,
+    F: Fn(usize, I) -> Result<T> + Sync,
+    C: FnMut(usize, T) -> Result<()>,
+{
+    let mut stats = SchedStats { shard_jobs: n, ..Default::default() };
+    if n == 0 {
+        return Ok(stats);
+    }
+    let threads = threads.max(1);
+    let window = look_ahead.max(1);
+    let in_flight = AtomicUsize::new(0);
+    let max_in_flight = AtomicUsize::new(0);
+    let mut queue_wait = 0.0f64;
+
+    let mut s0 = 0usize;
+    while s0 < n {
+        let s1 = (s0 + window).min(n);
+        // Sequential I/O phase: admit the window's inputs in shard order.
+        let mut inputs = Vec::with_capacity(s1 - s0);
+        for s in s0..s1 {
+            inputs.push(prefetch(s)?);
+        }
+        // Parallel compute phase: one pool task per shard; each may nest
+        // its own lane sub-batch (see util::pool's nesting contract).
+        let submitted = Instant::now();
+        let mut tasks: Vec<Task<(Result<T>, f64)>> = Vec::with_capacity(s1 - s0);
+        for (s, input) in (s0..s1).zip(inputs) {
+            let produce = &produce;
+            let in_flight = &in_flight;
+            let max_in_flight = &max_in_flight;
+            tasks.push(Box::new(move || {
+                let wait = submitted.elapsed().as_secs_f64();
+                let now = in_flight.fetch_add(1, Ordering::Relaxed) + 1;
+                max_in_flight.fetch_max(now, Ordering::Relaxed);
+                let out = produce(s, input);
+                in_flight.fetch_sub(1, Ordering::Relaxed);
+                (out, wait)
+            }));
+        }
+        let results = pool.run_scoped(threads, tasks)?;
+        // Ordered collection phase: the writer sees shards in index order
+        // regardless of completion order.
+        for (s, (out, wait)) in (s0..s1).zip(results) {
+            queue_wait += wait;
+            consume(s, out?)?;
+        }
+        s0 = s1;
+    }
+    stats.max_in_flight = max_in_flight.load(Ordering::Relaxed);
+    stats.queue_wait_seconds = queue_wait;
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::pool;
+    use std::sync::Mutex;
+
+    #[test]
+    fn consume_sees_shards_in_index_order() {
+        let order = Mutex::new(Vec::new());
+        let stats = run_shards_ordered(
+            pool::global(),
+            4,
+            16,
+            16,
+            |s| Ok(s),
+            |s, input| {
+                assert_eq!(s, input);
+                // Uneven cost so completion order shuffles.
+                if s % 3 == 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                Ok(s * 10)
+            },
+            |s, out| {
+                assert_eq!(out, s * 10);
+                order.lock().unwrap().push(s);
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(order.into_inner().unwrap(), (0..16).collect::<Vec<_>>());
+        assert_eq!(stats.shard_jobs, 16);
+        assert!(stats.max_in_flight >= 1);
+    }
+
+    #[test]
+    fn look_ahead_bounds_shards_in_flight() {
+        for look_ahead in [1usize, 2] {
+            let stats = run_shards_ordered(
+                pool::global(),
+                8,
+                look_ahead,
+                12,
+                |s| Ok(s),
+                |_s, _| {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    Ok(())
+                },
+                |_, _| Ok(()),
+            )
+            .unwrap();
+            assert!(
+                stats.max_in_flight <= look_ahead,
+                "look_ahead {look_ahead} but {} in flight",
+                stats.max_in_flight
+            );
+        }
+    }
+
+    #[test]
+    fn prefetch_runs_sequentially_in_order() {
+        // The prefetch callback may hold &mut I/O state — the scheduler
+        // must call it one shard at a time, ascending.
+        let mut seen = Vec::new();
+        run_shards_ordered(
+            pool::global(),
+            4,
+            3,
+            10,
+            |s| {
+                seen.push(s);
+                Ok(())
+            },
+            |_, _| Ok(1u32),
+            |_, _| Ok(()),
+        )
+        .unwrap();
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn produce_error_surfaces_at_its_shard_position() {
+        let mut consumed = Vec::new();
+        let err = run_shards_ordered(
+            pool::global(),
+            4,
+            8,
+            8,
+            |s| Ok(s),
+            |s, _| {
+                if s == 3 {
+                    Err(crate::Error::codec("shard 3 poisoned"))
+                } else {
+                    Ok(s)
+                }
+            },
+            |s, _| {
+                consumed.push(s);
+                Ok(())
+            },
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("shard 3 poisoned"));
+        // Shards before the failing one were consumed in order.
+        assert_eq!(consumed, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn zero_shards_is_a_no_op() {
+        let stats = run_shards_ordered(
+            pool::global(),
+            4,
+            4,
+            0,
+            |_| Ok(()),
+            |_, _| Ok(0u8),
+            |_, _| Ok(()),
+        )
+        .unwrap();
+        assert_eq!(stats.shard_jobs, 0);
+        assert_eq!(stats.max_in_flight, 0);
+    }
+}

@@ -8,12 +8,21 @@
 //! through [`crate::container::ContainerStreamWriter`] as they finish, so
 //! peak memory is bounded by
 //!
-//! - one shard of values per set (the `shard_bytes` budget),
+//! - the in-flight shards of the work-stealing scheduler
+//!   (`shard_threads` × one shard of values per set — the scheduler's
+//!   look-ahead window equals its width, and `shard_threads = 1`
+//!   recovers the strict one-shard-resident walk),
 //! - one tensor during the per-tensor pruning-statistics pass
 //!   (`median(|W|)` and `mean(|v_t|)` are tensor-global, Eq. 4–5), and
-//! - one shard's *windowed* reference symbol maps when a context mode is
-//!   used (fragment rows ± `window/2`, fetched by range through
-//!   [`SymbolSource`]; `Order0` needs nothing).
+//! - the in-flight shards' *windowed* reference symbol maps when a
+//!   context mode is used (fragment rows ± `window/2`, fetched by range
+//!   through [`SymbolSource`]; `Order0` needs nothing).
+//!
+//! All range reads (checkpoint values, reference symbols, container
+//! blobs) and all output writes stay on the calling thread in shard
+//! order; only the pure per-shard compute (quantize + the `3 × lanes`
+//! entropy sub-batch) fans out, so bytes are identical at every thread
+//! count.
 //!
 //! [`decode_streaming`] is the restore mirror: it range-reads a format-3
 //! container through [`crate::container::ContainerFileReader`], decodes
@@ -21,7 +30,7 @@
 //! delta reference back via ranged [`ShardSource`] reads, and scatters
 //! values straight into the raw `.bin` layout with the seek-based
 //! [`crate::checkpoint::CheckpointFileWriter`] — so a whole delta chain
-//! restores with peak RSS ~O(shard)
+//! restores with peak RSS ~O(shards_in_flight · shard)
 //! ([`crate::coordinator::restore_step_to_file`]).
 //!
 //! The streamed container is **byte-identical** to the one the in-memory
@@ -42,8 +51,8 @@ use super::shard::{index_from_bytes, index_to_bytes, ShardIndexBuilder};
 use super::syms::{SymbolMapFileWriter, SymbolSink, SymbolSource};
 use super::{
     check_chain_inputs, checked_shape_count, maybe_log, parse_untrusted_header,
-    parse_v3_geometry, verify_shard_crc, Codec, ContextExtractor, MapView, RefMapViews,
-    SetStatsAcc, ShardLayout, ShardPlan, SymbolMaps,
+    parse_v3_geometry, verify_shard_crc, Codec, MapView, RefMapViews, SetStatsAcc, ShardLayout,
+    ShardPlan, SymbolMaps,
 };
 use crate::checkpoint::{Checkpoint, CheckpointFileWriter};
 use crate::codec::EncodeStats;
@@ -271,44 +280,73 @@ pub fn encode_streaming<W: Write>(
         Some((layout.shard_values(), layout.n_shards())),
     );
 
-    // Pass B — per shard: read, delta, prune, quantize, entropy-code and
-    // stream out. Only the shard under work is resident.
+    // Pass B — shards flow through the work-stealing scheduler
+    // ([`super::sched`]): the *prefetch* phase range-reads a shard's raw
+    // fragment values and windowed reference views sequentially on this
+    // thread (the sources are `&mut dyn`), the *produce* phase runs
+    // delta + prune + quantize + the nested `3 × lanes` entropy sub-batch
+    // on the pool, and the ordered *consume* phase streams the blobs out
+    // in shard-index order — byte-identical to the sequential walk. The
+    // look-ahead window equals `shard_threads`, so at most that many
+    // shards are resident: peak memory ~O(shard_threads · shard).
     let n_blobs: usize =
         plans.iter().map(|sp| 3 * (sp.fragments().len() + lanes)).sum::<usize>() + 1;
     let mut w = ContainerStreamWriter::new(out, &header, n_blobs as u32)?;
     let mut index = Vec::with_capacity(plans.len());
     let mut acc = SetStatsAcc::default();
-    for sp in &plans {
-        let (frag_syms, frag_centers) =
-            quantize_shard(codec, current, reference.as_deref_mut(), sp, &pcfg, &scalars)?;
-        let syms_refs: [Vec<&[u16]>; 3] =
-            std::array::from_fn(|k| frag_syms[k].iter().map(|v| v.as_slice()).collect());
-        // Windowed reference views: only the reference rows this shard's
-        // contexts can touch are read (and resident).
-        let ref_views: [Option<RefMapViews<'_>>; 3] = match prev_syms.as_deref_mut() {
-            Some(src) if use_ctx => {
-                windowed_ref_views(src, sp, &shapes, counts.len(), cfg.window)?
-            }
-            _ => std::array::from_fn(|_| None),
-        };
-        let blobs = codec.encode_shard_blobs(
-            sp,
-            &extractors,
-            &ref_views,
-            [&frag_centers[0], &frag_centers[1], &frag_centers[2]],
-            [&syms_refs[0], &syms_refs[1], &syms_refs[2]],
-        )?;
-        let mut ib = ShardIndexBuilder::new(w.offset());
-        for blob in &blobs.blobs {
-            ib.add_blob(blob);
-            w.push_blob(blob)?;
-        }
-        index.push(ib.finish());
-        acc.add(&blobs);
+    let threads = cfg.effective_shard_threads();
+
+    struct ShardJob {
+        raw: Vec<FragRaw>,
+        ref_views: [Option<RefMapViews<'static>>; 3],
     }
+
+    let sched = super::sched::run_shards_ordered(
+        codec.pool(),
+        threads,
+        threads,
+        plans.len(),
+        |s| {
+            let sp = &plans[s];
+            let raw = read_shard_raw(current, reference.as_deref_mut(), sp)?;
+            // Windowed reference views: only the reference rows this
+            // shard's contexts can touch are read (and resident).
+            let ref_views = match prev_syms.as_deref_mut() {
+                Some(src) if use_ctx => {
+                    windowed_ref_views(src, sp, &shapes, counts.len(), cfg.window)?
+                }
+                _ => std::array::from_fn(|_| None),
+            };
+            Ok(ShardJob { raw, ref_views })
+        },
+        |s, job: ShardJob| {
+            let sp = &plans[s];
+            let (frag_syms, frag_centers) =
+                quantize_shard_raw(codec, sp, job.raw, &pcfg, &scalars)?;
+            let syms_refs: [Vec<&[u16]>; 3] =
+                std::array::from_fn(|k| frag_syms[k].iter().map(|v| v.as_slice()).collect());
+            codec.encode_shard_blobs(
+                sp,
+                &extractors,
+                &job.ref_views,
+                [&frag_centers[0], &frag_centers[1], &frag_centers[2]],
+                [&syms_refs[0], &syms_refs[1], &syms_refs[2]],
+            )
+        },
+        |_s, blobs| {
+            let mut ib = ShardIndexBuilder::new(w.offset());
+            for blob in &blobs.blobs {
+                ib.add_blob(blob);
+                w.push_blob(blob)?;
+            }
+            index.push(ib.finish());
+            acc.add(&blobs);
+            Ok(())
+        },
+    )?;
     w.push_blob(&index_to_bytes(&index))?;
     let total_bytes = w.finish()?;
-    Ok(acc.into_stats(
+    let mut stats = acc.into_stats(
         raw_bytes,
         total_bytes as usize,
         scalars.stats.weight_density(),
@@ -316,7 +354,10 @@ pub fn encode_streaming<W: Write>(
         t0.elapsed().as_secs_f64(),
         lanes,
         plans.len(),
-    ))
+    );
+    stats.shard_queue_wait_seconds = sched.queue_wait_seconds;
+    stats.shards_in_flight_max = sched.max_in_flight;
+    Ok(stats)
 }
 
 /// Pass A of the streaming encode: per-tensor `median(|W|)` and momentum
@@ -367,34 +408,64 @@ fn prune_scalars(
     Ok(out)
 }
 
-/// Pass B, one shard: read every fragment's values, apply delta + the
-/// Eq. 4–5 masks using the precomputed per-tensor scalars, and k-means
-/// quantize each (set, fragment) — identical inputs, hence identical
-/// symbols and centers, to the in-memory prepare path.
-#[allow(clippy::type_complexity)]
-fn quantize_shard(
-    codec: &Codec,
+/// One fragment's raw inputs, range-read in the scheduler's sequential
+/// prefetch phase (pure I/O — no arithmetic happens here, so the split
+/// from the compute phase cannot change a single output byte).
+struct FragRaw {
+    /// Current weights.
+    wv: Vec<f32>,
+    /// Reference weights (delta frames).
+    rw: Option<Vec<f32>>,
+    /// First moment.
+    m1: Vec<f32>,
+    /// Second moment.
+    m2: Vec<f32>,
+}
+
+/// Prefetch phase of pass B, one shard: range-read every fragment's
+/// values (and the reference's, for delta frames) in fragment order.
+fn read_shard_raw(
     current: &mut dyn ShardSource,
     mut reference: Option<&mut dyn ShardSource>,
     sp: &ShardPlan,
+) -> Result<Vec<FragRaw>> {
+    let mut out = Vec::with_capacity(sp.fragments().len());
+    for f in sp.fragments() {
+        let range = f.start..f.start + f.len;
+        let wv = read_checked(current, 0, f.tensor, range.clone())?;
+        let rw = match reference.as_deref_mut() {
+            Some(r) => Some(read_checked(r, 0, f.tensor, range.clone())?),
+            None => None,
+        };
+        let m1 = read_checked(current, 1, f.tensor, range.clone())?;
+        let m2 = read_checked(current, 2, f.tensor, range)?;
+        out.push(FragRaw { wv, rw, m1, m2 });
+    }
+    Ok(out)
+}
+
+/// Compute phase of pass B, one shard: apply delta + the Eq. 4–5 masks
+/// using the precomputed per-tensor scalars, and k-means quantize each
+/// (set, fragment) — identical inputs, hence identical symbols and
+/// centers, to the in-memory prepare path. Runs on a pool worker; all
+/// inputs are shard-local.
+#[allow(clippy::type_complexity)]
+fn quantize_shard_raw(
+    codec: &Codec,
+    sp: &ShardPlan,
+    raw: Vec<FragRaw>,
     pcfg: &PruneConfig,
     scalars: &PruneScalars,
 ) -> Result<([Vec<Vec<u16>>; 3], [Vec<Vec<f32>>; 3])> {
     let cfg = codec.cfg();
     let qcfg = cfg.quant_cfg();
     let mut quantized: [Vec<Quantized>; 3] = Default::default();
-    for f in sp.fragments() {
-        let range = f.start..f.start + f.len;
-        let wv = read_checked(current, 0, f.tensor, range.clone())?;
-        let mut dw: Vec<f32> = match reference.as_deref_mut() {
-            Some(r) => {
-                let rw = read_checked(r, 0, f.tensor, range.clone())?;
-                wv.iter().zip(&rw).map(|(&a, &b)| a - b).collect()
-            }
+    for (f, fr) in sp.fragments().iter().zip(raw) {
+        let FragRaw { wv, rw, mut m1, mut m2 } = fr;
+        let mut dw: Vec<f32> = match rw {
+            Some(rw) => wv.iter().zip(&rw).map(|(&a, &b)| a - b).collect(),
             None => wv,
         };
-        let mut m1 = read_checked(current, 1, f.tensor, range.clone())?;
-        let mut m2 = read_checked(current, 2, f.tensor, range)?;
         if pcfg.enabled {
             for j in 0..f.len {
                 let kw = prune::keep_weight(dw[j], scalars.med[f.tensor], m2[j], pcfg);
@@ -485,7 +556,7 @@ pub fn decode_weight_tensor(
                 codec.decode_lane(sp, extractors, ref_maps, stream, lane)
             }));
         }
-        let results = pool::run_scoped(pool::available_workers(), tasks)?;
+        let results = codec.pool().run_scoped(pool::available_workers(), tasks)?;
         // Scatter this shard's symbols; keep per-fragment buffers so each
         // fragment dequantizes with its own center table.
         let mut frag_syms: Vec<Vec<u16>> =
@@ -546,12 +617,15 @@ pub struct StreamRestoreStats {
 /// checkpoint straight to `out_path` (the exact byte format of
 /// [`Checkpoint::write_to`], via seek-based
 /// [`crate::checkpoint::CheckpointFileWriter`] range writes) — the decode
-/// mirror of [`encode_streaming`]. Peak memory is ~one shard: the
-/// container is range-read through [`ContainerFileReader`], the delta
-/// reference is range-read through a [`ShardSource`] (e.g.
+/// mirror of [`encode_streaming`]. Peak memory is ~the scheduler's
+/// in-flight shards (see [`decode_streaming_with`] to pin the width; the
+/// default is one shard per hardware thread): the container is
+/// range-read through [`ContainerFileReader`], the delta reference is
+/// range-read through a [`ShardSource`] (e.g.
 /// [`crate::checkpoint::Store::reader`]), and the reference symbol maps
 /// of the context modes are *windowed* per shard through a
-/// [`SymbolSource`].
+/// [`SymbolSource`]. Shards decode concurrently on the work-stealing
+/// scheduler; the written bytes are identical at every thread count.
 ///
 /// Integrity: each shard's index CRC is verified as it is range-read
 /// (errors localize to a shard), and because the restore touches every
@@ -573,10 +647,29 @@ pub struct StreamRestoreStats {
 pub fn decode_streaming(
     backend: &Backend,
     container: &mut ContainerFileReader,
+    reference: Option<&mut dyn ShardSource>,
+    prev_syms: Option<&mut dyn SymbolSource>,
+    out_path: &Path,
+    syms_out_path: Option<&Path>,
+) -> Result<StreamRestoreStats> {
+    decode_streaming_with(backend, container, reference, prev_syms, out_path, syms_out_path, 0)
+}
+
+/// [`decode_streaming`] with an explicit shard-scheduler parallelism:
+/// `shard_threads` shards decode concurrently (0 = auto, the available
+/// hardware threads), which also bounds the look-ahead window — peak RSS
+/// is `~O(shard_threads · shard)`, and `shard_threads = 1` recovers the
+/// strict one-shard-resident sequential walk. The written bytes are
+/// identical at every setting.
+#[allow(clippy::too_many_arguments)]
+pub fn decode_streaming_with(
+    backend: &Backend,
+    container: &mut ContainerFileReader,
     mut reference: Option<&mut dyn ShardSource>,
     mut prev_syms: Option<&mut dyn SymbolSource>,
     out_path: &Path,
     syms_out_path: Option<&Path>,
+    shard_threads: usize,
 ) -> Result<StreamRestoreStats> {
     let hdr = parse_untrusted_header(container.header(), container.file_len() as usize, backend)?;
     if hdr.format != 3 {
@@ -585,7 +678,11 @@ pub fn decode_streaming(
             hdr.format
         )));
     }
-    let codec = Codec::new(hdr.cfg.clone(), backend.clone());
+    // `shard_threads` is a runtime knob, never header state — install the
+    // caller's choice before the codec resolves its scheduler width.
+    let mut run_cfg = hdr.cfg.clone();
+    run_cfg.shard_threads = shard_threads;
+    let codec = Codec::new(run_cfg, backend.clone());
     let use_ctx = codec.cfg().mode.uses_reference_context();
 
     // The shared chain-input rule (one implementation with the in-memory
@@ -656,47 +753,114 @@ pub fn decode_streaming(
     };
     let extractors = codec.build_extractors_from_shapes(&hdr.shapes)?;
 
-    let mut next_offset = container.blobs_start();
-    for (s, e) in index.iter().enumerate() {
-        let sp = ShardPlan::new(&layout, s, lanes);
-        let n = 3 * (sp.fragments().len() + lanes);
-        if e.offset != next_offset {
-            return Err(Error::format(format!(
-                "shard {s} index offset {} does not match blob layout {next_offset}",
-                e.offset
-            )));
-        }
-        if e.n_blobs as usize != n {
-            return Err(Error::format(format!(
-                "shard {s} index declares {} blobs, layout implies {n}",
-                e.n_blobs
-            )));
-        }
-        let (blobs, end) = container.read_blobs_at(e.offset, n)?;
-        next_offset = end;
-        // Index CRC over the framed blob bytes — the integrity pin of the
-        // random-access contract, checked for exactly the bytes decoded.
-        let mut ib = ShardIndexBuilder::new(e.offset);
-        for b in &blobs {
-            ib.add_blob(b);
-            body_crc.update(&(b.len() as u32).to_le_bytes());
-            body_crc.update(b);
-        }
-        if ib.finish().crc32 != e.crc32 {
-            return Err(Error::format(format!("shard {s} CRC mismatch in shard index")));
-        }
-        decode_shard_streaming(
-            &codec,
-            &sp,
-            &extractors,
-            &hdr.shapes,
-            &blobs,
-            reference.as_deref_mut(),
-            prev_syms.as_deref_mut(),
-            &mut out,
-            syms_out.as_mut(),
-        )?;
+    // Shards flow through the work-stealing scheduler: the *prefetch*
+    // phase range-reads a shard's blobs (folding the running body CRC in
+    // file order and verifying the shard's index CRC), its windowed
+    // reference symbol views, and the reference weight ranges its delta
+    // add-back needs — all sequential on this thread; the *produce* phase
+    // runs the `3 × lanes` lane decodes (a nested pool sub-batch) and the
+    // per-fragment dequantize + delta add-back on the pool; the ordered
+    // *consume* phase scatters values and symbols to the seek-based
+    // writers in shard-index order — the written bytes equal the
+    // sequential walk at every thread count. Look-ahead is bounded by the
+    // scheduler width, so peak RSS stays ~O(shard_threads · shard).
+    let plans: Vec<ShardPlan> =
+        (0..n_shards).map(|s| ShardPlan::new(&layout, s, lanes)).collect();
+    let threads = codec.cfg().effective_shard_threads();
+
+    struct DecodeJob {
+        blobs: Vec<Vec<u8>>,
+        ref_views: [Option<RefMapViews<'static>>; 3],
+        /// Reference weight values per fragment (delta add-back).
+        ref_w: Vec<Option<Vec<f32>>>,
     }
+
+    let mut next_offset = container.blobs_start();
+    super::sched::run_shards_ordered(
+        codec.pool(),
+        threads,
+        threads,
+        n_shards,
+        |s| {
+            let sp = &plans[s];
+            let e = &index[s];
+            let n = 3 * (sp.fragments().len() + lanes);
+            if e.offset != next_offset {
+                return Err(Error::format(format!(
+                    "shard {s} index offset {} does not match blob layout {next_offset}",
+                    e.offset
+                )));
+            }
+            if e.n_blobs as usize != n {
+                return Err(Error::format(format!(
+                    "shard {s} index declares {} blobs, layout implies {n}",
+                    e.n_blobs
+                )));
+            }
+            let (blobs, end) = container.read_blobs_at(e.offset, n)?;
+            next_offset = end;
+            // Index CRC over the framed blob bytes — the integrity pin of
+            // the random-access contract, checked for exactly the bytes
+            // decoded; the running body CRC folds in file order because
+            // prefetch runs strictly shard-ascending.
+            let mut ib = ShardIndexBuilder::new(e.offset);
+            for b in &blobs {
+                ib.add_blob(b);
+                body_crc.update(&(b.len() as u32).to_le_bytes());
+                body_crc.update(b);
+            }
+            if ib.finish().crc32 != e.crc32 {
+                return Err(Error::format(format!("shard {s} CRC mismatch in shard index")));
+            }
+            let window = codec.cfg().window;
+            let ref_views = match prev_syms.as_deref_mut() {
+                Some(src) => {
+                    windowed_ref_views(src, sp, &hdr.shapes, hdr.shapes.len(), window)?
+                }
+                None => std::array::from_fn(|_| None),
+            };
+            let mut ref_w = Vec::with_capacity(sp.fragments().len());
+            for f in sp.fragments() {
+                ref_w.push(match reference.as_deref_mut() {
+                    Some(r) => Some(read_checked(r, 0, f.tensor, f.start..f.start + f.len)?),
+                    None => None,
+                });
+            }
+            Ok(DecodeJob { blobs, ref_views, ref_w })
+        },
+        |s, job: DecodeJob| {
+            let sp = &plans[s];
+            let blob_refs: Vec<&[u8]> = job.blobs.iter().map(|b| b.as_slice()).collect();
+            let mut dec = codec.decode_shard_frags(sp, &extractors, &job.ref_views, &blob_refs)?;
+            // Delta frames: add the reference weights back — the same
+            // f32 op order (dequantize, then `+= reference`) as the
+            // in-memory decoder, which is what keeps the output bit-exact.
+            for (fv, rv) in dec.vals[0].iter_mut().zip(&job.ref_w) {
+                if let Some(rv) = rv {
+                    if rv.len() != fv.len() {
+                        return Err(Error::shape("reference fragment size mismatch"));
+                    }
+                    for (x, &v) in fv.iter_mut().zip(rv) {
+                        *x += v;
+                    }
+                }
+            }
+            Ok(dec)
+        },
+        |s, dec| {
+            let sp = &plans[s];
+            for k in 0..3 {
+                for (fi, f) in sp.fragments().iter().enumerate() {
+                    let range = f.start..f.start + f.len;
+                    out.write_values(k, f.tensor, range, &dec.vals[k][fi])?;
+                    if let Some(w) = syms_out.as_mut() {
+                        w.write_syms(k, f.tensor, f.start, &dec.syms[k][fi])?;
+                    }
+                }
+            }
+            Ok(())
+        },
+    )?;
     if next_offset != index_off {
         return Err(Error::format("shard blobs do not end at the shard index"));
     }
@@ -711,83 +875,6 @@ pub fn decode_streaming(
         w.finish()?;
     }
     Ok(StreamRestoreStats { step: hdr.step, shards: n_shards, wrote_syms })
-}
-
-/// Decode one shard's blobs into the output sinks: windowed reference
-/// views → `3 × lanes` pool lane decodes → per-fragment scatter,
-/// dequantize, delta add-back (ranged reference reads) → ranged value and
-/// symbol writes. The f32 op sequence per element (dequantize, then
-/// `+= reference`) is identical to the in-memory decode, which is what
-/// keeps the output bit-exact.
-#[allow(clippy::too_many_arguments)]
-fn decode_shard_streaming(
-    codec: &Codec,
-    sp: &ShardPlan,
-    extractors: &[ContextExtractor],
-    shapes: &[Vec<usize>],
-    blobs: &[Vec<u8>],
-    mut reference: Option<&mut dyn ShardSource>,
-    prev_syms: Option<&mut dyn SymbolSource>,
-    out: &mut CheckpointFileWriter,
-    mut syms_out: Option<&mut SymbolMapFileWriter>,
-) -> Result<()> {
-    let cfg = codec.cfg();
-    let lanes = sp.lanes();
-    let nf = sp.fragments().len();
-    let ref_views: [Option<RefMapViews<'_>>; 3] = match prev_syms {
-        Some(src) => windowed_ref_views(src, sp, shapes, shapes.len(), cfg.window)?,
-        None => std::array::from_fn(|_| None),
-    };
-    let mut centers: [Vec<Vec<f32>>; 3] = Default::default();
-    let mut tasks: Vec<Task<Result<Vec<u16>>>> = Vec::with_capacity(3 * lanes);
-    for k in 0..3 {
-        let base = k * (nf + lanes);
-        for blob in &blobs[base..base + nf] {
-            centers[k].push(centers_from_bytes(blob)?);
-        }
-        let ref_maps = ref_views[k].as_ref();
-        for lane in 0..lanes {
-            let stream = blobs[base + nf + lane].as_slice();
-            tasks.push(Box::new(move || {
-                codec.decode_lane(sp, extractors, ref_maps, stream, lane)
-            }));
-        }
-    }
-    let mut results = pool::run_scoped(pool::available_workers(), tasks)?.into_iter();
-    for k in 0..3 {
-        let mut frag_syms: Vec<Vec<u16>> =
-            sp.fragments().iter().map(|f| vec![0u16; f.len]).collect();
-        for lane in 0..lanes {
-            let decoded = results.next().expect("lane decode missing")?;
-            if decoded.len() != sp.lane_len(lane) {
-                return Err(Error::codec("lane decoded wrong symbol count"));
-            }
-            for (p, s) in sp.iter_lane(lane).zip(decoded) {
-                frag_syms[p.frag][p.local] = s;
-            }
-        }
-        let log_domain = k == 2 && cfg.log_moment2;
-        for ((f, syms), cs) in sp.fragments().iter().zip(&frag_syms).zip(&centers[k]) {
-            let range = f.start..f.start + f.len;
-            let mut vals = vec![0f32; f.len];
-            super::dequant_symbols_into(syms, cs, log_domain, &mut vals)?;
-            if k == 0 {
-                // Delta frames: add the reference weights back, read by
-                // range — same op order as `add_reference_weights`.
-                if let Some(r) = reference.as_deref_mut() {
-                    let rv = read_checked(r, 0, f.tensor, range.clone())?;
-                    for (x, &v) in vals.iter_mut().zip(&rv) {
-                        *x += v;
-                    }
-                }
-            }
-            out.write_values(k, f.tensor, range, &vals)?;
-            if let Some(w) = syms_out.as_mut() {
-                w.write_syms(k, f.tensor, f.start, syms)?;
-            }
-        }
-    }
-    Ok(())
 }
 
 #[cfg(test)]

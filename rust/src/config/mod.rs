@@ -147,6 +147,7 @@ impl ExperimentConfig {
                     ("log_moment2", Json::Bool(self.codec.log_moment2)),
                     ("lanes", Json::num(self.codec.lanes as f64)),
                     ("shard_bytes", Json::num(self.codec.shard_bytes as f64)),
+                    ("shard_threads", Json::num(self.codec.shard_threads as f64)),
                 ]),
             ),
         ])
@@ -197,6 +198,12 @@ impl ExperimentConfig {
             return Err(Error::config(
                 "codec.shard_bytes must be 0 (unsharded) or >= 12 (one position)",
             ));
+        }
+        if self.codec.shard_threads > crate::codec::MAX_SHARD_THREADS {
+            return Err(Error::config(format!(
+                "codec.shard_threads must be 0 (auto) or 1..={}",
+                crate::codec::MAX_SHARD_THREADS
+            )));
         }
         Ok(())
     }
@@ -255,6 +262,9 @@ fn apply_codec(c: &mut CodecConfig, j: &Json) -> Result<()> {
             // 0 = unsharded (format 2); >0 = streaming format 3 with this
             // many raw value bytes per shard (~64 MiB is a good default).
             "shard_bytes" => c.shard_bytes = req_u64(val)? as usize,
+            // Shard-scheduler parallelism (and streaming look-ahead);
+            // 0 = auto (available hardware threads). Never affects bytes.
+            "shard_threads" => c.shard_threads = req_u64(val)? as usize,
             other => return Err(Error::config(format!("unknown codec key '{other}'"))),
         }
     }
@@ -328,6 +338,11 @@ mod tests {
         assert!(ExperimentConfig::from_json_text(r#"{"codec": {"lanes": 0}}"#).is_ok());
         assert!(ExperimentConfig::from_json_text(r#"{"codec": {"shard_bytes": 4}}"#).is_err());
         assert!(ExperimentConfig::from_json_text(r#"{"codec": {"shard_bytes": 0}}"#).is_ok());
+        assert!(
+            ExperimentConfig::from_json_text(r#"{"codec": {"shard_threads": 5000}}"#).is_err()
+        );
+        assert!(ExperimentConfig::from_json_text(r#"{"codec": {"shard_threads": 0}}"#).is_ok());
+        assert!(ExperimentConfig::from_json_text(r#"{"codec": {"shard_threads": 8}}"#).is_ok());
         assert!(
             ExperimentConfig::from_json_text(r#"{"codec": {"shard_bytes": 67108864}}"#).is_ok()
         );

@@ -241,8 +241,9 @@ impl<W: std::io::Write> ContainerStreamWriter<W> {
 /// [`crate::codec::sharded::decode_streaming`]: `open` verifies the
 /// trailer CRC in a chunked pass (O(1) memory), parses the header, and
 /// then serves framed blob runs by offset — the format-3 shard index
-/// supplies the offsets, so a shard-by-shard decode only ever holds one
-/// shard's blobs.
+/// supplies the offsets, so a shard-by-shard decode only ever holds the
+/// blobs of the shards currently in flight (one, for a sequential walk;
+/// the shard scheduler's look-ahead window otherwise).
 pub struct ContainerFileReader {
     file: std::fs::File,
     header: Json,

@@ -21,8 +21,10 @@
 //! [`CoordinatorConfig::queue_depth`]): a fast trainer blocks in
 //! [`Coordinator::submit`] — or sheds load via
 //! [`Coordinator::try_submit`] — instead of buffering unbounded
-//! checkpoints. Per-stage queue waits, stage timings and high-water queue
-//! depths land in [`Coordinator::metrics`].
+//! checkpoints. Per-stage queue waits, stage timings, high-water queue
+//! depths and the shard scheduler's telemetry (`shard_queue_wait`,
+//! `shard_occupancy` — how long format-3 shard jobs sat queued and how
+//! many ran concurrently) land in [`Coordinator::metrics`].
 //!
 //! The coordinator owns the *chain state* the codec needs: the
 //! reconstructed reference checkpoints (decoder-visible values) and their
@@ -178,8 +180,12 @@ impl Coordinator {
             let in_q = submit_q.clone();
             let out_q = encode_q.clone();
             let metrics = metrics.clone();
+            // Stages pass an explicit pool handle through the codec (the
+            // process-wide persistent pool) — quantization batches, shard
+            // jobs and nested lane sub-batches all share one worker set.
+            let pool = pool::global_handle();
             std::thread::Builder::new().name("cpcm-prep".into()).spawn(move || {
-                let codec = Codec::new(cfg.codec.clone(), cfg.backend.clone());
+                let codec = Codec::with_pool(cfg.codec.clone(), cfg.backend.clone(), pool);
                 let result = prep_loop(&cfg, &codec, &in_q, &out_q, &metrics);
                 // Close both sides so a blocked producer errors out and
                 // the downstream stages drain and exit (see module docs).
@@ -194,8 +200,9 @@ impl Coordinator {
             let in_q = encode_q.clone();
             let out_q = write_q.clone();
             let metrics = metrics.clone();
+            let pool = pool::global_handle();
             std::thread::Builder::new().name("cpcm-encode".into()).spawn(move || {
-                let codec = Codec::new(cfg.codec.clone(), cfg.backend.clone());
+                let codec = Codec::with_pool(cfg.codec.clone(), cfg.backend.clone(), pool);
                 let result = encode_loop(&codec, &in_q, &out_q, &metrics);
                 in_q.close();
                 out_q.close();
@@ -400,6 +407,10 @@ fn encode_loop(
         let (bytes, mut stats) = codec
             .encode_prepared(&job.prep, job.reference.as_deref().map(|e| &e.syms))?;
         metrics.time("stage_entropy", t0.elapsed().as_secs_f64());
+        // Shard-scheduler telemetry: how long shard jobs sat queued and
+        // how many ran at once (the occupancy high-water mark).
+        metrics.time("shard_queue_wait", stats.shard_queue_wait_seconds);
+        metrics.gauge_max("shard_occupancy", stats.shards_in_flight_max as f64);
         stats.encode_seconds += job.prep_seconds;
 
         let t0 = Instant::now();
@@ -594,7 +605,8 @@ fn decode_ancestry(
 /// through [`crate::checkpoint::CheckpointFileWriter`], reference
 /// checkpoints are read by range through [`Store::reader`] instead of
 /// being held in RAM, and the context modes read windowed reference
-/// symbols from a `.syms` sidecar — peak RSS stays ~O(shard) for the
+/// symbols from a `.syms` sidecar — peak RSS stays
+/// ~O(shards_in_flight · shard) for the
 /// entire chain ([`crate::codec::sharded::decode_streaming`]). Ancestries
 /// containing format-1/2 containers fall back to the in-memory
 /// [`restore_step_with`] walk and write its bytes.
@@ -608,6 +620,24 @@ pub fn restore_step_to_file(
     backend: &Backend,
     step: u64,
     out_path: &Path,
+) -> Result<()> {
+    restore_step_to_file_with(dir, backend, step, out_path, 0)
+}
+
+/// [`restore_step_to_file`] with an explicit shard-scheduler width for
+/// the streaming walk: `shard_threads` shards decode concurrently per
+/// chain step (0 = auto, the available hardware threads), which also
+/// bounds the look-ahead window — peak RSS is
+/// `~O(shard_threads · shard)`, and `shard_threads = 1` recovers the
+/// strict one-shard-resident restore for memory-limited hosts
+/// (`cpcm decompress --shard-threads 1`). Output bytes are identical at
+/// every setting.
+pub fn restore_step_to_file_with(
+    dir: &Path,
+    backend: &Backend,
+    step: u64,
+    out_path: &Path,
+    shard_threads: usize,
 ) -> Result<()> {
     let manifest = ChainManifest::load(dir)?;
     let chain = manifest.ancestry(step)?;
@@ -626,7 +656,16 @@ pub fn restore_step_to_file(
         .unwrap_or_else(|| PathBuf::from("."))
         .join(format!(".restore_{step}_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&work);
-    let result = restore_chain_streaming(&manifest, dir, backend, step, &chain, &work, out_path);
+    let result = restore_chain_streaming(
+        &manifest,
+        dir,
+        backend,
+        step,
+        &chain,
+        &work,
+        out_path,
+        shard_threads,
+    );
     let _ = std::fs::remove_dir_all(&work);
     result
 }
@@ -635,6 +674,7 @@ pub fn restore_step_to_file(
 /// step into the `work` store, chaining references (values) and `.syms`
 /// sidecars (context symbols) by range, then move the target step's file
 /// to `out_path`.
+#[allow(clippy::too_many_arguments)]
 fn restore_chain_streaming(
     manifest: &ChainManifest,
     dir: &Path,
@@ -643,6 +683,7 @@ fn restore_chain_streaming(
     chain: &[u64],
     work: &Path,
     out_path: &Path,
+    shard_threads: usize,
 ) -> Result<()> {
     use crate::codec::sharded;
     use crate::codec::{SymbolMapFileReader, SymbolSource};
@@ -688,7 +729,7 @@ fn restore_chain_streaming(
         let last = i + 1 == chain.len();
         let out_file = store.file_path(s);
         let sidecar = syms_path(s);
-        let stats = sharded::decode_streaming(
+        let stats = sharded::decode_streaming_with(
             backend,
             &mut container,
             reference.as_mut().map(|r| r as &mut dyn sharded::ShardSource),
@@ -696,6 +737,7 @@ fn restore_chain_streaming(
             &out_file,
             // The final step's symbols have no consumer.
             if last { None } else { Some(sidecar.as_path()) },
+            shard_threads,
         )
         .map_err(|e| {
             Error::codec(format!(

@@ -30,8 +30,24 @@
 //! generation counter) keeps increasing — the coordinator snapshots both
 //! into its [`crate::metrics`] registry.
 //!
-//! Used by the codec's `3 × L` lane fan-out ([`crate::codec`]) and by the
-//! coordinator's encode→decode verification ([`crate::coordinator`]).
+//! ## Nested (sub-batch) submission
+//!
+//! A task running on a pool worker may itself call [`run_scoped`] on the
+//! same pool. This can never deadlock, by construction: a submitter
+//! always participates in its own batch, so the inner batch completes
+//! even when every other worker is busy, and idle workers *steal into*
+//! whichever claimable batch sits in the queue — outer or inner — through
+//! the shared task cursor. The shard scheduler ([`crate::codec`]'s
+//! `sched` module) leans on this: each format-3 shard task submits its
+//! own `3 × lanes` lane sub-batch, so total parallelism reaches
+//! `min(shards · 3 · lanes, threads)` without dedicating threads to
+//! either level. Panics keep their usual contract under nesting: an inner
+//! task's panic surfaces as an [`Error`] to the inner submitter (the
+//! outer task), which propagates it as an ordinary task result.
+//!
+//! Used by the codec's `3 × L` lane fan-out ([`crate::codec`]), the shard
+//! scheduler's shard×lane task graph, and the coordinator's
+//! encode→decode verification ([`crate::coordinator`]).
 
 use crate::{Error, Result};
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -299,8 +315,20 @@ fn worker_main(inner: &PoolInner) {
 /// (submitters always participate in their own batches, so total
 /// parallelism is the hardware thread count).
 pub fn global() -> &'static PersistentPool {
-    static GLOBAL: OnceLock<PersistentPool> = OnceLock::new();
-    GLOBAL.get_or_init(|| PersistentPool::new(available_workers().saturating_sub(1)))
+    &**global_cell()
+}
+
+/// A clonable handle to the process-wide pool, for components that thread
+/// an explicit pool through their layers (e.g. the codec and the
+/// coordinator's encode stage) instead of reaching for the global — tests
+/// can substitute an owned pool through the same seam.
+pub fn global_handle() -> Arc<PersistentPool> {
+    global_cell().clone()
+}
+
+fn global_cell() -> &'static Arc<PersistentPool> {
+    static GLOBAL: OnceLock<Arc<PersistentPool>> = OnceLock::new();
+    GLOBAL.get_or_init(|| Arc::new(PersistentPool::new(available_workers().saturating_sub(1))))
 }
 
 /// Lifetime counters of the process-wide pool (metrics surface).
@@ -467,6 +495,106 @@ mod tests {
         for j in joins {
             j.join().unwrap();
         }
+    }
+
+    #[test]
+    fn nested_submission_completes_without_deadlock() {
+        // A task running on a pool worker submits its own sub-batch on
+        // the SAME pool (the shard→lane shape): the submitter drives its
+        // inner batch itself, so this terminates even on a tiny pool.
+        let pool = Arc::new(PersistentPool::new(1));
+        let outer: Vec<Task<u64>> = (0..6u64)
+            .map(|i| {
+                let pool = pool.clone();
+                let b: Task<u64> = Box::new(move || {
+                    let inner: Vec<Task<u64>> =
+                        (0..8u64).map(|j| Box::new(move || i * 100 + j) as Task<u64>).collect();
+                    pool.run_scoped(4, inner).unwrap().into_iter().sum()
+                });
+                b
+            })
+            .collect();
+        let sums = pool.run_scoped(3, outer).unwrap();
+        let expect: Vec<u64> = (0..6u64).map(|i| (0..8u64).map(|j| i * 100 + j).sum()).collect();
+        assert_eq!(sums, expect);
+    }
+
+    #[test]
+    fn nested_submission_under_saturated_pipeline() {
+        // Several concurrent submitters (the pipelined coordinator shape)
+        // each run outer batches whose tasks nest sub-batches, all sharing
+        // a pool smaller than the submitter count. Must terminate with
+        // correct, ordered results.
+        let pool = Arc::new(PersistentPool::new(2));
+        let mut joins = Vec::new();
+        for t in 0..4u64 {
+            let pool = pool.clone();
+            joins.push(std::thread::spawn(move || {
+                for round in 0..4u64 {
+                    let outer: Vec<Task<u64>> = (0..4u64)
+                        .map(|i| {
+                            let pool = pool.clone();
+                            let b: Task<u64> = Box::new(move || {
+                                let inner: Vec<Task<u64>> = (0..6u64)
+                                    .map(|j| {
+                                        Box::new(move || t * 10_000 + round * 1000 + i * 10 + j)
+                                            as Task<u64>
+                                    })
+                                    .collect();
+                                pool.run_scoped(8, inner).unwrap().into_iter().sum()
+                            });
+                            b
+                        })
+                        .collect();
+                    let got = pool.run_scoped(3, outer).unwrap();
+                    let expect: Vec<u64> = (0..4u64)
+                        .map(|i| (0..6u64).map(|j| t * 10_000 + round * 1000 + i * 10 + j).sum())
+                        .collect();
+                    assert_eq!(got, expect);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn nested_panic_surfaces_as_error_not_deadlock() {
+        // A panic in an inner sub-batch becomes an Error at the inner
+        // submitter (the outer task), which can propagate it as a normal
+        // result; the pool stays usable afterwards.
+        let pool = Arc::new(PersistentPool::new(2));
+        let outer: Vec<Task<std::result::Result<u64, String>>> = (0..3u64)
+            .map(|i| {
+                let pool = pool.clone();
+                let b: Task<std::result::Result<u64, String>> = Box::new(move || {
+                    let inner: Vec<Task<u64>> = (0..4u64)
+                        .map(|j| {
+                            let b: Task<u64> = Box::new(move || {
+                                if i == 1 && j == 2 {
+                                    panic!("inner lane poisoned");
+                                }
+                                j
+                            });
+                            b
+                        })
+                        .collect();
+                    pool.run_scoped(4, inner)
+                        .map(|v| v.into_iter().sum())
+                        .map_err(|e| format!("{e}"))
+                });
+                b
+            })
+            .collect();
+        let results = pool.run_scoped(3, outer).unwrap();
+        assert_eq!(results[0], Ok(6));
+        assert_eq!(results[2], Ok(6));
+        let err = results[1].as_ref().unwrap_err();
+        assert!(err.contains("inner lane poisoned"), "{err}");
+        // Pool still works.
+        let tasks: Vec<Task<u32>> = (0..4).map(|i| Box::new(move || i) as Task<u32>).collect();
+        assert_eq!(pool.run_scoped(3, tasks).unwrap(), vec![0, 1, 2, 3]);
     }
 
     #[test]

@@ -11,6 +11,8 @@
 //!     streaming_encode_peak_rss_stays_below_checkpoint_residency
 //! cargo test --release --test memory -- --ignored --nocapture --exact \
 //!     streaming_restore_peak_rss_stays_below_checkpoint_residency
+//! cargo test --release --test memory -- --ignored --nocapture --exact \
+//!     streaming_encode_parallel_look_ahead_bounds_rss
 //! ```
 //!
 //! (the CI release job runs exactly that).
@@ -21,9 +23,13 @@
 //! growth during the encode stays well under whole-checkpoint residency.
 //! The restore test additionally drives a depth-2 delta chain through
 //! `decode_streaming` with the reference read by range from disk, and
-//! asserts the same bound over the whole encode+restore window.
-//! Afterwards (outside the measured windows) both verify bit-exactness
-//! against the in-memory pipeline.
+//! asserts the same bound over the whole encode+restore window. Those
+//! two pin `shard_threads = 1` — the strict one-shard-resident
+//! sequential contract. The third case pins a width of 4 over 32 shards,
+//! asserting the scheduler's bounded look-ahead: growth scales with the
+//! scheduler width, not the shard count (a pinned width keeps the bound
+//! honest on every runner class, unlike auto = core count). Afterwards (outside the measured
+//! windows) all verify bit-exactness against the in-memory pipeline.
 
 use cpcm::checkpoint::{Checkpoint, CheckpointFileReader, StreamingCheckpointWriter};
 use cpcm::codec::{sharded, Codec, CodecConfig, ContextMode};
@@ -94,12 +100,16 @@ fn streaming_encode_peak_rss_stays_below_checkpoint_residency() {
 
     // Acceptance config: shard budget = 1/8 of the checkpoint's value
     // bytes; Order0 is the fully-streaming mode (no reference maps).
+    // `shard_threads: 1` pins the strict one-shard-resident contract this
+    // test asserts; the parallel scheduler's bound is the documented
+    // ~O(shard_threads · shard) instead.
     let cfg = CodecConfig {
         mode: ContextMode::Order0,
         bits: 4,
         lanes: 2,
         quant_iters: 4,
         shard_bytes: raw_value_bytes / 8,
+        shard_threads: 1,
         ..Default::default()
     };
     let codec = Codec::new(cfg, Backend::Native);
@@ -142,6 +152,77 @@ fn streaming_encode_peak_rss_stays_below_checkpoint_residency() {
 
 #[test]
 #[ignore = "RSS assertions need a dedicated process; run via CI release job"]
+fn streaming_encode_parallel_look_ahead_bounds_rss() {
+    // The parallel scheduler promises peak RSS ~O(shards_in_flight ·
+    // shard) with shards_in_flight bounded by the scheduler width. A
+    // pinned width of 4 over 32 shards makes a look-ahead leak visible
+    // *deterministically on every runner class* (auto = core count would
+    // make the honest bound machine-dependent and vacuous on many-core
+    // boxes): holding all 32 shards costs ~raw value bytes and more,
+    // while 4-in-flight stays well under half of it.
+    let Some(_) = peak_rss_bytes() else {
+        eprintln!("skipping: no /proc RSS probe on this platform");
+        return;
+    };
+    let dir = tmpdir();
+    let layout = layout();
+    let total: usize = layout.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+    let raw_value_bytes = 3 * 4 * total;
+    let shard_bytes = raw_value_bytes / 32;
+    let width = 4usize;
+
+    let ckpt_path = dir.join("ckpt.bin");
+    write_fixture(&ckpt_path, 555, 0x3333, &layout);
+
+    let cfg = CodecConfig {
+        mode: ContextMode::Order0,
+        bits: 4,
+        lanes: 2,
+        quant_iters: 4,
+        shard_bytes,
+        shard_threads: width,
+        ..Default::default()
+    };
+    let codec = Codec::new(cfg, Backend::Native);
+
+    let baseline = peak_rss_bytes().unwrap();
+    let out_path = dir.join("ckpt.cpcm");
+    {
+        let mut src = CheckpointFileReader::open(&ckpt_path).unwrap();
+        let file = std::fs::File::create(&out_path).unwrap();
+        sharded::encode_streaming(&codec, &mut src, None, None, BufWriter::new(file)).unwrap();
+    }
+    let after = peak_rss_bytes().unwrap();
+    let growth = after.saturating_sub(baseline);
+    // Per in-flight shard the encoder holds raw fragment values
+    // (~shard_bytes) plus quantized symbols and blobs (< shard_bytes);
+    // 3× that per in-flight shard, plus a fixed slack for allocator and
+    // container bookkeeping, is a generous honest envelope (~raw/2 here)
+    // that an all-shards-resident look-ahead leak blows through on any
+    // machine (32 shards resident ≈ raw value bytes alone).
+    let bound = (3 * width * shard_bytes + raw_value_bytes / 8) as u64;
+    eprintln!(
+        "raw value bytes: {raw_value_bytes}  shard budget: {shard_bytes}  width: \
+         {width}  RSS growth during parallel streaming encode: {growth} bytes \
+         (bound {bound})"
+    );
+    assert!(
+        growth < bound,
+        "parallel streaming encode grew RSS by {growth} bytes, bound {bound} \
+         (width {width}, shard {shard_bytes})"
+    );
+
+    // Correctness outside the measured window: identical bytes to the
+    // in-memory encoder at the same config.
+    let streamed = std::fs::read(&out_path).unwrap();
+    let ck = Checkpoint::from_bytes(&std::fs::read(&ckpt_path).unwrap()).unwrap();
+    let whole = codec.encode(&ck, None, None).unwrap();
+    assert_eq!(streamed, whole.bytes, "streamed container != in-memory container");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+#[ignore = "RSS assertions need a dedicated process; run via CI release job"]
 fn streaming_restore_peak_rss_stays_below_checkpoint_residency() {
     let Some(_) = peak_rss_bytes() else {
         eprintln!("skipping: no /proc RSS probe on this platform");
@@ -151,12 +232,16 @@ fn streaming_restore_peak_rss_stays_below_checkpoint_residency() {
     let layout = layout();
     let total: usize = layout.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
     let raw_value_bytes = 3 * 4 * total;
+    // `shard_threads: 1` (and the matching `decode_streaming_with(.., 1)`
+    // calls below) pin the strict one-shard-resident contract; the
+    // parallel scheduler trades RSS ~O(shard_threads · shard) for speed.
     let cfg = CodecConfig {
         mode: ContextMode::Order0,
         bits: 4,
         lanes: 2,
         quant_iters: 4,
         shard_bytes: raw_value_bytes / 8,
+        shard_threads: 1,
         ..Default::default()
     };
     let codec = Codec::new(cfg, Backend::Native);
@@ -183,8 +268,16 @@ fn streaming_restore_peak_rss_stays_below_checkpoint_residency() {
         let file = std::fs::File::create(&c1_path).unwrap();
         sharded::encode_streaming(&codec, &mut src, None, None, BufWriter::new(file)).unwrap();
         let mut cr = ContainerFileReader::open(&c1_path).unwrap();
-        sharded::decode_streaming(&Backend::Native, &mut cr, None, None, &recon1_path, None)
-            .unwrap();
+        sharded::decode_streaming_with(
+            &Backend::Native,
+            &mut cr,
+            None,
+            None,
+            &recon1_path,
+            None,
+            1,
+        )
+        .unwrap();
 
         let mut src = CheckpointFileReader::open(&ck2_path).unwrap();
         let mut refr = CheckpointFileReader::open(&recon1_path).unwrap();
@@ -201,13 +294,14 @@ fn streaming_restore_peak_rss_stays_below_checkpoint_residency() {
         // The restore under test: reference values by range from disk.
         let mut cr = ContainerFileReader::open(&c2_path).unwrap();
         let mut refr = CheckpointFileReader::open(&recon1_path).unwrap();
-        sharded::decode_streaming(
+        sharded::decode_streaming_with(
             &Backend::Native,
             &mut cr,
             Some(&mut refr),
             None,
             &restored2_path,
             None,
+            1,
         )
         .unwrap();
     }

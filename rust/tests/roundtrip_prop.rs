@@ -60,6 +60,9 @@ fn random_cfg(g: &mut Gen, mode: ContextMode, total_positions: usize) -> CodecCo
         quant_iters: 3,
         lanes,
         shard_bytes: shard_values * 12,
+        // Scheduler width must never change bytes — run the whole grid
+        // across sequential, small and saturated shard parallelism.
+        shard_threads: *g.choose(&[0usize, 1, 2, 8]),
         ..Default::default()
     };
     cfg.prune.enabled = g.bool(0.7);

@@ -1,0 +1,273 @@
+//! Shard-scheduler determinism battery: the work-stealing shard × lane
+//! scheduler is a pure scheduling change, so every format-3 path must
+//! produce byte-identical containers and bit-exact restores at every
+//! `shard_threads` setting — pinned here across `{1, 2, 8}` for the
+//! in-memory encode/decode, the streaming encode, and the streaming
+//! restore. Also drives the coordinator pipeline with a sharded codec to
+//! check the scheduler's telemetry lands in the metrics registry.
+//!
+//! (The pool-level nested-submission tests — no deadlock under a
+//! saturated pipeline, panics surfacing as `Error` — live next to the
+//! pool in `util::pool::tests`; this file covers the codec-level
+//! contract.)
+
+use cpcm::checkpoint::Checkpoint;
+use cpcm::codec::{sharded, Codec, CodecConfig, ContextMode};
+use cpcm::container::ContainerFileReader;
+use cpcm::coordinator::{restore_step_to_file_with, Coordinator, CoordinatorConfig};
+use cpcm::lstm::Backend;
+use cpcm::util::prop::forall;
+use std::path::PathBuf;
+
+const THREAD_GRID: [usize; 3] = [1, 2, 8];
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("cpcm_sched_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn layers() -> Vec<(&'static str, Vec<usize>)> {
+    vec![("a.w", vec![18, 11]), ("b.w", vec![47]), ("c.w", vec![6, 5, 2])]
+}
+
+fn base_cfg(mode: ContextMode, shard_values: usize) -> CodecConfig {
+    CodecConfig {
+        mode,
+        hidden: 8,
+        embed: 8,
+        batch: 32,
+        quant_iters: 4,
+        lanes: 2,
+        shard_bytes: shard_values * 12,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn in_memory_v3_bytes_identical_across_thread_counts() {
+    // Grid: context modes × lane counts × shard sizes (mid-tensor splits
+    // and near-single-shard), a two-frame chain each. Reference bytes
+    // come from the sequential walk (threads = 1).
+    for mode in [ContextMode::Order0, ContextMode::Lstm] {
+        for lanes in [1usize, 3] {
+            for shard_values in [17usize, 120] {
+                let c0 = Checkpoint::synthetic(1, &layers(), 0xA0);
+                let c1 = Checkpoint::synthetic(2, &layers(), 0xA1);
+                let mut pinned: Option<(Vec<u8>, Vec<u8>)> = None;
+                for threads in THREAD_GRID {
+                    let mut cfg = base_cfg(mode, shard_values);
+                    cfg.lanes = lanes;
+                    cfg.shard_threads = threads;
+                    let codec = Codec::new(cfg, Backend::Native);
+                    let e0 = codec.encode(&c0, None, None).unwrap();
+                    let e1 = codec.encode(&c1, Some(&e0.recon), Some(&e0.syms)).unwrap();
+                    match &pinned {
+                        None => pinned = Some((e0.bytes.clone(), e1.bytes.clone())),
+                        Some((b0, b1)) => {
+                            assert_eq!(
+                                &e0.bytes, b0,
+                                "{mode:?} lanes={lanes} shard={shard_values} threads={threads} intra"
+                            );
+                            assert_eq!(
+                                &e1.bytes, b1,
+                                "{mode:?} lanes={lanes} shard={shard_values} threads={threads} delta"
+                            );
+                        }
+                    }
+                    // Bit-exact restore through the (auto-threaded)
+                    // decoder at every encoder thread count.
+                    let (d0, s0) =
+                        Codec::decode(&Backend::Native, &e0.bytes, None, None).unwrap();
+                    assert_eq!(d0, e0.recon);
+                    let (d1, _) =
+                        Codec::decode(&Backend::Native, &e1.bytes, Some(&d0), Some(&s0))
+                            .unwrap();
+                    assert_eq!(d1, e1.recon);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn streaming_encode_bytes_identical_across_thread_counts() {
+    for mode in [ContextMode::Order0, ContextMode::Lstm] {
+        let c0 = Checkpoint::synthetic(5, &layers(), 0xB0);
+        let c1 = Checkpoint::synthetic(6, &layers(), 0xB1);
+        // Chain state from a sequential in-memory encode (schedule-
+        // independent, pinned by the test above).
+        let seq = Codec::new(base_cfg(mode, 23), Backend::Native);
+        let e0 = seq.encode(&c0, None, None).unwrap();
+        let whole1 = seq.encode(&c1, Some(&e0.recon), Some(&e0.syms)).unwrap();
+        for threads in THREAD_GRID {
+            let mut cfg = base_cfg(mode, 23);
+            cfg.shard_threads = threads;
+            let codec = Codec::new(cfg, Backend::Native);
+            // Intra frame.
+            let mut out = Vec::new();
+            let mut src = sharded::CheckpointSource::new(&c0).unwrap();
+            let stats = sharded::encode_streaming(&codec, &mut src, None, None, &mut out)
+                .unwrap();
+            assert_eq!(out, e0.bytes, "{mode:?} threads={threads} intra streamed");
+            assert!(stats.shards > 1);
+            assert!(stats.shards_in_flight_max >= 1);
+            assert!(stats.shards_in_flight_max <= threads.max(1));
+            // Delta frame with windowed reference views.
+            let mut out = Vec::new();
+            let mut cur = sharded::CheckpointSource::new(&c1).unwrap();
+            let mut refr = sharded::CheckpointSource::new(&e0.recon).unwrap();
+            let mut ref_syms = e0.syms.clone();
+            sharded::encode_streaming(
+                &codec,
+                &mut cur,
+                Some(&mut refr),
+                Some(&mut ref_syms),
+                &mut out,
+            )
+            .unwrap();
+            assert_eq!(out, whole1.bytes, "{mode:?} threads={threads} delta streamed");
+        }
+    }
+}
+
+#[test]
+fn streaming_restore_bytes_identical_across_thread_counts() {
+    let dir = tmpdir("restore");
+    for mode in [ContextMode::Order0, ContextMode::Lstm] {
+        let codec = Codec::new(base_cfg(mode, 20), Backend::Native);
+        let c0 = Checkpoint::synthetic(7, &layers(), 0xC0);
+        let c1 = Checkpoint::synthetic(8, &layers(), 0xC1);
+        let e0 = codec.encode(&c0, None, None).unwrap();
+        let e1 = codec.encode(&c1, Some(&e0.recon), Some(&e0.syms)).unwrap();
+        let p0 = dir.join(format!("{mode:?}_0.cpcm"));
+        let p1 = dir.join(format!("{mode:?}_1.cpcm"));
+        std::fs::write(&p0, &e0.bytes).unwrap();
+        std::fs::write(&p1, &e1.bytes).unwrap();
+
+        for threads in THREAD_GRID {
+            // Intra restore (writes the sidecar the delta hop reads).
+            let out0 = dir.join(format!("{mode:?}_{threads}_0.bin"));
+            let syms0 = dir.join(format!("{mode:?}_{threads}_0.syms"));
+            let mut cr = ContainerFileReader::open(&p0).unwrap();
+            let stats = sharded::decode_streaming_with(
+                &Backend::Native,
+                &mut cr,
+                None,
+                None,
+                &out0,
+                Some(&syms0),
+                threads,
+            )
+            .unwrap();
+            assert_eq!(
+                std::fs::read(&out0).unwrap(),
+                e0.recon.to_bytes(),
+                "{mode:?} threads={threads} intra restore"
+            );
+            // Delta restore, chained fully on disk.
+            let out1 = dir.join(format!("{mode:?}_{threads}_1.bin"));
+            let mut cr = ContainerFileReader::open(&p1).unwrap();
+            let mut refr = cpcm::checkpoint::CheckpointFileReader::open(&out0).unwrap();
+            let mut sidecar = if stats.wrote_syms {
+                Some(cpcm::codec::SymbolMapFileReader::open(&syms0).unwrap())
+            } else {
+                assert_eq!(mode, ContextMode::Order0);
+                None
+            };
+            let prev: Option<&mut dyn cpcm::codec::SymbolSource> =
+                sidecar.as_mut().map(|r| r as &mut dyn cpcm::codec::SymbolSource);
+            sharded::decode_streaming_with(
+                &Backend::Native,
+                &mut cr,
+                Some(&mut refr),
+                prev,
+                &out1,
+                None,
+                threads,
+            )
+            .unwrap();
+            assert_eq!(
+                std::fs::read(&out1).unwrap(),
+                e1.recon.to_bytes(),
+                "{mode:?} threads={threads} delta restore"
+            );
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn prop_thread_count_never_changes_bytes() {
+    // Random layouts × random sharded configs: encode at a random thread
+    // count and at 1; bytes must agree (the property-grid version of the
+    // pinned cases above).
+    forall("shard scheduler thread-count invariance", 25, |g| {
+        let n = g.usize_range(1, 4);
+        let layers: Vec<(String, Vec<usize>)> = (0..n)
+            .map(|i| {
+                let shape = match g.usize_range(0, 2) {
+                    0 => vec![g.usize_range(1, 50)],
+                    _ => vec![g.usize_range(1, 12), g.usize_range(1, 10)],
+                };
+                (format!("t{i:02}.w"), shape)
+            })
+            .collect();
+        let layers_ref: Vec<(&str, Vec<usize>)> =
+            layers.iter().map(|(n, s)| (n.as_str(), s.clone())).collect();
+        let seed = g.usize_range(0, 1 << 30) as u64;
+        let ck = Checkpoint::synthetic(3, &layers_ref, seed);
+        let shard_values = g.usize_range(1, 60);
+        let threads = *g.choose(&[2usize, 3, 8]);
+        let mut cfg = base_cfg(ContextMode::Order0, shard_values);
+        cfg.bits = *g.choose(&[2u8, 4]);
+        cfg.lanes = *g.choose(&[1usize, 2, 4]);
+
+        cfg.shard_threads = 1;
+        let seq = Codec::new(cfg.clone(), Backend::Native).encode(&ck, None, None).unwrap();
+        cfg.shard_threads = threads;
+        let par = Codec::new(cfg, Backend::Native).encode(&ck, None, None).unwrap();
+        assert_eq!(seq.bytes, par.bytes, "threads={threads} shard={shard_values}");
+        assert_eq!(seq.syms, par.syms);
+    });
+}
+
+#[test]
+fn coordinator_pipeline_reports_shard_scheduler_metrics() {
+    // A sharded codec through the full pipelined service: results stay
+    // correct and the scheduler's queue-wait/occupancy telemetry lands in
+    // the metrics registry.
+    let dir = tmpdir("coord");
+    let mut codec = base_cfg(ContextMode::Order0, 30);
+    codec.shard_threads = 0; // auto
+    let mut cfg = CoordinatorConfig::new(codec, Backend::Native, &dir);
+    cfg.verify = true;
+    let coord = Coordinator::start(cfg).unwrap();
+    for i in 0..3u64 {
+        coord.submit(Checkpoint::synthetic(10 * (i + 1), &layers(), 0xD0 + i)).unwrap();
+    }
+    let metrics = coord.metrics();
+    let results = coord.finish().unwrap();
+    assert_eq!(results.len(), 3);
+    for r in &results {
+        assert!(r.stats.shards > 1);
+        assert!(r.stats.shards_in_flight_max >= 1);
+    }
+    assert_eq!(metrics.timing_count("shard_queue_wait"), 3);
+    assert!(metrics.gauge_value("shard_occupancy").unwrap_or(0.0) >= 1.0);
+
+    // The on-disk chain restore writes identical bytes at every
+    // scheduler width (1 = the strict memory-bound walk, 0 = auto).
+    let mut pinned: Option<Vec<u8>> = None;
+    for threads in [1usize, 0] {
+        let out = dir.join(format!("restored_{threads}.bin"));
+        restore_step_to_file_with(&dir, &Backend::Native, 30, &out, threads).unwrap();
+        let bytes = std::fs::read(&out).unwrap();
+        match &pinned {
+            None => pinned = Some(bytes),
+            Some(b) => assert_eq!(&bytes, b, "restore threads={threads}"),
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
