@@ -2,10 +2,13 @@
 //!
 //! Layout: `<root>/ckpt_<step>.bin` (raw format from the parent module).
 //! The trainer writes here; the compression coordinator reads references
-//! from here. Writes are atomic (temp file + rename) so a crashed run never
-//! leaves a torn checkpoint behind.
+//! from here. Writes are durable-atomic (temp file + fsync + rename +
+//! directory fsync via [`crate::util::fs_atomic`]) so a crashed run —
+//! even one interrupted mid-`fsync` — never leaves a torn checkpoint
+//! behind, and opening a store sweeps any temp a crash left over.
 
 use super::Checkpoint;
+use crate::util::fs_atomic;
 use crate::{Error, Result};
 use std::fs;
 use std::io::{BufReader, BufWriter, Write};
@@ -18,9 +21,11 @@ pub struct Store {
 }
 
 impl Store {
-    /// Open (creating if needed) a store rooted at `root`.
+    /// Open (creating if needed) a store rooted at `root`, sweeping any
+    /// stale temp files an interrupted save left behind.
     pub fn open(root: impl AsRef<Path>) -> Result<Self> {
         fs::create_dir_all(root.as_ref())?;
+        fs_atomic::sweep_temps(root.as_ref())?;
         Ok(Self { root: root.as_ref().to_path_buf() })
     }
 
@@ -36,16 +41,19 @@ impl Store {
         self.root.join(format!("ckpt_{step:010}.bin"))
     }
 
-    /// Atomically persist a checkpoint.
+    /// Durably persist a checkpoint: stream into a temp sibling (large
+    /// checkpoints never round-trip through one contiguous buffer),
+    /// then fsync + rename + directory fsync via
+    /// [`fs_atomic::commit`].
     pub fn save(&self, ck: &Checkpoint) -> Result<PathBuf> {
         let final_path = self.file_path(ck.step);
-        let tmp = self.root.join(format!(".tmp_ckpt_{}", ck.step));
+        let tmp = fs_atomic::tmp_path(&final_path);
         {
             let mut w = BufWriter::new(fs::File::create(&tmp)?);
             ck.write_to(&mut w)?;
             w.flush()?;
         }
-        fs::rename(&tmp, &final_path)?;
+        fs_atomic::commit(&tmp, &final_path)?;
         Ok(final_path)
     }
 
@@ -167,6 +175,22 @@ mod tests {
         let vals = r.read_values(0, 0, 4..10).unwrap();
         assert_eq!(vals, &ck.weights.get("w").unwrap().data()[4..10]);
         assert!(store.reader(999).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn open_sweeps_stale_temps_but_keeps_checkpoints() {
+        let dir = tmpdir("sweep");
+        let store = Store::open(&dir).unwrap();
+        store.save(&Checkpoint::synthetic(4, &[("w", vec![8])], 3)).unwrap();
+        // Plant temps in both the current and the legacy naming.
+        fs::write(dir.join(".tmp.ckpt_0000000009.bin"), b"torn").unwrap();
+        fs::write(dir.join(".tmp_ckpt_9"), b"torn-legacy").unwrap();
+        let store = Store::open(&dir).unwrap();
+        assert_eq!(store.steps().unwrap(), vec![4]);
+        assert!(!dir.join(".tmp.ckpt_0000000009.bin").exists());
+        assert!(!dir.join(".tmp_ckpt_9").exists());
+        assert_eq!(store.load(4).unwrap().step, 4);
         let _ = fs::remove_dir_all(&dir);
     }
 

@@ -9,12 +9,25 @@
 //! cpcm decompress --cpcm runs/demo/cpcm --step 100 --out ck.bin [--backend ...]
 //!                 [--shard-threads N]   # 0 = auto; 1 pins the strict one-shard RSS bound
 //! cpcm verify     --ckpts runs/demo/raw --cpcm runs/demo/cpcm
+//! cpcm scrub      --cpcm runs/demo/cpcm [--repair]
+//! cpcm gc         --cpcm runs/demo/cpcm --retain-last N [--retain-every M]
+//! cpcm compact    --cpcm runs/demo/cpcm --step S [--backend ...]
 //! cpcm info       --file runs/demo/cpcm/ckpt_0000000100.cpcm
 //! cpcm config     --write cpcm.json          # dump the default config
 //! ```
 //!
 //! Flags mirror [`crate::config::ExperimentConfig`]; `--config file.json`
-//! loads a base config that individual flags then override.
+//! loads a base config that individual flags then override. Chain
+//! lifecycle knobs: `--keyframe-every N` (alias `--keyframe-interval`)
+//! bounds restore depth at write time, `--retain-last N` /
+//! `--retain-every M` garbage-collect old steps as training goes, and
+//! `--compact-depth D` rebases any chain deeper than D onto a lossless
+//! keyframe.
+//!
+//! `scrub` audits a container directory (framing, body CRCs,
+//! manifest/header agreement, chain restorability, litter) and exits
+//! nonzero when anything is off; `--repair` quarantines the damage and
+//! rewrites a consistent manifest instead.
 //!
 //! `decompress` restores through the directory's `manifest.json` when one
 //! is present (decoding only the requested step's reference ancestry —
@@ -29,7 +42,8 @@ use crate::codec::ContextMode;
 use crate::config::{BackendKind, ExperimentConfig};
 use crate::container::Container;
 use crate::coordinator::{
-    decode_chain, restore_step_to_file_with, ChainManifest, Coordinator, CoordinatorConfig,
+    compact_step, decode_chain, gc_dir, repair_dir, restore_step_to_file_with, scrub_dir,
+    ChainManifest, Coordinator, CoordinatorConfig, RetentionPolicy,
 };
 use crate::lstm::Backend;
 use crate::runtime::RuntimeHandle;
@@ -50,6 +64,9 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "compress" => cmd_compress(args),
         "decompress" => cmd_decompress(args),
         "verify" => cmd_verify(args),
+        "scrub" => cmd_scrub(args),
+        "gc" => cmd_gc(args),
+        "compact" => cmd_compact(args),
         "info" => cmd_info(args),
         "config" => cmd_config(args),
         "help" | "--help" | "-h" => {
@@ -63,7 +80,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
 fn print_usage() {
     println!(
         "cpcm — prediction/context-modeling checkpoint compression\n\
-         commands: train, compress, decompress, verify, info, config, help\n\
+         commands: train, compress, decompress, verify, scrub, gc, compact, info, config, help\n\
          run `cpcm <cmd> --help`-style flags are listed in the module docs"
     );
 }
@@ -86,8 +103,17 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(v) = args.get("step-size") {
         cfg.step_size = parse_num(v, "step-size")?;
     }
-    if let Some(v) = args.get("keyframe-every") {
+    if let Some(v) = args.get("keyframe-every").or_else(|| args.get("keyframe-interval")) {
         cfg.keyframe_every = parse_num(v, "keyframe-every")?;
+    }
+    if let Some(v) = args.parsed::<u64>("retain-last")? {
+        cfg.retain_last = v;
+    }
+    if let Some(v) = args.parsed::<u64>("retain-every")? {
+        cfg.retain_every = v;
+    }
+    if let Some(v) = args.parsed::<u64>("compact-depth")? {
+        cfg.compact_depth = v;
     }
     if let Some(v) = args.get("seed") {
         cfg.seed = parse_num(v, "seed")?;
@@ -179,6 +205,9 @@ fn cmd_train(args: Args) -> Result<()> {
         ccfg.keyframe_every = cfg.keyframe_every;
         ccfg.verify = cfg.verify;
         ccfg.queue_depth = cfg.queue_depth;
+        ccfg.retain_last = cfg.retain_last;
+        ccfg.retain_every = cfg.retain_every;
+        ccfg.compact_depth = cfg.compact_depth;
         Some(Coordinator::start(ccfg)?)
     } else {
         None
@@ -254,6 +283,9 @@ fn cmd_compress(args: Args) -> Result<()> {
     ccfg.keyframe_every = cfg.keyframe_every;
     ccfg.verify = cfg.verify;
     ccfg.queue_depth = cfg.queue_depth;
+    ccfg.retain_last = cfg.retain_last;
+    ccfg.retain_every = cfg.retain_every;
+    ccfg.compact_depth = cfg.compact_depth;
     let coord = Coordinator::start(ccfg)?;
     for step in &steps {
         coord.submit(store.load(*step)?)?;
@@ -349,6 +381,94 @@ fn cmd_verify(args: Args) -> Result<()> {
     Ok(())
 }
 
+/// `cpcm scrub` — audit a container directory against its manifest:
+/// framing, full-body CRCs, header/manifest agreement, per-step chain
+/// restorability, stale temps and orphans. Read-only by default and
+/// errors when anything is inconsistent (so scripts and CI notice);
+/// `--repair` quarantines corrupt steps and their dependent suffix,
+/// removes the litter, and rewrites a consistent manifest.
+fn cmd_scrub(args: Args) -> Result<()> {
+    let dir = std::path::Path::new(args.req("cpcm")?);
+    let report = scrub_dir(dir)?;
+    println!("scrub {}: {}", dir.display(), report.summary());
+    for f in report.corrupt.iter().chain(report.missing.iter()) {
+        println!("  step {:>8}  {}: {}", f.step, f.file, f.error);
+    }
+    for step in &report.unrestorable {
+        println!("  step {step:>8}  intact but unrestorable (broken ancestry)");
+    }
+    if report.consistent() {
+        println!("consistent: all {} live steps restorable", report.restorable.len());
+        return Ok(());
+    }
+    if !args.flag("repair") {
+        return Err(Error::format(format!(
+            "{} is inconsistent (rerun with --repair to quarantine the damage)",
+            dir.display()
+        )));
+    }
+    let repair = repair_dir(dir)?;
+    for (step, kept) in &repair.quarantined {
+        match kept {
+            Some(file) => println!("  quarantined step {step} → {file}"),
+            None => println!("  quarantined step {step} (container already missing)"),
+        }
+    }
+    let after = scrub_dir(dir)?;
+    if !after.consistent() {
+        return Err(Error::format(format!(
+            "repair left {} inconsistent: {}",
+            dir.display(),
+            after.summary()
+        )));
+    }
+    println!("repaired: {} live steps remain, all restorable", after.restorable.len());
+    Ok(())
+}
+
+/// `cpcm gc` — apply a retention policy to a directory offline (the
+/// same pass the coordinator runs inline with `--retain-last` /
+/// `--retain-every`). Ancestors of retained steps are never collected.
+fn cmd_gc(args: Args) -> Result<()> {
+    let dir = std::path::Path::new(args.req("cpcm")?);
+    let policy = RetentionPolicy {
+        keep_last: args.parsed::<u64>("retain-last")?.unwrap_or(0),
+        keep_every: args.parsed::<u64>("retain-every")?.unwrap_or(0),
+    };
+    if !policy.enabled() {
+        return Err(Error::config("gc needs --retain-last N and/or --retain-every M"));
+    }
+    let report = gc_dir(dir, &policy)?;
+    println!(
+        "gc {}: removed {} steps, {} remain",
+        dir.display(),
+        report.removed.len(),
+        report.kept.len()
+    );
+    Ok(())
+}
+
+/// `cpcm compact` — rebase the chain ending at `--step` onto a lossless
+/// keyframe so later restores of it (and its descendants) decode one
+/// container instead of the whole ancestry.
+fn cmd_compact(args: Args) -> Result<()> {
+    let dir = std::path::Path::new(args.req("cpcm")?);
+    let step: u64 = parse_num(args.req("step")?, "step")?;
+    let backend_kind = BackendKind::parse(args.get("backend").unwrap_or("native"))?;
+    let artifacts = args.get("artifacts").unwrap_or("artifacts");
+    let backend = make_backend(backend_kind, artifacts)?;
+    let report = compact_step(dir, &backend, step)?;
+    if report.old_depth == 1 {
+        println!("step {step} is already a keyframe ({})", report.file);
+    } else {
+        println!(
+            "compacted step {step}: depth {} → 1, keyframe {} ({} bytes)",
+            report.old_depth, report.file, report.bytes
+        );
+    }
+    Ok(())
+}
+
 /// `cpcm info` — pretty-print a container header.
 fn cmd_info(args: Args) -> Result<()> {
     let file = args.req("file")?;
@@ -425,6 +545,39 @@ mod tests {
         assert_eq!(cfg.codec.shard_bytes, 1 << 20);
         assert_eq!(cfg.codec.shard_threads, 6);
         assert!(cfg.verify);
+    }
+
+    #[test]
+    fn lifecycle_flags_override() {
+        let args = Args::parse(&[
+            "--keyframe-interval".into(),
+            "8".into(),
+            "--retain-last".into(),
+            "4".into(),
+            "--retain-every".into(),
+            "16".into(),
+            "--compact-depth".into(),
+            "6".into(),
+        ])
+        .unwrap();
+        let cfg = experiment_config(&args).unwrap();
+        assert_eq!(cfg.keyframe_every, 8);
+        assert_eq!(cfg.retain_last, 4);
+        assert_eq!(cfg.retain_every, 16);
+        assert_eq!(cfg.compact_depth, 6);
+    }
+
+    #[test]
+    fn scrub_and_gc_demand_their_flags() {
+        // scrub without --cpcm, gc without a policy: named config errors.
+        assert!(run(vec!["scrub".into()]).is_err());
+        let err = run(vec![
+            "gc".into(),
+            "--cpcm".into(),
+            "/nonexistent".into(),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("retain"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,243 @@
+//! Format-4 containers: **lossless keyframes** for chain compaction.
+//!
+//! Compaction rebases a deep delta chain onto a fresh self-contained
+//! step. The existing intra frame (a keyframe encoded by the normal
+//! lossy pipeline) cannot serve as that base after the fact: a child
+//! delta is entropy-coded against the parent's *bit-exact*
+//! reconstruction and symbol maps, and re-running quantization over a
+//! reconstruction is not guaranteed to reproduce either. A format-4
+//! container therefore stores the chain state verbatim — the
+//! reconstructed f32 values of all three parameter sets plus the
+//! quantized symbol maps — each tensor LZ-compressed
+//! ([`crate::util::lz`]). Decoding one yields exactly the
+//! `(Checkpoint, SymbolMaps)` pair the original ancestry walk produced
+//! at that step, so children decode bit-identically against it.
+//!
+//! Blob layout (`6 × n_tensors` blobs):
+//!
+//! ```text
+//! set 0..3 × tensor 0..n   lz(values as f32 LE)   # full recon, not residual
+//! set 0..3 × tensor 0..n   lz(symbols as u16 LE)
+//! ```
+//!
+//! The header mirrors the common fields ([`format`, `step`,
+//! `ref_step: null`, `backend`, `codec`, `tensors`, …]) so
+//! [`super::parse_untrusted_header`] hardens format 4 exactly like
+//! formats 1–3; the embedded codec config is provenance only — no model
+//! is consulted on decode. Keyframes are larger than lossy intra frames
+//! (raw floats compress poorly), which is the deliberate trade: they buy
+//! bounded restore depth and GC'able ancestors without perturbing chain
+//! bits.
+
+use super::{DecodeHeader, SymbolMaps};
+use crate::checkpoint::Checkpoint;
+use crate::container::Container;
+use crate::lstm::Backend;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::lz;
+use crate::{Error, Result};
+
+/// Container format tag for lossless keyframes.
+pub const KEYFRAME_FORMAT: u64 = 4;
+
+/// Serialize the chain state at `recon.step` as a format-4 container.
+/// `codec_json` is the codec config to record for provenance (compaction
+/// passes the one from the container being rebased).
+pub fn encode_keyframe(
+    backend: &Backend,
+    recon: &Checkpoint,
+    syms: &SymbolMaps,
+    codec_json: Json,
+) -> Result<Vec<u8>> {
+    let names: Vec<String> = recon.weights.iter().map(|t| t.name.clone()).collect();
+    let shapes: Vec<Vec<usize>> = recon.weights.iter().map(|t| t.tensor.shape().to_vec()).collect();
+    let n = names.len();
+    // The three sets and the symbol maps must share one tensor layout.
+    for set in [&recon.exp_avg, &recon.exp_avg_sq] {
+        if set.len() != n
+            || !set.iter().zip(recon.weights.iter()).all(|(a, b)| {
+                a.name == b.name && a.tensor.shape() == b.tensor.shape()
+            })
+        {
+            return Err(Error::shape("keyframe checkpoint sets have mismatched layouts"));
+        }
+    }
+    for (k, set) in syms.sets.iter().enumerate() {
+        if set.len() != n {
+            return Err(Error::shape(format!("keyframe symbol set {k} has wrong tensor count")));
+        }
+        for (map, t) in set.iter().zip(recon.weights.iter()) {
+            if map.len() != t.tensor.len() {
+                return Err(Error::shape(format!(
+                    "keyframe symbol map for '{}' has wrong length",
+                    t.name
+                )));
+            }
+        }
+    }
+
+    let raw_bytes = recon.raw_bytes();
+    let header = Json::obj(vec![
+        ("format", Json::num(KEYFRAME_FORMAT as f64)),
+        ("step", Json::num(recon.step as f64)),
+        ("ref_step", Json::Null),
+        ("backend", Json::str(backend.id())),
+        ("has_prev_syms", Json::Bool(false)),
+        ("codec", codec_json),
+        ("tensors", Json::Arr(super::Codec::tensors_json(&names, &shapes))),
+        ("raw_bytes", Json::num(raw_bytes as f64)),
+        ("weight_density", Json::num(1.0)),
+        ("momentum_density", Json::num(1.0)),
+    ]);
+    let mut container = Container::new(header);
+    for set in [&recon.weights, &recon.exp_avg, &recon.exp_avg_sq] {
+        for t in set.iter() {
+            let mut bytes = Vec::with_capacity(t.tensor.len() * 4);
+            for v in t.tensor.data() {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            container.push_blob(lz::compress(&bytes));
+        }
+    }
+    for set in &syms.sets {
+        for map in set {
+            let mut bytes = Vec::with_capacity(map.len() * 2);
+            for s in map {
+                bytes.extend_from_slice(&s.to_le_bytes());
+            }
+            container.push_blob(lz::compress(&bytes));
+        }
+    }
+    Ok(container.to_bytes())
+}
+
+/// Decompress one blob whose exact output size is known from the
+/// (validated) header; the declared LZ length is checked *before* the
+/// decode loop so a forged blob cannot cause an oversized allocation.
+fn decompress_exact(blob: &[u8], expect: usize, what: &str) -> Result<Vec<u8>> {
+    if blob.len() < 8 {
+        return Err(Error::format(format!("keyframe {what} blob truncated")));
+    }
+    let declared = u64::from_le_bytes(blob[..8].try_into().unwrap());
+    if declared != expect as u64 {
+        return Err(Error::format(format!(
+            "keyframe {what} blob declares {declared} bytes, layout implies {expect}"
+        )));
+    }
+    let out = lz::decompress(blob)?;
+    if out.len() != expect {
+        return Err(Error::format(format!("keyframe {what} blob decoded to the wrong size")));
+    }
+    Ok(out)
+}
+
+/// Decode a format-4 container back into the exact chain state it
+/// recorded. The header has already passed
+/// [`super::parse_untrusted_header`].
+pub(crate) fn decode_keyframe(
+    hdr: &DecodeHeader,
+    container: &Container,
+) -> Result<(Checkpoint, SymbolMaps)> {
+    let n = hdr.names.len();
+    if container.blobs.len() != 6 * n {
+        return Err(Error::format(format!(
+            "keyframe container has {} blobs, layout implies {}",
+            container.blobs.len(),
+            6 * n
+        )));
+    }
+    let mut out = Checkpoint { step: hdr.step, ..Default::default() };
+    for k in 0..3 {
+        for (i, ((name, shape), &count)) in
+            hdr.names.iter().zip(&hdr.shapes).zip(&hdr.counts).enumerate()
+        {
+            let bytes = decompress_exact(container.blob(k * n + i)?, count * 4, "value")?;
+            let vals: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            let tensor = Tensor::new(shape.clone(), vals)?;
+            match k {
+                0 => out.weights.insert(name.clone(), tensor),
+                1 => out.exp_avg.insert(name.clone(), tensor),
+                _ => out.exp_avg_sq.insert(name.clone(), tensor),
+            }
+        }
+    }
+    let mut syms = SymbolMaps::default();
+    for k in 0..3 {
+        let mut maps = Vec::with_capacity(n);
+        for (i, &count) in hdr.counts.iter().enumerate() {
+            let bytes = decompress_exact(container.blob((3 + k) * n + i)?, count * 2, "symbol")?;
+            maps.push(
+                bytes.chunks_exact(2).map(|c| u16::from_le_bytes(c.try_into().unwrap())).collect(),
+            );
+        }
+        syms.sets[k] = maps;
+    }
+    Ok((out, syms))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::{Codec, CodecConfig};
+
+    fn chain_state() -> (Checkpoint, SymbolMaps) {
+        // Run a real encode so the recon/syms pair is a genuine chain
+        // state (including exact-zero pruned values and log-domain
+        // second-moment handling).
+        let ck = Checkpoint::synthetic(7, &[("w", vec![6, 4]), ("b", vec![5])], 0xBEEF);
+        let cfg = CodecConfig { lanes: 1, ..CodecConfig::default() };
+        let codec = Codec::new(cfg, Backend::Native);
+        let out = codec.encode(&ck, None, None).unwrap();
+        (out.recon, out.syms)
+    }
+
+    #[test]
+    fn keyframe_roundtrip_is_bit_exact() {
+        let (recon, syms) = chain_state();
+        let cfg_json = CodecConfig { lanes: 1, ..CodecConfig::default() }.to_json();
+        let bytes = encode_keyframe(&Backend::Native, &recon, &syms, cfg_json).unwrap();
+        let (got_ck, got_syms) = Codec::decode(&Backend::Native, &bytes, None, None).unwrap();
+        assert_eq!(got_ck.step, recon.step);
+        for (a, b) in got_ck.weights.iter().zip(recon.weights.iter()) {
+            assert_eq!(a.name, b.name);
+            // Compare bit patterns, not float equality.
+            let ab: Vec<u32> = a.tensor.data().iter().map(|v| v.to_bits()).collect();
+            let bb: Vec<u32> = b.tensor.data().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(ab, bb);
+        }
+        assert_eq!(got_syms, syms);
+        assert_eq!(got_ck.exp_avg_sq.raw_bytes(), recon.exp_avg_sq.raw_bytes());
+    }
+
+    #[test]
+    fn corrupt_keyframe_blobs_fail_closed() {
+        let (recon, syms) = chain_state();
+        let cfg_json = CodecConfig { lanes: 1, ..CodecConfig::default() }.to_json();
+        let bytes = encode_keyframe(&Backend::Native, &recon, &syms, cfg_json).unwrap();
+        // A container whose blobs are dropped must fail with a format
+        // error, not panic (the trailer CRC is recomputed to isolate the
+        // blob-count check).
+        let mut c = Container::from_bytes(&bytes).unwrap();
+        c.blobs.pop();
+        let tampered = c.to_bytes();
+        let err = Codec::decode(&Backend::Native, &tampered, None, None).unwrap_err();
+        assert!(err.to_string().contains("blobs"), "{err}");
+        // A flipped payload byte is caught by the container CRC.
+        let mut flipped = bytes.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 1;
+        assert!(Codec::decode(&Backend::Native, &flipped, None, None).is_err());
+    }
+
+    #[test]
+    fn mismatched_symbol_layout_rejected_at_encode() {
+        let (recon, mut syms) = chain_state();
+        syms.sets[1].pop();
+        let cfg_json = CodecConfig::default().to_json();
+        assert!(encode_keyframe(&Backend::Native, &recon, &syms, cfg_json).is_err());
+    }
+}

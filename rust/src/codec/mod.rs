@@ -80,6 +80,7 @@
 //! reconstructed checkpoint it knows the decoder will produce, so chains
 //! use reconstructed references on both sides and stay bit-identical.
 
+pub mod keyframe;
 mod lanes;
 pub(crate) mod sched;
 mod shard;
@@ -334,7 +335,7 @@ impl CodecConfig {
     }
 
     /// Serialize into a header fragment.
-    fn to_json(&self) -> Json {
+    pub(crate) fn to_json(&self) -> Json {
         Json::obj(vec![
             ("mode", Json::str(self.mode.as_str())),
             ("bits", Json::num(self.bits as f64)),
@@ -1447,6 +1448,12 @@ impl Codec {
         let hdr = parse_untrusted_header(&container.header, bytes.len(), backend)?;
         let prev = check_chain_inputs(&hdr, reference, prev_syms)?;
 
+        // Format 4: a lossless keyframe is the stored chain state itself —
+        // no model, no reference, no entropy stage.
+        if hdr.format == keyframe::KEYFRAME_FORMAT {
+            return keyframe::decode_keyframe(&hdr, &container);
+        }
+
         let codec = Codec::new(hdr.cfg.clone(), backend.clone());
         codec.check_ref_maps(prev, &hdr.counts)?;
 
@@ -2041,7 +2048,7 @@ pub(crate) fn parse_untrusted_header(
     backend: &Backend,
 ) -> Result<DecodeHeader> {
     let format = h.get("format").and_then(|v| v.as_u64()).unwrap_or(1);
-    if !(1..=3).contains(&format) {
+    if !(1..=4).contains(&format) {
         return Err(Error::format(format!("unsupported container format {format}")));
     }
     let cfg = CodecConfig::from_json(h.req("codec")?)?;

@@ -46,8 +46,16 @@ pub struct ExperimentConfig {
     /// Reference step size `s` of paper Eq. 6 (1 ⇒ previous checkpoint).
     pub step_size: u64,
     /// Force a self-contained (intra) frame every N checkpoints; 0 ⇒ only
-    /// the first.
+    /// the first. (Accepted under the alias `keyframe_interval` too.)
     pub keyframe_every: u64,
+    /// Retention: keep only the newest N checkpoints (0 ⇒ keep all).
+    /// Ancestors a retained step depends on are never collected.
+    pub retain_last: u64,
+    /// Retention: additionally keep every Mth checkpoint (0 ⇒ off).
+    pub retain_every: u64,
+    /// Rebase a chain onto a lossless keyframe once restore depth
+    /// exceeds this many containers (0 ⇒ never compact).
+    pub compact_depth: u64,
     /// Training seed.
     pub seed: u64,
     /// Artifacts directory (AOT programs).
@@ -73,6 +81,9 @@ impl Default for ExperimentConfig {
             ckpt_every: 50,
             step_size: 1,
             keyframe_every: 0,
+            retain_last: 0,
+            retain_every: 0,
+            compact_depth: 0,
             seed: 42,
             artifacts_dir: "artifacts".into(),
             out_dir: "runs/default".into(),
@@ -96,7 +107,10 @@ impl ExperimentConfig {
                 "steps" => cfg.steps = req_u64(val)?,
                 "ckpt_every" => cfg.ckpt_every = req_u64(val)?,
                 "step_size" => cfg.step_size = req_u64(val)?,
-                "keyframe_every" => cfg.keyframe_every = req_u64(val)?,
+                "keyframe_every" | "keyframe_interval" => cfg.keyframe_every = req_u64(val)?,
+                "retain_last" => cfg.retain_last = req_u64(val)?,
+                "retain_every" => cfg.retain_every = req_u64(val)?,
+                "compact_depth" => cfg.compact_depth = req_u64(val)?,
                 "seed" => cfg.seed = req_u64(val)?,
                 "artifacts_dir" => cfg.artifacts_dir = req_str(val)?,
                 "out_dir" => cfg.out_dir = req_str(val)?,
@@ -127,6 +141,9 @@ impl ExperimentConfig {
             ("ckpt_every", Json::num(self.ckpt_every as f64)),
             ("step_size", Json::num(self.step_size as f64)),
             ("keyframe_every", Json::num(self.keyframe_every as f64)),
+            ("retain_last", Json::num(self.retain_last as f64)),
+            ("retain_every", Json::num(self.retain_every as f64)),
+            ("compact_depth", Json::num(self.compact_depth as f64)),
             ("seed", Json::num(self.seed as f64)),
             ("artifacts_dir", Json::str(self.artifacts_dir.clone())),
             ("out_dir", Json::str(self.out_dir.clone())),
@@ -284,6 +301,21 @@ fn req_f64(v: &Json) -> Result<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn lifecycle_knobs_parse_and_alias() {
+        let cfg = ExperimentConfig::from_json_text(
+            r#"{"keyframe_interval": 8, "retain_last": 4, "retain_every": 10, "compact_depth": 6}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.keyframe_every, 8);
+        assert_eq!(cfg.retain_last, 4);
+        assert_eq!(cfg.retain_every, 10);
+        assert_eq!(cfg.compact_depth, 6);
+        let back = ExperimentConfig::from_json_text(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(back.keyframe_every, 8);
+        assert_eq!(back.compact_depth, 6);
+    }
 
     #[test]
     fn empty_config_is_default() {

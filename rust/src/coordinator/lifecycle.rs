@@ -1,0 +1,348 @@
+//! Chain lifecycle: startup crash recovery, retention/GC, and
+//! compaction onto lossless keyframes.
+//!
+//! Together with the durable-write helper ([`crate::util::fs_atomic`])
+//! these routines give a coordinator output directory a crash-safe
+//! state machine:
+//!
+//! * **Recovery** ([`recover_dir`]) runs whenever a directory is opened.
+//!   Stale temp files (a crash before rename) are swept, and containers
+//!   the manifest does not reference (a crash after the container rename
+//!   but before the manifest save, or an interrupted compaction) are
+//!   removed. The invariant it restores: *everything the manifest
+//!   references exists and nothing else competes for its namespace.*
+//! * **Retention** ([`RetentionPolicy`], [`gc_dir`]) retires steps the
+//!   policy does not keep. The retained set is closed over reference
+//!   ancestry, so a keyframe (or any ancestor) a retained step depends
+//!   on is never collected, whatever the policy says. The manifest is
+//!   saved durably *before* files are deleted — a crash in between
+//!   leaves orphans for recovery, never a manifest row without bytes.
+//! * **Compaction** ([`compact_step`]) rebases a deep chain: the
+//!   ancestry is decoded once and re-written as a single format-4
+//!   lossless keyframe ([`crate::codec::keyframe`]), after which the
+//!   step has depth 1 and its former ancestors become GC-eligible.
+//!   Bit-exactness is structural — the keyframe stores the decoded
+//!   chain state verbatim, so children of the compacted step decode
+//!   against exactly the bytes they were encoded against.
+
+use super::manifest::{ChainManifest, ManifestEntry};
+use crate::codec::keyframe;
+use crate::container::{Container, ContainerFileReader};
+use crate::lstm::Backend;
+use crate::util::fs_atomic;
+use crate::{Error, Result};
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+/// What [`recover_dir`] cleaned up.
+#[derive(Debug, Default)]
+pub struct RecoveryReport {
+    /// Stale temp files removed (crash before a rename).
+    pub swept_temps: Vec<PathBuf>,
+    /// Containers removed because no live manifest entry references
+    /// them (crash between the container rename and the manifest save,
+    /// or an interrupted compaction's replaced file).
+    pub orphans_removed: Vec<PathBuf>,
+}
+
+/// Startup crash recovery for a coordinator output directory.
+///
+/// Always sweeps stale temp files. When a manifest exists it is
+/// reconciled against the on-disk containers: unreferenced `.cpcm`
+/// files are removed (the write order guarantees they were never
+/// acknowledged), and a manifest entry whose file is *missing* is an
+/// error naming the step and file — that directory lost acknowledged
+/// data and needs [`super::scrub_dir`] / [`super::repair_dir`] to
+/// decide what is still restorable. A directory without a manifest is
+/// only swept.
+///
+/// The directory is assumed coordinator-owned: foreign `.cpcm` files
+/// parked next to a manifest that does not reference them will be
+/// treated as orphans and removed.
+pub fn recover_dir(dir: &Path) -> Result<RecoveryReport> {
+    let mut report =
+        RecoveryReport { swept_temps: fs_atomic::sweep_temps(dir)?, ..Default::default() };
+    if !ChainManifest::exists_in(dir) {
+        return Ok(report);
+    }
+    let manifest = ChainManifest::load(dir)?;
+    let referenced: BTreeSet<&str> = manifest.entries().map(|e| e.file.as_str()).collect();
+    for item in std::fs::read_dir(dir)? {
+        let path = item?.path();
+        let name = match path.file_name() {
+            Some(n) => n.to_string_lossy().into_owned(),
+            None => continue,
+        };
+        if path.is_file() && name.ends_with(".cpcm") && !referenced.contains(name.as_str()) {
+            std::fs::remove_file(&path)?;
+            report.orphans_removed.push(path);
+        }
+    }
+    report.orphans_removed.sort();
+    for entry in manifest.entries() {
+        if !dir.join(&entry.file).is_file() {
+            return Err(Error::format(format!(
+                "manifest references step {} container {} which is missing on disk; \
+                 run `cpcm scrub --repair` to quarantine the damage",
+                entry.step, entry.file
+            )));
+        }
+    }
+    Ok(report)
+}
+
+/// Which steps to keep. Both knobs at 0 disable retention entirely.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RetentionPolicy {
+    /// Keep the newest N live steps (0 ⇒ no recency window).
+    pub keep_last: u64,
+    /// Keep every Mth live step, counted by position in the live chain
+    /// (0 ⇒ no periodic keep).
+    pub keep_every: u64,
+}
+
+impl RetentionPolicy {
+    /// Whether any retention knob is active.
+    pub fn enabled(&self) -> bool {
+        self.keep_last > 0 || self.keep_every > 0
+    }
+}
+
+/// What a retention pass retired.
+#[derive(Debug, Default)]
+pub struct GcReport {
+    /// Steps retired (reason `"gc"`) and their files deleted.
+    pub removed: Vec<u64>,
+    /// Live steps after the pass.
+    pub kept: Vec<u64>,
+}
+
+/// The retained step set: newest step always, last `keep_last`, every
+/// `keep_every`th by live-chain position — closed over reference
+/// ancestry, which is what structurally guarantees "never GC a keyframe
+/// (or any ancestor) a retained step depends on".
+fn retained_steps(manifest: &ChainManifest, policy: &RetentionPolicy) -> Result<BTreeSet<u64>> {
+    let steps = manifest.steps();
+    let mut keep: BTreeSet<u64> = BTreeSet::new();
+    if let Some(&newest) = steps.last() {
+        keep.insert(newest);
+    }
+    if policy.keep_last > 0 {
+        keep.extend(steps.iter().rev().take(policy.keep_last as usize));
+    }
+    if policy.keep_every > 0 {
+        for (i, &s) in steps.iter().enumerate() {
+            if i as u64 % policy.keep_every == 0 {
+                keep.insert(s);
+            }
+        }
+    }
+    let mut closed = BTreeSet::new();
+    for &s in &keep {
+        closed.extend(manifest.ancestry(s)?);
+    }
+    Ok(closed)
+}
+
+/// Apply retention to an in-memory manifest (the write stage owns its
+/// manifest — mutating a reloaded copy would be clobbered by the next
+/// in-memory save). Retires every live step outside the retained set,
+/// saves the manifest durably, *then* deletes the files: a crash in
+/// between leaves orphans (swept on next open), never dangling rows.
+pub(crate) fn run_retention(
+    manifest: &mut ChainManifest,
+    dir: &Path,
+    policy: &RetentionPolicy,
+) -> Result<GcReport> {
+    if !policy.enabled() {
+        return Ok(GcReport { removed: vec![], kept: manifest.steps() });
+    }
+    let keep = retained_steps(manifest, policy)?;
+    let removed: Vec<u64> = manifest.steps().into_iter().filter(|s| !keep.contains(s)).collect();
+    if removed.is_empty() {
+        return Ok(GcReport { removed, kept: manifest.steps() });
+    }
+    let mut files = Vec::with_capacity(removed.len());
+    for &s in &removed {
+        if let Some(entry) = manifest.retire(s, "gc") {
+            files.push(dir.join(entry.file));
+        }
+    }
+    manifest.save(dir)?;
+    for file in files {
+        match std::fs::remove_file(&file) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(GcReport { removed, kept: manifest.steps() })
+}
+
+/// Standalone retention pass over a directory (the `cpcm gc` verb):
+/// load the manifest, apply the policy, persist.
+pub fn gc_dir(dir: &Path, policy: &RetentionPolicy) -> Result<GcReport> {
+    let mut manifest = ChainManifest::load(dir)?;
+    run_retention(&mut manifest, dir, policy)
+}
+
+/// What a compaction pass did.
+#[derive(Debug)]
+pub struct CompactReport {
+    /// The step that was rebased.
+    pub step: u64,
+    /// Ancestry length before the rebase (1 ⇒ it was already a
+    /// keyframe; nothing was rewritten).
+    pub old_depth: usize,
+    /// Container file after the pass.
+    pub file: String,
+    /// Container size after the pass.
+    pub bytes: u64,
+}
+
+/// `ckpt_0000000030.cpcm` → `ckpt_0000000030.kf1.cpcm` → `.kf2.` … .
+/// Deliberately *not* parseable by [`super::decode_chain`]'s
+/// `ckpt_<step>.cpcm` scan: a compacted keyframe decodes to the chain
+/// state (momenta folded in), not to the original container's payload,
+/// so it must only be reachable through the manifest.
+fn keyframe_file_name(old: &str, step: u64) -> String {
+    let generation = old
+        .strip_suffix(".cpcm")
+        .and_then(|base| base.rsplit_once(".kf"))
+        .and_then(|(_, g)| g.parse::<u64>().ok())
+        .map_or(1, |g| g + 1);
+    format!("ckpt_{step:010}.kf{generation}.cpcm")
+}
+
+/// Rebase `step` onto a lossless format-4 keyframe, in an in-memory
+/// manifest (see [`run_retention`] for why). Decodes the full ancestry
+/// once, writes the chain state as a keyframe container under a new
+/// generation-bumped name, publishes it in the manifest, then removes
+/// the replaced container. Crash windows: before the manifest save the
+/// new file is an unreferenced orphan (recovery removes it); after it
+/// the old file is the orphan — either way the manifest stays
+/// consistent. Already-keyframe steps are a no-op.
+pub(crate) fn compact_in(
+    manifest: &mut ChainManifest,
+    dir: &Path,
+    backend: &Backend,
+    step: u64,
+) -> Result<CompactReport> {
+    let chain = manifest.ancestry(step)?;
+    let entry = manifest.entry(step).expect("ancestry contains its target").clone();
+    if chain.len() == 1 && entry.is_keyframe() {
+        return Ok(CompactReport { step, old_depth: 1, file: entry.file, bytes: entry.bytes });
+    }
+    let (recon, syms) = super::decode_ancestry(manifest, dir, backend, step, &chain)?
+        .expect("ancestry is never empty");
+    // Carry the codec config of the container being replaced for
+    // provenance; no model is consulted when the keyframe is decoded.
+    let codec_json =
+        ContainerFileReader::open_streaming(dir.join(&entry.file))?.header().req("codec")?.clone();
+    let bytes = keyframe::encode_keyframe(backend, &recon, &syms, codec_json)?;
+    let file = keyframe_file_name(&entry.file, step);
+    fs_atomic::write_atomic(&dir.join(&file), &bytes)?;
+    manifest.insert(ManifestEntry {
+        step,
+        ref_step: None,
+        file: file.clone(),
+        format: keyframe::KEYFRAME_FORMAT,
+        lanes: 1,
+        shards: 1,
+        bytes: bytes.len() as u64,
+        crc32: Container::stored_crc(&bytes)?,
+    });
+    manifest.save(dir)?;
+    match std::fs::remove_file(dir.join(&entry.file)) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+        Err(e) => return Err(e.into()),
+    }
+    Ok(CompactReport { step, old_depth: chain.len(), file, bytes: bytes.len() as u64 })
+}
+
+/// Standalone compaction of one step (the `cpcm compact` verb): load
+/// the manifest, rebase, persist.
+pub fn compact_step(dir: &Path, backend: &Backend, step: u64) -> Result<CompactReport> {
+    let mut manifest = ChainManifest::load(dir)?;
+    compact_in(&mut manifest, dir, backend, step)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keyframe_names_bump_generations_and_stay_unscannable() {
+        let g1 = keyframe_file_name("ckpt_0000000030.cpcm", 30);
+        assert_eq!(g1, "ckpt_0000000030.kf1.cpcm");
+        let g2 = keyframe_file_name(&g1, 30);
+        assert_eq!(g2, "ckpt_0000000030.kf2.cpcm");
+        // The decode_chain directory scan must not parse these names.
+        let stem = g2.strip_prefix("ckpt_").unwrap().strip_suffix(".cpcm").unwrap();
+        assert!(stem.parse::<u64>().is_err());
+        // Unparseable old names fall back to generation 1.
+        assert_eq!(keyframe_file_name("weird.bin", 7), "ckpt_0000000007.kf1.cpcm");
+    }
+
+    #[test]
+    fn retained_set_is_ancestry_closed() {
+        // 0 ← 1 ← 2 ← 3 ← 4 (keyframe at 0 only).
+        let mut m = ChainManifest::new();
+        for s in 0..5u64 {
+            m.insert(ManifestEntry {
+                step: s,
+                ref_step: if s == 0 { None } else { Some(s - 1) },
+                file: format!("ckpt_{s:010}.cpcm"),
+                format: 2,
+                lanes: 1,
+                shards: 1,
+                bytes: 10,
+                crc32: 0,
+            });
+        }
+        let keep = retained_steps(&m, &RetentionPolicy { keep_last: 1, keep_every: 0 }).unwrap();
+        // Keeping only the newest still retains its whole ancestry.
+        assert_eq!(keep.into_iter().collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+
+        // With a keyframe at 3, the closure stops there.
+        let mut m2 = ChainManifest::new();
+        for s in 0..5u64 {
+            m2.insert(ManifestEntry {
+                step: s,
+                ref_step: if s == 0 || s == 3 { None } else { Some(s - 1) },
+                file: format!("ckpt_{s:010}.cpcm"),
+                format: 2,
+                lanes: 1,
+                shards: 1,
+                bytes: 10,
+                crc32: 0,
+            });
+        }
+        let keep = retained_steps(&m2, &RetentionPolicy { keep_last: 1, keep_every: 0 }).unwrap();
+        assert_eq!(keep.into_iter().collect::<Vec<_>>(), vec![3, 4]);
+    }
+
+    #[test]
+    fn disabled_policy_is_a_no_op() {
+        let dir = std::env::temp_dir().join(format!("cpcm_lifecycle_noop_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut m = ChainManifest::new();
+        m.insert(ManifestEntry {
+            step: 1,
+            ref_step: None,
+            file: "ckpt_0000000001.cpcm".into(),
+            format: 2,
+            lanes: 1,
+            shards: 1,
+            bytes: 10,
+            crc32: 0,
+        });
+        let report = run_retention(&mut m, &dir, &RetentionPolicy::default()).unwrap();
+        assert!(report.removed.is_empty());
+        assert_eq!(report.kept, vec![1]);
+        assert_eq!(m.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

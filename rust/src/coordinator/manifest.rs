@@ -2,9 +2,10 @@
 //! containers.
 //!
 //! The coordinator's write stage appends one [`ManifestEntry`] per
-//! checkpoint and atomically rewrites `manifest.json` after every
-//! container (temp file + rename), so the manifest is crash-consistent:
-//! it never references a container that was not fully written.
+//! checkpoint and durably rewrites `manifest.json` after every container
+//! (temp file + fsync + rename + parent-dir fsync, via
+//! [`crate::util::fs_atomic`]), so the manifest is crash-consistent: it
+//! never references a container that was not fully written and synced.
 //!
 //! The manifest is what makes mid-chain restore cheap: instead of
 //! scanning and decoding the whole directory in step order,
@@ -14,18 +15,36 @@
 //! entry also records the container's trailer CRC-32 so a swapped or
 //! truncated file is detected *before* any entropy decoding starts.
 //!
-//! Schema (`manifest.json`, version 1):
+//! Schema (`manifest.json`, version 2):
 //!
 //! ```json
 //! {
-//!   "version": 1,
+//!   "version": 2,
+//!   "keyframes": [100],
 //!   "checkpoints": [
-//!     {"step": 100, "ref_step": null, "file": "ckpt_0000000100.cpcm",
-//!      "format": 2, "lanes": 4, "bytes": 48213, "crc32": 3735928559}
+//!     {"step": 100, "ref_step": null, "kind": "keyframe",
+//!      "file": "ckpt_0000000100.cpcm", "format": 2, "lanes": 4,
+//!      "shards": 1, "bytes": 48213, "crc32": 3735928559},
+//!     {"step": 110, "ref_step": 100, "kind": "delta",
+//!      "file": "ckpt_0000000110.cpcm", "format": 2, "lanes": 4,
+//!      "shards": 1, "bytes": 9120, "crc32": 1311768465}
+//!   ],
+//!   "retired": [
+//!     {"step": 90, "file": "ckpt_0000000090.cpcm", "reason": "gc"}
 //!   ]
 //! }
 //! ```
+//!
+//! `kind` is redundant with `ref_step` (a keyframe is exactly a row with
+//! `ref_step: null`) and the top-level `keyframes` array is redundant
+//! with the rows; both are written for human/tooling legibility and
+//! *validated* on load so a hand-edited manifest cannot silently
+//! disagree with itself. `retired` records steps removed by GC or
+//! quarantined by `cpcm scrub --repair`, so restoring one fails with a
+//! named error (step + file + reason) instead of a bare "missing step".
+//! Version-1 documents (no `kind`/`keyframes`/`retired`) still parse.
 
+use crate::util::fs_atomic;
 use crate::util::json::Json;
 use crate::{Error, Result};
 use std::collections::BTreeMap;
@@ -34,14 +53,15 @@ use std::path::{Path, PathBuf};
 /// File name of the manifest inside a container directory.
 pub const MANIFEST_FILE: &str = "manifest.json";
 
-const MANIFEST_VERSION: usize = 1;
+/// Version this module writes. Versions `1..=MANIFEST_VERSION` parse.
+const MANIFEST_VERSION: usize = 2;
 
 /// One compressed checkpoint in the chain.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ManifestEntry {
     /// Training step of the checkpoint.
     pub step: u64,
-    /// Reference parent (None ⇒ self-contained intra frame).
+    /// Reference parent (None ⇒ self-contained keyframe / intra frame).
     pub ref_step: Option<u64>,
     /// Container file name, relative to the manifest's directory.
     pub file: String,
@@ -58,10 +78,30 @@ pub struct ManifestEntry {
     pub crc32: u32,
 }
 
+impl ManifestEntry {
+    /// True when this step is self-contained (no reference parent).
+    pub fn is_keyframe(&self) -> bool {
+        self.ref_step.is_none()
+    }
+}
+
+/// A step that existed but was removed from the live chain, with enough
+/// context for a named error when someone asks for it back.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RetiredEntry {
+    /// Training step that was retired.
+    pub step: u64,
+    /// Container file the step lived in when it was retired.
+    pub file: String,
+    /// Why it was retired: `"gc"` or `"quarantined"`.
+    pub reason: String,
+}
+
 /// Step-indexed manifest of a container directory.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct ChainManifest {
     entries: BTreeMap<u64, ManifestEntry>,
+    retired: BTreeMap<u64, RetiredEntry>,
 }
 
 impl ChainManifest {
@@ -70,8 +110,11 @@ impl ChainManifest {
         Self::default()
     }
 
-    /// Add (or replace) the entry for `entry.step`.
+    /// Add (or replace) the entry for `entry.step`. Re-inserting a step
+    /// that was previously retired revives it (the retired record is
+    /// dropped — the step is live again).
     pub fn insert(&mut self, entry: ManifestEntry) {
+        self.retired.remove(&entry.step);
         self.entries.insert(entry.step, entry);
     }
 
@@ -80,31 +123,73 @@ impl ChainManifest {
         self.entries.get(&step)
     }
 
-    /// All steps, ascending.
+    /// All live steps, ascending.
     pub fn steps(&self) -> Vec<u64> {
         self.entries.keys().copied().collect()
     }
 
-    /// Number of checkpoints in the manifest.
+    /// Live entries, ascending by step.
+    pub fn entries(&self) -> impl Iterator<Item = &ManifestEntry> {
+        self.entries.values()
+    }
+
+    /// Steps of every live keyframe (self-contained entry), ascending.
+    pub fn keyframes(&self) -> Vec<u64> {
+        self.entries.values().filter(|e| e.is_keyframe()).map(|e| e.step).collect()
+    }
+
+    /// Retired record for `step`, if any.
+    pub fn retired_entry(&self, step: u64) -> Option<&RetiredEntry> {
+        self.retired.get(&step)
+    }
+
+    /// All retired records, ascending by step.
+    pub fn retired(&self) -> impl Iterator<Item = &RetiredEntry> {
+        self.retired.values()
+    }
+
+    /// Move `step` from the live chain to the retired list. Returns the
+    /// removed entry (None if the step was not live).
+    pub fn retire(&mut self, step: u64, reason: &str) -> Option<ManifestEntry> {
+        let entry = self.entries.remove(&step)?;
+        self.retired.insert(
+            step,
+            RetiredEntry { step, file: entry.file.clone(), reason: reason.to_string() },
+        );
+        Some(entry)
+    }
+
+    /// Number of live checkpoints in the manifest.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
-    /// True when the manifest has no entries.
+    /// True when the manifest has no live entries.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
 
     /// Minimal decode order for `step`: its reference ancestry from the
-    /// nearest intra frame (first) down to `step` itself (last). Errors if
-    /// `step` or any parent is missing, or the reference links cycle.
+    /// nearest keyframe (first) down to `step` itself (last). Errors if
+    /// `step` or any parent is missing or retired, or the reference
+    /// links cycle. Retired steps fail with the recorded file and
+    /// reason, so "restore of a GC'd step" is a named error.
     pub fn ancestry(&self, step: u64) -> Result<Vec<u64>> {
         let mut chain = Vec::new();
         let mut cur = step;
         loop {
-            let entry = self.entries.get(&cur).ok_or_else(|| {
-                Error::format(format!("manifest has no entry for step {cur}"))
-            })?;
+            let entry = match self.entries.get(&cur) {
+                Some(e) => e,
+                None => {
+                    if let Some(r) = self.retired.get(&cur) {
+                        return Err(Error::format(format!(
+                            "step {} ({}) was retired ({}) and can no longer be restored",
+                            r.step, r.file, r.reason
+                        )));
+                    }
+                    return Err(Error::format(format!("manifest has no entry for step {cur}")));
+                }
+            };
             chain.push(cur);
             match entry.ref_step {
                 None => break,
@@ -131,7 +216,7 @@ impl ChainManifest {
             .all(|s| self.entries.get(s).map(|e| e.format == 3).unwrap_or(false)))
     }
 
-    /// Serialize to the version-1 JSON document.
+    /// Serialize to the version-2 JSON document.
     pub fn to_json(&self) -> Json {
         let rows: Vec<Json> = self
             .entries
@@ -146,6 +231,7 @@ impl ChainManifest {
                             None => Json::Null,
                         },
                     ),
+                    ("kind", Json::str(if e.is_keyframe() { "keyframe" } else { "delta" })),
                     ("file", Json::str(e.file.clone())),
                     ("format", Json::num(e.format as f64)),
                     ("lanes", Json::num(e.lanes as f64)),
@@ -155,16 +241,31 @@ impl ChainManifest {
                 ])
             })
             .collect();
+        let keyframes: Vec<Json> =
+            self.keyframes().into_iter().map(|s| Json::num(s as f64)).collect();
+        let retired: Vec<Json> = self
+            .retired
+            .values()
+            .map(|r| {
+                Json::obj(vec![
+                    ("step", Json::num(r.step as f64)),
+                    ("file", Json::str(r.file.clone())),
+                    ("reason", Json::str(r.reason.clone())),
+                ])
+            })
+            .collect();
         Json::obj(vec![
             ("version", Json::num(MANIFEST_VERSION as f64)),
+            ("keyframes", Json::Arr(keyframes)),
             ("checkpoints", Json::Arr(rows)),
+            ("retired", Json::Arr(retired)),
         ])
     }
 
-    /// Parse a version-1 JSON document.
+    /// Parse a version-1 or version-2 JSON document.
     pub fn from_json(j: &Json) -> Result<Self> {
         let version = j.req_usize("version")?;
-        if version != MANIFEST_VERSION {
+        if version == 0 || version > MANIFEST_VERSION {
             return Err(Error::format(format!("unsupported manifest version {version}")));
         }
         let mut entries = BTreeMap::new();
@@ -177,6 +278,18 @@ impl ChainManifest {
                         .ok_or_else(|| Error::format("manifest ref_step must be a step or null"))?,
                 ),
             };
+            // v2 rows carry a redundant `kind`; it must agree with the
+            // reference edge (hand edits can desynchronize them).
+            if let Some(kind) = e.get("kind") {
+                let kind =
+                    kind.as_str().ok_or_else(|| Error::format("manifest kind must be a string"))?;
+                let expect = if ref_step.is_none() { "keyframe" } else { "delta" };
+                if kind != expect {
+                    return Err(Error::format(format!(
+                        "manifest step {step}: kind \"{kind}\" contradicts ref_step"
+                    )));
+                }
+            }
             let crc = e.req_usize("crc32")?;
             if crc > u32::MAX as usize {
                 return Err(Error::format("manifest crc32 out of range"));
@@ -196,7 +309,45 @@ impl ChainManifest {
                 return Err(Error::format(format!("duplicate manifest entry for step {step}")));
             }
         }
-        Ok(Self { entries })
+        let mut retired = BTreeMap::new();
+        if let Some(rows) = j.get("retired") {
+            let rows =
+                rows.as_arr().ok_or_else(|| Error::format("manifest retired must be an array"))?;
+            for r in rows {
+                let step = r.req_usize("step")? as u64;
+                if entries.contains_key(&step) {
+                    return Err(Error::format(format!(
+                        "manifest step {step} is both live and retired"
+                    )));
+                }
+                let row = RetiredEntry {
+                    step,
+                    file: r.req_str("file")?.to_string(),
+                    reason: r.req_str("reason")?.to_string(),
+                };
+                if retired.insert(step, row).is_some() {
+                    return Err(Error::format(format!("duplicate retired entry for step {step}")));
+                }
+            }
+        }
+        let manifest = Self { entries, retired };
+        // The redundant keyframe list (when present) must match the one
+        // derived from the rows.
+        if let Some(listed) = j.get("keyframes") {
+            let listed = listed
+                .as_arr()
+                .ok_or_else(|| Error::format("manifest keyframes must be an array"))?;
+            let listed: Option<Vec<u64>> = listed.iter().map(|v| v.as_u64()).collect();
+            let mut listed =
+                listed.ok_or_else(|| Error::format("manifest keyframes must be steps"))?;
+            listed.sort_unstable();
+            if listed != manifest.keyframes() {
+                return Err(Error::format(
+                    "manifest keyframes array disagrees with checkpoint rows",
+                ));
+            }
+        }
+        Ok(manifest)
     }
 
     /// Path of the manifest file inside `dir`.
@@ -215,12 +366,10 @@ impl ChainManifest {
         Self::from_json(&Json::parse(&text)?)
     }
 
-    /// Atomically (re)write `dir`'s manifest (temp file + rename).
+    /// Durably and atomically (re)write `dir`'s manifest: temp file,
+    /// fsync, rename, parent-dir fsync (see [`crate::util::fs_atomic`]).
     pub fn save(&self, dir: &Path) -> Result<()> {
-        let tmp = dir.join(".tmp_manifest");
-        std::fs::write(&tmp, self.to_json().to_string_pretty())?;
-        std::fs::rename(&tmp, Self::path_in(dir))?;
-        Ok(())
+        fs_atomic::write_atomic(&Self::path_in(dir), self.to_json().to_string_pretty().as_bytes())
     }
 }
 
@@ -258,6 +407,7 @@ mod tests {
         assert_eq!(m.ancestry(20).unwrap(), vec![10, 20]);
         assert_eq!(m.ancestry(30).unwrap(), vec![30]);
         assert!(m.ancestry(999).is_err());
+        assert_eq!(m.keyframes(), vec![10, 30]);
     }
 
     #[test]
@@ -270,6 +420,26 @@ mod tests {
         m.insert(entry(1, Some(2)));
         m.insert(entry(2, Some(1)));
         assert!(m.ancestry(1).is_err());
+    }
+
+    #[test]
+    fn retired_steps_fail_with_named_error() {
+        let mut m = sample();
+        let removed = m.retire(40, "gc").unwrap();
+        assert_eq!(removed.step, 40);
+        assert!(m.retire(40, "gc").is_none(), "already retired");
+        // Direct restore of the retired step names step, file, reason…
+        let err = m.ancestry(40).unwrap_err().to_string();
+        assert!(err.contains("step 40"), "{err}");
+        assert!(err.contains("ckpt_0000000040.cpcm"), "{err}");
+        assert!(err.contains("gc"), "{err}");
+        // …and so does a restore of a child whose parent was retired.
+        let err = m.ancestry(50).unwrap_err().to_string();
+        assert!(err.contains("step 40"), "{err}");
+        // Re-inserting the step revives it.
+        m.insert(entry(40, Some(30)));
+        assert_eq!(m.ancestry(50).unwrap(), vec![30, 40, 50]);
+        assert!(m.retired_entry(40).is_none());
     }
 
     #[test]
@@ -286,22 +456,38 @@ mod tests {
     }
 
     #[test]
-    fn json_roundtrip() {
-        let m = sample();
+    fn json_roundtrip_with_retired() {
+        let mut m = sample();
+        m.retire(20, "quarantined");
         let j = m.to_json();
+        assert_eq!(j.req_usize("version").unwrap(), 2);
         let back = ChainManifest::from_json(&j).unwrap();
         assert_eq!(back, m);
         // Serialized text parses back too (the on-disk path).
         let text = j.to_string_pretty();
         let reparsed = ChainManifest::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(reparsed, m);
-        assert_eq!(reparsed.steps(), vec![10, 20, 30, 40, 50]);
-        assert_eq!(reparsed.len(), 5);
+        assert_eq!(reparsed.steps(), vec![10, 30, 40, 50]);
+        assert_eq!(reparsed.retired_entry(20).unwrap().reason, "quarantined");
+        assert_eq!(reparsed.len(), 4);
+    }
+
+    #[test]
+    fn version_1_documents_still_parse() {
+        let old = r#"{"version": 1, "checkpoints": [
+            {"step": 1, "ref_step": null, "file": "a", "format": 2, "lanes": 1, "bytes": 1, "crc32": 0},
+            {"step": 2, "ref_step": 1, "file": "b", "format": 2, "lanes": 1, "bytes": 1, "crc32": 0}
+        ]}"#;
+        let m = ChainManifest::from_json(&Json::parse(old).unwrap()).unwrap();
+        assert_eq!(m.steps(), vec![1, 2]);
+        assert_eq!(m.keyframes(), vec![1]);
+        assert_eq!(m.retired().count(), 0);
+        assert_eq!(m.ancestry(2).unwrap(), vec![1, 2]);
     }
 
     #[test]
     fn bad_documents_rejected() {
-        let wrong_version = Json::parse(r#"{"version": 2, "checkpoints": []}"#).unwrap();
+        let wrong_version = Json::parse(r#"{"version": 3, "checkpoints": []}"#).unwrap();
         assert!(ChainManifest::from_json(&wrong_version).is_err());
         assert!(ChainManifest::from_json(&Json::parse(r#"{"version": 1}"#).unwrap()).is_err());
         // Duplicate step.
@@ -310,6 +496,21 @@ mod tests {
             {"step": 1, "ref_step": null, "file": "b", "format": 2, "lanes": 1, "bytes": 1, "crc32": 0}
         ]}"#;
         assert!(ChainManifest::from_json(&Json::parse(dup).unwrap()).is_err());
+        // kind contradicting ref_step.
+        let bad_kind = r#"{"version": 2, "checkpoints": [
+            {"step": 1, "ref_step": null, "kind": "delta", "file": "a", "format": 2, "lanes": 1, "bytes": 1, "crc32": 0}
+        ]}"#;
+        assert!(ChainManifest::from_json(&Json::parse(bad_kind).unwrap()).is_err());
+        // keyframes array disagreeing with rows.
+        let bad_kf = r#"{"version": 2, "keyframes": [7], "checkpoints": [
+            {"step": 1, "ref_step": null, "file": "a", "format": 2, "lanes": 1, "bytes": 1, "crc32": 0}
+        ]}"#;
+        assert!(ChainManifest::from_json(&Json::parse(bad_kf).unwrap()).is_err());
+        // A step both live and retired.
+        let both = r#"{"version": 2, "checkpoints": [
+            {"step": 1, "ref_step": null, "file": "a", "format": 2, "lanes": 1, "bytes": 1, "crc32": 0}
+        ], "retired": [{"step": 1, "file": "a", "reason": "gc"}]}"#;
+        assert!(ChainManifest::from_json(&Json::parse(both).unwrap()).is_err());
     }
 
     #[test]
@@ -324,15 +525,17 @@ mod tests {
 
     #[test]
     fn save_load_roundtrip() {
-        let dir = std::env::temp_dir()
-            .join(format!("cpcm_manifest_test_{}", std::process::id()));
+        let dir = std::env::temp_dir().join(format!("cpcm_manifest_test_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
         std::fs::create_dir_all(&dir).unwrap();
-        let m = sample();
+        let mut m = sample();
+        m.retire(10, "gc");
         m.save(&dir).unwrap();
         assert!(ChainManifest::exists_in(&dir));
         let back = ChainManifest::load(&dir).unwrap();
         assert_eq!(back, m);
+        // No temp residue after a durable save.
+        assert!(!dir.join(".tmp.manifest.json").exists());
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -59,22 +59,46 @@
 //! encodes; `finish` snapshots the pool's spawn/generation counters into
 //! the metrics registry (`pool_threads_spawned`, `pool_jobs`).
 
+mod lifecycle;
 mod manifest;
+mod scrub;
 
-pub use manifest::{ChainManifest, ManifestEntry, MANIFEST_FILE};
+pub use lifecycle::{
+    compact_step, gc_dir, recover_dir, CompactReport, GcReport, RecoveryReport, RetentionPolicy,
+};
+pub use manifest::{ChainManifest, ManifestEntry, RetiredEntry, MANIFEST_FILE};
+pub use scrub::{repair_dir, scrub_dir, RepairReport, ScrubFinding, ScrubReport};
 
 use crate::checkpoint::{Checkpoint, Store};
 use crate::codec::{Codec, CodecConfig, EncodeStats, PreparedEncode, SymbolMaps};
 use crate::container::Container;
 use crate::lstm::Backend;
 use crate::metrics::Metrics;
+use crate::util::fs_atomic;
 use crate::util::pool;
 use crate::util::queue::{BoundedQueue, PushError};
 use crate::{Error, Result};
 use std::collections::VecDeque;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
+
+/// Process-wide count of containers decoded by the restore paths
+/// ([`restore_step`], [`restore_step_to_file`], [`restore_tensor`],
+/// [`decode_chain`]) — the observable that turns "restore walks ≤ K + 1
+/// ancestors" from prose into an assertable bound (see
+/// `tests/lifecycle.rs`). Monotonic; read deltas around a restore.
+static CONTAINERS_DECODED: AtomicU64 = AtomicU64::new(0);
+
+/// Read the process-wide restore decode counter.
+pub fn containers_decoded() -> u64 {
+    CONTAINERS_DECODED.load(Ordering::Relaxed)
+}
+
+fn note_container_decoded() {
+    CONTAINERS_DECODED.fetch_add(1, Ordering::Relaxed);
+}
 
 /// Coordinator settings.
 #[derive(Clone)]
@@ -94,6 +118,14 @@ pub struct CoordinatorConfig {
     /// (backpressure bound; min 1). Total checkpoints in flight are
     /// bounded by `3 · queue_depth + 3` (three queues plus one per stage).
     pub queue_depth: usize,
+    /// Retention: keep the newest N steps (0 ⇒ keep everything).
+    pub retain_last: u64,
+    /// Retention: additionally keep every Mth step of the live chain
+    /// (0 ⇒ off). Ancestors of retained steps are never collected.
+    pub retain_every: u64,
+    /// Rebase a chain onto a lossless keyframe once an acknowledged
+    /// step's ancestry exceeds this many containers (0 ⇒ never compact).
+    pub compact_depth: u64,
 }
 
 impl CoordinatorConfig {
@@ -107,7 +139,14 @@ impl CoordinatorConfig {
             keyframe_every: 0,
             verify: false,
             queue_depth: 2,
+            retain_last: 0,
+            retain_every: 0,
+            compact_depth: 0,
         }
+    }
+
+    fn retention(&self) -> RetentionPolicy {
+        RetentionPolicy { keep_last: self.retain_last, keep_every: self.retain_every }
     }
 }
 
@@ -165,8 +204,14 @@ pub struct Coordinator {
 
 impl Coordinator {
     /// Start the three pipeline stage threads.
+    ///
+    /// Opening a directory runs crash recovery first ([`recover_dir`]):
+    /// stale temp files and containers a previous process wrote but
+    /// never acknowledged in the manifest are swept before any new work
+    /// is accepted.
     pub fn start(cfg: CoordinatorConfig) -> Result<Self> {
         std::fs::create_dir_all(&cfg.out_dir)?;
+        lifecycle::recover_dir(&cfg.out_dir)?;
         let metrics = Arc::new(Metrics::new());
         let depth = cfg.queue_depth.max(1);
         let submit_q: BoundedQueue<Checkpoint> = BoundedQueue::new(depth);
@@ -432,15 +477,26 @@ fn write_loop(
     metrics: &Metrics,
 ) -> Result<Vec<JobResult>> {
     let mut results = Vec::new();
-    let mut manifest = ChainManifest::new();
+    // Resuming into a directory that already holds a chain (a restarted
+    // run after a crash) must append to the existing manifest, not
+    // clobber it — [`recover_dir`] has already reconciled it against the
+    // on-disk containers by the time this stage starts.
+    let mut manifest = if ChainManifest::exists_in(&cfg.out_dir) {
+        ChainManifest::load(&cfg.out_dir)?
+    } else {
+        ChainManifest::new()
+    };
+    let retention = cfg.retention();
     while let Some(job) = in_q.pop() {
         let step = job.prep.step;
         let t0 = Instant::now();
         let name = format!("ckpt_{step:010}.cpcm");
         let path = cfg.out_dir.join(&name);
-        let tmp = cfg.out_dir.join(format!(".tmp_{step}"));
-        std::fs::write(&tmp, &job.bytes)?;
-        std::fs::rename(&tmp, &path)?;
+        // Durable container first (temp + fsync + rename + dir fsync),
+        // durable manifest second: a crash at any point leaves either a
+        // sweepable temp or an unreferenced container — the manifest
+        // never references bytes that could vanish.
+        fs_atomic::write_atomic(&path, &job.bytes)?;
 
         // Manifest after container: it never references a missing file.
         manifest.insert(ManifestEntry {
@@ -484,6 +540,29 @@ fn write_loop(
             }
             metrics.time("stage_verify", t0.elapsed().as_secs_f64());
             metrics.count("verified", 1);
+        }
+
+        // Chain lifecycle, only after the step is fully acknowledged
+        // (container + manifest durable, optional verify passed): rebase
+        // deep chains onto a lossless keyframe, then apply retention.
+        if cfg.compact_depth > 0 {
+            let depth = manifest.ancestry(step)?.len() as u64;
+            metrics.gauge_max("chain_depth", depth as f64);
+            if depth > cfg.compact_depth {
+                let t0 = Instant::now();
+                let report =
+                    lifecycle::compact_in(&mut manifest, &cfg.out_dir, &cfg.backend, step)?;
+                metrics.time("stage_compact", t0.elapsed().as_secs_f64());
+                metrics.count("compactions", 1);
+                metrics.count("compaction_rebased_depth", report.old_depth as u64);
+            }
+        }
+        if retention.enabled() {
+            let report = lifecycle::run_retention(&mut manifest, &cfg.out_dir, &retention)?;
+            if !report.removed.is_empty() {
+                metrics.count("gc_runs", 1);
+                metrics.count("gc_removed_steps", report.removed.len() as u64);
+            }
         }
 
         metrics.count("checkpoints", 1);
@@ -592,6 +671,7 @@ fn decode_ancestry(
                 ck.step
             )));
         }
+        note_container_decoded();
         prev = Some((ck, syms));
     }
     Ok(prev)
@@ -646,7 +726,7 @@ pub fn restore_step_to_file_with(
         let ck = decode_ancestry(&manifest, dir, backend, step, &chain)?
             .expect("ancestry is never empty")
             .0;
-        std::fs::write(out_path, ck.to_bytes())?;
+        fs_atomic::write_atomic(out_path, &ck.to_bytes())?;
         return Ok(());
     }
 
@@ -757,10 +837,11 @@ fn restore_chain_streaming(
             let _ = store.remove(ps);
             let _ = std::fs::remove_file(syms_path(ps));
         }
+        note_container_decoded();
         prev_step = Some(s);
         prev_wrote_syms = stats.wrote_syms;
         if last {
-            std::fs::rename(&out_file, out_path)?;
+            fs_atomic::rename_durable(&out_file, out_path)?;
         }
     }
     Ok(())
@@ -808,6 +889,10 @@ pub fn restore_tensor(
             path.display()
         ))
     })
+    .map(|t| {
+        note_container_decoded();
+        t
+    })
 }
 
 /// Decode a directory of `.cpcm` containers in chain order, returning the
@@ -815,6 +900,12 @@ pub fn restore_tensor(
 /// resume examples). `upto` limits the decode to steps ≤ it. Works with
 /// or without a manifest (pure directory scan); use [`restore_step`] for
 /// manifest-indexed random access to a single step.
+///
+/// The scan only recognizes the pristine `ckpt_<step>.cpcm` naming.
+/// Directories reshaped by the chain lifecycle — compacted keyframes
+/// (`ckpt_<step>.kf<gen>.cpcm`) or GC'd steps — are indexed by their
+/// manifest only; restore them with [`restore_step`] /
+/// [`restore_step_to_file`].
 pub fn decode_chain(
     dir: &std::path::Path,
     backend: &Backend,
@@ -856,6 +947,7 @@ pub fn decode_chain(
         };
         let (ck, syms) = Codec::decode(backend, &bytes, reference, prev_syms)?;
         debug_assert_eq!(ck.step, step);
+        note_container_decoded();
         out.push(ck);
         chain.push((step, syms));
     }

@@ -1,0 +1,254 @@
+//! Offline integrity audit and repair for coordinator directories — the
+//! `cpcm scrub [--repair]` verb.
+//!
+//! A scrub re-verifies what the write path promised: every live
+//! manifest entry has a container on disk whose framing parses, whose
+//! full-body trailer CRC matches, and whose recorded CRC/step/format
+//! agree with the manifest row. On top of the per-file verdicts it
+//! computes chain-level restorability (a step is only restorable if its
+//! *entire* reference ancestry verified) and flags directory litter
+//! (stale temps, unreferenced containers).
+//!
+//! Repair is deliberately lossy-but-honest: corrupt or
+//! ancestry-orphaned steps are **quarantined** — retired in the
+//! manifest (so restores fail with a named error instead of a CRC
+//! surprise) and their files renamed to `<file>.quarantine` (preserved
+//! for forensics, invisible to the directory scans). After a repair the
+//! directory scrubs clean and every remaining live step is restorable.
+
+use super::lifecycle;
+use super::manifest::{ChainManifest, ManifestEntry};
+use crate::container::ContainerFileReader;
+use crate::util::fs_atomic;
+use crate::{Error, Result};
+use std::collections::BTreeSet;
+use std::path::Path;
+
+/// One per-step problem found by [`scrub_dir`].
+#[derive(Clone, Debug)]
+pub struct ScrubFinding {
+    pub step: u64,
+    pub file: String,
+    /// Human-readable cause (CRC mismatch, unreadable, missing, …).
+    pub error: String,
+}
+
+/// Outcome of a read-only [`scrub_dir`] pass.
+#[derive(Debug, Default)]
+pub struct ScrubReport {
+    /// Live manifest entries examined.
+    pub checked: usize,
+    /// Steps whose containers verified end to end.
+    pub ok: Vec<u64>,
+    /// Steps whose containers exist but failed verification.
+    pub corrupt: Vec<ScrubFinding>,
+    /// Steps whose containers are missing from disk.
+    pub missing: Vec<ScrubFinding>,
+    /// Verified steps that still cannot be restored because an ancestor
+    /// is corrupt, missing, or retired.
+    pub unrestorable: Vec<u64>,
+    /// Steps whose full reference ancestry verified — these restore.
+    pub restorable: Vec<u64>,
+    /// `.cpcm` files no live manifest entry references.
+    pub orphans: Vec<String>,
+    /// Stale temp files (interrupted atomic writes).
+    pub stale_temps: Vec<String>,
+    /// Steps already retired in the manifest (GC'd or previously
+    /// quarantined) — informational, not a problem.
+    pub retired: usize,
+}
+
+impl ScrubReport {
+    /// A clean bill of health: every live step verified *and* is
+    /// restorable, and the directory holds nothing unaccounted for.
+    pub fn consistent(&self) -> bool {
+        self.corrupt.is_empty()
+            && self.missing.is_empty()
+            && self.unrestorable.is_empty()
+            && self.orphans.is_empty()
+            && self.stale_temps.is_empty()
+    }
+
+    /// One-line operator summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} checked: {} ok, {} corrupt, {} missing, {} unrestorable, \
+             {} restorable, {} orphans, {} stale temps, {} retired",
+            self.checked,
+            self.ok.len(),
+            self.corrupt.len(),
+            self.missing.len(),
+            self.unrestorable.len(),
+            self.restorable.len(),
+            self.orphans.len(),
+            self.stale_temps.len(),
+            self.retired
+        )
+    }
+}
+
+/// Verify one container file against its manifest row: framing, full
+/// body + trailer CRC ([`ContainerFileReader::open`]'s chunked pass),
+/// recorded CRC, and header step/format agreement.
+fn verify_container(path: &Path, entry: &ManifestEntry) -> Result<()> {
+    let reader = ContainerFileReader::open(path)?;
+    if reader.stored_crc() != entry.crc32 {
+        return Err(Error::format(format!(
+            "crc {:08x} recorded in the manifest, {:08x} on disk",
+            entry.crc32,
+            reader.stored_crc()
+        )));
+    }
+    let step = reader.header().req_usize("step")? as u64;
+    if step != entry.step {
+        return Err(Error::format(format!(
+            "container holds step {step}, manifest says {}",
+            entry.step
+        )));
+    }
+    let format = reader.header().get("format").and_then(|v| v.as_u64()).unwrap_or(1);
+    if format != entry.format {
+        return Err(Error::format(format!(
+            "container is format {format}, manifest says {}",
+            entry.format
+        )));
+    }
+    Ok(())
+}
+
+/// Read-only integrity audit of a coordinator directory. Never mutates
+/// anything; returns the full findings. Fails outright only when the
+/// manifest itself is unreadable (a directory without a readable
+/// manifest has no ground truth to scrub against).
+pub fn scrub_dir(dir: &Path) -> Result<ScrubReport> {
+    let manifest = ChainManifest::load(dir)?;
+    let mut report = ScrubReport { retired: manifest.retired().count(), ..Default::default() };
+    let mut ok: BTreeSet<u64> = BTreeSet::new();
+    for entry in manifest.entries() {
+        report.checked += 1;
+        let path = dir.join(&entry.file);
+        if !path.is_file() {
+            report.missing.push(ScrubFinding {
+                step: entry.step,
+                file: entry.file.clone(),
+                error: "container file is missing".into(),
+            });
+            continue;
+        }
+        match verify_container(&path, entry) {
+            Ok(()) => {
+                ok.insert(entry.step);
+            }
+            Err(e) => report.corrupt.push(ScrubFinding {
+                step: entry.step,
+                file: entry.file.clone(),
+                error: e.to_string(),
+            }),
+        }
+    }
+    report.ok = ok.iter().copied().collect();
+    for step in manifest.steps() {
+        let restorable = manifest
+            .ancestry(step)
+            .map(|chain| chain.iter().all(|s| ok.contains(s)))
+            .unwrap_or(false);
+        if restorable {
+            report.restorable.push(step);
+        } else if ok.contains(&step) {
+            report.unrestorable.push(step);
+        }
+    }
+    let referenced: BTreeSet<&str> = manifest.entries().map(|e| e.file.as_str()).collect();
+    for item in std::fs::read_dir(dir)? {
+        let path = item?.path();
+        let name = match path.file_name() {
+            Some(n) => n.to_string_lossy().into_owned(),
+            None => continue,
+        };
+        if !path.is_file() {
+            continue;
+        }
+        if name.starts_with(fs_atomic::TMP_PREFIX) {
+            report.stale_temps.push(name);
+        } else if name.ends_with(".cpcm") && !referenced.contains(name.as_str()) {
+            report.orphans.push(name);
+        }
+    }
+    report.orphans.sort();
+    report.stale_temps.sort();
+    Ok(report)
+}
+
+/// Outcome of a [`repair_dir`] pass.
+#[derive(Debug, Default)]
+pub struct RepairReport {
+    /// Steps retired with reason `"quarantined"`, and the file each was
+    /// preserved under (`<file>.quarantine`; missing files have none).
+    pub quarantined: Vec<(u64, Option<String>)>,
+    /// Unreferenced `.cpcm` files deleted.
+    pub orphans_removed: Vec<String>,
+    /// Stale temp files deleted.
+    pub temps_removed: Vec<String>,
+}
+
+/// Repair a directory in place so that it scrubs clean afterwards.
+///
+/// Every corrupt, missing, or ancestry-broken step is retired in the
+/// manifest (reason `"quarantined"`), which makes later restores of it
+/// fail with a named error rather than a mid-walk CRC surprise. The
+/// manifest is saved durably *first*; only then are the quarantined
+/// files renamed to `<file>.quarantine` and the litter removed — a
+/// crash mid-repair leaves unreferenced files for the next pass, never
+/// a manifest row pointing at vanished bytes.
+pub fn repair_dir(dir: &Path) -> Result<RepairReport> {
+    let findings = scrub_dir(dir)?;
+    let mut manifest = ChainManifest::load(dir)?;
+    let mut report = RepairReport::default();
+    let bad: BTreeSet<u64> = findings
+        .corrupt
+        .iter()
+        .chain(findings.missing.iter())
+        .map(|f| f.step)
+        .chain(findings.unrestorable.iter().copied())
+        .collect();
+    let mut to_rename = Vec::new();
+    for &step in &bad {
+        if let Some(entry) = manifest.retire(step, "quarantined") {
+            let path = dir.join(&entry.file);
+            if path.is_file() {
+                to_rename.push((step, entry.file));
+            } else {
+                report.quarantined.push((step, None));
+            }
+        }
+    }
+    manifest.save(dir)?;
+    for (step, file) in to_rename {
+        let from = dir.join(&file);
+        let keep = format!("{file}.quarantine");
+        fs_atomic::rename_durable(&from, &dir.join(&keep))?;
+        report.quarantined.push((step, Some(keep)));
+    }
+    report.quarantined.sort();
+    for name in findings.orphans {
+        std::fs::remove_file(dir.join(&name))?;
+        report.orphans_removed.push(name);
+    }
+    for swept in fs_atomic::sweep_temps(dir)? {
+        if let Some(name) = swept.file_name() {
+            report.temps_removed.push(name.to_string_lossy().into_owned());
+        }
+    }
+    // Quarantining a mid-chain step can orphan previously-fine
+    // descendants (their ancestry now dead-ends in a retired step).
+    // Iterate until the suffix is fully drained; each pass strictly
+    // shrinks the live set, so this terminates.
+    if !bad.is_empty() {
+        let again = repair_dir(dir)?;
+        report.quarantined.extend(again.quarantined);
+        report.orphans_removed.extend(again.orphans_removed);
+        report.temps_removed.extend(again.temps_removed);
+    }
+    let _ = lifecycle::recover_dir(dir);
+    Ok(report)
+}

@@ -1,0 +1,226 @@
+//! Process-global fault-injection plan for durability testing.
+//!
+//! The crash-point matrix test (`tests/crash_matrix.rs`) needs to
+//! simulate a process dying at *every* point in the durable-write
+//! sequence: mid `write`, before a `rename`, before an `fsync`.  All
+//! durable filesystem operations in the crate route through
+//! [`crate::util::fs_atomic`], which consults the plan armed here before
+//! each operation.
+//!
+//! A plan fires exactly once: the Nth matching operation trips it, the
+//! configured failure is injected, and subsequent operations proceed
+//! normally (the caller is expected to treat the injected error as a
+//! crash and abandon the run).  When no plan is armed the only cost on
+//! the I/O path is one relaxed atomic load.
+//!
+//! This module is compiled unconditionally (not `#[cfg(test)]`) because
+//! integration tests live in a separate crate and could not arm a
+//! test-only hook; it injects nothing unless [`arm`] has been called.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// Which durable filesystem operation a plan matches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultOp {
+    /// Writing bytes to a temp file (`fs_atomic::write_atomic`).
+    Write,
+    /// The atomic rename of a temp file onto its final name.
+    Rename,
+    /// An `fsync` of a file or parent directory.
+    Sync,
+    /// Any of the above — used by the crash matrix to enumerate every
+    /// sequence point with a single counter.
+    Any,
+}
+
+/// What happens when the plan trips.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultMode {
+    /// The operation fails outright; nothing (new) reaches the disk.
+    Fail,
+    /// A write persists only the first half of the buffer, then fails —
+    /// models a torn write at power loss. On `Rename`/`Sync` this
+    /// degrades to [`FaultMode::Fail`].
+    Torn,
+    /// The write completes and *reports success* but one bit of the
+    /// buffer is flipped — models silent media corruption. Only
+    /// meaningful for `Write`; degrades to [`FaultMode::Fail`] elsewhere.
+    BitFlip,
+}
+
+/// An armed fault: trip on the `nth` (1-based) operation matching `op`
+/// whose path contains `path_filter` (no filter = every path matches).
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    pub op: FaultOp,
+    pub mode: FaultMode,
+    pub nth: u64,
+    pub path_filter: Option<String>,
+}
+
+struct State {
+    plan: Option<FaultPlan>,
+    /// Matching operations seen since [`arm`].
+    seen: u64,
+    /// Whether the armed plan has fired.
+    tripped: bool,
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static STATE: Mutex<State> = Mutex::new(State { plan: None, seen: 0, tripped: false });
+
+/// Arm `plan`. Replaces any previously armed plan and resets counters.
+pub fn arm(plan: FaultPlan) {
+    let mut st = STATE.lock().unwrap();
+    st.plan = Some(plan);
+    st.seen = 0;
+    st.tripped = false;
+    ARMED.store(true, Ordering::SeqCst);
+}
+
+/// Disarm and report whether the plan fired. Clears all state; callers
+/// that only want to peek without clearing should use [`tripped`].
+pub fn disarm() -> bool {
+    let mut st = STATE.lock().unwrap();
+    let was = st.tripped;
+    st.plan = None;
+    st.seen = 0;
+    st.tripped = false;
+    ARMED.store(false, Ordering::SeqCst);
+    was
+}
+
+/// Whether the currently / last armed plan has fired.
+pub fn tripped() -> bool {
+    STATE.lock().unwrap().tripped
+}
+
+/// Decision returned to `fs_atomic` for a write about to happen.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum WriteCheck {
+    /// No fault: perform the write normally.
+    Proceed,
+    /// Persist only the first half of the buffer, then report failure.
+    Torn,
+    /// Persist the buffer with one bit flipped and report success.
+    BitFlip,
+    /// Fail without writing anything.
+    Fail,
+}
+
+fn check(op: FaultOp, path: &std::path::Path) -> Option<FaultMode> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let mut st = STATE.lock().unwrap();
+    let plan = st.plan.as_ref()?;
+    if plan.op != FaultOp::Any && plan.op != op {
+        return None;
+    }
+    if let Some(f) = &plan.path_filter {
+        if !path.to_string_lossy().contains(f.as_str()) {
+            return None;
+        }
+    }
+    st.seen += 1;
+    if st.seen != st.plan.as_ref().unwrap().nth {
+        return None;
+    }
+    st.tripped = true;
+    let mode = st.plan.as_ref().unwrap().mode;
+    // One-shot: later operations in the (doomed) process proceed.
+    st.plan = None;
+    ARMED.store(false, Ordering::SeqCst);
+    Some(mode)
+}
+
+/// Consult the plan before writing `path`.
+pub(crate) fn on_write(path: &std::path::Path) -> WriteCheck {
+    match check(FaultOp::Write, path) {
+        None => WriteCheck::Proceed,
+        Some(FaultMode::Fail) => WriteCheck::Fail,
+        Some(FaultMode::Torn) => WriteCheck::Torn,
+        Some(FaultMode::BitFlip) => WriteCheck::BitFlip,
+    }
+}
+
+/// Consult the plan before renaming `path`; `Err` means "crash here".
+pub(crate) fn on_rename(path: &std::path::Path) -> std::io::Result<()> {
+    match check(FaultOp::Rename, path) {
+        None => Ok(()),
+        Some(_) => Err(injected("rename", path)),
+    }
+}
+
+/// Consult the plan before fsyncing `path`; `Err` means "crash here".
+pub(crate) fn on_sync(path: &std::path::Path) -> std::io::Result<()> {
+    match check(FaultOp::Sync, path) {
+        None => Ok(()),
+        Some(_) => Err(injected("sync", path)),
+    }
+}
+
+/// The error all injected faults surface as.
+pub(crate) fn injected(op: &str, path: &std::path::Path) -> std::io::Error {
+    std::io::Error::other(format!("injected fault: {op} of {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    // Fault state is process-global; unit tests here and the fs_atomic
+    // ones share this lock so they cannot interleave arms.
+    pub(crate) static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn nth_op_trips_once_with_path_filter() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        arm(FaultPlan {
+            op: FaultOp::Write,
+            mode: FaultMode::Fail,
+            nth: 2,
+            path_filter: Some("ckpt_".into()),
+        });
+        // Non-matching path and op are not counted.
+        assert_eq!(on_write(Path::new("/d/manifest.json")), WriteCheck::Proceed);
+        assert!(on_rename(Path::new("/d/ckpt_1.cpcm")).is_ok());
+        assert_eq!(on_write(Path::new("/d/ckpt_1.cpcm")), WriteCheck::Proceed);
+        assert!(!tripped());
+        assert_eq!(on_write(Path::new("/d/ckpt_2.cpcm")), WriteCheck::Fail);
+        assert!(tripped());
+        // One-shot: the plan is spent.
+        assert_eq!(on_write(Path::new("/d/ckpt_3.cpcm")), WriteCheck::Proceed);
+        assert!(disarm());
+        assert!(!disarm());
+    }
+
+    #[test]
+    fn any_matches_all_ops_and_modes_map() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        arm(FaultPlan { op: FaultOp::Any, mode: FaultMode::Torn, nth: 3, path_filter: None });
+        assert!(on_sync(Path::new("/a")).is_ok());
+        assert!(on_rename(Path::new("/b")).is_ok());
+        // Third matching op is a sync: Torn degrades to a plain failure.
+        assert!(on_sync(Path::new("/c")).is_err());
+        assert!(disarm());
+
+        arm(FaultPlan { op: FaultOp::Write, mode: FaultMode::BitFlip, nth: 1, path_filter: None });
+        assert_eq!(on_write(Path::new("/x")), WriteCheck::BitFlip);
+        assert!(disarm());
+    }
+
+    #[test]
+    fn disarmed_is_inert() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        disarm();
+        for _ in 0..4 {
+            assert_eq!(on_write(Path::new("/p")), WriteCheck::Proceed);
+            assert!(on_rename(Path::new("/p")).is_ok());
+            assert!(on_sync(Path::new("/p")).is_ok());
+        }
+        assert!(!tripped());
+    }
+}

@@ -1,0 +1,255 @@
+//! Durable atomic file replacement: temp sibling → write → fsync →
+//! rename → fsync(parent dir).
+//!
+//! Every path in the crate that publishes a *final* file (containers,
+//! the chain manifest, raw checkpoint stores, restore outputs) must
+//! route through this module — `tests` greps the durability-critical
+//! sources for raw `fs::write`/`fs::rename` calls to enforce it.  The
+//! contract:
+//!
+//! 1. bytes land in a same-directory temp file named
+//!    `.tmp.<final-name>` (same filesystem, so the rename is atomic);
+//! 2. the temp file is `sync_all`'d — its contents are on stable
+//!    storage *before* the final name can ever point at them;
+//! 3. the temp is renamed onto the final name (atomic replace);
+//! 4. the parent directory is `sync_all`'d so the rename itself (the
+//!    directory entry) survives power loss.
+//!
+//! A crash before step 3 leaves at most a `.tmp.*` orphan, which
+//! [`sweep_temps`] removes on the next open; a crash after step 3
+//! leaves the complete new file. No observer ever sees a torn final
+//! file. All four steps consult [`crate::util::fault`] so the crash
+//! matrix can simulate dying at each of them.
+
+use crate::error::Result;
+use crate::util::fault;
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Prefix shared by every temp file this module creates. Kept as a
+/// single definition so sweepers and writers cannot drift apart.
+pub const TMP_PREFIX: &str = ".tmp";
+
+/// The temp sibling for `final_path`: `.tmp.<file-name>` in the same
+/// directory (same filesystem ⇒ `rename` is atomic).
+pub fn tmp_path(final_path: &Path) -> PathBuf {
+    let name = final_path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "unnamed".to_string());
+    final_path.with_file_name(format!("{TMP_PREFIX}.{name}"))
+}
+
+/// Write `bytes` to `path` durably and atomically (see module docs).
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = tmp_path(path);
+    write_tmp(&tmp, bytes)?;
+    commit(&tmp, path)
+}
+
+/// Write `bytes` to the temp file `tmp` (no sync — [`commit`] syncs).
+/// Fault hook: a torn write persists half the buffer then errors (the
+/// stale temp stays behind, as after a real crash); a bit flip persists
+/// a corrupted buffer and reports success.
+fn write_tmp(tmp: &Path, bytes: &[u8]) -> Result<()> {
+    match fault::on_write(tmp) {
+        fault::WriteCheck::Proceed => fs::write(tmp, bytes)?,
+        fault::WriteCheck::Fail => return Err(fault::injected("write", tmp).into()),
+        fault::WriteCheck::Torn => {
+            let mut f = fs::File::create(tmp)?;
+            f.write_all(&bytes[..bytes.len() / 2])?;
+            let _ = f.sync_all();
+            return Err(fault::injected("torn write", tmp).into());
+        }
+        fault::WriteCheck::BitFlip => {
+            let mut corrupted = bytes.to_vec();
+            if !corrupted.is_empty() {
+                let mid = corrupted.len() / 2;
+                corrupted[mid] ^= 0x10;
+            }
+            fs::write(tmp, corrupted)?;
+        }
+    }
+    Ok(())
+}
+
+/// Publish an already-written temp file: fsync it, rename it onto
+/// `final_path`, fsync the parent directory. Streaming writers that
+/// build their temp file incrementally (e.g. the checkpoint store) call
+/// this directly instead of [`write_atomic`].
+pub fn commit(tmp: &Path, final_path: &Path) -> Result<()> {
+    sync_file(tmp)?;
+    rename(tmp, final_path)?;
+    sync_parent_dir(final_path)
+}
+
+/// Durable rename for files that are already synced (streaming restore
+/// moving a finished output into place): rename + parent-dir fsync.
+pub fn rename_durable(from: &Path, to: &Path) -> Result<()> {
+    sync_file(from)?;
+    rename(from, to)?;
+    sync_parent_dir(to)
+}
+
+fn rename(from: &Path, to: &Path) -> Result<()> {
+    fault::on_rename(to)?;
+    fs::rename(from, to)?;
+    Ok(())
+}
+
+/// `sync_all` on `path` (fault-hooked).
+pub fn sync_file(path: &Path) -> Result<()> {
+    fault::on_sync(path)?;
+    fs::File::open(path)?.sync_all()?;
+    Ok(())
+}
+
+/// `sync_all` on the directory containing `path`, making a completed
+/// rename durable. On platforms where directories cannot be opened for
+/// sync (non-unix), this is a no-op beyond the fault hook.
+pub fn sync_parent_dir(path: &Path) -> Result<()> {
+    let dir = match path.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d,
+        _ => Path::new("."),
+    };
+    fault::on_sync(dir)?;
+    #[cfg(unix)]
+    fs::File::open(dir)?.sync_all()?;
+    Ok(())
+}
+
+/// Remove every `.tmp*` file directly inside `dir` — leftovers of
+/// writes that crashed before their rename. Returns the removed paths.
+/// Matches the legacy `.tmp_*` spelling as well as [`TMP_PREFIX`]`.`.
+pub fn sweep_temps(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut removed = Vec::new();
+    if !dir.is_dir() {
+        return Ok(removed);
+    }
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if name.starts_with(TMP_PREFIX) && entry.file_type()?.is_file() {
+            fs::remove_file(entry.path())?;
+            removed.push(entry.path());
+        }
+    }
+    removed.sort();
+    Ok(removed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fault::{arm, disarm, FaultMode, FaultOp, FaultPlan};
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("cpcm_fsatomic_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn write_atomic_roundtrip_and_replace() {
+        let d = tmpdir("rt");
+        let p = d.join("file.bin");
+        write_atomic(&p, b"first").unwrap();
+        assert_eq!(fs::read(&p).unwrap(), b"first");
+        write_atomic(&p, b"second, longer").unwrap();
+        assert_eq!(fs::read(&p).unwrap(), b"second, longer");
+        // No temp residue after a clean commit.
+        assert!(sweep_temps(&d).unwrap().is_empty());
+        fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn torn_write_leaves_temp_and_keeps_old_final() {
+        let _g = crate::util::fault::tests::TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let d = tmpdir("torn");
+        let p = d.join("file.bin");
+        write_atomic(&p, b"stable contents").unwrap();
+        arm(FaultPlan { op: FaultOp::Write, mode: FaultMode::Torn, nth: 1, path_filter: None });
+        let err = write_atomic(&p, b"replacement-bytes").unwrap_err();
+        assert!(disarm());
+        assert!(err.to_string().contains("injected fault"));
+        // Old final file untouched; half-written temp left behind.
+        assert_eq!(fs::read(&p).unwrap(), b"stable contents");
+        let tmp = tmp_path(&p);
+        assert!(tmp.exists());
+        assert_eq!(fs::read(&tmp).unwrap().len(), b"replacement-bytes".len() / 2);
+        // The sweep removes it and nothing else.
+        let removed = sweep_temps(&d).unwrap();
+        assert_eq!(removed, vec![tmp.clone()]);
+        assert!(!tmp.exists());
+        assert!(p.exists());
+        fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn failed_rename_keeps_old_final() {
+        let _g = crate::util::fault::tests::TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let d = tmpdir("ren");
+        let p = d.join("file.bin");
+        write_atomic(&p, b"old").unwrap();
+        arm(FaultPlan { op: FaultOp::Rename, mode: FaultMode::Fail, nth: 1, path_filter: None });
+        assert!(write_atomic(&p, b"new").is_err());
+        assert!(disarm());
+        assert_eq!(fs::read(&p).unwrap(), b"old");
+        fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn bit_flip_reports_success_but_corrupts() {
+        let _g = crate::util::fault::tests::TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let d = tmpdir("flip");
+        let p = d.join("file.bin");
+        arm(FaultPlan { op: FaultOp::Write, mode: FaultMode::BitFlip, nth: 1, path_filter: None });
+        write_atomic(&p, b"payload-bytes").unwrap();
+        assert!(disarm());
+        let got = fs::read(&p).unwrap();
+        assert_eq!(got.len(), b"payload-bytes".len());
+        assert_ne!(got, b"payload-bytes");
+        fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn sweep_ignores_real_files_and_legacy_temps_match() {
+        let d = tmpdir("sweep");
+        fs::write(d.join("ckpt_1.cpcm"), b"x").unwrap();
+        fs::write(d.join(".tmp.manifest.json"), b"y").unwrap();
+        fs::write(d.join(".tmp_ckpt_5"), b"z").unwrap();
+        let removed = sweep_temps(&d).unwrap();
+        assert_eq!(removed.len(), 2);
+        assert!(d.join("ckpt_1.cpcm").exists());
+        assert!(!d.join(".tmp.manifest.json").exists());
+        assert!(!d.join(".tmp_ckpt_5").exists());
+        fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn durability_critical_sources_route_through_fs_atomic() {
+        // Regression guard for the fsync bugfix: the three paths named
+        // in the issue must not hand-roll final-file writes or renames.
+        // (`fs::write`/`fs::rename` may only appear in this module.)
+        for (name, src) in [
+            ("coordinator/mod.rs", include_str!("../coordinator/mod.rs")),
+            ("coordinator/manifest.rs", include_str!("../coordinator/manifest.rs")),
+            ("coordinator/lifecycle.rs", include_str!("../coordinator/lifecycle.rs")),
+            ("coordinator/scrub.rs", include_str!("../coordinator/scrub.rs")),
+            ("checkpoint/store.rs", include_str!("../checkpoint/store.rs")),
+        ] {
+            // Only non-test code is held to the contract (tests plant
+            // corruption with raw writes on purpose).
+            let prod = src.split("#[cfg(test)]").next().unwrap();
+            for forbidden in ["fs::write(", "fs::rename("] {
+                assert!(
+                    !prod.contains(forbidden),
+                    "{name} calls {forbidden}…) directly; route it through util::fs_atomic"
+                );
+            }
+        }
+    }
+}

@@ -24,7 +24,7 @@ pub enum Json {
 impl Json {
     /// Parse a JSON document from a string.
     pub fn parse(s: &str) -> Result<Json> {
-        let mut p = Parser { bytes: s.as_bytes(), pos: 0 };
+        let mut p = Parser { bytes: s.as_bytes(), pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -248,9 +248,17 @@ fn write_str(out: &mut String, s: &str) {
     out.push('"');
 }
 
+/// Maximum container nesting the parser accepts. Documents the crate
+/// produces nest a handful of levels; untrusted input (manifests,
+/// container headers) must not be able to overflow the stack with
+/// `[[[[…`, so recursion is capped well below any real stack limit.
+pub const MAX_DEPTH: usize = 96;
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    /// Current container nesting level (see [`MAX_DEPTH`]).
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -299,12 +307,22 @@ impl<'a> Parser<'a> {
         }
     }
 
+    fn enter(&mut self) -> Result<()> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        Ok(())
+    }
+
     fn object(&mut self) -> Result<Json> {
         self.expect(b'{')?;
+        self.enter()?;
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(map));
         }
         loop {
@@ -322,6 +340,7 @@ impl<'a> Parser<'a> {
                 }
                 Some(b'}') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(map));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
@@ -331,10 +350,12 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Json> {
         self.expect(b'[')?;
+        self.enter()?;
         let mut xs = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(xs));
         }
         loop {
@@ -347,6 +368,7 @@ impl<'a> Parser<'a> {
                 }
                 Some(b']') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(xs));
                 }
                 _ => return Err(self.err("expected ',' or ']'")),
@@ -461,6 +483,19 @@ mod tests {
         assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
         assert_eq!(Json::parse(" -12.5e2 ").unwrap(), Json::Num(-1250.0));
         assert_eq!(Json::parse(r#""a\nb""#).unwrap(), Json::Str("a\nb".into()));
+    }
+
+    #[test]
+    fn depth_is_capped_not_stack_overflowed() {
+        // One level under the cap parses…
+        let ok = "[".repeat(MAX_DEPTH) + &"]".repeat(MAX_DEPTH);
+        assert!(Json::parse(&ok).is_ok());
+        // …one over errors, and a pathological document returns Err
+        // instead of exhausting the stack.
+        let over = "[".repeat(MAX_DEPTH + 1) + &"]".repeat(MAX_DEPTH + 1);
+        assert!(Json::parse(&over).is_err());
+        let bomb = "[{\"k\":".repeat(200_000);
+        assert!(Json::parse(&bomb).is_err());
     }
 
     #[test]

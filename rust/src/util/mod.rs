@@ -7,11 +7,15 @@
 //! ([`bitio`]), CRC-32 ([`crc32`]), an LZ77+range-coder byte compressor
 //! ([`lz`]), descriptive statistics ([`stats`]), a property-testing
 //! mini-framework ([`prop`]), a bench harness ([`bench`]), a persistent
-//! work pool ([`pool`]) and a bounded backpressure queue ([`queue`]).
+//! work pool ([`pool`]), a bounded backpressure queue ([`queue`]),
+//! durable atomic file replacement ([`fs_atomic`]) and the
+//! fault-injection plan that tests it ([`fault`]).
 
 pub mod bench;
 pub mod bitio;
 pub mod crc32;
+pub mod fault;
+pub mod fs_atomic;
 pub mod json;
 pub mod lz;
 pub mod pool;

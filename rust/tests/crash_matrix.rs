@@ -1,0 +1,184 @@
+//! Crash-point matrix: simulate a crash at **every** durable-write
+//! sequence point of a coordinator run and prove the directory stays
+//! usable.
+//!
+//! The fault layer (`cpcm::util::fault`) injects a failure on the Nth
+//! filesystem operation (write / fsync / rename — all durable I/O
+//! routes through `cpcm::util::fs_atomic`). For each N until the run
+//! outlives the plan, the matrix:
+//!
+//! 1. runs a 4-checkpoint pipeline that "crashes" at operation N;
+//! 2. reopens the directory (startup recovery sweeps temps and
+//!    unacknowledged containers);
+//! 3. restores the last *acknowledged* step — the newest step in the
+//!    surviving manifest — and asserts it is bit-exact against a clean
+//!    reference run;
+//! 4. asserts a scrub finds the directory consistent.
+//!
+//! Fault state is process-global, so every test here serializes on one
+//! lock (CI additionally runs this binary with `--test-threads=1`).
+
+use cpcm::checkpoint::Checkpoint;
+use cpcm::codec::{CodecConfig, ContextMode};
+use cpcm::coordinator::{
+    recover_dir, repair_dir, restore_step, scrub_dir, ChainManifest, Coordinator,
+    CoordinatorConfig,
+};
+use cpcm::lstm::Backend;
+use cpcm::util::fault::{arm, disarm, FaultMode, FaultOp, FaultPlan};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+static FAULT_GATE: Mutex<()> = Mutex::new(());
+
+const STEPS: [u64; 4] = [10, 20, 30, 40];
+
+fn layers() -> Vec<(&'static str, Vec<usize>)> {
+    vec![("w", vec![14, 6]), ("b", vec![9])]
+}
+
+fn codec() -> CodecConfig {
+    CodecConfig {
+        mode: ContextMode::Order0,
+        hidden: 8,
+        embed: 8,
+        batch: 32,
+        quant_iters: 3,
+        lanes: 1,
+        ..Default::default()
+    }
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("cpcm_crashmx_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Push the 4-checkpoint chain through a coordinator. Any injected
+/// fault surfaces as an `Err` somewhere in submit/finish — the "crash".
+fn run_chain(dir: &PathBuf) -> cpcm::Result<()> {
+    let coord = Coordinator::start(CoordinatorConfig::new(codec(), Backend::Native, dir.clone()))?;
+    for (i, &s) in STEPS.iter().enumerate() {
+        coord.submit(Checkpoint::synthetic(s, &layers(), 100 + i as u64))?;
+    }
+    coord.finish()?;
+    Ok(())
+}
+
+/// Bit-exact restore bytes for every step of a clean (fault-free) run.
+fn reference_restores() -> BTreeMap<u64, Vec<u8>> {
+    let dir = tmpdir("reference");
+    run_chain(&dir).expect("clean run");
+    let mut out = BTreeMap::new();
+    for &s in &STEPS {
+        out.insert(s, restore_step(&dir, &Backend::Native, s).unwrap().to_bytes());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    out
+}
+
+fn crash_matrix(mode: FaultMode) {
+    let _g = FAULT_GATE.lock().unwrap_or_else(|e| e.into_inner());
+    disarm();
+    let reference = reference_restores();
+    let mut crashes = 0u64;
+    for nth in 1..500u64 {
+        let dir = tmpdir(&format!("{mode:?}_{nth}"));
+        arm(FaultPlan { op: FaultOp::Any, mode, nth, path_filter: None });
+        let outcome = run_chain(&dir);
+        let fired = disarm();
+        if !fired {
+            // The plan outlived the run: the full matrix is covered.
+            outcome.expect("a run past the fault horizon must succeed");
+            for &s in &STEPS {
+                let got = restore_step(&dir, &Backend::Native, s).unwrap().to_bytes();
+                assert_eq!(got, reference[&s], "mode {mode:?}: clean tail run, step {s}");
+            }
+            let _ = std::fs::remove_dir_all(&dir);
+            assert!(crashes >= 8, "matrix covered only {crashes} crash points");
+            return;
+        }
+        crashes += 1;
+        assert!(outcome.is_err(), "mode {mode:?} nth {nth}: injected fault must surface");
+        // Reopen after the crash: recovery must always succeed (the
+        // write order never lets the manifest reference lost bytes).
+        recover_dir(&dir)
+            .unwrap_or_else(|e| panic!("mode {mode:?} nth {nth}: recovery failed: {e}"));
+        if ChainManifest::exists_in(&dir) {
+            let manifest = ChainManifest::load(&dir).unwrap();
+            if let Some(&last) = manifest.steps().last() {
+                let got = restore_step(&dir, &Backend::Native, last).unwrap().to_bytes();
+                assert_eq!(
+                    got, reference[&last],
+                    "mode {mode:?} nth {nth}: last acknowledged step {last} must be bit-exact"
+                );
+            }
+            let report = scrub_dir(&dir).unwrap();
+            assert!(
+                report.consistent(),
+                "mode {mode:?} nth {nth}: post-recovery scrub: {}",
+                report.summary()
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    panic!("fault horizon not reached within 500 operations");
+}
+
+#[test]
+fn crash_matrix_fail_mode() {
+    crash_matrix(FaultMode::Fail);
+}
+
+#[test]
+fn crash_matrix_torn_write_mode() {
+    crash_matrix(FaultMode::Torn);
+}
+
+#[test]
+fn bit_flip_is_detected_by_scrub_and_quarantined_by_repair() {
+    let _g = FAULT_GATE.lock().unwrap_or_else(|e| e.into_inner());
+    disarm();
+    let reference = reference_restores();
+    let dir = tmpdir("bitflip");
+    // Flip one bit in the second container body (step 20). The write
+    // reports success — the run completes normally; only the bytes on
+    // disk lie.
+    arm(FaultPlan {
+        op: FaultOp::Write,
+        mode: FaultMode::BitFlip,
+        nth: 2,
+        path_filter: Some("ckpt_".into()),
+    });
+    let outcome = run_chain(&dir);
+    assert!(disarm(), "bit-flip plan must fire");
+    outcome.expect("silent corruption must not fail the run");
+
+    let report = scrub_dir(&dir).unwrap();
+    assert!(!report.consistent());
+    assert_eq!(report.corrupt.len(), 1, "{}", report.summary());
+    assert_eq!(report.corrupt[0].step, 20);
+    // The intact prefix restores; the dependent suffix does not.
+    assert!(report.restorable.contains(&10));
+    assert!(report.unrestorable.contains(&30));
+    assert!(report.unrestorable.contains(&40));
+
+    let repair = repair_dir(&dir).unwrap();
+    assert!(repair.quarantined.iter().any(|(s, _)| *s == 20));
+    // Quarantined containers are preserved for forensics, not deleted.
+    assert!(dir.join("ckpt_0000000020.cpcm.quarantine").is_file());
+
+    let after = scrub_dir(&dir).unwrap();
+    assert!(after.consistent(), "post-repair scrub: {}", after.summary());
+    assert_eq!(after.restorable, vec![10]);
+
+    let got = restore_step(&dir, &Backend::Native, 10).unwrap().to_bytes();
+    assert_eq!(got, reference[&10], "surviving prefix must stay bit-exact");
+    // Restoring a quarantined step names the step instead of failing
+    // mid-walk with a CRC surprise.
+    let err = restore_step(&dir, &Backend::Native, 20).unwrap_err().to_string();
+    assert!(err.contains("20") && err.contains("retired"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

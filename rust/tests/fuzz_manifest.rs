@@ -1,0 +1,167 @@
+//! Bounded fuzz of the `ChainManifest` JSON path: arbitrary bytes,
+//! mutations of a valid document, pathological nesting and numbers —
+//! `Json::parse` + `ChainManifest::from_json` must return `Ok` or `Err`,
+//! never panic, hang, or allocate past what the input length implies.
+//! Runs as a plain `cargo test` (deterministic xorshift corpus, no
+//! external fuzzer needed); the JSON depth cap (`json::MAX_DEPTH`) is
+//! what turns `[[[[…` from a stack overflow into an `Err`.
+
+use cpcm::coordinator::{ChainManifest, ManifestEntry};
+use cpcm::util::json::Json;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Deterministic xorshift64* — the corpus must not depend on ambient
+/// randomness, or a CI failure would be unreproducible.
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    fn below(&mut self, n: usize) -> usize {
+        (self.next() % n as u64) as usize
+    }
+}
+
+fn feed(text: &str) {
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        if let Ok(j) = Json::parse(text) {
+            let _ = ChainManifest::from_json(&j);
+        }
+    }));
+    assert!(r.is_ok(), "panicked on input: {text:?}");
+}
+
+/// A real manifest document (live + retired rows) as mutation seed.
+fn seed_document() -> String {
+    let mut m = ChainManifest::new();
+    for s in 0..6u64 {
+        m.insert(ManifestEntry {
+            step: s * 10,
+            ref_step: if s == 0 { None } else { Some((s - 1) * 10) },
+            file: format!("ckpt_{:010}.cpcm", s * 10),
+            format: 2,
+            lanes: 2,
+            shards: 1,
+            bytes: 1000 + s,
+            crc32: 0xDEAD_0000 + s as u32,
+        });
+    }
+    m.retire(0, "gc");
+    m.to_json().to_string()
+}
+
+#[test]
+fn valid_documents_round_trip() {
+    let text = seed_document();
+    let j = Json::parse(&text).unwrap();
+    let m = ChainManifest::from_json(&j).unwrap();
+    assert_eq!(m.steps(), vec![10, 20, 30, 40, 50]);
+    assert_eq!(m.retired().count(), 1);
+}
+
+#[test]
+fn random_bytes_never_panic() {
+    let mut rng = Rng(0x5EED_CAFE);
+    for _ in 0..1500 {
+        let len = rng.below(200);
+        let bytes: Vec<u8> = (0..len).map(|_| (rng.next() & 0xFF) as u8).collect();
+        let text = String::from_utf8_lossy(&bytes).into_owned();
+        feed(&text);
+    }
+}
+
+#[test]
+fn mutated_valid_documents_never_panic() {
+    let seed = seed_document();
+    let mut rng = Rng(0xF00D_F00D);
+    let bytes = seed.as_bytes();
+    for _ in 0..1500 {
+        let mut doc = bytes.to_vec();
+        for _ in 0..=rng.below(4) {
+            if doc.is_empty() {
+                break;
+            }
+            match rng.below(3) {
+                // Replace a byte with JSON-ish structure characters.
+                0 => {
+                    let pos = rng.below(doc.len());
+                    doc[pos] = b"{}[]:,\"0123456789.eE-nulltruefalse"[rng.below(34)];
+                }
+                // Delete a byte.
+                1 => {
+                    let pos = rng.below(doc.len());
+                    doc.remove(pos);
+                }
+                // Truncate.
+                _ => doc.truncate(rng.below(doc.len())),
+            }
+        }
+        feed(&String::from_utf8_lossy(&doc).into_owned());
+    }
+}
+
+#[test]
+fn deep_nesting_is_an_error_not_a_stack_overflow() {
+    // Far past json::MAX_DEPTH; must come back as Err without
+    // exhausting the stack.
+    for unit in ["[", "{\"k\":", "[{\"v\":"] {
+        let text = unit.repeat(50_000);
+        assert!(Json::parse(&text).is_err());
+        feed(&text);
+    }
+}
+
+#[test]
+fn pathological_numbers_and_structures_never_panic() {
+    let cases = [
+        r#"{"version": 1e308, "checkpoints": []}"#,
+        r#"{"version": -2, "checkpoints": []}"#,
+        r#"{"version": 3, "checkpoints": []}"#,
+        r#"{"version": 2, "checkpoints": [{"step": 99999999999999999999999999}]}"#,
+        r#"{"version": 2, "checkpoints": 7}"#,
+        r#"{"version": 2, "checkpoints": [], "retired": [[]]}"#,
+        r#"{"version": 2, "checkpoints": [], "keyframes": [null]}"#,
+        r#"{"version": 2, "checkpoints": [], "keyframes": [4]}"#,
+        r#"{"version": 2, "checkpoints": [{"step": 0, "file": "", "format": 0}]}"#,
+        "{\"version\": 2, \"checkpoints\": [{\"step\": 0, \"ref_step\": 0}]}",
+        r#"{"version": 2, "checkpoints": [{"step": 1, "kind": "keyframe", "ref_step": 0,
+            "file": "a", "format": 2, "lanes": 1, "shards": 1, "bytes": 1, "crc32": 0}]}"#,
+    ];
+    for text in cases {
+        feed(text);
+        // These are all malformed one way or another; the parse chain
+        // must reject them (reaching from_json is fine, Ok is not).
+        let rejected = match Json::parse(text) {
+            Err(_) => true,
+            Ok(j) => ChainManifest::from_json(&j).is_err(),
+        };
+        assert!(rejected, "accepted malformed manifest: {text}");
+    }
+}
+
+#[test]
+fn duplicate_and_conflicting_rows_rejected() {
+    let seed = seed_document();
+    let j = Json::parse(&seed).unwrap();
+    // Sanity: the unmutated document parses.
+    assert!(ChainManifest::from_json(&j).is_ok());
+    // A step listed both live and retired must be rejected wholesale:
+    // point the retired row (step 0) at a live step instead.
+    let mut conflicted = j.clone();
+    if let Json::Obj(map) = &mut conflicted {
+        if let Some(Json::Arr(rows)) = map.get_mut("retired") {
+            if let Some(Json::Obj(row)) = rows.first_mut() {
+                row.insert("step".into(), Json::num(10.0));
+            }
+        }
+    }
+    assert_ne!(conflicted, j, "mutation must reach the retired row");
+    assert!(ChainManifest::from_json(&conflicted).is_err());
+}

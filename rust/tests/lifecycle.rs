@@ -1,0 +1,235 @@
+//! Chain-lifecycle battery: keyframe intervals bound restore depth (by
+//! decode *count*, not prose), retention never strands a retained step,
+//! compaction preserves bit-exact restores, and reopening a directory
+//! recovers crash litter and appends instead of clobbering.
+//!
+//! `cpcm::coordinator::containers_decoded` is process-global, so every
+//! test here serializes on one lock to keep counter deltas attributable.
+
+use cpcm::checkpoint::Checkpoint;
+use cpcm::codec::{CodecConfig, ContextMode};
+use cpcm::coordinator::{
+    compact_step, containers_decoded, gc_dir, recover_dir, restore_step, restore_step_to_file,
+    scrub_dir, ChainManifest, Coordinator, CoordinatorConfig, RetentionPolicy,
+};
+use cpcm::lstm::Backend;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+static GATE: Mutex<()> = Mutex::new(());
+
+fn layers() -> Vec<(&'static str, Vec<usize>)> {
+    vec![("w", vec![6, 4]), ("b", vec![5])]
+}
+
+fn codec() -> CodecConfig {
+    CodecConfig {
+        mode: ContextMode::Order0,
+        hidden: 8,
+        embed: 8,
+        batch: 32,
+        quant_iters: 3,
+        lanes: 1,
+        ..Default::default()
+    }
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("cpcm_lifecycle_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Run `n` checkpoints (steps 1..=n) through a coordinator configured
+/// by `tweak`.
+fn run_chain(dir: &PathBuf, n: u64, tweak: impl FnOnce(&mut CoordinatorConfig)) {
+    let mut ccfg = CoordinatorConfig::new(codec(), Backend::Native, dir.clone());
+    tweak(&mut ccfg);
+    let coord = Coordinator::start(ccfg).unwrap();
+    for s in 1..=n {
+        coord.submit(Checkpoint::synthetic(s, &layers(), 1000 + s)).unwrap();
+    }
+    coord.finish().unwrap();
+}
+
+#[test]
+fn keyframe_interval_bounds_restore_decode_count() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = tmpdir("depth");
+    // A 100-step chain with a keyframe every K = 10 checkpoints: any
+    // restore must decode at most K + 1 containers.
+    run_chain(&dir, 100, |c| c.keyframe_every = 10);
+    let manifest = ChainManifest::load(&dir).unwrap();
+    for &step in &[100u64, 95, 51, 11, 1] {
+        let chain = manifest.ancestry(step).unwrap();
+        assert!(chain.len() <= 11, "step {step}: ancestry has {} containers", chain.len());
+        let before = containers_decoded();
+        let ck = restore_step(&dir, &Backend::Native, step).unwrap();
+        let decoded = containers_decoded() - before;
+        assert_eq!(ck.step, step);
+        assert_eq!(decoded as usize, chain.len(), "step {step}: decode counter vs ancestry");
+        assert!(decoded <= 11, "step {step}: decoded {decoded} containers, K+1 is 11");
+    }
+    // The file-restore path obeys the same bound.
+    let out = dir.join("restore_100.bin");
+    let before = containers_decoded();
+    restore_step_to_file(&dir, &Backend::Native, 100, &out).unwrap();
+    assert!(containers_decoded() - before <= 11);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn gc_keeps_ancestors_of_retained_steps() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = tmpdir("gc_anc");
+    // Keyframes at steps 1 and 6 (indices 0 and 5); 7 steps total, so
+    // step 7 is a delta onto the keyframe at 6.
+    run_chain(&dir, 7, |c| c.keyframe_every = 5);
+    let want7 = restore_step(&dir, &Backend::Native, 7).unwrap().to_bytes();
+    // Retain only the newest step. Its keyframe at 6 is outside the
+    // keep-last window but must survive: 7 depends on it.
+    let report = gc_dir(&dir, &RetentionPolicy { keep_last: 1, keep_every: 0 }).unwrap();
+    assert_eq!(report.kept, vec![6, 7]);
+    assert_eq!(report.removed, vec![1, 2, 3, 4, 5]);
+    assert!(dir.join("ckpt_0000000006.cpcm").is_file(), "referenced keyframe was deleted");
+    let got = restore_step(&dir, &Backend::Native, 7).unwrap().to_bytes();
+    assert_eq!(got, want7, "retained step must stay bit-exact after GC");
+    assert!(scrub_dir(&dir).unwrap().consistent());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn restoring_a_collected_step_is_a_named_error() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = tmpdir("gc_err");
+    run_chain(&dir, 6, |c| c.keyframe_every = 3);
+    gc_dir(&dir, &RetentionPolicy { keep_last: 2, keep_every: 0 }).unwrap();
+    let err = restore_step(&dir, &Backend::Native, 2).unwrap_err().to_string();
+    assert!(err.contains("step 2"), "{err}");
+    assert!(err.contains("gc"), "{err}");
+    assert!(err.contains("ckpt_0000000002.cpcm"), "{err}");
+    // The file-restore path reports the same named error.
+    let out = dir.join("never.bin");
+    let err2 = restore_step_to_file(&dir, &Backend::Native, 2, &out).unwrap_err().to_string();
+    assert!(err2.contains("step 2"), "{err2}");
+    assert!(!out.exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn compaction_preserves_bit_exact_restores_and_unlocks_gc() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = tmpdir("compact");
+    // One keyframe at step 1, then deltas: ancestry of 6 is the full
+    // six-container chain.
+    run_chain(&dir, 6, |c| c.keyframe_every = 0);
+    let want: Vec<Vec<u8>> =
+        (1..=6).map(|s| restore_step(&dir, &Backend::Native, s).unwrap().to_bytes()).collect();
+
+    let report = compact_step(&dir, &Backend::Native, 4).unwrap();
+    assert_eq!(report.old_depth, 4);
+    assert_eq!(report.file, "ckpt_0000000004.kf1.cpcm");
+    assert!(dir.join(&report.file).is_file());
+    assert!(!dir.join("ckpt_0000000004.cpcm").exists(), "replaced container must be gone");
+
+    let manifest = ChainManifest::load(&dir).unwrap();
+    assert_eq!(manifest.ancestry(4).unwrap(), vec![4], "compacted step is its own keyframe");
+    assert_eq!(manifest.ancestry(6).unwrap(), vec![4, 5, 6], "children rebase onto it");
+    for s in 1..=6u64 {
+        let got = restore_step(&dir, &Backend::Native, s).unwrap().to_bytes();
+        assert_eq!(got, want[(s - 1) as usize], "step {s} changed bits after compaction");
+    }
+    assert!(scrub_dir(&dir).unwrap().consistent());
+
+    // The rebased chain lets GC drop the old ancestry entirely.
+    let gc = gc_dir(&dir, &RetentionPolicy { keep_last: 3, keep_every: 0 }).unwrap();
+    assert_eq!(gc.kept, vec![4, 5, 6]);
+    for s in 4..=6u64 {
+        let got = restore_step(&dir, &Backend::Native, s).unwrap().to_bytes();
+        assert_eq!(got, want[(s - 1) as usize], "step {s} changed bits after GC");
+    }
+    assert!(scrub_dir(&dir).unwrap().consistent());
+
+    // Compacting a keyframe is a no-op, and a second compaction of a
+    // rebuilt chain bumps the filename generation.
+    let again = compact_step(&dir, &Backend::Native, 4).unwrap();
+    assert_eq!(again.old_depth, 1);
+    let deep = compact_step(&dir, &Backend::Native, 6).unwrap();
+    assert_eq!(deep.file, "ckpt_0000000006.kf1.cpcm");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn compact_depth_rebases_inline_and_matches_uncompacted_restores() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let plain = tmpdir("auto_plain");
+    run_chain(&plain, 8, |_| {});
+    let compacted = tmpdir("auto_compact");
+    run_chain(&compacted, 8, |c| c.compact_depth = 3);
+
+    let manifest = ChainManifest::load(&compacted).unwrap();
+    for step in manifest.steps() {
+        let depth = manifest.ancestry(step).unwrap().len();
+        assert!(depth <= 3, "step {step}: inline compaction left depth {depth}");
+    }
+    // Same submitted checkpoints, same codec: every restore must be
+    // bit-identical to the never-compacted directory's.
+    for s in 1..=8u64 {
+        let a = restore_step(&plain, &Backend::Native, s).unwrap().to_bytes();
+        let b = restore_step(&compacted, &Backend::Native, s).unwrap().to_bytes();
+        assert_eq!(a, b, "step {s} diverges under inline compaction");
+    }
+    assert!(scrub_dir(&compacted).unwrap().consistent());
+    let _ = std::fs::remove_dir_all(&plain);
+    let _ = std::fs::remove_dir_all(&compacted);
+}
+
+#[test]
+fn retention_inline_with_training_keeps_chain_consistent() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = tmpdir("retain_inline");
+    run_chain(&dir, 12, |c| {
+        c.keyframe_every = 4;
+        c.retain_last = 3;
+    });
+    let manifest = ChainManifest::load(&dir).unwrap();
+    let steps = manifest.steps();
+    assert!(steps.contains(&12) && steps.contains(&11) && steps.contains(&10), "{steps:?}");
+    assert!(steps.len() <= 5, "retention left {steps:?}");
+    for &s in &steps {
+        restore_step(&dir, &Backend::Native, s).unwrap();
+    }
+    assert!(scrub_dir(&dir).unwrap().consistent());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn reopening_recovers_litter_and_appends_to_the_manifest() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = tmpdir("reopen");
+    run_chain(&dir, 3, |_| {});
+    let want2 = restore_step(&dir, &Backend::Native, 2).unwrap().to_bytes();
+    // Plant crash litter: stale temps (both namings) and an orphan
+    // container no manifest entry references.
+    std::fs::write(dir.join(".tmp.ckpt_0000000099.cpcm"), b"half a container").unwrap();
+    std::fs::write(dir.join(".tmp_99"), b"legacy temp").unwrap();
+    std::fs::write(dir.join("ckpt_0000000099.cpcm"), b"never acknowledged").unwrap();
+    let report = recover_dir(&dir).unwrap();
+    assert_eq!(report.swept_temps.len(), 2, "{report:?}");
+    assert_eq!(report.orphans_removed.len(), 1, "{report:?}");
+    assert!(!dir.join("ckpt_0000000099.cpcm").exists());
+
+    // A second run over the same directory must append (the manifest
+    // already indexes steps 1–3), not clobber.
+    let coord =
+        Coordinator::start(CoordinatorConfig::new(codec(), Backend::Native, dir.clone())).unwrap();
+    coord.submit(Checkpoint::synthetic(4, &layers(), 4242)).unwrap();
+    coord.finish().unwrap();
+    let manifest = ChainManifest::load(&dir).unwrap();
+    assert_eq!(manifest.steps(), vec![1, 2, 3, 4]);
+    // Old steps still restore bit-exactly; the appended step restores.
+    assert_eq!(restore_step(&dir, &Backend::Native, 2).unwrap().to_bytes(), want2);
+    assert_eq!(restore_step(&dir, &Backend::Native, 4).unwrap().step, 4);
+    assert!(scrub_dir(&dir).unwrap().consistent());
+    let _ = std::fs::remove_dir_all(&dir);
+}
