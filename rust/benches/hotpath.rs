@@ -10,7 +10,8 @@
 //! `BENCH_hotpath.json` (crate root): every sample's median seconds and
 //! throughput plus the lane-scaling, shard-size and shard-parallel
 //! scheduler sweeps (`encode_shard_par_syms_per_sec` is the tentpole
-//! metric of the shard × lane scheduler), so the perf trajectory is
+//! metric of the shard × lane scheduler) and the adaptive-bits
+//! ratio-vs-recovery frontier, so the perf trajectory is
 //! machine-diffable across PRs.
 //!
 //! Run: `cargo bench --bench hotpath`
@@ -384,6 +385,93 @@ fn main() {
         );
     }
 
+    // ---- Adaptive-bits ratio-vs-recovery frontier (format 5) ------------
+    // A deliberately heterogeneous checkpoint (one small high-variance
+    // tensor + one large near-constant tensor) encoded at fixed widths
+    // 2/3/4/6, with adaptive allocation at ceiling 6, and through the
+    // ExCP-style `util::lz` whole-file baseline. Rows carry the
+    // compression ratio (raw/container, higher is better) and the
+    // weight-recovery RMSE — both fully deterministic (seeded data,
+    // deterministic codec), so `bench_compare` can track the frontier
+    // like any other metric. Prune is off so the error measured is purely
+    // quantization error.
+    let frontier_ck = {
+        use cpcm::tensor::Tensor;
+        let mut rng = Pcg64::seed(0xf1);
+        let mut ck = Checkpoint { step: 1, ..Default::default() };
+        for (name, n, scale) in [("a_hot", 2048usize, 1.0f32), ("b_flat", 16384, 1e-4)] {
+            let w: Vec<f32> = (0..n).map(|_| rng.normal_f32() * scale).collect();
+            let m: Vec<f32> = (0..n).map(|_| rng.normal_f32() * scale * 0.1).collect();
+            let v: Vec<f32> =
+                (0..n).map(|_| (rng.normal_f32() * scale * 0.01).abs() + 1e-12).collect();
+            ck.weights.insert(name, Tensor::new(vec![n], w).unwrap());
+            ck.exp_avg.insert(name, Tensor::new(vec![n], m).unwrap());
+            ck.exp_avg_sq.insert(name, Tensor::new(vec![n], v).unwrap());
+        }
+        ck
+    };
+    let frontier_raw = frontier_ck.raw_bytes() as f64;
+    let weight_rmse = |dec: &cpcm::checkpoint::Checkpoint| -> f64 {
+        let (mut sse, mut n) = (0.0f64, 0u64);
+        for (a, b) in frontier_ck.weights.iter().zip(dec.weights.iter()) {
+            for (&x, &y) in a.tensor.data().iter().zip(b.tensor.data()) {
+                sse += (x as f64 - y as f64).powi(2);
+                n += 1;
+            }
+        }
+        (sse / n as f64).sqrt()
+    };
+    let mut frontier_rows: Vec<Json> = Vec::new();
+    for (label, bits, adaptive) in [
+        ("fixed bits=2", 2u8, false),
+        ("fixed bits=3", 3, false),
+        ("fixed bits=4", 4, false),
+        ("fixed bits=6", 6, false),
+        ("adaptive ceiling=6", 6, true),
+    ] {
+        let codec = Codec::new(
+            CodecConfig {
+                mode: ContextMode::Order0,
+                bits,
+                adaptive_bits: adaptive,
+                prune: cpcm::prune::PruneConfig { enabled: false, ..Default::default() },
+                lanes: 1,
+                ..CodecConfig::default()
+            },
+            Backend::Native,
+        );
+        let out = codec.encode(&frontier_ck, None, None).unwrap();
+        let (dec, _) = Codec::decode(&Backend::Native, &out.bytes, None, None).unwrap();
+        frontier_rows.push(Json::obj(vec![
+            ("label", Json::str(label)),
+            ("bits", Json::num(bits as f64)),
+            ("adaptive", Json::Bool(adaptive)),
+            ("container_bytes", Json::num(out.bytes.len() as f64)),
+            ("adaptive_ratio", Json::num(frontier_raw / out.bytes.len() as f64)),
+            ("adaptive_weight_rmse", Json::num(weight_rmse(&dec))),
+        ]));
+    }
+    // ExCP-style general-purpose baseline: lossless `util::lz` over the
+    // serialized checkpoint (rmse 0 by construction).
+    let lz_bytes = cpcm::util::lz::compress(&frontier_ck.to_bytes());
+    frontier_rows.push(Json::obj(vec![
+        ("label", Json::str("lz lossless")),
+        ("bits", Json::num(32.0)),
+        ("adaptive", Json::Bool(false)),
+        ("container_bytes", Json::num(lz_bytes.len() as f64)),
+        ("adaptive_ratio", Json::num(frontier_raw / lz_bytes.len() as f64)),
+        ("adaptive_weight_rmse", Json::num(0.0)),
+    ]));
+    println!("\nadaptive frontier (raw {frontier_raw} bytes):");
+    for r in &frontier_rows {
+        println!(
+            "  {:<20} ratio {:>7.2}x  weight rmse {:.3e}",
+            r.get("label").and_then(|v| v.as_str()).unwrap_or("?"),
+            r.get("adaptive_ratio").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            r.get("adaptive_weight_rmse").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        );
+    }
+
     // ---- Machine-readable dump ------------------------------------------
     let samples: Vec<Json> = b
         .results()
@@ -410,6 +498,7 @@ fn main() {
         ("lane_scaling", Json::Arr(lane_rows)),
         ("shard_sweep", Json::Arr(shard_rows)),
         ("shard_par", Json::Arr(spar_rows)),
+        ("adaptive_frontier", Json::Arr(frontier_rows)),
     ]);
     match std::fs::write("BENCH_hotpath.json", doc.to_string_pretty()) {
         Ok(()) => println!("wrote BENCH_hotpath.json"),

@@ -14,7 +14,9 @@
 //! - `shard_sweep[]` encode/decode/streaming-decode rates (matched by
 //!   shard budget),
 //! - `shard_par[]` shard-scheduler encode/streaming-decode rates
-//!   (matched by requested scheduler width, 0 = auto).
+//!   (matched by requested scheduler width, 0 = auto),
+//! - `adaptive_frontier[]` compression ratios of the adaptive-bits
+//!   ablation (matched by row label; deterministic, not timing-based).
 //!
 //! A core-count mismatch between the two documents
 //! (`available_parallelism`) is called out in the report, since
@@ -73,6 +75,18 @@ fn metrics(doc: &Json) -> BTreeMap<String, f64> {
                 if let Some(t) = r.get(key).and_then(|v| v.as_f64()).filter(|&t| t > 0.0) {
                     out.insert(format!("shard_bytes={sb} {key}"), t);
                 }
+            }
+        }
+    }
+    if let Some(rows) = doc.get("adaptive_frontier").and_then(|v| v.as_arr()) {
+        for r in rows {
+            // Ratio rows are deterministic (seeded data, deterministic
+            // codec), so the usual tolerance band is generous; rmse is
+            // tracked only when nonzero (the lz row is lossless).
+            let Some(label) = r.get("label").and_then(|v| v.as_str()) else { continue };
+            if let Some(t) = r.get("adaptive_ratio").and_then(|v| v.as_f64()).filter(|&t| t > 0.0)
+            {
+                out.insert(format!("frontier={label} adaptive_ratio"), t);
             }
         }
     }

@@ -4,8 +4,10 @@
 //! cpcm train      --workload lm_tiny --steps 300 --ckpt-every 50 \
 //!                 --out runs/demo [--compress] [--mode lstm] [--backend native]
 //!                 [--lanes N] [--queue-depth N] [--shard-bytes N] [--shard-threads N]
+//!                 [--adaptive-bits]
 //! cpcm compress   --ckpts runs/demo/raw --out runs/demo/cpcm [--mode ...]
 //!                 [--lanes N] [--queue-depth N] [--shard-bytes N] [--shard-threads N]
+//!                 [--adaptive-bits]   # per-fragment width allocation (format 5)
 //! cpcm decompress --cpcm runs/demo/cpcm --step 100 --out ck.bin [--backend ...]
 //!                 [--shard-threads N]   # 0 = auto; 1 pins the strict one-shard RSS bound
 //! cpcm verify     --ckpts runs/demo/raw --cpcm runs/demo/cpcm
@@ -166,6 +168,11 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
     // Coordinator queue depth (submission + stage queues).
     if let Some(v) = args.parsed::<u64>("queue-depth")? {
         cfg.queue_depth = v as usize;
+    }
+    // Per-fragment dynamic bit allocation (format 5); `--bits` stays the
+    // default width and the hard ceiling.
+    if args.flag("adaptive-bits") {
+        cfg.codec.adaptive_bits = true;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -532,6 +539,7 @@ mod tests {
             "1048576".into(),
             "--shard-threads".into(),
             "6".into(),
+            "--adaptive-bits".into(),
             "--verify".into(),
         ])
         .unwrap();
@@ -544,6 +552,7 @@ mod tests {
         assert_eq!(cfg.queue_depth, 3);
         assert_eq!(cfg.codec.shard_bytes, 1 << 20);
         assert_eq!(cfg.codec.shard_threads, 6);
+        assert!(cfg.codec.adaptive_bits);
         assert!(cfg.verify);
     }
 

@@ -1,0 +1,351 @@
+//! Adaptive per-fragment bit allocation (container format 5).
+//!
+//! The codec historically quantized every tensor with one global `bits`.
+//! Inshrinkerator (arXiv:2306.11800) shows tensor sensitivity shifts during
+//! training, and ExCP (arXiv:2406.11257) shows weights and momentum tolerate
+//! very different precision — so when `codec.adaptive_bits` is on, each
+//! shard fragment of each parameter set gets its own quantizer width,
+//! chosen from observed delta statistics under a global error budget.
+//!
+//! ## Error model and budget
+//!
+//! For a fragment with `n` nonzero post-prune residual values of variance
+//! `σ²`, k-means quantization at `w` bits (`2^w − 1` centers) behaves like
+//! a scalar quantizer over a spread proportional to `σ`: the expected
+//! squared error scales as `σ² / 4^w` per value, i.e.
+//!
+//! ```text
+//! err(w) ≈ n · σ² · 4^(1−w)        (width-1 error is the n·σ² anchor)
+//! ```
+//!
+//! The global budget is the modeled error of the *fixed* allocation at the
+//! configured ceiling: `B = Σ_f n_f·σ_f² · 4^(1−bits)`. Every fragment
+//! starts at 1 bit and a greedy water-filling pass repeatedly grants one
+//! more bit to the fragment with the largest error reduction
+//! (`gain(w) = n·σ²·3·4^(−w)`) until the modeled total drops to `B` or
+//! every fragment sits at the ceiling. High-variance fragments therefore
+//! climb to the ceiling while near-constant ones stay at 1–2 bits, and the
+//! adaptive container is never modeled worse than the fixed one.
+//!
+//! ## Determinism
+//!
+//! The result is a pure function of the fragment statistics and the
+//! ceiling: stats accumulate in fragment-element order as `f64`
+//! (identical for the in-memory and streaming encoders — fragments
+//! partition each tensor contiguously in shard-major order), and the heap
+//! uses a strict total order (`f64::total_cmp`, ties broken by set/fragment
+//! index), so both encode paths and every `shard_threads` width produce
+//! byte-identical allocation tables.
+//!
+//! ## Container representation
+//!
+//! The table rides in the format-5 header as `"alloc": [[w…],[w…],[w…]]` —
+//! three per-set arrays of per-fragment widths in shard-major fragment
+//! order. Widths are clamped to `1..=12` and may never exceed the header's
+//! global `bits` (the decoder rejects violations; see
+//! `parse_untrusted_header`).
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Widest width any allocation may use, mirroring the quantizer's cap.
+pub const MAX_WIDTH: u8 = 12;
+
+/// Streaming moment accumulator for one fragment of one parameter set.
+///
+/// Only nonzero values contribute — zeros are pruned/exact positions that
+/// quantize to the reserved symbol 0 at any width, so they carry no
+/// information about the width the fragment needs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FragStats {
+    n: u64,
+    sum: f64,
+    sumsq: f64,
+}
+
+impl FragStats {
+    /// Fold one post-prune (and, for moment-2, post-log) residual value.
+    pub fn add(&mut self, v: f32) {
+        if v != 0.0 {
+            let d = v as f64;
+            self.n += 1;
+            self.sum += d;
+            self.sumsq += d * d;
+        }
+    }
+
+    /// `n · σ²` — the fragment's modeled width-1 error mass (sanitized to
+    /// a finite non-negative number so the heap's total order holds).
+    fn weight(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let n = self.n as f64;
+        let mean = self.sum / n;
+        let var = (self.sumsq / n - mean * mean).max(0.0);
+        let w = n * var;
+        if w.is_finite() { w } else { 0.0 }
+    }
+}
+
+/// Scalar log-domain map shared with the codec's `maybe_log`: zeros stay
+/// exactly zero (reserved symbol), positives are floored then logged.
+pub(crate) fn log_scalar(v: f32) -> f32 {
+    if v == 0.0 { 0.0 } else { v.max(1e-30).ln() }
+}
+
+/// `4^(1−w)` — modeled per-weight error factor at width `w`.
+fn err_factor(w: u8) -> f64 {
+    4f64.powi(1 - w as i32)
+}
+
+/// Max-heap entry: the error reduction from granting `(set, frag)` its
+/// next bit. Strict total order (ties broken toward the smaller global
+/// index) keeps the allocation deterministic.
+struct Gain {
+    gain: f64,
+    set: usize,
+    frag: usize,
+}
+
+impl PartialEq for Gain {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Gain {}
+impl PartialOrd for Gain {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Gain {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.gain
+            .total_cmp(&other.gain)
+            .then_with(|| other.set.cmp(&self.set))
+            .then_with(|| other.frag.cmp(&self.frag))
+    }
+}
+
+/// The per-set, per-fragment width table carried by format-5 headers.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AllocTable {
+    /// `widths[set][fragment]`, fragments in shard-major order.
+    pub widths: [Vec<u8>; 3],
+}
+
+impl AllocTable {
+    /// Greedy water-filling allocation (see module docs): every fragment
+    /// starts at 1 bit; bits go to the largest modeled error reduction
+    /// until the total meets the fixed-`ceiling` budget.
+    pub fn allocate(stats: &[Vec<FragStats>; 3], ceiling: u8) -> AllocTable {
+        let ceiling = ceiling.clamp(1, MAX_WIDTH);
+        let nf = stats[0].len();
+        let mut widths: [Vec<u8>; 3] = std::array::from_fn(|_| vec![1u8; nf]);
+
+        let mut budget = 0.0f64;
+        let mut total = 0.0f64;
+        let mut heap = BinaryHeap::new();
+        for (k, set) in stats.iter().enumerate() {
+            for (f, st) in set.iter().enumerate() {
+                let wgt = st.weight();
+                budget += wgt * err_factor(ceiling);
+                total += wgt * err_factor(1);
+                if wgt > 0.0 && ceiling > 1 {
+                    heap.push(Gain { gain: wgt * (err_factor(1) - err_factor(2)), set: k, frag: f });
+                }
+            }
+        }
+        if !total.is_finite() || !budget.is_finite() {
+            // Degenerate statistics: fall back to the fixed allocation.
+            return AllocTable { widths: std::array::from_fn(|_| vec![ceiling; nf]) };
+        }
+
+        while total > budget {
+            let Some(g) = heap.pop() else { break };
+            let wgt = stats[g.set][g.frag].weight();
+            let w = widths[g.set][g.frag];
+            total -= wgt * (err_factor(w) - err_factor(w + 1));
+            widths[g.set][g.frag] = w + 1;
+            if w + 1 < ceiling {
+                heap.push(Gain {
+                    gain: wgt * (err_factor(w + 1) - err_factor(w + 2)),
+                    set: g.set,
+                    frag: g.frag,
+                });
+            }
+        }
+        AllocTable { widths }
+    }
+
+    /// Fragments per set (all three sets always agree).
+    pub fn n_fragments(&self) -> usize {
+        self.widths[0].len()
+    }
+
+    /// Width for `(set, fragment)`.
+    pub fn width(&self, set: usize, frag: usize) -> u8 {
+        self.widths[set][frag]
+    }
+
+    /// Header JSON: `[[w…],[w…],[w…]]`.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.widths
+                .iter()
+                .map(|ws| Json::Arr(ws.iter().map(|&w| Json::num(w as f64)).collect()))
+                .collect(),
+        )
+    }
+
+    /// Parse and validate an untrusted header table: exactly three per-set
+    /// arrays of equal length, every width an integer in `1..=min(max_bits,
+    /// 12)`.
+    pub fn from_json(j: &Json, max_bits: u8) -> Result<AllocTable> {
+        let sets = j
+            .as_arr()
+            .ok_or_else(|| Error::format("allocation table must be an array of per-set arrays"))?;
+        if sets.len() != 3 {
+            return Err(Error::format(format!(
+                "allocation table has {} per-set arrays, expected 3",
+                sets.len()
+            )));
+        }
+        let cap = max_bits.min(MAX_WIDTH);
+        let mut widths: [Vec<u8>; 3] = Default::default();
+        for (k, sj) in sets.iter().enumerate() {
+            let arr = sj.as_arr().ok_or_else(|| {
+                Error::format("allocation table set entry must be an array of widths")
+            })?;
+            let mut ws = Vec::with_capacity(arr.len());
+            for v in arr {
+                let w = v
+                    .as_u64()
+                    .ok_or_else(|| Error::format("allocation width must be an integer"))?;
+                if !(1..=cap as u64).contains(&w) {
+                    return Err(Error::format(format!(
+                        "allocation width {w} outside 1..={cap}"
+                    )));
+                }
+                ws.push(w as u8);
+            }
+            widths[k] = ws;
+        }
+        if widths[1].len() != widths[0].len() || widths[2].len() != widths[0].len() {
+            return Err(Error::format(
+                "allocation table per-set fragment counts disagree",
+            ));
+        }
+        Ok(AllocTable { widths })
+    }
+
+    /// Per-set width histogram (index = width, `[0]` unused) for metrics.
+    pub fn histogram(&self) -> [[u64; 13]; 3] {
+        let mut h = [[0u64; 13]; 3];
+        for (k, ws) in self.widths.iter().enumerate() {
+            for &w in ws {
+                h[k][(w as usize).min(12)] += 1;
+            }
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats_of(vals: &[&[f32]]) -> Vec<FragStats> {
+        vals.iter()
+            .map(|vs| {
+                let mut st = FragStats::default();
+                for &v in *vs {
+                    st.add(v);
+                }
+                st
+            })
+            .collect()
+    }
+
+    #[test]
+    fn uniform_stats_allocate_the_ceiling_everywhere() {
+        // ±1 values: exact f64 arithmetic, so the budget is met only when
+        // every fragment reaches the ceiling.
+        let per_set = stats_of(&[&[1.0, -1.0], &[1.0, -1.0]]);
+        let stats = [per_set.clone(), per_set.clone(), per_set];
+        let t = AllocTable::allocate(&stats, 5);
+        for k in 0..3 {
+            assert_eq!(t.widths[k], vec![5, 5]);
+        }
+    }
+
+    #[test]
+    fn high_variance_fragments_get_more_bits() {
+        let loud: Vec<f32> = (0..64).map(|i| (i as f32 - 31.5) / 8.0).collect();
+        let quiet: Vec<f32> = (0..4096).map(|i| 1e-6 + 1e-9 * (i % 7) as f32).collect();
+        let per_set = stats_of(&[&loud, &quiet]);
+        let stats = [per_set.clone(), per_set.clone(), per_set];
+        let t = AllocTable::allocate(&stats, 6);
+        for k in 0..3 {
+            assert!(t.widths[k][0] > t.widths[k][1], "widths {:?}", t.widths[k]);
+            assert!(t.widths[k].iter().all(|&w| (1..=6).contains(&w)));
+        }
+    }
+
+    #[test]
+    fn allocation_is_deterministic() {
+        let a: Vec<f32> = (0..100).map(|i| (i as f32).sin()).collect();
+        let b: Vec<f32> = (0..300).map(|i| 0.01 * (i as f32).cos()).collect();
+        let per_set = stats_of(&[&a, &b]);
+        let stats = [per_set.clone(), per_set.clone(), per_set];
+        assert_eq!(AllocTable::allocate(&stats, 8), AllocTable::allocate(&stats, 8));
+    }
+
+    #[test]
+    fn empty_fragments_stay_at_one_bit() {
+        let per_set = stats_of(&[&[0.0, 0.0, 0.0], &[]]);
+        let stats = [per_set.clone(), per_set.clone(), per_set];
+        let t = AllocTable::allocate(&stats, 4);
+        for k in 0..3 {
+            assert_eq!(t.widths[k], vec![1, 1]);
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_and_validation() {
+        let t = AllocTable { widths: [vec![1, 4], vec![2, 2], vec![3, 1]] };
+        let back = AllocTable::from_json(&t.to_json(), 4).unwrap();
+        assert_eq!(back, t);
+        // Width above the header ceiling is rejected.
+        assert!(AllocTable::from_json(&t.to_json(), 3).is_err());
+        // Wrong arity / shape / type are rejected.
+        assert!(AllocTable::from_json(&Json::num(3.0), 12).is_err());
+        assert!(AllocTable::from_json(&Json::Arr(vec![]), 12).is_err());
+        let ragged = Json::Arr(vec![
+            Json::Arr(vec![Json::num(1.0)]),
+            Json::Arr(vec![]),
+            Json::Arr(vec![Json::num(1.0)]),
+        ]);
+        assert!(AllocTable::from_json(&ragged, 12).is_err());
+        let zero = Json::Arr(vec![
+            Json::Arr(vec![Json::num(0.0)]),
+            Json::Arr(vec![Json::num(1.0)]),
+            Json::Arr(vec![Json::num(1.0)]),
+        ]);
+        assert!(AllocTable::from_json(&zero, 12).is_err());
+    }
+
+    #[test]
+    fn histogram_counts_every_fragment() {
+        let t = AllocTable { widths: [vec![1, 4, 4], vec![2, 2, 2], vec![12, 1, 3]] };
+        let h = t.histogram();
+        assert_eq!(h[0][4], 2);
+        assert_eq!(h[1][2], 3);
+        assert_eq!(h[2][12], 1);
+        let total: u64 = h.iter().flatten().sum();
+        assert_eq!(total, 9);
+    }
+}

@@ -80,6 +80,7 @@
 //! reconstructed checkpoint it knows the decoder will produce, so chains
 //! use reconstructed references on both sides and stay bit-identical.
 
+pub mod alloc;
 pub mod keyframe;
 mod lanes;
 pub(crate) mod sched;
@@ -219,6 +220,12 @@ pub struct CodecConfig {
     /// `~O(shard_threads · shard)` — set 1 to recover the strict
     /// one-shard-resident walk.
     pub shard_threads: usize,
+    /// Adaptive per-fragment bit allocation (container format 5): when on,
+    /// [`alloc`] picks a quantizer width per shard fragment per parameter
+    /// set from observed delta statistics under a global error budget,
+    /// with `bits` as both the default and a hard ceiling. Off (the
+    /// default) writes today's formats byte-for-byte.
+    pub adaptive_bits: bool,
 }
 
 impl Default for CodecConfig {
@@ -242,6 +249,7 @@ impl Default for CodecConfig {
             lanes: 0,
             shard_bytes: 0,
             shard_threads: 0,
+            adaptive_bits: false,
         }
     }
 }
@@ -336,7 +344,7 @@ impl CodecConfig {
 
     /// Serialize into a header fragment.
     pub(crate) fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("mode", Json::str(self.mode.as_str())),
             ("bits", Json::num(self.bits as f64)),
             ("window", Json::num(self.window as f64)),
@@ -356,7 +364,13 @@ impl CodecConfig {
             ("quant_sample_cap", Json::num(self.quant_sample_cap as f64)),
             ("lanes", Json::num(self.lanes as f64)),
             ("shard_bytes", Json::num(self.shard_bytes as f64)),
-        ])
+        ];
+        // Only serialized when on: absent ⇔ false keeps every header the
+        // codec wrote before adaptive allocation existed byte-identical.
+        if self.adaptive_bits {
+            pairs.push(("adaptive_bits", Json::Bool(true)));
+        }
+        Json::obj(pairs)
     }
 
     fn from_json(j: &Json) -> Result<Self> {
@@ -388,6 +402,8 @@ impl CodecConfig {
             // Scheduling knob, never serialized into headers (decoders
             // pick their own parallelism; bytes are schedule-invariant).
             shard_threads: 0,
+            // Absent in pre-format-5 headers (fixed global width).
+            adaptive_bits: j.get("adaptive_bits").and_then(|v| v.as_bool()).unwrap_or(false),
         })
     }
 }
@@ -422,6 +438,10 @@ pub struct EncodeStats {
     /// High-water mark of concurrently encoding shards (scheduler
     /// occupancy; 0 outside the shard scheduler).
     pub shards_in_flight_max: usize,
+    /// Per-set histogram of adaptive quantizer widths
+    /// (`[set][width]`, width ∈ 1..=12; all zeros when `adaptive_bits`
+    /// is off).
+    pub alloc_histogram: [[u64; 13]; 3],
 }
 
 impl EncodeStats {
@@ -469,8 +489,8 @@ pub struct PreparedEncode {
     pub raw_bytes: usize,
     /// Fully-assembled container header.
     header: Json,
-    /// Container format this prepare targets (2, or 3 when
-    /// `CodecConfig::shard_bytes` > 0).
+    /// Container format this prepare targets: 2, 3 when
+    /// `CodecConfig::shard_bytes` > 0, or 5 when `adaptive_bits` is on.
     format: u64,
     /// Per-shard coding plans (a single whole-checkpoint shard for
     /// format 2).
@@ -482,12 +502,14 @@ pub struct PreparedEncode {
     centers: [Vec<Vec<f32>>; 3],
     /// Resolved lane count recorded in the header.
     lanes: usize,
+    /// Adaptive per-fragment widths (format 5 only).
+    alloc: Option<alloc::AllocTable>,
     weight_density: f64,
     momentum_density: f64,
 }
 
 impl PreparedEncode {
-    /// Container format this prepare will serialize as (2 or 3).
+    /// Container format this prepare will serialize as (2, 3 or 5).
     pub fn container_format(&self) -> u64 {
         self.format
     }
@@ -812,10 +834,10 @@ impl Codec {
         ))
     }
 
-    /// Shared header assembly. `shard` carries format-3's
-    /// `(shard_values, n_shards)`; both the prepare path and the streaming
-    /// encoder build headers through here, so the two paths stay
-    /// byte-identical.
+    /// Shared header assembly. `shard` carries format-3/5's
+    /// `(shard_values, n_shards)` and `alloc` format-5's per-fragment
+    /// width table; both the prepare path and the streaming encoder build
+    /// headers through here, so the two paths stay byte-identical.
     #[allow(clippy::too_many_arguments)]
     fn make_header(
         &self,
@@ -829,6 +851,7 @@ impl Codec {
         momentum_density: f64,
         cfg_json: Json,
         shard: Option<(usize, usize)>,
+        alloc: Option<&alloc::AllocTable>,
     ) -> Json {
         let mut pairs = vec![
             ("format", Json::num(format as f64)),
@@ -851,6 +874,9 @@ impl Codec {
         if let Some((shard_values, n_shards)) = shard {
             pairs.push(("shard_values", Json::num(shard_values as f64)));
             pairs.push(("n_shards", Json::num(n_shards as f64)));
+        }
+        if let Some(table) = alloc {
+            pairs.push(("alloc", table.to_json()));
         }
         Json::obj(pairs)
     }
@@ -928,8 +954,17 @@ impl Codec {
             }
         }
         // Shard partition: the whole checkpoint as one shard for format 2,
-        // fixed-budget shards for format 3.
-        let format: u64 = if cfg.sharded() { 3 } else { 2 };
+        // fixed-budget shards for format 3. Adaptive allocation bumps to
+        // format 5 (format-3 layout + header width table) and works
+        // sharded or not — unsharded it runs on a single whole-checkpoint
+        // shard.
+        let format: u64 = if cfg.adaptive_bits {
+            5
+        } else if cfg.sharded() {
+            3
+        } else {
+            2
+        };
         let layout = if cfg.sharded() {
             ShardLayout::new(counts.clone(), cfg.shard_values())?
         } else {
@@ -942,14 +977,39 @@ impl Codec {
         let extractors = self.build_extractors_from_sets(sets[0])?;
         self.check_ref_maps(prev_syms, &counts)?;
 
+        // Adaptive allocation: fold per-fragment residual statistics (the
+        // same post-prune, post-log values the quantizer will see, in the
+        // same order the streaming encoder's sequential pass visits them)
+        // and water-fill widths under the fixed-`bits` error budget.
+        let alloc_table = if cfg.adaptive_bits {
+            let mut stats: [Vec<alloc::FragStats>; 3] =
+                std::array::from_fn(|_| vec![alloc::FragStats::default(); frags.len()]);
+            for (k, set) in sets.iter().enumerate() {
+                let log_domain = k == 2 && cfg.log_moment2;
+                let data_refs: Vec<&[f32]> = set.iter().map(|e| e.tensor.data()).collect();
+                for (fi, f) in frags.iter().enumerate() {
+                    let data = &data_refs[f.tensor][f.start..f.start + f.len];
+                    for &v in data {
+                        stats[k][fi].add(if log_domain { alloc::log_scalar(v) } else { v });
+                    }
+                }
+            }
+            Some(alloc::AllocTable::allocate(&stats, cfg.bits))
+        } else {
+            None
+        };
+
         // Quantize every (set, fragment) on the pool (fragments are whole
         // tensors for format 2 — byte-identical to the per-tensor path).
         let mut qtasks: Vec<Task<Result<QuantOut>>> = Vec::new();
         for (k, set) in sets.iter().enumerate() {
             let log_domain = k == 2 && cfg.log_moment2;
-            let qcfg = cfg.quant_cfg();
             let data_refs: Vec<&[f32]> = set.iter().map(|e| e.tensor.data()).collect();
-            for f in &frags {
+            for (fi, f) in frags.iter().enumerate() {
+                let qcfg = match &alloc_table {
+                    Some(t) => QuantConfig { bits: t.width(k, fi), ..cfg.quant_cfg() },
+                    None => cfg.quant_cfg(),
+                };
                 // Copy the tensor slice reference out of `data_refs` so the
                 // task's borrow is tied to the residual, not the local Vec.
                 let tensor_data: &[f32] = data_refs[f.tensor];
@@ -1017,7 +1077,8 @@ impl Codec {
             front.weight_density,
             front.momentum_density,
             hdr_cfg.to_json(),
-            (format == 3).then(|| (layout.shard_values(), layout.n_shards())),
+            matches!(format, 3 | 5).then(|| (layout.shard_values(), layout.n_shards())),
+            alloc_table.as_ref(),
         );
 
         Ok(PreparedEncode {
@@ -1032,6 +1093,7 @@ impl Codec {
             extractors,
             centers,
             lanes,
+            alloc: alloc_table,
             weight_density: front.weight_density,
             momentum_density: front.momentum_density,
         })
@@ -1068,6 +1130,9 @@ impl Codec {
         );
         stats.shard_queue_wait_seconds = sched.queue_wait_seconds;
         stats.shards_in_flight_max = sched.max_in_flight;
+        if let Some(table) = &prep.alloc {
+            stats.alloc_histogram = table.histogram();
+        }
         Ok((bytes, stats))
     }
 
@@ -1087,7 +1152,7 @@ impl Codec {
         acc: &mut SetStatsAcc,
     ) -> Result<SchedStats> {
         let lanes = prep.lanes;
-        let v3 = prep.format == 3;
+        let v3 = matches!(prep.format, 3 | 5);
         let n_shards = prep.shards.len();
         let n_blobs: usize = prep
             .shards
@@ -1457,8 +1522,10 @@ impl Codec {
         let codec = Codec::new(hdr.cfg.clone(), backend.clone());
         codec.check_ref_maps(prev, &hdr.counts)?;
 
-        // Format 3: shard-by-shard restore with its own blob layout.
-        if hdr.format == 3 {
+        // Formats 3 and 5: shard-by-shard restore with the v3 blob layout
+        // (format 5 only adds the header allocation table — center blobs
+        // are self-describing, so fragment decode is width-agnostic).
+        if matches!(hdr.format, 3 | 5) {
             let geom = parse_v3_geometry(&hdr, &container, bytes)?;
             let (vals, syms) = codec.decode_v3(&container, &geom, &hdr.shapes, prev)?;
             let DecodeHeader { step, names, shapes, .. } = hdr;
@@ -1780,6 +1847,9 @@ impl Codec {
 
         let mut hdr_cfg = self.cfg.clone();
         hdr_cfg.lanes = 1;
+        // The legacy writer never allocates adaptively; keep its headers
+        // free of the flag regardless of the config.
+        hdr_cfg.adaptive_bits = false;
         container.header = self.make_header(
             1,
             current.step,
@@ -1790,6 +1860,7 @@ impl Codec {
             front.weight_density,
             front.momentum_density,
             hdr_cfg.to_json(),
+            None,
             None,
         );
         let bytes = container.to_bytes();
@@ -2033,6 +2104,9 @@ pub(crate) struct DecodeHeader {
     pub(crate) names: Vec<String>,
     pub(crate) shapes: Vec<Vec<usize>>,
     pub(crate) counts: Vec<usize>,
+    /// Format-5 per-fragment width table (present ⇔ format 5; widths
+    /// already validated against `1..=min(cfg.bits, 12)`).
+    pub(crate) alloc: Option<alloc::AllocTable>,
 }
 
 /// Parse and cap-check a container header: format range, codec dimension
@@ -2048,7 +2122,7 @@ pub(crate) fn parse_untrusted_header(
     backend: &Backend,
 ) -> Result<DecodeHeader> {
     let format = h.get("format").and_then(|v| v.as_u64()).unwrap_or(1);
-    if !(1..=4).contains(&format) {
+    if !(1..=5).contains(&format) {
         return Err(Error::format(format!("unsupported container format {format}")));
     }
     let cfg = CodecConfig::from_json(h.req("codec")?)?;
@@ -2100,7 +2174,31 @@ pub(crate) fn parse_untrusted_header(
             cfg.lanes
         )));
     }
-    Ok(DecodeHeader { format, cfg, step, ref_step, had_prev, names, shapes, counts })
+    // Allocation table presence is tied to the format: format 5 requires
+    // one, everything else must not carry one (a forged table on a
+    // fixed-width container would silently be ignored otherwise). Note the
+    // codec flag itself is NOT cross-checked — format-4 keyframes embed
+    // the rebased container's codec JSON verbatim, so `adaptive_bits` may
+    // legitimately appear on a non-5 header.
+    let alloc = match h.get("alloc") {
+        Some(table_json) => {
+            if format != 5 {
+                return Err(Error::format(format!(
+                    "allocation table requires container format 5 (header declares {format})"
+                )));
+            }
+            Some(alloc::AllocTable::from_json(table_json, cfg.bits)?)
+        }
+        None => {
+            if format == 5 {
+                return Err(Error::format(
+                    "format-5 container is missing its allocation table",
+                ));
+            }
+            None
+        }
+    };
+    Ok(DecodeHeader { format, cfg, step, ref_step, had_prev, names, shapes, counts, alloc })
 }
 
 /// The chain-input rule every decode path enforces identically, stated
@@ -2190,11 +2288,24 @@ pub(crate) fn parse_v3_geometry(
         (0..layout.n_shards()).map(|s| ShardPlan::new(&layout, s, lanes)).collect();
     let index = shard::index_from_bytes(container.blob(expected_blobs - 1)?, plans.len())?;
 
+    // Format 5: the allocation table must cover exactly this layout's
+    // fragments (a table from some other geometry must not slide through).
+    if let Some(table) = &hdr.alloc {
+        let total_frags: usize = plans.iter().map(|sp| sp.fragments().len()).sum();
+        if table.n_fragments() != total_frags {
+            return Err(Error::format(format!(
+                "allocation table lists {} fragments, shard layout implies {total_frags}",
+                table.n_fragments()
+            )));
+        }
+    }
+
     // Header length from the raw framing (byte-exact, unlike
     // re-serializing the parsed header).
     let header_len = u32::from_le_bytes(raw[8..12].try_into().unwrap()) as u64;
     let mut offset = 8 + 4 + header_len + 4;
     let mut cursor = 0usize;
+    let mut gfrag = 0usize;
     let mut cursors = Vec::with_capacity(plans.len());
     for (s, (sp, e)) in plans.iter().zip(&index).enumerate() {
         if e.offset != offset {
@@ -2209,6 +2320,32 @@ pub(crate) fn parse_v3_geometry(
                 "shard {s} index declares {} blobs, layout implies {n}",
                 e.n_blobs
             )));
+        }
+        // Format 5: each fragment's center table must fit its declared
+        // width — a center blob larger than `2^w − 1` entries means the
+        // table (or the blob) was tampered with.
+        if let Some(table) = &hdr.alloc {
+            let nf = sp.fragments().len();
+            for k in 0..3 {
+                for fi in 0..nf {
+                    let blob = container.blob(cursor + k * (nf + lanes) + fi)?;
+                    if blob.len() < 2 {
+                        return Err(Error::format(format!(
+                            "shard {s} set {k} fragment {fi}: center blob too short"
+                        )));
+                    }
+                    let declared = u16::from_le_bytes([blob[0], blob[1]]) as usize;
+                    let w = table.width(k, gfrag + fi);
+                    let max_centers = (1usize << w) - 1;
+                    if declared > max_centers {
+                        return Err(Error::format(format!(
+                            "shard {s} set {k} fragment {fi}: {declared} centers exceed \
+                             allocation width {w} (max {max_centers})"
+                        )));
+                    }
+                }
+            }
+            gfrag += nf;
         }
         cursors.push(cursor);
         for b in &container.blobs[cursor..cursor + n] {
@@ -2240,10 +2377,10 @@ fn maybe_log(values: &[f32], log_domain: bool) -> Vec<f32> {
     if !log_domain {
         return values.to_vec();
     }
-    values
-        .iter()
-        .map(|&v| if v == 0.0 { 0.0 } else { v.max(1e-30).ln() })
-        .collect()
+    // One scalar map shared with the allocator's statistics pass
+    // (`alloc::log_scalar`), so allocation decisions and quantizer inputs
+    // can never drift bitwise.
+    values.iter().map(|&v| alloc::log_scalar(v)).collect()
 }
 
 #[cfg(test)]

@@ -47,6 +47,7 @@
 //! shard index it entropy-decodes only the shards a tensor intersects,
 //! instead of the whole container.
 
+use super::alloc::{self, AllocTable, FragStats};
 use super::shard::{index_from_bytes, index_to_bytes, ShardIndexBuilder};
 use super::syms::{SymbolMapFileWriter, SymbolSink, SymbolSource};
 use super::{
@@ -59,7 +60,7 @@ use crate::codec::EncodeStats;
 use crate::container::{centers_from_bytes, Container, ContainerFileReader, ContainerStreamWriter};
 use crate::lstm::Backend;
 use crate::prune::{self, PruneConfig, PruneStats};
-use crate::quant::{self, Quantized};
+use crate::quant::{self, QuantConfig, Quantized};
 use crate::tensor::{rows_cols_of, Tensor};
 use crate::util::pool::{self, Task};
 use crate::util::stats;
@@ -197,6 +198,10 @@ struct PruneScalars {
     /// `β · mean(|v_t|)` per tensor (Eq. 5).
     r_o: Vec<f64>,
     stats: PruneStats,
+    /// Adaptive-allocation moments per (set, shard-major fragment) —
+    /// accumulated in this sequential pass so the allocation (and hence
+    /// every output byte) is independent of the scheduler's pool width.
+    frag_stats: Option<[Vec<FragStats>; 3]>,
 }
 
 /// Encode `current` straight from a [`ShardSource`] into `out` as a
@@ -260,15 +265,33 @@ pub fn encode_streaming<W: Write>(
     };
 
     // Pass A — per-tensor pruning scalars and the density counters the
-    // header carries. One tensor resident at a time.
-    let scalars = prune_scalars(current, reference.as_deref_mut(), &counts, &pcfg)?;
+    // header carries; with adaptive allocation on, also the per-fragment
+    // moments (sequentially, so pool width can never change the widths).
+    // One tensor resident at a time.
+    let scalars = prune_scalars(
+        current,
+        reference.as_deref_mut(),
+        &counts,
+        &pcfg,
+        cfg.adaptive_bits.then(|| (plans.as_slice(), cfg.log_moment2)),
+    )?;
+    let alloc_table: Option<AllocTable> =
+        scalars.frag_stats.as_ref().map(|fs| AllocTable::allocate(fs, cfg.bits));
+    // Fragment-cursor prefix sums into the shard-major width table.
+    let mut frag_offsets = Vec::with_capacity(plans.len());
+    let mut fc = 0usize;
+    for sp in &plans {
+        frag_offsets.push(fc);
+        fc += sp.fragments().len();
+    }
 
     // Header (identical construction to the prepare path).
+    let format: u64 = if cfg.adaptive_bits { 5 } else { 3 };
     let mut hdr_cfg = cfg.clone();
     hdr_cfg.lanes = lanes;
     let raw_bytes = 3 * 4 * total;
     let header = codec.make_header(
-        3,
+        format,
         current.step(),
         reference.as_deref().map(|r| r.step()),
         prev_syms.is_some(),
@@ -278,6 +301,7 @@ pub fn encode_streaming<W: Write>(
         scalars.stats.momentum_density(),
         hdr_cfg.to_json(),
         Some((layout.shard_values(), layout.n_shards())),
+        alloc_table.as_ref(),
     );
 
     // Pass B — shards flow through the work-stealing scheduler
@@ -321,8 +345,14 @@ pub fn encode_streaming<W: Write>(
         },
         |s, job: ShardJob| {
             let sp = &plans[s];
-            let (frag_syms, frag_centers) =
-                quantize_shard_raw(codec, sp, job.raw, &pcfg, &scalars)?;
+            let (frag_syms, frag_centers) = quantize_shard_raw(
+                codec,
+                sp,
+                job.raw,
+                &pcfg,
+                &scalars,
+                alloc_table.as_ref().map(|t| (t, frag_offsets[s])),
+            )?;
             let syms_refs: [Vec<&[u16]>; 3] =
                 std::array::from_fn(|k| frag_syms[k].iter().map(|v| v.as_slice()).collect());
             codec.encode_shard_blobs(
@@ -357,17 +387,26 @@ pub fn encode_streaming<W: Write>(
     );
     stats.shard_queue_wait_seconds = sched.queue_wait_seconds;
     stats.shards_in_flight_max = sched.max_in_flight;
+    if let Some(table) = &alloc_table {
+        stats.alloc_histogram = table.histogram();
+    }
     Ok(stats)
 }
 
 /// Pass A of the streaming encode: per-tensor `median(|W|)` and momentum
 /// thresholds plus the aggregate keep counters — the tensor-global inputs
-/// of Eq. 4–5 that fragments cannot compute locally.
+/// of Eq. 4–5 that fragments cannot compute locally. With `alloc_ctx`
+/// (shard plans + the log-moment2 flag), also folds each fragment's
+/// post-prune residual moments for the adaptive allocator: the exact
+/// values `quantize_shard_raw` will quantize, visited in the exact
+/// fragment-element order of the in-memory prepare path, so both encoders
+/// derive bit-identical width tables.
 fn prune_scalars(
     current: &mut dyn ShardSource,
     mut reference: Option<&mut dyn ShardSource>,
     counts: &[usize],
     pcfg: &PruneConfig,
+    alloc_ctx: Option<(&[ShardPlan], bool)>,
 ) -> Result<PruneScalars> {
     let n = counts.len();
     let total: usize = counts.iter().sum();
@@ -375,8 +414,26 @@ fn prune_scalars(
         med: vec![0.0; n],
         r_o: vec![0.0; n],
         stats: PruneStats::default(),
+        frag_stats: None,
     };
-    if !pcfg.enabled {
+    // Per-tensor fragment spans `(global index, start, len)` in shard-major
+    // order. Fragments partition every tensor contiguously, so walking a
+    // tensor span-by-span visits each element exactly once, in order.
+    let mut frag_map: Vec<Vec<(usize, usize, usize)>> = Vec::new();
+    let mut log_m2 = false;
+    if let Some((plans, lm2)) = alloc_ctx {
+        log_m2 = lm2;
+        frag_map = vec![Vec::new(); n];
+        let mut g = 0usize;
+        for sp in plans {
+            for f in sp.fragments() {
+                frag_map[f.tensor].push((g, f.start, f.len));
+                g += 1;
+            }
+        }
+        out.frag_stats = Some(std::array::from_fn(|_| vec![FragStats::default(); g]));
+    }
+    if !pcfg.enabled && out.frag_stats.is_none() {
         out.stats = PruneStats { total, kept_weights: total, kept_momentum: total };
         return Ok(out);
     }
@@ -385,8 +442,10 @@ fn prune_scalars(
         let w = read_checked(current, 0, ti, 0..c)?;
         let m1 = read_checked(current, 1, ti, 0..c)?;
         let m2 = read_checked(current, 2, ti, 0..c)?;
-        out.med[ti] = stats::median_abs(&w);
-        out.r_o[ti] = prune::momentum_threshold(&m1, pcfg);
+        if pcfg.enabled {
+            out.med[ti] = stats::median_abs(&w);
+            out.r_o[ti] = prune::momentum_threshold(&m1, pcfg);
+        }
         let dw: Vec<f32> = match reference.as_deref_mut() {
             Some(r) => {
                 let rw = read_checked(r, 0, ti, 0..c)?;
@@ -395,15 +454,35 @@ fn prune_scalars(
             None => w,
         };
         out.stats.total += c;
-        for j in 0..c {
-            let kw = prune::keep_weight(dw[j], out.med[ti], m2[j], pcfg);
-            if kw {
-                out.stats.kept_weights += 1;
-            }
-            if prune::keep_momentum(m1[j], kw, out.r_o[ti]) {
-                out.stats.kept_momentum += 1;
+        let whole = [(usize::MAX, 0usize, c)];
+        let spans: &[(usize, usize, usize)] =
+            if frag_map.is_empty() { &whole } else { &frag_map[ti] };
+        for &(g, start, len) in spans {
+            for j in start..start + len {
+                let (kw, km) = if pcfg.enabled {
+                    let kw = prune::keep_weight(dw[j], out.med[ti], m2[j], pcfg);
+                    let km = prune::keep_momentum(m1[j], kw, out.r_o[ti]);
+                    if kw {
+                        out.stats.kept_weights += 1;
+                    }
+                    if km {
+                        out.stats.kept_momentum += 1;
+                    }
+                    (kw, km)
+                } else {
+                    (true, true)
+                };
+                if let Some(fs) = out.frag_stats.as_mut() {
+                    fs[0][g].add(if kw { dw[j] } else { 0.0 });
+                    fs[1][g].add(if km { m1[j] } else { 0.0 });
+                    let m2v = if km { m2[j] } else { 0.0 };
+                    fs[2][g].add(if log_m2 { alloc::log_scalar(m2v) } else { m2v });
+                }
             }
         }
+    }
+    if !pcfg.enabled {
+        out.stats = PruneStats { total, kept_weights: total, kept_momentum: total };
     }
     Ok(out)
 }
@@ -456,11 +535,18 @@ fn quantize_shard_raw(
     raw: Vec<FragRaw>,
     pcfg: &PruneConfig,
     scalars: &PruneScalars,
+    alloc: Option<(&AllocTable, usize)>,
 ) -> Result<([Vec<Vec<u16>>; 3], [Vec<Vec<f32>>; 3])> {
     let cfg = codec.cfg();
     let qcfg = cfg.quant_cfg();
     let mut quantized: [Vec<Quantized>; 3] = Default::default();
-    for (f, fr) in sp.fragments().iter().zip(raw) {
+    for (fi, (f, fr)) in sp.fragments().iter().zip(raw).enumerate() {
+        // Adaptive widths: `alloc` carries the header table plus this
+        // shard's global fragment offset into it.
+        let set_qcfg = |k: usize| match alloc {
+            Some((t, off)) => QuantConfig { bits: t.width(k, off + fi), ..qcfg },
+            None => qcfg,
+        };
         let FragRaw { wv, rw, mut m1, mut m2 } = fr;
         let mut dw: Vec<f32> = match rw {
             Some(rw) => wv.iter().zip(&rw).map(|(&a, &b)| a - b).collect(),
@@ -479,10 +565,10 @@ fn quantize_shard_raw(
                 }
             }
         }
-        quantized[0].push(quant::quantize(&dw, &qcfg)?);
-        quantized[1].push(quant::quantize(&m1, &qcfg)?);
+        quantized[0].push(quant::quantize(&dw, &set_qcfg(0))?);
+        quantized[1].push(quant::quantize(&m1, &set_qcfg(1))?);
         let m2v = maybe_log(&m2, cfg.log_moment2);
-        quantized[2].push(quant::quantize(&m2v, &qcfg)?);
+        quantized[2].push(quant::quantize(&m2v, &set_qcfg(2))?);
     }
     let mut syms: [Vec<Vec<u16>>; 3] = Default::default();
     let mut centers: [Vec<Vec<f32>>; 3] = Default::default();
@@ -512,9 +598,9 @@ pub fn decode_weight_tensor(
     // Same untrusted-header validation as the full decoder (shared helper
     // — hardening cannot drift between the two read paths).
     let hdr = parse_untrusted_header(&container.header, bytes.len(), backend)?;
-    if hdr.format != 3 {
+    if !matches!(hdr.format, 3 | 5) {
         return Err(Error::format(format!(
-            "per-tensor random access needs a format-3 container (got {})",
+            "per-tensor random access needs a format-3/5 container (got {})",
             hdr.format
         )));
     }
@@ -672,9 +758,9 @@ pub fn decode_streaming_with(
     shard_threads: usize,
 ) -> Result<StreamRestoreStats> {
     let hdr = parse_untrusted_header(container.header(), container.file_len() as usize, backend)?;
-    if hdr.format != 3 {
+    if !matches!(hdr.format, 3 | 5) {
         return Err(Error::format(format!(
-            "streaming restore needs a format-3 container (got {})",
+            "streaming restore needs a format-3/5 container (got {})",
             hdr.format
         )));
     }
@@ -766,6 +852,23 @@ pub fn decode_streaming_with(
     // scheduler width, so peak RSS stays ~O(shard_threads · shard).
     let plans: Vec<ShardPlan> =
         (0..n_shards).map(|s| ShardPlan::new(&layout, s, lanes)).collect();
+    // Format 5: the allocation table must cover exactly this layout's
+    // fragments (mirror of the whole-buffer `parse_v3_geometry` check);
+    // the per-fragment centers-vs-width checks run in the prefetch below.
+    let mut frag_offsets = Vec::with_capacity(plans.len());
+    let mut fc = 0usize;
+    for sp in &plans {
+        frag_offsets.push(fc);
+        fc += sp.fragments().len();
+    }
+    if let Some(table) = &hdr.alloc {
+        if table.n_fragments() != fc {
+            return Err(Error::format(format!(
+                "allocation table lists {} fragments, shard layout implies {fc}",
+                table.n_fragments()
+            )));
+        }
+    }
     let threads = codec.cfg().effective_shard_threads();
 
     struct DecodeJob {
@@ -811,6 +914,31 @@ pub fn decode_streaming_with(
             }
             if ib.finish().crc32 != e.crc32 {
                 return Err(Error::format(format!("shard {s} CRC mismatch in shard index")));
+            }
+            // Format 5: each fragment's center table must fit its declared
+            // allocation width (same check as `parse_v3_geometry`, applied
+            // incrementally to the shard just read).
+            if let Some(table) = &hdr.alloc {
+                let nf = sp.fragments().len();
+                for k in 0..3 {
+                    for fi in 0..nf {
+                        let blob = &blobs[k * (nf + lanes) + fi];
+                        if blob.len() < 2 {
+                            return Err(Error::format(format!(
+                                "shard {s} set {k} fragment {fi}: center blob too short"
+                            )));
+                        }
+                        let declared = u16::from_le_bytes([blob[0], blob[1]]) as usize;
+                        let w = table.width(k, frag_offsets[s] + fi);
+                        let max_centers = (1usize << w) - 1;
+                        if declared > max_centers {
+                            return Err(Error::format(format!(
+                                "shard {s} set {k} fragment {fi}: {declared} centers \
+                                 exceed allocation width {w} (max {max_centers})"
+                            )));
+                        }
+                    }
+                }
             }
             let window = codec.cfg().window;
             let ref_views = match prev_syms.as_deref_mut() {

@@ -165,6 +165,7 @@ impl ExperimentConfig {
                     ("lanes", Json::num(self.codec.lanes as f64)),
                     ("shard_bytes", Json::num(self.codec.shard_bytes as f64)),
                     ("shard_threads", Json::num(self.codec.shard_threads as f64)),
+                    ("adaptive_bits", Json::Bool(self.codec.adaptive_bits)),
                 ]),
             ),
         ])
@@ -282,6 +283,11 @@ fn apply_codec(c: &mut CodecConfig, j: &Json) -> Result<()> {
             // Shard-scheduler parallelism (and streaming look-ahead);
             // 0 = auto (available hardware threads). Never affects bytes.
             "shard_threads" => c.shard_threads = req_u64(val)? as usize,
+            // Per-fragment dynamic bit allocation (format 5); the global
+            // `bits` stays the default width and the hard ceiling.
+            "adaptive_bits" => {
+                c.adaptive_bits = val.as_bool().ok_or_else(|| Error::config("bool expected"))?
+            }
             other => return Err(Error::config(format!("unknown codec key '{other}'"))),
         }
     }

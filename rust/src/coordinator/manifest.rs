@@ -205,15 +205,15 @@ impl ChainManifest {
         Ok(chain)
     }
 
-    /// True when every step of `step`'s reference ancestry is a format-3
-    /// (sharded) container — the precondition for the shard-by-shard
-    /// on-disk restore of [`crate::coordinator::restore_step_to_file`].
+    /// True when every step of `step`'s reference ancestry is a sharded
+    /// container (format 3, or its adaptive-width sibling 5) — the
+    /// precondition for the shard-by-shard on-disk restore of
+    /// [`crate::coordinator::restore_step_to_file`].
     /// Errors if `step` or a parent is missing from the manifest.
     pub fn streaming_restorable(&self, step: u64) -> Result<bool> {
-        Ok(self
-            .ancestry(step)?
-            .iter()
-            .all(|s| self.entries.get(s).map(|e| e.format == 3).unwrap_or(false)))
+        Ok(self.ancestry(step)?.iter().all(|s| {
+            self.entries.get(s).map(|e| matches!(e.format, 3 | 5)).unwrap_or(false)
+        }))
     }
 
     /// Serialize to the version-2 JSON document.

@@ -456,6 +456,15 @@ fn encode_loop(
         // how many ran at once (the occupancy high-water mark).
         metrics.time("shard_queue_wait", stats.shard_queue_wait_seconds);
         metrics.gauge_max("shard_occupancy", stats.shards_in_flight_max as f64);
+        // Adaptive allocation: per-set width histograms (format 5 only —
+        // the histogram is all-zero otherwise, so no counters are emitted).
+        for (k, hist) in stats.alloc_histogram.iter().enumerate() {
+            for (w, &n) in hist.iter().enumerate() {
+                if n > 0 {
+                    metrics.count(&format!("alloc_bits_set{k}_w{w:02}"), n);
+                }
+            }
+        }
         stats.encode_seconds += job.prep_seconds;
 
         let t0 = Instant::now();
@@ -848,7 +857,8 @@ fn restore_chain_streaming(
 }
 
 /// Restore ONE weight tensor of `step` — the per-tensor random-access
-/// path. When the manifest records `step`'s container as format 3, only
+/// path. When the manifest records `step`'s container as format 3 (or its
+/// adaptive-width sibling, format 5), only
 /// the shards `name` intersects are entropy-decoded
 /// ([`crate::codec::sharded::decode_weight_tensor`]); the reference
 /// ancestry *up to the parent* is still decoded in full (it is the coding
@@ -864,7 +874,7 @@ pub fn restore_tensor(
     let manifest = ChainManifest::load(dir)?;
     let chain = manifest.ancestry(step)?;
     let entry = manifest.entry(step).expect("ancestry contains its target");
-    if entry.format != 3 {
+    if !matches!(entry.format, 3 | 5) {
         let ck = decode_ancestry(&manifest, dir, backend, step, &chain)?
             .expect("ancestry is never empty")
             .0;

@@ -250,6 +250,106 @@ fn shard_index_corruptions_error_cleanly() {
 }
 
 #[test]
+fn tampered_allocation_tables_error_cleanly() {
+    // Format-5 defense layer: the per-fragment width table is untrusted
+    // header input and every inconsistency must come back as a named
+    // `Error` before any width reaches a shift or an allocation.
+    let codec = Codec::new(
+        CodecConfig { adaptive_bits: true, ..cfg(12 * 12) },
+        Backend::Native,
+    );
+    let ck = Checkpoint::synthetic(10, &layers(), 5);
+    let bytes = codec.encode(&ck, None, None).unwrap().bytes;
+    let decode = |b: &[u8]| Codec::decode(&Backend::Native, b, None, None);
+    let mutate_alloc = |f: &mut dyn FnMut(&mut Vec<Json>)| {
+        with_header(&bytes, |h| {
+            if let Json::Obj(map) = h {
+                if let Some(Json::Arr(sets)) = map.get_mut("alloc") {
+                    for set in sets.iter_mut() {
+                        if let Json::Arr(widths) = set {
+                            f(widths);
+                        }
+                    }
+                }
+            }
+        })
+    };
+
+    // Sanity: the untampered container decodes.
+    assert!(decode(&bytes).is_ok());
+
+    // Forged widths: 0, past the global ceiling (cfg.bits = 3), past the
+    // absolute cap of 12.
+    for forged in [0.0, 4.0, 13.0, 200.0] {
+        let bad = mutate_alloc(&mut |widths| {
+            widths[0] = Json::num(forged);
+        });
+        let err = decode(&bad).unwrap_err();
+        assert!(format!("{err}").contains("alloc"), "width {forged}: {err}");
+    }
+
+    // Width 1 under a multi-center blob: the cross-check between the
+    // table and the self-describing center tables must fire.
+    let bad = mutate_alloc(&mut |widths| {
+        for w in widths.iter_mut() {
+            *w = Json::num(1.0);
+        }
+    });
+    let err = decode(&bad).unwrap_err();
+    assert!(format!("{err}").contains("exceed"), "{err}");
+
+    // Table/fragment count mismatch: one set short (unequal arrays), and
+    // all sets short (consistent table, wrong total).
+    let mut first = true;
+    let bad = mutate_alloc(&mut |widths| {
+        if first {
+            widths.pop();
+            first = false;
+        }
+    });
+    assert!(decode(&bad).is_err(), "unequal per-set width arrays accepted");
+    let bad = mutate_alloc(&mut |widths| {
+        widths.pop();
+    });
+    let err = decode(&bad).unwrap_err();
+    assert!(format!("{err}").contains("fragments"), "{err}");
+    // The random-access path validates the same table.
+    assert!(
+        sharded::decode_weight_tensor(&Backend::Native, &bad, "a.w", None, None).is_err()
+    );
+
+    // Non-numeric / non-array shapes.
+    let bad = with_header(&bytes, |h| set_header_key(h, "alloc", Json::str("x")));
+    assert!(decode(&bad).is_err());
+    let bad = with_header(&bytes, |h| set_header_key(h, "alloc", Json::Arr(vec![])));
+    assert!(decode(&bad).is_err());
+
+    // A format-5 container stripped of its table, and a fixed-width
+    // format-3 container with a forged table: both inconsistent.
+    let bad = with_header(&bytes, |h| {
+        if let Json::Obj(map) = h {
+            map.remove("alloc");
+        }
+    });
+    let err = decode(&bad).unwrap_err();
+    assert!(format!("{err}").contains("missing"), "{err}");
+    let fixed = encoded(12 * 12);
+    let bad = with_header(&fixed, |h| {
+        set_header_key(
+            h,
+            "alloc",
+            Json::Arr(vec![
+                Json::Arr(vec![Json::num(2.0)]),
+                Json::Arr(vec![Json::num(2.0)]),
+                Json::Arr(vec![Json::num(2.0)]),
+            ]),
+        )
+    });
+    let err = decode(&bad).unwrap_err();
+    assert!(format!("{err}").contains("format 5"), "{err}");
+}
+
+#[test]
 fn oversized_center_tables_error() {
     // A centers blob whose declared count disagrees with its length.
     let bytes = encoded(0);

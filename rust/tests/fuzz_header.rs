@@ -1,0 +1,260 @@
+//! Bounded fuzz of the container decode surface: `Container::from_bytes`,
+//! the untrusted-header validation behind `Codec::decode`
+//! (`parse_untrusted_header`), and the v3/v5 shard-index reader behind
+//! `sharded::decode_weight_tensor` — every input must come back as `Ok`
+//! or `Err`, never a panic, a hang, or an allocation the input length
+//! does not imply. Same idiom as `tests/fuzz_manifest.rs`: a
+//! deterministic xorshift corpus mutating real containers (fixed-width
+//! format 2/3 and adaptive format 5), run as a plain `cargo test`.
+//!
+//! Header-splice mutations recompute the trailer CRC so the corruption
+//! reaches the header validator instead of the checksum; raw mutations
+//! leave the CRC alone and exercise the framing/CRC layer.
+
+use cpcm::checkpoint::Checkpoint;
+use cpcm::codec::{sharded, Codec, CodecConfig, ContextMode};
+use cpcm::container::Container;
+use cpcm::lstm::Backend;
+use cpcm::util::crc32;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Deterministic xorshift64* — the corpus must not depend on ambient
+/// randomness, or a CI failure would be unreproducible.
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    fn below(&mut self, n: usize) -> usize {
+        (self.next() % n as u64) as usize
+    }
+}
+
+fn layers() -> Vec<(&'static str, Vec<usize>)> {
+    vec![("a.w", vec![9, 5]), ("b.w", vec![23])]
+}
+
+/// A real container as mutation seed: format 2 (unsharded), format 3
+/// (sharded fixed-width) or format 5 (sharded adaptive widths).
+fn seed_container(shard_bytes: usize, adaptive: bool) -> Vec<u8> {
+    let codec = Codec::new(
+        CodecConfig {
+            mode: ContextMode::Order0,
+            bits: 3,
+            lanes: 2,
+            quant_iters: 3,
+            shard_bytes,
+            adaptive_bits: adaptive,
+            ..Default::default()
+        },
+        Backend::Native,
+    );
+    let ck = Checkpoint::synthetic(10, &layers(), 7);
+    codec.encode(&ck, None, None).unwrap().bytes
+}
+
+/// Drive every untrusted entry point; the only contract is "no panic".
+fn feed(bytes: &[u8]) {
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        let _ = Container::from_bytes(bytes);
+        let _ = Codec::decode(&Backend::Native, bytes, None, None);
+        let _ = sharded::decode_weight_tensor(&Backend::Native, bytes, "a.w", None, None);
+    }));
+    assert!(r.is_ok(), "panicked on a {}-byte input", bytes.len());
+}
+
+/// Recompute the trailer CRC so a mutation reaches the decoder.
+fn fix_crc(bytes: &mut [u8]) {
+    if bytes.len() < 4 {
+        return;
+    }
+    let n = bytes.len() - 4;
+    let crc = crc32::hash(&bytes[..n]);
+    bytes[n..].copy_from_slice(&crc.to_le_bytes());
+}
+
+/// Replace the header region with arbitrary bytes (fixing the declared
+/// length and the trailer CRC) — arbitrary text hits `Json::parse`,
+/// valid-JSON-but-hostile text hits `parse_untrusted_header`.
+fn splice_header(bytes: &[u8], new_header: &[u8]) -> Vec<u8> {
+    let hdr_len = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    let mut out = Vec::with_capacity(bytes.len());
+    out.extend_from_slice(&bytes[..8]);
+    out.extend_from_slice(&(new_header.len() as u32).to_le_bytes());
+    out.extend_from_slice(new_header);
+    out.extend_from_slice(&bytes[8 + 4 + hdr_len..]);
+    fix_crc(&mut out);
+    out
+}
+
+fn header_text(bytes: &[u8]) -> String {
+    let hdr_len = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    String::from_utf8(bytes[12..12 + hdr_len].to_vec()).unwrap()
+}
+
+#[test]
+fn seed_containers_decode() {
+    for (shard_bytes, adaptive) in [(0usize, false), (12 * 12, false), (12 * 12, true)] {
+        let bytes = seed_container(shard_bytes, adaptive);
+        assert!(Codec::decode(&Backend::Native, &bytes, None, None).is_ok());
+        feed(&bytes);
+    }
+}
+
+#[test]
+fn random_bytes_never_panic() {
+    let mut rng = Rng(0x5EED_BEEF);
+    for i in 0..1500 {
+        let len = rng.below(300);
+        let mut bytes: Vec<u8> = (0..len).map(|_| (rng.next() & 0xFF) as u8).collect();
+        // Half the corpus gets the real magic so it reaches past the
+        // first gate; a third of those also a plausible header length.
+        if i % 2 == 0 && bytes.len() >= 12 {
+            bytes[..8].copy_from_slice(b"CPCM0001");
+            if i % 6 == 0 {
+                let l = (rng.below(bytes.len())) as u32;
+                bytes[8..12].copy_from_slice(&l.to_le_bytes());
+            }
+        }
+        feed(&bytes);
+    }
+}
+
+#[test]
+fn mutated_containers_never_panic() {
+    let seeds: Vec<Vec<u8>> = [(0usize, false), (10 * 12, false), (10 * 12, true)]
+        .iter()
+        .map(|&(sb, ad)| seed_container(sb, ad))
+        .collect();
+    let mut rng = Rng(0xF0CC_ACC1A);
+    for i in 0..1500 {
+        let seed = &seeds[i % seeds.len()];
+        let mut doc = seed.clone();
+        for _ in 0..=rng.below(4) {
+            if doc.is_empty() {
+                break;
+            }
+            match rng.below(4) {
+                0 => {
+                    let pos = rng.below(doc.len());
+                    doc[pos] ^= 1 << rng.below(8);
+                }
+                1 => {
+                    let pos = rng.below(doc.len());
+                    doc.remove(pos);
+                }
+                2 => doc.truncate(rng.below(doc.len())),
+                // Duplicate a slice (grows declared-vs-actual skews).
+                _ => {
+                    let pos = rng.below(doc.len());
+                    let n = rng.below((doc.len() - pos).min(16) + 1);
+                    let slice: Vec<u8> = doc[pos..pos + n].to_vec();
+                    doc.splice(pos..pos, slice);
+                }
+            }
+        }
+        // Raw (CRC layer) and CRC-fixed (decoder layers) variants.
+        feed(&doc);
+        fix_crc(&mut doc);
+        feed(&doc);
+    }
+}
+
+#[test]
+fn mutated_headers_never_panic() {
+    // Text-level mutations of real format-3/5 headers, CRC fixed so every
+    // input reaches `Json::parse` + `parse_untrusted_header` + the
+    // shard-index reader with intact blobs behind it.
+    let seeds: Vec<Vec<u8>> =
+        [(10 * 12, false), (10 * 12, true)].iter().map(|&(sb, ad)| seed_container(sb, ad)).collect();
+    let mut rng = Rng(0x1EAD_5EED_0BAD_F00D);
+    for i in 0..1500 {
+        let seed = &seeds[i % seeds.len()];
+        let mut text = header_text(seed).into_bytes();
+        for _ in 0..=rng.below(4) {
+            if text.is_empty() {
+                break;
+            }
+            match rng.below(3) {
+                0 => {
+                    let pos = rng.below(text.len());
+                    text[pos] = b"{}[]:,\"0123456789.eE-nulltruefalse"[rng.below(34)];
+                }
+                1 => {
+                    let pos = rng.below(text.len());
+                    text.remove(pos);
+                }
+                _ => text.truncate(rng.below(text.len())),
+            }
+        }
+        feed(&splice_header(seed, &text));
+    }
+}
+
+#[test]
+fn hostile_allocation_tables_never_panic_and_never_decode() {
+    // Hand-built internally-inconsistent width tables spliced into a real
+    // adaptive container: valid JSON, valid CRC, intact blobs — only the
+    // table lies. Every case must be a clean `Error` from the header
+    // validator or the geometry cross-checks.
+    let seed = seed_container(10 * 12, true);
+    let text = header_text(&seed);
+    let alloc_start = text.find("\"alloc\":").expect("adaptive header carries a table");
+    // The alloc value is the first top-level array after the key; find its
+    // end by bracket counting.
+    let val_start = alloc_start + "\"alloc\":".len();
+    let rel_open = text[val_start..].find('[').unwrap();
+    let mut depth = 0usize;
+    let mut val_end = 0usize;
+    for (off, ch) in text[val_start + rel_open..].char_indices() {
+        match ch {
+            '[' => depth += 1,
+            ']' => {
+                depth -= 1;
+                if depth == 0 {
+                    val_end = val_start + rel_open + off + 1;
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    assert!(val_end > 0);
+    let with_table = |table: &str| -> Vec<u8> {
+        let new = format!("{}{}{}", &text[..val_start], table, &text[val_end..]);
+        splice_header(&seed, new.as_bytes())
+    };
+
+    let huge = format!("[[{}],[3],[3]]", vec!["3"; 100_000].join(","));
+    for table in [
+        "[[0],[0],[0]]",
+        "[[13],[13],[13]]",
+        "[[3],[3]]",
+        "[[3],[3],[3],[3]]",
+        "[3,3,3]",
+        "[[3],[3],[\"x\"]]",
+        "[[1e308],[3],[3]]",
+        "[[-1],[3],[3]]",
+        "null",
+        "{}",
+        huge.as_str(),
+    ] {
+        let bytes = with_table(table);
+        feed(&bytes);
+        assert!(
+            Codec::decode(&Backend::Native, &bytes, None, None).is_err(),
+            "hostile table accepted: {}",
+            &table[..table.len().min(60)]
+        );
+        assert!(
+            sharded::decode_weight_tensor(&Backend::Native, &bytes, "a.w", None, None).is_err()
+        );
+    }
+}

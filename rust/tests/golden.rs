@@ -116,3 +116,32 @@ fn golden_v3_containers_stay_bit_stable() {
     // fixture pins the fragment layout and the shard index too.
     check_format("v3", golden_cfg(25 * 12), false);
 }
+
+#[test]
+fn golden_v5_containers_stay_bit_stable() {
+    // Same sharding as the v3 fixture with adaptive allocation on: pins
+    // the header width table, the per-fragment quantizer widths AND the
+    // water-filling allocator itself (any change to its arithmetic or
+    // tie-breaking shows up as a byte diff here).
+    check_format(
+        "v5",
+        CodecConfig { adaptive_bits: true, ..golden_cfg(25 * 12) },
+        false,
+    );
+}
+
+#[test]
+fn adaptive_off_is_byte_identical_to_fixed_width_output() {
+    // The `--adaptive-bits` off path must stay byte-for-byte today's
+    // output: an explicit `adaptive_bits: false` encode equals the
+    // default-config encode for every pinned format.
+    for shard_bytes in [0usize, 25 * 12] {
+        let base = golden_chain(golden_cfg(shard_bytes), false);
+        let off = golden_chain(
+            CodecConfig { adaptive_bits: false, ..golden_cfg(shard_bytes) },
+            false,
+        );
+        assert_eq!(base.0 .0, off.0 .0, "intra bytes differ with adaptive_bits=false");
+        assert_eq!(base.1 .0, off.1 .0, "delta bytes differ with adaptive_bits=false");
+    }
+}

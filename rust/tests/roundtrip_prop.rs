@@ -1,9 +1,10 @@
 //! Property-based round-trip battery over the full format space.
 //!
 //! Random tensor layouts and codec configs are drawn across
-//! `format ∈ {1, 2, 3} × lanes ∈ {1, 2, 4} × prune × quant bits × shard
-//! sizes` — including shard boundaries landing mid-tensor and shards
-//! larger than the whole checkpoint — and every case must:
+//! `format ∈ {1, 2, 3, 5} × lanes ∈ {1, 2, 4} × prune × quant bits ×
+//! adaptive allocation × shard sizes` — including shard boundaries
+//! landing mid-tensor and shards larger than the whole checkpoint — and
+//! every case must:
 //!
 //! - round-trip a two-frame chain (intra + delta) bit-exactly: decoded
 //!   checkpoints equal the encoder's reconstruction, decoded symbol maps
@@ -73,6 +74,9 @@ fn random_cfg(g: &mut Gen, mode: ContextMode, total_positions: usize) -> CodecCo
     if g.bool(0.5) {
         cfg.warmup_passes = 0;
     }
+    // Adaptive per-fragment allocation (format 5) rides the same grid:
+    // sharded or not, any lane count, any scheduler width.
+    cfg.adaptive_bits = g.bool(0.35);
     cfg
 }
 
@@ -185,6 +189,9 @@ fn prop_v3_at_infinite_shard_equals_v2_payload() {
         let mode = *g.choose(&[ContextMode::Order0, ContextMode::Lstm]);
         let mut cfg = random_cfg(g, mode, 0);
         cfg.shard_bytes = 0;
+        // The v3 = v2-payload + index relation is a fixed-width property:
+        // format 5 carries the shard index whether sharded or not.
+        cfg.adaptive_bits = false;
         let seed = g.usize_range(0, 1 << 30) as u64;
         let c0 = Checkpoint::synthetic(7, &layers_ref, seed);
         let c1 = Checkpoint::synthetic(8, &layers_ref, seed + 1);
@@ -206,6 +213,63 @@ fn prop_v3_at_infinite_shard_equals_v2_payload() {
             let p3 = Container::from_bytes(three).unwrap();
             assert_eq!(p3.blobs.len(), p2.blobs.len() + 1, "v3 = v2 payload + index");
             assert_eq!(&p3.blobs[..p2.blobs.len()], p2.blobs.as_slice());
+        }
+    });
+}
+
+#[test]
+fn prop_adaptive_bytes_are_pool_width_invariant() {
+    // Format 5's width table is computed in the sequential pass of the
+    // streaming encoder and before the quantize fan-out of the in-memory
+    // one, so the scheduler width must never change a single byte — the
+    // same invariant tests/sched.rs pins for fixed-width format 3.
+    forall("adaptive bytes vs shard_threads", 8, |g| {
+        let layers = random_layout(g);
+        let layers_ref: Vec<(&str, Vec<usize>)> =
+            layers.iter().map(|(n, s)| (n.as_str(), s.clone())).collect();
+        let total: usize =
+            layers.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+        let shard_values = g.usize_range(1, total.max(1) * 2);
+        let seed = g.usize_range(0, 1 << 30) as u64;
+        let c0 = Checkpoint::synthetic(3, &layers_ref, seed);
+        let c1 = Checkpoint::synthetic(4, &layers_ref, seed ^ 0x77);
+        // Drawn once: only shard_threads may vary between the compared runs.
+        let bits = *g.choose(&[3u8, 4, 6]);
+        let lanes = *g.choose(&[1usize, 2]);
+        let mut outs: Vec<(Vec<u8>, Vec<u8>)> = Vec::new();
+        for shard_threads in [1usize, 2, 8, 0] {
+            let cfg = CodecConfig {
+                mode: ContextMode::Order0,
+                bits,
+                quant_iters: 3,
+                lanes,
+                shard_bytes: shard_values * 12,
+                shard_threads,
+                adaptive_bits: true,
+                ..Default::default()
+            };
+            let codec = Codec::new(cfg, Backend::Native);
+            let e0 = codec.encode(&c0, None, None).unwrap();
+            let e1 = codec.encode(&c1, Some(&e0.recon), Some(&e0.syms)).unwrap();
+            // Streamed encode at this width must also match in-memory.
+            let mut streamed = Vec::new();
+            let mut cur = sharded::CheckpointSource::new(&c1).unwrap();
+            let mut refr = sharded::CheckpointSource::new(&e0.recon).unwrap();
+            let mut ref_syms = e0.syms.clone();
+            sharded::encode_streaming(
+                &codec,
+                &mut cur,
+                Some(&mut refr),
+                Some(&mut ref_syms),
+                &mut streamed,
+            )
+            .unwrap();
+            assert_eq!(streamed, e1.bytes, "adaptive streamed != in-memory");
+            outs.push((e0.bytes, e1.bytes));
+        }
+        for (intra, delta) in &outs[1..] {
+            assert_eq!(intra, &outs[0].0, "intra bytes depend on shard_threads");
+            assert_eq!(delta, &outs[0].1, "delta bytes depend on shard_threads");
         }
     });
 }
