@@ -16,6 +16,9 @@
 //! cpcm compact    --cpcm runs/demo/cpcm --step S [--backend ...]
 //! cpcm info       --file runs/demo/cpcm/ckpt_0000000100.cpcm
 //! cpcm config     --write cpcm.json          # dump the default config
+//! cpcm serve      --root runs/fleet [--addr 127.0.0.1:7070] [--max-tenants N]
+//!                 [--quota-bytes N] [--max-conns N] [--max-body-bytes N]
+//!                 [--backend ...] [--queue-depth N] [--keyframe-every N]
 //! ```
 //!
 //! Flags mirror [`crate::config::ExperimentConfig`]; `--config file.json`
@@ -71,6 +74,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "compact" => cmd_compact(args),
         "info" => cmd_info(args),
         "config" => cmd_config(args),
+        "serve" => cmd_serve(args),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -82,7 +86,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
 fn print_usage() {
     println!(
         "cpcm — prediction/context-modeling checkpoint compression\n\
-         commands: train, compress, decompress, verify, scrub, gc, compact, info, config, help\n\
+         commands: train, compress, decompress, verify, scrub, gc, compact, info, config, serve, help\n\
          run `cpcm <cmd> --help`-style flags are listed in the module docs"
     );
 }
@@ -501,6 +505,38 @@ fn cmd_config(args: Args) -> Result<()> {
     Ok(())
 }
 
+/// `cpcm serve` — run the multi-tenant checkpoint daemon
+/// ([`crate::server`]). `--root` is the serve root (tenant chains under
+/// `tenants/`, the content-addressed dedup store under `objects/`);
+/// codec, backend and pipeline flags are shared with `compress`.
+fn cmd_serve(args: Args) -> Result<()> {
+    let cfg = experiment_config(&args)?;
+    let root = args.req("root")?;
+    let mut scfg = crate::server::ServeConfig::new(root);
+    scfg.codec = cfg.codec.clone();
+    scfg.queue_depth = cfg.queue_depth;
+    scfg.keyframe_every = cfg.keyframe_every;
+    if let Some(v) = args.get("addr") {
+        scfg.addr = v.to_string();
+    }
+    if let Some(v) = args.parsed::<u64>("max-tenants")? {
+        scfg.max_tenants = v as usize;
+    }
+    if let Some(v) = args.parsed::<u64>("quota-bytes")? {
+        scfg.quota_bytes = v;
+    }
+    if let Some(v) = args.parsed::<u64>("max-conns")? {
+        scfg.max_conns = v as usize;
+    }
+    if let Some(v) = args.parsed::<u64>("max-body-bytes")? {
+        scfg.max_body_bytes = v as usize;
+    }
+    let backend = make_backend(cfg.backend, &cfg.artifacts_dir)?;
+    let server = crate::server::Server::bind(scfg, backend)?;
+    println!("cpcm serve listening on {}", server.local_addr()?);
+    server.run()
+}
+
 fn parse_num<T: std::str::FromStr>(s: &str, what: &str) -> Result<T> {
     s.parse().map_err(|_| Error::config(format!("invalid --{what}: '{s}'")))
 }
@@ -587,6 +623,12 @@ mod tests {
         ])
         .unwrap_err();
         assert!(err.to_string().contains("retain"), "{err}");
+    }
+
+    #[test]
+    fn serve_demands_a_root() {
+        let err = run(vec!["serve".into()]).unwrap_err();
+        assert!(err.to_string().contains("root"), "{err}");
     }
 
     #[test]

@@ -33,6 +33,23 @@ impl BackendKind {
     }
 }
 
+/// Default listen address for `cpcm serve` (loopback: the daemon speaks
+/// plaintext HTTP and trusts its tenants' names only after validation —
+/// exposing it beyond localhost is a deployment decision, not a default).
+pub const SERVE_DEFAULT_ADDR: &str = "127.0.0.1:7070";
+
+/// Default cap on concurrent tenant namespaces for `cpcm serve`.
+pub const SERVE_DEFAULT_MAX_TENANTS: usize = 16;
+
+/// Default concurrent-connection cap for `cpcm serve` (the admission
+/// semaphore's capacity; accepts beyond it shed with `429`).
+pub const SERVE_DEFAULT_MAX_CONNS: usize = 64;
+
+/// Default largest request body `cpcm serve` will buffer (256 MiB —
+/// comfortably above the synthetic workloads' raw checkpoints, far below
+/// anything that would let one request exhaust the host).
+pub const SERVE_DEFAULT_MAX_BODY_BYTES: usize = 256 << 20;
+
 /// Top-level experiment configuration.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -307,6 +324,14 @@ fn req_f64(v: &Json) -> Result<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn serve_defaults_are_loopback_and_bounded() {
+        assert!(SERVE_DEFAULT_ADDR.starts_with("127.0.0.1:"));
+        assert!(SERVE_DEFAULT_MAX_TENANTS > 0);
+        assert!(SERVE_DEFAULT_MAX_CONNS > 0);
+        assert!(SERVE_DEFAULT_MAX_BODY_BYTES >= 1 << 20);
+    }
 
     #[test]
     fn lifecycle_knobs_parse_and_alias() {

@@ -700,10 +700,14 @@ fn decode_ancestry(
 /// containing format-1/2 containers fall back to the in-memory
 /// [`restore_step_with`] walk and write its bytes.
 ///
-/// Intermediate chain artifacts live in a `.restore_<step>_<pid>` work
-/// directory next to `out_path` and are removed on every exit path; the
-/// final file lands at `out_path` via rename. The produced bytes are
-/// bit-identical to `restore_step(..)?.to_bytes()` on both paths.
+/// Intermediate chain artifacts live in a `.restore_<step>_<pid>_<seq>`
+/// work directory next to `out_path` — `<seq>` is a process-unique
+/// invocation token, so concurrent restores of the *same* step in one
+/// process (the daemon's bread and butter) never share a work dir — and
+/// a drop guard removes the directory on every exit path, including
+/// panics mid-restore. The final file lands at `out_path` via rename.
+/// The produced bytes are bit-identical to
+/// `restore_step(..)?.to_bytes()` on both paths.
 pub fn restore_step_to_file(
     dir: &Path,
     backend: &Backend,
@@ -739,13 +743,21 @@ pub fn restore_step_to_file_with(
         return Ok(());
     }
 
+    // A per-invocation token keeps concurrent restores of the same step
+    // in one process (exactly what `cpcm serve` does) from sharing — and
+    // pre-cleaning away — each other's in-flight work dir; the pid keeps
+    // two *processes* restoring into the same parent apart.
+    let token = RESTORE_TOKEN.fetch_add(1, Ordering::Relaxed);
     let work = out_path
         .parent()
         .map(|p| p.to_path_buf())
         .unwrap_or_else(|| PathBuf::from("."))
-        .join(format!(".restore_{step}_{}", std::process::id()));
-    let _ = std::fs::remove_dir_all(&work);
-    let result = restore_chain_streaming(
+        .join(format!(".restore_{step}_{}_{token}", std::process::id()));
+    // Drop guard instead of a success-path cleanup call: the work dir is
+    // removed on success, on error, and on a panic unwinding through the
+    // streaming walk.
+    let _guard = WorkDirGuard { path: work.clone() };
+    restore_chain_streaming(
         &manifest,
         dir,
         backend,
@@ -754,9 +766,22 @@ pub fn restore_step_to_file_with(
         &work,
         out_path,
         shard_threads,
-    );
-    let _ = std::fs::remove_dir_all(&work);
-    result
+    )
+}
+
+/// Process-unique restore work-dir token (see [`restore_step_to_file_with`]).
+static RESTORE_TOKEN: AtomicU64 = AtomicU64::new(0);
+
+/// Removes its directory when dropped — on every exit path of a
+/// streaming restore, panics included.
+struct WorkDirGuard {
+    path: PathBuf,
+}
+
+impl Drop for WorkDirGuard {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
 }
 
 /// The streaming walk of [`restore_step_to_file`]: decode each ancestry
@@ -1086,6 +1111,74 @@ mod tests {
                 .all(|e| !e.unwrap().file_name().to_string_lossy().starts_with(".restore_")));
             let _ = std::fs::remove_dir_all(&dir);
         }
+    }
+
+    #[test]
+    fn concurrent_restores_of_the_same_step_do_not_collide() {
+        // Regression: the work dir used to be named `.restore_<step>_<pid>`,
+        // so two restores of the same step in one process shared a dir and
+        // the pre-clean `remove_dir_all` deleted the other session's
+        // in-flight chain artifacts. Both format-3 streaming restores of
+        // one step must now succeed concurrently and byte-match the
+        // in-memory restore.
+        let dir = tmpdir("concurrent");
+        let mut codec = small_codec(ContextMode::Order0);
+        codec.shard_bytes = 25 * 12;
+        let cfg = CoordinatorConfig::new(codec, Backend::Native, &dir);
+        let coord = Coordinator::start(cfg).unwrap();
+        for i in 0..3u64 {
+            coord.submit(Checkpoint::synthetic(10 * (i + 1), &layers(), 500 + i)).unwrap();
+        }
+        coord.finish().unwrap();
+        let expect = restore_step(&dir, &Backend::Native, 30).unwrap().to_bytes();
+        let barrier = Arc::new(std::sync::Barrier::new(4));
+        let mut joins = Vec::new();
+        for t in 0..4 {
+            let dir = dir.clone();
+            let barrier = barrier.clone();
+            joins.push(std::thread::spawn(move || {
+                let out = dir.join(format!("restored_{t}.bin"));
+                barrier.wait();
+                restore_step_to_file(&dir, &Backend::Native, 30, &out)?;
+                Ok::<Vec<u8>, Error>(std::fs::read(&out).unwrap())
+            }));
+        }
+        for j in joins {
+            assert_eq!(j.join().unwrap().unwrap(), expect);
+        }
+        // Every work dir was cleaned up.
+        assert!(std::fs::read_dir(&dir)
+            .unwrap()
+            .all(|e| !e.unwrap().file_name().to_string_lossy().starts_with(".restore_")));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn failed_streaming_restore_cleans_its_work_dir() {
+        // The drop guard must remove the work dir on the error path too
+        // (it used to leak when the streaming walk errored mid-chain).
+        let dir = tmpdir("errclean");
+        let mut codec = small_codec(ContextMode::Order0);
+        codec.shard_bytes = 25 * 12;
+        let cfg = CoordinatorConfig::new(codec, Backend::Native, &dir);
+        let coord = Coordinator::start(cfg).unwrap();
+        for i in 0..2u64 {
+            coord.submit(Checkpoint::synthetic(10 * (i + 1), &layers(), 600 + i)).unwrap();
+        }
+        coord.finish().unwrap();
+        // Corrupt the keyframe's body so the streaming decode of the
+        // ancestry fails after the work dir exists.
+        let kf = dir.join("ckpt_0000000010.cpcm");
+        let mut bytes = std::fs::read(&kf).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&kf, bytes).unwrap();
+        let out = dir.join("restored.bin");
+        assert!(restore_step_to_file(&dir, &Backend::Native, 20, &out).is_err());
+        assert!(std::fs::read_dir(&dir)
+            .unwrap()
+            .all(|e| !e.unwrap().file_name().to_string_lossy().starts_with(".restore_")));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -13,7 +13,10 @@
 //! ancestry-orphaned steps are **quarantined** — retired in the
 //! manifest (so restores fail with a named error instead of a CRC
 //! surprise) and their files renamed to `<file>.quarantine` (preserved
-//! for forensics, invisible to the directory scans). After a repair the
+//! for forensics, invisible to the directory scans). When the same
+//! filename is retired again by a later repair, the copy gets a
+//! generation suffix (`<file>.quarantine.1`, `.quarantine.2`, …) so no
+//! pass ever overwrites a previous pass's evidence. After a repair the
 //! directory scrubs clean and every remaining live step is restorable.
 
 use super::lifecycle;
@@ -183,12 +186,29 @@ pub fn scrub_dir(dir: &Path) -> Result<ScrubReport> {
 #[derive(Debug, Default)]
 pub struct RepairReport {
     /// Steps retired with reason `"quarantined"`, and the file each was
-    /// preserved under (`<file>.quarantine`; missing files have none).
+    /// preserved under (`<file>.quarantine`, or `<file>.quarantine.N`
+    /// when earlier repairs already hold the unsuffixed name; missing
+    /// files have none).
     pub quarantined: Vec<(u64, Option<String>)>,
     /// Unreferenced `.cpcm` files deleted.
     pub orphans_removed: Vec<String>,
     /// Stale temp files deleted.
     pub temps_removed: Vec<String>,
+}
+
+/// First free quarantine name for `file`: `<file>.quarantine` when
+/// unused, otherwise `<file>.quarantine.N` with the smallest free `N`.
+/// A repaired-then-rewritten-then-repaired-again step must never
+/// overwrite the forensic copy an earlier repair preserved.
+fn quarantine_name(dir: &Path, file: &str) -> String {
+    let base = format!("{file}.quarantine");
+    if !dir.join(&base).exists() {
+        return base;
+    }
+    (1u64..)
+        .map(|n| format!("{file}.quarantine.{n}"))
+        .find(|cand| !dir.join(cand).exists())
+        .expect("u64 generation space exhausted")
 }
 
 /// Repair a directory in place so that it scrubs clean afterwards.
@@ -197,7 +217,8 @@ pub struct RepairReport {
 /// manifest (reason `"quarantined"`), which makes later restores of it
 /// fail with a named error rather than a mid-walk CRC surprise. The
 /// manifest is saved durably *first*; only then are the quarantined
-/// files renamed to `<file>.quarantine` and the litter removed — a
+/// files renamed to a fresh `<file>.quarantine[.N]` name and the litter
+/// removed — a
 /// crash mid-repair leaves unreferenced files for the next pass, never
 /// a manifest row pointing at vanished bytes.
 pub fn repair_dir(dir: &Path) -> Result<RepairReport> {
@@ -225,7 +246,7 @@ pub fn repair_dir(dir: &Path) -> Result<RepairReport> {
     manifest.save(dir)?;
     for (step, file) in to_rename {
         let from = dir.join(&file);
-        let keep = format!("{file}.quarantine");
+        let keep = quarantine_name(dir, &file);
         fs_atomic::rename_durable(&from, &dir.join(&keep))?;
         report.quarantined.push((step, Some(keep)));
     }
@@ -251,4 +272,94 @@ pub fn repair_dir(dir: &Path) -> Result<RepairReport> {
     }
     let _ = lifecycle::recover_dir(dir);
     Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::Checkpoint;
+    use crate::codec::{CodecConfig, ContextMode};
+    use crate::coordinator::{Coordinator, CoordinatorConfig};
+    use crate::lstm::Backend;
+    use std::path::PathBuf;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("cpcm_scrub_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    /// Write `steps` synthetic checkpoints into `dir` through a fresh
+    /// coordinator (appends to any existing manifest).
+    fn write_chain(dir: &Path, steps: &[u64], seed: u64) {
+        let codec = CodecConfig {
+            mode: ContextMode::Order0,
+            hidden: 8,
+            embed: 8,
+            batch: 32,
+            quant_iters: 4,
+            ..Default::default()
+        };
+        let layers = vec![("w", vec![20usize, 12]), ("b", vec![30usize])];
+        let coord =
+            Coordinator::start(CoordinatorConfig::new(codec, Backend::Native, dir)).unwrap();
+        for &s in steps {
+            coord.submit(Checkpoint::synthetic(s, &layers, seed)).unwrap();
+        }
+        coord.finish().unwrap();
+    }
+
+    /// Flip one body byte at `at` (tests plant corruption with raw
+    /// writes on purpose; production paths go through fs_atomic).
+    fn corrupt(path: &Path, at: usize) {
+        let mut bytes = std::fs::read(path).unwrap();
+        let pos = at.min(bytes.len() - 5);
+        bytes[pos] ^= 0xFF;
+        std::fs::write(path, bytes).unwrap();
+    }
+
+    #[test]
+    fn double_repair_preserves_both_quarantined_copies() {
+        // Regression: the quarantine rename used the fixed name
+        // `<file>.quarantine`, so retiring the same filename twice
+        // silently overwrote the first repair's forensic copy.
+        let dir = tmpdir("qgen");
+        write_chain(&dir, &[10, 20], 900);
+        let file = dir.join("ckpt_0000000020.cpcm");
+        corrupt(&file, 40);
+        let r1 = repair_dir(&dir).unwrap();
+        assert!(r1
+            .quarantined
+            .iter()
+            .any(|(s, f)| *s == 20 && f.as_deref() == Some("ckpt_0000000020.cpcm.quarantine")));
+        let first_copy = dir.join("ckpt_0000000020.cpcm.quarantine");
+        let first_bytes = std::fs::read(&first_copy).unwrap();
+        assert!(scrub_dir(&dir).unwrap().consistent());
+
+        // Re-write step 20 (same filename; the manifest revives the
+        // retired step), corrupt it differently, repair again.
+        write_chain(&dir, &[20], 901);
+        corrupt(&file, 80);
+        let r2 = repair_dir(&dir).unwrap();
+        assert!(r2
+            .quarantined
+            .iter()
+            .any(|(s, f)| *s == 20 && f.as_deref() == Some("ckpt_0000000020.cpcm.quarantine.1")));
+        assert!(scrub_dir(&dir).unwrap().consistent());
+
+        // Both forensic copies survive, and the first one is untouched.
+        assert!(first_copy.is_file());
+        assert!(dir.join("ckpt_0000000020.cpcm.quarantine.1").is_file());
+        assert_eq!(std::fs::read(&first_copy).unwrap(), first_bytes);
+
+        // A third round picks the next free generation.
+        write_chain(&dir, &[20], 902);
+        corrupt(&file, 120);
+        let r3 = repair_dir(&dir).unwrap();
+        assert!(r3
+            .quarantined
+            .iter()
+            .any(|(s, f)| *s == 20 && f.as_deref() == Some("ckpt_0000000020.cpcm.quarantine.2")));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 }

@@ -38,6 +38,10 @@
 //!   format-3 chains stream shard-by-shard to disk with references read by
 //!   range ([`codec::sharded::decode_streaming`]);
 //!   [`coordinator::restore_tensor`] random-accesses one weight tensor;
+//! - [`server::Server`] — the `cpcm serve` multi-tenant daemon: a
+//!   dependency-free HTTP/1.1 front over the coordinator with per-tenant
+//!   chain namespaces, a content-addressed dedup store and quota/admission
+//!   shedding;
 //! - [`trainer::Trainer`] — drives AOT train-step executables to produce real
 //!   Adam checkpoints for the experiments;
 //! - [`baselines`] — ExCP(+DEFLATE / order-0 AC) and other comparison points.
@@ -63,6 +67,7 @@ pub mod metrics;
 pub mod prune;
 pub mod quant;
 pub mod runtime;
+pub mod server;
 pub mod tensor;
 pub mod trainer;
 pub mod util;

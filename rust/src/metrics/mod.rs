@@ -2,12 +2,23 @@
 //!
 //! Counters are lock-free atomics; gauges/timings go through a mutex (off
 //! the hot path). Snapshots serialize to JSON for logs and reports.
+//!
+//! Lock poisoning is recovered (the inner guard is taken back): a stage
+//! that panics mid-`count`/`time` must not turn every later metrics call —
+//! including the crash-path snapshot that reports the failure — into a
+//! second panic. The maps only ever hold fully-inserted entries, so the
+//! recovered state is safe to keep using.
 
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 use std::time::Instant;
+
+/// Lock a metrics map, recovering from poisoning (see module docs).
+fn lock_recovering<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Shared metrics sink.
 #[derive(Default)]
@@ -32,7 +43,7 @@ impl Metrics {
 
     /// Increment a named counter by `n`.
     pub fn count(&self, name: &str, n: u64) {
-        let mut map = self.counters.lock().unwrap();
+        let mut map = lock_recovering(&self.counters);
         let cell = map.entry(name.to_string()).or_insert_with(|| {
             // Counters live for the process lifetime; leak one atomic each.
             Box::leak(Box::new(AtomicU64::new(0)))
@@ -42,9 +53,7 @@ impl Metrics {
 
     /// Read a counter.
     pub fn counter(&self, name: &str) -> u64 {
-        self.counters
-            .lock()
-            .unwrap()
+        lock_recovering(&self.counters)
             .get(name)
             .map(|c| c.load(Ordering::Relaxed))
             .unwrap_or(0)
@@ -52,19 +61,19 @@ impl Metrics {
 
     /// Set a gauge to an absolute value.
     pub fn gauge(&self, name: &str, value: f64) {
-        self.gauges.lock().unwrap().insert(name.to_string(), value);
+        lock_recovering(&self.gauges).insert(name.to_string(), value);
     }
 
     /// Read a gauge (`None` if never set).
     pub fn gauge_value(&self, name: &str) -> Option<f64> {
-        self.gauges.lock().unwrap().get(name).copied()
+        lock_recovering(&self.gauges).get(name).copied()
     }
 
     /// Track a gauge as a running maximum (used for high-water queue
     /// depths: the instantaneous depth is racy, the high-water mark is
     /// what backpressure tuning needs).
     pub fn gauge_max(&self, name: &str, value: f64) {
-        let mut map = self.gauges.lock().unwrap();
+        let mut map = lock_recovering(&self.gauges);
         let entry = map.entry(name.to_string()).or_insert(value);
         if value > *entry {
             *entry = value;
@@ -73,7 +82,7 @@ impl Metrics {
 
     /// Record one timed operation.
     pub fn time(&self, name: &str, seconds: f64) {
-        let mut map = self.timings.lock().unwrap();
+        let mut map = lock_recovering(&self.timings);
         let agg = map.entry(name.to_string()).or_default();
         agg.count += 1;
         agg.total_s += seconds;
@@ -90,26 +99,26 @@ impl Metrics {
 
     /// Number of recorded samples for a timing (0 if never recorded).
     pub fn timing_count(&self, name: &str) -> u64 {
-        self.timings.lock().unwrap().get(name).map(|t| t.count).unwrap_or(0)
+        lock_recovering(&self.timings).get(name).map(|t| t.count).unwrap_or(0)
     }
 
     /// Total recorded seconds for a timing (0.0 if never recorded).
     pub fn timing_total(&self, name: &str) -> f64 {
-        self.timings.lock().unwrap().get(name).map(|t| t.total_s).unwrap_or(0.0)
+        lock_recovering(&self.timings).get(name).map(|t| t.total_s).unwrap_or(0.0)
     }
 
     /// Snapshot everything as JSON.
     pub fn snapshot(&self) -> Json {
         let mut counters = BTreeMap::new();
-        for (k, v) in self.counters.lock().unwrap().iter() {
+        for (k, v) in lock_recovering(&self.counters).iter() {
             counters.insert(k.clone(), Json::num(v.load(Ordering::Relaxed) as f64));
         }
         let mut gauges = BTreeMap::new();
-        for (k, v) in self.gauges.lock().unwrap().iter() {
+        for (k, v) in lock_recovering(&self.gauges).iter() {
             gauges.insert(k.clone(), Json::num(*v));
         }
         let mut timings = BTreeMap::new();
-        for (k, t) in self.timings.lock().unwrap().iter() {
+        for (k, t) in lock_recovering(&self.timings).iter() {
             timings.insert(
                 k.clone(),
                 Json::obj(vec![
@@ -179,5 +188,49 @@ mod tests {
         assert_eq!(enc.get("count").unwrap().as_f64(), Some(2.0));
         assert_eq!(enc.get("mean_s").unwrap().as_f64(), Some(1.0));
         assert_eq!(enc.get("max_s").unwrap().as_f64(), Some(1.5));
+    }
+
+    #[test]
+    fn poisoned_registry_keeps_serving() {
+        let m = Arc::new(Metrics::new());
+        m.count("jobs", 3);
+        m.gauge("depth", 2.0);
+        m.time("encode", 0.25);
+
+        // Poison all three maps by panicking while holding each lock —
+        // the shape of a stage crashing mid-record.
+        let m2 = m.clone();
+        let crashed = std::thread::spawn(move || {
+            let _guard = m2.counters.lock().unwrap();
+            panic!("crash while holding the counters lock");
+        });
+        assert!(crashed.join().is_err());
+        let m2 = m.clone();
+        let crashed = std::thread::spawn(move || {
+            let _guard = m2.gauges.lock().unwrap();
+            panic!("crash while holding the gauges lock");
+        });
+        assert!(crashed.join().is_err());
+        let m2 = m.clone();
+        let crashed = std::thread::spawn(move || {
+            let _guard = m2.timings.lock().unwrap();
+            panic!("crash while holding the timings lock");
+        });
+        assert!(crashed.join().is_err());
+
+        // Every accessor recovers: reads see pre-crash values, writes
+        // keep landing, and the crash-report snapshot still serializes.
+        assert_eq!(m.counter("jobs"), 3);
+        m.count("jobs", 1);
+        assert_eq!(m.counter("jobs"), 4);
+        m.gauge("depth", 5.0);
+        m.gauge_max("depth", 7.0);
+        assert_eq!(m.gauge_value("depth"), Some(7.0));
+        m.time("encode", 0.75);
+        assert_eq!(m.timing_count("encode"), 2);
+        assert!((m.timing_total("encode") - 1.0).abs() < 1e-12);
+        let snap = m.snapshot();
+        assert_eq!(snap.get("counters").unwrap().get("jobs").unwrap().as_f64(), Some(4.0));
+        assert_eq!(snap.get("gauges").unwrap().get("depth").unwrap().as_f64(), Some(7.0));
     }
 }

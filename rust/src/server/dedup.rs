@@ -1,0 +1,414 @@
+//! Content-addressed container store with durable refcounts.
+//!
+//! Identical container files across tenants and steps (the common case
+//! when many trainers run the same job, or when a chain is re-encoded)
+//! collapse to **one blob inode** under `<serve-root>/objects/`:
+//!
+//! ```text
+//! objects/
+//!   index.json                      # {key → [bucket, refs]} via fs_atomic
+//!   b_<crc32:08x>_<len>_<bucket>.blob
+//! ```
+//!
+//! The key is `(crc32, length)`; keys that collide on both get distinct
+//! `bucket` numbers, and a candidate is only ever counted as a duplicate
+//! after a **full byte compare** against the blob — the CRC narrows the
+//! search, it never decides it. Deduplication is by hard link, so tenant
+//! chain directories keep their normal `ckpt_*.cpcm` file names and every
+//! existing restore/scrub path works unchanged on deduped chains.
+//!
+//! **Durability ordering.** On a miss the blob link is created (and its
+//! directory synced) *before* the index row is written; on a hit the
+//! tenant file is atomically replaced by a link to the blob *before* the
+//! refcount is bumped. A crash between the two steps therefore leaves at
+//! worst an over-retained blob (an unreferenced file or a refcount that
+//! is too low by one) — never a tenant chain that references missing
+//! bytes. Refcounts are an upper bound on live links by design: callers
+//! that rewrite a tenant file in place (chain revive, compaction) break
+//! their link without telling the store, which only delays blob reclaim,
+//! never corrupts a chain.
+
+use crate::util::{crc32, fs_atomic};
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+/// File name of the durable refcount index inside the objects dir.
+pub const INDEX_FILE: &str = "index.json";
+
+/// One blob under a `(crc32, len)` key.
+#[derive(Clone, Copy, Debug)]
+struct BlobRef {
+    /// Collision bucket (0 for the first blob with this key).
+    bucket: u32,
+    /// Number of ingests that resolved to this blob (see module docs).
+    refs: u64,
+}
+
+/// Outcome of one [`DedupStore::ingest`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ingest {
+    /// The file's bytes were already stored; the file is now a link to
+    /// the existing blob.
+    Hit,
+    /// First copy of these bytes; a new blob was created.
+    Miss,
+}
+
+/// Aggregate store counters for `/metrics`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DedupStats {
+    /// Number of distinct blobs.
+    pub blobs: u64,
+    /// Sum of refcounts across blobs.
+    pub refs: u64,
+    /// Bytes avoided by dedup: `Σ len · (refs − 1)`.
+    pub bytes_saved: u64,
+}
+
+/// The content-addressed store. Not internally synchronized — the server
+/// holds it behind one mutex (ingest is file-I/O bound and rare: once
+/// per flushed container).
+pub struct DedupStore {
+    dir: PathBuf,
+    index: BTreeMap<(u32, u64), Vec<BlobRef>>,
+}
+
+impl DedupStore {
+    /// Open (or create) the store at `dir`, loading the durable index and
+    /// sweeping any interrupted temp writes.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        fs_atomic::sweep_temps(&dir)?;
+        let mut store = Self { dir, index: BTreeMap::new() };
+        let index_path = store.dir.join(INDEX_FILE);
+        if index_path.is_file() {
+            let text = std::fs::read_to_string(&index_path)?;
+            store.load_index(&crate::util::json::Json::parse(&text)?)?;
+        }
+        Ok(store)
+    }
+
+    /// Ingest one finished container file. On a hit the file is replaced
+    /// (atomically) by a hard link to the existing blob; on a miss its
+    /// inode becomes the new blob.
+    pub fn ingest(&mut self, path: &Path) -> Result<Ingest> {
+        let (crc, len) = hash_file(path)?;
+        let key = (crc, len);
+
+        // Probe every collision bucket with a full byte compare.
+        let buckets: Vec<BlobRef> = self.index.get(&key).cloned().unwrap_or_default();
+        for blob_ref in &buckets {
+            let blob = self.dir.join(blob_name(crc, len, blob_ref.bucket));
+            if !blob.is_file() {
+                // Index row without its blob (crash window): unusable as
+                // a dedup source, skip it.
+                continue;
+            }
+            if same_inode(path, &blob)? {
+                // Already a link to this blob (e.g. a re-flushed chain):
+                // nothing to relink, nothing new stored.
+                return Ok(Ingest::Hit);
+            }
+            if files_equal(path, &blob)? {
+                // Hit: atomically replace the tenant file with a link to
+                // the blob, then bump the durable refcount (ordering per
+                // module docs).
+                let tmp = fs_atomic::tmp_path(path);
+                let _ = std::fs::remove_file(&tmp);
+                std::fs::hard_link(&blob, &tmp)?;
+                fs_atomic::rename_durable(&tmp, path)?;
+                self.bump(key, blob_ref.bucket);
+                self.save_index()?;
+                return Ok(Ingest::Hit);
+            }
+        }
+
+        // Miss: the tenant file's inode becomes the blob. Link + dir sync
+        // first, index row second (ordering per module docs).
+        let bucket = buckets.iter().map(|b| b.bucket + 1).max().unwrap_or(0);
+        let blob = self.dir.join(blob_name(crc, len, bucket));
+        std::fs::hard_link(path, &blob)?;
+        fs_atomic::sync_parent_dir(&blob)?;
+        self.index.entry(key).or_default().push(BlobRef { bucket, refs: 1 });
+        self.save_index()?;
+        Ok(Ingest::Miss)
+    }
+
+    /// Drop one reference to the blob holding `path`'s bytes (future GC
+    /// integration: call when a deduped container is deleted). Deletes
+    /// the blob once its refcount reaches zero. No-op for bytes the
+    /// store never ingested.
+    pub fn release(&mut self, path: &Path) -> Result<()> {
+        let (crc, len) = hash_file(path)?;
+        let key = (crc, len);
+        let Some(buckets) = self.index.get_mut(&key) else { return Ok(()) };
+        let dir = self.dir.clone();
+        let mut removed = None;
+        for (i, blob_ref) in buckets.iter_mut().enumerate() {
+            let blob = dir.join(blob_name(crc, len, blob_ref.bucket));
+            if blob.is_file() && files_equal(path, &blob)? {
+                blob_ref.refs = blob_ref.refs.saturating_sub(1);
+                if blob_ref.refs == 0 {
+                    std::fs::remove_file(&blob)?;
+                    removed = Some(i);
+                }
+                break;
+            }
+        }
+        if let Some(i) = removed {
+            buckets.remove(i);
+            if buckets.is_empty() {
+                self.index.remove(&key);
+            }
+        }
+        self.save_index()
+    }
+
+    /// Aggregate counters for `/metrics`.
+    pub fn stats(&self) -> DedupStats {
+        let mut s = DedupStats::default();
+        for ((_, len), buckets) in &self.index {
+            for b in buckets {
+                s.blobs += 1;
+                s.refs += b.refs;
+                s.bytes_saved += len * b.refs.saturating_sub(1);
+            }
+        }
+        s
+    }
+
+    fn bump(&mut self, key: (u32, u64), bucket: u32) {
+        if let Some(buckets) = self.index.get_mut(&key) {
+            if let Some(b) = buckets.iter_mut().find(|b| b.bucket == bucket) {
+                b.refs += 1;
+            }
+        }
+    }
+
+    fn save_index(&self) -> Result<()> {
+        use crate::util::json::Json;
+        let rows: Vec<Json> = self
+            .index
+            .iter()
+            .flat_map(|(&(crc, len), buckets)| {
+                buckets.iter().map(move |b| {
+                    Json::obj(vec![
+                        ("crc", Json::num(crc as f64)),
+                        ("len", Json::num(len as f64)),
+                        ("bucket", Json::num(b.bucket as f64)),
+                        ("refs", Json::num(b.refs as f64)),
+                    ])
+                })
+            })
+            .collect();
+        let doc = Json::obj(vec![("version", Json::num(1)), ("blobs", Json::Arr(rows))]);
+        fs_atomic::write_atomic(&self.dir.join(INDEX_FILE), doc.to_string_pretty().as_bytes())
+    }
+
+    fn load_index(&mut self, j: &crate::util::json::Json) -> Result<()> {
+        let version = j.req_usize("version")?;
+        if version != 1 {
+            return Err(Error::format(format!("unsupported dedup index version {version}")));
+        }
+        for row in j.req_arr("blobs")? {
+            let crc = row.req_usize("crc")? as u32;
+            let len = row.req_usize("len")? as u64;
+            let bucket = row.req_usize("bucket")? as u32;
+            let refs = row.req_usize("refs")? as u64;
+            self.index.entry((crc, len)).or_default().push(BlobRef { bucket, refs });
+        }
+        Ok(())
+    }
+}
+
+fn blob_name(crc: u32, len: u64, bucket: u32) -> String {
+    format!("b_{crc:08x}_{len}_{bucket}.blob")
+}
+
+/// Streaming `(crc32, length)` of a file.
+fn hash_file(path: &Path) -> Result<(u32, u64)> {
+    let mut f = std::fs::File::open(path)?;
+    let mut crc = crc32::Crc32::new();
+    let mut len = 0u64;
+    let mut buf = vec![0u8; 64 << 10];
+    loop {
+        let n = f.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        crc.update(&buf[..n]);
+        len += n as u64;
+    }
+    Ok((crc.finalize(), len))
+}
+
+/// Streaming byte equality (lengths are known equal via the key).
+fn files_equal(a: &Path, b: &Path) -> Result<bool> {
+    let mut fa = std::fs::File::open(a)?;
+    let mut fb = std::fs::File::open(b)?;
+    let mut ba = vec![0u8; 64 << 10];
+    let mut bb = vec![0u8; 64 << 10];
+    loop {
+        let na = read_full(&mut fa, &mut ba)?;
+        let nb = read_full(&mut fb, &mut bb)?;
+        if na != nb || ba[..na] != bb[..nb] {
+            return Ok(false);
+        }
+        if na == 0 {
+            return Ok(true);
+        }
+    }
+}
+
+/// Fill as much of `buf` as the file still has (plain `read` may return
+/// short counts, which would break the chunk-wise comparison).
+fn read_full(f: &mut std::fs::File, buf: &mut [u8]) -> Result<usize> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        let n = f.read(&mut buf[filled..])?;
+        if n == 0 {
+            break;
+        }
+        filled += n;
+    }
+    Ok(filled)
+}
+
+#[cfg(unix)]
+fn same_inode(a: &Path, b: &Path) -> Result<bool> {
+    use std::os::unix::fs::MetadataExt;
+    let ma = std::fs::metadata(a)?;
+    let mb = std::fs::metadata(b)?;
+    Ok(ma.ino() == mb.ino() && ma.dev() == mb.dev())
+}
+
+#[cfg(not(unix))]
+fn same_inode(a: &Path, b: &Path) -> Result<bool> {
+    // No portable inode identity: fall back to a byte compare, which is
+    // correct (a false "same" is impossible) just slower.
+    files_equal(a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "cpcm_dedup_{tag}_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn write(path: &Path, bytes: &[u8]) {
+        std::fs::write(path, bytes).unwrap();
+    }
+
+    #[test]
+    fn identical_files_dedup_to_one_blob() {
+        let root = tmpdir("basic");
+        let mut store = DedupStore::open(root.join("objects")).unwrap();
+        let a = root.join("a.cpcm");
+        let b = root.join("b.cpcm");
+        write(&a, b"same bytes in both tenants");
+        write(&b, b"same bytes in both tenants");
+
+        assert_eq!(store.ingest(&a).unwrap(), Ingest::Miss);
+        assert_eq!(store.ingest(&b).unwrap(), Ingest::Hit);
+        let s = store.stats();
+        assert_eq!(s.blobs, 1);
+        assert_eq!(s.refs, 2);
+        assert_eq!(s.bytes_saved, b"same bytes in both tenants".len() as u64);
+
+        // Both names still read the same bytes, via one shared inode.
+        assert_eq!(std::fs::read(&a).unwrap(), std::fs::read(&b).unwrap());
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::MetadataExt;
+            assert_eq!(
+                std::fs::metadata(&a).unwrap().ino(),
+                std::fs::metadata(&b).unwrap().ino()
+            );
+            // a + b + blob share the inode.
+            assert_eq!(std::fs::metadata(&a).unwrap().nlink(), 3);
+        }
+    }
+
+    #[test]
+    fn crc_collision_gets_its_own_bucket() {
+        // Force the collision path by ingesting two different payloads,
+        // then lying about the key: simulate by ingesting files whose
+        // bytes differ — if their (crc,len) happened to collide the
+        // byte-compare must separate them. We can't manufacture a real
+        // crc32 collision cheaply, so instead verify different bytes
+        // never dedup even with equal length.
+        let root = tmpdir("collision");
+        let mut store = DedupStore::open(root.join("objects")).unwrap();
+        let a = root.join("a.cpcm");
+        let b = root.join("b.cpcm");
+        write(&a, b"payload-one!");
+        write(&b, b"payload-two!");
+        assert_eq!(store.ingest(&a).unwrap(), Ingest::Miss);
+        assert_eq!(store.ingest(&b).unwrap(), Ingest::Miss);
+        assert_eq!(std::fs::read(&a).unwrap(), b"payload-one!");
+        assert_eq!(std::fs::read(&b).unwrap(), b"payload-two!");
+    }
+
+    #[test]
+    fn index_survives_reopen() {
+        let root = tmpdir("reopen");
+        let objects = root.join("objects");
+        let a = root.join("a.cpcm");
+        let b = root.join("b.cpcm");
+        write(&a, b"persistent payload");
+        write(&b, b"persistent payload");
+        {
+            let mut store = DedupStore::open(&objects).unwrap();
+            assert_eq!(store.ingest(&a).unwrap(), Ingest::Miss);
+        }
+        // New process image: the refcount index must come back from disk.
+        let mut store = DedupStore::open(&objects).unwrap();
+        assert_eq!(store.ingest(&b).unwrap(), Ingest::Hit);
+        assert_eq!(store.stats().refs, 2);
+    }
+
+    #[test]
+    fn re_ingesting_a_deduped_file_is_a_stable_hit() {
+        let root = tmpdir("reingest");
+        let mut store = DedupStore::open(root.join("objects")).unwrap();
+        let a = root.join("a.cpcm");
+        write(&a, b"bytes");
+        assert_eq!(store.ingest(&a).unwrap(), Ingest::Miss);
+        // Re-flushing the same (already-linked) file must not inflate
+        // refcounts or duplicate blobs.
+        assert_eq!(store.ingest(&a).unwrap(), Ingest::Hit);
+        let s = store.stats();
+        assert_eq!((s.blobs, s.refs), (1, 1));
+    }
+
+    #[test]
+    fn release_reclaims_at_zero_refs() {
+        let root = tmpdir("release");
+        let mut store = DedupStore::open(root.join("objects")).unwrap();
+        let a = root.join("a.cpcm");
+        let b = root.join("b.cpcm");
+        write(&a, b"reclaim me");
+        write(&b, b"reclaim me");
+        store.ingest(&a).unwrap();
+        store.ingest(&b).unwrap();
+        assert_eq!(store.stats().refs, 2);
+        store.release(&a).unwrap();
+        assert_eq!(store.stats().refs, 1);
+        store.release(&b).unwrap();
+        assert_eq!(store.stats().blobs, 0);
+        // The data the tenant files hold is untouched by blob reclaim.
+        assert_eq!(std::fs::read(&a).unwrap(), b"reclaim me");
+    }
+}

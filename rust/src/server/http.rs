@@ -1,0 +1,432 @@
+//! Hand-rolled HTTP/1.1 request parsing and response writing.
+//!
+//! The daemon speaks a deliberately tiny subset of HTTP/1.1 — enough for
+//! `curl` and the loopback clients in the test battery — with **strict
+//! untrusted-input limits** enforced before any allocation is sized by
+//! attacker-controlled data:
+//!
+//! - request line ≤ [`Limits::max_line`] bytes (else `414`),
+//! - ≤ [`Limits::max_headers`] headers, each ≤ `max_line` bytes (else
+//!   `431`),
+//! - bodies require `Content-Length` (`411` without one on POST) and are
+//!   capped at [`Limits::max_body`] **before** the body buffer is
+//!   allocated (`413`),
+//! - `Transfer-Encoding` (chunked uploads) is not implemented and is
+//!   refused with `501` instead of being silently misparsed.
+//!
+//! Every connection is one request/response exchange (`Connection: close`
+//! semantics): no keep-alive, no pipelining, so a parse error can always
+//! safely tear the connection down. [`read_request`] is generic over
+//! [`BufRead`] so the hostile-input fuzz battery drives the exact
+//! production parser in-process with no socket.
+
+use crate::util::json::Json;
+use std::io::{BufRead, Write};
+
+/// Untrusted-input bounds for [`read_request`].
+#[derive(Clone, Copy, Debug)]
+pub struct Limits {
+    /// Maximum bytes in the request line and in any single header line.
+    pub max_line: usize,
+    /// Maximum number of header lines.
+    pub max_headers: usize,
+    /// Maximum `Content-Length` the server will buffer.
+    pub max_body: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Self { max_line: 8192, max_headers: 64, max_body: 256 << 20 }
+    }
+}
+
+/// Why a request could not be parsed.
+#[derive(Debug)]
+pub enum ParseError {
+    /// Connection closed before the first request byte (normal teardown).
+    Closed,
+    /// Malformed request (syntax, truncation, bad UTF-8, bad framing).
+    Bad(String),
+    /// Request line exceeded [`Limits::max_line`].
+    UriTooLong,
+    /// Header section exceeded [`Limits::max_headers`] lines or a header
+    /// line exceeded [`Limits::max_line`] bytes.
+    HeadersTooLarge,
+    /// POST without a `Content-Length` header.
+    LengthRequired,
+    /// Declared `Content-Length` exceeds [`Limits::max_body`].
+    PayloadTooLarge,
+    /// Valid HTTP the daemon deliberately does not speak.
+    Unsupported(String),
+    /// Transport error mid-request.
+    Io(std::io::Error),
+}
+
+impl ParseError {
+    /// The error response to send, if the connection is still worth
+    /// writing to (`None` for [`ParseError::Closed`] / [`ParseError::Io`]).
+    pub fn response(&self) -> Option<Response> {
+        let (status, msg) = match self {
+            ParseError::Closed | ParseError::Io(_) => return None,
+            ParseError::Bad(m) => (400, m.as_str()),
+            ParseError::UriTooLong => (414, "request line too long"),
+            ParseError::HeadersTooLarge => (431, "header section too large"),
+            ParseError::LengthRequired => (411, "POST requires Content-Length"),
+            ParseError::PayloadTooLarge => (413, "body exceeds the configured limit"),
+            ParseError::Unsupported(m) => (501, m.as_str()),
+        };
+        Some(Response::error(status, msg))
+    }
+}
+
+/// One parsed request. Header names are lower-cased; the body is fully
+/// read (bounded by [`Limits::max_body`]) before the router runs.
+#[derive(Debug)]
+pub struct Request {
+    /// Request method (`GET`, `POST`, …) exactly as sent.
+    pub method: String,
+    /// Request target (always starts with `/`).
+    pub path: String,
+    /// `(lowercased-name, trimmed-value)` pairs in arrival order.
+    pub headers: Vec<(String, String)>,
+    /// Request body (empty unless `Content-Length` was sent).
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First header with the given lower-case name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+}
+
+enum Line {
+    Text(String),
+    Eof,
+}
+
+enum LineErr {
+    TooLong,
+    Truncated,
+    NotUtf8,
+    Io(std::io::Error),
+}
+
+/// Read one CRLF- (or bare-LF-) terminated line, never buffering more
+/// than `cap` bytes.
+fn read_line(r: &mut impl BufRead, cap: usize) -> Result<Line, LineErr> {
+    let mut buf = Vec::new();
+    loop {
+        let mut b = [0u8; 1];
+        let n = r.read(&mut b).map_err(LineErr::Io)?;
+        if n == 0 {
+            if buf.is_empty() {
+                return Ok(Line::Eof);
+            }
+            return Err(LineErr::Truncated);
+        }
+        if b[0] == b'\n' {
+            if buf.last() == Some(&b'\r') {
+                buf.pop();
+            }
+            let s = String::from_utf8(buf).map_err(|_| LineErr::NotUtf8)?;
+            return Ok(Line::Text(s));
+        }
+        if buf.len() >= cap {
+            return Err(LineErr::TooLong);
+        }
+        buf.push(b[0]);
+    }
+}
+
+fn map_line_err(e: LineErr, too_long: ParseError) -> ParseError {
+    match e {
+        LineErr::TooLong => too_long,
+        LineErr::Truncated => ParseError::Bad("truncated request".into()),
+        LineErr::NotUtf8 => ParseError::Bad("request is not valid utf-8".into()),
+        LineErr::Io(e) => ParseError::Io(e),
+    }
+}
+
+/// True for an RFC 7230 `token` usable as a method or header name.
+fn is_token(s: &str) -> bool {
+    !s.is_empty()
+        && s.bytes().all(|b| {
+            b.is_ascii_alphanumeric() || matches!(b, b'-' | b'_' | b'!' | b'#' | b'.' | b'~')
+        })
+}
+
+/// Parse one request from `r` under `limits`. See the module docs for
+/// the exact subset and the error → status mapping.
+pub fn read_request(r: &mut impl BufRead, limits: &Limits) -> Result<Request, ParseError> {
+    // Request line.
+    let line = match read_line(r, limits.max_line)
+        .map_err(|e| map_line_err(e, ParseError::UriTooLong))?
+    {
+        Line::Eof => return Err(ParseError::Closed),
+        Line::Text(s) => s,
+    };
+    let mut parts = line.split(' ');
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v), None) => (m, t, v),
+        _ => return Err(ParseError::Bad("malformed request line".into())),
+    };
+    if !is_token(method) || method.len() > 16 {
+        return Err(ParseError::Bad("malformed method".into()));
+    }
+    if !target.starts_with('/') || !target.bytes().all(|b| (0x21..=0x7e).contains(&b)) {
+        return Err(ParseError::Bad("malformed request target".into()));
+    }
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(ParseError::Bad("unsupported protocol version".into()));
+    }
+
+    // Header section.
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let line = match read_line(r, limits.max_line)
+            .map_err(|e| map_line_err(e, ParseError::HeadersTooLarge))?
+        {
+            Line::Eof => return Err(ParseError::Bad("eof inside header section".into())),
+            Line::Text(s) => s,
+        };
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= limits.max_headers {
+            return Err(ParseError::HeadersTooLarge);
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(ParseError::Bad("header line without ':'".into()));
+        };
+        if !is_token(name) {
+            return Err(ParseError::Bad("malformed header name".into()));
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    // Framing. Chunked uploads are refused rather than misparsed.
+    let find = |n: &str| headers.iter().find(|(k, _)| k == n).map(|(_, v)| v.clone());
+    if find("transfer-encoding").is_some() {
+        return Err(ParseError::Unsupported("transfer-encoding is not supported".into()));
+    }
+    let content_length = match find("content-length") {
+        None => {
+            if method == "POST" {
+                return Err(ParseError::LengthRequired);
+            }
+            0
+        }
+        Some(v) => {
+            let n: u64 = v
+                .parse()
+                .map_err(|_| ParseError::Bad("malformed Content-Length".into()))?;
+            if n > limits.max_body as u64 {
+                return Err(ParseError::PayloadTooLarge);
+            }
+            n as usize
+        }
+    };
+
+    // Body: the length was validated above, so this allocation is bounded.
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        r.read_exact(&mut body)
+            .map_err(|_| ParseError::Bad("body shorter than Content-Length".into()))?;
+    }
+
+    Ok(Request { method: method.to_string(), path: target.to_string(), headers, body })
+}
+
+/// One response, always written with `Connection: close`.
+#[derive(Debug)]
+pub struct Response {
+    status: u16,
+    content_type: &'static str,
+    extra: Vec<(String, String)>,
+    body: Vec<u8>,
+}
+
+impl Response {
+    /// Response with an explicit content type and body.
+    pub fn new(status: u16, content_type: &'static str, body: Vec<u8>) -> Self {
+        Self { status, content_type, extra: Vec::new(), body }
+    }
+
+    /// Plain-text response.
+    pub fn text(status: u16, body: impl Into<String>) -> Self {
+        Self::new(status, "text/plain; charset=utf-8", body.into().into_bytes())
+    }
+
+    /// JSON response.
+    pub fn json(status: u16, body: &Json) -> Self {
+        Self::new(status, "application/json", body.to_string().into_bytes())
+    }
+
+    /// Binary response (checkpoint downloads).
+    pub fn bytes(status: u16, body: Vec<u8>) -> Self {
+        Self::new(status, "application/octet-stream", body)
+    }
+
+    /// Named JSON error: `{"error": "<msg>"}`.
+    pub fn error(status: u16, msg: &str) -> Self {
+        Self::json(status, &Json::obj(vec![("error", Json::str(msg))]))
+    }
+
+    /// Add a header (e.g. `Retry-After` on a shed).
+    pub fn with_header(mut self, name: &str, value: impl Into<String>) -> Self {
+        self.extra.push((name.to_string(), value.into()));
+        self
+    }
+
+    /// Status code (for access metrics).
+    pub fn status(&self) -> u16 {
+        self.status
+    }
+
+    /// Body length in bytes (for access metrics).
+    pub fn body_len(&self) -> usize {
+        self.body.len()
+    }
+
+    /// Serialize the full response to `w`.
+    pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        write!(w, "HTTP/1.1 {} {}\r\n", self.status, reason(self.status))?;
+        write!(w, "Content-Type: {}\r\n", self.content_type)?;
+        write!(w, "Content-Length: {}\r\n", self.body.len())?;
+        write!(w, "Connection: close\r\n")?;
+        for (k, v) in &self.extra {
+            write!(w, "{k}: {v}\r\n")?;
+        }
+        write!(w, "\r\n")?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        414 => "URI Too Long",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &[u8]) -> Result<Request, ParseError> {
+        read_request(&mut Cursor::new(raw), &Limits::default())
+    }
+
+    #[test]
+    fn simple_get_parses() {
+        let req = parse(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert_eq!(req.header("host"), Some("x"));
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn post_with_body_parses() {
+        let req =
+            parse(b"POST /v1/tenants/a/checkpoints HTTP/1.1\r\nContent-Length: 5\r\n\r\nhello")
+                .unwrap();
+        assert_eq!(req.body, b"hello");
+    }
+
+    #[test]
+    fn post_without_length_is_411() {
+        assert!(matches!(parse(b"POST /x HTTP/1.1\r\n\r\n"), Err(ParseError::LengthRequired)));
+    }
+
+    #[test]
+    fn oversized_declared_body_is_413_before_allocation() {
+        // A huge Content-Length must be refused without allocating it.
+        let raw = b"POST /x HTTP/1.1\r\nContent-Length: 99999999999\r\n\r\n";
+        let err = read_request(
+            &mut Cursor::new(&raw[..]),
+            &Limits { max_body: 1024, ..Limits::default() },
+        )
+        .unwrap_err();
+        assert!(matches!(err, ParseError::PayloadTooLarge));
+    }
+
+    #[test]
+    fn absurd_content_length_is_400() {
+        let raw = b"POST /x HTTP/1.1\r\nContent-Length: 99999999999999999999999\r\n\r\n";
+        assert!(matches!(parse(raw), Err(ParseError::Bad(_))));
+    }
+
+    #[test]
+    fn long_request_line_is_414() {
+        let mut raw = b"GET /".to_vec();
+        raw.extend(vec![b'a'; 10_000]);
+        raw.extend_from_slice(b" HTTP/1.1\r\n\r\n");
+        assert!(matches!(parse(&raw), Err(ParseError::UriTooLong)));
+    }
+
+    #[test]
+    fn too_many_headers_is_431() {
+        let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+        for i in 0..100 {
+            raw.extend_from_slice(format!("X-H{i}: v\r\n").as_bytes());
+        }
+        raw.extend_from_slice(b"\r\n");
+        assert!(matches!(parse(&raw), Err(ParseError::HeadersTooLarge)));
+    }
+
+    #[test]
+    fn chunked_upload_is_refused() {
+        let raw = b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n";
+        assert!(matches!(parse(raw), Err(ParseError::Unsupported(_))));
+    }
+
+    #[test]
+    fn truncated_body_is_400() {
+        let raw = b"POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nhi";
+        assert!(matches!(parse(raw), Err(ParseError::Bad(_))));
+    }
+
+    #[test]
+    fn empty_connection_is_closed_not_error() {
+        assert!(matches!(parse(b""), Err(ParseError::Closed)));
+    }
+
+    #[test]
+    fn binary_garbage_is_a_clean_400() {
+        let raw: Vec<u8> = (0u8..=255).collect();
+        match parse(&raw) {
+            Err(ParseError::Bad(_)) | Err(ParseError::UriTooLong) => {}
+            other => panic!("expected Bad/UriTooLong, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn response_serializes_with_close_and_length() {
+        let mut out = Vec::new();
+        Response::error(429, "quota exceeded")
+            .with_header("Retry-After", "1")
+            .write_to(&mut out)
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("Connection: close\r\n"));
+        assert!(text.contains("Retry-After: 1\r\n"));
+        assert!(text.ends_with("{\"error\":\"quota exceeded\"}"));
+    }
+}

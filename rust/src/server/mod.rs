@@ -1,0 +1,600 @@
+//! `cpcm serve` — a multi-tenant checkpoint-compression daemon.
+//!
+//! One long-running process wraps the pipelined [`Coordinator`] so a
+//! fleet of training jobs can share a single compression service (the
+//! ROADMAP's "millions of users" direction; the IBM incremental-snapshot
+//! system, arXiv:2505.09810, frames checkpoint compression as exactly
+//! this storage-service problem). The crate stays dependency-free: the
+//! wire protocol is hand-rolled HTTP/1.1 over [`std::net::TcpListener`]
+//! ([`http`]), one request per connection, strict untrusted-input limits.
+//!
+//! ## Wire surface
+//!
+//! ```text
+//! GET  /healthz                               → 200 "ok"
+//! GET  /metrics                               → 200 text exposition
+//! POST /v1/tenants/<t>/checkpoints  (body = raw `CPCKPT01` checkpoint)
+//!        → 202 queued | 429 shed (backpressure/quota, Retry-After) | 4xx
+//! POST /v1/tenants/<t>/flush
+//!        → 200 {results, stored_bytes}: drains the pipeline, dedups the
+//!          finished containers, acknowledges the chain
+//! GET  /v1/tenants/<t>/checkpoints/<step>     → 200 raw checkpoint bytes
+//! ```
+//!
+//! ## Per-tenant namespaces and sessions
+//!
+//! Every tenant owns `<root>/tenants/<name>/` — a normal chain directory
+//! (`manifest.json` + containers) that all existing library/CLI tooling
+//! understands ([`tenant`]). The first submit lazily starts a pipelined
+//! coordinator session for the tenant; `flush` drains it and returns the
+//! per-step results. Because the write stage persists the manifest after
+//! every step, restores of *acknowledged* (flushed) steps are always
+//! served from a consistent on-disk chain; a submit after a flush simply
+//! opens a new session whose first frame is a keyframe.
+//!
+//! ## Dedup, quotas, admission
+//!
+//! Finished containers are ingested into a content-addressed blob store
+//! ([`dedup`]) at flush time: identical container bytes across tenants
+//! and steps collapse to one hard-linked inode, refcounted in a durable
+//! index written through [`crate::util::fs_atomic`]. Per-tenant byte
+//! quotas meter the *acknowledged* compressed bytes in the manifest
+//! (in-flight steps can overshoot by at most one session); over-quota
+//! submits shed with `429`. Two admission layers reuse the existing
+//! [`BoundedQueue`] backpressure: a connection semaphore sheds accepts
+//! with `429 + Retry-After` when all slots are busy, and a full
+//! coordinator intake queue sheds submits the same way
+//! ([`Coordinator::try_submit`] hands the checkpoint back untouched).
+//!
+//! ## Metrics
+//!
+//! `/metrics` renders the server's [`Metrics`] registry (counters,
+//! gauges, timings) plus per-tenant counters (sessions, bytes in/out,
+//! dedup hits/misses, shed requests, stored bytes) and dedup-store
+//! totals, one `name{labels} value` line each.
+
+pub mod dedup;
+pub mod http;
+pub mod router;
+pub mod tenant;
+
+use crate::checkpoint::Checkpoint;
+use crate::codec::CodecConfig;
+use crate::coordinator::{ChainManifest, Coordinator, CoordinatorConfig, SubmitOutcome};
+use crate::lstm::Backend;
+use crate::metrics::Metrics;
+use crate::util::json::Json;
+use crate::util::queue::{BoundedQueue, PushError};
+use crate::Result;
+use http::{Limits, Request, Response};
+use router::Route;
+use std::fmt::Write as _;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Daemon settings (the `Backend` is passed separately to
+/// [`Server::bind`] so the shared state can serialize access to it).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Listen address, e.g. `127.0.0.1:7070` (port 0 ⇒ ephemeral).
+    pub addr: String,
+    /// Serve root: `tenants/` chain dirs + `objects/` dedup store.
+    pub root: PathBuf,
+    /// Codec settings shared by every tenant session.
+    pub codec: CodecConfig,
+    /// Coordinator queue depth per tenant session (backpressure bound).
+    pub queue_depth: usize,
+    /// Keyframe cadence for tenant chains (0 ⇒ only the first frame).
+    pub keyframe_every: u64,
+    /// Maximum concurrent tenant namespaces (0 ⇒ unlimited).
+    pub max_tenants: usize,
+    /// Per-tenant quota on acknowledged compressed bytes (0 ⇒ unlimited).
+    pub quota_bytes: u64,
+    /// Concurrent-connection cap (the admission semaphore's capacity).
+    pub max_conns: usize,
+    /// Largest accepted request body.
+    pub max_body_bytes: usize,
+}
+
+impl ServeConfig {
+    /// Defaults from [`crate::config`]'s serve limits, rooted at `root`.
+    pub fn new(root: impl Into<PathBuf>) -> Self {
+        Self {
+            addr: crate::config::SERVE_DEFAULT_ADDR.to_string(),
+            root: root.into(),
+            codec: CodecConfig::default(),
+            queue_depth: 2,
+            keyframe_every: 0,
+            max_tenants: crate::config::SERVE_DEFAULT_MAX_TENANTS,
+            quota_bytes: 0,
+            max_conns: crate::config::SERVE_DEFAULT_MAX_CONNS,
+            max_body_bytes: crate::config::SERVE_DEFAULT_MAX_BODY_BYTES,
+        }
+    }
+}
+
+fn lock_recovering<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Shared state of one daemon instance.
+struct ServerState {
+    cfg: ServeConfig,
+    /// The probability-model backend, cloned per session/restore. Kept
+    /// behind a mutex so the state is `Sync` without assuming the
+    /// backend is.
+    backend: Mutex<Backend>,
+    registry: tenant::Registry,
+    dedup: Mutex<dedup::DedupStore>,
+    metrics: Arc<Metrics>,
+    /// Connection-admission semaphore (one token per in-flight
+    /// connection; `try_push` full ⇒ shed with 429).
+    admission: BoundedQueue<()>,
+    stop: AtomicBool,
+    active: AtomicUsize,
+    restore_token: AtomicU64,
+}
+
+/// A bound (not yet running) daemon.
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<ServerState>,
+}
+
+/// Handle to a daemon running on a background thread (tests, embedding).
+pub struct ServerHandle {
+    addr: SocketAddr,
+    state: Arc<ServerState>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `cfg.addr`, create the serve-root layout and load the dedup
+    /// index. The daemon does not accept connections until
+    /// [`Server::run`] or [`Server::spawn`].
+    pub fn bind(cfg: ServeConfig, backend: Backend) -> Result<Self> {
+        std::fs::create_dir_all(cfg.root.join("tenants"))?;
+        std::fs::create_dir_all(cfg.root.join("tmp"))?;
+        let dedup = dedup::DedupStore::open(cfg.root.join("objects"))?;
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let registry = tenant::Registry::new(&cfg.root, cfg.max_tenants);
+        let admission = BoundedQueue::new(cfg.max_conns.max(1));
+        let state = Arc::new(ServerState {
+            cfg,
+            backend: Mutex::new(backend),
+            registry,
+            dedup: Mutex::new(dedup),
+            metrics: Arc::new(Metrics::new()),
+            admission,
+            stop: AtomicBool::new(false),
+            active: AtomicUsize::new(0),
+            restore_token: AtomicU64::new(0),
+        });
+        Ok(Self { listener, state })
+    }
+
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Serve until the process exits (the CLI path).
+    pub fn run(self) -> Result<()> {
+        accept_loop(self.listener, self.state);
+        Ok(())
+    }
+
+    /// Serve on a background thread; the handle shuts the daemon down.
+    pub fn spawn(self) -> Result<ServerHandle> {
+        let addr = self.local_addr()?;
+        let Server { listener, state } = self;
+        let thread_state = state.clone();
+        let join = std::thread::Builder::new()
+            .name("cpcm-serve-accept".into())
+            .spawn(move || accept_loop(listener, thread_state))
+            .map_err(crate::Error::Io)?;
+        Ok(ServerHandle { addr, state, join: Some(join) })
+    }
+}
+
+impl ServerHandle {
+    /// Address the daemon is listening on.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, join the accept thread and wait (bounded) for
+    /// in-flight connections to finish.
+    pub fn shutdown(mut self) {
+        self.state.stop.store(true, Ordering::SeqCst);
+        // Nudge the blocking accept so it observes the stop flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+        let t0 = Instant::now();
+        while self.state.active.load(Ordering::SeqCst) > 0
+            && t0.elapsed() < Duration::from_secs(10)
+        {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+}
+
+/// Decrements the admission semaphore + active-connection count when a
+/// connection thread exits on any path.
+struct ConnSlot {
+    state: Arc<ServerState>,
+}
+
+impl Drop for ConnSlot {
+    fn drop(&mut self) {
+        let _ = self.state.admission.pop();
+        self.state.active.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+fn accept_loop(listener: TcpListener, state: Arc<ServerState>) {
+    for conn in listener.incoming() {
+        if state.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = conn else { continue };
+        state.metrics.count("connections", 1);
+        match state.admission.try_push(()) {
+            Ok(()) => {
+                state.active.fetch_add(1, Ordering::SeqCst);
+                // The slot guard is created here and moved into the
+                // closure: if the spawn itself fails, dropping the
+                // closure releases the token instead of leaking it.
+                let slot = ConnSlot { state: state.clone() };
+                let state = state.clone();
+                let _ = std::thread::Builder::new()
+                    .name("cpcm-serve-conn".into())
+                    .spawn(move || {
+                        let _slot = slot;
+                        handle_conn(&state, stream);
+                    });
+            }
+            Err(PushError::Full(())) => {
+                // All connection slots busy: shed at the door, before
+                // reading a single request byte.
+                state.metrics.count("shed_connections", 1);
+                let mut stream = stream;
+                let _ = Response::error(429, "server at connection capacity")
+                    .with_header("Retry-After", "1")
+                    .write_to(&mut stream);
+            }
+            Err(PushError::Closed(())) => {
+                let mut stream = stream;
+                let _ = Response::error(503, "shutting down").write_to(&mut stream);
+            }
+        }
+    }
+}
+
+fn handle_conn(state: &Arc<ServerState>, stream: TcpStream) {
+    // Bound hostile slow senders; a stuck peer costs one slot for 30s,
+    // not forever.
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    let mut reader = BufReader::new(stream);
+    let limits = Limits { max_body: state.cfg.max_body_bytes, ..Limits::default() };
+    // On a parse error the request may be partly unread; closing with
+    // unread bytes in the kernel buffer resets the connection and can
+    // discard the error response in flight, so those paths get a
+    // bounded drain after the write.
+    let mut drain = false;
+    let response = match http::read_request(&mut reader, &limits) {
+        Ok(req) => {
+            state.metrics.count("http_requests", 1);
+            state.metrics.count("http_bytes_in", req.body.len() as u64);
+            let t0 = Instant::now();
+            let resp = respond(state, &req);
+            state.metrics.time("request", t0.elapsed().as_secs_f64());
+            resp
+        }
+        Err(e) => {
+            match e.response() {
+                Some(resp) => {
+                    state.metrics.count("http_parse_errors", 1);
+                    drain = true;
+                    resp
+                }
+                // Clean close or transport error: nothing to write.
+                None => return,
+            }
+        }
+    };
+    state.metrics.count(&format!("http_status_{}xx", response.status() / 100), 1);
+    state.metrics.count("http_bytes_out", response.body_len() as u64);
+    let mut stream = reader.into_inner();
+    let _ = response.write_to(&mut stream);
+    if drain {
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+        let mut sink = [0u8; 8192];
+        let mut budget: usize = 1 << 20;
+        loop {
+            match std::io::Read::read(&mut stream, &mut sink) {
+                Ok(n) if n > 0 && n <= budget => budget -= n,
+                _ => break,
+            }
+        }
+    }
+}
+
+fn respond(state: &Arc<ServerState>, req: &Request) -> Response {
+    let route = match router::route(&req.method, &req.path) {
+        Ok(r) => r,
+        Err(resp) => return resp,
+    };
+    match route {
+        Route::Health => Response::text(200, "ok\n"),
+        Route::Metrics => Response::text(200, render_metrics(state)),
+        Route::Submit { tenant } => handle_submit(state, &tenant, &req.body),
+        Route::Flush { tenant } => handle_flush(state, &tenant),
+        Route::Restore { tenant, step } => handle_restore(state, &tenant, step),
+    }
+}
+
+fn start_session(state: &ServerState, t: &mut tenant::Tenant) -> Result<()> {
+    let backend = lock_recovering(&state.backend).clone();
+    let mut cfg = CoordinatorConfig::new(state.cfg.codec.clone(), backend, t.dir.clone());
+    cfg.queue_depth = state.cfg.queue_depth;
+    cfg.keyframe_every = state.cfg.keyframe_every;
+    t.session = Some(Coordinator::start(cfg)?);
+    t.stats.sessions += 1;
+    state.metrics.count("sessions_started", 1);
+    Ok(())
+}
+
+fn handle_submit(state: &Arc<ServerState>, name: &str, body: &[u8]) -> Response {
+    let handle = match state.registry.get_or_create(name) {
+        Ok(h) => h,
+        Err(tenant::TenantError::InvalidName) => {
+            let msg = "invalid tenant name ([A-Za-z0-9._-]{1,64}, no leading dot)";
+            return Response::error(400, msg);
+        }
+        Err(tenant::TenantError::Capacity) => {
+            state.metrics.count("shed_tenant_capacity", 1);
+            return Response::error(429, "tenant capacity reached")
+                .with_header("Retry-After", "5");
+        }
+    };
+    let mut t = tenant::lock_tenant(&handle);
+    t.stats.bytes_in += body.len() as u64;
+
+    // Quota meters acknowledged (flushed) bytes; see module docs.
+    if state.cfg.quota_bytes > 0 && t.stats.stored_bytes >= state.cfg.quota_bytes {
+        t.stats.shed_requests += 1;
+        state.metrics.count("shed_quota", 1);
+        return Response::error(
+            429,
+            &format!(
+                "quota exceeded: {} stored bytes >= {} byte quota",
+                t.stats.stored_bytes, state.cfg.quota_bytes
+            ),
+        );
+    }
+
+    let ck = match Checkpoint::from_bytes(body) {
+        Ok(ck) => ck,
+        Err(e) => return Response::error(400, &format!("malformed checkpoint: {e}")),
+    };
+    let step = ck.step;
+
+    if t.session.is_none() {
+        if let Err(e) = start_session(state, &mut t) {
+            return Response::error(500, &format!("session start failed: {e}"));
+        }
+    }
+    let session = t.session.as_ref().expect("session started above");
+    match session.try_submit(ck) {
+        Ok(SubmitOutcome::Queued) => {
+            state.metrics.count("checkpoints_accepted", 1);
+            Response::json(
+                202,
+                &Json::obj(vec![
+                    ("tenant", Json::str(name)),
+                    ("step", Json::num(step as f64)),
+                    ("queued", Json::Bool(true)),
+                ]),
+            )
+        }
+        Ok(SubmitOutcome::Rejected(_)) => {
+            // BoundedQueue backpressure: hand the bytes back to the
+            // trainer instead of buffering unbounded checkpoints.
+            t.stats.shed_requests += 1;
+            state.metrics.count("shed_backpressure", 1);
+            Response::error(429, "pipeline backlog, retry with backoff")
+                .with_header("Retry-After", "1")
+        }
+        Err(e) => {
+            // The pipeline closed under us (a stage failed): reap it so
+            // the stage error is not lost, then reset the session.
+            let msg = match t.session.take() {
+                Some(broken) => match broken.finish() {
+                    Ok(_) => e.to_string(),
+                    Err(stage_err) => stage_err.to_string(),
+                },
+                None => e.to_string(),
+            };
+            state.metrics.count("session_failures", 1);
+            Response::error(500, &format!("pipeline failed: {msg}"))
+        }
+    }
+}
+
+fn handle_flush(state: &Arc<ServerState>, name: &str) -> Response {
+    let Some(handle) = state.registry.get(name) else {
+        return Response::error(404, "unknown tenant");
+    };
+    let mut t = tenant::lock_tenant(&handle);
+    let Some(session) = t.session.take() else {
+        // Idempotent: flushing an already-drained tenant acks its state.
+        return flush_ack(name, &[], t.stats.stored_bytes);
+    };
+    let results = match session.finish() {
+        Ok(r) => r,
+        Err(e) => {
+            state.metrics.count("session_failures", 1);
+            return Response::error(500, &format!("pipeline failed during flush: {e}"));
+        }
+    };
+    for r in &results {
+        match lock_recovering(&state.dedup).ingest(&r.path) {
+            Ok(dedup::Ingest::Hit) => {
+                t.stats.dedup_hits += 1;
+                state.metrics.count("dedup_hits", 1);
+            }
+            Ok(dedup::Ingest::Miss) => {
+                t.stats.dedup_misses += 1;
+                state.metrics.count("dedup_misses", 1);
+            }
+            // The chain is intact without dedup; don't fail the flush.
+            Err(_) => state.metrics.count("dedup_errors", 1),
+        }
+    }
+    if let Err(e) = t.refresh_stored_bytes() {
+        return Response::error(500, &format!("manifest unreadable after flush: {e}"));
+    }
+    flush_ack(name, &results, t.stats.stored_bytes)
+}
+
+fn flush_ack(
+    name: &str,
+    results: &[crate::coordinator::JobResult],
+    stored_bytes: u64,
+) -> Response {
+    let rows: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("step", Json::num(r.step as f64)),
+                (
+                    "ref_step",
+                    r.ref_step.map(|s| Json::num(s as f64)).unwrap_or(Json::Null),
+                ),
+                ("bytes", Json::num(r.bytes as f64)),
+            ])
+        })
+        .collect();
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("tenant", Json::str(name)),
+            ("results", Json::Arr(rows)),
+            ("stored_bytes", Json::num(stored_bytes as f64)),
+        ]),
+    )
+}
+
+fn handle_restore(state: &Arc<ServerState>, name: &str, step: u64) -> Response {
+    let Some(handle) = state.registry.get(name) else {
+        return Response::error(404, "unknown tenant");
+    };
+    let mut t = tenant::lock_tenant(&handle);
+    if !ChainManifest::exists_in(&t.dir) {
+        return Response::error(404, "tenant has no flushed checkpoints");
+    }
+    let manifest = match ChainManifest::load(&t.dir) {
+        Ok(m) => m,
+        Err(e) => return Response::error(500, &format!("manifest unreadable: {e}")),
+    };
+    if manifest.entry(step).is_none() {
+        return Response::error(404, "step not in the acknowledged chain (flush first?)");
+    }
+
+    // Restore through the library path into the serve tmp dir, then
+    // stream the bytes back. The per-invocation work-dir token in
+    // `restore_step_to_file_with` makes concurrent same-step restores
+    // safe (that was satellite bugfix #1).
+    let token = state.restore_token.fetch_add(1, Ordering::Relaxed);
+    let out = state.cfg.root.join("tmp").join(format!("out_{name}_{step}_{token}.bin"));
+    let backend = lock_recovering(&state.backend).clone();
+    let restored = crate::coordinator::restore_step_to_file_with(&t.dir, &backend, step, &out, 0)
+        .and_then(|()| std::fs::read(&out).map_err(crate::Error::from));
+    let _ = std::fs::remove_file(&out);
+    match restored {
+        Ok(bytes) => {
+            t.stats.bytes_out += bytes.len() as u64;
+            state.metrics.count("restores_served", 1);
+            Response::bytes(200, bytes)
+        }
+        Err(e) => Response::error(500, &format!("restore failed: {e}")),
+    }
+}
+
+fn sanitize_metric(name: &str) -> String {
+    name.chars().map(|c| if c.is_ascii_alphanumeric() { c } else { '_' }).collect()
+}
+
+/// Render the `/metrics` text exposition (see module docs).
+fn render_metrics(state: &Arc<ServerState>) -> String {
+    let mut out = String::from("# cpcm serve metrics\n");
+    let snap = state.metrics.snapshot();
+    if let Some(counters) = snap.get("counters").and_then(|j| j.as_obj()) {
+        for (k, v) in counters {
+            let _ = writeln!(
+                out,
+                "cpcm_{} {}",
+                sanitize_metric(k),
+                v.as_f64().unwrap_or(0.0) as u64
+            );
+        }
+    }
+    if let Some(gauges) = snap.get("gauges").and_then(|j| j.as_obj()) {
+        for (k, v) in gauges {
+            let _ = writeln!(out, "cpcm_{} {}", sanitize_metric(k), v.as_f64().unwrap_or(0.0));
+        }
+    }
+    if let Some(timings) = snap.get("timings").and_then(|j| j.as_obj()) {
+        for (k, v) in timings {
+            let name = sanitize_metric(k);
+            let count = v.get("count").and_then(|j| j.as_f64()).unwrap_or(0.0) as u64;
+            let total = v.get("total_s").and_then(|j| j.as_f64()).unwrap_or(0.0);
+            let _ = writeln!(out, "cpcm_{name}_count {count}");
+            let _ = writeln!(out, "cpcm_{name}_total_s {total}");
+        }
+    }
+    let d = lock_recovering(&state.dedup).stats();
+    let _ = writeln!(out, "cpcm_dedup_blobs {}", d.blobs);
+    let _ = writeln!(out, "cpcm_dedup_refs {}", d.refs);
+    let _ = writeln!(out, "cpcm_dedup_bytes_saved {}", d.bytes_saved);
+    let _ = writeln!(out, "cpcm_tenants {}", state.registry.len());
+    for (name, s) in state.registry.stats_snapshot() {
+        let label = format!("{{tenant=\"{name}\"}}");
+        let _ = writeln!(out, "cpcm_tenant_sessions{label} {}", s.sessions);
+        let _ = writeln!(out, "cpcm_tenant_bytes_in{label} {}", s.bytes_in);
+        let _ = writeln!(out, "cpcm_tenant_bytes_out{label} {}", s.bytes_out);
+        let _ = writeln!(out, "cpcm_tenant_dedup_hits{label} {}", s.dedup_hits);
+        let _ = writeln!(out, "cpcm_tenant_dedup_misses{label} {}", s.dedup_misses);
+        let _ = writeln!(out, "cpcm_tenant_shed_requests{label} {}", s.shed_requests);
+        let _ = writeln!(out, "cpcm_tenant_stored_bytes{label} {}", s.stored_bytes);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_config_defaults_are_sane() {
+        let cfg = ServeConfig::new("/tmp/x");
+        assert!(cfg.max_conns >= 1);
+        assert!(cfg.max_body_bytes >= 1 << 20);
+        assert!(cfg.addr.contains(':'));
+        assert_eq!(cfg.quota_bytes, 0);
+    }
+
+    #[test]
+    fn metric_names_sanitize() {
+        assert_eq!(sanitize_metric("submit_wait"), "submit_wait");
+        assert_eq!(sanitize_metric("depth.submit-q"), "depth_submit_q");
+    }
+}

@@ -1,0 +1,115 @@
+//! Route classification for the daemon's wire surface.
+//!
+//! ```text
+//! GET  /healthz                                liveness probe
+//! GET  /metrics                                text exposition (see mod docs)
+//! POST /v1/tenants/<t>/checkpoints             submit one raw checkpoint body
+//! POST /v1/tenants/<t>/flush                   drain the pipeline, dedup, ack
+//! GET  /v1/tenants/<t>/checkpoints/<step>      restore one step (binary body)
+//! ```
+//!
+//! Routing is purely structural: it never touches the filesystem and
+//! never interprets `<t>` beyond keeping it an opaque segment (the
+//! tenant registry validates it). Unknown paths are `404`, known paths
+//! with the wrong method are `405`, and query strings are rejected
+//! (`400`) — the API takes no parameters outside the path and body.
+
+use super::http::Response;
+
+/// A classified request.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Route {
+    /// `GET /healthz`
+    Health,
+    /// `GET /metrics`
+    Metrics,
+    /// `POST /v1/tenants/<t>/checkpoints`
+    Submit {
+        /// Raw (not yet validated) tenant segment.
+        tenant: String,
+    },
+    /// `POST /v1/tenants/<t>/flush`
+    Flush {
+        /// Raw (not yet validated) tenant segment.
+        tenant: String,
+    },
+    /// `GET /v1/tenants/<t>/checkpoints/<step>`
+    Restore {
+        /// Raw (not yet validated) tenant segment.
+        tenant: String,
+        /// Requested step.
+        step: u64,
+    },
+}
+
+/// Classify `method` + `path`, or produce the error response to send.
+pub fn route(method: &str, path: &str) -> Result<Route, Response> {
+    if path.contains('?') || path.contains('#') {
+        return Err(Response::error(400, "query strings are not supported"));
+    }
+    let segs: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
+    let need = |m: &str, r: Route| -> Result<Route, Response> {
+        if method == m {
+            Ok(r)
+        } else {
+            Err(Response::error(405, &format!("use {m}")))
+        }
+    };
+    match segs.as_slice() {
+        ["healthz"] => need("GET", Route::Health),
+        ["metrics"] => need("GET", Route::Metrics),
+        ["v1", "tenants", t, "checkpoints"] => {
+            need("POST", Route::Submit { tenant: t.to_string() })
+        }
+        ["v1", "tenants", t, "flush"] => need("POST", Route::Flush { tenant: t.to_string() }),
+        ["v1", "tenants", t, "checkpoints", step] => {
+            let step: u64 = step
+                .parse()
+                .map_err(|_| Response::error(400, "step must be a decimal integer"))?;
+            need("GET", Route::Restore { tenant: t.to_string(), step })
+        }
+        _ => Err(Response::error(404, "no such route")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_routes_classify() {
+        assert_eq!(route("GET", "/healthz").unwrap(), Route::Health);
+        assert_eq!(route("GET", "/metrics").unwrap(), Route::Metrics);
+        assert_eq!(
+            route("POST", "/v1/tenants/alice/checkpoints").unwrap(),
+            Route::Submit { tenant: "alice".into() }
+        );
+        assert_eq!(
+            route("POST", "/v1/tenants/alice/flush").unwrap(),
+            Route::Flush { tenant: "alice".into() }
+        );
+        assert_eq!(
+            route("GET", "/v1/tenants/alice/checkpoints/30").unwrap(),
+            Route::Restore { tenant: "alice".into(), step: 30 }
+        );
+        // Trailing slashes collapse (empty segments are filtered).
+        assert_eq!(route("GET", "//healthz/").unwrap(), Route::Health);
+    }
+
+    #[test]
+    fn wrong_method_is_405() {
+        assert_eq!(route("POST", "/healthz").unwrap_err().status(), 405);
+        assert_eq!(route("GET", "/v1/tenants/a/flush").unwrap_err().status(), 405);
+        assert_eq!(route("PUT", "/v1/tenants/a/checkpoints").unwrap_err().status(), 405);
+    }
+
+    #[test]
+    fn unknown_and_malformed_paths_reject() {
+        assert_eq!(route("GET", "/").unwrap_err().status(), 404);
+        assert_eq!(route("GET", "/v2/tenants/a/flush").unwrap_err().status(), 404);
+        assert_eq!(route("GET", "/v1/tenants/a/checkpoints/abc").unwrap_err().status(), 400);
+        assert_eq!(route("GET", "/v1/tenants/a/checkpoints/-1").unwrap_err().status(), 400);
+        assert_eq!(route("GET", "/healthz?x=1").unwrap_err().status(), 400);
+        assert_eq!(route("GET", "/v1/tenants/a/checkpoints/1/extra").unwrap_err().status(), 404);
+    }
+}

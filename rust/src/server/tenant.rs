@@ -1,0 +1,202 @@
+//! Per-tenant chain namespaces and admission state.
+//!
+//! Every tenant owns one chain directory, `<serve-root>/tenants/<name>/`,
+//! holding its own `manifest.json` and container files — exactly the
+//! layout the single-process CLI produces, so `cpcm scrub`, `cpcm gc`
+//! and every library restore path work on a tenant directory unchanged.
+//!
+//! Tenant names are untrusted path components and are validated against
+//! `[A-Za-z0-9._-]{1,64}` with no leading dot *before* any filesystem
+//! path is built from them, which makes traversal (`..`), hidden-file
+//! and absolute-path tricks structurally impossible.
+//!
+//! Concurrency: the registry map is behind one short-hold mutex; each
+//! tenant is behind its own mutex so a long flush (pipeline drain +
+//! dedup ingest) for one tenant never blocks another tenant's submits
+//! or restores. Both locks recover from poisoning ([`crate::util::queue`]
+//! module docs describe the degrade-don't-cascade contract this serves).
+
+use crate::coordinator::{ChainManifest, Coordinator};
+use crate::Result;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Maximum tenant-name length (see [`valid_name`]).
+pub const MAX_NAME_LEN: usize = 64;
+
+/// True for names matching `[A-Za-z0-9._-]{1,64}` with no leading dot.
+pub fn valid_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.len() <= MAX_NAME_LEN
+        && !name.starts_with('.')
+        && name.bytes().all(|b| b.is_ascii_alphanumeric() || matches!(b, b'.' | b'_' | b'-'))
+}
+
+/// Monotonic per-tenant counters exported at `/metrics`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TenantStats {
+    /// Coordinator sessions started.
+    pub sessions: u64,
+    /// Raw checkpoint bytes accepted over HTTP.
+    pub bytes_in: u64,
+    /// Restored checkpoint bytes served over HTTP.
+    pub bytes_out: u64,
+    /// Flushed containers whose bytes were already in the dedup store.
+    pub dedup_hits: u64,
+    /// Flushed containers that became new blobs.
+    pub dedup_misses: u64,
+    /// Requests shed with 429 (backpressure or quota).
+    pub shed_requests: u64,
+    /// Compressed bytes acknowledged in the live manifest (the quota
+    /// basis; refreshed from the manifest on open and after each flush).
+    pub stored_bytes: u64,
+}
+
+/// One tenant: its chain directory, the (lazily started) pipeline
+/// session, and its counters. Lives behind a per-tenant mutex.
+pub struct Tenant {
+    /// Validated tenant name.
+    pub name: String,
+    /// Chain directory (`<serve-root>/tenants/<name>`).
+    pub dir: PathBuf,
+    /// Live coordinator pipeline, if a session is open. Started by the
+    /// first submit, consumed by flush.
+    pub session: Option<Coordinator>,
+    /// Exported counters.
+    pub stats: TenantStats,
+}
+
+impl Tenant {
+    /// Recompute [`TenantStats::stored_bytes`] from the on-disk manifest
+    /// (the durable source of truth across daemon restarts).
+    pub fn refresh_stored_bytes(&mut self) -> Result<()> {
+        self.stats.stored_bytes = if ChainManifest::exists_in(&self.dir) {
+            ChainManifest::load(&self.dir)?.entries().map(|e| e.bytes as u64).sum()
+        } else {
+            0
+        };
+        Ok(())
+    }
+}
+
+/// Why a tenant could not be created or addressed.
+#[derive(Debug, PartialEq, Eq)]
+pub enum TenantError {
+    /// Name failed [`valid_name`].
+    InvalidName,
+    /// Creating a new tenant would exceed the `--max-tenants` cap.
+    Capacity,
+}
+
+/// All tenants, keyed by name.
+pub struct Registry {
+    tenants_dir: PathBuf,
+    max_tenants: usize,
+    tenants: Mutex<BTreeMap<String, Arc<Mutex<Tenant>>>>,
+}
+
+fn lock_recovering<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Lock one tenant, recovering from poisoning.
+pub fn lock_tenant(t: &Mutex<Tenant>) -> MutexGuard<'_, Tenant> {
+    lock_recovering(t)
+}
+
+impl Registry {
+    /// Registry rooted at `<serve_root>/tenants`, capped at `max_tenants`
+    /// concurrent namespaces (0 ⇒ unlimited).
+    pub fn new(serve_root: &Path, max_tenants: usize) -> Self {
+        Self {
+            tenants_dir: serve_root.join("tenants"),
+            max_tenants,
+            tenants: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Existing tenant by name (no side effects; invalid names are
+    /// simply absent).
+    pub fn get(&self, name: &str) -> Option<Arc<Mutex<Tenant>>> {
+        lock_recovering(&self.tenants).get(name).cloned()
+    }
+
+    /// Tenant by name, creating its directory and registry slot on first
+    /// use (submits auto-provision; restores use [`Registry::get`]).
+    pub fn get_or_create(
+        &self,
+        name: &str,
+    ) -> std::result::Result<Arc<Mutex<Tenant>>, TenantError> {
+        if !valid_name(name) {
+            return Err(TenantError::InvalidName);
+        }
+        let mut map = lock_recovering(&self.tenants);
+        if let Some(t) = map.get(name) {
+            return Ok(t.clone());
+        }
+        if self.max_tenants > 0 && map.len() >= self.max_tenants {
+            return Err(TenantError::Capacity);
+        }
+        let dir = self.tenants_dir.join(name);
+        let mut tenant =
+            Tenant { name: name.to_string(), dir, session: None, stats: TenantStats::default() };
+        // Pre-existing chains (daemon restart) re-seed the quota basis;
+        // a corrupt manifest surfaces later, on session start or restore.
+        let _ = tenant.refresh_stored_bytes();
+        let handle = Arc::new(Mutex::new(tenant));
+        map.insert(name.to_string(), handle.clone());
+        Ok(handle)
+    }
+
+    /// Snapshot `(name, stats)` for every tenant, for `/metrics`.
+    pub fn stats_snapshot(&self) -> Vec<(String, TenantStats)> {
+        let handles: Vec<(String, Arc<Mutex<Tenant>>)> = lock_recovering(&self.tenants)
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
+        handles.into_iter().map(|(name, t)| (name, lock_recovering(&t).stats)).collect()
+    }
+
+    /// Number of registered tenants.
+    pub fn len(&self) -> usize {
+        lock_recovering(&self.tenants).len()
+    }
+
+    /// True when no tenant has been registered yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_validation_rejects_path_tricks() {
+        for good in ["alice", "job-7", "team_a.staging", "A1", &"x".repeat(64)] {
+            assert!(valid_name(good), "{good} should be valid");
+        }
+        for bad in
+            ["", ".", "..", ".hidden", "a/b", "a\\b", "a b", "é", "a\0b", &"x".repeat(65), "../up"]
+        {
+            assert!(!valid_name(bad), "{bad:?} should be invalid");
+        }
+    }
+
+    #[test]
+    fn capacity_cap_is_enforced() {
+        let root = std::env::temp_dir().join(format!("cpcm_reg_{}", std::process::id()));
+        let reg = Registry::new(&root, 2);
+        assert!(reg.get_or_create("a").is_ok());
+        assert!(reg.get_or_create("b").is_ok());
+        assert_eq!(reg.get_or_create("c").unwrap_err(), TenantError::Capacity);
+        // Existing tenants still resolve at capacity.
+        assert!(reg.get_or_create("a").is_ok());
+        assert_eq!(reg.get_or_create("bad name").unwrap_err(), TenantError::InvalidName);
+        assert_eq!(reg.len(), 2);
+        assert!(reg.get("a").is_some());
+        assert!(reg.get("c").is_none());
+    }
+}

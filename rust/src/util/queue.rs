@@ -11,9 +11,19 @@
 //! Closing ([`BoundedQueue::close`]) is cooperative shutdown: producers
 //! get their item back ([`PushError::Closed`]), consumers drain whatever
 //! is left and then see `None`. Clones share the same queue.
+//!
+//! **Poisoning.** A thread that panics while holding the queue's mutex
+//! poisons it. The queue *recovers* instead of propagating the panic:
+//! the poisoned guard is taken back and the queue is marked closed, so
+//! one crashed stage degrades to the documented shutdown behavior —
+//! producers get [`PushError::Closed`], consumers drain and see `None` —
+//! rather than turning every later `submit`/`pop`/`close` into a panic
+//! cascade. (The coordinator's panic→`Error` contract depends on this:
+//! a stage panic must surface once as a stage error, not re-panic in
+//! every thread that touches a shared queue afterwards.)
 
 use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 
 /// Outcome of a failed [`BoundedQueue::try_push`] / [`BoundedQueue::push`],
 /// returning the rejected item to the caller.
@@ -30,6 +40,30 @@ struct Shared<T> {
     not_full: Condvar,
     not_empty: Condvar,
     capacity: usize,
+}
+
+impl<T> Shared<T> {
+    /// Take the state lock, recovering from poisoning (see module docs):
+    /// a panic under the lock degrades the queue to closed instead of
+    /// cascading panics through every later caller.
+    fn lock(&self) -> MutexGuard<'_, State<T>> {
+        self.state.lock().unwrap_or_else(|e| self.recover(e))
+    }
+
+    /// Reclaim a poisoned guard and force the closed state. Waiters are
+    /// woken so blocked producers/consumers observe the shutdown.
+    fn recover<'a>(
+        &'a self,
+        e: PoisonError<MutexGuard<'a, State<T>>>,
+    ) -> MutexGuard<'a, State<T>> {
+        let mut st = e.into_inner();
+        if !st.closed {
+            st.closed = true;
+            self.not_full.notify_all();
+            self.not_empty.notify_all();
+        }
+        st
+    }
 }
 
 struct State<T> {
@@ -68,7 +102,7 @@ impl<T> BoundedQueue<T> {
 
     /// Items currently queued (racy by nature; for gauges/diagnostics).
     pub fn len(&self) -> usize {
-        self.shared.state.lock().expect("queue poisoned").items.len()
+        self.shared.lock().items.len()
     }
 
     /// True when no items are queued.
@@ -79,7 +113,7 @@ impl<T> BoundedQueue<T> {
     /// Blocking push: waits while the queue is full. Fails only when the
     /// queue has been closed, handing the item back.
     pub fn push(&self, item: T) -> Result<(), PushError<T>> {
-        let mut st = self.shared.state.lock().expect("queue poisoned");
+        let mut st = self.shared.lock();
         loop {
             if st.closed {
                 return Err(PushError::Closed(item));
@@ -89,14 +123,17 @@ impl<T> BoundedQueue<T> {
                 self.shared.not_empty.notify_one();
                 return Ok(());
             }
-            st = self.shared.not_full.wait(st).expect("queue poisoned");
+            st = match self.shared.not_full.wait(st) {
+                Ok(g) => g,
+                Err(e) => self.shared.recover(e),
+            };
         }
     }
 
     /// Non-blocking push: rejects with [`PushError::Full`] instead of
     /// waiting when the queue is at capacity.
     pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
-        let mut st = self.shared.state.lock().expect("queue poisoned");
+        let mut st = self.shared.lock();
         if st.closed {
             return Err(PushError::Closed(item));
         }
@@ -111,7 +148,7 @@ impl<T> BoundedQueue<T> {
     /// Blocking pop: waits for an item; returns `None` once the queue is
     /// closed **and** drained.
     pub fn pop(&self) -> Option<T> {
-        let mut st = self.shared.state.lock().expect("queue poisoned");
+        let mut st = self.shared.lock();
         loop {
             if let Some(item) = st.items.pop_front() {
                 self.shared.not_full.notify_one();
@@ -120,23 +157,27 @@ impl<T> BoundedQueue<T> {
             if st.closed {
                 return None;
             }
-            st = self.shared.not_empty.wait(st).expect("queue poisoned");
+            st = match self.shared.not_empty.wait(st) {
+                Ok(g) => g,
+                Err(e) => self.shared.recover(e),
+            };
         }
     }
 
     /// Close the queue: producers start failing, consumers drain what is
     /// left. Idempotent.
     pub fn close(&self) {
-        let mut st = self.shared.state.lock().expect("queue poisoned");
+        let mut st = self.shared.lock();
         st.closed = true;
         drop(st);
         self.shared.not_full.notify_all();
         self.shared.not_empty.notify_all();
     }
 
-    /// True once [`BoundedQueue::close`] has been called.
+    /// True once [`BoundedQueue::close`] has been called (or the queue
+    /// degraded to closed after a panic poisoned its lock).
     pub fn is_closed(&self) -> bool {
-        self.shared.state.lock().expect("queue poisoned").closed
+        self.shared.lock().closed
     }
 }
 
@@ -217,5 +258,58 @@ mod tests {
         assert_eq!(q.capacity(), 1);
         q.push(1).unwrap();
         assert_eq!(q.try_push(2), Err(PushError::Full(2)));
+    }
+
+    #[test]
+    fn poisoned_producer_degrades_to_closed_queue() {
+        let q = BoundedQueue::new(4);
+        q.push(1u32).unwrap();
+        q.push(2u32).unwrap();
+
+        // A producer that panics while holding the state mutex: this
+        // poisons the lock, which used to turn every later queue call
+        // into an `.expect("queue poisoned")` panic cascade.
+        let q2 = q.clone();
+        let crashed = std::thread::spawn(move || {
+            let _guard = q2.shared.state.lock().unwrap();
+            panic!("stage crashed while holding the queue lock");
+        });
+        assert!(crashed.join().is_err());
+
+        // Producers see the documented shutdown contract, not a panic.
+        assert_eq!(q.push(3), Err(PushError::Closed(3)));
+        assert_eq!(q.try_push(4), Err(PushError::Closed(4)));
+        assert!(q.is_closed());
+
+        // Consumers drain what was queued before the crash, then None.
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+
+        // Idempotent close still works on the recovered queue.
+        q.close();
+        assert!(q.is_closed());
+    }
+
+    #[test]
+    fn poisoning_wakes_blocked_consumer() {
+        let q: BoundedQueue<u8> = BoundedQueue::new(2);
+        let q2 = q.clone();
+        let consumer = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+
+        let q3 = q.clone();
+        let crashed = std::thread::spawn(move || {
+            let _guard = q3.shared.state.lock().unwrap();
+            panic!("poison while a consumer waits");
+        });
+        assert!(crashed.join().is_err());
+
+        // The blocked consumer must observe the degraded-to-closed state
+        // (recover() notifies both condvars) instead of hanging. A later
+        // len() call also recovers the lock, so nudge via any queue op.
+        assert!(q.is_closed());
+        assert_eq!(consumer.join().unwrap(), None);
     }
 }

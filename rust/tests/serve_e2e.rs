@@ -1,0 +1,450 @@
+//! `cpcm serve` end-to-end over loopback sockets, plus a hostile-input
+//! fuzz battery for the hand-rolled HTTP parser.
+//!
+//! The e2e drives the real daemon (ephemeral port, format-3 sharded
+//! codec) with two tenants submitting byte-identical checkpoint streams:
+//! interleaved submits, flushes, cross-tenant dedup down to one blob per
+//! step, byte-exact restores (including two racing restores of the same
+//! step — the work-dir collision regression), quota shedding with a named
+//! 429 that survives a daemon restart, connection-capacity shedding, and
+//! a `/metrics` exposition every line of which must parse.
+//!
+//! The fuzz battery reuses the `tests/fuzz_header.rs` idiom — a
+//! deterministic xorshift64* corpus, `catch_unwind`, "no panic, no
+//! unbounded allocation" as the only contract — against
+//! `server::http::read_request` and `server::router::route`, in-process
+//! with no sockets so failures are byte-reproducible.
+
+use cpcm::checkpoint::Checkpoint;
+use cpcm::codec::{CodecConfig, ContextMode};
+use cpcm::coordinator::restore_step;
+use cpcm::lstm::Backend;
+use cpcm::server::http::{read_request, Limits};
+use cpcm::server::{router, ServeConfig, Server, ServerHandle};
+use cpcm::util::json::Json;
+use std::io::{Cursor, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("cpcm_serve_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn layers() -> Vec<(&'static str, Vec<usize>)> {
+    vec![("enc.w", vec![24, 10]), ("enc.b", vec![40]), ("head.w", vec![8, 6])]
+}
+
+/// Start a daemon on an ephemeral loopback port with a small, fast
+/// sharded codec (format 3 ⇒ restores exercise the streaming path).
+fn serve(root: &Path, tweak: impl FnOnce(&mut ServeConfig)) -> ServerHandle {
+    let mut cfg = ServeConfig::new(root);
+    cfg.addr = "127.0.0.1:0".into();
+    cfg.codec = CodecConfig {
+        mode: ContextMode::Order0,
+        bits: 3,
+        lanes: 2,
+        quant_iters: 3,
+        shard_bytes: 300,
+        ..Default::default()
+    };
+    cfg.queue_depth = 8;
+    tweak(&mut cfg);
+    Server::bind(cfg, Backend::Native).unwrap().spawn().unwrap()
+}
+
+/// Minimal one-shot HTTP client (the daemon is `Connection: close`).
+fn request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &[u8],
+) -> (u16, Vec<(String, String)>, Vec<u8>) {
+    try_request(addr, method, path, body).expect("request failed")
+}
+
+/// Like [`request`], but transport errors (e.g. a reset from a connection
+/// the server shed at the door) come back as `Err` instead of panicking.
+fn try_request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &[u8],
+) -> std::io::Result<(u16, Vec<(String, String)>, Vec<u8>)> {
+    let mut s = TcpStream::connect(addr)?;
+    s.set_read_timeout(Some(Duration::from_secs(60)))?;
+    let mut head = format!("{method} {path} HTTP/1.1\r\nHost: test\r\n");
+    if method == "POST" {
+        head.push_str(&format!("Content-Length: {}\r\n", body.len()));
+    }
+    head.push_str("\r\n");
+    // Best-effort writes: a shed connection may be closed server-side
+    // with the 429 already in flight before we finish writing.
+    let _ = s.write_all(head.as_bytes());
+    let _ = s.write_all(body);
+    try_read_response(&mut s)
+}
+
+fn read_response(s: &mut TcpStream) -> (u16, Vec<(String, String)>, Vec<u8>) {
+    try_read_response(s).expect("response read failed")
+}
+
+fn try_read_response(
+    s: &mut TcpStream,
+) -> std::io::Result<(u16, Vec<(String, String)>, Vec<u8>)> {
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf)?;
+    let pos = buf.windows(4).position(|w| w == b"\r\n\r\n").expect("no header terminator") + 4;
+    let head = std::str::from_utf8(&buf[..pos]).unwrap();
+    let mut lines = head.split("\r\n");
+    let status: u16 =
+        lines.next().unwrap().split(' ').nth(1).expect("no status code").parse().unwrap();
+    let headers = lines
+        .filter(|l| !l.is_empty())
+        .filter_map(|l| l.split_once(':'))
+        .map(|(k, v)| (k.to_ascii_lowercase(), v.trim().to_string()))
+        .collect();
+    Ok((status, headers, buf[pos..].to_vec()))
+}
+
+fn header<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+}
+
+#[test]
+fn two_tenants_dedup_restore_and_metrics() {
+    let root = tmpdir("e2e");
+    let handle = serve(&root, |_| {});
+    let addr = handle.addr();
+    let steps = [10u64, 20, 30];
+
+    // Interleaved submits: both tenants stream byte-identical checkpoints
+    // (same seed), so the byte-deterministic encoder must produce
+    // byte-identical containers — the dedup store's best case.
+    for &step in &steps {
+        for tenant in ["alice", "bob"] {
+            let body = Checkpoint::synthetic(step, &layers(), 7).to_bytes();
+            let (status, _, resp) =
+                request(addr, "POST", &format!("/v1/tenants/{tenant}/checkpoints"), &body);
+            assert_eq!(status, 202, "{}", String::from_utf8_lossy(&resp));
+            let j = Json::parse(std::str::from_utf8(&resp).unwrap()).unwrap();
+            assert_eq!(j.get("step").and_then(|v| v.as_f64()), Some(step as f64));
+        }
+    }
+
+    // Flush alice first: all three of her containers are new blobs. Bob's
+    // flush then dedups every container against them.
+    for tenant in ["alice", "bob"] {
+        let (status, _, resp) =
+            request(addr, "POST", &format!("/v1/tenants/{tenant}/flush"), b"");
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&resp));
+        let j = Json::parse(std::str::from_utf8(&resp).unwrap()).unwrap();
+        let results = j.get("results").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(results.len(), steps.len());
+        assert!(j.get("stored_bytes").and_then(|v| v.as_f64()).unwrap() > 0.0);
+    }
+    let blobs: Vec<_> = std::fs::read_dir(root.join("objects"))
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().extension().is_some_and(|x| x == "blob"))
+        .collect();
+    assert_eq!(blobs.len(), steps.len(), "6 containers must share 3 blobs");
+
+    // Byte-exact restores for every tenant and step, against the library
+    // restore of the same on-disk (hard-linked) chain.
+    for tenant in ["alice", "bob"] {
+        let dir = root.join("tenants").join(tenant);
+        for &step in &steps {
+            let expect = restore_step(&dir, &Backend::Native, step).unwrap().to_bytes();
+            let (status, _, body) =
+                request(addr, "GET", &format!("/v1/tenants/{tenant}/checkpoints/{step}"), b"");
+            assert_eq!(status, 200);
+            assert_eq!(body, expect, "restore {tenant}/{step} not byte-exact");
+        }
+    }
+
+    // Two racing restores of the same step (the work-dir collision
+    // regression, now through the daemon).
+    let expect =
+        restore_step(&root.join("tenants/alice"), &Backend::Native, 30).unwrap().to_bytes();
+    let race: Vec<_> = (0..2)
+        .map(|_| {
+            let expect = expect.clone();
+            std::thread::spawn(move || {
+                let (status, _, body) =
+                    request(addr, "GET", "/v1/tenants/alice/checkpoints/30", b"");
+                assert_eq!(status, 200);
+                assert_eq!(body, expect);
+            })
+        })
+        .collect();
+    for j in race {
+        j.join().unwrap();
+    }
+
+    // Named 4xx surface.
+    let (status, _, resp) = request(addr, "POST", "/v1/tenants/alice/checkpoints", b"garbage");
+    assert_eq!(status, 400);
+    assert!(String::from_utf8_lossy(&resp).contains("malformed checkpoint"));
+    let (status, _, _) = request(addr, "POST", "/v1/tenants/../checkpoints", b"x");
+    assert_eq!(status, 400);
+    let (status, _, _) = request(addr, "GET", "/v1/tenants/alice/checkpoints/999", b"");
+    assert_eq!(status, 404);
+    let (status, _, _) = request(addr, "GET", "/v1/tenants/ghost/checkpoints/10", b"");
+    assert_eq!(status, 404);
+    let (status, _, _) = request(addr, "GET", "/nope", b"");
+    assert_eq!(status, 404);
+    let (status, _, _) = request(addr, "POST", "/metrics", b"");
+    assert_eq!(status, 405);
+    let (status, _, body) = request(addr, "GET", "/healthz", b"");
+    assert_eq!(status, 200);
+    assert_eq!(body, b"ok\n");
+
+    // /metrics: every line parses, per-tenant counters and dedup totals
+    // are present with the values the scenario implies.
+    let (status, _, body) = request(addr, "GET", "/metrics", b"");
+    assert_eq!(status, 200);
+    let text = String::from_utf8(body).unwrap();
+    let mut seen = std::collections::BTreeMap::new();
+    for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+        let (name, value) = line.rsplit_once(' ').expect("metric line shape");
+        let value: f64 = value.parse().unwrap_or_else(|_| panic!("unparsable line: {line}"));
+        seen.insert(name.to_string(), value);
+    }
+    assert_eq!(seen["cpcm_dedup_blobs"], 3.0);
+    assert_eq!(seen["cpcm_dedup_refs"], 6.0);
+    assert!(seen["cpcm_dedup_bytes_saved"] > 0.0);
+    assert_eq!(seen["cpcm_tenants"], 2.0);
+    assert_eq!(seen["cpcm_tenant_dedup_hits{tenant=\"bob\"}"], 3.0);
+    assert_eq!(seen["cpcm_tenant_dedup_misses{tenant=\"alice\"}"], 3.0);
+    assert_eq!(seen["cpcm_tenant_sessions{tenant=\"alice\"}"], 1.0);
+    assert!(seen["cpcm_tenant_bytes_in{tenant=\"bob\"}"] > 0.0);
+    assert!(seen["cpcm_tenant_bytes_out{tenant=\"alice\"}"] > 0.0);
+    assert!(seen["cpcm_tenant_stored_bytes{tenant=\"alice\"}"] > 0.0);
+    assert!(seen["cpcm_http_requests"] > 0.0);
+    assert!(seen["cpcm_checkpoints_accepted"] >= 6.0);
+
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn quota_sheds_and_survives_restart() {
+    let root = tmpdir("quota");
+    let handle = serve(&root, |c| c.quota_bytes = 1);
+    let addr = handle.addr();
+    let body = Checkpoint::synthetic(10, &layers(), 3).to_bytes();
+
+    // Nothing acknowledged yet: the first submit is admitted.
+    let (status, _, _) = request(addr, "POST", "/v1/tenants/t/checkpoints", &body);
+    assert_eq!(status, 202);
+    let (status, _, _) = request(addr, "POST", "/v1/tenants/t/flush", b"");
+    assert_eq!(status, 200);
+
+    // Acknowledged bytes now exceed the 1-byte quota: shed, named, and
+    // without Retry-After (waiting cannot clear a quota).
+    let body2 = Checkpoint::synthetic(20, &layers(), 3).to_bytes();
+    let (status, headers, resp) = request(addr, "POST", "/v1/tenants/t/checkpoints", &body2);
+    assert_eq!(status, 429);
+    assert!(String::from_utf8_lossy(&resp).contains("quota"));
+    assert!(header(&headers, "retry-after").is_none());
+    handle.shutdown();
+
+    // A fresh daemon over the same root re-seeds stored_bytes from the
+    // manifest: the quota still holds without any flush having happened
+    // in this process.
+    let handle = serve(&root, |c| c.quota_bytes = 1);
+    let (status, _, resp) = request(handle.addr(), "POST", "/v1/tenants/t/checkpoints", &body2);
+    assert_eq!(status, 429, "{}", String::from_utf8_lossy(&resp));
+    assert!(String::from_utf8_lossy(&resp).contains("quota"));
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn oversized_and_malformed_requests_get_named_4xx() {
+    let root = tmpdir("limits");
+    let handle = serve(&root, |c| c.max_body_bytes = 4096);
+    let addr = handle.addr();
+
+    // Declared body over the cap: refused before the buffer exists.
+    let big = vec![0u8; 8192];
+    let (status, _, _) = request(addr, "POST", "/v1/tenants/t/checkpoints", &big);
+    assert_eq!(status, 413);
+
+    // POST without Content-Length.
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(b"POST /v1/tenants/t/checkpoints HTTP/1.1\r\n\r\n").unwrap();
+    let (status, _, _) = read_response(&mut s);
+    assert_eq!(status, 411);
+
+    // Garbage request line.
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(b"\x00\x01\x02 nonsense\r\n\r\n").unwrap();
+    let (status, _, _) = read_response(&mut s);
+    assert_eq!(status, 400);
+
+    // Unbounded request line. The writes are best-effort: the server may
+    // reset the connection as soon as the line blows its cap.
+    let mut s = TcpStream::connect(addr).unwrap();
+    let long = vec![b'a'; 64 * 1024];
+    let _ = s.write_all(b"GET /");
+    let _ = s.write_all(&long);
+    let _ = s.write_all(b" HTTP/1.1\r\n\r\n");
+    let (status, _, _) = read_response(&mut s);
+    assert_eq!(status, 414);
+
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn connection_capacity_sheds_at_the_door() {
+    let root = tmpdir("conncap");
+    let handle = serve(&root, |c| c.max_conns = 1);
+    let addr = handle.addr();
+
+    // A blocker connection sits on the only slot without sending a byte;
+    // once it is admitted every further accept sheds with 429 +
+    // Retry-After before any request parsing.
+    let blocker = TcpStream::connect(addr).unwrap();
+    let mut shed = false;
+    for _ in 0..50 {
+        match try_request(addr, "GET", "/healthz", b"") {
+            Ok((429, headers, _)) => {
+                assert_eq!(header(&headers, "retry-after"), Some("1"));
+                shed = true;
+                break;
+            }
+            // 200 = we raced the blocker to the slot; Err = the shed
+            // reset beat our read. Either way, try again.
+            Ok((200, _, _)) | Err(_) => {}
+            Ok((status, _, _)) => panic!("unexpected status {status}"),
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    assert!(shed, "capacity shed never observed");
+
+    // Freeing the slot restores service.
+    drop(blocker);
+    let mut recovered = false;
+    for _ in 0..50 {
+        if matches!(try_request(addr, "GET", "/healthz", b""), Ok((200, _, _))) {
+            recovered = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    assert!(recovered, "service did not recover after the blocker left");
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Deterministic xorshift64* — the corpus must not depend on ambient
+/// randomness, or a CI failure would be unreproducible.
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    fn below(&mut self, n: usize) -> usize {
+        (self.next() % n as u64) as usize
+    }
+}
+
+/// The production parser under small limits: any byte soup must come back
+/// `Ok` or `Err` — never a panic and never an allocation the limits do
+/// not imply.
+fn feed_parser(bytes: &[u8]) {
+    let limits = Limits { max_line: 256, max_headers: 16, max_body: 4096 };
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        let _ = read_request(&mut Cursor::new(bytes), &limits);
+    }));
+    assert!(r.is_ok(), "parser panicked on a {}-byte input", bytes.len());
+}
+
+#[test]
+fn fuzz_http_parser_never_panics() {
+    let mut rng = Rng(0x5eed_cafe_f00d_0001);
+    let seeds: Vec<Vec<u8>> = vec![
+        b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n".to_vec(),
+        b"POST /v1/tenants/a/checkpoints HTTP/1.1\r\nContent-Length: 5\r\n\r\nhello".to_vec(),
+        b"GET /v1/tenants/a/checkpoints/10 HTTP/1.0\r\n\r\n".to_vec(),
+    ];
+    for seed in &seeds {
+        feed_parser(seed);
+    }
+    for _ in 0..1500 {
+        let mut bytes = if rng.below(2) == 0 {
+            // Mutate a real request: flips, truncations, duplications.
+            let mut b = seeds[rng.below(seeds.len())].clone();
+            for _ in 0..=rng.below(8) {
+                match rng.below(4) {
+                    0 if !b.is_empty() => {
+                        let i = rng.below(b.len());
+                        b[i] = (rng.next() & 0xff) as u8;
+                    }
+                    1 if !b.is_empty() => {
+                        b.truncate(rng.below(b.len()));
+                    }
+                    2 => {
+                        let i = rng.below(b.len() + 1);
+                        b.insert(i, (rng.next() & 0xff) as u8);
+                    }
+                    _ => {
+                        let extra = b.clone();
+                        b.extend(extra);
+                        b.truncate(512);
+                    }
+                }
+            }
+            b
+        } else {
+            // Pure byte soup.
+            (0..rng.below(2048)).map(|_| (rng.next() & 0xff) as u8).collect()
+        };
+        // Occasionally claim a huge Content-Length to hit the cap path.
+        if rng.below(8) == 0 {
+            bytes = format!(
+                "POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+                rng.next() >> rng.below(40)
+            )
+            .into_bytes();
+        }
+        feed_parser(&bytes);
+    }
+}
+
+#[test]
+fn fuzz_router_never_panics() {
+    let mut rng = Rng(0x5eed_cafe_f00d_0002);
+    let methods = ["GET", "POST", "PUT", "", "G\u{7f}T"];
+    for _ in 0..1500 {
+        let len = rng.below(128);
+        let path: String = (0..len)
+            .map(|_| {
+                let c = (rng.next() % 96 + 32) as u8 as char;
+                if rng.below(3) == 0 {
+                    '/'
+                } else {
+                    c
+                }
+            })
+            .collect();
+        let method = methods[rng.below(methods.len())];
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let _ = router::route(method, &path);
+        }));
+        assert!(r.is_ok(), "router panicked on {method} {path:?}");
+    }
+}
