@@ -472,6 +472,100 @@ fn main() {
         );
     }
 
+    let mut snapshot_rows: Vec<Json> = Vec::new();
+    // ---- Two-phase snapshot capture: stall vs encode --------------------
+    // The zero-stall contract in numbers: what the training loop pays per
+    // snapshot (freeze copy + slot handoff through the CaptureHandle)
+    // against what a stop-the-world capture would pay (a full blocking
+    // encode on the training thread). `stall_over_encode` ≪ 1 is the win
+    // the rows lock in; byte-determinism is pinned by tests/snapshot.rs.
+    {
+        use cpcm::checkpoint::SnapshotView;
+        use cpcm::coordinator::{Coordinator, CoordinatorConfig};
+
+        let snap_layers: Vec<(&str, Vec<usize>)> =
+            vec![("w", vec![192, 128]), ("b", vec![512])];
+        let snap_ck = Checkpoint::synthetic(1, &snap_layers, 0x51);
+        let snap_raw = snap_ck.raw_bytes();
+        let snap_codec = CodecConfig {
+            mode: ContextMode::Order0,
+            lanes: 1,
+            ..CodecConfig::default()
+        };
+        let codec = Codec::new(snap_codec.clone(), Backend::Native);
+        let enc = b.run(
+            "snapshot/stop-the-world encode (Order0, 25k params)",
+            (snap_ck.param_count() * 3) as u64,
+            || {
+                std::hint::black_box(codec.encode(&snap_ck, None, None).unwrap());
+            },
+        );
+        let copy = b.run(
+            "snapshot/freeze copy (25k params)",
+            (snap_ck.param_count() * 3) as u64,
+            || {
+                std::hint::black_box(SnapshotView::capture(&snap_ck).unwrap());
+            },
+        );
+
+        // Live handoff against a running pipeline: each capture is timed
+        // individually; pacing sleeps let the forwarder drain the slot so
+        // the rows measure the handoff itself, not deliberate overload
+        // (the overload path is covered by tests/snapshot.rs).
+        let snap_dir =
+            std::env::temp_dir().join(format!("cpcm_hotpath_snap_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&snap_dir);
+        let handle = Coordinator::start(CoordinatorConfig::new(
+            snap_codec,
+            Backend::Native,
+            &snap_dir,
+        ))
+        .unwrap()
+        .into_capture_handle()
+        .unwrap();
+        let captures: u64 = if std::env::var_os("BENCH_QUICK").is_some() { 4 } else { 8 };
+        let pace = enc.median.min(std::time::Duration::from_millis(250));
+        let mut handoff_total = 0.0f64;
+        let mut handoff_max = 0.0f64;
+        for i in 0..captures {
+            let view =
+                SnapshotView::capture(&Checkpoint::synthetic(10 * (i + 1), &snap_layers, i))
+                    .unwrap();
+            let t0 = std::time::Instant::now();
+            handle.capture(view).unwrap();
+            let dt = t0.elapsed().as_secs_f64();
+            handoff_total += dt;
+            handoff_max = handoff_max.max(dt);
+            std::thread::sleep(pace);
+        }
+        handle.finish().unwrap();
+        let _ = std::fs::remove_dir_all(&snap_dir);
+
+        let copy_s = copy.median.as_secs_f64();
+        let encode_s = enc.median.as_secs_f64();
+        let handoff_mean = handoff_total / captures as f64;
+        let stall_mean = copy_s + handoff_mean;
+        println!(
+            "\nsnapshot stall: {:.6}s mean (copy {:.6}s + handoff {:.6}s) vs \
+             {:.6}s stop-the-world encode — {:.4}x",
+            stall_mean,
+            copy_s,
+            handoff_mean,
+            encode_s,
+            stall_mean / encode_s,
+        );
+        snapshot_rows.push(Json::obj(vec![
+            ("raw_bytes", Json::num(snap_raw as f64)),
+            ("captures", Json::num(captures as f64)),
+            ("capture_copy_seconds", Json::num(copy_s)),
+            ("handoff_seconds_mean", Json::num(handoff_mean)),
+            ("handoff_seconds_max", Json::num(handoff_max)),
+            ("stall_seconds_mean", Json::num(stall_mean)),
+            ("encode_seconds", Json::num(encode_s)),
+            ("stall_over_encode", Json::num(stall_mean / encode_s)),
+        ]));
+    }
+
     // ---- Machine-readable dump ------------------------------------------
     let samples: Vec<Json> = b
         .results()
@@ -499,6 +593,9 @@ fn main() {
         ("shard_sweep", Json::Arr(shard_rows)),
         ("shard_par", Json::Arr(spar_rows)),
         ("adaptive_frontier", Json::Arr(frontier_rows)),
+        // Wall-clock stall evidence for the two-phase capture; an unknown
+        // key to older bench_compare baselines (surfaces as "added").
+        ("snapshot_stall", Json::Arr(snapshot_rows)),
     ]);
     match std::fs::write("BENCH_hotpath.json", doc.to_string_pretty()) {
         Ok(()) => println!("wrote BENCH_hotpath.json"),

@@ -12,10 +12,12 @@
 //! compressed format lives in [`crate::container`].
 
 mod reader;
+mod snapshot;
 mod store;
 mod writer;
 
 pub use reader::CheckpointFileReader;
+pub use snapshot::{SnapshotBuilder, SnapshotView};
 pub use store::Store;
 pub use writer::CheckpointFileWriter;
 

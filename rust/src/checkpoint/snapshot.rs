@@ -1,0 +1,336 @@
+//! Frozen snapshot buffers for two-phase checkpoint capture.
+//!
+//! Phase 1 of a two-phase capture freezes the live training state into a
+//! [`SnapshotView`] in O(memcpy) — the per-tensor double-buffer: the
+//! trainer's live tensors are one buffer (still being mutated by the
+//! optimizer), the frozen copy is the other, and nothing downstream can
+//! observe a later mutation. Phase 2 hands the view to the coordinator
+//! pipeline ([`crate::coordinator::CaptureHandle`]), which encodes it
+//! while training continues.
+//!
+//! **Byte-determinism contract.** [`SnapshotView::into_checkpoint`]
+//! reproduces the exact [`Checkpoint`] a stop-the-world capture of the
+//! same state would have built (tensors name-sorted, identical values),
+//! so the pipeline encodes a frozen snapshot to bytes identical to a
+//! stop-the-world submit at the same step — pinned by
+//! `rust/tests/snapshot.rs`.
+//!
+//! The view also implements [`ShardSource`], so the format-3 streaming
+//! encoder can range-read the frozen copy directly without rebuilding a
+//! `Checkpoint` first.
+
+use super::Checkpoint;
+use crate::codec::sharded::ShardSource;
+use crate::tensor::{NamedTensor, Tensor, TensorSet};
+use crate::{Error, Result};
+use std::ops::Range;
+use std::time::Instant;
+
+/// An immutable, frozen copy of one checkpoint's three parameter sets,
+/// captured in O(memcpy) and owned outright (no borrows into the live
+/// training state). At most one of these is in flight per
+/// [`crate::coordinator::CaptureHandle`] — the bounded-memory rule.
+#[derive(Debug)]
+pub struct SnapshotView {
+    step: u64,
+    /// Tensor names, ascending (the `TensorSet` order, so the rebuilt
+    /// checkpoint is identical to a stop-the-world capture).
+    names: Vec<String>,
+    shapes: Vec<Vec<usize>>,
+    /// `sets[k][t]`: values of parameter set `k` (0 = weights, 1 = first
+    /// moment, 2 = second moment) of tensor `t`.
+    sets: [Vec<Vec<f32>>; 3],
+    /// Seconds the freezing copy took (phase-1 cost; the coordinator
+    /// publishes it as `capture_copy_seconds`).
+    capture_seconds: f64,
+}
+
+impl SnapshotView {
+    /// Freeze `ck` by copying every tensor (the stop-the-world capture's
+    /// moral equivalent for callers that hold a `Checkpoint` they intend
+    /// to keep mutating). Times itself into [`SnapshotView::capture_seconds`].
+    pub fn capture(ck: &Checkpoint) -> Result<Self> {
+        let t0 = Instant::now();
+        check_layout(ck)?;
+        let names: Vec<String> = ck.weights.iter().map(|e| e.name.clone()).collect();
+        let shapes: Vec<Vec<usize>> =
+            ck.weights.iter().map(|e| e.tensor.shape().to_vec()).collect();
+        let sets = [
+            ck.weights.iter().map(|e| e.tensor.data().to_vec()).collect(),
+            ck.exp_avg.iter().map(|e| e.tensor.data().to_vec()).collect(),
+            ck.exp_avg_sq.iter().map(|e| e.tensor.data().to_vec()).collect(),
+        ];
+        let mut view =
+            Self { step: ck.step, names, shapes, sets, capture_seconds: 0.0 };
+        view.capture_seconds = t0.elapsed().as_secs_f64();
+        Ok(view)
+    }
+
+    /// Freeze an already-owned `Checkpoint` by *moving* its buffers —
+    /// zero-copy. Used by the serve submit path, where the parsed body is
+    /// owned and nobody mutates it afterwards.
+    pub fn from_checkpoint(ck: Checkpoint) -> Result<Self> {
+        check_layout(&ck)?;
+        let Checkpoint { step, weights, exp_avg, exp_avg_sq } = ck;
+        let mut names = Vec::with_capacity(weights.len());
+        let mut shapes = Vec::with_capacity(weights.len());
+        let mut take = |set: TensorSet| -> Vec<Vec<f32>> {
+            set.into_entries().into_iter().map(|e| e.tensor.into_data()).collect()
+        };
+        for e in weights.iter() {
+            names.push(e.name.clone());
+            shapes.push(e.tensor.shape().to_vec());
+        }
+        let sets = [take(weights), take(exp_avg), take(exp_avg_sq)];
+        Ok(Self { step, names, shapes, sets, capture_seconds: 0.0 })
+    }
+
+    /// Training step the snapshot was frozen at.
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+
+    /// Total element count across one parameter set.
+    pub fn param_count(&self) -> usize {
+        self.shapes.iter().map(|s| s.iter().product::<usize>()).sum()
+    }
+
+    /// Raw size of all three sets as f32 bytes.
+    pub fn raw_bytes(&self) -> usize {
+        self.param_count() * 3 * 4
+    }
+
+    /// Seconds the phase-1 freezing copy took (0 for zero-copy wraps).
+    pub fn capture_seconds(&self) -> f64 {
+        self.capture_seconds
+    }
+
+    /// Rebuild the exact `Checkpoint` a stop-the-world capture of the
+    /// same state would produce (moves the buffers — no copy). This is
+    /// the byte-determinism seam: the pipeline consumes this checkpoint
+    /// through the same prep → encode → write path as a direct submit.
+    pub fn into_checkpoint(self) -> Result<Checkpoint> {
+        let Self { step, names, shapes, sets, .. } = self;
+        let [w, m, v] = sets;
+        let build = |vals: Vec<Vec<f32>>| -> Result<TensorSet> {
+            let entries = names
+                .iter()
+                .zip(shapes.iter())
+                .zip(vals)
+                .map(|((name, shape), data)| {
+                    Ok(NamedTensor {
+                        name: name.clone(),
+                        tensor: Tensor::new(shape.clone(), data)?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            TensorSet::from_entries(entries)
+        };
+        Ok(Checkpoint {
+            step,
+            weights: build(w)?,
+            exp_avg: build(m)?,
+            exp_avg_sq: build(v)?,
+        })
+    }
+}
+
+/// The three sets must share one tensor layout (the same precondition
+/// every delta/encode path enforces) — checked when freezing so a bad
+/// snapshot fails at capture time, not deep inside the pipeline.
+fn check_layout(ck: &Checkpoint) -> Result<()> {
+    if !ck.weights.same_layout(&ck.exp_avg) || !ck.weights.same_layout(&ck.exp_avg_sq) {
+        return Err(Error::shape("snapshot: parameter sets must share one tensor layout"));
+    }
+    Ok(())
+}
+
+/// Incremental builder for freezing live tensors one at a time (the
+/// trainer's capture path: it walks its parameter spec and pushes each
+/// tensor's three buffers). Entries may arrive in any order; `finish`
+/// sorts by name so the frozen view matches `TensorSet` order exactly.
+pub struct SnapshotBuilder {
+    step: u64,
+    entries: Vec<(String, Vec<usize>, Vec<f32>, Vec<f32>, Vec<f32>)>,
+    started: Instant,
+}
+
+impl SnapshotBuilder {
+    /// Start a capture of training step `step`.
+    pub fn new(step: u64) -> Self {
+        Self { step, entries: Vec::new(), started: Instant::now() }
+    }
+
+    /// Freeze one named tensor: weights + first and second Adam moment
+    /// slices, all of the same shape.
+    pub fn push(
+        &mut self,
+        name: impl Into<String>,
+        shape: Vec<usize>,
+        weights: &[f32],
+        exp_avg: &[f32],
+        exp_avg_sq: &[f32],
+    ) -> Result<()> {
+        let n: usize = shape.iter().product();
+        if weights.len() != n || exp_avg.len() != n || exp_avg_sq.len() != n {
+            return Err(Error::shape(format!(
+                "snapshot: shape {shape:?} wants {n} elems, got {}/{}/{}",
+                weights.len(),
+                exp_avg.len(),
+                exp_avg_sq.len()
+            )));
+        }
+        self.entries.push((
+            name.into(),
+            shape,
+            weights.to_vec(),
+            exp_avg.to_vec(),
+            exp_avg_sq.to_vec(),
+        ));
+        Ok(())
+    }
+
+    /// Seal the frozen view (sorts by name, rejects duplicates, records
+    /// the capture time).
+    pub fn finish(mut self) -> Result<SnapshotView> {
+        self.entries.sort_by(|a, b| a.0.cmp(&b.0));
+        for w in self.entries.windows(2) {
+            if w[0].0 == w[1].0 {
+                return Err(Error::shape(format!("snapshot: duplicate tensor '{}'", w[0].0)));
+            }
+        }
+        let mut names = Vec::with_capacity(self.entries.len());
+        let mut shapes = Vec::with_capacity(self.entries.len());
+        let mut sets: [Vec<Vec<f32>>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        for (name, shape, w, m, v) in self.entries {
+            names.push(name);
+            shapes.push(shape);
+            sets[0].push(w);
+            sets[1].push(m);
+            sets[2].push(v);
+        }
+        Ok(SnapshotView {
+            step: self.step,
+            names,
+            shapes,
+            sets,
+            capture_seconds: self.started.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+impl ShardSource for SnapshotView {
+    fn step(&self) -> u64 {
+        self.step
+    }
+    fn names(&self) -> &[String] {
+        &self.names
+    }
+    fn shapes(&self) -> &[Vec<usize>] {
+        &self.shapes
+    }
+    fn read(&mut self, set: usize, tensor: usize, range: Range<usize>) -> Result<Vec<f32>> {
+        let data = self
+            .sets
+            .get(set)
+            .and_then(|s| s.get(tensor))
+            .ok_or_else(|| Error::shape("snapshot source read out of bounds"))?;
+        data.get(range)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| Error::shape("snapshot source range out of bounds"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ck() -> Checkpoint {
+        Checkpoint::synthetic(7, &[("b.bias", vec![5]), ("a.w", vec![3, 4])], 11)
+    }
+
+    #[test]
+    fn capture_round_trips_to_identical_checkpoint() {
+        let original = ck();
+        let view = SnapshotView::capture(&original).unwrap();
+        assert_eq!(view.step(), 7);
+        assert_eq!(view.param_count(), original.param_count());
+        let rebuilt = view.into_checkpoint().unwrap();
+        assert_eq!(rebuilt, original);
+        assert_eq!(rebuilt.to_bytes(), original.to_bytes());
+    }
+
+    #[test]
+    fn from_checkpoint_is_identity() {
+        let original = ck();
+        let rebuilt =
+            SnapshotView::from_checkpoint(original.clone()).unwrap().into_checkpoint().unwrap();
+        assert_eq!(rebuilt, original);
+    }
+
+    #[test]
+    fn frozen_copy_is_isolated_from_later_mutation() {
+        let mut live = ck();
+        let view = SnapshotView::capture(&live).unwrap();
+        for e in live.weights.iter_mut() {
+            for v in e.tensor.data_mut() {
+                *v += 1.0;
+            }
+        }
+        let frozen = view.into_checkpoint().unwrap();
+        assert_ne!(frozen, live);
+        assert_eq!(frozen, ck());
+    }
+
+    #[test]
+    fn builder_sorts_by_name_and_matches_tensorset_order() {
+        let original = ck();
+        let mut b = SnapshotBuilder::new(7);
+        // Push in reverse name order; finish must still match the
+        // name-sorted TensorSet layout.
+        for e in original.weights.iter().rev() {
+            let m = original.exp_avg.get(&e.name).unwrap();
+            let v = original.exp_avg_sq.get(&e.name).unwrap();
+            b.push(
+                e.name.clone(),
+                e.tensor.shape().to_vec(),
+                e.tensor.data(),
+                m.data(),
+                v.data(),
+            )
+            .unwrap();
+        }
+        let view = b.finish().unwrap();
+        assert!(view.capture_seconds() >= 0.0);
+        assert_eq!(view.into_checkpoint().unwrap(), original);
+    }
+
+    #[test]
+    fn builder_rejects_duplicates_and_bad_shapes() {
+        let mut b = SnapshotBuilder::new(1);
+        assert!(b.push("t", vec![2], &[1.0, 2.0, 3.0], &[0.0; 2], &[0.0; 2]).is_err());
+        b.push("t", vec![2], &[1.0, 2.0], &[0.0; 2], &[0.0; 2]).unwrap();
+        b.push("t", vec![2], &[3.0, 4.0], &[0.0; 2], &[0.0; 2]).unwrap();
+        assert!(b.finish().is_err());
+    }
+
+    #[test]
+    fn shard_source_reads_match_checkpoint_values() {
+        let original = ck();
+        let mut view = SnapshotView::capture(&original).unwrap();
+        // names are ascending: a.w (12 elems) then b.bias (5 elems).
+        assert_eq!(ShardSource::names(&view), &["a.w".to_string(), "b.bias".to_string()]);
+        let w = original.weights.get("a.w").unwrap().data().to_vec();
+        assert_eq!(view.read(0, 0, 2..7).unwrap(), &w[2..7]);
+        assert!(view.read(0, 0, 2..99).is_err());
+        assert!(view.read(3, 0, 0..1).is_err());
+    }
+
+    #[test]
+    fn mismatched_set_layouts_are_rejected() {
+        let mut bad = ck();
+        bad.exp_avg.insert("extra", Tensor::zeros(vec![2]));
+        assert!(SnapshotView::capture(&bad).is_err());
+        assert!(SnapshotView::from_checkpoint(bad).is_err());
+    }
+}

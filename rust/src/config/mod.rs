@@ -60,6 +60,12 @@ pub struct ExperimentConfig {
     /// Save (and compress) a checkpoint every N steps (paper: 1000 for
     /// Pythia-410M; scaled down for the synthetic workloads).
     pub ckpt_every: u64,
+    /// Two-phase capture stress knob: freeze a snapshot into the
+    /// compression pipeline every N steps, independently of
+    /// `ckpt_every`'s raw saves (0 ⇒ follow `ckpt_every`). Lower values
+    /// capture more often than the pipeline drains, exercising the
+    /// bounded one-in-flight handoff.
+    pub snapshot_cadence: u64,
     /// Reference step size `s` of paper Eq. 6 (1 ⇒ previous checkpoint).
     pub step_size: u64,
     /// Force a self-contained (intra) frame every N checkpoints; 0 ⇒ only
@@ -96,6 +102,7 @@ impl Default for ExperimentConfig {
             workload: "lm_tiny".into(),
             steps: 300,
             ckpt_every: 50,
+            snapshot_cadence: 0,
             step_size: 1,
             keyframe_every: 0,
             retain_last: 0,
@@ -123,6 +130,7 @@ impl ExperimentConfig {
                 "workload" => cfg.workload = req_str(val)?,
                 "steps" => cfg.steps = req_u64(val)?,
                 "ckpt_every" => cfg.ckpt_every = req_u64(val)?,
+                "snapshot_cadence" => cfg.snapshot_cadence = req_u64(val)?,
                 "step_size" => cfg.step_size = req_u64(val)?,
                 "keyframe_every" | "keyframe_interval" => cfg.keyframe_every = req_u64(val)?,
                 "retain_last" => cfg.retain_last = req_u64(val)?,
@@ -156,6 +164,7 @@ impl ExperimentConfig {
             ("workload", Json::str(self.workload.clone())),
             ("steps", Json::num(self.steps as f64)),
             ("ckpt_every", Json::num(self.ckpt_every as f64)),
+            ("snapshot_cadence", Json::num(self.snapshot_cadence as f64)),
             ("step_size", Json::num(self.step_size as f64)),
             ("keyframe_every", Json::num(self.keyframe_every as f64)),
             ("retain_last", Json::num(self.retain_last as f64)),

@@ -1,0 +1,321 @@
+//! Two-phase capture handoff: the zero-stall seam between the trainer
+//! and the pipeline.
+//!
+//! Phase 1 (the caller): freeze live state into a
+//! [`SnapshotView`](crate::checkpoint::SnapshotView) — O(memcpy). Phase 2
+//! (this module): [`CaptureHandle::capture`] parks the frozen view in a
+//! **single slot** and returns immediately; a dedicated forwarder thread
+//! (`cpcm-capture`) picks it up and pushes it through the blocking
+//! [`Coordinator::submit`] path, absorbing the pipeline's backpressure so
+//! the trainer never waits on the submit queue.
+//!
+//! ## Bounded-in-flight rule
+//!
+//! At most **one** frozen snapshot exists between the trainer and the
+//! pipeline intake: the slot holds the parked view, and while the
+//! forwarder is blocked submitting it the slot stays `busy`. A second
+//! `capture` while the slot is occupied blocks (or sheds, via
+//! [`CaptureHandle::try_capture`]) — RSS is bounded by one snapshot on
+//! top of the coordinator's own `3 · queue_depth + 3` checkpoints, never
+//! by training speed. Backpressure still originates from the same
+//! [`BoundedQueue`](crate::util::queue::BoundedQueue) as direct submits;
+//! the slot only moves *where* the wait happens (onto the forwarder
+//! thread instead of the training loop).
+//!
+//! Metrics (same registry as [`Coordinator::metrics`]): `stall_seconds`
+//! (trainer-observed cost per capture: freezing copy + slot wait),
+//! `capture_copy_seconds` (the freezing copy alone), `snapshots_in_flight`
+//! (high-water gauge, ≤ 1 by construction), `snapshot_captures` and
+//! `snapshot_shed` counters.
+
+use super::{Coordinator, JobResult};
+use crate::checkpoint::SnapshotView;
+use crate::metrics::Metrics;
+use crate::{Error, Result};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Outcome of a non-blocking [`CaptureHandle::try_capture`].
+pub enum CaptureOutcome {
+    /// The snapshot was parked for the forwarder.
+    Queued,
+    /// The slot was occupied; the snapshot is handed back untouched.
+    Rejected(SnapshotView),
+}
+
+/// The single-snapshot handoff slot. `busy` covers the window where the
+/// forwarder has taken the view out of `item` but is still blocked in
+/// `submit` — the in-flight count is `item.is_some() as usize + busy as
+/// usize`, and the capture paths keep it ≤ 1.
+#[derive(Default)]
+struct Slot {
+    item: Option<SnapshotView>,
+    busy: bool,
+    closed: bool,
+}
+
+/// Zero-stall front end over a running [`Coordinator`]. Created by
+/// [`Coordinator::into_capture_handle`]; consumed by
+/// [`CaptureHandle::finish`], which drains the slot, joins the forwarder
+/// and then runs the coordinator's own shutdown contract.
+pub struct CaptureHandle {
+    coord: Option<Arc<Coordinator>>,
+    slot: Arc<(Mutex<Slot>, Condvar)>,
+    forwarder: Option<std::thread::JoinHandle<Result<()>>>,
+    metrics: Arc<Metrics>,
+}
+
+fn lock_slot<'a>(lock: &'a Mutex<Slot>) -> std::sync::MutexGuard<'a, Slot> {
+    lock.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl CaptureHandle {
+    pub(super) fn new(coord: Coordinator) -> Result<Self> {
+        let metrics = coord.metrics();
+        let coord = Arc::new(coord);
+        let slot = Arc::new((Mutex::new(Slot::default()), Condvar::new()));
+        let spawned = {
+            let coord = coord.clone();
+            let slot = slot.clone();
+            std::thread::Builder::new()
+                .name("cpcm-capture".into())
+                .spawn(move || forward_loop(&coord, &slot))
+        };
+        match spawned {
+            Ok(h) => Ok(Self { coord: Some(coord), slot, forwarder: Some(h), metrics }),
+            Err(e) => {
+                // No forwarder thread exists; dropping the sole Arc runs
+                // the coordinator's own close-and-join shutdown.
+                drop(coord);
+                Err(Error::Io(e))
+            }
+        }
+    }
+
+    /// Park a frozen snapshot and return as soon as the slot is free —
+    /// the trainer's whole phase-2 cost. Blocks only while a previous
+    /// snapshot is still in flight (the bounded-in-flight rule); fails
+    /// once the pipeline has shut down.
+    ///
+    /// Records `stall_seconds` = the view's freezing-copy time + the slot
+    /// wait: the total time training was not making progress for this
+    /// snapshot.
+    pub fn capture(&self, view: SnapshotView) -> Result<()> {
+        let t0 = Instant::now();
+        let (lock, cvar) = &*self.slot;
+        let mut slot = lock_slot(lock);
+        while (slot.item.is_some() || slot.busy) && !slot.closed {
+            slot = cvar.wait(slot).unwrap_or_else(|e| e.into_inner());
+        }
+        if slot.closed {
+            return Err(Error::codec("capture pipeline is shut down"));
+        }
+        let copy_seconds = view.capture_seconds();
+        slot.item = Some(view);
+        drop(slot);
+        cvar.notify_all();
+        self.metrics.gauge_max("snapshots_in_flight", 1.0);
+        self.metrics.count("snapshot_captures", 1);
+        self.metrics.time("stall_seconds", copy_seconds + t0.elapsed().as_secs_f64());
+        Ok(())
+    }
+
+    /// Non-blocking capture: when a snapshot is already in flight the new
+    /// one is handed back as [`CaptureOutcome::Rejected`] instead of
+    /// stalling the trainer (counted in `snapshot_shed`).
+    pub fn try_capture(&self, view: SnapshotView) -> Result<CaptureOutcome> {
+        let (lock, cvar) = &*self.slot;
+        let mut slot = lock_slot(lock);
+        if slot.closed {
+            return Err(Error::codec("capture pipeline is shut down"));
+        }
+        if slot.item.is_some() || slot.busy {
+            drop(slot);
+            self.metrics.count("snapshot_shed", 1);
+            return Ok(CaptureOutcome::Rejected(view));
+        }
+        let copy_seconds = view.capture_seconds();
+        slot.item = Some(view);
+        drop(slot);
+        cvar.notify_all();
+        self.metrics.gauge_max("snapshots_in_flight", 1.0);
+        self.metrics.count("snapshot_captures", 1);
+        self.metrics.time("stall_seconds", copy_seconds);
+        Ok(CaptureOutcome::Queued)
+    }
+
+    /// Shared metrics registry (the coordinator's, plus the capture
+    /// metrics documented on this module).
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    /// Close the slot (a parked snapshot still gets forwarded), join the
+    /// forwarder, then run [`Coordinator::finish`] and return its
+    /// results. A pipeline-stage error is preferred over a forwarder
+    /// error (the former is the root cause of the latter).
+    pub fn finish(mut self) -> Result<Vec<JobResult>> {
+        let forward_result = self.shutdown_forwarder();
+        let coord = self.coord.take().expect("finish runs once; coord present until then");
+        let coord = Arc::try_unwrap(coord)
+            .map_err(|_| Error::codec("capture forwarder still holds the coordinator"))?;
+        match (coord.finish(), forward_result) {
+            (Err(stage_err), _) => Err(stage_err),
+            (Ok(_), Err(fwd_err)) => Err(fwd_err),
+            (Ok(results), Ok(())) => Ok(results),
+        }
+    }
+
+    /// Mark the slot closed, wake everyone, join the forwarder
+    /// (idempotent — `finish` and `drop` both come through here).
+    fn shutdown_forwarder(&mut self) -> Result<()> {
+        let (lock, cvar) = &*self.slot;
+        lock_slot(lock).closed = true;
+        cvar.notify_all();
+        match self.forwarder.take() {
+            None => Ok(()),
+            Some(h) => match h.join() {
+                Err(_) => Err(Error::codec("capture forwarder panicked")),
+                Ok(result) => result,
+            },
+        }
+    }
+}
+
+impl Drop for CaptureHandle {
+    fn drop(&mut self) {
+        // An abandoned handle still drains + joins the forwarder, and
+        // dropping the last coordinator Arc runs its close-and-join.
+        let _ = self.shutdown_forwarder();
+        self.coord.take();
+    }
+}
+
+/// The forwarder: take the parked view, mark the slot busy, submit
+/// through the coordinator's blocking path (this is where backpressure is
+/// absorbed), free the slot. On close, drains a still-parked view before
+/// exiting; on submit error, closes the slot so captures fail fast.
+fn forward_loop(coord: &Coordinator, slot: &(Mutex<Slot>, Condvar)) -> Result<()> {
+    let (lock, cvar) = slot;
+    loop {
+        let view = {
+            let mut s = lock_slot(lock);
+            while s.item.is_none() && !s.closed {
+                s = cvar.wait(s).unwrap_or_else(|e| e.into_inner());
+            }
+            match s.item.take() {
+                Some(v) => {
+                    s.busy = true;
+                    v
+                }
+                // Closed and drained.
+                None => return Ok(()),
+            }
+        };
+        let result = coord.submit_view(view);
+        {
+            let mut s = lock_slot(lock);
+            s.busy = false;
+            if result.is_err() {
+                s.closed = true;
+            }
+        }
+        cvar.notify_all();
+        result?;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::Checkpoint;
+    use crate::codec::{CodecConfig, ContextMode};
+    use crate::coordinator::CoordinatorConfig;
+    use crate::lstm::Backend;
+    use std::path::PathBuf;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("cpcm_capture_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn small_cfg(dir: &PathBuf) -> CoordinatorConfig {
+        let codec = CodecConfig {
+            mode: ContextMode::Order0,
+            hidden: 8,
+            embed: 8,
+            batch: 32,
+            quant_iters: 4,
+            ..Default::default()
+        };
+        CoordinatorConfig::new(codec, Backend::Native, dir)
+    }
+
+    fn view(step: u64, seed: u64) -> SnapshotView {
+        let ck = Checkpoint::synthetic(step, &[("w", vec![10, 8]), ("b", vec![12])], seed);
+        SnapshotView::capture(&ck).unwrap()
+    }
+
+    #[test]
+    fn captures_flow_through_pipeline_in_order() {
+        let dir = tmpdir("flow");
+        let handle =
+            Coordinator::start(small_cfg(&dir)).unwrap().into_capture_handle().unwrap();
+        for i in 0..3u64 {
+            handle.capture(view(10 * (i + 1), 70 + i)).unwrap();
+        }
+        let metrics = handle.metrics();
+        let results = handle.finish().unwrap();
+        assert_eq!(results.iter().map(|r| r.step).collect::<Vec<_>>(), vec![10, 20, 30]);
+        assert_eq!(metrics.counter("snapshot_captures"), 3);
+        assert_eq!(metrics.timing_count("stall_seconds"), 3);
+        assert!(metrics.gauge_value("snapshots_in_flight").unwrap_or(0.0) <= 1.0);
+        // Every capture's freezing copy was accounted by the coordinator.
+        assert_eq!(metrics.timing_count("capture_copy_seconds"), 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn try_capture_sheds_while_slot_is_occupied_and_returns_view_intact() {
+        let dir = tmpdir("shed");
+        let handle =
+            Coordinator::start(small_cfg(&dir)).unwrap().into_capture_handle().unwrap();
+        // Retry loop: every view must eventually land, and a rejection
+        // must hand the identical frozen view back.
+        for i in 0..4u64 {
+            let mut v = view(10 * (i + 1), 90 + i);
+            let expect_step = SnapshotView::step(&v);
+            loop {
+                match handle.try_capture(v).unwrap() {
+                    CaptureOutcome::Queued => break,
+                    CaptureOutcome::Rejected(back) => {
+                        assert_eq!(SnapshotView::step(&back), expect_step);
+                        v = back;
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                }
+            }
+        }
+        let metrics = handle.metrics();
+        let results = handle.finish().unwrap();
+        assert_eq!(results.len(), 4);
+        assert_eq!(metrics.counter("snapshot_captures"), 4);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn capture_after_finish_style_shutdown_fails_cleanly() {
+        let dir = tmpdir("closed");
+        let mut handle =
+            Coordinator::start(small_cfg(&dir)).unwrap().into_capture_handle().unwrap();
+        handle.capture(view(10, 1)).unwrap();
+        handle.shutdown_forwarder().unwrap();
+        assert!(handle.capture(view(20, 2)).is_err());
+        assert!(handle.try_capture(view(30, 3)).is_err());
+        // The parked snapshot was drained before the forwarder exited.
+        let results = handle.finish().unwrap();
+        assert_eq!(results.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

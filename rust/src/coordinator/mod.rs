@@ -59,17 +59,19 @@
 //! encodes; `finish` snapshots the pool's spawn/generation counters into
 //! the metrics registry (`pool_threads_spawned`, `pool_jobs`).
 
+mod capture;
 mod lifecycle;
 mod manifest;
 mod scrub;
 
+pub use capture::{CaptureHandle, CaptureOutcome};
 pub use lifecycle::{
     compact_step, gc_dir, recover_dir, CompactReport, GcReport, RecoveryReport, RetentionPolicy,
 };
 pub use manifest::{ChainManifest, ManifestEntry, RetiredEntry, MANIFEST_FILE};
 pub use scrub::{repair_dir, scrub_dir, RepairReport, ScrubFinding, ScrubReport};
 
-use crate::checkpoint::{Checkpoint, Store};
+use crate::checkpoint::{Checkpoint, SnapshotView, Store};
 use crate::codec::{Codec, CodecConfig, EncodeStats, PreparedEncode, SymbolMaps};
 use crate::container::Container;
 use crate::lstm::Backend;
@@ -332,6 +334,36 @@ impl Coordinator {
                 Err(Error::codec("coordinator pipeline is shut down"))
             }
         }
+    }
+
+    /// Submit a frozen snapshot: rebuilds the byte-identical checkpoint
+    /// ([`SnapshotView::into_checkpoint`]) and routes it through
+    /// [`Coordinator::submit`]. Records the snapshot's phase-1 freezing
+    /// cost as `capture_copy_seconds`.
+    pub fn submit_view(&self, view: SnapshotView) -> Result<()> {
+        self.metrics.time("capture_copy_seconds", view.capture_seconds());
+        self.submit(view.into_checkpoint()?)
+    }
+
+    /// Non-blocking [`Coordinator::submit_view`]; the freezing cost is
+    /// recorded only when the snapshot is actually queued.
+    pub fn try_submit_view(&self, view: SnapshotView) -> Result<SubmitOutcome> {
+        let copy_seconds = view.capture_seconds();
+        match self.try_submit(view.into_checkpoint()?)? {
+            SubmitOutcome::Queued => {
+                self.metrics.time("capture_copy_seconds", copy_seconds);
+                Ok(SubmitOutcome::Queued)
+            }
+            rejected => Ok(rejected),
+        }
+    }
+
+    /// Wrap this pipeline in a zero-stall [`CaptureHandle`]: captures
+    /// park a frozen snapshot in a one-deep slot and return immediately;
+    /// a forwarder thread absorbs the submit-queue backpressure. See
+    /// [`CaptureHandle`] for the bounded-in-flight contract.
+    pub fn into_capture_handle(self) -> Result<CaptureHandle> {
+        CaptureHandle::new(self)
     }
 
     /// Shared metrics registry (per-stage timings, queue waits, high-water

@@ -238,19 +238,28 @@ pub fn read_request(r: &mut impl BufRead, limits: &Limits) -> Result<Request, Pa
     Ok(Request { method: method.to_string(), path: target.to_string(), headers, body })
 }
 
+/// Response payload: an in-memory buffer, or an open file streamed out
+/// in chunks so large bodies (restored checkpoints) never have to be
+/// resident — RSS stays bounded by the copy buffer, not the body size.
+#[derive(Debug)]
+enum Body {
+    Bytes(Vec<u8>),
+    File { file: std::fs::File, len: u64 },
+}
+
 /// One response, always written with `Connection: close`.
 #[derive(Debug)]
 pub struct Response {
     status: u16,
     content_type: &'static str,
     extra: Vec<(String, String)>,
-    body: Vec<u8>,
+    body: Body,
 }
 
 impl Response {
     /// Response with an explicit content type and body.
     pub fn new(status: u16, content_type: &'static str, body: Vec<u8>) -> Self {
-        Self { status, content_type, extra: Vec::new(), body }
+        Self { status, content_type, extra: Vec::new(), body: Body::Bytes(body) }
     }
 
     /// Plain-text response.
@@ -266,6 +275,20 @@ impl Response {
     /// Binary response (checkpoint downloads).
     pub fn bytes(status: u16, body: Vec<u8>) -> Self {
         Self::new(status, "application/octet-stream", body)
+    }
+
+    /// Binary response streamed from an open file: `Content-Length` is
+    /// `len` (read it from the file's metadata before handing it over),
+    /// and the file is copied to the socket in bounded chunks at write
+    /// time. On Unix the caller may unlink the path immediately — the
+    /// open handle keeps the bytes alive until the response is sent.
+    pub fn file(status: u16, file: std::fs::File, len: u64) -> Self {
+        Self {
+            status,
+            content_type: "application/octet-stream",
+            extra: Vec::new(),
+            body: Body::File { file, len },
+        }
     }
 
     /// Named JSON error: `{"error": "<msg>"}`.
@@ -284,22 +307,41 @@ impl Response {
         self.status
     }
 
-    /// Body length in bytes (for access metrics).
-    pub fn body_len(&self) -> usize {
-        self.body.len()
+    /// Body length in bytes (for access metrics and `Content-Length`).
+    pub fn body_len(&self) -> u64 {
+        match &self.body {
+            Body::Bytes(b) => b.len() as u64,
+            Body::File { len, .. } => *len,
+        }
     }
 
-    /// Serialize the full response to `w`.
+    /// Serialize the full response to `w`. File bodies stream through
+    /// `std::io::copy` (bounded buffer); if the file turns out shorter
+    /// than the announced length this errors, and the client sees the
+    /// truncation as a `Content-Length` mismatch (the connection closes
+    /// either way).
     pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
         write!(w, "HTTP/1.1 {} {}\r\n", self.status, reason(self.status))?;
         write!(w, "Content-Type: {}\r\n", self.content_type)?;
-        write!(w, "Content-Length: {}\r\n", self.body.len())?;
+        write!(w, "Content-Length: {}\r\n", self.body_len())?;
         write!(w, "Connection: close\r\n")?;
         for (k, v) in &self.extra {
             write!(w, "{k}: {v}\r\n")?;
         }
         write!(w, "\r\n")?;
-        w.write_all(&self.body)?;
+        match &self.body {
+            Body::Bytes(b) => w.write_all(b)?,
+            Body::File { file, len } => {
+                let mut src = std::io::Read::take(file, *len);
+                let copied = std::io::copy(&mut src, w)?;
+                if copied != *len {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        format!("file body is {copied} bytes, announced {len}"),
+                    ));
+                }
+            }
+        }
         w.flush()
     }
 }
@@ -428,5 +470,36 @@ mod tests {
         assert!(text.contains("Connection: close\r\n"));
         assert!(text.contains("Retry-After: 1\r\n"));
         assert!(text.ends_with("{\"error\":\"quota exceeded\"}"));
+    }
+
+    #[test]
+    fn file_response_streams_with_content_length_and_survives_unlink() {
+        let path = std::env::temp_dir()
+            .join(format!("cpcm_http_file_body_{}", std::process::id()));
+        std::fs::write(&path, b"frozen checkpoint bytes").unwrap();
+        let file = std::fs::File::open(&path).unwrap();
+        let len = file.metadata().unwrap().len();
+        // Unlink before writing: the open handle must keep the bytes.
+        std::fs::remove_file(&path).unwrap();
+        let resp = Response::file(200, file, len);
+        assert_eq!(resp.body_len(), len);
+        let mut out = Vec::new();
+        resp.write_to(&mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Type: application/octet-stream\r\n"));
+        assert!(text.contains(&format!("Content-Length: {len}\r\n")));
+        assert!(text.ends_with("frozen checkpoint bytes"));
+    }
+
+    #[test]
+    fn file_response_shorter_than_announced_errors() {
+        let path = std::env::temp_dir()
+            .join(format!("cpcm_http_file_short_{}", std::process::id()));
+        std::fs::write(&path, b"abc").unwrap();
+        let file = std::fs::File::open(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        let resp = Response::file(200, file, 10);
+        assert!(resp.write_to(&mut Vec::new()).is_err());
     }
 }

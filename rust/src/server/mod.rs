@@ -58,7 +58,7 @@ pub mod http;
 pub mod router;
 pub mod tenant;
 
-use crate::checkpoint::Checkpoint;
+use crate::checkpoint::{Checkpoint, SnapshotView};
 use crate::codec::CodecConfig;
 use crate::coordinator::{ChainManifest, Coordinator, CoordinatorConfig, SubmitOutcome};
 use crate::lstm::Backend;
@@ -311,7 +311,7 @@ fn handle_conn(state: &Arc<ServerState>, stream: TcpStream) {
         }
     };
     state.metrics.count(&format!("http_status_{}xx", response.status() / 100), 1);
-    state.metrics.count("http_bytes_out", response.body_len() as u64);
+    state.metrics.count("http_bytes_out", response.body_len());
     let mut stream = reader.into_inner();
     let _ = response.write_to(&mut stream);
     if drain {
@@ -386,6 +386,14 @@ fn handle_submit(state: &Arc<ServerState>, name: &str, body: &[u8]) -> Response 
         Err(e) => return Response::error(400, &format!("malformed checkpoint: {e}")),
     };
     let step = ck.step;
+    // Freeze the parsed body (zero-copy — the buffers move): the submit
+    // path is the same frozen-snapshot handoff the trainer uses, and a
+    // checkpoint whose parameter sets disagree on layout is rejected
+    // here instead of failing deep inside the pipeline.
+    let view = match SnapshotView::from_checkpoint(ck) {
+        Ok(v) => v,
+        Err(e) => return Response::error(400, &format!("malformed checkpoint: {e}")),
+    };
 
     if t.session.is_none() {
         if let Err(e) = start_session(state, &mut t) {
@@ -393,7 +401,7 @@ fn handle_submit(state: &Arc<ServerState>, name: &str, body: &[u8]) -> Response 
         }
     }
     let session = t.session.as_ref().expect("session started above");
-    match session.try_submit(ck) {
+    match session.try_submit_view(view) {
         Ok(SubmitOutcome::Queued) => {
             state.metrics.count("checkpoints_accepted", 1);
             Response::json(
@@ -510,20 +518,29 @@ fn handle_restore(state: &Arc<ServerState>, name: &str, step: u64) -> Response {
     }
 
     // Restore through the library path into the serve tmp dir, then
-    // stream the bytes back. The per-invocation work-dir token in
+    // stream the file to the socket with Content-Length from its
+    // metadata — the daemon's RSS stays bounded by the copy buffer, not
+    // the restored checkpoint size. The per-invocation work-dir token in
     // `restore_step_to_file_with` makes concurrent same-step restores
-    // safe (that was satellite bugfix #1).
+    // safe (that was satellite bugfix #1). The temp file is unlinked
+    // before the response is returned: the open handle keeps its bytes
+    // readable until the body has been sent, and nothing is left behind
+    // for crash recovery to sweep.
     let token = state.restore_token.fetch_add(1, Ordering::Relaxed);
     let out = state.cfg.root.join("tmp").join(format!("out_{name}_{step}_{token}.bin"));
     let backend = lock_recovering(&state.backend).clone();
     let restored = crate::coordinator::restore_step_to_file_with(&t.dir, &backend, step, &out, 0)
-        .and_then(|()| std::fs::read(&out).map_err(crate::Error::from));
+        .and_then(|()| {
+            let file = std::fs::File::open(&out)?;
+            let len = file.metadata()?.len();
+            Ok((file, len))
+        });
     let _ = std::fs::remove_file(&out);
     match restored {
-        Ok(bytes) => {
-            t.stats.bytes_out += bytes.len() as u64;
+        Ok((file, len)) => {
+            t.stats.bytes_out += len;
             state.metrics.count("restores_served", 1);
-            Response::bytes(200, bytes)
+            Response::file(200, file, len)
         }
         Err(e) => Response::error(500, &format!("restore failed: {e}")),
     }

@@ -155,6 +155,12 @@ impl TensorSet {
         self.entries.is_empty()
     }
 
+    /// Consume into the name-sorted entry vector (zero-copy — used by
+    /// snapshot freezing to take ownership of the buffers).
+    pub fn into_entries(self) -> Vec<NamedTensor> {
+        self.entries
+    }
+
     /// Total element count.
     pub fn param_count(&self) -> usize {
         self.entries.iter().map(|e| e.tensor.len()).sum()

@@ -15,7 +15,7 @@ mod corpus;
 
 pub use corpus::{LmCorpus, VitData};
 
-use crate::checkpoint::Checkpoint;
+use crate::checkpoint::{Checkpoint, SnapshotBuilder, SnapshotView};
 use crate::runtime::{HostTensor, Manifest, RuntimeHandle};
 use crate::tensor::Tensor;
 use crate::{Error, Result};
@@ -212,6 +212,26 @@ impl Trainer {
                 .insert(name.clone(), Tensor::new(shape.clone(), self.v[i].f32s()?.to_vec())?);
         }
         Ok(ck)
+    }
+
+    /// Phase-1 of a two-phase capture: freeze the current `P_t` into an
+    /// owned [`SnapshotView`] in O(memcpy) — no encode, no disk. The view
+    /// rebuilds the exact checkpoint [`Trainer::checkpoint`] would have
+    /// produced at this step (byte-determinism contract), so handing it to
+    /// [`crate::coordinator::CaptureHandle::capture`] compresses to
+    /// identical bytes while training continues.
+    pub fn snapshot(&self) -> Result<SnapshotView> {
+        let mut b = SnapshotBuilder::new(self.step);
+        for (i, (name, shape)) in self.spec.iter().enumerate() {
+            b.push(
+                name.clone(),
+                shape.clone(),
+                self.params[i].f32s()?,
+                self.m[i].f32s()?,
+                self.v[i].f32s()?,
+            )?;
+        }
+        b.finish()
     }
 
     /// Restore state from a checkpoint (the resume-from-compressed path).

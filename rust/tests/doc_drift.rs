@@ -1,0 +1,261 @@
+//! Doc-drift regression tests.
+//!
+//! The operator docs (README, ARCHITECTURE, OPERATIONS, EXPERIMENTS)
+//! name CLI flags, config keys, metric names, and file paths. Each of
+//! those claims is cheap to make and silently rots when the code moves.
+//! These tests pin the docs to the source with plain string scans — no
+//! markdown parser, no regex crate, no dependencies:
+//!
+//! * every `--flag` shown in a doc must be parsed by the `cpcm` CLI, an
+//!   example binary, or belong to a foreign tool on the allowlist
+//!   (cargo / libtest / curl);
+//! * every snake_case identifier in inline code spans must appear
+//!   somewhere in the Rust sources (config keys, metric names, JSON
+//!   fields, function names — if a doc names it, the code must have it);
+//! * every documented `cpcm_*` metrics key must be backed by a metric
+//!   the code actually registers or renders;
+//! * every intra-repo markdown link must point at a file that exists.
+//!
+//! When a legitimate rename breaks one of these, fix the doc — that is
+//! the point.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+const DOCS: [(&str, &str); 4] = [
+    ("README.md", include_str!("../../README.md")),
+    ("ARCHITECTURE.md", include_str!("../../ARCHITECTURE.md")),
+    ("OPERATIONS.md", include_str!("../../OPERATIONS.md")),
+    ("EXPERIMENTS.md", include_str!("../../EXPERIMENTS.md")),
+];
+
+/// Flags that belong to foreign tools whose invocations the docs show
+/// (cargo, libtest harness, curl) — not part of the `cpcm` surface.
+const FOREIGN_FLAGS: [&str; 14] = [
+    "release", "bench", "test", "example", "no-run", "no-deps", "open", "features", "ignored",
+    "exact", "nocapture", "test-threads", "quiet", "data-binary",
+];
+
+/// Metric names assembled at runtime (`format!("http_status_{}xx", ...)`)
+/// that a literal source scan cannot see.
+const METRIC_ALLOW: [&str; 3] = ["http_status_2xx", "http_status_4xx", "http_status_5xx"];
+
+fn manifest_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn repo_root() -> PathBuf {
+    manifest_dir().parent().expect("crate lives one level under the repo root").to_path_buf()
+}
+
+/// Concatenation of every `.rs` file under src/, benches/, tests/ and
+/// examples/ — the haystack the docs' identifiers must live in.
+fn rust_sources() -> String {
+    fn walk(dir: &Path, out: &mut String) {
+        let mut entries: Vec<PathBuf> = match fs::read_dir(dir) {
+            Ok(rd) => rd.map(|e| e.expect("readable dir entry").path()).collect(),
+            Err(_) => return,
+        };
+        entries.sort();
+        for path in entries {
+            if path.is_dir() {
+                walk(&path, out);
+            } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+                out.push_str(&fs::read_to_string(&path).expect("readable source file"));
+                out.push('\n');
+            }
+        }
+    }
+    let mut out = String::new();
+    for sub in ["src", "benches", "tests", "examples"] {
+        walk(&manifest_dir().join(sub), &mut out);
+    }
+    assert!(!out.is_empty(), "source walk found nothing — wrong manifest dir?");
+    out
+}
+
+fn cli_source() -> String {
+    fs::read_to_string(manifest_dir().join("src/cli/mod.rs")).expect("cli source readable")
+}
+
+/// `--stem` occurrences anywhere in `text` (fenced blocks included —
+/// usage lines live in fences). A stem starts with an ASCII lowercase
+/// letter and continues over `[a-z0-9-]`.
+fn doc_flags(text: &str) -> Vec<String> {
+    let bytes = text.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + 2 < bytes.len() {
+        if bytes[i] == b'-' && bytes[i + 1] == b'-' && bytes[i + 2].is_ascii_lowercase() {
+            let mut j = i + 2;
+            let stem_char = |b: u8| b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'-';
+            while j < bytes.len() && stem_char(bytes[j]) {
+                j += 1;
+            }
+            out.push(text[i + 2..j].to_string());
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Inline backtick spans outside ``` fences, line by line. A line with
+/// an odd number of backticks contributes its complete pairs only.
+fn inline_spans(text: &str) -> Vec<&str> {
+    let mut spans = Vec::new();
+    let mut fenced = false;
+    for line in text.lines() {
+        if line.trim_start().starts_with("```") {
+            fenced = !fenced;
+            continue;
+        }
+        if fenced {
+            continue;
+        }
+        for (i, part) in line.split('`').enumerate() {
+            if i % 2 == 1 {
+                spans.push(part);
+            }
+        }
+    }
+    spans
+}
+
+/// Snake_case identifiers inside one inline span: all-`[a-z0-9_]`,
+/// contain an underscore, and are not flags, `cpcm_*` metric names
+/// (checked separately), or `_4xx`-style continuation shorthand.
+fn snake_tokens(span: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for word in span.split_whitespace() {
+        let w = word.trim_matches(|c: char| "(),;:\"'|.".contains(c));
+        if w.is_empty() || w.starts_with("--") || w.starts_with("cpcm_") || w.starts_with('_') {
+            continue;
+        }
+        if !w.contains('_') {
+            continue;
+        }
+        if !w.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_') {
+            continue;
+        }
+        out.push(w.to_string());
+    }
+    out
+}
+
+/// `cpcm_<name>` occurrences anywhere in `text` (metric schemas live in
+/// lists and fenced scrape examples alike).
+fn doc_metrics(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for (pos, _) in text.match_indices("cpcm_") {
+        let rest = &text[pos + "cpcm_".len()..];
+        let end = rest
+            .find(|c: char| !(c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_'))
+            .unwrap_or(rest.len());
+        if end > 0 {
+            out.push(rest[..end].to_string());
+        }
+    }
+    out
+}
+
+#[test]
+fn documented_cli_flags_exist_in_the_cli() {
+    let cli = cli_source();
+    let sources = rust_sources();
+    let mut fails = Vec::new();
+    for (doc, text) in DOCS {
+        for stem in doc_flags(text) {
+            let quoted = format!("\"{stem}\"");
+            let dashed = format!("\"--{stem}\"");
+            let foreign = FOREIGN_FLAGS.contains(&stem.as_str());
+            if cli.contains(&quoted) || sources.contains(&dashed) || foreign {
+                continue;
+            }
+            fails.push(format!("{doc}: `--{stem}` is not parsed by the CLI or any example"));
+        }
+    }
+    assert!(fails.is_empty(), "doc drift — stale flags:\n  {}", fails.join("\n  "));
+}
+
+#[test]
+fn documented_identifiers_exist_in_the_sources() {
+    let sources = rust_sources();
+    let mut fails = Vec::new();
+    for (doc, text) in DOCS {
+        for span in inline_spans(text) {
+            for tok in snake_tokens(span) {
+                if !sources.contains(&tok) {
+                    fails.push(format!("{doc}: `{tok}` does not appear in any Rust source"));
+                }
+            }
+        }
+    }
+    assert!(fails.is_empty(), "doc drift — stale identifiers:\n  {}", fails.join("\n  "));
+}
+
+#[test]
+fn documented_metrics_are_registered_by_the_code() {
+    let sources = rust_sources();
+    let mut fails = Vec::new();
+    for (doc, text) in DOCS {
+        for name in doc_metrics(text) {
+            // Timings export as a `_count` / `_total_s` pair derived
+            // from one registered key.
+            let base = name
+                .strip_suffix("_total_s")
+                .or_else(|| name.strip_suffix("_count"))
+                .unwrap_or(&name);
+            let rendered = format!("cpcm_{name}");
+            let registered = format!("\"{base}\"");
+            if sources.contains(&rendered)
+                || sources.contains(&registered)
+                || METRIC_ALLOW.contains(&name.as_str())
+            {
+                continue;
+            }
+            fails.push(format!("{doc}: `cpcm_{name}` is not registered or rendered anywhere"));
+        }
+    }
+    assert!(fails.is_empty(), "doc drift — stale metrics:\n  {}", fails.join("\n  "));
+}
+
+#[test]
+fn intra_repo_markdown_links_resolve() {
+    let root = repo_root();
+    let mut fails = Vec::new();
+    let mut mds: Vec<PathBuf> = fs::read_dir(&root)
+        .expect("repo root readable")
+        .map(|e| e.expect("readable dir entry").path())
+        .filter(|p| p.extension().map(|e| e == "md").unwrap_or(false))
+        .collect();
+    mds.sort();
+    assert!(!mds.is_empty(), "no markdown files at the repo root?");
+    for md in mds {
+        let text = fs::read_to_string(&md).expect("markdown readable");
+        let file = md.file_name().unwrap().to_string_lossy().into_owned();
+        for (pos, _) in text.match_indices("](") {
+            let rest = &text[pos + 2..];
+            let Some(end) = rest.find(')') else { continue };
+            let target = &rest[..end];
+            if target.is_empty()
+                || target.contains(char::is_whitespace)
+                || target.starts_with("http://")
+                || target.starts_with("https://")
+                || target.starts_with("mailto:")
+                || target.starts_with('#')
+            {
+                continue;
+            }
+            let path = target.split('#').next().unwrap_or("");
+            if path.is_empty() {
+                continue;
+            }
+            if !root.join(path).exists() {
+                fails.push(format!("{file}: dead link -> {target}"));
+            }
+        }
+    }
+    assert!(fails.is_empty(), "doc drift — dead links:\n  {}", fails.join("\n  "));
+}

@@ -1,0 +1,240 @@
+//! Two-phase snapshot capture acceptance tests.
+//!
+//! Pins the three contracts of the zero-stall capture path:
+//!
+//! 1. **Byte determinism** — a chain compressed through frozen
+//!    `SnapshotView`s produces `.cpcm` containers byte-identical to the
+//!    same chain compressed by stop-the-world submits, even when the
+//!    live tensors are mutated right after each freeze.
+//! 2. **Bounded in-flight / cadence stress** — capturing far faster than
+//!    the pipeline drains never holds more than one frozen snapshot, and
+//!    every capture's stall is accounted in `stall_seconds`.
+//! 3. **Crash mid-capture** — a fault injected while frozen snapshots
+//!    are being encoded behaves exactly like any other pipeline crash:
+//!    recovery leaves the last acknowledged step restorable bit-exactly.
+
+use cpcm::checkpoint::{Checkpoint, SnapshotView};
+use cpcm::codec::{CodecConfig, ContextMode};
+use cpcm::coordinator::{
+    recover_dir, restore_step, scrub_dir, ChainManifest, Coordinator, CoordinatorConfig,
+};
+use cpcm::lstm::Backend;
+use cpcm::util::fault::{arm, disarm, FaultMode, FaultOp, FaultPlan};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+const STEPS: [u64; 4] = [10, 20, 30, 40];
+
+fn layers() -> Vec<(&'static str, Vec<usize>)> {
+    vec![("w", vec![16, 8]), ("b", vec![11])]
+}
+
+fn codec() -> CodecConfig {
+    CodecConfig {
+        mode: ContextMode::Order0,
+        hidden: 8,
+        embed: 8,
+        batch: 32,
+        quant_iters: 3,
+        lanes: 1,
+        ..Default::default()
+    }
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("cpcm_snap_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn chain() -> Vec<Checkpoint> {
+    STEPS
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| Checkpoint::synthetic(s, &layers(), 300 + i as u64))
+        .collect()
+}
+
+/// Sorted (name, bytes) of every container file in `dir`.
+fn container_bytes(dir: &PathBuf) -> BTreeMap<String, Vec<u8>> {
+    let mut out = BTreeMap::new();
+    for entry in std::fs::read_dir(dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().map(|e| e == "cpcm").unwrap_or(false) {
+            out.insert(
+                path.file_name().unwrap().to_string_lossy().into_owned(),
+                std::fs::read(&path).unwrap(),
+            );
+        }
+    }
+    out
+}
+
+#[test]
+fn frozen_capture_bytes_match_stop_the_world_at_every_step() {
+    // Stop-the-world reference: direct blocking submits.
+    let ref_dir = tmpdir("stw");
+    let coord =
+        Coordinator::start(CoordinatorConfig::new(codec(), Backend::Native, &ref_dir)).unwrap();
+    for ck in chain() {
+        coord.submit(ck).unwrap();
+    }
+    let ref_results = coord.finish().unwrap();
+    assert_eq!(ref_results.len(), STEPS.len());
+
+    // Two-phase: freeze each checkpoint, then corrupt the live copy
+    // before the frozen view is even forwarded — the snapshot must be
+    // fully isolated from training's ongoing mutation.
+    let snap_dir = tmpdir("frozen");
+    let handle = Coordinator::start(CoordinatorConfig::new(codec(), Backend::Native, &snap_dir))
+        .unwrap()
+        .into_capture_handle()
+        .unwrap();
+    for mut live in chain() {
+        let view = SnapshotView::capture(&live).unwrap();
+        for e in live.weights.iter_mut() {
+            for v in e.tensor.data_mut() {
+                *v = f32::NAN;
+            }
+        }
+        drop(live);
+        handle.capture(view).unwrap();
+    }
+    let snap_results = handle.finish().unwrap();
+    assert_eq!(snap_results.len(), STEPS.len());
+
+    // Every container must be byte-identical, file by file.
+    let reference = container_bytes(&ref_dir);
+    let frozen = container_bytes(&snap_dir);
+    assert_eq!(reference.len(), STEPS.len());
+    assert_eq!(
+        reference.keys().collect::<Vec<_>>(),
+        frozen.keys().collect::<Vec<_>>(),
+        "both runs must produce the same container files"
+    );
+    for (name, bytes) in &reference {
+        assert_eq!(&frozen[name], bytes, "container {name} differs from stop-the-world");
+    }
+    // And the restored checkpoints round-trip identically too.
+    for &s in &STEPS {
+        assert_eq!(
+            restore_step(&snap_dir, &Backend::Native, s).unwrap().to_bytes(),
+            restore_step(&ref_dir, &Backend::Native, s).unwrap().to_bytes(),
+            "restore of step {s} differs"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&ref_dir);
+    let _ = std::fs::remove_dir_all(&snap_dir);
+}
+
+#[test]
+fn cadence_stress_keeps_one_snapshot_in_flight_and_accounts_every_stall() {
+    // Capture a long burst with no pacing at all — far faster than the
+    // pipeline can drain. The one-slot handoff must bound memory (the
+    // in-flight gauge never exceeds 1) and block rather than queue.
+    let dir = tmpdir("stress");
+    let mut cfg = CoordinatorConfig::new(codec(), Backend::Native, &dir);
+    cfg.queue_depth = 1;
+    let handle = Coordinator::start(cfg).unwrap().into_capture_handle().unwrap();
+    let n = 12u64;
+    for i in 0..n {
+        let ck = Checkpoint::synthetic(10 * (i + 1), &layers(), 800 + i);
+        handle.capture(SnapshotView::capture(&ck).unwrap()).unwrap();
+    }
+    let metrics = handle.metrics();
+    let results = handle.finish().unwrap();
+
+    assert_eq!(results.len(), n as usize, "every captured snapshot must be encoded");
+    assert_eq!(
+        results.iter().map(|r| r.step).collect::<Vec<_>>(),
+        (0..n).map(|i| 10 * (i + 1)).collect::<Vec<_>>(),
+        "snapshots must flow through in capture order"
+    );
+    assert_eq!(metrics.counter("snapshot_captures"), n);
+    assert_eq!(
+        metrics.timing_count("stall_seconds"),
+        n,
+        "every capture's trainer-side stall must be accounted"
+    );
+    assert_eq!(
+        metrics.timing_count("capture_copy_seconds"),
+        n,
+        "every forwarded snapshot's freeze cost must be accounted"
+    );
+    let in_flight = metrics.gauge_value("snapshots_in_flight").unwrap_or(0.0);
+    assert!(
+        in_flight > 0.0 && in_flight <= 1.0,
+        "bounded-in-flight rule: high-water {in_flight} must be exactly one snapshot"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn crash_mid_capture_leaves_last_acknowledged_step_restorable() {
+    // Reference bytes from a clean frozen-capture run.
+    let ref_dir = tmpdir("faultref");
+    let handle = Coordinator::start(CoordinatorConfig::new(codec(), Backend::Native, &ref_dir))
+        .unwrap()
+        .into_capture_handle()
+        .unwrap();
+    for ck in chain() {
+        handle.capture(SnapshotView::capture(&ck).unwrap()).unwrap();
+    }
+    handle.finish().unwrap();
+    let mut reference = BTreeMap::new();
+    for &s in &STEPS {
+        reference.insert(s, restore_step(&ref_dir, &Backend::Native, s).unwrap().to_bytes());
+    }
+    let _ = std::fs::remove_dir_all(&ref_dir);
+
+    // Walk the container-write fault points: each run crashes the
+    // pipeline while frozen snapshots are still being captured/encoded.
+    // The path filter scopes the plan to this test's directories, so the
+    // fault layer cannot interfere with sibling tests in this binary.
+    let mut crashes = 0u64;
+    for nth in 1..200u64 {
+        let dir = tmpdir(&format!("fault_{nth}"));
+        disarm();
+        arm(FaultPlan {
+            op: FaultOp::Write,
+            mode: FaultMode::Fail,
+            nth,
+            path_filter: Some("cpcm_snap_fault_".into()),
+        });
+        let outcome = (|| -> cpcm::Result<()> {
+            let handle =
+                Coordinator::start(CoordinatorConfig::new(codec(), Backend::Native, &dir))?
+                    .into_capture_handle()?;
+            for ck in chain() {
+                handle.capture(SnapshotView::capture(&ck)?)?;
+            }
+            handle.finish()?;
+            Ok(())
+        })();
+        let fired = disarm();
+        if !fired {
+            // Past the fault horizon: the whole matrix is covered.
+            outcome.expect("a run past the fault horizon must succeed");
+            assert!(crashes >= 3, "matrix covered only {crashes} crash points");
+            let _ = std::fs::remove_dir_all(&dir);
+            return;
+        }
+        crashes += 1;
+        assert!(outcome.is_err(), "nth {nth}: injected fault must surface as an error");
+        recover_dir(&dir).unwrap_or_else(|e| panic!("nth {nth}: recovery failed: {e}"));
+        if ChainManifest::exists_in(&dir) {
+            let manifest = ChainManifest::load(&dir).unwrap();
+            if let Some(&last) = manifest.steps().last() {
+                let got = restore_step(&dir, &Backend::Native, last).unwrap().to_bytes();
+                assert_eq!(
+                    got, reference[&last],
+                    "nth {nth}: last acknowledged step {last} must restore bit-exactly"
+                );
+            }
+            let report = scrub_dir(&dir).unwrap();
+            assert!(report.consistent(), "nth {nth}: post-recovery scrub: {}", report.summary());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    panic!("fault horizon not reached within 200 container writes");
+}
