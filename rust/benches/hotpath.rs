@@ -566,6 +566,140 @@ fn main() {
         ]));
     }
 
+    // ---- Hot-loop kernel sweep: batch kernels vs scalar references ------
+    // Each row compares one batch kernel (codec::kernels) against the
+    // scalar reference it must stay bit-identical to: the quantizer's
+    // nearest-center assignment and the context-run gather are the encode
+    // hot loops, the symbol dequantization gather is the decode hot loop,
+    // and the e2e rows run the whole codec with the kernels forced scalar
+    // via set_force_scalar. bench_compare gates batch_syms_per_sec like
+    // any other metric once a baseline carries the rows.
+    let mut kernel_rows: Vec<Json> = Vec::new();
+    {
+        use cpcm::codec::kernels;
+
+        let kn = vals.len();
+        let q = quantize(&vals, &QuantConfig::default()).unwrap();
+        let mids = cpcm::quant::midpoints(&q.centers);
+        let mut syms_out = vec![0u16; kn];
+        let a_batch = b.run("kernels/assign batch 1M (4 bits)", kn as u64, || {
+            kernels::assign_batch(&vals, &mids, &mut syms_out);
+            std::hint::black_box(&syms_out);
+        });
+        let a_scalar = b.run("kernels/assign scalar 1M (4 bits)", kn as u64, || {
+            kernels::assign_scalar(&vals, &mids, &mut syms_out);
+            std::hint::black_box(&syms_out);
+        });
+
+        let mut deq = vec![0f32; q.symbols.len()];
+        let d_batch = b.run("kernels/dequant batch 1M", q.symbols.len() as u64, || {
+            kernels::dequant_batch(&q.symbols, &q.centers, false, &mut deq).unwrap();
+            std::hint::black_box(&deq);
+        });
+        let d_scalar = b.run("kernels/dequant scalar 1M", q.symbols.len() as u64, || {
+            kernels::dequant_scalar(&q.symbols, &q.centers, false, &mut deq).unwrap();
+            std::hint::black_box(&deq);
+        });
+
+        // Context runs over the same 512×512 map as the per-position
+        // gather sample above, walked in RUN-sized runs like the lanes do.
+        let total = rows * cols;
+        let mut run_out = vec![0i32; kernels::RUN * ex.seq_len()];
+        let c_batch = b.run("kernels/context run batch 262k", total as u64, || {
+            let mut idx = 0;
+            while idx < total {
+                let len = (total - idx).min(kernels::RUN);
+                kernels::context_run_batch(&ex, &map, idx, len, &mut run_out[..len * 9]);
+                idx += len;
+            }
+            std::hint::black_box(&run_out);
+        });
+        let c_scalar = b.run("kernels/context run scalar 262k", total as u64, || {
+            let mut idx = 0;
+            while idx < total {
+                let len = (total - idx).min(kernels::RUN);
+                kernels::context_run_scalar(&ex, &map, idx, len, &mut run_out[..len * 9]);
+                idx += len;
+            }
+            std::hint::black_box(&run_out);
+        });
+
+        for (kernel, batch, scalar) in [
+            ("assign", &a_batch, &a_scalar),
+            ("dequant", &d_batch, &d_scalar),
+            ("context", &c_batch, &c_scalar),
+        ] {
+            let br = batch.melems_per_sec().unwrap_or(0.0);
+            let s = scalar.melems_per_sec().unwrap_or(0.0);
+            kernel_rows.push(Json::obj(vec![
+                ("kernel", Json::str(kernel)),
+                ("batch_melems_per_sec", Json::num(br)),
+                ("scalar_melems_per_sec", Json::num(s)),
+                ("speedup", Json::num(if s > 0.0 { br / s } else { 0.0 })),
+            ]));
+        }
+
+        // End-to-end: the full-context codec with the kernels on vs forced
+        // scalar — containers must be byte-identical (tests/kernels.rs),
+        // only the wall clock may move.
+        let codec = Codec::new(
+            CodecConfig {
+                mode: ContextMode::Lstm,
+                hidden: 16,
+                embed: 16,
+                batch: 256,
+                lanes: 1,
+                ..CodecConfig::default()
+            },
+            Backend::Native,
+        );
+        let e0 = codec.encode(&c0, None, None).unwrap();
+        let mut e2e_bytes = Vec::new();
+        kernels::set_force_scalar(false);
+        let enc_b = b.run("kernels/e2e encode batch (lstm)", n_syms, || {
+            e2e_bytes = codec.encode(&c1, Some(&e0.recon), Some(&e0.syms)).unwrap().bytes;
+        });
+        let dec_b = b.run("kernels/e2e decode batch (lstm)", n_syms, || {
+            std::hint::black_box(
+                Codec::decode(&Backend::Native, &e2e_bytes, Some(&e0.recon), Some(&e0.syms))
+                    .unwrap(),
+            );
+        });
+        kernels::set_force_scalar(true);
+        let enc_s = b.run("kernels/e2e encode scalar (lstm)", n_syms, || {
+            std::hint::black_box(
+                codec.encode(&c1, Some(&e0.recon), Some(&e0.syms)).unwrap().bytes.len(),
+            );
+        });
+        let dec_s = b.run("kernels/e2e decode scalar (lstm)", n_syms, || {
+            std::hint::black_box(
+                Codec::decode(&Backend::Native, &e2e_bytes, Some(&e0.recon), Some(&e0.syms))
+                    .unwrap(),
+            );
+        });
+        kernels::set_force_scalar(false);
+        for (kernel, batch, scalar) in
+            [("e2e_encode", &enc_b, &enc_s), ("e2e_decode", &dec_b, &dec_s)]
+        {
+            let br = n_syms as f64 / batch.median.as_secs_f64();
+            let sr = n_syms as f64 / scalar.median.as_secs_f64();
+            kernel_rows.push(Json::obj(vec![
+                ("kernel", Json::str(kernel)),
+                ("batch_syms_per_sec", Json::num(br)),
+                ("scalar_syms_per_sec", Json::num(sr)),
+                ("speedup", Json::num(if sr > 0.0 { br / sr } else { 0.0 })),
+            ]));
+        }
+        println!("\nkernel sweep (batch vs scalar):");
+        for r in &kernel_rows {
+            println!(
+                "  {:<12} {:.2}x",
+                r.get("kernel").and_then(|v| v.as_str()).unwrap_or("?"),
+                r.get("speedup").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            );
+        }
+    }
+
     // ---- Machine-readable dump ------------------------------------------
     let samples: Vec<Json> = b
         .results()
@@ -596,6 +730,13 @@ fn main() {
         // Wall-clock stall evidence for the two-phase capture; an unknown
         // key to older bench_compare baselines (surfaces as "added").
         ("snapshot_stall", Json::Arr(snapshot_rows)),
+        // Batch-kernel vs scalar-reference rows; "added" to baselines
+        // that predate codec::kernels (bench_compare calls that out).
+        ("kernel_sweep", Json::Arr(kernel_rows)),
+        // True when this run was measured on a PGO build (scripts/
+        // run_pgo.sh sets CPCM_PGO=1 for the profile-optimized rerun);
+        // bench_compare warns when two documents disagree on it.
+        ("pgo", Json::Bool(std::env::var_os("CPCM_PGO").is_some())),
     ]);
     match std::fs::write("BENCH_hotpath.json", doc.to_string_pretty()) {
         Ok(()) => println!("wrote BENCH_hotpath.json"),

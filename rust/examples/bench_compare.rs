@@ -16,7 +16,14 @@
 //! - `shard_par[]` shard-scheduler encode/streaming-decode rates
 //!   (matched by requested scheduler width, 0 = auto),
 //! - `adaptive_frontier[]` compression ratios of the adaptive-bits
-//!   ablation (matched by row label; deterministic, not timing-based).
+//!   ablation (matched by row label; deterministic, not timing-based),
+//! - `kernel_sweep[]` batch-kernel and scalar-reference rates (matched
+//!   by kernel name).
+//!
+//! `--no-fail` keeps the exit code 0 regardless of regressions (the
+//! perf_pgo.md before/after report from scripts/run_pgo.sh uses it), and
+//! a `pgo` flag mismatch between the documents is called out like a
+//! core-count mismatch.
 //!
 //! A core-count mismatch between the two documents
 //! (`available_parallelism`) is called out in the report, since
@@ -36,7 +43,7 @@ use std::collections::BTreeMap;
 fn usage() -> ! {
     eprintln!(
         "usage: bench_compare <baseline.json> <current.json> \
-         [--tolerance 0.25] [--report out.md]"
+         [--tolerance 0.25] [--report out.md] [--no-fail]"
     );
     std::process::exit(2)
 }
@@ -104,6 +111,24 @@ fn metrics(doc: &Json) -> BTreeMap<String, f64> {
             }
         }
     }
+    if let Some(rows) = doc.get("kernel_sweep").and_then(|v| v.as_arr()) {
+        for r in rows {
+            // Batch-kernel rates are gated like any throughput metric;
+            // scalar-reference rates ride along so the speedup stays
+            // reconstructable from the report.
+            let Some(k) = r.get("kernel").and_then(|v| v.as_str()) else { continue };
+            for key in [
+                "batch_melems_per_sec",
+                "scalar_melems_per_sec",
+                "batch_syms_per_sec",
+                "scalar_syms_per_sec",
+            ] {
+                if let Some(t) = r.get(key).and_then(|v| v.as_f64()).filter(|&t| t > 0.0) {
+                    out.insert(format!("kernel={k} {key}"), t);
+                }
+            }
+        }
+    }
     out
 }
 
@@ -112,6 +137,7 @@ fn main() {
     let mut paths: Vec<&str> = Vec::new();
     let mut tolerance = 0.25f64;
     let mut report_path: Option<&str> = None;
+    let mut no_fail = false;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -123,6 +149,10 @@ fn main() {
                 i += 1;
                 report_path = Some(args.get(i).map(|s| s.as_str()).unwrap_or_else(|| usage()));
             }
+            // Report-only mode: used by the PGO pipeline, where the two
+            // documents are builds of the same code and a "regression"
+            // would only mean the profile didn't help that row.
+            "--no-fail" => no_fail = true,
             p => paths.push(p),
         }
         i += 1;
@@ -177,6 +207,27 @@ fn main() {
             ));
         }
     }
+    // A PGO-built document against a plain one measures the build profile
+    // as much as the code; say so instead of letting the deltas mislead.
+    let pgo = |d: &Json| d.get("pgo").and_then(|v| v.as_bool()).unwrap_or(false);
+    if pgo(&baseline) != pgo(&current) {
+        report.push_str(
+            "**Build-profile mismatch**: one document was measured on a PGO build \
+             (`pgo: true`) and the other was not — deltas reflect the build profile \
+             as much as the code.\n\n",
+        );
+    }
+    // First armed run after the kernels PR: the baseline has no
+    // kernel_sweep rows yet, so they all surface as "added" below. Call
+    // it out so nobody reads the un-gated rows as a green gate.
+    let has_kernels = |m: &BTreeMap<String, f64>| m.keys().any(|k| k.starts_with("kernel="));
+    if has_kernels(&cur) && !has_kernels(&base) {
+        report.push_str(
+            "**Baseline predates the hot-loop kernels**: every `kernel_sweep` row is \
+             *added*, not gated — re-arm the baseline (commit this run's \
+             `BENCH_hotpath.json`) to start gating them.\n\n",
+        );
+    }
     report.push_str("| metric | baseline | current | ratio | status |\n");
     report.push_str("|---|---|---|---|---|\n");
     for (name, &b) in &base {
@@ -203,6 +254,11 @@ fn main() {
     report.push('\n');
     let verdict = if seed_mode {
         "seed mode: gate not armed".to_string()
+    } else if no_fail && regressions > 0 {
+        format!(
+            "{regressions} metric(s) below the {:.0}% band (report-only, --no-fail)",
+            tolerance * 100.0
+        )
     } else if regressions > 0 {
         format!("{regressions} metric(s) regressed more than {:.0}%", tolerance * 100.0)
     } else {
@@ -222,7 +278,7 @@ fn main() {
         }
         eprintln!("wrote {p}");
     }
-    if regressions > 0 && !seed_mode {
+    if regressions > 0 && !seed_mode && !no_fail {
         std::process::exit(1);
     }
 }

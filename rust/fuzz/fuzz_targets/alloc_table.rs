@@ -1,0 +1,19 @@
+//! Hostile allocation tables: the fuzz input (as lossy text) replaces
+//! the `alloc` width table of a real format-5 container — valid JSON
+//! framing, valid CRC, intact blobs, only the table lies. Every input
+//! must come back as a clean `Err` from the header validator or the
+//! geometry cross-checks, never a panic or a wild allocation.
+#![no_main]
+
+use cpcm::codec::{sharded, Codec};
+use cpcm::lstm::Backend;
+use cpcm_fuzz::with_alloc_table;
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    let table = String::from_utf8_lossy(data);
+    if let Some(bytes) = with_alloc_table(&table) {
+        let _ = Codec::decode(&Backend::Native, &bytes, None, None);
+        let _ = sharded::decode_weight_tensor(&Backend::Native, &bytes, "a.w", None, None);
+    }
+});

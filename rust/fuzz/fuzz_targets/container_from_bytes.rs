@@ -1,0 +1,11 @@
+//! Framing layer: magic, declared lengths, blob table, trailer CRC.
+//! `Container::from_bytes` must return `Ok`/`Err` on every byte string —
+//! never panic, hang, or allocate beyond what the input length implies.
+#![no_main]
+
+use cpcm::container::Container;
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    let _ = Container::from_bytes(data);
+});

@@ -1,0 +1,36 @@
+//! v3 shard-index reader behind `sharded::decode_weight_tensor` (the
+//! random-access path: header → shard index → one shard's blobs). The
+//! fuzz input picks an offset into the back half of a real sharded seed
+//! and xors itself over the bytes there — the trailing region holds the
+//! shard index and blob table — with the CRC fixed so the mutation
+//! reaches the reader. The raw input is also fed whole.
+#![no_main]
+
+use cpcm::codec::sharded;
+use cpcm::lstm::Backend;
+use cpcm_fuzz::{fix_crc, sharded_seed};
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    let _ = sharded::decode_weight_tensor(&Backend::Native, data, "a.w", None, None);
+    if data.len() < 2 {
+        return;
+    }
+    let seed = sharded_seed();
+    let mut doc = seed.to_vec();
+    let payload = &data[2..];
+    if doc.len() > 16 && !payload.is_empty() {
+        // Offset into the back half, clear of the 4-byte trailer CRC.
+        let span = doc.len() / 2 - 4;
+        let off = doc.len() / 2 + (u16::from_le_bytes([data[0], data[1]]) as usize) % span;
+        for (i, &b) in payload.iter().enumerate() {
+            if off + i + 4 >= doc.len() {
+                break;
+            }
+            doc[off + i] ^= b;
+        }
+        fix_crc(&mut doc);
+        let _ = sharded::decode_weight_tensor(&Backend::Native, &doc, "a.w", None, None);
+        let _ = cpcm::codec::Codec::decode(&Backend::Native, &doc, None, None);
+    }
+});

@@ -1,0 +1,19 @@
+//! Untrusted-header validation (`parse_untrusted_header` behind
+//! `Codec::decode`): the fuzz input is spliced in as the header of each
+//! real seed container with the CRC fixed, so mutations reach
+//! `Json::parse` and the header validator with intact blobs behind them.
+//! The raw input is also fed whole, covering the framing path.
+#![no_main]
+
+use cpcm::codec::Codec;
+use cpcm::lstm::Backend;
+use cpcm_fuzz::{seeds, splice_header};
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    let _ = Codec::decode(&Backend::Native, data, None, None);
+    for seed in seeds() {
+        let spliced = splice_header(seed, data);
+        let _ = Codec::decode(&Backend::Native, &spliced, None, None);
+    }
+});

@@ -1,0 +1,122 @@
+//! Shared seed plumbing for the coverage-guided fuzz targets — the same
+//! helpers as `rust/tests/fuzz_header.rs` (the bounded in-tree battery),
+//! duplicated here because a `cargo test` file cannot be depended on as
+//! a library. The seeds are real containers in the three decode shapes:
+//! format 2 (unsharded), format 3 (sharded fixed-width), format 5
+//! (sharded adaptive widths).
+
+use std::sync::OnceLock;
+
+use cpcm::checkpoint::Checkpoint;
+use cpcm::codec::{Codec, CodecConfig, ContextMode};
+use cpcm::lstm::Backend;
+use cpcm::util::crc32;
+
+/// Tensor layout shared with `tests/fuzz_header.rs` — `a.w` is the name
+/// the shard-index target asks `decode_weight_tensor` for.
+pub fn layers() -> Vec<(&'static str, Vec<usize>)> {
+    vec![("a.w", vec![9, 5]), ("b.w", vec![23])]
+}
+
+/// A real container as mutation seed.
+pub fn seed_container(shard_bytes: usize, adaptive: bool) -> Vec<u8> {
+    let codec = Codec::new(
+        CodecConfig {
+            mode: ContextMode::Order0,
+            bits: 3,
+            lanes: 2,
+            quant_iters: 3,
+            shard_bytes,
+            adaptive_bits: adaptive,
+            ..Default::default()
+        },
+        Backend::Native,
+    );
+    let ck = Checkpoint::synthetic(10, &layers(), 7);
+    codec.encode(&ck, None, None).unwrap().bytes
+}
+
+/// The three seed shapes, built once per fuzz process (encoding per
+/// exec would drown the fuzzer's throughput).
+pub fn seeds() -> &'static [Vec<u8>] {
+    static S: OnceLock<Vec<Vec<u8>>> = OnceLock::new();
+    S.get_or_init(|| {
+        vec![
+            seed_container(0, false),
+            seed_container(12 * 12, false),
+            seed_container(12 * 12, true),
+        ]
+    })
+}
+
+/// The format-3 (sharded, fixed-width) seed.
+pub fn sharded_seed() -> &'static [u8] {
+    &seeds()[1]
+}
+
+/// The format-5 (sharded, adaptive-width) seed.
+pub fn adaptive_seed() -> &'static [u8] {
+    &seeds()[2]
+}
+
+/// Recompute the trailer CRC so a mutation reaches the decoder layers
+/// instead of dying at the checksum.
+pub fn fix_crc(bytes: &mut [u8]) {
+    if bytes.len() < 4 {
+        return;
+    }
+    let n = bytes.len() - 4;
+    let crc = crc32::hash(&bytes[..n]);
+    bytes[n..].copy_from_slice(&crc.to_le_bytes());
+}
+
+/// Replace the header region with arbitrary bytes (fixing the declared
+/// length and the trailer CRC) — arbitrary text hits `Json::parse`,
+/// valid-JSON-but-hostile text hits the untrusted-header validator.
+pub fn splice_header(bytes: &[u8], new_header: &[u8]) -> Vec<u8> {
+    let hdr_len = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    let mut out = Vec::with_capacity(bytes.len() + new_header.len());
+    out.extend_from_slice(&bytes[..8]);
+    out.extend_from_slice(&(new_header.len() as u32).to_le_bytes());
+    out.extend_from_slice(new_header);
+    out.extend_from_slice(&bytes[8 + 4 + hdr_len..]);
+    fix_crc(&mut out);
+    out
+}
+
+/// Header JSON text of a well-formed seed container.
+pub fn header_text(bytes: &[u8]) -> String {
+    let hdr_len = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    String::from_utf8(bytes[12..12 + hdr_len].to_vec()).unwrap()
+}
+
+/// Splice `table` in as the adaptive seed's `alloc` value (valid CRC,
+/// intact blobs — only the width table lies). Returns `None` when the
+/// existing table cannot be located (should not happen on the seed).
+pub fn with_alloc_table(table: &str) -> Option<Vec<u8>> {
+    let seed = adaptive_seed();
+    let text = header_text(seed);
+    let alloc_start = text.find("\"alloc\":")?;
+    let val_start = alloc_start + "\"alloc\":".len();
+    let rel_open = text[val_start..].find('[')?;
+    let mut depth = 0usize;
+    let mut val_end = 0usize;
+    for (off, ch) in text[val_start + rel_open..].char_indices() {
+        match ch {
+            '[' => depth += 1,
+            ']' => {
+                depth -= 1;
+                if depth == 0 {
+                    val_end = val_start + rel_open + off + 1;
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    if val_end == 0 {
+        return None;
+    }
+    let new = format!("{}{}{}", &text[..val_start], table, &text[val_end..]);
+    Some(splice_header(seed, new.as_bytes()))
+}

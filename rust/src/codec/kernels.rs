@@ -1,0 +1,564 @@
+//! Hot-loop batch kernels — chunked, autovectorization-friendly forms of
+//! the three inner loops that dominate the profile (§ ARCHITECTURE
+//! "Hot-loop kernels"): nearest-center assignment in [`crate::quant`],
+//! symbol dequantization, and per-position context extraction.
+//!
+//! Every kernel ships in two forms behind one dispatching entry point:
+//!
+//! * a **scalar reference** — the original per-element loop, kept verbatim
+//!   as the semantic ground truth;
+//! * a **batch kernel** — processes [`CHUNK`]-wide chunks with branchless
+//!   inner loops over plain arrays, shaped so LLVM autovectorizes them
+//!   (no explicit SIMD intrinsics: the crate is dependency-free and
+//!   portable, and the chunked form vectorizes on any target).
+//!
+//! Determinism contract: batch and scalar are **bit-identical**, not
+//! approximately equal. The kernels only reorder arithmetic where the
+//! result is provably the same — counting `mids < x` over a sorted
+//! midpoint array is exactly `partition_point`, a table gather reads the
+//! same table entry, and the context gather reads the same neighbor or
+//! the same zero. Floating-point accumulation order is never changed.
+//! The entropy-coder state machine stays scalar and strictly sequential
+//! (each symbol's probability depends on every previous symbol), so the
+//! kernels stop at the model boundary: they *gather* contexts and *map*
+//! symbols in bulk, while `StreamCoder`/`StreamDecoder` consume the
+//! gathered runs one symbol at a time in the original order. Containers
+//! therefore stay byte-identical at every `lanes`/`shard_threads` width —
+//! pinned by `tests/kernels.rs` against [`set_force_scalar`].
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::context::ContextExtractor;
+use crate::{Error, Result};
+
+use super::shard::{Pos, ShardPlan};
+
+/// Fixed chunk width of the value/symbol kernels. 16 lanes of `f32`/`u16`
+/// map onto one or two vector registers on every target the crate builds
+/// for; the tail shorter than this runs the scalar reference.
+pub const CHUNK: usize = 16;
+
+/// Positions gathered per batched context run — bounds the flat
+/// `RUN × seq_len` scratch buffer the lane loops reuse.
+pub const RUN: usize = 64;
+
+/// Midpoint-table cutoff for the counting assignment kernel: above this
+/// many midpoints O(k) counting loses to the O(log k) binary search, so
+/// the batch entry falls back to the scalar reference (12-bit tables have
+/// 4094 midpoints; the default 4-bit table has 14).
+const COUNT_CUTOFF: usize = 64;
+
+/// Process-wide kill switch: `true` forces every dispatching entry point
+/// onto its scalar reference. Exists for the byte-identity battery and the
+/// `kernel_sweep` bench rows — never set in production paths.
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// Force all kernels onto their scalar references (test/bench hook).
+pub fn set_force_scalar(on: bool) {
+    FORCE_SCALAR.store(on, Ordering::SeqCst);
+}
+
+/// Current state of the scalar kill switch.
+pub fn force_scalar() -> bool {
+    FORCE_SCALAR.load(Ordering::SeqCst)
+}
+
+// ---------------------------------------------------------------------
+// Nearest-center assignment (quantizer hot loop)
+// ---------------------------------------------------------------------
+
+/// Scalar reference: binary search over sorted midpoints per value —
+/// symbol 0 for exact zero, else nearest center index + 1.
+pub fn assign_scalar(values: &[f32], mids: &[f32], out: &mut [u16]) {
+    debug_assert_eq!(values.len(), out.len());
+    for (o, &x) in out.iter_mut().zip(values) {
+        *o = if x == 0.0 { 0 } else { (mids.partition_point(|&m| m < x) + 1) as u16 };
+    }
+}
+
+/// Batch kernel: branchless midpoint *counting* per [`CHUNK`]-wide chunk.
+/// Counting `m < x` over the sorted midpoint array equals
+/// `partition_point(|&m| m < x)` by definition — same comparisons against
+/// the same table, so ties, `-0.0` (`== 0.0` → symbol 0) and NaN behave
+/// exactly like the scalar reference. Wide tables fall back to scalar
+/// (see [`COUNT_CUTOFF`]).
+pub fn assign_batch(values: &[f32], mids: &[f32], out: &mut [u16]) {
+    debug_assert_eq!(values.len(), out.len());
+    if mids.len() > COUNT_CUTOFF {
+        return assign_scalar(values, mids, out);
+    }
+    let mut vs = values.chunks_exact(CHUNK);
+    let mut os = out.chunks_exact_mut(CHUNK);
+    for (v, o) in (&mut vs).zip(&mut os) {
+        let mut cnt = [0u16; CHUNK];
+        for &m in mids {
+            for j in 0..CHUNK {
+                cnt[j] += (m < v[j]) as u16;
+            }
+        }
+        for j in 0..CHUNK {
+            o[j] = (v[j] != 0.0) as u16 * (cnt[j] + 1);
+        }
+    }
+    assign_scalar(vs.remainder(), mids, os.into_remainder());
+}
+
+/// Dispatching entry point used by [`crate::quant::assign`].
+pub fn assign_into(values: &[f32], mids: &[f32], out: &mut [u16]) {
+    if force_scalar() {
+        assign_scalar(values, mids, out)
+    } else {
+        assign_batch(values, mids, out)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Symbol dequantization (decode hot loop)
+// ---------------------------------------------------------------------
+
+/// Scalar reference: per-symbol bounds check, table read, log-domain
+/// inverse — the original `dequant_symbols_into` body.
+pub fn dequant_scalar(
+    symbols: &[u16],
+    centers: &[f32],
+    log_domain: bool,
+    out: &mut [f32],
+) -> Result<()> {
+    debug_assert_eq!(symbols.len(), out.len());
+    for (o, &s) in out.iter_mut().zip(symbols) {
+        if s as usize > centers.len() {
+            return Err(Error::codec("decoded symbol out of center range"));
+        }
+        let mut v = if s == 0 { 0.0 } else { centers[s as usize - 1] };
+        if log_domain && v != 0.0 {
+            v = v.exp();
+        }
+        *o = v;
+    }
+    Ok(())
+}
+
+/// Batch kernel: gather through a zero-padded lookup table. `lut[0] = 0`
+/// stands in for the symbol-0 branch; the log-domain `exp` is applied
+/// once per *center* while building the table (same `f32::exp` on the
+/// same input as the per-element reference, so identical bits). Validity
+/// is checked per chunk via a branchless running max; the exact error of
+/// the scalar reference is preserved. On error the output buffer is
+/// partially written — every caller discards it, as the reference's own
+/// partial prefix writes already required.
+pub fn dequant_batch(
+    symbols: &[u16],
+    centers: &[f32],
+    log_domain: bool,
+    out: &mut [f32],
+) -> Result<()> {
+    debug_assert_eq!(symbols.len(), out.len());
+    // Alphabets are ≤ 4096 (bits ≤ 12); a table at or past u16::MAX would
+    // make every symbol valid, which the saturated cap also encodes.
+    let cap = centers.len().min(u16::MAX as usize) as u16;
+    let mut lut = Vec::with_capacity(centers.len() + 1);
+    lut.push(0.0f32);
+    lut.extend_from_slice(centers);
+    if log_domain {
+        for v in lut[1..].iter_mut() {
+            if *v != 0.0 {
+                *v = v.exp();
+            }
+        }
+    }
+    let mut ss = symbols.chunks_exact(CHUNK);
+    let mut os = out.chunks_exact_mut(CHUNK);
+    for (s, o) in (&mut ss).zip(&mut os) {
+        let mut mx = 0u16;
+        for j in 0..CHUNK {
+            mx = mx.max(s[j]);
+        }
+        if mx > cap {
+            return Err(Error::codec("decoded symbol out of center range"));
+        }
+        for j in 0..CHUNK {
+            o[j] = lut[s[j] as usize];
+        }
+    }
+    for (o, &s) in os.into_remainder().iter_mut().zip(ss.remainder()) {
+        if s > cap {
+            return Err(Error::codec("decoded symbol out of center range"));
+        }
+        *o = lut[s as usize];
+    }
+    Ok(())
+}
+
+/// Dispatching entry point used by `codec::dequant_symbols_into`.
+pub fn dequant_into(
+    symbols: &[u16],
+    centers: &[f32],
+    log_domain: bool,
+    out: &mut [f32],
+) -> Result<()> {
+    if force_scalar() {
+        dequant_scalar(symbols, centers, log_domain, out)
+    } else {
+        dequant_batch(symbols, centers, log_domain, out)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Context-run extraction (coder hot loop)
+// ---------------------------------------------------------------------
+
+/// Scalar reference: one [`ContextExtractor::extract_into`] call per
+/// position of the run `[idx0, idx0 + n)`.
+pub fn context_run_scalar(
+    ex: &ContextExtractor,
+    ref_syms: &[u16],
+    idx0: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    let s = ex.seq_len();
+    debug_assert_eq!(out.len(), n * s);
+    for b in 0..n {
+        ex.extract_into(ref_syms, idx0 + b, &mut out[b * s..(b + 1) * s]);
+    }
+}
+
+/// Batch kernel over a full reference map: the run is split into
+/// row segments; within a segment each window offset touches one
+/// contiguous source span of the reference row, so the per-position
+/// bounds checks collapse to one range computation per (segment, offset)
+/// and the inner loop is a tight strided copy. Neighbor order (row-major,
+/// co-located last) and the zero padding outside the map match the
+/// scalar reference exactly.
+pub fn context_run_batch(
+    ex: &ContextExtractor,
+    ref_syms: &[u16],
+    idx0: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    debug_assert_eq!(ref_syms.len(), ex.len());
+    debug_assert!(idx0 + n <= ex.len());
+    run_segments(ex, idx0, n, out, |seg_out, seq, k, rr, cc0, len| {
+        fill_offset_span(seg_out, seq, k, rr, cc0, len, ex.cols(), ex.rows(), |span_start, m| {
+            (&ref_syms[span_start..span_start + m], 0)
+        });
+    });
+}
+
+/// Batch kernel over a row-aligned *windowed* reference map (`data` holds
+/// flat positions `[start, start + data.len())`) — the kernel form of
+/// [`ContextExtractor::extract_window_into`]. In-map positions that miss
+/// the window read 0 (debug-asserted, like the scalar path).
+pub fn context_window_run_batch(
+    ex: &ContextExtractor,
+    data: &[u16],
+    start: usize,
+    idx0: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    debug_assert!(start + data.len() <= ex.len());
+    debug_assert!(idx0 + n <= ex.len());
+    let empty: [u16; 0] = [];
+    run_segments(ex, idx0, n, out, |seg_out, seq, k, rr, cc0, len| {
+        fill_offset_span(seg_out, seq, k, rr, cc0, len, ex.cols(), ex.rows(), |span_start, m| {
+            // Clip the in-map span to the window; the contract says it
+            // never actually clips for covered positions. Clipped
+            // positions read 0, like the scalar fallback.
+            let lo = span_start.max(start);
+            let hi = (span_start + m).min(start + data.len());
+            debug_assert!(
+                lo == span_start && hi == span_start + m,
+                "window [{start}, {}) missed in-map positions [{span_start}, {})",
+                start + data.len(),
+                span_start + m
+            );
+            if lo < hi {
+                (&data[lo - start..hi - start], lo - span_start)
+            } else {
+                (&empty[..], 0)
+            }
+        });
+    });
+}
+
+/// Split the run `[idx0, idx0 + n)` into same-row segments and invoke
+/// `fill(seg_out, seq, k, rr, cc0, len)` once per (segment, offset) with
+/// the co-located offset last — the shared skeleton of both batch forms.
+fn run_segments(
+    ex: &ContextExtractor,
+    idx0: usize,
+    n: usize,
+    out: &mut [i32],
+    mut fill: impl FnMut(&mut [i32], usize, usize, isize, isize, usize),
+) {
+    let (cols, window) = (ex.cols(), ex.window());
+    let seq = ex.seq_len();
+    debug_assert_eq!(out.len(), n * seq);
+    let half = (window / 2) as isize;
+    let mut done = 0usize;
+    while done < n {
+        let pos = idx0 + done;
+        let r = (pos / cols) as isize;
+        let c0 = (pos % cols) as isize;
+        let len = (cols - c0 as usize).min(n - done);
+        let seg_out = &mut out[done * seq..(done + len) * seq];
+        let mut k = 0usize;
+        for dr in -half..=half {
+            for dc in -half..=half {
+                if (dr, dc) == (0, 0) {
+                    continue;
+                }
+                fill(seg_out, seq, k, r + dr, c0 + dc, len);
+                k += 1;
+            }
+        }
+        fill(seg_out, seq, k, r, c0, len); // co-located last
+        done += len;
+    }
+}
+
+/// Fill context slot `k` for all `len` positions of one row segment whose
+/// source positions are `(rr, cc0 + j)`: zeros outside the map, a strided
+/// copy from `src(row_flat_start, span_len) -> (span, front_clip)` inside
+/// it. `front_clip` shifts a window-clipped span to its true positions;
+/// everything clipped reads as 0, matching the scalar fallback.
+#[inline]
+fn fill_offset_span<'a>(
+    seg_out: &mut [i32],
+    seq: usize,
+    k: usize,
+    rr: isize,
+    cc0: isize,
+    len: usize,
+    cols: usize,
+    rows: usize,
+    src: impl FnOnce(usize, usize) -> (&'a [u16], usize),
+) {
+    if rr < 0 || rr >= rows as isize {
+        for j in 0..len {
+            seg_out[j * seq + k] = 0;
+        }
+        return;
+    }
+    // In-bounds j range: 0 ≤ cc0 + j < cols.
+    let lo = (-cc0).max(0) as usize;
+    let hi = ((cols as isize - cc0).max(0) as usize).min(len);
+    if lo >= hi {
+        for j in 0..len {
+            seg_out[j * seq + k] = 0;
+        }
+        return;
+    }
+    let span_start = rr as usize * cols + (cc0 + lo as isize) as usize;
+    let (span, front_clip) = src(span_start, hi - lo);
+    let copy_at = lo + front_clip.min(hi - lo);
+    for j in 0..copy_at.min(len) {
+        seg_out[j * seq + k] = 0;
+    }
+    for (j, &s) in span.iter().take(len.saturating_sub(copy_at)).enumerate() {
+        seg_out[(copy_at + j) * seq + k] = s as i32;
+    }
+    for j in (copy_at + span.len()).min(len)..len {
+        seg_out[j * seq + k] = 0;
+    }
+}
+
+/// Dispatching entry point for full-map runs, used by
+/// [`ContextExtractor::extract_run_into`].
+pub fn context_run_into(
+    ex: &ContextExtractor,
+    ref_syms: &[u16],
+    idx0: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    if force_scalar() {
+        context_run_scalar(ex, ref_syms, idx0, n, out)
+    } else {
+        context_run_batch(ex, ref_syms, idx0, n, out)
+    }
+}
+
+/// Dispatching entry point for windowed runs, used by
+/// [`ContextExtractor::extract_window_run_into`].
+pub fn context_window_run_into(
+    ex: &ContextExtractor,
+    data: &[u16],
+    start: usize,
+    idx0: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    if force_scalar() {
+        let s = ex.seq_len();
+        debug_assert_eq!(out.len(), n * s);
+        for b in 0..n {
+            ex.extract_window_into(data, start, idx0 + b, &mut out[b * s..(b + 1) * s]);
+        }
+    } else {
+        context_window_run_batch(ex, data, start, idx0, n, out)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Lane-walk run detection
+// ---------------------------------------------------------------------
+
+/// Walk one lane of a shard plan in contiguous runs — maximal (≤ `max`)
+/// stretches of positions in the *same fragment* with *consecutive*
+/// locals (hence consecutive tensor elements) — calling `f(start, len)`
+/// per run. The concatenation of runs is exactly the lane walk in order,
+/// so feeding each run's symbols to a sequential coder preserves the
+/// byte stream; only the context gather is batched.
+pub(crate) fn for_lane_runs(
+    sp: &ShardPlan,
+    lane: usize,
+    max: usize,
+    mut f: impl FnMut(Pos, usize) -> Result<()>,
+) -> Result<()> {
+    debug_assert!(max > 0);
+    let mut it = sp.iter_lane(lane).peekable();
+    while let Some(p0) = it.next() {
+        let mut len = 1usize;
+        while len < max {
+            match it.peek() {
+                Some(p) if p.frag == p0.frag && p.local == p0.local + len => {
+                    it.next();
+                    len += 1;
+                }
+                _ => break,
+            }
+        }
+        f(p0, len)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn assign_batch_matches_scalar_reference() {
+        forall("assign batch == scalar", 40, |g| {
+            let n = g.usize_range(0, 3 * CHUNK + 1);
+            let k = g.usize_range(1, 15);
+            let mut mids: Vec<f32> = (0..k).map(|_| g.f32_range(-2.0, 2.0)).collect();
+            mids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let vals: Vec<f32> = (0..n)
+                .map(|_| if g.bool(0.3) { 0.0 } else { g.f32_range(-3.0, 3.0) })
+                .collect();
+            let mut a = vec![0u16; n];
+            let mut b = vec![0u16; n];
+            assign_scalar(&vals, &mids, &mut a);
+            assign_batch(&vals, &mids, &mut b);
+            assert_eq!(a, b);
+        });
+    }
+
+    #[test]
+    fn assign_handles_negative_zero_and_midpoint_ties() {
+        let mids = [-1.0f32, 0.5, 2.0];
+        // A value exactly on a midpoint, plus -0.0 (must be symbol 0).
+        let vals = [0.5f32, -0.0, 2.0, -1.0, f32::NAN];
+        let mut a = vec![0u16; vals.len()];
+        let mut b = vec![0u16; vals.len()];
+        assign_scalar(&vals, &mids, &mut a);
+        assign_batch(&vals, &mids, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(a[1], 0);
+    }
+
+    #[test]
+    fn assign_wide_table_falls_back_identically() {
+        let mids: Vec<f32> = (0..200).map(|i| i as f32 / 100.0 - 1.0).collect();
+        let vals: Vec<f32> = (0..100).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut a = vec![0u16; vals.len()];
+        let mut b = vec![0u16; vals.len()];
+        assign_scalar(&vals, &mids, &mut a);
+        assign_batch(&vals, &mids, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn dequant_batch_matches_scalar_reference() {
+        forall("dequant batch == scalar", 40, |g| {
+            let n = g.usize_range(0, 3 * CHUNK + 1);
+            let k = g.usize_range(1, 20);
+            let centers: Vec<f32> = (0..k).map(|_| g.f32_range(-4.0, 4.0)).collect();
+            let syms: Vec<u16> = g.symbols(n, k + 1);
+            let log = g.bool(0.5);
+            let mut a = vec![0f32; n];
+            let mut b = vec![0f32; n];
+            dequant_scalar(&syms, &centers, log, &mut a).unwrap();
+            dequant_batch(&syms, &centers, log, &mut b).unwrap();
+            assert_eq!(
+                a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+        });
+    }
+
+    #[test]
+    fn dequant_batch_rejects_out_of_range_like_scalar() {
+        let centers = [1.0f32, 2.0];
+        for n in [1usize, CHUNK - 1, CHUNK, CHUNK + 1, 2 * CHUNK + 3] {
+            let mut syms = vec![1u16; n];
+            syms[n - 1] = 3; // one past the alphabet
+            let mut out = vec![0f32; n];
+            let a = dequant_scalar(&syms, &centers, false, &mut out);
+            let b = dequant_batch(&syms, &centers, false, &mut out);
+            assert_eq!(a.is_err(), b.is_err(), "n={n}");
+            assert!(b.is_err());
+        }
+    }
+
+    #[test]
+    fn context_run_batch_matches_scalar_reference() {
+        forall("context run batch == scalar", 30, |g| {
+            let rows = g.usize_range(1, 9);
+            let cols = g.usize_range(1, 9);
+            let window = *g.choose(&[1usize, 3, 5]);
+            let syms: Vec<u16> = g.symbols(rows * cols, 16);
+            let ex = ContextExtractor::new(rows, cols, window).unwrap();
+            let total = rows * cols;
+            let idx0 = g.usize_range(0, total - 1);
+            let n = g.usize_range(0, total - idx0);
+            let mut a = vec![-1i32; n * ex.seq_len()];
+            let mut b = vec![-2i32; n * ex.seq_len()];
+            context_run_scalar(&ex, &syms, idx0, n, &mut a);
+            context_run_batch(&ex, &syms, idx0, n, &mut b);
+            assert_eq!(a, b, "idx0={idx0} n={n} rows={rows} cols={cols} w={window}");
+        });
+    }
+
+    #[test]
+    fn context_window_run_batch_matches_scalar_reference() {
+        forall("windowed context run batch == scalar", 30, |g| {
+            let rows = g.usize_range(1, 9);
+            let cols = g.usize_range(1, 9);
+            let window = *g.choose(&[1usize, 3, 5]);
+            let half = window / 2;
+            let syms: Vec<u16> = g.symbols(rows * cols, 16);
+            let ex = ContextExtractor::new(rows, cols, window).unwrap();
+            let r0 = g.usize_range(0, rows - 1);
+            let r1 = g.usize_range(r0, rows - 1);
+            let lo = r0.saturating_sub(half) * cols;
+            let hi = (r1 + half + 1).min(rows) * cols;
+            let data = &syms[lo..hi];
+            let idx0 = r0 * cols;
+            let n = (r1 + 1) * cols - idx0;
+            let s = ex.seq_len();
+            let mut a = vec![-1i32; n * s];
+            let mut b = vec![-2i32; n * s];
+            for j in 0..n {
+                ex.extract_window_into(data, lo, idx0 + j, &mut a[j * s..(j + 1) * s]);
+            }
+            context_window_run_batch(&ex, data, lo, idx0, n, &mut b);
+            assert_eq!(a, b, "idx0={idx0} n={n} rows={rows} cols={cols} w={window}");
+        });
+    }
+}

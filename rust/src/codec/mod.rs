@@ -81,6 +81,7 @@
 //! use reconstructed references on both sides and stay bit-identical.
 
 pub mod alloc;
+pub mod kernels;
 pub mod keyframe;
 mod lanes;
 pub(crate) mod sched;
@@ -627,24 +628,15 @@ impl SetStatsAcc {
 /// a bounds or log-domain change cannot drift between paths. The op
 /// sequence (`centers[s-1]`, then `exp` on non-zero) matches the
 /// encoder's reconstruction exactly, which is what keeps chains bit-exact.
+/// The loop body lives in [`kernels`]: a gather-style batch kernel with
+/// the original per-symbol loop kept as its scalar reference.
 fn dequant_symbols_into(
     symbols: &[u16],
     centers: &[f32],
     log_domain: bool,
     out: &mut [f32],
 ) -> Result<()> {
-    debug_assert_eq!(symbols.len(), out.len());
-    for (o, &s) in out.iter_mut().zip(symbols) {
-        if s as usize > centers.len() {
-            return Err(Error::codec("decoded symbol out of center range"));
-        }
-        let mut v = if s == 0 { 0.0 } else { centers[s as usize - 1] };
-        if log_domain && v != 0.0 {
-            v = v.exp();
-        }
-        *o = v;
-    }
-    Ok(())
+    kernels::dequant_into(symbols, centers, log_domain, out)
 }
 
 /// One tensor's reference-symbol view for one shard: either the full
@@ -670,6 +662,18 @@ impl MapView<'_> {
         match self {
             MapView::Full(m) => ex.extract_into(m, idx, out),
             MapView::Window { data, start } => ex.extract_window_into(data, *start, idx, out),
+        }
+    }
+
+    /// Gather the contexts of the contiguous run `[idx0, idx0 + n)` into a
+    /// flat `n × seq_len` buffer through the batch kernels ([`kernels`]).
+    #[inline]
+    fn extract_run(&self, ex: &ContextExtractor, idx0: usize, n: usize, out: &mut [i32]) {
+        match self {
+            MapView::Full(m) => ex.extract_run_into(m, idx0, n, out),
+            MapView::Window { data, start } => {
+                ex.extract_window_run_into(data, *start, idx0, n, out)
+            }
         }
     }
 
@@ -713,22 +717,6 @@ impl<'a> RefMapViews<'a> {
     #[inline]
     fn view(&self, tensor: usize) -> Option<&MapView<'a>> {
         self.views.get(tensor).and_then(|v| v.as_ref())
-    }
-}
-
-/// Context gather with an optional view: zeros when no reference map is
-/// in scope (intra frames, zero-context mode) — the view-typed counterpart
-/// of [`ContextExtractor::extract_or_zero`].
-#[inline]
-fn extract_view_or_zero(
-    ex: &ContextExtractor,
-    view: Option<&MapView<'_>>,
-    idx: usize,
-    out: &mut [i32],
-) {
-    match view {
-        Some(v) => v.extract(ex, idx, out),
-        None => out.fill(0),
     }
 }
 
@@ -1397,12 +1385,22 @@ impl Codec {
                 }
                 let seq = cfg.window * cfg.window;
                 let mut coder = StreamCoder::new(model);
-                let mut ctx = vec![0i32; seq];
-                for p in sp.iter_lane(lane) {
-                    let view = ref_maps.and_then(|m| m.view(p.tensor));
-                    extract_view_or_zero(&extractors[p.tensor], view, p.elem, &mut ctx);
-                    coder.push(&ctx, frag_syms[p.frag][p.local])?;
-                }
+                // Contexts are gathered per contiguous run through the
+                // batch kernels; the coder itself stays sequential, so
+                // the byte stream is unchanged.
+                let mut ctx_run = vec![0i32; kernels::RUN * seq];
+                kernels::for_lane_runs(sp, lane, kernels::RUN, |p0, len| {
+                    let view = ref_maps.and_then(|m| m.view(p0.tensor));
+                    let buf = &mut ctx_run[..len * seq];
+                    match view {
+                        Some(v) => v.extract_run(&extractors[p0.tensor], p0.elem, len, buf),
+                        None => buf.fill(0),
+                    }
+                    for j in 0..len {
+                        coder.push(&buf[j * seq..(j + 1) * seq], frag_syms[p0.frag][p0.local + j])?;
+                    }
+                    Ok(())
+                })?;
                 let (bytes, loss, _ideal) = coder.finish()?;
                 Ok(LaneOut { bytes, loss, symbols })
             }
@@ -1434,12 +1432,19 @@ impl Codec {
                 }
                 let seq = cfg.window * cfg.window;
                 let mut sd = StreamDecoder::new(model, stream)?;
-                let mut ctx = vec![0i32; seq];
-                for p in sp.iter_lane(lane) {
-                    let view = ref_maps.and_then(|m| m.view(p.tensor));
-                    extract_view_or_zero(&extractors[p.tensor], view, p.elem, &mut ctx);
-                    sd.push(&ctx)?;
-                }
+                let mut ctx_run = vec![0i32; kernels::RUN * seq];
+                kernels::for_lane_runs(sp, lane, kernels::RUN, |p0, len| {
+                    let view = ref_maps.and_then(|m| m.view(p0.tensor));
+                    let buf = &mut ctx_run[..len * seq];
+                    match view {
+                        Some(v) => v.extract_run(&extractors[p0.tensor], p0.elem, len, buf),
+                        None => buf.fill(0),
+                    }
+                    for j in 0..len {
+                        sd.push(&buf[j * seq..(j + 1) * seq])?;
+                    }
+                    Ok(())
+                })?;
                 sd.flush()?;
                 Ok(sd.take())
             }
@@ -1928,7 +1933,7 @@ impl Codec {
                 }
                 let seq = cfg.window * cfg.window;
                 let mut coder = StreamCoder::new(model);
-                let mut ctx_buf = vec![0i32; seq];
+                let mut ctx_run = vec![0i32; kernels::RUN * seq];
                 for (ti, (e, q)) in set.iter().zip(&quantized).enumerate() {
                     let (rows, cols) = e.tensor.rows_cols();
                     let extractor = ContextExtractor::new(rows, cols, cfg.window)?;
@@ -1937,9 +1942,19 @@ impl Codec {
                             (true, Some(p)) => p.sets[k].get(ti).map(|v| v.as_slice()),
                             _ => None,
                         };
-                    for (idx, &sym) in q.symbols.iter().enumerate() {
-                        extractor.extract_or_zero(ref_map, idx, &mut ctx_buf);
-                        coder.push(&ctx_buf, sym)?;
+                    let total = q.symbols.len();
+                    let mut idx = 0;
+                    while idx < total {
+                        let len = (total - idx).min(kernels::RUN);
+                        let buf = &mut ctx_run[..len * seq];
+                        match ref_map {
+                            Some(m) => extractor.extract_run_into(m, idx, len, buf),
+                            None => buf.fill(0),
+                        }
+                        for j in 0..len {
+                            coder.push(&buf[j * seq..(j + 1) * seq], q.symbols[idx + j])?;
+                        }
+                        idx += len;
                     }
                     coder.flush()?;
                 }
@@ -2034,7 +2049,7 @@ impl Codec {
                 }
                 let seq = cfg.window * cfg.window;
                 let mut sd = StreamDecoder::new(model, stream)?;
-                let mut ctx_buf = vec![0i32; seq];
+                let mut ctx_run = vec![0i32; kernels::RUN * seq];
                 let mut out = Vec::with_capacity(shapes.len());
                 for (ti, shape) in shapes.iter().enumerate() {
                     let (rows, cols) = rows_cols_of(shape);
@@ -2044,9 +2059,19 @@ impl Codec {
                             (true, Some(p)) => p.sets[k].get(ti).map(|v| v.as_slice()),
                             _ => None,
                         };
-                    for idx in 0..counts[ti] {
-                        extractor.extract_or_zero(ref_map, idx, &mut ctx_buf);
-                        sd.push(&ctx_buf)?;
+                    let total = counts[ti];
+                    let mut idx = 0;
+                    while idx < total {
+                        let len = (total - idx).min(kernels::RUN);
+                        let buf = &mut ctx_run[..len * seq];
+                        match ref_map {
+                            Some(m) => extractor.extract_run_into(m, idx, len, buf),
+                            None => buf.fill(0),
+                        }
+                        for j in 0..len {
+                            sd.push(&buf[j * seq..(j + 1) * seq])?;
+                        }
+                        idx += len;
                     }
                     sd.flush()?;
                     out.push(sd.take());

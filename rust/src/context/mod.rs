@@ -50,6 +50,21 @@ impl ContextExtractor {
         self.window * self.window
     }
 
+    /// Row count of the folded 2-D map.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Column count of the folded 2-D map.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Window size (odd).
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
     /// Total positions in the map.
     pub fn len(&self) -> usize {
         self.rows * self.cols
@@ -140,21 +155,37 @@ impl ContextExtractor {
         }
     }
 
+    /// Gather the contexts of the contiguous position run
+    /// `[idx0, idx0 + n)` into a flat `n × seq_len` buffer (row-major) —
+    /// the batch counterpart of `n` [`Self::extract_into`] calls,
+    /// bit-identical by the [`crate::codec::kernels`] contract.
+    pub fn extract_run_into(&self, ref_syms: &[u16], idx0: usize, n: usize, out: &mut [i32]) {
+        crate::codec::kernels::context_run_into(self, ref_syms, idx0, n, out)
+    }
+
+    /// [`Self::extract_run_into`] against a row-aligned windowed map —
+    /// the batch counterpart of `n` [`Self::extract_window_into`] calls.
+    pub fn extract_window_run_into(
+        &self,
+        data: &[u16],
+        start: usize,
+        idx0: usize,
+        n: usize,
+        out: &mut [i32],
+    ) {
+        crate::codec::kernels::context_window_run_into(self, data, start, idx0, n, out)
+    }
+
     /// Gather contexts for positions `[start, start+count)` into a flat
     /// `count × seq_len` buffer (row-major), zero-padding positions past the
-    /// end of the map — used to fill fixed-size LSTM batches.
+    /// end of the map — used to fill fixed-size LSTM batches. The in-map
+    /// prefix runs through the batched kernel.
     pub fn gather_batch(&self, ref_syms: &[u16], start: usize, count: usize, out: &mut [i32]) {
         debug_assert_eq!(out.len(), count * self.seq_len());
         let s = self.seq_len();
-        for b in 0..count {
-            let idx = start + b;
-            let dst = &mut out[b * s..(b + 1) * s];
-            if idx < self.len() {
-                self.extract_into(ref_syms, idx, dst);
-            } else {
-                dst.fill(0);
-            }
-        }
+        let in_map = count.min(self.len().saturating_sub(start));
+        self.extract_run_into(ref_syms, start, in_map, &mut out[..in_map * s]);
+        out[in_map * s..].fill(0);
     }
 }
 

@@ -204,27 +204,26 @@ fn lloyd(xs: &[f32], centers: &mut Vec<f32>, iters: usize) {
     centers.sort_by(|a, b| a.partial_cmp(b).unwrap());
 }
 
-fn midpoints(sorted_centers: &[f32]) -> Vec<f32> {
+/// Decision boundaries between adjacent sorted centers — the table the
+/// assignment kernel searches/counts against (public for the kernel
+/// benches and the batch≡scalar battery).
+pub fn midpoints(sorted_centers: &[f32]) -> Vec<f32> {
     sorted_centers.windows(2).map(|w| (w[0] + w[1]) / 2.0).collect()
 }
 
 /// Assign every value to a symbol: 0 for exact zero, otherwise the nearest
-/// center's index + 1 (binary search over midpoints — O(log k) each).
+/// center's index + 1. The hot loop lives in [`crate::codec::kernels`]: a
+/// chunked branchless counting kernel with the original midpoint binary
+/// search kept as its scalar reference — bit-identical by construction,
+/// since counting `mids < x` over the sorted table *is* `partition_point`.
 pub fn assign(values: &[f32], centers: &[f32]) -> Vec<u16> {
     if centers.is_empty() {
         return vec![0; values.len()];
     }
     let mids = midpoints(centers);
-    values
-        .iter()
-        .map(|&x| {
-            if x == 0.0 {
-                0
-            } else {
-                (mids.partition_point(|&m| m < x) + 1) as u16
-            }
-        })
-        .collect()
+    let mut out = vec![0u16; values.len()];
+    crate::codec::kernels::assign_into(values, &mids, &mut out);
+    out
 }
 
 /// Mean squared quantization error (diagnostics / ablations).

@@ -258,3 +258,62 @@ fn hostile_allocation_tables_never_panic_and_never_decode() {
         );
     }
 }
+
+/// Seed-corpus export for the coverage-guided CI fuzz lane
+/// (`.github/workflows/fuzz.yml`): writes this battery's deterministic
+/// seeds into `$CPCM_FUZZ_SEED_DIR/<target>/` so `cargo fuzz run` starts
+/// from real containers, real header texts, and the hostile table shapes
+/// instead of empty corpora. `#[ignore]`d — it only runs when the fuzz
+/// workflow (or an operator) asks for it explicitly:
+///
+/// ```text
+/// CPCM_FUZZ_SEED_DIR=fuzz/corpus cargo test --test fuzz_header -- \
+///     --ignored --exact export_seed_corpus
+/// ```
+#[test]
+#[ignore]
+fn export_seed_corpus() {
+    use std::fs;
+    let Some(root) = std::env::var_os("CPCM_FUZZ_SEED_DIR") else {
+        eprintln!("CPCM_FUZZ_SEED_DIR not set; nothing exported");
+        return;
+    };
+    let root = std::path::PathBuf::from(root);
+    let write = |target: &str, name: String, bytes: &[u8]| {
+        let dir = root.join(target);
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(dir.join(name), bytes).unwrap();
+    };
+    let seeds: Vec<(String, Vec<u8>)> = [(0usize, false), (12 * 12, false), (12 * 12, true)]
+        .iter()
+        .map(|&(sb, ad)| (format!("seed_sb{sb}_ad{ad}.bin"), seed_container(sb, ad)))
+        .collect();
+    for (name, bytes) in &seeds {
+        // Raw containers seed the framing target, the header target's
+        // whole-input path, and the index target's self-splicing path.
+        write("container_from_bytes", name.clone(), bytes);
+        write("untrusted_header", name.clone(), bytes);
+        write("shard_index", name.clone(), bytes);
+    }
+    // The header target splices its input in as header text — seed it
+    // with the real header JSON of the sharded shapes.
+    for (name, bytes) in seeds.iter().skip(1) {
+        write("untrusted_header", format!("hdr_{name}.json"), header_text(bytes).as_bytes());
+    }
+    // The alloc target interprets its input as a width-table literal —
+    // seed it with the hostile shapes the bounded battery pins.
+    for (i, table) in [
+        "[[3],[3],[3]]",
+        "[[0],[0],[0]]",
+        "[[13],[13],[13]]",
+        "[[3],[3]]",
+        "[[1e308],[3],[3]]",
+        "null",
+    ]
+    .iter()
+    .enumerate()
+    {
+        write("alloc_table", format!("table_{i}.json"), table.as_bytes());
+    }
+    println!("exported seed corpora under {}", root.display());
+}

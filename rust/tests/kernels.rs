@@ -1,0 +1,280 @@
+//! Batch-kernel equivalence battery: the chunked hot-loop kernels in
+//! `codec::kernels` are a pure speed change, so every kernel must match
+//! its scalar reference bit-for-bit — pinned here at the chunk-remainder
+//! lengths (0, 1, width−1, width, width+1) where vectorized tails go
+//! wrong, and end-to-end across container formats 1–5, adaptive bits
+//! on/off, and `shard_threads ∈ {1, 2, auto}` by encoding the same
+//! checkpoints with the kernels forced off (`set_force_scalar`) and on
+//! and asserting byte-identical containers.
+//!
+//! (The golden fixtures in `tests/data/` pin the same contract against
+//! containers written before the kernels existed — `tests/golden.rs`
+//! fails if the batch paths shift a single byte.)
+
+use cpcm::checkpoint::Checkpoint;
+use cpcm::codec::kernels::{self, CHUNK, RUN};
+use cpcm::codec::{keyframe, Codec, CodecConfig, ContextMode};
+use cpcm::container::Container;
+use cpcm::context::ContextExtractor;
+use cpcm::lstm::Backend;
+use cpcm::quant::{self, QuantConfig};
+use cpcm::util::prop::forall;
+
+/// The lengths where a chunked kernel's main-loop/tail split can
+/// misbehave: empty, single, one short of a chunk, exactly a chunk, one
+/// past, and a multi-chunk run with a ragged tail.
+fn remainder_lengths(width: usize) -> [usize; 6] {
+    [0, 1, width - 1, width, width + 1, 3 * width + width / 2 + 1]
+}
+
+// ---------------------------------------------------------------------
+// Direct kernel-vs-reference properties (no global dispatch involved)
+// ---------------------------------------------------------------------
+
+#[test]
+fn assign_batch_matches_scalar_at_remainder_lengths() {
+    forall("assign batch == scalar", 40, |g| {
+        let bits = *g.choose(&[2u8, 3, 4]);
+        // Fit real centers so the midpoint table has the shapes the
+        // codec produces (including repeated centers from tiny inputs).
+        let fit = g.sparse_residuals(200, 0.4, 1.0);
+        let q = quant::quantize(&fit, &QuantConfig { bits, iters: 3, ..Default::default() })
+            .unwrap();
+        let mids = quant::midpoints(&q.centers);
+        for n in remainder_lengths(CHUNK) {
+            let mut values = g.sparse_residuals(n, 0.3, 1.0);
+            // Exact midpoint ties and negative zero are the classic
+            // divergence points for a counting kernel.
+            if n > 2 && !mids.is_empty() {
+                values[0] = *g.choose(&mids);
+                values[1] = -0.0;
+            }
+            let mut scalar = vec![0u16; n];
+            let mut batch = vec![0u16; n];
+            kernels::assign_scalar(&values, &mids, &mut scalar);
+            kernels::assign_batch(&values, &mids, &mut batch);
+            assert_eq!(scalar, batch, "bits={bits} n={n}");
+        }
+    });
+}
+
+#[test]
+fn dequant_batch_matches_scalar_at_remainder_lengths() {
+    forall("dequant batch == scalar", 40, |g| {
+        let bits = *g.choose(&[2u8, 3, 4]);
+        let alphabet = 1u16 << bits;
+        let mut centers: Vec<f32> = (0..alphabet - 1).map(|_| g.f32_range(-2.0, 2.0)).collect();
+        centers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let log_domain = g.bool(0.5);
+        for n in remainder_lengths(CHUNK) {
+            let symbols = g.symbols(n, alphabet);
+            let mut scalar = vec![0.0f32; n];
+            let mut batch = vec![0.0f32; n];
+            let rs = kernels::dequant_scalar(&symbols, &centers, log_domain, &mut scalar);
+            let rb = kernels::dequant_batch(&symbols, &centers, log_domain, &mut batch);
+            rs.unwrap();
+            rb.unwrap();
+            // Bit-compare: the log-domain exp must be the *same* f32 op.
+            let sb: Vec<u32> = scalar.iter().map(|v| v.to_bits()).collect();
+            let bb: Vec<u32> = batch.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(sb, bb, "bits={bits} log={log_domain} n={n}");
+        }
+    });
+}
+
+#[test]
+fn dequant_batch_rejects_out_of_range_like_scalar() {
+    // A symbol past the center table must error from both paths at every
+    // remainder length, whether it lands in a full chunk or the tail.
+    let centers = vec![0.5f32, 1.5, 2.5];
+    for n in [1, CHUNK - 1, CHUNK, CHUNK + 1, 2 * CHUNK + 3] {
+        for bad_at in [0, n - 1, n / 2] {
+            let mut symbols = vec![1u16; n];
+            symbols[bad_at] = centers.len() as u16 + 1;
+            let mut out = vec![0.0f32; n];
+            let rs = kernels::dequant_scalar(&symbols, &centers, false, &mut out);
+            let rb = kernels::dequant_batch(&symbols, &centers, false, &mut out);
+            assert!(rs.is_err(), "scalar accepted bad symbol n={n} at={bad_at}");
+            assert!(rb.is_err(), "batch accepted bad symbol n={n} at={bad_at}");
+        }
+    }
+}
+
+#[test]
+fn context_run_batch_matches_scalar_at_remainder_lengths() {
+    forall("context run batch == scalar", 30, |g| {
+        let rows = g.usize_range(1, 9);
+        let cols = g.usize_range(1, 14);
+        let window = g.usize_range(1, 3);
+        let ex = ContextExtractor::new(rows, cols, window).unwrap();
+        let seq = ex.seq_len();
+        let ref_syms = g.symbols(ex.len(), 16);
+        for n in remainder_lengths(RUN) {
+            let n = n.min(ex.len());
+            let idx0 = g.usize_range(0, ex.len() - n);
+            let mut scalar = vec![0i32; n * seq];
+            let mut batch = vec![7i32; n * seq];
+            kernels::context_run_scalar(&ex, &ref_syms, idx0, n, &mut scalar);
+            kernels::context_run_batch(&ex, &ref_syms, idx0, n, &mut batch);
+            assert_eq!(scalar, batch, "{rows}x{cols} w={window} idx0={idx0} n={n}");
+        }
+    });
+}
+
+#[test]
+fn context_window_run_batch_matches_scalar_at_remainder_lengths() {
+    forall("windowed context run batch == scalar", 30, |g| {
+        let rows = g.usize_range(2, 10);
+        let cols = g.usize_range(1, 14);
+        let window = g.usize_range(1, 3);
+        let ex = ContextExtractor::new(rows, cols, window).unwrap();
+        let seq = ex.seq_len();
+        // Row-aligned window, like the streaming reference views: the
+        // window must cover every extracted position's row span, so pick
+        // the positions first and then a window of whole rows around them
+        // (plus `window` guard rows, exactly what `MapView::Window` does).
+        for n in remainder_lengths(RUN) {
+            let n = n.min(ex.len());
+            let idx0 = g.usize_range(0, ex.len() - n);
+            let last = if n == 0 { idx0 } else { idx0 + n - 1 };
+            let row_lo = (idx0 / cols).saturating_sub(window);
+            let row_hi = ((last / cols) + window + 1).min(rows);
+            let start = row_lo * cols;
+            let data = g.symbols(row_hi * cols - start, 16);
+            let mut scalar = vec![0i32; n * seq];
+            let mut batch = vec![7i32; n * seq];
+            for b in 0..n {
+                ex.extract_window_into(&data, start, idx0 + b, &mut scalar[b * seq..(b + 1) * seq]);
+            }
+            kernels::context_window_run_batch(&ex, &data, start, idx0, n, &mut batch);
+            assert_eq!(scalar, batch, "{rows}x{cols} w={window} idx0={idx0} n={n}");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// End-to-end dispatch grid: containers are byte-identical with the
+// kernels on and off
+// ---------------------------------------------------------------------
+
+fn layers() -> Vec<(&'static str, Vec<usize>)> {
+    vec![("a.w", vec![13, 7]), ("b.w", vec![41]), ("c.w", vec![5, 4, 2])]
+}
+
+fn base_cfg(mode: ContextMode) -> CodecConfig {
+    CodecConfig {
+        mode,
+        hidden: 8,
+        embed: 8,
+        batch: 32,
+        quant_iters: 3,
+        lanes: 2,
+        ..Default::default()
+    }
+}
+
+/// Encode a two-frame chain (intra + delta) under the current dispatch
+/// setting and return the raw container bytes plus the outputs.
+fn encode_chain(
+    cfg: &CodecConfig,
+    format1: bool,
+    c0: &Checkpoint,
+    c1: &Checkpoint,
+) -> (cpcm::codec::EncodeOutput, cpcm::codec::EncodeOutput) {
+    let codec = Codec::new(cfg.clone(), Backend::Native);
+    let (e0, e1) = if format1 {
+        let e0 = codec.encode_format1(c0, None, None).unwrap();
+        let e1 = codec.encode_format1(c1, Some(&e0.recon), Some(&e0.syms)).unwrap();
+        (e0, e1)
+    } else {
+        let e0 = codec.encode(c0, None, None).unwrap();
+        let e1 = codec.encode(c1, Some(&e0.recon), Some(&e0.syms)).unwrap();
+        (e0, e1)
+    };
+    (e0, e1)
+}
+
+/// Restores batch dispatch even if an assertion unwinds mid-grid, so a
+/// failure here can't leak scalar-forced mode into the process.
+struct DispatchGuard;
+impl Drop for DispatchGuard {
+    fn drop(&mut self) {
+        kernels::set_force_scalar(false);
+    }
+}
+
+/// ONE test drives the whole force-scalar grid: `set_force_scalar` is a
+/// process-global switch, so splitting the grid across `#[test]` fns
+/// would race under the parallel test runner. Direct-call properties
+/// above never touch the global and are safe to run alongside.
+#[test]
+fn batch_kernels_never_change_container_bytes() {
+    let _guard = DispatchGuard;
+    let c0 = Checkpoint::synthetic(1, &layers(), 0xE0);
+    let c1 = Checkpoint::synthetic(2, &layers(), 0xE1);
+
+    // (label, format1, cfg) — formats 1/2/3/5; format 4 is derived below.
+    let mut cases: Vec<(String, bool, CodecConfig)> = Vec::new();
+    for mode in [ContextMode::Order0, ContextMode::Lstm] {
+        // Format 1: legacy single-stream encoder.
+        cases.push((format!("{mode:?} format1"), true, base_cfg(mode)));
+        // Format 2: lane-parallel, unsharded.
+        cases.push((format!("{mode:?} format2"), false, base_cfg(mode)));
+        for shard_threads in [1usize, 2, 0] {
+            // Format 3: sharded (mid-tensor splits at 17 values/shard).
+            let mut v3 = base_cfg(mode);
+            v3.shard_bytes = 17 * 12;
+            v3.shard_threads = shard_threads;
+            cases.push((format!("{mode:?} format3 threads={shard_threads}"), false, v3));
+            // Format 5: adaptive per-fragment bit allocation on top.
+            let mut v5 = base_cfg(mode);
+            v5.shard_bytes = 17 * 12;
+            v5.shard_threads = shard_threads;
+            v5.adaptive_bits = true;
+            cases.push((format!("{mode:?} format5 threads={shard_threads}"), false, v5));
+        }
+    }
+
+    for (label, format1, cfg) in &cases {
+        kernels::set_force_scalar(true);
+        let (s0, s1) = encode_chain(cfg, *format1, &c0, &c1);
+        kernels::set_force_scalar(false);
+        let (b0, b1) = encode_chain(cfg, *format1, &c0, &c1);
+
+        assert_eq!(s0.bytes, b0.bytes, "{label}: intra container bytes");
+        assert_eq!(s1.bytes, b1.bytes, "{label}: delta container bytes");
+        assert_eq!(s0.syms, b0.syms, "{label}: intra symbol maps");
+        assert_eq!(s1.syms, b1.syms, "{label}: delta symbol maps");
+        assert_eq!(s0.recon, b0.recon, "{label}: intra reconstruction");
+        assert_eq!(s1.recon, b1.recon, "{label}: delta reconstruction");
+
+        // Decode under both dispatch settings: the batched dequant and
+        // context gather must reproduce the encoder's reconstruction.
+        for force in [true, false] {
+            kernels::set_force_scalar(force);
+            let (d0, ds0) = Codec::decode(&Backend::Native, &b0.bytes, None, None).unwrap();
+            assert_eq!(d0, b0.recon, "{label}: intra decode force_scalar={force}");
+            let (d1, _) =
+                Codec::decode(&Backend::Native, &b1.bytes, Some(&d0), Some(&ds0)).unwrap();
+            assert_eq!(d1, b1.recon, "{label}: delta decode force_scalar={force}");
+        }
+        kernels::set_force_scalar(false);
+
+        // Format 4: a keyframe serializes chain state (recon + syms)
+        // produced by the hot loops above; equal inputs must yield
+        // byte-identical keyframe containers.
+        if !format1 {
+            let codec_json =
+                Container::from_bytes(&b1.bytes).unwrap().header.req("codec").unwrap().clone();
+            let ks =
+                keyframe::encode_keyframe(&Backend::Native, &s1.recon, &s1.syms, codec_json.clone())
+                    .unwrap();
+            let kb = keyframe::encode_keyframe(&Backend::Native, &b1.recon, &b1.syms, codec_json)
+                .unwrap();
+            assert_eq!(ks, kb, "{label}: format-4 keyframe bytes");
+            let (kr, ksyms) = Codec::decode(&Backend::Native, &kb, None, None).unwrap();
+            assert_eq!(kr, b1.recon, "{label}: keyframe reconstruction");
+            assert_eq!(ksyms, b1.syms, "{label}: keyframe symbol maps");
+        }
+    }
+}
